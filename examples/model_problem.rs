@@ -1,0 +1,51 @@
+//! The paper's model problem (§4.1) at example scale: a structured-grid
+//! two-level Galerkin product swept over rank counts, printing the
+//! Table 1/2 analog rows.
+//!
+//! ```bash
+//! cargo run --release --example model_problem
+//! ```
+
+use galerkin_ptap::coordinator::{
+    model_problem_tables, run_model_problem, write_results, ModelProblemConfig,
+};
+use galerkin_ptap::gen::Grid3;
+use galerkin_ptap::ptap::ALL_ALGOS;
+
+fn main() {
+    let coarse = Grid3::cube(20);
+    let fine = coarse.refine();
+    println!(
+        "model problem: coarse {}³ → fine {}³ = {} unknowns; 1 symbolic + 11 numeric products\n",
+        coarse.nx,
+        fine.nx,
+        fine.len()
+    );
+    let mut rows = Vec::new();
+    for np in [2, 4, 8] {
+        for algo in ALL_ALGOS {
+            rows.push(run_model_problem(ModelProblemConfig {
+                coarse,
+                np,
+                algo,
+                numeric_repeats: 11,
+            }));
+            println!("  np={np} {} done", algo.name());
+        }
+    }
+    let (main, storage) = model_problem_tables(&rows);
+    println!("\n{}", main.render());
+    println!("{}", storage.render());
+    write_results(&main, "example_model_problem");
+
+    // the paper's headline: all-at-once uses a fraction of two-step's memory
+    let aao: Vec<_> = rows.iter().filter(|r| r.algo.name() == "allatonce").collect();
+    let two: Vec<_> = rows.iter().filter(|r| r.algo.name() == "two-step").collect();
+    for (a, t) in aao.iter().zip(&two) {
+        println!(
+            "np={:<3} two-step/all-at-once memory ratio: {:.1}x",
+            a.np,
+            t.mem_product as f64 / a.mem_product as f64
+        );
+    }
+}

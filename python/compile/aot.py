@@ -1,0 +1,130 @@
+"""AOT pipeline: lower the Layer-2 graphs to HLO *text* artifacts.
+
+HLO text (not HloModuleProto.serialize()) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids that xla_extension 0.5.1
+(the version the published `xla` rust crate binds) rejects with
+`proto.id() <= INT_MAX`; the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+Run once at build time (`make artifacts`); the rust binary is self-contained
+afterwards.  Emits artifacts/<entry>_b<b>_n<n>.hlo.txt plus a manifest
+(artifacts/manifest.tsv) the rust runtime reads to discover variants.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (entry name, function, signature builder).  Signature builders return the
+# tuple of ShapeDtypeStruct example args for a given (n, b).
+_F32 = jnp.float32
+
+
+def _sig_ptap(n, b):
+    blk = jax.ShapeDtypeStruct((n, b, b), _F32)
+    return (blk, blk, blk)
+
+
+def _sig_ptap_scaled(n, b):
+    blk = jax.ShapeDtypeStruct((n, b, b), _F32)
+    return (blk, blk, blk, jax.ShapeDtypeStruct((n,), _F32))
+
+
+def _sig_ptap_acc(n, b):
+    blk = jax.ShapeDtypeStruct((n, b, b), _F32)
+    return (blk, blk, blk, blk)
+
+
+def _sig_spmv(n, b):
+    return (
+        jax.ShapeDtypeStruct((n, b, b), _F32),
+        jax.ShapeDtypeStruct((n, b), _F32),
+    )
+
+
+def _sig_jacobi(n, b):
+    return (
+        jax.ShapeDtypeStruct((n, b, b), _F32),
+        jax.ShapeDtypeStruct((n, b), _F32),
+        jax.ShapeDtypeStruct((n, b), _F32),
+        jax.ShapeDtypeStruct((1,), _F32),
+    )
+
+
+ENTRIES = {
+    "block_ptap": (model.galerkin_block_product, _sig_ptap),
+    "block_ptap_scaled": (model.galerkin_block_product_scaled, _sig_ptap_scaled),
+    "block_ptap_acc": (model.galerkin_block_accumulate, _sig_ptap_acc),
+    "block_spmv": (model.spmv, _sig_spmv),
+    "block_jacobi": (model.jacobi_step, _sig_jacobi),
+}
+
+# Variants built by default: block sizes used by the neutron-transport-like
+# workload generator and the batch size the rust runtime chunks with.
+DEFAULT_BLOCK_SIZES = (4, 8, 16)
+DEFAULT_BATCH = 256
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(entry: str, n: int, b: int) -> str:
+    fn, sig = ENTRIES[entry]
+    lowered = jax.jit(fn).lower(*sig(n, b))
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: str, block_sizes, batch: int) -> list[tuple[str, str, int, int]]:
+    os.makedirs(out_dir, exist_ok=True)
+    rows = []
+    for b in block_sizes:
+        for entry in ENTRIES:
+            if entry == "block_ptap_acc" and b not in block_sizes:
+                continue
+            text = lower_entry(entry, batch, b)
+            name = f"{entry}_b{b}_n{batch}.hlo.txt"
+            path = os.path.join(out_dir, name)
+            with open(path, "w") as f:
+                f.write(text)
+            rows.append((entry, name, b, batch))
+            print(f"  wrote {path} ({len(text)} chars)")
+    manifest = os.path.join(out_dir, "manifest.tsv")
+    with open(manifest, "w") as f:
+        f.write("# entry\tfile\tblock\tbatch\n")
+        for entry, name, b, n in rows:
+            f.write(f"{entry}\t{name}\t{b}\t{n}\n")
+    print(f"  wrote {manifest} ({len(rows)} artifacts)")
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--blocks",
+        default=",".join(str(b) for b in DEFAULT_BLOCK_SIZES),
+        help="comma-separated block sizes",
+    )
+    ap.add_argument("--batch", type=int, default=DEFAULT_BATCH)
+    args = ap.parse_args()
+    blocks = tuple(int(x) for x in args.blocks.split(",") if x)
+    build(args.out, blocks, args.batch)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

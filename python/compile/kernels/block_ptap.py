@@ -1,0 +1,117 @@
+"""Layer-1 Pallas kernel: batched dense Galerkin block triple product.
+
+The numeric phase of the block-structured (neutron-transport-like) PtAP
+reduces to millions of tiny dense triple products
+
+    o[n] = pl[n]^T @ a[n] @ pr[n]          pl, a, pr, o : [N, b, b]
+
+one per (I-block, J-block) pair contributing to a coarse block C(i, j).
+On a TPU this is MXU material: two back-to-back b x b matmuls per batch
+element.  The kernel tiles the batch dimension into VMEM-resident chunks
+(BlockSpec over axis 0); per grid step the working set is 4 * T * b^2 * 4 B
+(three inputs + output), with T chosen by `batch_tile` so the step fits
+comfortably in VMEM with double-buffering headroom.
+
+interpret=True is mandatory here: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that the rust runtime
+(xla crate, PJRT CPU) runs unmodified.  See DESIGN.md §Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM budget for one grid step (bytes).  16 MiB VMEM per TPU core; keep the
+# working set <= 4 MiB so the pipeline can double-buffer.
+_VMEM_STEP_BUDGET = 4 * 1024 * 1024
+
+
+def batch_tile(n: int, b: int, itemsize: int = 4) -> int:
+    """Largest power-of-two batch tile T dividing n with 4*T*b*b*itemsize
+    within the per-step VMEM budget (>= 1)."""
+    t = 1
+    while (
+        t * 2 <= n
+        and n % (t * 2) == 0
+        and 4 * (t * 2) * b * b * itemsize <= _VMEM_STEP_BUDGET
+    ):
+        t *= 2
+    return t
+
+
+def _ptap_kernel(pl_ref, a_ref, pr_ref, o_ref):
+    """o = pl^T @ a @ pr for every batch element of the tile.
+
+    Expressed as two dot_generals with a leading batch dimension so the TPU
+    backend maps each onto the MXU; jnp.einsum would lower to the same
+    contractions but the explicit form keeps the operand order (and hence
+    the MXU feed order) fixed.
+    """
+    plv = pl_ref[...]
+    av = a_ref[...]
+    prv = pr_ref[...]
+    # tmp[n] = a[n] @ pr[n]
+    tmp = jax.lax.dot_general(
+        av, prv, (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )
+    # o[n] = pl[n]^T @ tmp[n]  (contract rows of pl with rows of tmp)
+    out = jax.lax.dot_general(
+        plv, tmp, (((1,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def block_ptap(pl_blocks, a_blocks, pr_blocks):
+    """Batched triple product o[n] = pl[n]^T @ a[n] @ pr[n].
+
+    Args:
+      pl_blocks, a_blocks, pr_blocks: f32[N, b, b] stacks; N and b static.
+    Returns:
+      f32[N, b, b]
+    """
+    n, b, _ = a_blocks.shape
+    t = batch_tile(n, b, a_blocks.dtype.itemsize)
+    spec = pl.BlockSpec((t, b, b), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        _ptap_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, b, b), a_blocks.dtype),
+        grid=(n // t,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        interpret=True,
+    )(pl_blocks, a_blocks, pr_blocks)
+
+
+def _ptap_scaled_kernel(pl_ref, a_ref, pr_ref, w_ref, o_ref):
+    """Weighted variant: o[n] = w[n] * pl[n]^T @ a[n] @ pr[n]."""
+    tmp = jax.lax.dot_general(
+        a_ref[...], pr_ref[...], (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+    out = jax.lax.dot_general(
+        pl_ref[...], tmp, (((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = (w_ref[...][:, None, None] * out).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def block_ptap_scaled(pl_blocks, a_blocks, pr_blocks, weights):
+    """Batched weighted triple product (weights: f32[N])."""
+    n, b, _ = a_blocks.shape
+    t = batch_tile(n, b, a_blocks.dtype.itemsize)
+    spec = pl.BlockSpec((t, b, b), lambda i: (i, 0, 0))
+    wspec = pl.BlockSpec((t,), lambda i: (i,))
+    return pl.pallas_call(
+        _ptap_scaled_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, b, b), a_blocks.dtype),
+        grid=(n // t,),
+        in_specs=[spec, spec, spec, wspec],
+        out_specs=spec,
+        interpret=True,
+    )(pl_blocks, a_blocks, pr_blocks, weights)

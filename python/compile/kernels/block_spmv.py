@@ -1,0 +1,74 @@
+"""Layer-1 Pallas kernel: batched dense block mat-vec (block SpMV / smoother).
+
+Block-CSR SpMV and the block-Jacobi smoother both reduce to a stream of
+dense b x b @ b products: y[n] = a[n] @ x[n].  The kernel tiles the batch
+dimension; each grid step holds T*(b*b + 2*b) floats in VMEM.
+
+interpret=True (CPU PJRT execution) — see block_ptap.py for the rationale.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .block_ptap import batch_tile
+
+
+def _spmv_kernel(a_ref, x_ref, y_ref):
+    # y[n] = a[n] @ x[n] via a batched dot_general (MXU-friendly: the batch
+    # of b x b tiles streams through the systolic array back to back).
+    y = jax.lax.dot_general(
+        a_ref[...], x_ref[...], (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+@jax.jit
+def block_spmv(a_blocks, x_blocks):
+    """y[n] = a[n] @ x[n] with a: f32[N,b,b], x: f32[N,b] -> f32[N,b]."""
+    n, b, _ = a_blocks.shape
+    t = batch_tile(n, b, a_blocks.dtype.itemsize)
+    aspec = pl.BlockSpec((t, b, b), lambda i: (i, 0, 0))
+    vspec = pl.BlockSpec((t, b), lambda i: (i, 0))
+    return pl.pallas_call(
+        _spmv_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, b), a_blocks.dtype),
+        grid=(n // t,),
+        in_specs=[aspec, vspec],
+        out_specs=vspec,
+        interpret=True,
+    )(a_blocks, x_blocks)
+
+
+def _jacobi_kernel(dinv_ref, r_ref, x_ref, w_ref, o_ref):
+    # o[n] = x[n] + w * dinv[n] @ r[n]
+    corr = jax.lax.dot_general(
+        dinv_ref[...], r_ref[...], (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = (x_ref[...] + w_ref[0] * corr).astype(o_ref.dtype)
+
+
+@jax.jit
+def block_jacobi_step(dinv_blocks, r_blocks, x_blocks, omega):
+    """One damped block-Jacobi update x + omega * D^{-1} r, batched.
+
+    dinv_blocks: f32[N,b,b] (inverted diagonal blocks), r/x: f32[N,b],
+    omega: f32[1].
+    """
+    n, b, _ = dinv_blocks.shape
+    t = batch_tile(n, b, dinv_blocks.dtype.itemsize)
+    aspec = pl.BlockSpec((t, b, b), lambda i: (i, 0, 0))
+    vspec = pl.BlockSpec((t, b), lambda i: (i, 0))
+    wspec = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        _jacobi_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, b), dinv_blocks.dtype),
+        grid=(n // t,),
+        in_specs=[aspec, vspec, vspec, wspec],
+        out_specs=vspec,
+        interpret=True,
+    )(dinv_blocks, r_blocks, x_blocks, omega)

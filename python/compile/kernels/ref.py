@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every kernel in this package must agree with its oracle to float32
+round-off; python/tests/test_kernels.py sweeps shapes and dtypes with
+hypothesis and asserts allclose.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def block_ptap_ref(pl_blocks, a_blocks, pr_blocks):
+    """o[n] = pl[n]^T @ a[n] @ pr[n] (einsum form)."""
+    return jnp.einsum("nki,nkl,nlj->nij", pl_blocks, a_blocks, pr_blocks)
+
+
+def block_ptap_scaled_ref(pl_blocks, a_blocks, pr_blocks, weights):
+    return weights[:, None, None] * block_ptap_ref(pl_blocks, a_blocks, pr_blocks)
+
+
+def block_spmv_ref(a_blocks, x_blocks):
+    """y[n] = a[n] @ x[n]."""
+    return jnp.einsum("nij,nj->ni", a_blocks, x_blocks)
+
+
+def block_jacobi_step_ref(dinv_blocks, r_blocks, x_blocks, omega):
+    return x_blocks + omega[0] * block_spmv_ref(dinv_blocks, r_blocks)

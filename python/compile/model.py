@@ -1,0 +1,52 @@
+"""Layer-2 JAX compute graphs for the block-numeric hot path.
+
+These are the functions the AOT pipeline (aot.py) lowers to HLO text for the
+rust runtime.  They call the Layer-1 Pallas kernels so kernel and
+surrounding graph lower into one HLO module; rust sees a single executable
+per (entry, b, N) variant.
+
+Entries
+-------
+galerkin_block_product    o[n] = pl[n]^T @ a[n] @ pr[n]
+galerkin_block_accumulate like above but fused with += into an accumulator
+block_spmv                y[n] = a[n] @ x[n]
+block_jacobi_step         x + omega * D^{-1} r  (batched smoother update)
+
+All batch sizes are static: rust pads the final chunk with zero blocks
+(zero blocks contribute zero, so padding is harmless for the accumulating
+entries, and padded lanes are ignored for the pure-map entries).
+"""
+
+from __future__ import annotations
+
+from .kernels.block_ptap import block_ptap, block_ptap_scaled
+from .kernels.block_spmv import block_jacobi_step, block_spmv
+
+
+def galerkin_block_product(pl_blocks, a_blocks, pr_blocks):
+    """Batched dense Galerkin triple product (Layer-1 kernel pass-through)."""
+    return (block_ptap(pl_blocks, a_blocks, pr_blocks),)
+
+
+def galerkin_block_product_scaled(pl_blocks, a_blocks, pr_blocks, weights):
+    """Weighted batched triple product: w[n] * pl[n]^T a[n] pr[n]."""
+    return (block_ptap_scaled(pl_blocks, a_blocks, pr_blocks, weights),)
+
+
+def galerkin_block_accumulate(acc, pl_blocks, a_blocks, pr_blocks):
+    """acc[n] += pl[n]^T @ a[n] @ pr[n] — fused accumulate variant.
+
+    Keeping the += inside the HLO module saves one rust-side pass over the
+    result buffer per chunk (measured in EXPERIMENTS.md §Perf).
+    """
+    return (acc + block_ptap(pl_blocks, a_blocks, pr_blocks),)
+
+
+def spmv(a_blocks, x_blocks):
+    """Batched block mat-vec."""
+    return (block_spmv(a_blocks, x_blocks),)
+
+
+def jacobi_step(dinv_blocks, r_blocks, x_blocks, omega):
+    """Batched damped block-Jacobi update."""
+    return (block_jacobi_step(dinv_blocks, r_blocks, x_blocks, omega),)

@@ -1,0 +1,46 @@
+"""AOT pipeline tests: every entry lowers to parseable HLO text and the
+manifest enumerates the artifacts the rust runtime expects."""
+
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.mark.parametrize("entry", sorted(aot.ENTRIES))
+def test_entry_lowers_to_hlo_text(entry):
+    text = aot.lower_entry(entry, n=8, b=4)
+    assert text.startswith("HloModule"), text[:80]
+    # return_tuple=True => root is a tuple
+    assert "ROOT" in text
+    assert "f32[" in text
+
+
+def test_hlo_has_no_custom_calls():
+    # interpret=True pallas must lower to plain HLO the CPU PJRT client can
+    # execute — a Mosaic custom-call here would break the rust runtime.
+    for entry in aot.ENTRIES:
+        text = aot.lower_entry(entry, n=4, b=4)
+        assert "custom-call" not in text, f"{entry} emitted a custom-call"
+
+
+def test_build_writes_manifest(tmp_path):
+    rows = aot.build(str(tmp_path), block_sizes=(4,), batch=8)
+    assert len(rows) == len(aot.ENTRIES)
+    manifest = os.path.join(str(tmp_path), "manifest.tsv")
+    assert os.path.exists(manifest)
+    lines = [l for l in open(manifest) if not l.startswith("#")]
+    assert len(lines) == len(rows)
+    for _, name, _, _ in rows:
+        path = os.path.join(str(tmp_path), name)
+        assert os.path.getsize(path) > 100
+
+
+def test_batch_shape_is_static():
+    # Two different batch sizes must produce different programs (shapes are
+    # baked in — rust pads chunks to the artifact batch).
+    t1 = aot.lower_entry("block_spmv", n=4, b=4)
+    t2 = aot.lower_entry("block_spmv", n=8, b=4)
+    assert "f32[4,4,4]" in t1.replace(" ", "")
+    assert "f32[8,4,4]" in t2.replace(" ", "")

@@ -1,0 +1,164 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracle.
+
+hypothesis sweeps batch sizes, block sizes and value scales; every kernel
+must agree with ref.py to float32 round-off.  This is the CORE correctness
+signal for the compiled artifacts: what passes here is exactly what aot.py
+lowers for the rust runtime.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.block_ptap import batch_tile, block_ptap, block_ptap_scaled
+from compile.kernels.block_spmv import block_jacobi_step, block_spmv
+
+_RNG = np.random.default_rng(20190703)
+
+
+def _blocks(n, b, scale=1.0):
+    return jnp.asarray(_RNG.normal(size=(n, b, b)) * scale, dtype=jnp.float32)
+
+
+def _vecs(n, b, scale=1.0):
+    return jnp.asarray(_RNG.normal(size=(n, b)) * scale, dtype=jnp.float32)
+
+
+batch_sizes = st.sampled_from([1, 2, 3, 5, 8, 16, 64, 256])
+block_sizes = st.sampled_from([1, 2, 3, 4, 8, 16])
+scales = st.sampled_from([1e-3, 1.0, 1e3])
+
+
+class TestBatchTile:
+    def test_divides(self):
+        for n in [1, 2, 6, 256, 1000]:
+            for b in [1, 4, 16, 96]:
+                t = batch_tile(n, b)
+                assert n % t == 0 and t >= 1
+
+    def test_vmem_budget(self):
+        # 4 buffers * T * b^2 * 4B must stay within the 4 MiB step budget
+        for n in [4096]:
+            for b in [4, 16, 96]:
+                t = batch_tile(n, b)
+                if t > 1:
+                    assert 4 * t * b * b * 4 <= 4 * 1024 * 1024
+
+    def test_prefers_large_tiles(self):
+        assert batch_tile(256, 4) == 256  # whole batch fits
+        assert batch_tile(4096, 96) < 4096  # must split
+
+
+class TestBlockPtap:
+    @settings(max_examples=25, deadline=None)
+    @given(n=batch_sizes, b=block_sizes, scale=scales)
+    def test_matches_ref(self, n, b, scale):
+        plb, ab, prb = _blocks(n, b, scale), _blocks(n, b, scale), _blocks(n, b, scale)
+        got = block_ptap(plb, ab, prb)
+        want = ref.block_ptap_ref(plb, ab, prb)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5 * scale**3)
+
+    def test_identity_projection(self):
+        # P = I  =>  C = A
+        n, b = 8, 4
+        eye = jnp.broadcast_to(jnp.eye(b, dtype=jnp.float32), (n, b, b))
+        ab = _blocks(n, b)
+        np.testing.assert_allclose(block_ptap(eye, ab, eye), ab, rtol=1e-6)
+
+    def test_zero_blocks_contribute_zero(self):
+        # zero padding lanes must not pollute accumulation
+        n, b = 4, 8
+        z = jnp.zeros((n, b, b), jnp.float32)
+        out = block_ptap(z, _blocks(n, b), _blocks(n, b))
+        np.testing.assert_array_equal(out, np.zeros((n, b, b), np.float32))
+
+    def test_transpose_symmetry(self):
+        # A symmetric and pl == pr  =>  C symmetric
+        n, b = 6, 4
+        ab = _blocks(n, b)
+        ab = 0.5 * (ab + jnp.swapaxes(ab, 1, 2))
+        p = _blocks(n, b)
+        out = np.asarray(block_ptap(p, ab, p))
+        np.testing.assert_allclose(out, np.swapaxes(out, 1, 2), rtol=1e-4, atol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=batch_sizes, b=block_sizes)
+    def test_scaled_matches_ref(self, n, b):
+        plb, ab, prb = _blocks(n, b), _blocks(n, b), _blocks(n, b)
+        w = jnp.asarray(_RNG.normal(size=(n,)), dtype=jnp.float32)
+        got = block_ptap_scaled(plb, ab, prb, w)
+        want = ref.block_ptap_scaled_ref(plb, ab, prb, w)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+class TestBlockSpmv:
+    @settings(max_examples=25, deadline=None)
+    @given(n=batch_sizes, b=block_sizes, scale=scales)
+    def test_matches_ref(self, n, b, scale):
+        ab, xb = _blocks(n, b, scale), _vecs(n, b, scale)
+        np.testing.assert_allclose(
+            block_spmv(ab, xb), ref.block_spmv_ref(ab, xb),
+            rtol=1e-5, atol=1e-5 * scale**2,
+        )
+
+    def test_identity(self):
+        n, b = 8, 8
+        eye = jnp.broadcast_to(jnp.eye(b, dtype=jnp.float32), (n, b, b))
+        xb = _vecs(n, b)
+        np.testing.assert_allclose(block_spmv(eye, xb), xb, rtol=1e-6)
+
+
+class TestBlockJacobi:
+    @settings(max_examples=15, deadline=None)
+    @given(n=batch_sizes, b=block_sizes)
+    def test_matches_ref(self, n, b):
+        dinv, r, x = _blocks(n, b), _vecs(n, b), _vecs(n, b)
+        omega = jnp.asarray([0.7], dtype=jnp.float32)
+        got = block_jacobi_step(dinv, r, x, omega)
+        want = ref.block_jacobi_step_ref(dinv, r, x, omega)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_zero_residual_is_fixed_point(self):
+        n, b = 4, 4
+        x = _vecs(n, b)
+        out = block_jacobi_step(_blocks(n, b), jnp.zeros((n, b), jnp.float32), x,
+                                jnp.asarray([0.7], jnp.float32))
+        np.testing.assert_allclose(out, x, rtol=1e-6)
+
+
+class TestGalerkinProperty:
+    """Mathematical property the whole system rests on: the batched kernel
+    applied block-wise equals the assembled dense triple product."""
+
+    @settings(max_examples=10, deadline=None)
+    @given(nb=st.integers(1, 4), b=st.sampled_from([2, 4]))
+    def test_block_assembly_equals_dense(self, nb, b):
+        # Build a block-dense A (nb x nb blocks) and block-diagonal P, then
+        # compare blockwise kernel assembly against the dense P^T A P.
+        n = nb * b
+        a = np.asarray(_RNG.normal(size=(n, n)), dtype=np.float32)
+        pdiag = [np.asarray(_RNG.normal(size=(b, b)), dtype=np.float32) for _ in range(nb)]
+        p = np.zeros((n, n), dtype=np.float32)
+        for i, blk in enumerate(pdiag):
+            p[i * b:(i + 1) * b, i * b:(i + 1) * b] = blk
+        dense = p.T @ a @ p
+        # blockwise: C(i,j) = P_i^T A(i,j) P_j for the block-diagonal P
+        triples = []
+        for i in range(nb):
+            for j in range(nb):
+                triples.append((pdiag[i], a[i * b:(i + 1) * b, j * b:(j + 1) * b], pdiag[j]))
+        plb = jnp.asarray(np.stack([t[0] for t in triples]))
+        ab = jnp.asarray(np.stack([t[1] for t in triples]))
+        prb = jnp.asarray(np.stack([t[2] for t in triples]))
+        out = np.asarray(block_ptap(plb, ab, prb))
+        got = np.zeros((n, n), dtype=np.float32)
+        k = 0
+        for i in range(nb):
+            for j in range(nb):
+                got[i * b:(i + 1) * b, j * b:(j + 1) * b] = out[k]
+                k += 1
+        np.testing.assert_allclose(got, dense, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,228 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!  A. row accumulator data structure (the paper's hash-table choice vs a
+//!     BTreeMap vs a sort-at-the-end vector);
+//!  B. symbolic-table slot width (compact `Set32` vs the 12-byte `IntSet`)
+//!     — why the all-at-once symbolic phase stays under the C footprint;
+//!  C. all-at-once vs merged: the cost of recomputing `R` per loop vs the
+//!     lost overlap (paper §3's "totally problem dependent");
+//!  D. prolongator smoothing on/off: how P's width drives the triple
+//!     product cost.
+
+use std::time::Instant;
+
+use galerkin_ptap::dist::World;
+use galerkin_ptap::gen::{grid_laplacian, Grid3, ModelProblem};
+use galerkin_ptap::hash::{IntMap, IntSet, Set32};
+use galerkin_ptap::mem::MemTracker;
+use galerkin_ptap::mg::{aggregate_interp, AggregateOpts};
+use galerkin_ptap::ptap::{ptap_once, Algo, Ptap};
+use galerkin_ptap::util::prng::Rng;
+use galerkin_ptap::util::table::Table;
+
+fn main() {
+    ablation_accumulator();
+    ablation_set_width();
+    ablation_aao_vs_merged();
+    ablation_smoothing();
+}
+
+/// A: per-row numeric accumulation, 20-wide rows, 200k rows.
+fn ablation_accumulator() {
+    println!("== A: row accumulator structure (numeric phase) ==\n");
+    let rows = 200_000usize;
+    let width = 20usize;
+    let mut rng = Rng::new(2);
+    let keys: Vec<u64> = (0..rows * width).map(|_| rng.below(1 << 20) as u64).collect();
+    let vals: Vec<f64> = (0..rows * width).map(|_| rng.normal()).collect();
+    let mut t = Table::new(vec!["structure", "secs", "Mupdates/s"]);
+
+    let mut sink = 0.0f64;
+    // hash (the paper's choice)
+    let t0 = Instant::now();
+    {
+        let mut m = IntMap::default();
+        let mut ks = Vec::new();
+        let mut vs = Vec::new();
+        for r in 0..rows {
+            m.clear();
+            for k in 0..width {
+                m.add(keys[r * width + k], vals[r * width + k]);
+            }
+            m.collect_sorted(&mut ks, &mut vs);
+            sink += vs.first().copied().unwrap_or(0.0);
+        }
+    }
+    let hash_secs = t0.elapsed().as_secs_f64();
+    t.row(vec![
+        "hash (IntMap)".into(),
+        format!("{hash_secs:.3}"),
+        format!("{:.1}", (rows * width) as f64 / hash_secs / 1e6),
+    ]);
+
+    // BTreeMap
+    let t0 = Instant::now();
+    {
+        let mut m: std::collections::BTreeMap<u64, f64> = Default::default();
+        for r in 0..rows {
+            m.clear();
+            for k in 0..width {
+                *m.entry(keys[r * width + k]).or_insert(0.0) += vals[r * width + k];
+            }
+            sink += m.values().next().copied().unwrap_or(0.0);
+        }
+    }
+    let btree_secs = t0.elapsed().as_secs_f64();
+    t.row(vec![
+        "BTreeMap".into(),
+        format!("{btree_secs:.3}"),
+        format!("{:.1}", (rows * width) as f64 / btree_secs / 1e6),
+    ]);
+
+    // sort-at-end vector
+    let t0 = Instant::now();
+    {
+        let mut buf: Vec<(u64, f64)> = Vec::new();
+        for r in 0..rows {
+            buf.clear();
+            for k in 0..width {
+                buf.push((keys[r * width + k], vals[r * width + k]));
+            }
+            buf.sort_unstable_by_key(|&(k, _)| k);
+            // merge duplicates
+            let mut out = 0.0;
+            let mut i = 0;
+            while i < buf.len() {
+                let mut v = buf[i].1;
+                let k = buf[i].0;
+                let mut j = i + 1;
+                while j < buf.len() && buf[j].0 == k {
+                    v += buf[j].1;
+                    j += 1;
+                }
+                if i == 0 {
+                    out = v;
+                }
+                i = j;
+            }
+            sink += out;
+        }
+    }
+    let sort_secs = t0.elapsed().as_secs_f64();
+    t.row(vec![
+        "sort-merge vec".into(),
+        format!("{sort_secs:.3}"),
+        format!("{:.1}", (rows * width) as f64 / sort_secs / 1e6),
+    ]);
+    std::hint::black_box(sink);
+    println!("{}", t.render());
+    let _ = t.write_tsv(std::path::Path::new("results/ablation_accumulator.tsv"));
+}
+
+/// B: symbolic table slot width.
+fn ablation_set_width() {
+    println!("== B: symbolic per-row table width (Set32 vs IntSet) ==\n");
+    let rows = 50_000usize;
+    let width = 27usize; // the model problem's coarse stencil
+    let mut t = Table::new(vec!["structure", "bytes/row", "total_mb"]);
+    let mut s32 = Set32::default();
+    let mut s64 = IntSet::default();
+    for k in 0..width {
+        s32.insert(k as u32 * 3);
+        s64.insert(k as u64 * 3);
+    }
+    t.row(vec![
+        "Set32 (5 B/slot)".into(),
+        s32.bytes().to_string(),
+        format!("{:.1}", (s32.bytes() * rows as u64) as f64 / 1048576.0),
+    ]);
+    t.row(vec![
+        "IntSet (12 B/slot)".into(),
+        s64.bytes().to_string(),
+        format!("{:.1}", (s64.bytes() * rows as u64) as f64 / 1048576.0),
+    ]);
+    println!("{}", t.render());
+    println!(
+        "(the C slice those rows produce: ~{:.1} MB — Set32 keeps the symbolic phase below it)\n",
+        (rows * width * 12) as f64 / 1048576.0
+    );
+    let _ = t.write_tsv(std::path::Path::new("results/ablation_set_width.tsv"));
+}
+
+/// C: all-at-once vs merged across a boundary-heavy and an interior-heavy
+/// partition.
+fn ablation_aao_vs_merged() {
+    println!("== C: all-at-once vs merged (R recomputation vs overlap) ==\n");
+    let mut t = Table::new(vec!["np", "algorithm", "sym_s", "num_s"]);
+    for np in [2usize, 8] {
+        let world = World::new(np);
+        let rows = world.run(|comm| {
+            let mp = ModelProblem::build(Grid3::cube(20), comm.rank(), comm.size());
+            let tracker = MemTracker::new();
+            let mut out = Vec::new();
+            for algo in [Algo::AllAtOnce, Algo::Merged] {
+                let mut op = Ptap::symbolic(algo, &comm, &mp.a, &mp.p, &tracker);
+                op.numeric(&comm, &mp.a, &mp.p);
+                out.push((algo, op.stats.time_sym, op.stats.time_num));
+            }
+            out
+        });
+        for k in 0..2 {
+            let algo = rows[0][k].0;
+            let sym = rows.iter().map(|r| r[k].1).fold(0.0f64, f64::max);
+            let num = rows.iter().map(|r| r[k].2).fold(0.0f64, f64::max);
+            t.row(vec![
+                np.to_string(),
+                algo.name().to_string(),
+                format!("{sym:.4}"),
+                format!("{num:.4}"),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    let _ = t.write_tsv(std::path::Path::new("results/ablation_aao_merged.tsv"));
+}
+
+/// D: smoothed vs tentative prolongator: P width drives product cost.
+fn ablation_smoothing() {
+    println!("== D: prolongator smoothing (P width vs triple-product cost) ==\n");
+    let mut t = Table::new(vec!["smoothing", "P_nnz", "C_nnz", "product_s", "mem_mb"]);
+    let world = World::new(2);
+    let rows = world.run(|comm| {
+        let a = grid_laplacian(Grid3::cube(16), comm.rank(), comm.size());
+        let mut out = Vec::new();
+        for omega in [0.0, 0.55] {
+            let p = aggregate_interp(
+                &comm,
+                &a,
+                AggregateOpts { threshold: 0.25, smooth_omega: omega },
+            );
+            let tracker = MemTracker::new();
+            let t0 = Instant::now();
+            let (c, _stats) = ptap_once(Algo::AllAtOnce, &comm, &a, &p, &tracker);
+            let secs = t0.elapsed().as_secs_f64();
+            out.push((
+                omega,
+                p.nnz_global(&comm),
+                c.nnz_global(&comm),
+                secs,
+                tracker.peak_total(),
+            ));
+        }
+        out
+    });
+    for k in 0..2 {
+        let (omega, pnnz, cnnz, _, _) = rows[0][k];
+        let secs = rows.iter().map(|r| r[k].3).fold(0.0f64, f64::max);
+        let mem = rows.iter().map(|r| r[k].4).max().unwrap();
+        t.row(vec![
+            if omega == 0.0 { "tentative".into() } else { format!("jacobi w={omega}") },
+            pnnz.to_string(),
+            cnnz.to_string(),
+            format!("{secs:.4}"),
+            format!("{:.1}", mem as f64 / 1048576.0),
+        ]);
+    }
+    println!("{}", t.render());
+    let _ = t.write_tsv(std::path::Path::new("results/ablation_smoothing.tsv"));
+}

@@ -1,0 +1,107 @@
+//! Bench: the Layer-1 kernel path — batched block triple products through
+//! the compiled Pallas artifact (PJRT CPU) vs the native f64 loop, across
+//! block sizes.  Reports triples/s, effective GFLOP/s and the end-to-end
+//! block PtAP on both backends (perf deliverable; EXPERIMENTS.md §Perf).
+
+use std::time::Instant;
+
+use galerkin_ptap::dist::World;
+use galerkin_ptap::gen::{neutron_block_interp, neutron_block_operator, Grid3, NeutronConfig};
+use galerkin_ptap::mem::MemTracker;
+use galerkin_ptap::ptap::block::block_ptap;
+use galerkin_ptap::runtime::{BlockBackend, KernelRuntime, TripleBatcher};
+use galerkin_ptap::util::prng::Rng;
+use galerkin_ptap::util::table::Table;
+
+fn main() {
+    let Ok(rt) = KernelRuntime::load_default() else {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return;
+    };
+    println!("== kernel micro-bench: batched b×b triple products ==\n");
+    let mut t = Table::new(vec![
+        "b", "backend", "triples", "secs", "Mtriples/s", "GFLOP/s",
+    ]);
+    let mut rng = Rng::new(1);
+    for &b in &[4usize, 8, 16] {
+        let total: usize = match b {
+            4 => 200_000,
+            8 => 60_000,
+            _ => 12_000,
+        };
+        let bb = b * b;
+        let blocks: Vec<f64> = (0..3 * total * bb).map(|_| rng.normal()).collect();
+        // flops per triple: two b³ matmuls (2 b³ mul-add each)
+        let flops = (4 * b * b * b * total) as f64;
+        for backend_is_pjrt in [false, true] {
+            let backend = if backend_is_pjrt {
+                BlockBackend::Pjrt(&rt)
+            } else {
+                BlockBackend::Native
+            };
+            let mut batcher = TripleBatcher::new(backend, b);
+            let mut sum = 0.0f64;
+            let t0 = Instant::now();
+            {
+                let mut sink = |_tag: u64, blk: &[f64]| sum += blk[0];
+                for k in 0..total {
+                    let base = 3 * k * bb;
+                    batcher.push(
+                        &blocks[base..base + bb],
+                        &blocks[base + bb..base + 2 * bb],
+                        &blocks[base + 2 * bb..base + 3 * bb],
+                        k as u64,
+                        &mut sink,
+                    );
+                }
+                batcher.flush(&mut sink);
+            }
+            let secs = t0.elapsed().as_secs_f64();
+            std::hint::black_box(sum);
+            t.row(vec![
+                b.to_string(),
+                backend.name().to_string(),
+                total.to_string(),
+                format!("{:.3}", secs),
+                format!("{:.2}", total as f64 / secs / 1e6),
+                format!("{:.2}", flops / secs / 1e9),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    let _ = t.write_tsv(std::path::Path::new("results/bench_kernel.tsv"));
+
+    // end-to-end block PtAP, both backends
+    println!("== end-to-end block PtAP (neutron analog, 2 ranks) ==\n");
+    let dir = KernelRuntime::find_dir().unwrap();
+    let grid = Grid3::cube(8);
+    let groups = 8;
+    let world = World::new(2);
+    let dir_ref = &dir;
+    let rows = world.run(move |comm| {
+        let rt = KernelRuntime::load_filtered(dir_ref, |m| m.entry == "block_ptap").unwrap();
+        let cfg = NeutronConfig { grid, groups, seed: 4 };
+        let a = neutron_block_operator(cfg, comm.rank(), comm.size());
+        let p = neutron_block_interp(grid, groups, comm.rank(), comm.size());
+        let tracker = MemTracker::new();
+        let t0 = Instant::now();
+        let rn = block_ptap(&comm, &a, &p, BlockBackend::Native, &tracker);
+        let tn = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let _rp = block_ptap(&comm, &a, &p, BlockBackend::Pjrt(&rt), &tracker);
+        let tp = t0.elapsed().as_secs_f64();
+        (comm.rank(), rn.triples, tn, tp)
+    });
+    let mut t2 = Table::new(vec!["rank", "triples", "native_s", "pjrt_s", "pjrt/native"]);
+    for (rank, triples, tn, tp) in rows {
+        t2.row(vec![
+            rank.to_string(),
+            triples.to_string(),
+            format!("{tn:.3}"),
+            format!("{tp:.3}"),
+            format!("{:.2}", tp / tn),
+        ]);
+    }
+    println!("{}", t2.render());
+    let _ = t2.write_tsv(std::path::Path::new("results/bench_kernel_e2e.tsv"));
+}

@@ -1,0 +1,285 @@
+//! The two experiment drivers (model problem §4.1, neutron analog §4.2).
+//!
+//! Aggregation semantics (DESIGN.md §7): per-rank busy CPU time is
+//! measured with the thread CPU clock; the reported time is the max over
+//! ranks plus the α-β model applied to that rank's message counts.  Memory
+//! is the max over ranks of the tracker's per-category peaks.
+
+use crate::dist::{DistSpmv, DistVec, World};
+use crate::gen::{
+    neutron_block_operator, Grid3, ModelProblem, NeutronConfig,
+};
+use crate::mem::{Cat, MemTracker};
+use crate::mg::{
+    build_hierarchy, gmres, Coarsening, HierarchyConfig, InterpStats, LevelStats, MgOpts,
+    MgPreconditioner,
+};
+use crate::ptap::{Algo, Ptap, PtapStats};
+
+/// Model-problem experiment parameters (one (np, algo) cell of Table 1/3).
+#[derive(Debug, Clone, Copy)]
+pub struct ModelProblemConfig {
+    pub coarse: Grid3,
+    pub np: usize,
+    pub algo: Algo,
+    /// Numeric products after the one symbolic (paper: 11).
+    pub numeric_repeats: usize,
+}
+
+/// One row of Table 1/3 (+ the storage columns of Table 2/4).
+#[derive(Debug, Clone, Copy)]
+pub struct ModelProblemResult {
+    pub np: usize,
+    pub algo: Algo,
+    /// Peak triple-product memory per rank (MatC+Aux+Hash+Comm), bytes.
+    pub mem_product: u64,
+    /// Storage of A / P / C per rank (max), bytes.
+    pub mem_a: u64,
+    pub mem_p: u64,
+    pub mem_c: u64,
+    /// Simulated parallel times (max busy + comm model), seconds.
+    pub time_sym: f64,
+    pub time_num: f64,
+}
+
+impl ModelProblemResult {
+    pub fn time(&self) -> f64 {
+        self.time_sym + self.time_num
+    }
+}
+
+/// Run one model-problem cell: 1 symbolic + `numeric_repeats` numeric
+/// triple products on `np` simulated ranks.
+pub fn run_model_problem(cfg: ModelProblemConfig) -> ModelProblemResult {
+    let world = World::new(cfg.np);
+    let per_rank = world.run(|comm| {
+        let tracker = MemTracker::new();
+        let mp = ModelProblem::build(cfg.coarse, comm.rank(), comm.size());
+        tracker.alloc(Cat::MatA, mp.a.bytes());
+        tracker.alloc(Cat::MatP, mp.p.bytes());
+        tracker.reset_peaks();
+        let mut op = Ptap::symbolic(cfg.algo, &comm, &mp.a, &mp.p, &tracker);
+        for _ in 0..cfg.numeric_repeats {
+            op.numeric(&comm, &mp.a, &mp.p);
+        }
+        let stats = op.stats;
+        // True peak of product-related memory: peaks were reset after A/P
+        // were charged, so everything above that floor is the product's
+        // (C + auxiliaries + hash + staging).  Summing per-category peaks
+        // instead would overstate all-at-once, whose hash peak (symbolic)
+        // and C peak (numeric) never coexist — the paper's key effect.
+        let mem_product = tracker.peak_total() - mp.a.bytes() - mp.p.bytes();
+        let c_bytes = op.extract_c().bytes();
+        (stats, mem_product, mp.a.bytes(), mp.p.bytes(), c_bytes)
+    });
+    aggregate_model(cfg, per_rank)
+}
+
+fn aggregate_model(
+    cfg: ModelProblemConfig,
+    per_rank: Vec<(PtapStats, u64, u64, u64, u64)>,
+) -> ModelProblemResult {
+    let mut r = ModelProblemResult {
+        np: cfg.np,
+        algo: cfg.algo,
+        mem_product: 0,
+        mem_a: 0,
+        mem_p: 0,
+        mem_c: 0,
+        time_sym: 0.0,
+        time_num: 0.0,
+    };
+    for (stats, mem_product, a, p, c) in per_rank {
+        r.mem_product = r.mem_product.max(mem_product);
+        r.mem_a = r.mem_a.max(a);
+        r.mem_p = r.mem_p.max(p);
+        r.mem_c = r.mem_c.max(c);
+        r.time_sym = r.time_sym.max(stats.time_sym_modeled());
+        r.time_num = r.time_num.max(stats.time_num_modeled());
+    }
+    r
+}
+
+/// Neutron-analog experiment parameters (one (np, algo) cell of Table 7/8).
+#[derive(Debug, Clone)]
+pub struct NeutronConfigExp {
+    pub grid: Grid3,
+    pub groups: usize,
+    pub np: usize,
+    pub algo: Algo,
+    /// Cache intermediate data across levels (Table 8) or free it (Table 7).
+    pub cache: bool,
+    /// AMG levels cap.
+    pub max_levels: usize,
+    /// Outer MG-PCG iterations standing in for the transport solve.
+    pub solve_iters: usize,
+}
+
+/// One row of Table 7/8 plus the per-level Tables 5/6.
+#[derive(Debug, Clone)]
+pub struct NeutronResult {
+    pub np: usize,
+    pub algo: Algo,
+    pub cache: bool,
+    /// Peak triple-product memory per rank, bytes ("Mem").
+    pub mem_product: u64,
+    /// Peak total memory per rank, bytes ("Mem_T").
+    pub mem_total: u64,
+    /// Triple-product time ("Time"), seconds.
+    pub time_product: f64,
+    /// Whole-simulation time ("Time_T"), seconds.
+    pub time_total: f64,
+    pub n_levels: usize,
+    pub op_stats: Vec<LevelStats>,
+    pub interp_stats: Vec<InterpStats>,
+    /// Residual history of the mock solve (end-to-end signal).
+    pub residuals: Vec<f64>,
+}
+
+/// Run one neutron cell: block operator → scalar AMG hierarchy (the
+/// triple products under test) → MG-PCG solve standing in for the
+/// transport simulation.
+pub fn run_neutron(cfg: NeutronConfigExp) -> NeutronResult {
+    let world = World::new(cfg.np);
+    let cfg2 = cfg.clone();
+    let mut per_rank = world.run(move |comm| {
+        let cfg = cfg2.clone();
+        let tracker = MemTracker::new();
+        let ncfg = NeutronConfig { grid: cfg.grid, groups: cfg.groups, seed: 20190701 };
+        let a_block = neutron_block_operator(ncfg, comm.rank(), comm.size());
+        let a0 = a_block.to_scalar();
+        drop(a_block);
+        tracker.alloc(Cat::MatA, a0.bytes());
+        tracker.reset_peaks();
+
+        let mut total_timer = crate::util::timer::BusyTimer::new();
+        total_timer.start();
+        let h = build_hierarchy(
+            &comm,
+            a0.clone(),
+            &Coarsening::Aggregation {
+                // tentative (unsmoothed) prolongator: the paper's subspace
+                // coarsening keeps P very sparse (Table 6: <= 12 cols/row);
+                // Jacobi smoothing would square the coarse stencil per
+                // level and blow Table 5's cols_avg far past the paper's.
+                opts: crate::mg::AggregateOpts { threshold: 0.25, smooth_omega: 0.0 },
+                min_rows: 64,
+                max_levels: cfg.max_levels,
+            },
+            HierarchyConfig {
+                algo: cfg.algo,
+                cache: cfg.cache,
+                numeric_repeats: 1,
+            },
+            &tracker,
+        );
+        let ptap_stats = h.ptap_stats;
+        let op_stats = h.op_stats.clone();
+        let interp_stats = h.interp_stats.clone();
+        let n_levels = h.n_levels();
+        // product memory: everything above the A0 floor minus the
+        // interpolations charged along the way (read BEFORE solver state
+        // is charged)
+        let interp_bytes: u64 =
+            h.levels.iter().filter_map(|l| l.p.as_ref()).map(|p| p.bytes()).sum();
+        let mem_product =
+            tracker.peak_total().saturating_sub(a0.bytes() + interp_bytes);
+
+        // the "simulation": MG-preconditioned CG on the fine operator
+        let spmv = DistSpmv::new(&comm, &a0);
+        tracker.alloc(Cat::Other, spmv.bytes());
+        let mut pc = MgPreconditioner::new(&comm, h, MgOpts::default());
+        tracker.alloc(Cat::Other, pc.bytes());
+        let layout = a0.row_layout.clone();
+        let b = DistVec::from_fn(layout.clone(), comm.rank(), |g| {
+            ((g % 17) as f64 - 8.0) / 8.0
+        });
+        let mut x = DistVec::zeros(layout, comm.rank());
+        // transport-like operators are nonsymmetric: GMRES(30) as in the
+        // paper's RattleSnake runs
+        let solve =
+            gmres(&comm, &a0, &spmv, &b, &mut x, Some(&mut pc), 30, 1e-8, cfg.solve_iters);
+        total_timer.stop();
+
+        let comm_model = comm.stats().modeled_secs();
+        (
+            ptap_stats,
+            mem_product,
+            tracker.peak_total(),
+            total_timer.total() + comm_model,
+            op_stats,
+            interp_stats,
+            n_levels,
+            solve.residuals,
+        )
+    });
+
+    let (mut mem_product, mut mem_total) = (0u64, 0u64);
+    let (mut time_product, mut time_total) = (0.0f64, 0.0f64);
+    for (stats, mp, mt, tt, ..) in per_rank.iter() {
+        mem_product = mem_product.max(*mp);
+        mem_total = mem_total.max(*mt);
+        time_product = time_product.max(stats.time_sym_modeled() + stats.time_num_modeled());
+        time_total = time_total.max(*tt);
+    }
+    let (_, _, _, _, op_stats, interp_stats, n_levels, residuals) = per_rank.remove(0);
+    NeutronResult {
+        np: cfg.np,
+        algo: cfg.algo,
+        cache: cfg.cache,
+        mem_product,
+        mem_total,
+        time_product,
+        time_total,
+        n_levels,
+        op_stats,
+        interp_stats,
+        residuals,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_problem_cell_runs_and_orders_memory() {
+        let mk = |algo| {
+            run_model_problem(ModelProblemConfig {
+                coarse: Grid3::cube(6),
+                np: 2,
+                algo,
+                numeric_repeats: 2,
+            })
+        };
+        let aao = mk(Algo::AllAtOnce);
+        let two = mk(Algo::TwoStep);
+        assert!(aao.time() > 0.0);
+        assert!(
+            two.mem_product as f64 > 1.5 * aao.mem_product as f64,
+            "two-step {} vs aao {}",
+            two.mem_product,
+            aao.mem_product
+        );
+        // identical C storage
+        assert_eq!(aao.mem_c, two.mem_c);
+    }
+
+    #[test]
+    fn neutron_cell_builds_hierarchy_and_converges() {
+        let r = run_neutron(NeutronConfigExp {
+            grid: Grid3::cube(6),
+            groups: 4,
+            np: 2,
+            algo: Algo::Merged,
+            cache: false,
+            max_levels: 6,
+            solve_iters: 40,
+        });
+        assert!(r.n_levels >= 3);
+        assert!(r.mem_total >= r.mem_product);
+        let r0 = r.residuals.first().copied().unwrap();
+        let rl = r.residuals.last().copied().unwrap();
+        assert!(rl < 1e-6 * r0, "solve stalled {r0} -> {rl}");
+    }
+}

@@ -1,0 +1,15 @@
+//! Experiment coordinator: spawns rank worlds, runs the paper's
+//! experiments, aggregates per-rank measurements into the tables the
+//! paper prints (Tables 1–8, Figures 1–10).
+
+mod experiment;
+mod report;
+
+pub use experiment::{
+    run_model_problem, run_neutron, ModelProblemConfig, ModelProblemResult, NeutronConfigExp,
+    NeutronResult,
+};
+pub use report::{
+    eff_column, level_tables, model_problem_tables, neutron_tables, speedup_column,
+    write_results,
+};

@@ -1,0 +1,153 @@
+//! Table assembly: the exact rows/columns the paper prints, plus TSV
+//! artifacts under results/ that EXPERIMENTS.md references.
+
+use std::path::Path;
+
+use crate::util::table::Table;
+use crate::util::{fmt_secs, mb};
+
+use super::experiment::{ModelProblemResult, NeutronResult};
+
+/// Speedups relative to the smallest rank count *within one algorithm*
+/// (paper Figs 1/3/7/9 top panels).
+pub fn speedup_column(nps: &[usize], times: &[f64]) -> Vec<f64> {
+    assert_eq!(nps.len(), times.len());
+    if times.is_empty() {
+        return Vec::new();
+    }
+    // speedup_k = t0 / t_k (ideal = np_k / np0)
+    let t0 = times[0];
+    times.iter().map(|&t| t0 / t).collect()
+}
+
+/// Parallel efficiency (%) relative to the smallest rank count (paper's
+/// EFF column): `eff_k = (t0 * np0) / (t_k * np_k)`.
+pub fn eff_column(nps: &[usize], times: &[f64]) -> Vec<f64> {
+    if times.is_empty() {
+        return Vec::new();
+    }
+    let (np0, t0) = (nps[0] as f64, times[0]);
+    nps.iter()
+        .zip(times)
+        .map(|(&np, &t)| 100.0 * (t0 * np0) / (t * np as f64))
+        .collect()
+}
+
+/// Render Table 1/3-style rows (+ Table 2/4 storage and Fig-series TSVs).
+/// `rows` must be grouped by np ascending; each np may carry several
+/// algorithms.  Returns (main table, storage table).
+pub fn model_problem_tables(rows: &[ModelProblemResult]) -> (Table, Table) {
+    // EFF per algorithm relative to its smallest np
+    let mut main = Table::new(vec!["np", "Algorithm", "Mem", "Time_sym", "Time_num", "Time", "EFF"]);
+    let algos: Vec<_> = {
+        let mut v: Vec<_> = rows.iter().map(|r| r.algo).collect();
+        v.dedup();
+        v
+    };
+    for r in rows {
+        let series: Vec<&ModelProblemResult> =
+            rows.iter().filter(|x| x.algo == r.algo).collect();
+        let nps: Vec<usize> = series.iter().map(|x| x.np).collect();
+        let times: Vec<f64> = series.iter().map(|x| x.time()).collect();
+        let effs = eff_column(&nps, &times);
+        let k = series.iter().position(|x| x.np == r.np).unwrap();
+        main.row(vec![
+            r.np.to_string(),
+            r.algo.name().to_string(),
+            format!("{:.1}", mb(r.mem_product)),
+            fmt_secs(r.time_sym),
+            fmt_secs(r.time_num),
+            fmt_secs(r.time()),
+            format!("{:.0}%", effs[k]),
+        ]);
+    }
+    let _ = algos;
+    let mut storage = Table::new(vec!["np", "A", "P", "C"]);
+    let mut seen = std::collections::BTreeSet::new();
+    for r in rows {
+        if seen.insert(r.np) {
+            storage.row(vec![
+                r.np.to_string(),
+                format!("{:.1}", mb(r.mem_a)),
+                format!("{:.1}", mb(r.mem_p)),
+                format!("{:.1}", mb(r.mem_c)),
+            ]);
+        }
+    }
+    (main, storage)
+}
+
+/// Render Table 7/8-style rows.
+pub fn neutron_tables(rows: &[NeutronResult]) -> Table {
+    let mut t = Table::new(vec!["np", "Algorithm", "Mem", "Mem_T", "Time", "Time_T", "EFF"]);
+    for r in rows {
+        let series: Vec<&NeutronResult> = rows.iter().filter(|x| x.algo == r.algo).collect();
+        let nps: Vec<usize> = series.iter().map(|x| x.np).collect();
+        let times: Vec<f64> = series.iter().map(|x| x.time_total).collect();
+        let effs = eff_column(&nps, &times);
+        let k = series.iter().position(|x| x.np == r.np).unwrap();
+        t.row(vec![
+            r.np.to_string(),
+            r.algo.name().to_string(),
+            format!("{:.1}", mb(r.mem_product)),
+            format!("{:.1}", mb(r.mem_total)),
+            fmt_secs(r.time_product),
+            fmt_secs(r.time_total),
+            format!("{:.0}%", effs[k]),
+        ]);
+    }
+    t
+}
+
+/// Render Tables 5/6 (per-level operator + interpolation stats).
+pub fn level_tables(r: &NeutronResult) -> (Table, Table) {
+    let mut t5 = Table::new(vec!["level", "rows", "nonzeros", "cols_min", "cols_max", "cols_avg"]);
+    for (lvl, s) in r.op_stats.iter().enumerate() {
+        t5.row(vec![
+            lvl.to_string(),
+            s.rows.to_string(),
+            s.nnz.to_string(),
+            s.cols_min.to_string(),
+            s.cols_max.to_string(),
+            format!("{:.1}", s.cols_avg),
+        ]);
+    }
+    let mut t6 = Table::new(vec!["level", "rows", "cols", "cols_min", "cols_max"]);
+    for (lvl, s) in r.interp_stats.iter().enumerate() {
+        t6.row(vec![
+            lvl.to_string(),
+            s.rows.to_string(),
+            s.cols.to_string(),
+            s.cols_min.to_string(),
+            s.cols_max.to_string(),
+        ]);
+    }
+    (t5, t6)
+}
+
+/// Write a table to results/<name>.tsv (and echo the path).
+pub fn write_results(table: &Table, name: &str) {
+    let path = Path::new("results").join(format!("{name}.tsv"));
+    if let Err(e) = table.write_tsv(&path) {
+        eprintln!("warning: could not write {}: {e}", path.display());
+    } else {
+        println!("  -> {}", path.display());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eff_and_speedup_math() {
+        let nps = [4, 8, 16];
+        let times = [8.0, 4.0, 2.5];
+        let eff = eff_column(&nps, &times);
+        assert!((eff[0] - 100.0).abs() < 1e-9);
+        assert!((eff[1] - 100.0).abs() < 1e-9);
+        assert!((eff[2] - 80.0).abs() < 1e-9);
+        let sp = speedup_column(&nps, &times);
+        assert!((sp[2] - 3.2).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,211 @@
+//! The model problem (paper §4.1): a 3D structured grid mimicking a
+//! geometric two-level method.  The coarse mesh is an `m³` vertex grid,
+//! the fine mesh its uniform refinement (`(2m-1)³` vertices), `A` is the
+//! 7-point Laplacian on the fine mesh and `P` the trilinear interpolation
+//! from coarse to fine.  The paper runs m = 1000 and m = 1500 on Theta;
+//! the structure (hence the memory ratios) is size-independent.
+
+use crate::dist::{DistCsr, DistCsrBuilder, Layout};
+
+/// A 3D vertex grid with row-major (x fastest) linearization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Grid3 {
+    pub nx: usize,
+    pub ny: usize,
+    pub nz: usize,
+}
+
+impl Grid3 {
+    pub fn cube(n: usize) -> Self {
+        Grid3 { nx: n, ny: n, nz: n }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nx * self.ny * self.nz
+    }
+
+    #[inline]
+    pub fn id(&self, x: usize, y: usize, z: usize) -> usize {
+        x + self.nx * (y + self.ny * z)
+    }
+
+    #[inline]
+    pub fn coords(&self, id: usize) -> (usize, usize, usize) {
+        let x = id % self.nx;
+        let y = (id / self.nx) % self.ny;
+        let z = id / (self.nx * self.ny);
+        (x, y, z)
+    }
+
+    /// The uniform refinement of this grid (2n-1 per dimension).
+    pub fn refine(&self) -> Grid3 {
+        Grid3 { nx: 2 * self.nx - 1, ny: 2 * self.ny - 1, nz: 2 * self.nz - 1 }
+    }
+}
+
+/// 7-point Laplacian rows owned by `rank` (Dirichlet-eliminated exterior).
+pub fn grid_laplacian(grid: Grid3, rank: usize, np: usize) -> DistCsr {
+    let layout = Layout::new_equal(grid.len(), np);
+    let mut b = DistCsrBuilder::new(rank, layout.clone(), layout.clone());
+    let mut row: Vec<(u64, f64)> = Vec::with_capacity(7);
+    for gid in layout.range(rank) {
+        let (x, y, z) = grid.coords(gid);
+        row.clear();
+        if z > 0 {
+            row.push((grid.id(x, y, z - 1) as u64, -1.0));
+        }
+        if y > 0 {
+            row.push((grid.id(x, y - 1, z) as u64, -1.0));
+        }
+        if x > 0 {
+            row.push((grid.id(x - 1, y, z) as u64, -1.0));
+        }
+        row.push((gid as u64, 6.0));
+        if x + 1 < grid.nx {
+            row.push((grid.id(x + 1, y, z) as u64, -1.0));
+        }
+        if y + 1 < grid.ny {
+            row.push((grid.id(x, y + 1, z) as u64, -1.0));
+        }
+        if z + 1 < grid.nz {
+            row.push((grid.id(x, y, z + 1) as u64, -1.0));
+        }
+        b.push_row(&row);
+    }
+    b.finish()
+}
+
+/// Trilinear interpolation from `coarse` to its refinement: even fine
+/// coordinates inject, odd coordinates average the two bracketing coarse
+/// vertices (weight 1/2 per odd dimension, tensor product, ≤8 entries).
+pub fn trilinear_interp(coarse: Grid3, rank: usize, np: usize) -> DistCsr {
+    let fine = coarse.refine();
+    let row_layout = Layout::new_equal(fine.len(), np);
+    let col_layout = Layout::new_equal(coarse.len(), np);
+    let mut b = DistCsrBuilder::new(rank, row_layout.clone(), col_layout);
+    let mut entries: Vec<(u64, f64)> = Vec::with_capacity(8);
+    for gid in row_layout.range(rank) {
+        let (fx, fy, fz) = fine.coords(gid);
+        // per-dimension (coarse index, weight) pairs
+        let dim = |f: usize| -> ([(usize, f64); 2], usize) {
+            if f % 2 == 0 {
+                ([(f / 2, 1.0), (0, 0.0)], 1)
+            } else {
+                ([(f / 2, 0.5), (f / 2 + 1, 0.5)], 2)
+            }
+        };
+        let (xs, nxw) = dim(fx);
+        let (ys, nyw) = dim(fy);
+        let (zs, nzw) = dim(fz);
+        entries.clear();
+        for &(cz, wz) in &zs[..nzw] {
+            for &(cy, wy) in &ys[..nyw] {
+                for &(cx, wx) in &xs[..nxw] {
+                    entries.push((coarse.id(cx, cy, cz) as u64, wx * wy * wz));
+                }
+            }
+        }
+        entries.sort_unstable_by_key(|&(c, _)| c);
+        b.push_row(&entries);
+    }
+    b.finish()
+}
+
+/// The full model problem for one rank: fine operator + interpolation.
+pub struct ModelProblem {
+    pub coarse: Grid3,
+    pub fine: Grid3,
+    pub a: DistCsr,
+    pub p: DistCsr,
+}
+
+impl ModelProblem {
+    /// Build A (fine 7-pt Laplacian) and P (trilinear) for `rank`.
+    pub fn build(coarse: Grid3, rank: usize, np: usize) -> Self {
+        let fine = coarse.refine();
+        let a = grid_laplacian(fine, rank, np);
+        let p = trilinear_interp(coarse, rank, np);
+        ModelProblem { coarse, fine, a, p }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::World;
+
+    #[test]
+    fn grid_indexing_round_trip() {
+        let g = Grid3 { nx: 3, ny: 4, nz: 5 };
+        for id in 0..g.len() {
+            let (x, y, z) = g.coords(id);
+            assert_eq!(g.id(x, y, z), id);
+        }
+    }
+
+    #[test]
+    fn laplacian_is_symmetric_weakly_diag_dominant() {
+        let w = World::new(2);
+        w.run(|c| {
+            let a = grid_laplacian(Grid3::cube(4), c.rank(), c.size());
+            a.validate().unwrap();
+            let g = a.gather_global(&c);
+            // symmetry
+            let t = g.transpose();
+            assert_eq!(g, t);
+            // row sums >= 0 (Dirichlet rows strictly positive)
+            for i in 0..g.nrows {
+                let s: f64 = g.row(i).1.iter().sum();
+                assert!(s >= -1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn interp_rows_sum_to_one() {
+        let w = World::new(3);
+        w.run(|c| {
+            let p = trilinear_interp(Grid3::cube(3), c.rank(), c.size());
+            p.validate().unwrap();
+            for i in 0..p.local_nrows() {
+                let s: f64 =
+                    p.diag.row(i).1.iter().chain(p.offd.row(i).1.iter()).sum();
+                assert!((s - 1.0).abs() < 1e-12, "row {i} sums to {s}");
+            }
+        });
+    }
+
+    #[test]
+    fn interp_injects_at_even_points() {
+        let coarse = Grid3::cube(3);
+        let fine = coarse.refine();
+        let p = trilinear_interp(coarse, 0, 1);
+        for cid in 0..coarse.len() {
+            let (cx, cy, cz) = coarse.coords(cid);
+            let fid = fine.id(2 * cx, 2 * cy, 2 * cz);
+            let (cols, vals) = p.diag.row(fid);
+            assert_eq!(cols.len(), 1);
+            assert_eq!(cols[0] as usize, cid);
+            assert_eq!(vals[0], 1.0);
+        }
+    }
+
+    #[test]
+    fn interp_row_width_max_8() {
+        let p = trilinear_interp(Grid3::cube(4), 0, 1);
+        let mut max_w = 0;
+        for i in 0..p.local_nrows() {
+            max_w = max_w.max(p.diag.row_len(i) + p.offd.row_len(i));
+        }
+        assert_eq!(max_w, 8);
+    }
+
+    #[test]
+    fn model_problem_dimensions_match_paper_formula() {
+        // paper: coarse 1000^3 -> fine dims 1999^3 = 7,988,005,999
+        let mp = Grid3::cube(1000).refine();
+        assert_eq!(mp.len(), 7_988_005_999);
+        let mp2 = Grid3::cube(1500).refine();
+        assert_eq!(mp2.len(), 26_973_008_999);
+    }
+}

@@ -1,0 +1,10 @@
+//! Workload generators: the paper's two test problems, scaled to this
+//! testbed (DESIGN.md §3 records the substitutions).
+
+mod grid;
+mod neutron;
+mod random;
+
+pub use grid::{grid_laplacian, trilinear_interp, Grid3, ModelProblem};
+pub use neutron::{neutron_block_interp, neutron_block_operator, NeutronConfig};
+pub use random::random_dist_csr;

@@ -1,0 +1,224 @@
+//! Synthetic multigroup neutron-transport-like operator (paper §4.2
+//! substitute; see DESIGN.md §3).
+//!
+//! The real workload (ATR, RattleSnake) couples G energy-group/direction
+//! variables at every mesh vertex: dense in-vertex scattering/fission
+//! coupling plus direction-dependent streaming between neighbouring
+//! vertices.  We reproduce what matters to PtAP cost: a 3D vertex graph
+//! with dense `G×G` diagonal blocks and sparse (diagonal) neighbour
+//! blocks, i.e. scalar rows with `~6 + G` nonzeros — the "many variables
+//! per vertex" regime that makes the two-step method's `C̃`/`Pᵀ` overhead
+//! hurt.
+
+use crate::dist::{DistBcsr, DistBcsrBuilder, Layout};
+use crate::util::prng::Rng;
+
+use super::grid::Grid3;
+
+/// Parameters of the synthetic transport operator.
+#[derive(Debug, Clone, Copy)]
+pub struct NeutronConfig {
+    /// Vertex grid.
+    pub grid: Grid3,
+    /// Energy groups (block size).  The paper's problem has 96
+    /// variables/vertex; we default to 8–16 (DESIGN.md §3).
+    pub groups: usize,
+    /// RNG seed (per-vertex streams derive from it, so the matrix is
+    /// identical for every rank count).
+    pub seed: u64,
+}
+
+impl NeutronConfig {
+    pub fn unknowns(&self) -> usize {
+        self.grid.len() * self.groups
+    }
+}
+
+/// Dense in-vertex block: downscatter-dominated coupling, diagonally
+/// dominant (total cross section on the diagonal).
+fn vertex_block(g: usize, rng: &mut Rng) -> Vec<f64> {
+    let mut blk = vec![0.0; g * g];
+    for gi in 0..g {
+        for gj in 0..g {
+            if gi == gj {
+                continue;
+            }
+            // scattering g_j -> g_i: stronger downscatter (gj < gi)
+            let base = if gj < gi { 0.35 } else { 0.08 };
+            blk[gi * g + gj] = -base * rng.range_f64(0.5, 1.0) / g as f64;
+        }
+    }
+    for gi in 0..g {
+        // total cross section dominates the row (removal + leakage)
+        let off: f64 = (0..g).filter(|&j| j != gi).map(|j| blk[gi * g + j].abs()).sum();
+        blk[gi * g + gi] = 6.0 + off + rng.range_f64(0.2, 0.6);
+    }
+    blk
+}
+
+/// Streaming block between neighbouring vertices: per-group diagonal,
+/// direction-asymmetric (upwinding): the "downwind" magnitude differs.
+fn streaming_block(g: usize, rng: &mut Rng, downwind: bool) -> Vec<f64> {
+    let mut blk = vec![0.0; g * g];
+    for gi in 0..g {
+        let s = if downwind { -1.0 } else { -0.8 };
+        blk[gi * g + gi] = s * rng.range_f64(0.8, 1.2);
+    }
+    blk
+}
+
+/// The block operator rows owned by `rank` (MPIBAIJ analog).
+pub fn neutron_block_operator(cfg: NeutronConfig, rank: usize, np: usize) -> DistBcsr {
+    let g = cfg.groups;
+    let grid = cfg.grid;
+    let layout = Layout::new_equal(grid.len(), np);
+    let mut b = DistBcsrBuilder::new(rank, g, layout.clone(), layout.clone());
+    for gid in layout.range(rank) {
+        let (x, y, z) = grid.coords(gid);
+        // per-vertex deterministic stream => identical matrix for any np
+        let mut rng = Rng::new(cfg.seed ^ (gid as u64).wrapping_mul(0x9E37_79B9));
+        let mut cols: Vec<u64> = Vec::with_capacity(7);
+        let mut blocks: Vec<f64> = Vec::with_capacity(7 * g * g);
+        let push = |cols: &mut Vec<u64>, blocks: &mut Vec<f64>, cid: usize, blk: Vec<f64>| {
+            cols.push(cid as u64);
+            blocks.extend_from_slice(&blk);
+        };
+        if z > 0 {
+            push(&mut cols, &mut blocks, grid.id(x, y, z - 1), streaming_block(g, &mut rng, false));
+        }
+        if y > 0 {
+            push(&mut cols, &mut blocks, grid.id(x, y - 1, z), streaming_block(g, &mut rng, false));
+        }
+        if x > 0 {
+            push(&mut cols, &mut blocks, grid.id(x - 1, y, z), streaming_block(g, &mut rng, false));
+        }
+        push(&mut cols, &mut blocks, gid, vertex_block(g, &mut rng));
+        if x + 1 < grid.nx {
+            push(&mut cols, &mut blocks, grid.id(x + 1, y, z), streaming_block(g, &mut rng, true));
+        }
+        if y + 1 < grid.ny {
+            push(&mut cols, &mut blocks, grid.id(x, y + 1, z), streaming_block(g, &mut rng, true));
+        }
+        if z + 1 < grid.nz {
+            push(&mut cols, &mut blocks, grid.id(x, y, z + 1), streaming_block(g, &mut rng, true));
+        }
+        b.push_row(&cols, &blocks);
+    }
+    b.finish()
+}
+
+/// Block aggregation interpolation: 2×2×2 vertex clusters (geometric
+/// aggregation; aggregates are *global* grid cells, so fine vertices near
+/// rank boundaries interpolate to coarse blocks owned by other ranks —
+/// the communication pattern the paper's neutron runs exercise).  Each
+/// block row has one `I_G` block at its aggregate.
+pub fn neutron_block_interp(grid: Grid3, g: usize, rank: usize, np: usize) -> DistBcsr {
+    let coarse = Grid3 {
+        nx: grid.nx.div_ceil(2),
+        ny: grid.ny.div_ceil(2),
+        nz: grid.nz.div_ceil(2),
+    };
+    let row_layout = Layout::new_equal(grid.len(), np);
+    let col_layout = Layout::new_equal(coarse.len(), np);
+    let mut b = DistBcsrBuilder::new(rank, g, row_layout.clone(), col_layout);
+    let mut eye = vec![0.0; g * g];
+    for i in 0..g {
+        eye[i * g + i] = 1.0;
+    }
+    for gid in row_layout.range(rank) {
+        let (x, y, z) = grid.coords(gid);
+        let agg = coarse.id(x / 2, y / 2, z / 2);
+        b.push_row(&[agg as u64], &eye);
+    }
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::World;
+
+    fn cfg() -> NeutronConfig {
+        NeutronConfig { grid: Grid3::cube(4), groups: 4, seed: 42 }
+    }
+
+    #[test]
+    fn operator_shape_and_validity() {
+        let w = World::new(2);
+        w.run(|c| {
+            let a = neutron_block_operator(cfg(), c.rank(), c.size());
+            a.validate().unwrap();
+            // 7-point stencil max
+            for i in 0..a.local_nrows() {
+                let n = a.diag.row_cols(i).len() + a.offd.row_cols(i).len();
+                assert!((4..=7).contains(&n));
+            }
+        });
+    }
+
+    #[test]
+    fn operator_identical_across_rank_counts() {
+        let gather = |np: usize| {
+            let w = World::new(np);
+            let r = w.run(|c| {
+                neutron_block_operator(cfg(), c.rank(), c.size())
+                    .to_scalar()
+                    .gather_global(&c)
+            });
+            r.into_iter().next().unwrap()
+        };
+        let a1 = gather(1);
+        let a3 = gather(3);
+        assert_eq!(a1, a3);
+    }
+
+    #[test]
+    fn diag_blocks_dominant() {
+        let a = neutron_block_operator(cfg(), 0, 1);
+        let g = a.b;
+        for i in 0..a.local_nrows() {
+            // find the diagonal block (local col == row)
+            let r = a.diag.row_range(i);
+            let cols = a.diag.row_cols(i);
+            let pos = cols.iter().position(|&c| c as usize == i).unwrap();
+            let blk = a.diag.block(r.start + pos);
+            for gi in 0..g {
+                assert!(blk[gi * g + gi] > 6.0);
+            }
+        }
+    }
+
+    #[test]
+    fn interp_has_off_rank_blocks() {
+        // rank-boundary fine vertices must reference remote aggregates
+        let w = World::new(4);
+        let has_offd = w.run(|c| {
+            let p = neutron_block_interp(Grid3::cube(6), 2, c.rank(), c.size());
+            p.validate().unwrap();
+            // every row exactly one block
+            for i in 0..p.local_nrows() {
+                assert_eq!(
+                    p.diag.row_cols(i).len() + p.offd.row_cols(i).len(),
+                    1
+                );
+            }
+            p.offd.nnz_blocks() > 0
+        });
+        assert!(has_offd.iter().any(|&x| x), "no rank saw off-rank aggregates");
+    }
+
+    #[test]
+    fn interp_covers_all_aggregates() {
+        let w = World::new(2);
+        w.run(|c| {
+            let p = neutron_block_interp(Grid3::cube(4), 2, c.rank(), c.size());
+            let s = p.to_scalar().gather_global(&c);
+            // every coarse column must be hit by at least one row
+            let mut hit = vec![false; s.ncols];
+            for &c in &s.cols {
+                hit[c as usize] = true;
+            }
+            assert!(hit.iter().all(|&h| h));
+        });
+    }
+}

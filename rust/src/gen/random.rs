@@ -1,0 +1,46 @@
+//! Random distributed matrices for property tests: per-global-row RNG
+//! streams make the matrix independent of the rank count, so any
+//! distributed result can be cross-checked against np=1.
+
+use crate::dist::{DistCsr, DistCsrBuilder, Layout};
+use crate::util::prng::Rng;
+
+/// Random sparse `nrows x ncols` matrix, about `row_nnz` entries per row.
+pub fn random_dist_csr(
+    rank: usize,
+    np: usize,
+    nrows: usize,
+    ncols: usize,
+    row_nnz: usize,
+    seed: u64,
+) -> DistCsr {
+    let rl = Layout::new_equal(nrows, np);
+    let cl = Layout::new_equal(ncols, np);
+    let mut b = DistCsrBuilder::new(rank, rl.clone(), cl);
+    for gi in rl.range(rank) {
+        let mut rng = Rng::new(seed.wrapping_add(gi as u64 * 7919));
+        let mut cols: Vec<u64> = (0..row_nnz).map(|_| rng.below(ncols) as u64).collect();
+        cols.sort_unstable();
+        cols.dedup();
+        let entries: Vec<(u64, f64)> =
+            cols.iter().map(|&c| (c, rng.range_f64(-1.0, 1.0))).collect();
+        b.push_row(&entries);
+    }
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::World;
+
+    #[test]
+    fn independent_of_rank_count() {
+        let make = |np: usize| {
+            let w = World::new(np);
+            w.run(|c| random_dist_csr(c.rank(), c.size(), 30, 20, 4, 9).gather_global(&c))
+                .remove(0)
+        };
+        assert_eq!(make(1), make(4));
+    }
+}

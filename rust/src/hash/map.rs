@@ -1,0 +1,191 @@
+//! Integer-keyed f64 hash map with `+=` insert semantics (paper Alg. 3:
+//! "if j already exists in R then the value will be added to the current
+//! value otherwise a pair is inserted").
+
+use super::hash_u64;
+
+/// Open-addressing map `u64 -> f64` with generation-stamped O(1) clear.
+#[derive(Debug, Clone)]
+pub struct IntMap {
+    keys: Vec<u64>,
+    vals: Vec<f64>,
+    gens: Vec<u32>,
+    gen: u32,
+    mask: usize,
+    len: usize,
+    /// Reused by `collect_sorted` (extraction runs once per output row on
+    /// the numeric hot path — a fresh allocation per row would dominate).
+    scratch: Vec<(u64, f64)>,
+}
+
+impl Default for IntMap {
+    fn default() -> Self {
+        Self::with_capacity(16)
+    }
+}
+
+impl IntMap {
+    pub fn with_capacity(cap: usize) -> Self {
+        let slots = (cap.max(4) * 4 / 3 + 1).next_power_of_two();
+        IntMap {
+            keys: vec![0; slots],
+            vals: vec![0.0; slots],
+            gens: vec![0; slots],
+            gen: 1,
+            mask: slots - 1,
+            len: 0,
+            scratch: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.keys.len() * (8 + 8 + 4)) as u64
+    }
+
+    /// `self[key] += v` (insert if absent).
+    #[inline]
+    pub fn add(&mut self, key: u64, v: f64) {
+        if (self.len + 1) * 4 > self.keys.len() * 3 {
+            self.grow();
+        }
+        let mut i = (hash_u64(key) as usize) & self.mask;
+        loop {
+            if self.gens[i] != self.gen {
+                self.keys[i] = key;
+                self.vals[i] = v;
+                self.gens[i] = self.gen;
+                self.len += 1;
+                return;
+            }
+            if self.keys[i] == key {
+                self.vals[i] += v;
+                return;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    pub fn get(&self, key: u64) -> Option<f64> {
+        let mut i = (hash_u64(key) as usize) & self.mask;
+        loop {
+            if self.gens[i] != self.gen {
+                return None;
+            }
+            if self.keys[i] == key {
+                return Some(self.vals[i]);
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    /// O(1) clear by generation bump (buffer reused for the next row).
+    pub fn clear(&mut self) {
+        self.len = 0;
+        self.gen = self.gen.wrapping_add(1);
+        if self.gen == 0 {
+            self.gens.fill(0);
+            self.gen = 1;
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (u64, f64)> + '_ {
+        (0..self.keys.len())
+            .filter(move |&i| self.gens[i] == self.gen)
+            .map(move |i| (self.keys[i], self.vals[i]))
+    }
+
+    /// Extract (key, value) pairs sorted by key into the two output vecs
+    /// (allocation-free after warm-up: the pair buffer is retained).
+    pub fn collect_sorted(&mut self, keys_out: &mut Vec<u64>, vals_out: &mut Vec<f64>) {
+        keys_out.clear();
+        vals_out.clear();
+        let mut scratch = std::mem::take(&mut self.scratch);
+        scratch.clear();
+        scratch.extend(self.iter());
+        scratch.sort_unstable_by_key(|&(k, _)| k);
+        keys_out.extend(scratch.iter().map(|&(k, _)| k));
+        vals_out.extend(scratch.iter().map(|&(_, v)| v));
+        self.scratch = scratch;
+    }
+
+    fn grow(&mut self) {
+        let new_slots = self.keys.len() * 2;
+        let mut next = IntMap {
+            keys: vec![0; new_slots],
+            vals: vec![0.0; new_slots],
+            gens: vec![0; new_slots],
+            gen: 1,
+            mask: new_slots - 1,
+            len: 0,
+            scratch: std::mem::take(&mut self.scratch),
+        };
+        for i in 0..self.keys.len() {
+            if self.gens[i] == self.gen {
+                next.add(self.keys[i], self.vals[i]);
+            }
+        }
+        *self = next;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_accumulates() {
+        let mut m = IntMap::default();
+        m.add(5, 1.5);
+        m.add(5, 2.5);
+        m.add(9, -1.0);
+        assert_eq!(m.get(5), Some(4.0));
+        assert_eq!(m.get(9), Some(-1.0));
+        assert_eq!(m.get(1), None);
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn grow_preserves_values() {
+        let mut m = IntMap::with_capacity(4);
+        for k in 0..500u64 {
+            m.add(k, k as f64);
+            m.add(k, 1.0);
+        }
+        for k in 0..500u64 {
+            assert_eq!(m.get(k), Some(k as f64 + 1.0));
+        }
+    }
+
+    #[test]
+    fn clear_reuses() {
+        let mut m = IntMap::default();
+        m.add(1, 1.0);
+        let b = m.bytes();
+        m.clear();
+        assert_eq!(m.len(), 0);
+        assert_eq!(m.get(1), None);
+        assert_eq!(m.bytes(), b);
+        m.add(1, 3.0);
+        assert_eq!(m.get(1), Some(3.0));
+    }
+
+    #[test]
+    fn collect_sorted_by_key() {
+        let mut m = IntMap::default();
+        for (k, v) in [(9u64, 9.0), (1, 1.0), (5, 5.0)] {
+            m.add(k, v);
+        }
+        let (mut ks, mut vs) = (Vec::new(), Vec::new());
+        m.collect_sorted(&mut ks, &mut vs);
+        assert_eq!(ks, vec![1, 5, 9]);
+        assert_eq!(vs, vec![1.0, 5.0, 9.0]);
+    }
+}

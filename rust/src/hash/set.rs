@@ -1,0 +1,192 @@
+//! Integer hash set with generation-stamped O(1) clear (khash analog).
+
+use super::hash_u64;
+
+/// Open-addressing set of `u64` keys.
+#[derive(Debug, Clone)]
+pub struct IntSet {
+    keys: Vec<u64>,
+    gens: Vec<u32>,
+    gen: u32,
+    mask: usize,
+    len: usize,
+}
+
+impl Default for IntSet {
+    fn default() -> Self {
+        Self::with_capacity(16)
+    }
+}
+
+impl IntSet {
+    /// Create with room for at least `cap` keys before growing.
+    pub fn with_capacity(cap: usize) -> Self {
+        let slots = (cap.max(4) * 4 / 3 + 1).next_power_of_two();
+        IntSet {
+            keys: vec![0; slots],
+            gens: vec![0; slots],
+            gen: 1,
+            mask: slots - 1,
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Heap bytes held (for memory accounting).
+    pub fn bytes(&self) -> u64 {
+        (self.keys.len() * (8 + 4)) as u64
+    }
+
+    /// Insert; returns true if the key was new.
+    #[inline]
+    pub fn insert(&mut self, key: u64) -> bool {
+        if (self.len + 1) * 4 > self.keys.len() * 3 {
+            self.grow();
+        }
+        let mut i = (hash_u64(key) as usize) & self.mask;
+        loop {
+            if self.gens[i] != self.gen {
+                self.keys[i] = key;
+                self.gens[i] = self.gen;
+                self.len += 1;
+                return true;
+            }
+            if self.keys[i] == key {
+                return false;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    #[inline]
+    pub fn contains(&self, key: u64) -> bool {
+        let mut i = (hash_u64(key) as usize) & self.mask;
+        loop {
+            if self.gens[i] != self.gen {
+                return false;
+            }
+            if self.keys[i] == key {
+                return true;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    /// O(1) clear: bump the generation; memory is retained and reused.
+    pub fn clear(&mut self) {
+        self.len = 0;
+        self.gen = self.gen.wrapping_add(1);
+        if self.gen == 0 {
+            // generation wrapped: lazily-invalidated stamps could alias,
+            // so do one eager reset (amortized over 2^32 clears).
+            self.gens.fill(0);
+            self.gen = 1;
+        }
+    }
+
+    /// Iterate live keys (unordered).
+    pub fn iter(&self) -> impl Iterator<Item = u64> + '_ {
+        self.keys
+            .iter()
+            .zip(self.gens.iter())
+            .filter(move |(_, &g)| g == self.gen)
+            .map(|(&k, _)| k)
+    }
+
+    /// Append live keys into `out`, sorted ascending.
+    pub fn collect_sorted(&self, out: &mut Vec<u64>) {
+        out.clear();
+        out.extend(self.iter());
+        out.sort_unstable();
+    }
+
+    fn grow(&mut self) {
+        let new_slots = self.keys.len() * 2;
+        let mut next = IntSet {
+            keys: vec![0; new_slots],
+            gens: vec![0; new_slots],
+            gen: 1,
+            mask: new_slots - 1,
+            len: 0,
+        };
+        for i in 0..self.keys.len() {
+            if self.gens[i] == self.gen {
+                next.insert(self.keys[i]);
+            }
+        }
+        *self = next;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_contains() {
+        let mut s = IntSet::default();
+        assert!(s.insert(42));
+        assert!(!s.insert(42));
+        assert!(s.contains(42));
+        assert!(!s.contains(7));
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn grows_past_capacity() {
+        let mut s = IntSet::with_capacity(4);
+        for k in 0..1000u64 {
+            s.insert(k * 3);
+        }
+        assert_eq!(s.len(), 1000);
+        for k in 0..1000u64 {
+            assert!(s.contains(k * 3));
+            assert!(!s.contains(k * 3 + 1));
+        }
+    }
+
+    #[test]
+    fn clear_is_reuse_not_dealloc() {
+        let mut s = IntSet::default();
+        for k in 0..100 {
+            s.insert(k);
+        }
+        let bytes_before = s.bytes();
+        s.clear();
+        assert_eq!(s.len(), 0);
+        assert!(!s.contains(5));
+        assert_eq!(s.bytes(), bytes_before, "clear must not free");
+        s.insert(5);
+        assert!(s.contains(5));
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn collect_sorted_orders_keys() {
+        let mut s = IntSet::default();
+        for k in [9u64, 1, 5, 3, 7] {
+            s.insert(k);
+        }
+        let mut out = Vec::new();
+        s.collect_sorted(&mut out);
+        assert_eq!(out, vec![1, 3, 5, 7, 9]);
+    }
+
+    #[test]
+    fn many_generations() {
+        let mut s = IntSet::with_capacity(8);
+        for round in 0..10_000u64 {
+            s.insert(round);
+            s.insert(round + 1);
+            assert_eq!(s.len(), 2);
+            s.clear();
+        }
+    }
+}

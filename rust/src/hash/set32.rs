@@ -1,0 +1,178 @@
+//! Compact u32 hash set (khash parity: 5 bytes/slot) for the symbolic
+//! phase's per-row tables.
+//!
+//! The all-at-once algorithms allocate one table per output row during the
+//! symbolic phase (`C_l^H`, `C_s^H`); with PETSc's 4-byte keys that phase
+//! peaks *below* the numeric phase's C storage, which is exactly why the
+//! paper's all-at-once Mem ≈ C + ε.  A 12-byte-slot set (u64 key + u32
+//! generation) would triple that footprint and bury the effect, so these
+//! tables get their own compact container: u32 keys + u8 generation
+//! stamps.  Column ids are < 2³² at any scale this testbed runs (asserted
+//! where C is preallocated).
+
+use super::hash_u64;
+
+/// Open-addressing set of `u32` keys with O(1) generation clear.
+#[derive(Debug, Clone)]
+pub struct Set32 {
+    keys: Vec<u32>,
+    gens: Vec<u8>,
+    gen: u8,
+    mask: usize,
+    len: usize,
+}
+
+impl Default for Set32 {
+    fn default() -> Self {
+        Self::with_capacity(4)
+    }
+}
+
+impl Set32 {
+    pub fn with_capacity(cap: usize) -> Self {
+        let slots = (cap.max(3) * 4 / 3 + 1).next_power_of_two();
+        Set32 { keys: vec![0; slots], gens: vec![0; slots], gen: 1, mask: slots - 1, len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Heap bytes (5 per slot — khash-like).
+    pub fn bytes(&self) -> u64 {
+        (self.keys.len() * (4 + 1)) as u64
+    }
+
+    #[inline]
+    pub fn insert(&mut self, key: u32) -> bool {
+        if (self.len + 1) * 4 > self.keys.len() * 3 {
+            self.grow();
+        }
+        let mut i = (hash_u64(key as u64) as usize) & self.mask;
+        loop {
+            if self.gens[i] != self.gen {
+                self.keys[i] = key;
+                self.gens[i] = self.gen;
+                self.len += 1;
+                return true;
+            }
+            if self.keys[i] == key {
+                return false;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    #[inline]
+    pub fn contains(&self, key: u32) -> bool {
+        let mut i = (hash_u64(key as u64) as usize) & self.mask;
+        loop {
+            if self.gens[i] != self.gen {
+                return false;
+            }
+            if self.keys[i] == key {
+                return true;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    /// O(1) clear; eager stamp reset every 255 generations.
+    pub fn clear(&mut self) {
+        self.len = 0;
+        self.gen = self.gen.wrapping_add(1);
+        if self.gen == 0 {
+            self.gens.fill(0);
+            self.gen = 1;
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = u32> + '_ {
+        self.keys
+            .iter()
+            .zip(self.gens.iter())
+            .filter(move |(_, &g)| g == self.gen)
+            .map(|(&k, _)| k)
+    }
+
+    /// Append live keys sorted ascending (widened) into `out`.
+    pub fn collect_sorted_u64(&self, out: &mut Vec<u64>) {
+        out.clear();
+        out.extend(self.iter().map(|k| k as u64));
+        out.sort_unstable();
+    }
+
+    fn grow(&mut self) {
+        let new_slots = self.keys.len() * 2;
+        let mut next = Set32 {
+            keys: vec![0; new_slots],
+            gens: vec![0; new_slots],
+            gen: 1,
+            mask: new_slots - 1,
+            len: 0,
+        };
+        for i in 0..self.keys.len() {
+            if self.gens[i] == self.gen {
+                next.insert(self.keys[i]);
+            }
+        }
+        *self = next;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_contains_grow() {
+        let mut s = Set32::default();
+        for k in 0..500u32 {
+            assert!(s.insert(k * 7));
+            assert!(!s.insert(k * 7));
+        }
+        assert_eq!(s.len(), 500);
+        for k in 0..500u32 {
+            assert!(s.contains(k * 7));
+        }
+        assert!(!s.contains(3));
+    }
+
+    #[test]
+    fn bytes_are_khash_scale() {
+        let mut s = Set32::default();
+        for k in 0..27u32 {
+            s.insert(k);
+        }
+        // 27 keys at 0.75 load -> 64 slots * 5 B = 320 B (PETSc khash:
+        // 64 * 4 B keys + flags ≈ 272 B)
+        assert!(s.bytes() <= 320, "{}", s.bytes());
+    }
+
+    #[test]
+    fn generation_wraparound_safe() {
+        let mut s = Set32::with_capacity(4);
+        for round in 0..1000u32 {
+            s.insert(round);
+            assert_eq!(s.len(), 1);
+            assert!(s.contains(round));
+            assert!(!s.contains(round.wrapping_sub(1)));
+            s.clear();
+        }
+    }
+
+    #[test]
+    fn collect_sorted_widens() {
+        let mut s = Set32::default();
+        for k in [5u32, 1, 9] {
+            s.insert(k);
+        }
+        let mut out = Vec::new();
+        s.collect_sorted_u64(&mut out);
+        assert_eq!(out, vec![1u64, 5, 9]);
+    }
+}

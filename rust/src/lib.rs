@@ -1,0 +1,32 @@
+//! # galerkin-ptap
+//!
+//! Reproduction of *"Parallel memory-efficient all-at-once algorithms for
+//! the sparse matrix triple products in multigrid methods"* (Fande Kong,
+//! 2019) as a three-layer Rust + JAX/Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the distributed sparse-matrix substrate and
+//!   the paper's contribution: two-step, all-at-once, and merged
+//!   all-at-once Galerkin triple products `C = PᵀAP`, plus the multigrid
+//!   solver stack built on them and the experiment harness that reproduces
+//!   every table and figure in the paper.
+//! * **Layer 2/1 (python/, build-time only)** — JAX graphs and Pallas
+//!   kernels for the block-structured numeric hot path, AOT-lowered to HLO
+//!   text artifacts.
+//! * **Runtime** — [`runtime`] loads those artifacts through the PJRT CPU
+//!   client (`xla` crate) and serves batched block triple products to the
+//!   numeric phase.  Python never runs on the request path.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod coordinator;
+pub mod dist;
+pub mod gen;
+pub mod hash;
+pub mod mat;
+pub mod mem;
+pub mod mg;
+pub mod ptap;
+pub mod runtime;
+pub mod spgemm;
+pub mod util;

@@ -1,0 +1,346 @@
+//! `galerkin-ptap` — leader entrypoint / CLI.
+//!
+//! Subcommands map onto the paper's experiments:
+//!
+//! ```text
+//! galerkin-ptap model-problem --coarse 32 --np 2,4,8 --repeats 11
+//! galerkin-ptap neutron --grid 12 --groups 8 --np 2,4 [--cache]
+//! galerkin-ptap levels  --grid 12 --groups 8           # Tables 5/6
+//! galerkin-ptap solve   --coarse 16 --levels 3 --algo allatonce
+//! galerkin-ptap selfcheck                               # PJRT vs native
+//! ```
+
+use galerkin_ptap::coordinator::{
+    level_tables, model_problem_tables, neutron_tables, run_model_problem, run_neutron,
+    write_results, ModelProblemConfig, NeutronConfigExp,
+};
+use galerkin_ptap::dist::{DistSpmv, DistVec, World};
+use galerkin_ptap::gen::{
+    grid_laplacian, neutron_block_interp, neutron_block_operator, Grid3, NeutronConfig,
+};
+use galerkin_ptap::mem::{Cat, MemTracker};
+use galerkin_ptap::mg::{
+    build_hierarchy, geometric_chain, pcg, Coarsening, HierarchyConfig, MgOpts, MgPreconditioner,
+};
+use galerkin_ptap::ptap::block::block_ptap;
+use galerkin_ptap::ptap::{Algo, ALL_ALGOS};
+use galerkin_ptap::runtime::{BlockBackend, KernelRuntime};
+
+use std::collections::HashMap;
+
+/// Minimal `--key value` + flag parser (no clap offline).
+struct Args {
+    sub: String,
+    kv: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    fn parse() -> Args {
+        let mut it = std::env::args().skip(1);
+        let sub = it.next().unwrap_or_else(|| "help".to_string());
+        let mut kv = HashMap::new();
+        let mut flags = Vec::new();
+        let rest: Vec<String> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let a = rest[i].trim_start_matches("--").to_string();
+            if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                kv.insert(a, rest[i + 1].clone());
+                i += 2;
+            } else {
+                flags.push(a);
+                i += 1;
+            }
+        }
+        Args { sub, kv, flags }
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.kv.get(key).map(|v| v.parse().expect(key)).unwrap_or(default)
+    }
+
+    fn usize_list_or(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.kv.get(key) {
+            Some(v) => v.split(',').map(|x| x.trim().parse().expect(key)).collect(),
+            None => default.to_vec(),
+        }
+    }
+
+    fn algos(&self) -> Vec<Algo> {
+        match self.kv.get("algos").map(|s| s.as_str()) {
+            None | Some("all") => ALL_ALGOS.to_vec(),
+            Some(list) => list
+                .split(',')
+                .map(|s| Algo::parse(s.trim()).unwrap_or_else(|| panic!("unknown algo {s}")))
+                .collect(),
+        }
+    }
+
+    fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+fn main() {
+    let args = Args::parse();
+    match args.sub.as_str() {
+        "model-problem" => cmd_model_problem(&args),
+        "neutron" => cmd_neutron(&args),
+        "levels" => cmd_levels(&args),
+        "solve" => cmd_solve(&args),
+        "selfcheck" => cmd_selfcheck(&args),
+        "external" => cmd_external(&args),
+        "help" | "--help" | "-h" => print_help(),
+        other => {
+            eprintln!("unknown subcommand {other:?}\n");
+            print_help();
+            std::process::exit(2);
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "galerkin-ptap — all-at-once sparse matrix triple products (Kong 2019)\n\n\
+         USAGE: galerkin-ptap <subcommand> [--key value] [--flag]\n\n\
+         SUBCOMMANDS\n\
+           model-problem  --coarse N --np a,b,c --repeats R --algos LIST   (Tables 1-4, Figs 1-4)\n\
+           neutron        --grid N --groups G --np a,b,c [--cache]         (Tables 7-8, Figs 7-10)\n\
+           levels         --grid N --groups G                              (Tables 5-6)\n\
+           solve          --coarse N --levels L --algo NAME --np P         (end-to-end MG-CG)\n\
+           selfcheck                                                       (PJRT kernels vs native)\n\
+           external       --matrix F.mtx --np P [--algos LIST]            (PtAP on a MatrixMarket file)\n\n\
+         ALGOS: allatonce | merged | two-step | all"
+    );
+}
+
+fn cmd_model_problem(args: &Args) {
+    let coarse = Grid3::cube(args.usize_or("coarse", 24));
+    let nps = args.usize_list_or("np", &[2, 4, 8]);
+    let repeats = args.usize_or("repeats", 11);
+    let algos = args.algos();
+    let fine = coarse.refine();
+    println!(
+        "model problem: coarse {}³, fine {}³ = {} unknowns, repeats {}",
+        coarse.nx,
+        fine.nx,
+        fine.len(),
+        repeats
+    );
+    let mut rows = Vec::new();
+    for &np in &nps {
+        for &algo in &algos {
+            let r = run_model_problem(ModelProblemConfig {
+                coarse,
+                np,
+                algo,
+                numeric_repeats: repeats,
+            });
+            println!("  np={np} {}: done", algo.name());
+            rows.push(r);
+        }
+    }
+    let (main, storage) = model_problem_tables(&rows);
+    println!("\nTable 1/3 analog — memory and compute times:\n{}", main.render());
+    println!("Table 2/4 analog — storage of A, P, C (MB/rank):\n{}", storage.render());
+    write_results(&main, "model_problem_main");
+    write_results(&storage, "model_problem_storage");
+}
+
+fn cmd_neutron(args: &Args) {
+    let grid = Grid3::cube(args.usize_or("grid", 10));
+    let groups = args.usize_or("groups", 8);
+    let nps = args.usize_list_or("np", &[2, 4]);
+    let cache = args.flag("cache");
+    let algos = args.algos();
+    println!(
+        "neutron analog: grid {}³ × {} groups = {} unknowns, cache={}",
+        grid.nx,
+        groups,
+        grid.len() * groups,
+        cache
+    );
+    let mut rows = Vec::new();
+    for &np in &nps {
+        for &algo in &algos {
+            let r = run_neutron(NeutronConfigExp {
+                grid,
+                groups,
+                np,
+                algo,
+                cache,
+                max_levels: args.usize_or("max-levels", 12),
+                solve_iters: args.usize_or("solve-iters", 30),
+            });
+            println!("  np={np} {}: {} levels", algo.name(), r.n_levels);
+            rows.push(r);
+        }
+    }
+    let t = neutron_tables(&rows);
+    println!("\nTable {} analog:\n{}", if cache { 8 } else { 7 }, t.render());
+    write_results(&t, if cache { "neutron_cached" } else { "neutron_nocache" });
+}
+
+fn cmd_levels(args: &Args) {
+    let grid = Grid3::cube(args.usize_or("grid", 10));
+    let groups = args.usize_or("groups", 8);
+    let r = run_neutron(NeutronConfigExp {
+        grid,
+        groups,
+        np: args.usize_or("np", 2),
+        algo: Algo::AllAtOnce,
+        cache: false,
+        max_levels: args.usize_or("max-levels", 12),
+        solve_iters: 5,
+    });
+    let (t5, t6) = level_tables(&r);
+    println!("Table 5 analog — operator matrices per level:\n{}", t5.render());
+    println!("Table 6 analog — interpolation matrices per level:\n{}", t6.render());
+    write_results(&t5, "levels_operators");
+    write_results(&t6, "levels_interps");
+}
+
+fn cmd_solve(args: &Args) {
+    let coarse = Grid3::cube(args.usize_or("coarse", 16));
+    let levels = args.usize_or("levels", 3);
+    let np = args.usize_or("np", 4);
+    let algo = args
+        .kv
+        .get("algo")
+        .map(|s| Algo::parse(s).expect("algo"))
+        .unwrap_or(Algo::AllAtOnce);
+    let grids = geometric_chain(coarse, levels);
+    println!(
+        "MG-CG solve: fine {}³ = {} unknowns, {} levels, {} ranks, {}",
+        grids[0].nx,
+        grids[0].len(),
+        levels,
+        np,
+        algo.name()
+    );
+    let world = World::new(np);
+    let grids2 = grids.clone();
+    let results = world.run(move |comm| {
+        let tracker = MemTracker::new();
+        let a0 = grid_laplacian(grids2[0], comm.rank(), comm.size());
+        tracker.alloc(Cat::MatA, a0.bytes());
+        let h = build_hierarchy(
+            &comm,
+            a0.clone(),
+            &Coarsening::Geometric { grids: grids2.clone() },
+            HierarchyConfig { algo, cache: false, numeric_repeats: 1 },
+            &tracker,
+        );
+        let spmv = DistSpmv::new(&comm, &a0);
+        let mut pc = MgPreconditioner::new(&comm, h, MgOpts::default());
+        let layout = a0.row_layout.clone();
+        let b = DistVec::from_fn(layout.clone(), comm.rank(), |_| 1.0);
+        let mut x = DistVec::zeros(layout, comm.rank());
+        let t = std::time::Instant::now();
+        let res = pcg(&comm, &a0, &spmv, &b, &mut x, Some(&mut pc), 1e-8, 100);
+        (res, t.elapsed().as_secs_f64(), tracker.peak_total())
+    });
+    let (res, secs, peak) = &results[0];
+    println!(
+        "converged={} iters={} wall={:.2}s peak_mem/rank={:.1} MB",
+        res.converged,
+        res.iterations,
+        secs,
+        *peak as f64 / 1048576.0
+    );
+    for (k, r) in res.residuals.iter().enumerate() {
+        println!("  iter {k:>3}  ||r|| = {r:.3e}");
+    }
+}
+
+/// Run the triple products on an external MatrixMarket operator with an
+/// algebraically built interpolation — the "bring your own matrix" path.
+fn cmd_external(args: &Args) {
+    use galerkin_ptap::mat::read_matrix_market_dist;
+    use galerkin_ptap::mg::{aggregate_interp, AggregateOpts};
+    let path = args.kv.get("matrix").expect("--matrix <file.mtx> required").clone();
+    let np = args.usize_or("np", 2);
+    let algos = args.algos();
+    println!("external PtAP: {} on {} ranks", path, np);
+    let world = World::new(np);
+    let path_ref = &path;
+    let rows = world.run(move |comm| {
+        let a = read_matrix_market_dist(std::path::Path::new(path_ref), comm.rank(), comm.size())
+            .expect("read matrix");
+        assert_eq!(a.global_nrows(), a.global_ncols(), "operator must be square");
+        let p = aggregate_interp(&comm, &a, AggregateOpts::default());
+        let mut out = Vec::new();
+        for &algo in &algos {
+            let tracker = MemTracker::new();
+            let mut op = galerkin_ptap::ptap::Ptap::symbolic(algo, &comm, &a, &p, &tracker);
+            op.numeric(&comm, &a, &p);
+            let c = op.extract_c();
+            out.push((
+                algo,
+                tracker.peak_total(),
+                op.stats,
+                c.nnz_global(&comm),
+                p.global_ncols() as u64,
+            ));
+        }
+        out
+    });
+    println!(
+        "{:<12} {:>10} {:>12} {:>12} {:>12} {:>10}",
+        "algorithm", "coarse_n", "C_nnz", "peak_mem", "symbolic", "numeric"
+    );
+    for k in 0..rows[0].len() {
+        let (algo, _, _, cnnz, ncoarse) = rows[0][k];
+        let mem = rows.iter().map(|r| r[k].1).max().unwrap();
+        let ts = rows.iter().map(|r| r[k].2.time_sym_modeled()).fold(0.0f64, f64::max);
+        let tn = rows.iter().map(|r| r[k].2.time_num_modeled()).fold(0.0f64, f64::max);
+        println!(
+            "{:<12} {:>10} {:>12} {:>9.2} MB {:>12} {:>10}",
+            algo.name(),
+            ncoarse,
+            cnnz,
+            mem as f64 / 1048576.0,
+            galerkin_ptap::util::fmt_secs(ts),
+            galerkin_ptap::util::fmt_secs(tn)
+        );
+    }
+}
+
+fn cmd_selfcheck(args: &Args) {
+    let dir = match KernelRuntime::find_dir() {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("FAIL: {e}");
+            std::process::exit(1);
+        }
+    };
+    println!("artifacts at {}", dir.display());
+    let g = args.usize_or("groups", 8);
+    // block triple product: PJRT vs native on the neutron workload.  Each
+    // rank owns its own PJRT client (as each process would under MPI).
+    let grid = Grid3::cube(6);
+    let world = World::new(2);
+    let dir_ref = &dir;
+    let diffs = world.run(move |comm| {
+        let rt = KernelRuntime::load_filtered(dir_ref, |m| {
+            m.entry == "block_ptap" && m.block == g
+        })
+        .expect("artifact load");
+        assert!(rt.has("block_ptap", g), "no block_ptap artifact for b={g}");
+        let cfg = NeutronConfig { grid, groups: g, seed: 1 };
+        let a = neutron_block_operator(cfg, comm.rank(), comm.size());
+        let p = neutron_block_interp(grid, g, comm.rank(), comm.size());
+        let tracker = MemTracker::new();
+        let c_native = block_ptap(&comm, &a, &p, BlockBackend::Native, &tracker);
+        let c_pjrt = block_ptap(&comm, &a, &p, BlockBackend::Pjrt(&rt), &tracker);
+        let gn = c_native.c.to_scalar().gather_global(&comm);
+        let gp = c_pjrt.c.to_scalar().gather_global(&comm);
+        (gn.max_abs_diff(&gp), c_pjrt.flushes)
+    });
+    for (rank, (diff, flushes)) in diffs.iter().enumerate() {
+        println!("rank {rank}: max |native - pjrt| = {diff:.3e} ({flushes} kernel calls)");
+        assert!(*diff < 1e-3, "kernel does not match native path");
+    }
+    println!("selfcheck OK");
+}

@@ -1,0 +1,210 @@
+//! Block CSR (PETSc SeqBAIJ analog): CSR over b×b dense blocks.
+//!
+//! The neutron-transport-like workload couples G energy-group variables per
+//! mesh vertex; storing the coupling as dense blocks is what makes the
+//! numeric triple product MXU-friendly (see python/compile/kernels/).
+
+use super::csr::{Csr, CsrBuilder};
+
+/// Sparse matrix of dense `b x b` blocks, block-row compressed.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Bcsr {
+    /// Block size.
+    pub b: usize,
+    /// Number of block rows / block columns.
+    pub nrows: usize,
+    pub ncols: usize,
+    pub rowptr: Vec<u32>,
+    pub cols: Vec<u32>,
+    /// Block values, `nnz * b * b` row-major per block.
+    pub vals: Vec<f64>,
+}
+
+impl Bcsr {
+    pub fn zeros(nrows: usize, ncols: usize, b: usize) -> Self {
+        Bcsr { b, nrows, ncols, rowptr: vec![0; nrows + 1], cols: Vec::new(), vals: Vec::new() }
+    }
+
+    pub fn nnz_blocks(&self) -> usize {
+        self.cols.len()
+    }
+
+    pub fn nnz_scalar(&self) -> usize {
+        self.cols.len() * self.b * self.b
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.rowptr.len() * 4 + self.cols.len() * 4 + self.vals.len() * 8) as u64
+    }
+
+    #[inline]
+    pub fn row_cols(&self, i: usize) -> &[u32] {
+        &self.cols[self.rowptr[i] as usize..self.rowptr[i + 1] as usize]
+    }
+
+    #[inline]
+    pub fn block(&self, idx: usize) -> &[f64] {
+        let s = self.b * self.b;
+        &self.vals[idx * s..(idx + 1) * s]
+    }
+
+    #[inline]
+    pub fn block_mut(&mut self, idx: usize) -> &mut [f64] {
+        let s = self.b * self.b;
+        &mut self.vals[idx * s..(idx + 1) * s]
+    }
+
+    /// Block index range of row `i` (for pairing row_cols with blocks).
+    pub fn row_range(&self, i: usize) -> std::ops::Range<usize> {
+        self.rowptr[i] as usize..self.rowptr[i + 1] as usize
+    }
+
+    /// y = A x over block vectors (x: ncols*b, y: nrows*b).
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        let b = self.b;
+        debug_assert_eq!(x.len(), self.ncols * b);
+        debug_assert_eq!(y.len(), self.nrows * b);
+        y.fill(0.0);
+        for i in 0..self.nrows {
+            for idx in self.row_range(i) {
+                let c = self.cols[idx] as usize;
+                super::dense::block_matvec_add(
+                    b,
+                    self.block(idx),
+                    &x[c * b..(c + 1) * b],
+                    &mut y[i * b..(i + 1) * b],
+                );
+            }
+        }
+    }
+
+    /// Expand to a scalar CSR (cross-checking block vs scalar algorithms).
+    pub fn to_scalar_csr(&self) -> Csr {
+        let b = self.b;
+        let mut builder = CsrBuilder::with_capacity(self.ncols * b, self.nrows * b, self.nnz_scalar());
+        for i in 0..self.nrows {
+            for r in 0..b {
+                let mut pairs: Vec<(u32, f64)> = Vec::new();
+                for idx in self.row_range(i) {
+                    let c = self.cols[idx] as usize;
+                    let blk = self.block(idx);
+                    for j in 0..b {
+                        let v = blk[r * b + j];
+                        if v != 0.0 {
+                            pairs.push(((c * b + j) as u32, v));
+                        }
+                    }
+                }
+                builder.push_row_unsorted(&mut pairs);
+            }
+        }
+        builder.finish()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.rowptr.len() != self.nrows + 1 {
+            return Err("rowptr length".into());
+        }
+        if *self.rowptr.last().unwrap() as usize != self.cols.len() {
+            return Err("rowptr end != nnz".into());
+        }
+        if self.vals.len() != self.cols.len() * self.b * self.b {
+            return Err("vals length".into());
+        }
+        for i in 0..self.nrows {
+            let cols = self.row_cols(i);
+            for w in cols.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("block row {i} not sorted"));
+                }
+            }
+            if let Some(&c) = cols.last() {
+                if c as usize >= self.ncols {
+                    return Err(format!("block row {i} col out of range"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Row-by-row block CSR builder.
+#[derive(Debug)]
+pub struct BcsrBuilder {
+    b: usize,
+    ncols: usize,
+    rowptr: Vec<u32>,
+    cols: Vec<u32>,
+    vals: Vec<f64>,
+}
+
+impl BcsrBuilder {
+    pub fn new(ncols: usize, b: usize) -> Self {
+        BcsrBuilder { b, ncols, rowptr: vec![0], cols: Vec::new(), vals: Vec::new() }
+    }
+
+    /// Append a block row: sorted block columns with their dense blocks
+    /// concatenated in `blocks` (len = cols.len()*b*b).
+    pub fn push_row(&mut self, cols: &[u32], blocks: &[f64]) {
+        debug_assert_eq!(blocks.len(), cols.len() * self.b * self.b);
+        debug_assert!(cols.windows(2).all(|w| w[0] < w[1]));
+        self.cols.extend_from_slice(cols);
+        self.vals.extend_from_slice(blocks);
+        self.rowptr.push(self.cols.len() as u32);
+    }
+
+    pub fn finish(self) -> Bcsr {
+        Bcsr {
+            b: self.b,
+            nrows: self.rowptr.len() - 1,
+            ncols: self.ncols,
+            rowptr: self.rowptr,
+            cols: self.cols,
+            vals: self.vals,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Bcsr {
+        // 2x2 block matrix of 2x2 blocks:
+        // [ B00  .  ]
+        // [ B10 B11 ]
+        let mut b = BcsrBuilder::new(2, 2);
+        b.push_row(&[0], &[1.0, 2.0, 3.0, 4.0]);
+        b.push_row(&[0, 1], &[5.0, 0.0, 0.0, 5.0, 1.0, 0.0, 0.0, 1.0]);
+        b.finish()
+    }
+
+    #[test]
+    fn build_validate() {
+        let m = sample();
+        m.validate().unwrap();
+        assert_eq!(m.nnz_blocks(), 3);
+        assert_eq!(m.block(2), &[1.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn scalar_expansion_matches_spmv() {
+        let m = sample();
+        let s = m.to_scalar_csr();
+        s.validate().unwrap();
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let mut yb = [0.0; 4];
+        m.spmv(&x, &mut yb);
+        let mut ys = [0.0; 4];
+        s.spmv(&x, &mut ys);
+        assert_eq!(yb, ys);
+    }
+
+    #[test]
+    fn scalar_expansion_drops_explicit_zeros() {
+        let m = sample();
+        let s = m.to_scalar_csr();
+        // block (1,0) = [[5,0],[0,5]] has two zero scalars
+        assert!(s.nnz() < m.nnz_scalar());
+    }
+}

@@ -1,0 +1,332 @@
+//! Compressed sparse row matrix (PETSc SeqAIJ analog).
+//!
+//! 32-bit row pointers and column indices match PETSc's default PetscInt
+//! width, so the memory ratios we report are comparable to the paper's.
+
+/// Immutable CSR matrix with f64 values and sorted column indices per row.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Csr {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub rowptr: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f64>,
+}
+
+impl Csr {
+    /// Empty matrix with the given shape.
+    pub fn zeros(nrows: usize, ncols: usize) -> Self {
+        Csr { nrows, ncols, rowptr: vec![0; nrows + 1], cols: Vec::new(), vals: Vec::new() }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Heap bytes (rowptr + cols + vals) for memory accounting.
+    pub fn bytes(&self) -> u64 {
+        (self.rowptr.len() * 4 + self.cols.len() * 4 + self.vals.len() * 8) as u64
+    }
+
+    /// Structure-only bytes (a symbolic-phase object: no values array).
+    pub fn bytes_symbolic(&self) -> u64 {
+        (self.rowptr.len() * 4 + self.cols.len() * 4) as u64
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let (a, b) = (self.rowptr[i] as usize, self.rowptr[i + 1] as usize);
+        (&self.cols[a..b], &self.vals[a..b])
+    }
+
+    #[inline]
+    pub fn row_cols(&self, i: usize) -> &[u32] {
+        let (a, b) = (self.rowptr[i] as usize, self.rowptr[i + 1] as usize);
+        &self.cols[a..b]
+    }
+
+    pub fn row_len(&self, i: usize) -> usize {
+        (self.rowptr[i + 1] - self.rowptr[i]) as usize
+    }
+
+    /// y = A x (sequential).
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.ncols);
+        debug_assert_eq!(y.len(), self.nrows);
+        for i in 0..self.nrows {
+            let (cols, vals) = self.row(i);
+            let mut acc = 0.0;
+            for (&c, &v) in cols.iter().zip(vals) {
+                acc += v * x[c as usize];
+            }
+            y[i] = acc;
+        }
+    }
+
+    /// y += A x.
+    pub fn spmv_add(&self, x: &[f64], y: &mut [f64]) {
+        for i in 0..self.nrows {
+            let (cols, vals) = self.row(i);
+            let mut acc = 0.0;
+            for (&c, &v) in cols.iter().zip(vals) {
+                acc += v * x[c as usize];
+            }
+            y[i] += acc;
+        }
+    }
+
+    /// y += Aᵀ x without materializing the transpose (scatter form).
+    pub fn spmv_transpose_add(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.nrows);
+        debug_assert_eq!(y.len(), self.ncols);
+        for i in 0..self.nrows {
+            let (cols, vals) = self.row(i);
+            let xi = x[i];
+            for (&c, &v) in cols.iter().zip(vals) {
+                y[c as usize] += v * xi;
+            }
+        }
+    }
+
+    /// Explicit transpose (used by the two-step method's `Pᵀ`).
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0u32; self.ncols + 1];
+        for &c in &self.cols {
+            counts[c as usize + 1] += 1;
+        }
+        for i in 0..self.ncols {
+            counts[i + 1] += counts[i];
+        }
+        let rowptr = counts.clone();
+        let nnz = self.nnz();
+        let mut cols = vec![0u32; nnz];
+        let mut vals = vec![0.0f64; nnz];
+        let mut cursor = counts;
+        for i in 0..self.nrows {
+            let (rc, rv) = self.row(i);
+            for (&c, &v) in rc.iter().zip(rv) {
+                let p = cursor[c as usize] as usize;
+                cols[p] = i as u32;
+                vals[p] = v;
+                cursor[c as usize] += 1;
+            }
+        }
+        Csr { nrows: self.ncols, ncols: self.nrows, rowptr, cols, vals }
+    }
+
+    /// Structure-only transpose (two-step symbolic phase).
+    pub fn transpose_symbolic(&self) -> Csr {
+        let mut t = self.transpose();
+        t.vals = Vec::new();
+        t
+    }
+
+    /// Dense representation (tests only; panics over ~10^7 entries).
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        assert!(self.nrows * self.ncols <= 10_000_000, "to_dense too large");
+        let mut d = vec![vec![0.0; self.ncols]; self.nrows];
+        for i in 0..self.nrows {
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                d[i][c as usize] = v;
+            }
+        }
+        d
+    }
+
+    /// Max |a - b| over all entries of two equal-shaped matrices.
+    pub fn max_abs_diff(&self, other: &Csr) -> f64 {
+        assert_eq!((self.nrows, self.ncols), (other.nrows, other.ncols));
+        let mut worst = 0.0f64;
+        for i in 0..self.nrows {
+            let (ca, va) = self.row(i);
+            let (cb, vb) = other.row(i);
+            let (mut p, mut q) = (0, 0);
+            while p < ca.len() || q < cb.len() {
+                if q >= cb.len() || (p < ca.len() && ca[p] < cb[q]) {
+                    worst = worst.max(va[p].abs());
+                    p += 1;
+                } else if p >= ca.len() || cb[q] < ca[p] {
+                    worst = worst.max(vb[q].abs());
+                    q += 1;
+                } else {
+                    worst = worst.max((va[p] - vb[q]).abs());
+                    p += 1;
+                    q += 1;
+                }
+            }
+        }
+        worst
+    }
+
+    /// Check invariants (sorted, in-range columns; monotone rowptr).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.rowptr.len() != self.nrows + 1 {
+            return Err("rowptr length".into());
+        }
+        if *self.rowptr.last().unwrap() as usize != self.cols.len() {
+            return Err("rowptr end != nnz".into());
+        }
+        if !self.vals.is_empty() && self.vals.len() != self.cols.len() {
+            return Err("vals length".into());
+        }
+        for i in 0..self.nrows {
+            if self.rowptr[i] > self.rowptr[i + 1] {
+                return Err(format!("rowptr not monotone at {i}"));
+            }
+            let cols = self.row_cols(i);
+            for w in cols.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("row {i} columns not strictly sorted"));
+                }
+            }
+            if let Some(&c) = cols.last() {
+                if c as usize >= self.ncols {
+                    return Err(format!("row {i} column out of range"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Row-by-row CSR builder.
+#[derive(Debug, Default)]
+pub struct CsrBuilder {
+    ncols: usize,
+    rowptr: Vec<u32>,
+    cols: Vec<u32>,
+    vals: Vec<f64>,
+}
+
+impl CsrBuilder {
+    pub fn new(ncols: usize) -> Self {
+        CsrBuilder { ncols, rowptr: vec![0], cols: Vec::new(), vals: Vec::new() }
+    }
+
+    pub fn with_capacity(ncols: usize, nrows_hint: usize, nnz_hint: usize) -> Self {
+        let mut b = Self::new(ncols);
+        b.rowptr.reserve(nrows_hint);
+        b.cols.reserve(nnz_hint);
+        b.vals.reserve(nnz_hint);
+        b
+    }
+
+    /// Append a row given sorted columns and matching values.
+    pub fn push_row(&mut self, cols: &[u32], vals: &[f64]) {
+        debug_assert_eq!(cols.len(), vals.len());
+        debug_assert!(cols.windows(2).all(|w| w[0] < w[1]), "columns must be sorted");
+        self.cols.extend_from_slice(cols);
+        self.vals.extend_from_slice(vals);
+        self.rowptr.push(self.cols.len() as u32);
+    }
+
+    /// Append a row from (col, val) pairs that may be unsorted (sorts them).
+    pub fn push_row_unsorted(&mut self, pairs: &mut Vec<(u32, f64)>) {
+        pairs.sort_unstable_by_key(|&(c, _)| c);
+        for &(c, v) in pairs.iter() {
+            self.cols.push(c);
+            self.vals.push(v);
+        }
+        self.rowptr.push(self.cols.len() as u32);
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.rowptr.len() - 1
+    }
+
+    pub fn finish(self) -> Csr {
+        Csr {
+            nrows: self.rowptr.len() - 1,
+            ncols: self.ncols,
+            rowptr: self.rowptr,
+            cols: self.cols,
+            vals: self.vals,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        // [1 0 2]
+        // [0 3 0]
+        // [4 0 5]
+        let mut b = CsrBuilder::new(3);
+        b.push_row(&[0, 2], &[1.0, 2.0]);
+        b.push_row(&[1], &[3.0]);
+        b.push_row(&[0, 2], &[4.0, 5.0]);
+        b.finish()
+    }
+
+    #[test]
+    fn build_and_validate() {
+        let m = sample();
+        assert_eq!(m.nnz(), 5);
+        m.validate().unwrap();
+        assert_eq!(m.row(2).1, &[4.0, 5.0]);
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let m = sample();
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [0.0; 3];
+        m.spmv(&x, &mut y);
+        assert_eq!(y, [7.0, 6.0, 19.0]);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let m = sample();
+        let t = m.transpose();
+        t.validate().unwrap();
+        let tt = t.transpose();
+        assert_eq!(m, tt);
+    }
+
+    #[test]
+    fn spmv_transpose_matches_explicit() {
+        let m = sample();
+        let x = [1.0, -1.0, 0.5];
+        let mut y1 = vec![0.0; 3];
+        m.spmv_transpose_add(&x, &mut y1);
+        let t = m.transpose();
+        let mut y2 = vec![0.0; 3];
+        t.spmv(&x, &mut y2);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn max_abs_diff_detects_mismatch() {
+        let a = sample();
+        let mut b = sample();
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+        b.vals[0] += 0.5;
+        assert_eq!(a.max_abs_diff(&b), 0.5);
+    }
+
+    #[test]
+    fn validate_catches_unsorted() {
+        let m = Csr {
+            nrows: 1,
+            ncols: 3,
+            rowptr: vec![0, 2],
+            cols: vec![2, 1],
+            vals: vec![1.0, 2.0],
+        };
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn push_row_unsorted_sorts() {
+        let mut b = CsrBuilder::new(5);
+        let mut pairs = vec![(4u32, 4.0), (0, 0.5), (2, 2.0)];
+        b.push_row_unsorted(&mut pairs);
+        let m = b.finish();
+        m.validate().unwrap();
+        assert_eq!(m.row_cols(0), &[0, 2, 4]);
+    }
+}

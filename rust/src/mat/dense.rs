@@ -1,0 +1,242 @@
+//! Stacks of small dense b×b blocks — the unit of work for the
+//! block-structured (neutron-transport-like) path and the operands the
+//! PJRT kernel batches ([N, b, b] tensors on the wire).
+
+/// A contiguous stack of `n` dense `b x b` row-major blocks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseBlocks {
+    pub b: usize,
+    data: Vec<f64>,
+}
+
+impl DenseBlocks {
+    pub fn zeros(n: usize, b: usize) -> Self {
+        DenseBlocks { b, data: vec![0.0; n * b * b] }
+    }
+
+    pub fn from_vec(data: Vec<f64>, b: usize) -> Self {
+        assert_eq!(data.len() % (b * b), 0);
+        DenseBlocks { b, data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len() / (self.b * self.b)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.data.len() * 8) as u64
+    }
+
+    #[inline]
+    pub fn block(&self, i: usize) -> &[f64] {
+        let s = self.b * self.b;
+        &self.data[i * s..(i + 1) * s]
+    }
+
+    #[inline]
+    pub fn block_mut(&mut self, i: usize) -> &mut [f64] {
+        let s = self.b * self.b;
+        &mut self.data[i * s..(i + 1) * s]
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn push_block(&mut self, blk: &[f64]) {
+        assert_eq!(blk.len(), self.b * self.b);
+        self.data.extend_from_slice(blk);
+    }
+}
+
+/// c += a @ b for row-major b×b blocks.
+#[inline]
+pub fn block_matmul_add(bsz: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    for i in 0..bsz {
+        for k in 0..bsz {
+            let aik = a[i * bsz + k];
+            if aik == 0.0 {
+                continue;
+            }
+            for j in 0..bsz {
+                c[i * bsz + j] += aik * b[k * bsz + j];
+            }
+        }
+    }
+}
+
+/// c += aᵀ @ b for row-major b×b blocks (left operand transposed).
+#[inline]
+pub fn block_matmul_t_add(bsz: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    for k in 0..bsz {
+        for i in 0..bsz {
+            let aki = a[k * bsz + i];
+            if aki == 0.0 {
+                continue;
+            }
+            for j in 0..bsz {
+                c[i * bsz + j] += aki * b[k * bsz + j];
+            }
+        }
+    }
+}
+
+/// out += plᵀ @ a @ pr — the scalar reference for the PJRT triple-product
+/// kernel (and the fallback when no artifact is loaded).
+pub fn block_triple_product_add(bsz: usize, pl: &[f64], a: &[f64], pr: &[f64], out: &mut [f64]) {
+    // tmp = a @ pr
+    let mut tmp = vec![0.0; bsz * bsz];
+    block_matmul_add(bsz, a, pr, &mut tmp);
+    block_matmul_t_add(bsz, pl, &tmp, out);
+}
+
+/// y += a @ x for a row-major b×b block and b-vectors.
+#[inline]
+pub fn block_matvec_add(bsz: usize, a: &[f64], x: &[f64], y: &mut [f64]) {
+    for i in 0..bsz {
+        let mut acc = 0.0;
+        for j in 0..bsz {
+            acc += a[i * bsz + j] * x[j];
+        }
+        y[i] += acc;
+    }
+}
+
+/// In-place dense LU inverse of a b×b block (partial pivoting).  Used to
+/// invert diagonal blocks for the block-Jacobi smoother.
+pub fn block_invert(bsz: usize, a: &[f64]) -> Option<Vec<f64>> {
+    let n = bsz;
+    let mut m = a.to_vec();
+    let mut inv = vec![0.0; n * n];
+    for i in 0..n {
+        inv[i * n + i] = 1.0;
+    }
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        for r in col + 1..n {
+            if m[r * n + col].abs() > m[piv * n + col].abs() {
+                piv = r;
+            }
+        }
+        if m[piv * n + col].abs() < 1e-300 {
+            return None;
+        }
+        if piv != col {
+            for j in 0..n {
+                m.swap(col * n + j, piv * n + j);
+                inv.swap(col * n + j, piv * n + j);
+            }
+        }
+        let d = m[col * n + col];
+        for j in 0..n {
+            m[col * n + j] /= d;
+            inv[col * n + j] /= d;
+        }
+        for r in 0..n {
+            if r == col {
+                continue;
+            }
+            let f = m[r * n + col];
+            if f == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                m[r * n + j] -= f * m[col * n + j];
+                inv[r * n + j] -= f * inv[col * n + j];
+            }
+        }
+    }
+    Some(inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn rand_block(b: usize, rng: &mut Rng) -> Vec<f64> {
+        (0..b * b).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let b = 3;
+        let mut eye = vec![0.0; 9];
+        for i in 0..3 {
+            eye[i * 3 + i] = 1.0;
+        }
+        let mut rng = Rng::new(1);
+        let a = rand_block(b, &mut rng);
+        let mut c = vec![0.0; 9];
+        block_matmul_add(b, &a, &eye, &mut c);
+        for (x, y) in a.iter().zip(&c) {
+            assert!((x - y).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn triple_product_vs_naive() {
+        let b = 4;
+        let mut rng = Rng::new(2);
+        let (pl, a, pr) = (rand_block(b, &mut rng), rand_block(b, &mut rng), rand_block(b, &mut rng));
+        let mut got = vec![0.0; b * b];
+        block_triple_product_add(b, &pl, &a, &pr, &mut got);
+        // naive: out[i][j] = sum_k sum_l pl[k][i] a[k][l] pr[l][j]
+        let mut want = vec![0.0; b * b];
+        for i in 0..b {
+            for j in 0..b {
+                let mut acc = 0.0;
+                for k in 0..b {
+                    for l in 0..b {
+                        acc += pl[k * b + i] * a[k * b + l] * pr[l * b + j];
+                    }
+                }
+                want[i * b + j] = acc;
+            }
+        }
+        for (x, y) in got.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn invert_round_trip() {
+        let b = 5;
+        let mut rng = Rng::new(3);
+        // diagonally dominant => invertible
+        let mut a = rand_block(b, &mut rng);
+        for i in 0..b {
+            a[i * b + i] += 10.0;
+        }
+        let inv = block_invert(b, &a).unwrap();
+        let mut prod = vec![0.0; b * b];
+        block_matmul_add(b, &a, &inv, &mut prod);
+        for i in 0..b {
+            for j in 0..b {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod[i * b + j] - want).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn invert_singular_returns_none() {
+        let a = vec![1.0, 2.0, 2.0, 4.0]; // rank 1
+        assert!(block_invert(2, &a).is_none());
+    }
+
+    #[test]
+    fn blocks_indexing() {
+        let mut s = DenseBlocks::zeros(3, 2);
+        s.block_mut(1)[0] = 5.0;
+        assert_eq!(s.block(1)[0], 5.0);
+        assert_eq!(s.block(0)[0], 0.0);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.bytes(), 3 * 4 * 8);
+    }
+}

@@ -1,0 +1,207 @@
+//! Matrix Market I/O (coordinate, real, general/symmetric) — lets the
+//! library ingest external operators (SuiteSparse etc.) and dump its own
+//! for cross-checking against PETSc/SciPy.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::csr::{Csr, CsrBuilder};
+use crate::dist::{DistCsr, DistCsrBuilder, Layout};
+
+/// Write a sequential CSR in Matrix Market coordinate format.
+pub fn write_matrix_market(m: &Csr, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(f, "% written by galerkin-ptap")?;
+    writeln!(f, "{} {} {}", m.nrows, m.ncols, m.nnz())?;
+    for i in 0..m.nrows {
+        let (cols, vals) = m.row(i);
+        for (&c, &v) in cols.iter().zip(vals) {
+            writeln!(f, "{} {} {:.17e}", i + 1, c + 1, v)?;
+        }
+    }
+    Ok(())
+}
+
+/// Read a Matrix Market coordinate file into a sequential CSR.
+/// Supports `general` and `symmetric` qualifiers, real/integer fields,
+/// and `pattern` (values default to 1.0).
+pub fn read_matrix_market(path: &Path) -> Result<Csr> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut lines = BufReader::new(f).lines();
+    let header = lines
+        .next()
+        .context("empty file")??
+        .to_lowercase();
+    if !header.starts_with("%%matrixmarket matrix coordinate") {
+        bail!("unsupported MatrixMarket header: {header}");
+    }
+    let symmetric = header.contains("symmetric");
+    let pattern = header.contains("pattern");
+    if header.contains("complex") || header.contains("hermitian") {
+        bail!("complex matrices not supported");
+    }
+    // skip comments, read sizes
+    let mut size_line = String::new();
+    for line in lines.by_ref() {
+        let line = line?;
+        if line.trim().is_empty() || line.starts_with('%') {
+            continue;
+        }
+        size_line = line;
+        break;
+    }
+    let dims: Vec<usize> = size_line
+        .split_whitespace()
+        .map(|t| t.parse().context("size line"))
+        .collect::<Result<_>>()?;
+    if dims.len() != 3 {
+        bail!("bad size line: {size_line}");
+    }
+    let (nrows, ncols, nnz) = (dims[0], dims[1], dims[2]);
+    let mut triplets: Vec<(u32, u32, f64)> = Vec::with_capacity(nnz);
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let i: usize = it.next().context("row")?.parse()?;
+        let j: usize = it.next().context("col")?.parse()?;
+        let v: f64 = if pattern {
+            1.0
+        } else {
+            it.next().context("val")?.parse()?
+        };
+        if i == 0 || j == 0 || i > nrows || j > ncols {
+            bail!("entry out of range: {t}");
+        }
+        triplets.push(((i - 1) as u32, (j - 1) as u32, v));
+        if symmetric && i != j {
+            triplets.push(((j - 1) as u32, (i - 1) as u32, v));
+        }
+    }
+    triplets.sort_unstable_by_key(|&(i, j, _)| (i, j));
+    let mut b = CsrBuilder::with_capacity(ncols, nrows, triplets.len());
+    let mut k = 0usize;
+    for i in 0..nrows {
+        let mut cols: Vec<u32> = Vec::new();
+        let mut vals: Vec<f64> = Vec::new();
+        while k < triplets.len() && triplets[k].0 as usize == i {
+            // accumulate duplicates
+            if cols.last() == Some(&triplets[k].1) {
+                *vals.last_mut().unwrap() += triplets[k].2;
+            } else {
+                cols.push(triplets[k].1);
+                vals.push(triplets[k].2);
+            }
+            k += 1;
+        }
+        b.push_row(&cols, &vals);
+    }
+    Ok(b.finish())
+}
+
+/// Load a Matrix Market file as a distributed matrix: every rank reads the
+/// file and keeps its row slice (adequate below ~10M nnz; a streaming
+/// split would come with real parallel I/O).
+pub fn read_matrix_market_dist(path: &Path, rank: usize, np: usize) -> Result<DistCsr> {
+    let seq = read_matrix_market(path)?;
+    let row_layout = Layout::new_equal(seq.nrows, np);
+    let col_layout = Layout::new_equal(seq.ncols, np);
+    let mut b = DistCsrBuilder::new(rank, row_layout.clone(), col_layout);
+    for gi in row_layout.range(rank) {
+        let (cols, vals) = seq.row(gi);
+        let entries: Vec<(u64, f64)> =
+            cols.iter().zip(vals).map(|(&c, &v)| (c as u64, v)).collect();
+        b.push_row(&entries);
+    }
+    Ok(b.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{grid_laplacian, Grid3};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("gptap_{name}_{}.mtx", std::process::id()))
+    }
+
+    #[test]
+    fn round_trip_general() {
+        let a = grid_laplacian(Grid3::cube(4), 0, 1);
+        let g = {
+            // sequential form of the local (== global at np=1) matrix
+            let mut b = CsrBuilder::new(a.diag.ncols);
+            for i in 0..a.local_nrows() {
+                let (c, v) = a.diag.row(i);
+                b.push_row(c, v);
+            }
+            b.finish()
+        };
+        let p = tmp("rt");
+        write_matrix_market(&g, &p).unwrap();
+        let back = read_matrix_market(&p).unwrap();
+        assert_eq!(g, back);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn symmetric_expansion() {
+        let p = tmp("sym");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate real symmetric\n3 3 4\n1 1 2.0\n2 1 -1.0\n2 2 2.0\n3 3 1.5\n",
+        )
+        .unwrap();
+        let m = read_matrix_market(&p).unwrap();
+        assert_eq!(m.nnz(), 5); // the one off-diagonal is mirrored
+        assert_eq!(m.row(0).0, &[0, 1]);
+        assert_eq!(m.row(1).1, &[-1.0, 2.0]);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn pattern_defaults_to_one() {
+        let p = tmp("pat");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate pattern general\n2 2 2\n1 1\n2 2\n",
+        )
+        .unwrap();
+        let m = read_matrix_market(&p).unwrap();
+        assert_eq!(m.row(0).1, &[1.0]);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmp("bad");
+        std::fs::write(&p, "not a matrix\n").unwrap();
+        assert!(read_matrix_market(&p).is_err());
+        std::fs::write(&p, "%%MatrixMarket matrix coordinate real general\n2 2 1\n5 1 1.0\n")
+            .unwrap();
+        assert!(read_matrix_market(&p).is_err(), "out-of-range entry must fail");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn duplicates_accumulate() {
+        let p = tmp("dup");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate real general\n2 2 3\n1 1 1.0\n1 1 2.5\n2 2 1.0\n",
+        )
+        .unwrap();
+        let m = read_matrix_market(&p).unwrap();
+        assert_eq!(m.row(0).1, &[3.5]);
+        let _ = std::fs::remove_file(&p);
+    }
+}

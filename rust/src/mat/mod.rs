@@ -1,0 +1,20 @@
+//! Sequential sparse-matrix substrate (PETSc SeqAIJ / SeqBAIJ analogs).
+//!
+//! A distributed matrix's local part is stored as two of these (diagonal
+//! and off-diagonal blocks, see [`crate::dist::DistCsr`]); everything the
+//! triple-product algorithms touch row-by-row lives here.
+
+mod bcsr;
+mod csr;
+pub mod dense;
+pub mod io;
+mod prealloc;
+
+pub use bcsr::{Bcsr, BcsrBuilder};
+pub use csr::{Csr, CsrBuilder};
+pub use dense::{
+    block_invert, block_matmul_add, block_matmul_t_add, block_matvec_add,
+    block_triple_product_add, DenseBlocks,
+};
+pub use io::{read_matrix_market, read_matrix_market_dist, write_matrix_market};
+pub use prealloc::PreallocCsr;

@@ -1,0 +1,267 @@
+//! Exactly-preallocated CSR being filled by MatSetValues-style insertion.
+//!
+//! The symbolic phase of every triple-product algorithm ends by computing
+//! per-row nonzero counts (`nzd`/`nzo`) and preallocating the output; the
+//! numeric phase then inserts values without ever reallocating (paper
+//! Alg. 2 line 13, Alg. 7 line 36).  Inserting past the preallocation is a
+//! bug in the symbolic phase and panics (PETSc would raise
+//! `MAT_NEW_NONZERO_LOCATION_ERR`).
+
+use super::Csr;
+
+/// CSR skeleton with fixed per-row capacity and a fill cursor per row.
+#[derive(Debug, Clone)]
+pub struct PreallocCsr {
+    pub nrows: usize,
+    pub ncols: usize,
+    rowptr: Vec<u32>,
+    rowlen: Vec<u32>,
+    cols: Vec<u32>,
+    vals: Vec<f64>,
+}
+
+impl PreallocCsr {
+    /// Allocate from exact per-row nonzero counts.
+    pub fn with_row_counts(ncols: usize, counts: &[u32]) -> Self {
+        let nrows = counts.len();
+        let mut rowptr = vec![0u32; nrows + 1];
+        for i in 0..nrows {
+            rowptr[i + 1] = rowptr[i] + counts[i];
+        }
+        let nnz = rowptr[nrows] as usize;
+        PreallocCsr {
+            nrows,
+            ncols,
+            rowptr,
+            rowlen: vec![0; nrows],
+            cols: vec![0; nnz],
+            vals: vec![0.0; nnz],
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cols.len()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.rowptr.len() * 4 + self.rowlen.len() * 4 + self.cols.len() * 4
+            + self.vals.len() * 8) as u64
+    }
+
+    pub fn row_capacity(&self, i: usize) -> usize {
+        (self.rowptr[i + 1] - self.rowptr[i]) as usize
+    }
+
+    pub fn row_fill(&self, i: usize) -> usize {
+        self.rowlen[i] as usize
+    }
+
+    /// Add (sorted cols, vals) into row `i`, merging with existing entries
+    /// (ADD_VALUES semantics).  New columns shift-insert to keep the row
+    /// sorted; exceeding the preallocation panics.
+    pub fn add_row(&mut self, i: usize, cols: &[u32], vals: &[f64]) {
+        debug_assert_eq!(cols.len(), vals.len());
+        debug_assert!(cols.windows(2).all(|w| w[0] < w[1]));
+        let base = self.rowptr[i] as usize;
+        let cap = self.row_capacity(i);
+        let mut len = self.rowlen[i] as usize;
+        // Merge: existing row is sorted, incoming is sorted.  Walk from a
+        // search cursor to exploit the sortedness of both sides.
+        let mut lo = 0usize;
+        for (&c, &v) in cols.iter().zip(vals) {
+            let slot = {
+                let row = &self.cols[base..base + len];
+                match row[lo..].binary_search(&c) {
+                    Ok(p) => {
+                        lo += p;
+                        Some(base + lo)
+                    }
+                    Err(p) => {
+                        lo += p;
+                        None
+                    }
+                }
+            };
+            match slot {
+                Some(s) => {
+                    self.vals[s] += v;
+                    lo += 1;
+                }
+                None => {
+                    assert!(
+                        len < cap,
+                        "row {i}: insertion past preallocation (cap {cap}) — symbolic phase undercounted"
+                    );
+                    let pos = base + lo;
+                    // shift-insert
+                    self.cols.copy_within(pos..base + len, pos + 1);
+                    self.vals.copy_within(pos..base + len, pos + 1);
+                    self.cols[pos] = c;
+                    self.vals[pos] = v;
+                    len += 1;
+                    lo += 1;
+                }
+            }
+        }
+        self.rowlen[i] = len as u32;
+    }
+
+    /// Add a single value (c, v) to row i.
+    pub fn add_value(&mut self, i: usize, c: u32, v: f64) {
+        self.add_row(i, &[c], &[v]);
+    }
+
+    /// Add (sorted cols, vals) scaled by `w` into row `i`.
+    pub fn add_row_scaled(&mut self, i: usize, cols: &[u32], vals: &[f64], w: f64) {
+        let base = self.rowptr[i] as usize;
+        let mut len = self.rowlen[i] as usize;
+        let cap = self.row_capacity(i);
+        let mut lo = 0usize;
+        for (&c, &v) in cols.iter().zip(vals) {
+            let slot = {
+                let row = &self.cols[base..base + len];
+                match row[lo..].binary_search(&c) {
+                    Ok(p) => {
+                        lo += p;
+                        Some(base + lo)
+                    }
+                    Err(p) => {
+                        lo += p;
+                        None
+                    }
+                }
+            };
+            match slot {
+                Some(s) => {
+                    self.vals[s] += w * v;
+                    lo += 1;
+                }
+                None => {
+                    assert!(len < cap, "row {i}: insertion past preallocation");
+                    let pos = base + lo;
+                    self.cols.copy_within(pos..base + len, pos + 1);
+                    self.vals.copy_within(pos..base + len, pos + 1);
+                    self.cols[pos] = c;
+                    self.vals[pos] = w * v;
+                    len += 1;
+                    lo += 1;
+                }
+            }
+        }
+        self.rowlen[i] = len as u32;
+    }
+
+    /// Filled portion of row `i` as (sorted cols, vals).
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let base = self.rowptr[i] as usize;
+        let len = self.rowlen[i] as usize;
+        (&self.cols[base..base + len], &self.vals[base..base + len])
+    }
+
+    /// Zero all values, keeping the pattern — numeric re-products refill
+    /// values into the existing structure (PETSc MAT_REUSE_MATRIX analog).
+    pub fn zero_values(&mut self) {
+        self.vals.fill(0.0);
+    }
+
+    /// Fraction of preallocated slots actually used (1.0 = exact symbolic).
+    pub fn fill_ratio(&self) -> f64 {
+        if self.capacity() == 0 {
+            return 1.0;
+        }
+        self.rowlen.iter().map(|&l| l as u64).sum::<u64>() as f64 / self.capacity() as f64
+    }
+
+    /// Compact into an immutable CSR (drops unused slack, if any).
+    pub fn finish(self) -> Csr {
+        let exact = (0..self.nrows).all(|i| self.rowlen[i] as usize == self.row_capacity(i));
+        if exact {
+            return Csr {
+                nrows: self.nrows,
+                ncols: self.ncols,
+                rowptr: self.rowptr,
+                cols: self.cols,
+                vals: self.vals,
+            };
+        }
+        let mut rowptr = vec![0u32; self.nrows + 1];
+        for i in 0..self.nrows {
+            rowptr[i + 1] = rowptr[i] + self.rowlen[i];
+        }
+        let nnz = rowptr[self.nrows] as usize;
+        let mut cols = Vec::with_capacity(nnz);
+        let mut vals = Vec::with_capacity(nnz);
+        for i in 0..self.nrows {
+            let base = self.rowptr[i] as usize;
+            let len = self.rowlen[i] as usize;
+            cols.extend_from_slice(&self.cols[base..base + len]);
+            vals.extend_from_slice(&self.vals[base..base + len]);
+        }
+        Csr { nrows: self.nrows, ncols: self.ncols, rowptr, cols, vals }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_exact_and_finish() {
+        let mut p = PreallocCsr::with_row_counts(4, &[2, 1]);
+        p.add_row(0, &[1, 3], &[1.0, 3.0]);
+        p.add_row(1, &[2], &[2.0]);
+        let m = p.finish();
+        m.validate().unwrap();
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.row(0).1, &[1.0, 3.0]);
+    }
+
+    #[test]
+    fn add_merges_existing() {
+        let mut p = PreallocCsr::with_row_counts(6, &[3]);
+        p.add_row(0, &[1, 4], &[1.0, 4.0]);
+        p.add_row(0, &[1, 2], &[0.5, 2.0]);
+        let m = p.finish();
+        assert_eq!(m.row_cols(0), &[1, 2, 4]);
+        assert_eq!(m.row(0).1, &[1.5, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn scaled_add() {
+        let mut p = PreallocCsr::with_row_counts(4, &[2]);
+        p.add_row_scaled(0, &[0, 1], &[1.0, 2.0], 0.5);
+        p.add_row_scaled(0, &[1], &[2.0], 2.0);
+        let m = p.finish();
+        assert_eq!(m.row(0).1, &[0.5, 5.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "preallocation")]
+    fn overflow_panics() {
+        let mut p = PreallocCsr::with_row_counts(8, &[1]);
+        p.add_row(0, &[1, 2], &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn finish_compacts_slack() {
+        let mut p = PreallocCsr::with_row_counts(8, &[5, 2]);
+        p.add_row(0, &[1], &[1.0]);
+        p.add_row(1, &[0, 7], &[1.0, 7.0]);
+        assert!(p.fill_ratio() < 1.0);
+        let m = p.finish();
+        m.validate().unwrap();
+        assert_eq!(m.nnz(), 3);
+    }
+
+    #[test]
+    fn interleaved_inserts_stay_sorted() {
+        let mut p = PreallocCsr::with_row_counts(16, &[6]);
+        p.add_row(0, &[8, 12], &[8.0, 12.0]);
+        p.add_row(0, &[2, 10], &[2.0, 10.0]);
+        p.add_row(0, &[0, 15], &[0.1, 15.0]);
+        let m = p.finish();
+        m.validate().unwrap();
+        assert_eq!(m.row_cols(0), &[0, 2, 8, 10, 12, 15]);
+    }
+}

@@ -1,0 +1,234 @@
+//! Per-rank memory accounting — the source of every "Mem" column in the
+//! reproduced tables.
+//!
+//! The paper reports "estimated memory usage per processor core" for the
+//! triple products, separated from the storage of A, P and C (its Tables
+//! 1–4, 7–8).  We account the same way: every substrate structure charges
+//! its buffer bytes to a category when built and releases them when
+//! dropped; the tracker keeps current and peak per category and overall.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// What a byte belongs to.  Categories mirror the paper's breakdown.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Cat {
+    /// Fine operator A storage.
+    MatA,
+    /// Interpolation P storage.
+    MatP,
+    /// Output coarse operator C storage.
+    MatC,
+    /// Auxiliary matrices (the two-step method's C̃ = AP and explicit Pᵀ).
+    Aux,
+    /// Hash tables (row accumulators, C_s^H / C_l^H).
+    Hash,
+    /// Communication staging buffers (sends, receives, gathered P̃_r).
+    Comm,
+    /// Everything else (vectors, solver state, hierarchy bookkeeping).
+    Other,
+}
+
+pub const ALL_CATS: [Cat; 7] =
+    [Cat::MatA, Cat::MatP, Cat::MatC, Cat::Aux, Cat::Hash, Cat::Comm, Cat::Other];
+
+impl Cat {
+    pub fn name(self) -> &'static str {
+        match self {
+            Cat::MatA => "A",
+            Cat::MatP => "P",
+            Cat::MatC => "C",
+            Cat::Aux => "aux",
+            Cat::Hash => "hash",
+            Cat::Comm => "comm",
+            Cat::Other => "other",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            Cat::MatA => 0,
+            Cat::MatP => 1,
+            Cat::MatC => 2,
+            Cat::Aux => 3,
+            Cat::Hash => 4,
+            Cat::Comm => 5,
+            Cat::Other => 6,
+        }
+    }
+}
+
+#[derive(Default, Debug, Clone)]
+struct Inner {
+    cur: [u64; 7],
+    peak: [u64; 7],
+    cur_total: u64,
+    peak_total: u64,
+}
+
+/// Cheap clonable handle to a rank's memory tracker (single-threaded per
+/// rank, hence `Rc<RefCell>`).
+#[derive(Default, Debug, Clone)]
+pub struct MemTracker {
+    inner: Rc<RefCell<Inner>>,
+}
+
+impl MemTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn alloc(&self, cat: Cat, bytes: u64) {
+        let mut m = self.inner.borrow_mut();
+        let i = cat.idx();
+        m.cur[i] += bytes;
+        m.cur_total += bytes;
+        if m.cur[i] > m.peak[i] {
+            m.peak[i] = m.cur[i];
+        }
+        if m.cur_total > m.peak_total {
+            m.peak_total = m.cur_total;
+        }
+    }
+
+    pub fn free(&self, cat: Cat, bytes: u64) {
+        let mut m = self.inner.borrow_mut();
+        let i = cat.idx();
+        debug_assert!(m.cur[i] >= bytes, "free underflow in {:?}", cat);
+        m.cur[i] = m.cur[i].saturating_sub(bytes);
+        m.cur_total = m.cur_total.saturating_sub(bytes);
+    }
+
+    /// Re-charge already-allocated bytes from one category to another
+    /// (e.g. hash-built structure becomes C storage).
+    pub fn transfer(&self, from: Cat, to: Cat, bytes: u64) {
+        self.free(from, bytes);
+        self.alloc(to, bytes);
+    }
+
+    pub fn current(&self, cat: Cat) -> u64 {
+        self.inner.borrow().cur[cat.idx()]
+    }
+
+    pub fn current_total(&self) -> u64 {
+        self.inner.borrow().cur_total
+    }
+
+    pub fn peak(&self, cat: Cat) -> u64 {
+        self.inner.borrow().peak[cat.idx()]
+    }
+
+    pub fn peak_total(&self) -> u64 {
+        self.inner.borrow().peak_total
+    }
+
+    /// Reset peaks to the current levels (used between experiment phases so
+    /// each op's peak is measured in isolation).
+    pub fn reset_peaks(&self) {
+        let mut m = self.inner.borrow_mut();
+        let cur = m.cur;
+        m.peak = cur;
+        m.peak_total = m.cur_total;
+    }
+
+    /// Snapshot of (category, current, peak) triples.
+    pub fn snapshot(&self) -> Vec<(Cat, u64, u64)> {
+        let m = self.inner.borrow();
+        ALL_CATS.iter().map(|&c| (c, m.cur[c.idx()], m.peak[c.idx()])).collect()
+    }
+}
+
+/// RAII guard: charges on construction, frees on drop.
+pub struct Charge {
+    tracker: MemTracker,
+    cat: Cat,
+    bytes: u64,
+}
+
+impl Charge {
+    pub fn new(tracker: &MemTracker, cat: Cat, bytes: u64) -> Self {
+        tracker.alloc(cat, bytes);
+        Charge { tracker: tracker.clone(), cat, bytes }
+    }
+
+    /// Adjust the charged size (e.g. a growing buffer).
+    pub fn resize(&mut self, bytes: u64) {
+        if bytes > self.bytes {
+            self.tracker.alloc(self.cat, bytes - self.bytes);
+        } else {
+            self.tracker.free(self.cat, self.bytes - bytes);
+        }
+        self.bytes = bytes;
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+}
+
+impl Drop for Charge {
+    fn drop(&mut self) {
+        self.tracker.free(self.cat, self.bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let t = MemTracker::new();
+        t.alloc(Cat::Aux, 100);
+        t.alloc(Cat::Aux, 50);
+        t.free(Cat::Aux, 120);
+        assert_eq!(t.current(Cat::Aux), 30);
+        assert_eq!(t.peak(Cat::Aux), 150);
+        assert_eq!(t.peak_total(), 150);
+    }
+
+    #[test]
+    fn charge_raii() {
+        let t = MemTracker::new();
+        {
+            let _c = Charge::new(&t, Cat::Hash, 64);
+            assert_eq!(t.current(Cat::Hash), 64);
+        }
+        assert_eq!(t.current(Cat::Hash), 0);
+        assert_eq!(t.peak(Cat::Hash), 64);
+    }
+
+    #[test]
+    fn charge_resize() {
+        let t = MemTracker::new();
+        let mut c = Charge::new(&t, Cat::Comm, 10);
+        c.resize(100);
+        assert_eq!(t.current(Cat::Comm), 100);
+        c.resize(40);
+        assert_eq!(t.current(Cat::Comm), 40);
+        drop(c);
+        assert_eq!(t.current(Cat::Comm), 0);
+        assert_eq!(t.peak(Cat::Comm), 100);
+    }
+
+    #[test]
+    fn transfer_moves_categories() {
+        let t = MemTracker::new();
+        t.alloc(Cat::Hash, 80);
+        t.transfer(Cat::Hash, Cat::MatC, 80);
+        assert_eq!(t.current(Cat::Hash), 0);
+        assert_eq!(t.current(Cat::MatC), 80);
+    }
+
+    #[test]
+    fn reset_peaks_isolates_phases() {
+        let t = MemTracker::new();
+        t.alloc(Cat::Aux, 1000);
+        t.free(Cat::Aux, 1000);
+        assert_eq!(t.peak_total(), 1000);
+        t.reset_peaks();
+        assert_eq!(t.peak_total(), 0);
+        t.alloc(Cat::Aux, 10);
+        assert_eq!(t.peak_total(), 10);
+    }
+}

@@ -1,0 +1,225 @@
+//! Greedy strength-based aggregation coarsening (smoothed-aggregation AMG
+//! analog) — how the neutron problem's twelve-level hierarchy is built
+//! algebraically (paper §4.2 / Kong et al. 2019b's subspace coarsening).
+
+use crate::dist::{Comm, DistCsr, DistCsrBuilder, Layout, RowGatherPlan};
+use crate::spgemm::{RowScratch, RowView};
+
+/// Aggregation options.
+#[derive(Debug, Clone, Copy)]
+pub struct AggregateOpts {
+    /// Strength threshold: j is a strong neighbour of i when
+    /// |a_ij| >= threshold * max_k |a_ik| (k != i).
+    pub threshold: f64,
+    /// Damped-Jacobi prolongator smoothing weight (0 = unsmoothed /
+    /// tentative).  Smoothing widens P's rows across rank boundaries,
+    /// giving the off-rank communication the paper's runs exercise.
+    pub smooth_omega: f64,
+}
+
+impl Default for AggregateOpts {
+    fn default() -> Self {
+        AggregateOpts { threshold: 0.25, smooth_omega: 0.55 }
+    }
+}
+
+/// Rank-local greedy aggregation over the diag-block graph.  Returns the
+/// local aggregate id per local row and the number of local aggregates.
+fn aggregate_local(a: &DistCsr, threshold: f64) -> (Vec<i64>, usize) {
+    let n = a.local_nrows();
+    let mut agg: Vec<i64> = vec![-1; n];
+    let mut n_agg = 0usize;
+
+    // strength masks from the diag block
+    let strong = |i: usize| -> Vec<usize> {
+        let (cols, vals) = a.diag.row(i);
+        let mut maxabs = 0.0f64;
+        for (&c, &v) in cols.iter().zip(vals) {
+            if c as usize != i {
+                maxabs = maxabs.max(v.abs());
+            }
+        }
+        let thr = threshold * maxabs;
+        cols.iter()
+            .zip(vals)
+            .filter(|&(&c, &v)| c as usize != i && v.abs() >= thr && thr > 0.0)
+            .map(|(&c, _)| c as usize)
+            .collect()
+    };
+
+    // Pass 1: roots whose strong neighbourhood is fully unaggregated
+    for i in 0..n {
+        if agg[i] >= 0 {
+            continue;
+        }
+        let nbrs = strong(i);
+        if nbrs.iter().any(|&j| agg[j] >= 0) {
+            continue;
+        }
+        let id = n_agg as i64;
+        n_agg += 1;
+        agg[i] = id;
+        for &j in &nbrs {
+            agg[j] = id;
+        }
+    }
+    // Pass 2: attach leftovers to a neighbouring aggregate (or make a
+    // singleton).
+    for i in 0..n {
+        if agg[i] >= 0 {
+            continue;
+        }
+        let nbrs = strong(i);
+        if let Some(&j) = nbrs.iter().find(|&&j| agg[j] >= 0) {
+            agg[i] = agg[j];
+        } else {
+            agg[i] = n_agg as i64;
+            n_agg += 1;
+        }
+    }
+    (agg, n_agg)
+}
+
+/// Build the aggregation interpolation for `a` (collective).  Tentative
+/// `P` has one unit entry per row (its aggregate); with
+/// `smooth_omega > 0` the prolongator is smoothed:
+/// `P = (I − ω D⁻¹ A) P_tent`, computed with the row-wise SpGEMM.
+pub fn aggregate_interp(comm: &Comm, a: &DistCsr, opts: AggregateOpts) -> DistCsr {
+    let (agg, n_agg) = aggregate_local(a, opts.threshold);
+    // coarse layout from per-rank aggregate counts
+    let counts_u64 = comm.all_u64(n_agg as u64);
+    let counts: Vec<usize> = counts_u64.iter().map(|&c| c as usize).collect();
+    let coarse_layout = Layout::from_counts(&counts);
+    let coarse_start = coarse_layout.start(comm.rank()) as u64;
+
+    // tentative prolongator (injection)
+    let mut tent_b = DistCsrBuilder::new(comm.rank(), a.row_layout.clone(), coarse_layout.clone());
+    for &g in agg.iter() {
+        tent_b.push_row(&[(coarse_start + g as u64, 1.0)]);
+    }
+    let tent = tent_b.finish();
+    if opts.smooth_omega == 0.0 {
+        return tent;
+    }
+
+    // damped-Jacobi smoothing operator S = I - ω D⁻¹ A (rows local)
+    let mut s_b = DistCsrBuilder::new(comm.rank(), a.row_layout.clone(), a.row_layout.clone());
+    let rbeg = a.row_begin() as u64;
+    let mut entries: Vec<(u64, f64)> = Vec::new();
+    for i in 0..a.local_nrows() {
+        let (dc, dv) = a.diag.row(i);
+        let dii = dc
+            .iter()
+            .zip(dv)
+            .find(|&(&c, _)| c as usize == i)
+            .map(|(_, &v)| v)
+            .unwrap_or(1.0);
+        let w = opts.smooth_omega / dii;
+        entries.clear();
+        for (&c, &v) in dc.iter().zip(dv) {
+            let gcol = a.col_layout.start(a.rank) as u64 + c as u64;
+            let sv = if c as usize == i { 1.0 - w * v } else { -w * v };
+            entries.push((gcol, sv));
+        }
+        let (oc, ov) = a.offd.row(i);
+        for (&c, &v) in oc.iter().zip(ov) {
+            entries.push((a.garray[c as usize], -w * v));
+        }
+        entries.sort_unstable_by_key(|&(c, _)| c);
+        let _ = rbeg;
+        s_b.push_row(&entries);
+    }
+    let s = s_b.finish();
+
+    // P = S * tent via the row-wise SpGEMM
+    let plan = RowGatherPlan::build(comm, &tent.row_layout, &s.garray);
+    let pr = plan.gather_csr(comm, &tent);
+    let v = RowView::new(&s, &tent, &pr);
+    let mut scratch = RowScratch::default();
+    let mut p_b = DistCsrBuilder::new(comm.rank(), a.row_layout.clone(), coarse_layout);
+    let mut entries: Vec<(u64, f64)> = Vec::new();
+    for i in 0..s.local_nrows() {
+        scratch.numeric_row(v, i);
+        scratch.extract_numeric();
+        entries.clear();
+        for (&c, &val) in scratch.dcols.iter().zip(&scratch.dvals) {
+            entries.push((c + v.cbeg, val));
+        }
+        for (&c, &val) in scratch.ocols.iter().zip(&scratch.ovals) {
+            entries.push((c, val));
+        }
+        entries.sort_unstable_by_key(|&(c, _)| c);
+        p_b.push_row(&entries);
+    }
+    p_b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::World;
+    use crate::gen::{grid_laplacian, Grid3};
+
+    #[test]
+    fn aggregates_cover_and_shrink() {
+        let w = World::new(2);
+        w.run(|c| {
+            let a = grid_laplacian(Grid3::cube(6), c.rank(), c.size());
+            let (agg, n_agg) = aggregate_local(&a, 0.25);
+            assert!(agg.iter().all(|&g| g >= 0 && (g as usize) < n_agg));
+            // 3D Laplacian: aggregates should shrink by at least 3x
+            assert!(n_agg * 3 <= a.local_nrows(), "{n_agg} vs {}", a.local_nrows());
+        });
+    }
+
+    #[test]
+    fn tentative_interp_partitions_unity() {
+        let w = World::new(3);
+        w.run(|c| {
+            let a = grid_laplacian(Grid3::cube(5), c.rank(), c.size());
+            let p = aggregate_interp(&c, &a, AggregateOpts { threshold: 0.25, smooth_omega: 0.0 });
+            p.validate().unwrap();
+            for i in 0..p.local_nrows() {
+                let s: f64 = p.diag.row(i).1.iter().chain(p.offd.row(i).1.iter()).sum();
+                assert!((s - 1.0).abs() < 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn smoothed_interp_wider_and_crosses_ranks() {
+        let w = World::new(4);
+        let any_offd = w.run(|c| {
+            let a = grid_laplacian(Grid3::cube(6), c.rank(), c.size());
+            let p = aggregate_interp(&c, &a, AggregateOpts::default());
+            p.validate().unwrap();
+            let tent =
+                aggregate_interp(&c, &a, AggregateOpts { threshold: 0.25, smooth_omega: 0.0 });
+            assert!(p.nnz_local() > tent.nnz_local(), "smoothing must widen P");
+            p.offd.nnz() > 0
+        });
+        assert!(any_offd.iter().any(|&x| x), "smoothed P never crossed ranks");
+    }
+
+    #[test]
+    fn smoothed_rows_preserve_constants() {
+        // S = I - wD^-1 A applied to the unit partition: row sums of P equal
+        // row sums of S*1 = 1 - wD^-1(A*1); for interior Laplacian rows
+        // A*1 = 0, so sums stay 1 there.
+        let w = World::new(1);
+        w.run(|c| {
+            let a = grid_laplacian(Grid3::cube(5), c.rank(), c.size());
+            let p = aggregate_interp(&c, &a, AggregateOpts::default());
+            let g = Grid3::cube(5);
+            for i in 0..p.local_nrows() {
+                let (x, y, z) = g.coords(i);
+                let interior = x > 0 && x + 1 < 5 && y > 0 && y + 1 < 5 && z > 0 && z + 1 < 5;
+                if interior {
+                    let s: f64 =
+                        p.diag.row(i).1.iter().chain(p.offd.row(i).1.iter()).sum();
+                    assert!((s - 1.0).abs() < 1e-10, "row {i} sum {s}");
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,329 @@
+//! V-cycle preconditioner over a built hierarchy: Jacobi smoothing,
+//! matrix-free transfers, redundant dense solve on the coarsest level.
+
+use crate::dist::{Comm, DistSpmv, DistVec};
+use crate::mat::block_invert;
+use crate::util::bytebuf::{ByteReader, ByteWriter};
+
+use super::hierarchy::Hierarchy;
+use super::smoother::{
+    chebyshev_bounds, ChebyshevSmoother, HybridSorSmoother, JacobiSmoother, SmootherKind,
+};
+use super::transfer::Transfer;
+
+/// Cycle shape: V (one coarse visit) or W (two coarse visits per level).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CycleType {
+    V,
+    W,
+}
+
+/// V/W-cycle options.
+#[derive(Debug, Clone, Copy)]
+pub struct MgOpts {
+    pub pre_smooth: usize,
+    pub post_smooth: usize,
+    /// Fixed Jacobi damping; when None it is auto-tuned per level from a
+    /// power-iteration bound on λ(D⁻¹A).
+    pub omega: Option<f64>,
+    /// Coarsest sizes up to this get the redundant dense direct solve.
+    pub max_direct: usize,
+    pub cycle: CycleType,
+    pub smoother: SmootherKind,
+}
+
+impl Default for MgOpts {
+    fn default() -> Self {
+        MgOpts {
+            pre_smooth: 1,
+            post_smooth: 1,
+            omega: None,
+            max_direct: 4000,
+            cycle: CycleType::V,
+            smoother: SmootherKind::Jacobi,
+        }
+    }
+}
+
+/// Per-level relaxation dispatch.
+enum Relax {
+    Jacobi(JacobiSmoother),
+    Chebyshev(ChebyshevSmoother),
+    Sor(HybridSorSmoother),
+}
+
+impl Relax {
+    fn sweep(
+        &self,
+        comm: &Comm,
+        a: &crate::dist::DistCsr,
+        spmv: &DistSpmv,
+        b: &DistVec,
+        x: &mut DistVec,
+        work: &mut DistVec,
+    ) {
+        match self {
+            Relax::Jacobi(s) => s.sweep(comm, a, spmv, b, x, work),
+            Relax::Chebyshev(s) => s.sweep(comm, a, spmv, b, x, work),
+            Relax::Sor(s) => s.sweep(comm, a, spmv, b, x),
+        }
+    }
+
+    fn bytes(&self) -> u64 {
+        match self {
+            Relax::Jacobi(s) => s.bytes(),
+            Relax::Chebyshev(s) => s.bytes(),
+            Relax::Sor(s) => s.bytes(),
+        }
+    }
+}
+
+struct LevelCtx {
+    spmv: DistSpmv,
+    smoother: Relax,
+    transfer: Option<Transfer>,
+    // work vectors
+    r: DistVec,
+    e: DistVec,
+    work: DistVec,
+}
+
+/// A ready-to-apply V-cycle preconditioner.
+pub struct MgPreconditioner {
+    pub hierarchy: Hierarchy,
+    levels: Vec<LevelCtx>,
+    /// Dense inverse of the gathered coarsest operator (redundant solve).
+    coarse_inv: Option<Vec<f64>>,
+    coarse_n: usize,
+    pub opts: MgOpts,
+}
+
+impl MgPreconditioner {
+    /// Collective setup: smoothers, transfer plans, coarse factorization.
+    pub fn new(comm: &Comm, hierarchy: Hierarchy, opts: MgOpts) -> Self {
+        let mut levels = Vec::new();
+        for lvl in &hierarchy.levels {
+            let spmv = DistSpmv::new(comm, &lvl.a);
+            let omega = match opts.omega {
+                Some(w) => w,
+                None => chebyshev_bounds(comm, &lvl.a, &spmv, 10).1,
+            };
+            let smoother = match opts.smoother {
+                SmootherKind::Jacobi => Relax::Jacobi(JacobiSmoother::new(&lvl.a, omega)),
+                SmootherKind::Chebyshev(deg) => {
+                    Relax::Chebyshev(ChebyshevSmoother::new(comm, &lvl.a, &spmv, deg))
+                }
+                SmootherKind::HybridSor => {
+                    Relax::Sor(HybridSorSmoother::new(&lvl.a, 1.0))
+                }
+            };
+            let transfer = lvl.p.as_ref().map(|p| Transfer::new(comm, p));
+            let layout = lvl.a.row_layout.clone();
+            levels.push(LevelCtx {
+                spmv,
+                smoother,
+                transfer,
+                r: DistVec::zeros(layout.clone(), comm.rank()),
+                e: DistVec::zeros(layout.clone(), comm.rank()),
+                work: DistVec::zeros(layout, comm.rank()),
+            });
+        }
+        // coarsest: redundant dense inverse
+        let coarsest = &hierarchy.levels.last().unwrap().a;
+        let n = coarsest.global_nrows();
+        let coarse_inv = if n <= opts.max_direct {
+            let g = coarsest.gather_global(comm);
+            let mut dense = vec![0.0; n * n];
+            for i in 0..n {
+                let (cols, vals) = g.row(i);
+                for (&c, &v) in cols.iter().zip(vals) {
+                    dense[i * n + c as usize] = v;
+                }
+            }
+            Some(block_invert(n, &dense).expect("coarsest operator is singular"))
+        } else {
+            None
+        };
+        MgPreconditioner { hierarchy, levels, coarse_inv, coarse_n: n, opts }
+    }
+
+    /// Total bytes of solver state beyond the matrices (work vectors,
+    /// smoothers, coarse inverse).
+    pub fn bytes(&self) -> u64 {
+        let per_level: u64 = self
+            .levels
+            .iter()
+            .map(|l| l.r.bytes() + l.e.bytes() + l.work.bytes() + l.smoother.bytes())
+            .sum();
+        per_level + self.coarse_inv.as_ref().map_or(0, |m| (m.len() * 8) as u64)
+    }
+
+    /// Apply one V-cycle: `x = M⁻¹ b` with zero initial guess (collective).
+    pub fn apply(&mut self, comm: &Comm, b: &DistVec, x: &mut DistVec) {
+        x.fill(0.0);
+        self.cycle(comm, 0, b, x);
+    }
+
+    fn cycle(&mut self, comm: &Comm, k: usize, b: &DistVec, x: &mut DistVec) {
+        let nlev = self.levels.len();
+        let is_coarsest = k + 1 == nlev;
+        if is_coarsest {
+            self.coarse_solve(comm, k, b, x);
+            return;
+        }
+        // borrow juggling: split level k from level k+1 state
+        for _ in 0..self.opts.pre_smooth {
+            let lvl = &mut self.levels[k];
+            let a = &self.hierarchy.levels[k].a;
+            let (sm, spmv) = (&lvl.smoother, &lvl.spmv);
+            sm.sweep(comm, a, spmv, b, x, &mut lvl.work);
+        }
+        // residual r = b - A x
+        {
+            let lvl = &mut self.levels[k];
+            let a = &self.hierarchy.levels[k].a;
+            lvl.spmv.apply(comm, a, x, &mut lvl.work);
+            lvl.r.vals.clone_from(&b.vals);
+            for i in 0..lvl.r.vals.len() {
+                lvl.r.vals[i] -= lvl.work.vals[i];
+            }
+        }
+        // restrict to coarse rhs
+        let mut bc = DistVec::zeros(self.hierarchy.levels[k + 1].a.row_layout.clone(), comm.rank());
+        {
+            let p = self.hierarchy.levels[k].p.as_ref().unwrap();
+            let lvl = &self.levels[k];
+            lvl.transfer.as_ref().unwrap().restrict(comm, p, &lvl.r, &mut bc);
+        }
+        // coarse correction (W-cycle: recurse twice, re-restricting the
+        // updated residual before the second visit)
+        let mut ec = DistVec::zeros(bc.layout.clone(), comm.rank());
+        self.cycle(comm, k + 1, &bc, &mut ec);
+        if self.opts.cycle == CycleType::W && k + 2 < nlev {
+            // rc2 = bc - A_c ec ; ec += cycle(rc2)
+            let ac = &self.hierarchy.levels[k + 1].a;
+            let mut rc2 = DistVec::zeros(bc.layout.clone(), comm.rank());
+            {
+                let lvl = &mut self.levels[k + 1];
+                lvl.spmv.apply(comm, ac, &ec, &mut lvl.work);
+                rc2.vals.clone_from(&bc.vals);
+                for i in 0..rc2.vals.len() {
+                    rc2.vals[i] -= lvl.work.vals[i];
+                }
+            }
+            let mut ec2 = DistVec::zeros(bc.layout.clone(), comm.rank());
+            self.cycle(comm, k + 1, &rc2, &mut ec2);
+            ec.axpy(1.0, &ec2);
+        }
+        // prolongate and correct
+        {
+            let p = self.hierarchy.levels[k].p.as_ref().unwrap();
+            let lvl = &mut self.levels[k];
+            lvl.e.fill(0.0);
+            lvl.transfer.as_ref().unwrap().prolong_add(comm, p, &ec, &mut lvl.e);
+        }
+        for i in 0..x.vals.len() {
+            x.vals[i] += self.levels[k].e.vals[i];
+        }
+        for _ in 0..self.opts.post_smooth {
+            let lvl = &mut self.levels[k];
+            let a = &self.hierarchy.levels[k].a;
+            let (sm, spmv) = (&lvl.smoother, &lvl.spmv);
+            sm.sweep(comm, a, spmv, b, x, &mut lvl.work);
+        }
+    }
+
+    fn coarse_solve(&mut self, comm: &Comm, k: usize, b: &DistVec, x: &mut DistVec) {
+        match &self.coarse_inv {
+            Some(inv) => {
+                // gather full rhs on every rank, apply the dense inverse,
+                // keep the local slice (PETSc "redundant" analog)
+                let n = self.coarse_n;
+                let mut w = ByteWriter::with_capacity(8 * b.vals.len());
+                w.f64_slice(&b.vals);
+                let all = comm.allgather_bytes(w.into_bytes());
+                let mut full = Vec::with_capacity(n);
+                for payload in &all {
+                    let mut r = ByteReader::new(payload);
+                    while !r.done() {
+                        full.push(r.f64());
+                    }
+                }
+                debug_assert_eq!(full.len(), n);
+                let start = b.layout.start(comm.rank());
+                for (li, xi) in x.vals.iter_mut().enumerate() {
+                    let i = start + li;
+                    let mut acc = 0.0;
+                    for j in 0..n {
+                        acc += inv[i * n + j] * full[j];
+                    }
+                    *xi = acc;
+                }
+            }
+            None => {
+                // fall back to heavy smoothing
+                for _ in 0..20 {
+                    let lvl = &mut self.levels[k];
+                    let a = &self.hierarchy.levels[k].a;
+                    let (sm, spmv) = (&lvl.smoother, &lvl.spmv);
+                    sm.sweep(comm, a, spmv, b, x, &mut lvl.work);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::World;
+    use crate::gen::{grid_laplacian, Grid3};
+    use crate::mem::MemTracker;
+    use crate::mg::hierarchy::{build_hierarchy, geometric_chain, Coarsening, HierarchyConfig};
+
+    #[test]
+    fn vcycle_contracts_error() {
+        let w = World::new(2);
+        w.run(|c| {
+            let grids = geometric_chain(Grid3::cube(3), 3);
+            let a0 = grid_laplacian(grids[0], c.rank(), c.size());
+            let layout = a0.row_layout.clone();
+            let tracker = MemTracker::new();
+            let h = build_hierarchy(
+                &c,
+                a0,
+                &Coarsening::Geometric { grids },
+                HierarchyConfig::default(),
+                &tracker,
+            );
+            let a = h.levels[0].a.clone();
+            let spmv = DistSpmv::new(&c, &a);
+            let mut pc = MgPreconditioner::new(&c, h, MgOpts::default());
+            // b = A * ones
+            let ones = DistVec::from_fn(layout.clone(), c.rank(), |_| 1.0);
+            let mut b = DistVec::zeros(layout.clone(), c.rank());
+            spmv.apply(&c, &a, &ones, &mut b);
+            // iterate x <- x + M^-1 (b - A x)
+            let mut x = DistVec::zeros(layout.clone(), c.rank());
+            let mut r = b.clone();
+            let r0 = r.norm2(&c);
+            let mut z = DistVec::zeros(layout.clone(), c.rank());
+            let mut ax = DistVec::zeros(layout, c.rank());
+            for _ in 0..8 {
+                pc.apply(&c, &r, &mut z);
+                x.axpy(1.0, &z);
+                spmv.apply(&c, &a, &x, &mut ax);
+                r.vals.clone_from(&b.vals);
+                for i in 0..r.vals.len() {
+                    r.vals[i] -= ax.vals[i];
+                }
+            }
+            let r8 = r.norm2(&c);
+            // V(1,1) point-Jacobi on a 9³→5³→3³ chain contracts ≈0.3/iter
+            assert!(
+                r8 < 1e-3 * r0,
+                "V-cycle iteration stalled: {r0} -> {r8}"
+            );
+        });
+    }
+}

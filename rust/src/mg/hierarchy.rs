@@ -1,0 +1,320 @@
+//! Galerkin hierarchy construction: repeated `C = PᵀAP` with a selectable
+//! triple-product algorithm — the paper's actual use case ("eleven
+//! interpolations and twelve operator matrices", Table 5/6), including the
+//! cached-vs-freed intermediate-data protocols of Tables 7/8.
+
+use crate::dist::{Comm, DistCsr};
+use crate::gen::{trilinear_interp, Grid3};
+use crate::mem::{Cat, MemTracker};
+use crate::ptap::{Algo, Ptap, PtapStats};
+
+use super::aggregate::{aggregate_interp, AggregateOpts};
+
+/// How interpolations are produced.
+#[derive(Debug, Clone)]
+pub enum Coarsening {
+    /// Geometric chain of grids, coarsest first (model problem): level k
+    /// interpolates from `grids[k+1]` onto `grids[k]`.
+    Geometric { grids: Vec<Grid3> },
+    /// Strength-based aggregation (neutron problem).
+    Aggregation { opts: AggregateOpts, min_rows: usize, max_levels: usize },
+}
+
+/// Hierarchy build protocol knobs (the experiment axes of Tables 7/8).
+#[derive(Debug, Clone, Copy)]
+pub struct HierarchyConfig {
+    pub algo: Algo,
+    /// Keep each level's triple-product context (plans, auxiliaries)
+    /// alive after the level is built — "caching intermediate data"
+    /// (Table 8).  When false the context is dropped per level (Table 7).
+    pub cache: bool,
+    /// Numeric products per level (the paper re-runs numeric 1–11 times).
+    pub numeric_repeats: usize,
+}
+
+impl Default for HierarchyConfig {
+    fn default() -> Self {
+        HierarchyConfig { algo: Algo::AllAtOnce, cache: false, numeric_repeats: 1 }
+    }
+}
+
+/// Per-level operator statistics (Table 5 columns).
+#[derive(Debug, Clone, Copy)]
+pub struct LevelStats {
+    pub rows: u64,
+    pub nnz: u64,
+    pub cols_min: u64,
+    pub cols_max: u64,
+    pub cols_avg: f64,
+}
+
+/// Per-level interpolation statistics (Table 6 columns).
+#[derive(Debug, Clone, Copy)]
+pub struct InterpStats {
+    pub rows: u64,
+    pub cols: u64,
+    pub cols_min: u64,
+    pub cols_max: u64,
+}
+
+/// One level: its operator and the interpolation to the next coarser one.
+pub struct Level {
+    pub a: DistCsr,
+    pub p: Option<DistCsr>,
+}
+
+/// The built hierarchy plus everything the experiments report.
+pub struct Hierarchy {
+    pub levels: Vec<Level>,
+    pub op_stats: Vec<LevelStats>,
+    pub interp_stats: Vec<InterpStats>,
+    /// Summed triple-product stats across levels (this rank).
+    pub ptap_stats: PtapStats,
+    /// Retained triple-product contexts when `cache` is on.
+    pub cached_ops: Vec<Ptap>,
+}
+
+impl Hierarchy {
+    pub fn n_levels(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Local storage bytes of all operators + interpolations.
+    pub fn matrix_bytes(&self) -> u64 {
+        self.levels
+            .iter()
+            .map(|l| l.a.bytes() + l.p.as_ref().map_or(0, |p| p.bytes()))
+            .sum()
+    }
+}
+
+fn op_stats(comm: &Comm, a: &DistCsr) -> LevelStats {
+    let (cols_min, cols_max, cols_avg) = a.row_nnz_stats(comm);
+    LevelStats {
+        rows: comm.allreduce_sum_u64(a.local_nrows() as u64),
+        nnz: a.nnz_global(comm),
+        cols_min,
+        cols_max,
+        cols_avg,
+    }
+}
+
+fn interp_stats(comm: &Comm, p: &DistCsr) -> InterpStats {
+    let (cols_min, cols_max, _) = p.row_nnz_stats(comm);
+    InterpStats {
+        rows: comm.allreduce_sum_u64(p.local_nrows() as u64),
+        cols: p.global_ncols() as u64,
+        cols_min,
+        cols_max,
+    }
+}
+
+/// Build the hierarchy (collective).  `a0` is the finest operator; its
+/// storage is charged to the tracker as `MatA` by the caller.
+pub fn build_hierarchy(
+    comm: &Comm,
+    a0: DistCsr,
+    coarsening: &Coarsening,
+    cfg: HierarchyConfig,
+    tracker: &MemTracker,
+) -> Hierarchy {
+    let mut levels: Vec<Level> = Vec::new();
+    let mut op_stats_v = vec![op_stats(comm, &a0)];
+    let mut interp_stats_v = Vec::new();
+    let mut total = PtapStats::default();
+    let mut cached_ops = Vec::new();
+
+    let mut a = a0;
+    let mut k = 0usize;
+    loop {
+        // decide whether to coarsen further and build P
+        let p = match coarsening {
+            Coarsening::Geometric { grids } => {
+                if k + 1 >= grids.len() {
+                    None
+                } else {
+                    debug_assert_eq!(grids[k + 1].refine(), grids[k], "grid chain broken");
+                    Some(trilinear_interp(grids[k + 1], comm.rank(), comm.size()))
+                }
+            }
+            Coarsening::Aggregation { opts, min_rows, max_levels } => {
+                let global_rows = comm.allreduce_sum_u64(a.local_nrows() as u64);
+                if global_rows <= *min_rows as u64 || k + 1 >= *max_levels {
+                    None
+                } else {
+                    Some(aggregate_interp(comm, &a, *opts))
+                }
+            }
+        };
+        let Some(p) = p else {
+            levels.push(Level { a, p: None });
+            break;
+        };
+        tracker.alloc(Cat::MatP, p.bytes());
+        interp_stats_v.push(interp_stats(comm, &p));
+
+        // the paper's protocol: one symbolic + `numeric_repeats` numerics
+        let mut op = Ptap::symbolic(cfg.algo, comm, &a, &p, tracker);
+        for _ in 0..cfg.numeric_repeats {
+            op.numeric(comm, &a, &p);
+        }
+        let c = op.extract_c();
+        tracker.alloc(Cat::MatC, c.bytes());
+        total = sum_stats(total, op.stats);
+        if cfg.cache {
+            cached_ops.push(op);
+        } else {
+            drop(op);
+        }
+        op_stats_v.push(op_stats(comm, &c));
+        levels.push(Level { a, p: Some(p) });
+        a = c;
+        k += 1;
+    }
+
+    Hierarchy {
+        levels,
+        op_stats: op_stats_v,
+        interp_stats: interp_stats_v,
+        ptap_stats: total,
+        cached_ops,
+    }
+}
+
+fn sum_stats(mut acc: PtapStats, s: PtapStats) -> PtapStats {
+    acc.time_sym += s.time_sym;
+    acc.time_num += s.time_num;
+    acc.num_calls += s.num_calls;
+    acc.sym_msgs += s.sym_msgs;
+    acc.sym_bytes += s.sym_bytes;
+    acc.num_msgs += s.num_msgs;
+    acc.num_bytes += s.num_bytes;
+    acc
+}
+
+/// Geometric grid chain: `levels` grids ending at `coarsest` (each finer
+/// grid is the refinement of the next), finest first.
+/// (exported for examples and benches)
+pub fn geometric_chain(coarsest: Grid3, levels: usize) -> Vec<Grid3> {
+    let mut grids = vec![coarsest];
+    for _ in 1..levels {
+        let f = grids.last().unwrap().refine();
+        grids.push(f);
+    }
+    grids.reverse();
+    grids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::World;
+    use crate::gen::{grid_laplacian, Grid3};
+
+    #[test]
+    fn geometric_chain_links() {
+        let grids = geometric_chain(Grid3::cube(3), 3);
+        assert_eq!(grids.len(), 3);
+        assert_eq!(grids[2], Grid3::cube(3));
+        assert_eq!(grids[1], Grid3::cube(5));
+        assert_eq!(grids[0], Grid3::cube(9));
+    }
+
+    #[test]
+    fn geometric_hierarchy_builds_and_coarsens() {
+        let w = World::new(2);
+        w.run(|c| {
+            let grids = geometric_chain(Grid3::cube(3), 3);
+            let a0 = grid_laplacian(grids[0], c.rank(), c.size());
+            let tracker = MemTracker::new();
+            tracker.alloc(Cat::MatA, a0.bytes());
+            let h = build_hierarchy(
+                &c,
+                a0,
+                &Coarsening::Geometric { grids: grids.clone() },
+                HierarchyConfig::default(),
+                &tracker,
+            );
+            assert_eq!(h.n_levels(), 3);
+            assert_eq!(h.op_stats[0].rows, 9 * 9 * 9);
+            assert_eq!(h.op_stats[1].rows, 5 * 5 * 5);
+            assert_eq!(h.op_stats[2].rows, 27);
+            // Galerkin operators stay symmetric for symmetric A and full-rank P
+            let coarsest = h.levels[2].a.gather_global(&c);
+            assert!(coarsest.max_abs_diff(&coarsest.transpose()) < 1e-10);
+        });
+    }
+
+    #[test]
+    fn aggregation_hierarchy_reaches_min_rows() {
+        let w = World::new(2);
+        w.run(|c| {
+            let a0 = grid_laplacian(Grid3::cube(8), c.rank(), c.size());
+            let tracker = MemTracker::new();
+            let h = build_hierarchy(
+                &c,
+                a0,
+                &Coarsening::Aggregation {
+                    opts: AggregateOpts::default(),
+                    min_rows: 10,
+                    max_levels: 10,
+                },
+                HierarchyConfig::default(),
+                &tracker,
+            );
+            assert!(h.n_levels() >= 3, "only {} levels", h.n_levels());
+            // rows strictly decrease
+            for w2 in h.op_stats.windows(2) {
+                assert!(w2[1].rows < w2[0].rows);
+            }
+        });
+    }
+
+    #[test]
+    fn cache_retains_contexts_and_memory() {
+        let w = World::new(2);
+        w.run(|c| {
+            let grids = geometric_chain(Grid3::cube(3), 2);
+            let build = |cache: bool, c: &Comm| {
+                let a0 = grid_laplacian(grids[0], c.rank(), c.size());
+                let tracker = MemTracker::new();
+                let h = build_hierarchy(
+                    c,
+                    a0,
+                    &Coarsening::Geometric { grids: grids.clone() },
+                    HierarchyConfig { cache, ..Default::default() },
+                    &tracker,
+                );
+                (h.cached_ops.len(), tracker.current_total(), tracker.peak_total())
+            };
+            let (n_nc, cur_nc, _peak_nc) = build(false, &c);
+            let (n_c, cur_c, _peak_c) = build(true, &c);
+            assert_eq!(n_nc, 0);
+            assert_eq!(n_c, 1);
+            assert!(cur_c > cur_nc, "cached {} vs freed {}", cur_c, cur_nc);
+        });
+    }
+
+    #[test]
+    fn all_algorithms_build_identical_hierarchies() {
+        let w = World::new(3);
+        w.run(|c| {
+            let grids = geometric_chain(Grid3::cube(3), 3);
+            let mut coarsest: Vec<crate::mat::Csr> = Vec::new();
+            for algo in crate::ptap::ALL_ALGOS {
+                let a0 = grid_laplacian(grids[0], c.rank(), c.size());
+                let tracker = MemTracker::new();
+                let h = build_hierarchy(
+                    &c,
+                    a0,
+                    &Coarsening::Geometric { grids: grids.clone() },
+                    HierarchyConfig { algo, ..Default::default() },
+                    &tracker,
+                );
+                coarsest.push(h.levels.last().unwrap().a.gather_global(&c));
+            }
+            assert!(coarsest[0].max_abs_diff(&coarsest[1]) < 1e-10);
+            assert!(coarsest[0].max_abs_diff(&coarsest[2]) < 1e-10);
+        });
+    }
+}

@@ -1,0 +1,28 @@
+//! Multigrid substrate: the system the paper's triple products live in.
+//!
+//! A Galerkin hierarchy is built by repeated `C = PᵀAP` (with any of the
+//! three [`crate::ptap::Algo`]s), then used as a V-cycle preconditioner
+//! for CG.  Coarsening is geometric (structured grids, the model problem)
+//! or algebraic (greedy strength-based aggregation + optional Jacobi
+//! prolongator smoothing — the neutron problem's twelve-level setup).
+
+mod aggregate;
+mod cycle;
+mod gmres;
+mod hierarchy;
+mod smoother;
+mod solver;
+mod transfer;
+
+pub use aggregate::{aggregate_interp, AggregateOpts};
+pub use cycle::{CycleType, MgOpts, MgPreconditioner};
+pub use hierarchy::{
+    build_hierarchy, geometric_chain, Coarsening, Hierarchy, HierarchyConfig, InterpStats, Level,
+    LevelStats,
+};
+pub use gmres::gmres;
+pub use smoother::{
+    chebyshev_bounds, ChebyshevSmoother, HybridSorSmoother, JacobiSmoother, SmootherKind,
+};
+pub use solver::{pcg, richardson, SolveResult};
+pub use transfer::Transfer;

@@ -1,0 +1,182 @@
+//! Grid-transfer operators applied matrix-free from the stored `P`:
+//! prolongation `x_f += P x_c` (halo-gather of coarse values) and
+//! restriction `r_c = Pᵀ r_f` (scatter + owner sends, the same
+//! communication shape as the all-at-once product's remote loop).
+
+use crate::dist::{Comm, DistCsr, DistVec, VecGatherPlan};
+use crate::util::bytebuf::{ByteReader, ByteWriter};
+
+/// Cached communication plans for one interpolation operator.
+#[derive(Debug)]
+pub struct Transfer {
+    /// Coarse-value halo for prolongation (needed ids = P.garray).
+    halo: VecGatherPlan,
+    /// Owner of each P.garray entry (restriction sends).
+    garray_owner: Vec<usize>,
+}
+
+impl Transfer {
+    /// Collective build.
+    pub fn new(comm: &Comm, p: &DistCsr) -> Self {
+        let halo = VecGatherPlan::build(comm, &p.col_layout, &p.garray);
+        let garray_owner =
+            p.garray.iter().map(|&g| p.col_layout.owner(g as usize)).collect();
+        Transfer { halo, garray_owner }
+    }
+
+    /// `x_f += P x_c` (collective).
+    pub fn prolong_add(&self, comm: &Comm, p: &DistCsr, xc: &DistVec, xf: &mut DistVec) {
+        let halo = self.halo.gather(comm, &xc.vals);
+        for i in 0..p.local_nrows() {
+            let (dc, dv) = p.diag.row(i);
+            let mut acc = 0.0;
+            for (&c, &v) in dc.iter().zip(dv) {
+                acc += v * xc.vals[c as usize];
+            }
+            let (oc, ov) = p.offd.row(i);
+            for (&c, &v) in oc.iter().zip(ov) {
+                acc += v * halo[c as usize];
+            }
+            xf.vals[i] += acc;
+        }
+    }
+
+    /// `r_c = Pᵀ r_f` (collective).
+    pub fn restrict(&self, comm: &Comm, p: &DistCsr, rf: &DistVec, rc: &mut DistVec) {
+        rc.fill(0.0);
+        // local scatter
+        for i in 0..p.local_nrows() {
+            let ri = rf.vals[i];
+            if ri == 0.0 {
+                continue;
+            }
+            let (dc, dv) = p.diag.row(i);
+            for (&c, &v) in dc.iter().zip(dv) {
+                rc.vals[c as usize] += v * ri;
+            }
+        }
+        // off-rank contributions accumulated per garray slot
+        let mut acc = vec![0.0f64; p.garray.len()];
+        for i in 0..p.local_nrows() {
+            let ri = rf.vals[i];
+            if ri == 0.0 {
+                continue;
+            }
+            let (oc, ov) = p.offd.row(i);
+            for (&c, &v) in oc.iter().zip(ov) {
+                acc[c as usize] += v * ri;
+            }
+        }
+        // ship (gid, value) pairs to owners
+        let np = comm.size();
+        let mut writers: Vec<Option<ByteWriter>> = (0..np).map(|_| None).collect();
+        for (t, &val) in acc.iter().enumerate() {
+            if val == 0.0 {
+                continue;
+            }
+            let owner = self.garray_owner[t];
+            let w = writers[owner].get_or_insert_with(ByteWriter::new);
+            w.u64(p.garray[t]);
+            w.f64(val);
+        }
+        let sends: Vec<(usize, Vec<u8>)> = writers
+            .into_iter()
+            .enumerate()
+            .filter_map(|(d, w)| w.map(|w| (d, w.into_bytes())))
+            .collect();
+        let recvd = comm.exchange(sends);
+        let cbeg = p.col_layout.start(p.rank) as u64;
+        for (_src, payload) in &recvd {
+            let mut r = ByteReader::new(payload);
+            while !r.done() {
+                let gid = r.u64();
+                let val = r.f64();
+                rc.vals[(gid - cbeg) as usize] += val;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::World;
+    use crate::gen::trilinear_interp;
+    use crate::gen::Grid3;
+
+    #[test]
+    fn restrict_matches_explicit_transpose() {
+        let coarse = Grid3::cube(3);
+        let w = World::new(3);
+        let pieces = w.run(|c| {
+            let p = trilinear_interp(coarse, c.rank(), c.size());
+            let t = Transfer::new(&c, &p);
+            let rf = DistVec::from_fn(p.row_layout.clone(), c.rank(), |g| (g % 7) as f64 - 3.0);
+            let mut rc = DistVec::zeros(p.col_layout.clone(), c.rank());
+            t.restrict(&c, &p, &rf, &mut rc);
+            let pg = p.gather_global(&c);
+            (p.col_layout.start(c.rank()), rc.vals, pg)
+        });
+        // sequential reference: rc = P^T rf
+        let pg = &pieces[0].2;
+        let n = pg.nrows;
+        let rf_full: Vec<f64> = (0..n).map(|g| (g % 7) as f64 - 3.0).collect();
+        let mut want = vec![0.0; pg.ncols];
+        pg.spmv_transpose_add(&rf_full, &mut want);
+        for (start, vals, _) in &pieces {
+            for (k, &v) in vals.iter().enumerate() {
+                assert!(
+                    (v - want[start + k]).abs() < 1e-12,
+                    "coarse {}: {} vs {}",
+                    start + k,
+                    v,
+                    want[start + k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prolong_matches_explicit_p() {
+        let coarse = Grid3::cube(3);
+        let w = World::new(4);
+        let pieces = w.run(|c| {
+            let p = trilinear_interp(coarse, c.rank(), c.size());
+            let t = Transfer::new(&c, &p);
+            let xc = DistVec::from_fn(p.col_layout.clone(), c.rank(), |g| g as f64);
+            let mut xf = DistVec::zeros(p.row_layout.clone(), c.rank());
+            t.prolong_add(&c, &p, &xc, &mut xf);
+            let pg = p.gather_global(&c);
+            (p.row_layout.start(c.rank()), xf.vals, pg)
+        });
+        let pg = &pieces[0].2;
+        let xc_full: Vec<f64> = (0..pg.ncols).map(|g| g as f64).collect();
+        let mut want = vec![0.0; pg.nrows];
+        pg.spmv(&xc_full, &mut want);
+        for (start, vals, _) in &pieces {
+            for (k, &v) in vals.iter().enumerate() {
+                assert!((v - want[start + k]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn prolong_restrict_adjoint_identity() {
+        // <P xc, rf> == <xc, P^T rf> — the Galerkin adjoint relation
+        let coarse = Grid3::cube(3);
+        let w = World::new(2);
+        w.run(|c| {
+            let p = trilinear_interp(coarse, c.rank(), c.size());
+            let t = Transfer::new(&c, &p);
+            let xc = DistVec::from_fn(p.col_layout.clone(), c.rank(), |g| (g as f64).sin());
+            let rf = DistVec::from_fn(p.row_layout.clone(), c.rank(), |g| (g as f64).cos());
+            let mut pxc = DistVec::zeros(p.row_layout.clone(), c.rank());
+            t.prolong_add(&c, &p, &xc, &mut pxc);
+            let mut ptrf = DistVec::zeros(p.col_layout.clone(), c.rank());
+            t.restrict(&c, &p, &rf, &mut ptrf);
+            let lhs = pxc.dot(&c, &rf);
+            let rhs = xc.dot(&c, &ptrf);
+            assert!((lhs - rhs).abs() < 1e-9, "{lhs} vs {rhs}");
+        });
+    }
+}

@@ -1,0 +1,203 @@
+//! The all-at-once triple product (paper Alg. 7–8): form `C = PᵀAP` in one
+//! pass over `A` and `P` — no auxiliary `C̃`, no explicit `Pᵀ`.
+//!
+//! Per fine row `I`, the row `R = (AP)(I,:)` is formed row-wise (Alg. 1/3)
+//! in a reusable hash accumulator, then scattered as the outer product
+//! `P(I,:) ⊗ R`: nonzeros of `P_o(I,:)` select *remote* target rows of `C`
+//! (staged per P.garray position and shipped to their owners), nonzeros of
+//! `P_d(I,:)` select *local* rows.  Two loops (remote first, then local)
+//! let the communication overlap the local compute.
+
+use crate::dist::{Comm, DistCsr, PrMat};
+use crate::mem::{Cat, MemTracker};
+use crate::spgemm::{RowScratch, RowView};
+
+use super::common::{
+    exchange_tracked, for_each_num_row, for_each_sym_row, COutput, LocalSymTables, PtapStats,
+    RemoteStageNum, RemoteStageSym,
+};
+
+/// Reusable u32 conversion buffers for the numeric scatter.
+#[derive(Debug, Default)]
+pub struct AaoState {
+    dcols32: Vec<u32>,
+    ocols32: Vec<u32>,
+}
+
+impl AaoState {
+    /// Scatter the extracted row `R` (in `scratch`) into the local rows of
+    /// C selected by `P_d(I,:)` — the outer product `P_d(I,:) ⊗ R`.
+    pub(crate) fn scatter_local(
+        &mut self,
+        scratch: &RowScratch,
+        c: &mut COutput,
+        dcols: &[u32],
+        dvals: &[f64],
+    ) {
+        self.dcols32.clear();
+        self.dcols32.extend(scratch.dcols.iter().map(|&c| c as u32));
+        self.ocols32.clear();
+        self.ocols32.extend(scratch.ocols.iter().map(|&c| c as u32));
+        for (&i_coarse, &w) in dcols.iter().zip(dvals) {
+            c.add_split_scaled(
+                i_coarse as usize,
+                &self.dcols32,
+                &scratch.dvals,
+                &self.ocols32,
+                &scratch.ovals,
+                w,
+            );
+        }
+    }
+}
+
+/// Alg. 7: symbolic phase.
+pub fn symbolic(
+    comm: &Comm,
+    a: &DistCsr,
+    p: &DistCsr,
+    pr: &PrMat,
+    scratch: &mut RowScratch,
+    stats: &mut PtapStats,
+    tracker: &MemTracker,
+) -> (AaoState, COutput) {
+    let v = RowView::new(a, p, pr);
+    let cbeg = v.cbeg;
+    let cend = v.cend;
+    let nloc = a.local_nrows();
+
+    // First loop (lines 5–13): remote contributions C_s^H += P_o(I,:) ⊗ R.
+    let mut cs = RemoteStageSym::new(p.garray.len());
+    for i_fine in 0..nloc {
+        let ocols = p.offd.row_cols(i_fine);
+        if ocols.is_empty() {
+            continue;
+        }
+        scratch.symbolic_row(v, i_fine);
+        scratch.rd.collect_sorted(&mut scratch.dcols);
+        scratch.ro.collect_sorted(&mut scratch.ocols);
+        for &t in ocols {
+            let set = cs.row_mut(t as usize);
+            for &c in &scratch.dcols {
+                set.insert((c + cbeg) as u32);
+            }
+            for &c in &scratch.ocols {
+                set.insert(c as u32);
+            }
+        }
+    }
+    tracker.alloc(Cat::Hash, cs.bytes());
+    // Line 14: send C_s^H to its owners.
+    let sends = cs.serialize(&p.garray, &p.col_layout, comm.size());
+    let send_bytes: u64 = sends.iter().map(|(_, b)| b.len() as u64).sum();
+    tracker.alloc(Cat::Comm, send_bytes);
+    let recvd = exchange_tracked(comm, sends, &mut stats.sym_msgs, &mut stats.sym_bytes);
+    tracker.free(Cat::Hash, cs.bytes());
+    drop(cs);
+    let recv_bytes: u64 = recvd.iter().map(|(_, b)| b.len() as u64).sum();
+    tracker.alloc(Cat::Comm, recv_bytes);
+
+    // Second loop (lines 16–25): local contributions C_l^H += P_d(I,:) ⊗ R.
+    let mut clh = LocalSymTables::new(p.diag.ncols);
+    for i_fine in 0..nloc {
+        let dcols = p.diag.row_cols(i_fine);
+        if dcols.is_empty() {
+            continue;
+        }
+        scratch.symbolic_row(v, i_fine);
+        scratch.rd.collect_sorted(&mut scratch.dcols);
+        scratch.ro.collect_sorted(&mut scratch.ocols);
+        for &i_coarse in dcols {
+            let (d, o) = clh.row_mut(i_coarse as usize);
+            for &c in &scratch.dcols {
+                d.insert(c as u32);
+            }
+            for &c in &scratch.ocols {
+                o.insert(c as u32);
+            }
+        }
+    }
+    // Lines 26–27: receive C_r^H and merge.
+    for (_src, payload) in &recvd {
+        for_each_sym_row(payload, |grow, cols| {
+            clh.insert_global((grow - cbeg) as usize, cols, cbeg, cend);
+        });
+    }
+    tracker.alloc(Cat::Hash, clh.bytes());
+    tracker.free(Cat::Comm, send_bytes + recv_bytes);
+    // Lines 29–36: counts, free tables, preallocate C.
+    let (nzd, nzo) = clh.counts();
+    tracker.free(Cat::Hash, clh.bytes());
+    drop(clh);
+    let c = COutput::prealloc(p.rank, p.col_layout.clone(), &nzd, &nzo);
+    tracker.alloc(Cat::MatC, c.bytes());
+    (AaoState::default(), c)
+}
+
+/// Alg. 8: numeric phase (re-runnable).
+pub fn numeric(
+    state: &mut AaoState,
+    comm: &Comm,
+    a: &DistCsr,
+    p: &DistCsr,
+    pr: &PrMat,
+    scratch: &mut RowScratch,
+    c: &mut COutput,
+    stats: &mut PtapStats,
+    tracker: &MemTracker,
+) {
+    let v = RowView::new(a, p, pr);
+    let cbeg = v.cbeg;
+    let nloc = a.local_nrows();
+    c.zero_values();
+
+    // First loop (lines 4–12): remote contributions C_s += P_o(I,:) ⊗ R.
+    let mut csm = RemoteStageNum::new(p.garray.len());
+    for i_fine in 0..nloc {
+        let (ocols, ovals) = p.offd.row(i_fine);
+        if ocols.is_empty() {
+            continue;
+        }
+        scratch.numeric_row(v, i_fine);
+        scratch.extract_numeric();
+        for (&t, &w) in ocols.iter().zip(ovals) {
+            let map = csm.row_mut(t as usize);
+            for (&cc, &vv) in scratch.dcols.iter().zip(&scratch.dvals) {
+                map.add(cc + cbeg, w * vv);
+            }
+            for (&cc, &vv) in scratch.ocols.iter().zip(&scratch.ovals) {
+                map.add(cc, w * vv);
+            }
+        }
+    }
+    tracker.alloc(Cat::Hash, csm.bytes());
+    // Line 13: send C_s.
+    let sends = csm.serialize(&p.garray, &p.col_layout, comm.size());
+    let send_bytes: u64 = sends.iter().map(|(_, b)| b.len() as u64).sum();
+    tracker.alloc(Cat::Comm, send_bytes);
+    let recvd = exchange_tracked(comm, sends, &mut stats.num_msgs, &mut stats.num_bytes);
+    tracker.free(Cat::Hash, csm.bytes());
+    drop(csm);
+    let recv_bytes: u64 = recvd.iter().map(|(_, b)| b.len() as u64).sum();
+    tracker.alloc(Cat::Comm, recv_bytes);
+
+    // Second loop (lines 15–23): local contributions straight into the
+    // preallocated C.
+    for i_fine in 0..nloc {
+        let (dcols, dvals) = p.diag.row(i_fine);
+        if dcols.is_empty() {
+            continue;
+        }
+        scratch.numeric_row(v, i_fine);
+        scratch.extract_numeric();
+        state.scatter_local(scratch, c, dcols, dvals);
+    }
+    // Lines 24–25: receive C_r, C_l += C_r.
+    for (_src, payload) in &recvd {
+        for_each_num_row(payload, |grow, cols, vals| {
+            c.add_global_row((grow - cbeg) as usize, cols, vals);
+        });
+    }
+    tracker.free(Cat::Comm, send_bytes + recv_bytes);
+    stats.num_calls += 1;
+}

@@ -1,0 +1,434 @@
+//! Shared machinery for the three triple-product algorithms: the
+//! preallocated output `C`, remote-contribution staging, and stats.
+
+use crate::dist::{Comm, DistCsr, Layout};
+use crate::hash::{IntMap, Set32};
+use crate::mat::PreallocCsr;
+use crate::util::bytebuf::{ByteReader, ByteWriter};
+
+/// Per-phase communication + time accounting for one rank.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PtapStats {
+    /// Busy CPU seconds in the symbolic phase (this rank).
+    pub time_sym: f64,
+    /// Busy CPU seconds accumulated over all numeric calls.
+    pub time_num: f64,
+    /// Number of numeric products performed.
+    pub num_calls: u32,
+    /// Messages/bytes sent during symbolic / numeric phases.
+    pub sym_msgs: u64,
+    pub sym_bytes: u64,
+    pub num_msgs: u64,
+    pub num_bytes: u64,
+}
+
+/// The α-β comm model can be disabled with `GPTAP_COMM_MODEL=off`
+/// (busy CPU time only) — DESIGN.md §7.
+pub fn comm_model_enabled() -> bool {
+    static ON: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *ON.get_or_init(|| std::env::var("GPTAP_COMM_MODEL").map_or(true, |v| v != "off"))
+}
+
+impl PtapStats {
+    /// Modeled symbolic time including the α-β communication model.
+    pub fn time_sym_modeled(&self) -> f64 {
+        if !comm_model_enabled() {
+            return self.time_sym;
+        }
+        self.time_sym
+            + self.sym_msgs as f64 * crate::dist::COMM_ALPHA_SECS
+            + self.sym_bytes as f64 * crate::dist::COMM_BETA_SECS_PER_BYTE
+    }
+
+    pub fn time_num_modeled(&self) -> f64 {
+        if !comm_model_enabled() {
+            return self.time_num;
+        }
+        self.time_num
+            + self.num_msgs as f64 * crate::dist::COMM_ALPHA_SECS
+            + self.num_bytes as f64 * crate::dist::COMM_BETA_SECS_PER_BYTE
+    }
+}
+
+/// The output matrix `C` under construction: exactly-preallocated diag
+/// (local coarse columns) and offd (global columns, compacted on finish).
+#[derive(Debug, Clone)]
+pub struct COutput {
+    pub rank: usize,
+    /// C's row layout == C's col layout == P's column layout.
+    pub layout: Layout,
+    pub diag: PreallocCsr,
+    pub offd: PreallocCsr,
+}
+
+impl COutput {
+    /// Preallocate from the symbolic phase's exact per-row counts.
+    pub fn prealloc(rank: usize, layout: Layout, nzd: &[u32], nzo: &[u32]) -> Self {
+        let local = layout.local_size(rank);
+        assert_eq!(nzd.len(), local);
+        let global = layout.global_size();
+        assert!(global < u32::MAX as usize);
+        COutput {
+            rank,
+            layout: layout.clone(),
+            diag: PreallocCsr::with_row_counts(local, nzd),
+            offd: PreallocCsr::with_row_counts(global, nzo),
+        }
+    }
+
+    pub fn col_begin(&self) -> u64 {
+        self.layout.start(self.rank) as u64
+    }
+
+    pub fn col_end(&self) -> u64 {
+        self.layout.end(self.rank) as u64
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.diag.bytes() + self.offd.bytes()
+    }
+
+    pub fn zero_values(&mut self) {
+        self.diag.zero_values();
+        self.offd.zero_values();
+    }
+
+    /// Add `w *` (sorted local diag cols, vals) and (sorted global offd
+    /// cols, vals) into local row `i`.
+    pub fn add_split_scaled(
+        &mut self,
+        i: usize,
+        dcols: &[u32],
+        dvals: &[f64],
+        ocols: &[u32],
+        ovals: &[f64],
+        w: f64,
+    ) {
+        if !dcols.is_empty() {
+            self.diag.add_row_scaled(i, dcols, dvals, w);
+        }
+        if !ocols.is_empty() {
+            self.offd.add_row_scaled(i, ocols, ovals, w);
+        }
+    }
+
+    /// Add a received remote contribution: `cols` are sorted *global* ids,
+    /// split into the contiguous diag range [cbeg, cend) and the offd
+    /// remainder on either side.
+    pub fn add_global_row(&mut self, i: usize, cols: &[u32], vals: &[f64]) {
+        let cbeg = self.col_begin() as u32;
+        let cend = self.col_end() as u32;
+        let lo = cols.partition_point(|&c| c < cbeg);
+        let hi = cols.partition_point(|&c| c < cend);
+        if lo > 0 {
+            self.offd.add_row(i, &cols[..lo], &vals[..lo]);
+        }
+        if hi > lo {
+            // diag chunk: shift to local ids
+            let local: Vec<u32> = cols[lo..hi].iter().map(|&c| c - cbeg).collect();
+            self.diag.add_row(i, &local, &vals[lo..hi]);
+        }
+        if hi < cols.len() {
+            self.offd.add_row(i, &cols[hi..], &vals[hi..]);
+        }
+    }
+
+    /// Compact into a [`DistCsr`] (clones the current values).
+    pub fn to_dist(&self) -> DistCsr {
+        let diag = self.diag.clone().finish();
+        let offd_global = self.offd.clone().finish();
+        // compact offd columns into garray
+        let mut garray: Vec<u64> = offd_global.cols.iter().map(|&c| c as u64).collect();
+        garray.sort_unstable();
+        garray.dedup();
+        let mut offd = offd_global.clone();
+        offd.ncols = garray.len();
+        for c in offd.cols.iter_mut() {
+            *c = garray.binary_search(&(*c as u64)).unwrap() as u32;
+        }
+        DistCsr {
+            rank: self.rank,
+            row_layout: self.layout.clone(),
+            col_layout: self.layout.clone(),
+            diag,
+            offd,
+            garray,
+        }
+    }
+}
+
+/// Staging for contributions to *remote* rows of C, keyed by P's offd
+/// compacted column (P.garray position).  The symbolic side stages column
+/// sets (`C_s^H`), the numeric side value maps (`C_s`).
+#[derive(Debug, Default)]
+pub struct RemoteStageSym {
+    /// One set of global C columns per P.garray position (lazy).
+    pub rows: Vec<Option<Set32>>,
+}
+
+impl RemoteStageSym {
+    pub fn new(n: usize) -> Self {
+        RemoteStageSym { rows: (0..n).map(|_| None).collect() }
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, t: usize) -> &mut Set32 {
+        self.rows[t].get_or_insert_with(Set32::default)
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.rows.iter().flatten().map(|s| s.bytes()).sum::<u64>()
+            + (self.rows.len() * std::mem::size_of::<Option<Set32>>()) as u64
+    }
+
+    /// Serialize per-owner messages: [grow u64, n u32, cols u64...]*.
+    /// Columns are sent sorted (receivers add split chunks).
+    pub fn serialize(&self, garray: &[u64], layout: &Layout, np: usize) -> Vec<(usize, Vec<u8>)> {
+        let mut writers: Vec<Option<ByteWriter>> = (0..np).map(|_| None).collect();
+        let mut buf: Vec<u64> = Vec::new();
+        for (t, row) in self.rows.iter().enumerate() {
+            let Some(set) = row else { continue };
+            if set.is_empty() {
+                continue;
+            }
+            let grow = garray[t];
+            let owner = layout.owner(grow as usize);
+            let w = writers[owner].get_or_insert_with(ByteWriter::new);
+            set.collect_sorted_u64(&mut buf);
+            w.u64(grow);
+            w.u32(buf.len() as u32);
+            w.u64_slice(&buf);
+        }
+        writers
+            .into_iter()
+            .enumerate()
+            .filter_map(|(dest, w)| w.map(|w| (dest, w.into_bytes())))
+            .collect()
+    }
+}
+
+/// Numeric staging: value maps per P.garray position.
+#[derive(Debug, Default)]
+pub struct RemoteStageNum {
+    pub rows: Vec<Option<IntMap>>,
+}
+
+impl RemoteStageNum {
+    pub fn new(n: usize) -> Self {
+        RemoteStageNum { rows: (0..n).map(|_| None).collect() }
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, t: usize) -> &mut IntMap {
+        self.rows[t].get_or_insert_with(IntMap::default)
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.rows.iter().flatten().map(|m| m.bytes()).sum::<u64>()
+            + (self.rows.len() * std::mem::size_of::<Option<IntMap>>()) as u64
+    }
+
+    /// Serialize per-owner messages: [grow u64, n u32, cols u64..., vals
+    /// f64...]*, columns sorted.
+    pub fn serialize(&mut self, garray: &[u64], layout: &Layout, np: usize) -> Vec<(usize, Vec<u8>)> {
+        let mut writers: Vec<Option<ByteWriter>> = (0..np).map(|_| None).collect();
+        let mut kbuf: Vec<u64> = Vec::new();
+        let mut vbuf: Vec<f64> = Vec::new();
+        for (t, row) in self.rows.iter_mut().enumerate() {
+            let Some(map) = row else { continue };
+            if map.is_empty() {
+                continue;
+            }
+            let grow = garray[t];
+            let owner = layout.owner(grow as usize);
+            let w = writers[owner].get_or_insert_with(ByteWriter::new);
+            map.collect_sorted(&mut kbuf, &mut vbuf);
+            w.u64(grow);
+            w.u32(kbuf.len() as u32);
+            w.u64_slice(&kbuf);
+            w.f64_slice(&vbuf);
+        }
+        writers
+            .into_iter()
+            .enumerate()
+            .filter_map(|(dest, w)| w.map(|w| (dest, w.into_bytes())))
+            .collect()
+    }
+}
+
+/// Exchange staged messages and record stats.  Returns received payloads.
+pub fn exchange_tracked(
+    comm: &Comm,
+    sends: Vec<(usize, Vec<u8>)>,
+    msgs: &mut u64,
+    bytes: &mut u64,
+) -> Vec<(usize, Vec<u8>)> {
+    *msgs += sends.len() as u64;
+    *bytes += sends.iter().map(|(_, p)| p.len() as u64).sum::<u64>();
+    comm.exchange(sends)
+}
+
+/// Iterate a received symbolic payload: (global row, sorted global cols).
+pub fn for_each_sym_row(payload: &[u8], mut f: impl FnMut(u64, &[u64])) {
+    let mut r = ByteReader::new(payload);
+    let mut cols: Vec<u64> = Vec::new();
+    while !r.done() {
+        let grow = r.u64();
+        let n = r.u32() as usize;
+        cols.clear();
+        for _ in 0..n {
+            cols.push(r.u64());
+        }
+        f(grow, &cols);
+    }
+}
+
+/// Iterate a received numeric payload: (global row, sorted global cols,
+/// values).
+pub fn for_each_num_row(payload: &[u8], mut f: impl FnMut(u64, &[u32], &[f64])) {
+    let mut r = ByteReader::new(payload);
+    let mut cols: Vec<u32> = Vec::new();
+    let mut vals: Vec<f64> = Vec::new();
+    while !r.done() {
+        let grow = r.u64();
+        let n = r.u32() as usize;
+        cols.clear();
+        vals.clear();
+        for _ in 0..n {
+            cols.push(r.u64() as u32);
+        }
+        for _ in 0..n {
+            vals.push(r.f64());
+        }
+        f(grow, &cols, &vals);
+    }
+}
+
+/// Per-local-row symbolic tables for the local part of C (`C_l^H`): one
+/// diag set (local cols) + one offd set (global cols) per row, lazily
+/// created (paper Alg. 7 line 15).
+#[derive(Debug, Default)]
+pub struct LocalSymTables {
+    pub rows: Vec<Option<(Set32, Set32)>>,
+}
+
+impl LocalSymTables {
+    pub fn new(nrows: usize) -> Self {
+        LocalSymTables { rows: (0..nrows).map(|_| None).collect() }
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut (Set32, Set32) {
+        self.rows[i].get_or_insert_with(|| (Set32::default(), Set32::default()))
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.rows
+            .iter()
+            .flatten()
+            .map(|(d, o)| d.bytes() + o.bytes())
+            .sum::<u64>()
+            + (self.rows.len() * std::mem::size_of::<Option<(Set32, Set32)>>()) as u64
+    }
+
+    /// Final per-row counts (nzd, nzo).
+    pub fn counts(&self) -> (Vec<u32>, Vec<u32>) {
+        let nzd = self
+            .rows
+            .iter()
+            .map(|r| r.as_ref().map_or(0, |(d, _)| d.len() as u32))
+            .collect();
+        let nzo = self
+            .rows
+            .iter()
+            .map(|r| r.as_ref().map_or(0, |(_, o)| o.len() as u32))
+            .collect();
+        (nzd, nzo)
+    }
+
+    /// Insert a sorted global-column row, classifying diag/offd.
+    pub fn insert_global(&mut self, i: usize, cols: &[u64], cbeg: u64, cend: u64) {
+        let (d, o) = self.row_mut(i);
+        for &c in cols {
+            if c >= cbeg && c < cend {
+                d.insert((c - cbeg) as u32);
+            } else {
+                o.insert(c as u32);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coutput_prealloc_and_fill() {
+        let layout = Layout::new_equal(8, 2);
+        // rank 0 owns rows/cols 0..4
+        let mut c = COutput::prealloc(0, layout, &[2, 1, 0, 1], &[1, 0, 0, 0]);
+        c.add_split_scaled(0, &[0, 2], &[1.0, 2.0], &[6], &[0.5], 2.0);
+        c.add_split_scaled(1, &[3], &[1.0], &[], &[], 1.0);
+        c.add_split_scaled(3, &[1], &[4.0], &[], &[], 1.0);
+        let d = c.to_dist();
+        d.validate().unwrap();
+        assert_eq!(d.diag.row(0).1, &[2.0, 4.0]);
+        assert_eq!(d.garray, vec![6]);
+        assert_eq!(d.offd.row(0).1, &[1.0]);
+    }
+
+    #[test]
+    fn add_global_row_splits_ranges() {
+        let layout = Layout::new_equal(9, 3);
+        // rank 1 owns cols 3..6
+        let mut c = COutput::prealloc(1, layout, &[2, 0, 0], &[2, 0, 0]);
+        // sorted global cols straddling the local range
+        c.add_global_row(0, &[1, 3, 5, 8], &[1.0, 3.0, 5.0, 8.0]);
+        let d = c.to_dist();
+        assert_eq!(d.diag.row(0).1, &[3.0, 5.0]);
+        assert_eq!(d.garray, vec![1, 8]);
+        assert_eq!(d.offd.row(0).1, &[1.0, 8.0]);
+    }
+
+    #[test]
+    fn local_sym_tables_count() {
+        let mut t = LocalSymTables::new(3);
+        t.insert_global(0, &[2, 5, 7], 2, 6);
+        t.insert_global(0, &[2, 9], 2, 6);
+        let (nzd, nzo) = t.counts();
+        assert_eq!(nzd, vec![2, 0, 0]); // cols 2,5 local
+        assert_eq!(nzo, vec![2, 0, 0]); // cols 7,9 remote
+    }
+
+    #[test]
+    fn sym_stage_serializes_sorted() {
+        let layout = Layout::new_equal(10, 2);
+        let garray = vec![7u64, 9u64];
+        let mut st = RemoteStageSym::new(2);
+        st.row_mut(0).insert(4);
+        st.row_mut(0).insert(1);
+        st.row_mut(1).insert(2);
+        let msgs = st.serialize(&garray, &layout, 2);
+        assert_eq!(msgs.len(), 1);
+        assert_eq!(msgs[0].0, 1); // rows 7 and 9 owned by rank 1
+        let mut seen = Vec::new();
+        for_each_sym_row(&msgs[0].1, |grow, cols| seen.push((grow, cols.to_vec())));
+        assert_eq!(seen, vec![(7, vec![1, 4]), (9, vec![2])]);
+    }
+
+    #[test]
+    fn num_stage_round_trip() {
+        let layout = Layout::new_equal(4, 2);
+        let garray = vec![3u64];
+        let mut st = RemoteStageNum::new(1);
+        st.row_mut(0).add(2, 1.5);
+        st.row_mut(0).add(0, -1.0);
+        st.row_mut(0).add(2, 0.5);
+        let msgs = st.serialize(&garray, &layout, 2);
+        assert_eq!(msgs.len(), 1);
+        let mut seen = Vec::new();
+        for_each_num_row(&msgs[0].1, |g, c, v| seen.push((g, c.to_vec(), v.to_vec())));
+        assert_eq!(seen, vec![(3, vec![0, 2], vec![-1.0, 2.0])]);
+    }
+}

@@ -1,0 +1,147 @@
+//! The merged all-at-once triple product (paper Alg. 9–10): identical to
+//! all-at-once except the remote and local outer-product loops are fused,
+//! so the row `R = (AP)(I,:)` is computed ONCE per fine row instead of
+//! twice.  The trade-off: sends are staged until the single loop ends, so
+//! there is less communication/compute overlap — "if the communication in
+//! the first loop is expensive, we may prefer the all-at-once" (paper §3).
+
+use crate::dist::{Comm, DistCsr, PrMat};
+use crate::mem::{Cat, MemTracker};
+use crate::spgemm::{RowScratch, RowView};
+
+use super::all_at_once::AaoState;
+use super::common::{
+    exchange_tracked, for_each_num_row, for_each_sym_row, COutput, LocalSymTables, PtapStats,
+    RemoteStageNum, RemoteStageSym,
+};
+
+/// Alg. 9: symbolic phase (single fused loop).
+pub fn symbolic(
+    comm: &Comm,
+    a: &DistCsr,
+    p: &DistCsr,
+    pr: &PrMat,
+    scratch: &mut RowScratch,
+    stats: &mut PtapStats,
+    tracker: &MemTracker,
+) -> (AaoState, COutput) {
+    let v = RowView::new(a, p, pr);
+    let cbeg = v.cbeg;
+    let cend = v.cend;
+    let nloc = a.local_nrows();
+
+    let mut cs = RemoteStageSym::new(p.garray.len());
+    let mut clh = LocalSymTables::new(p.diag.ncols);
+    // Lines 6–15: one pass; R computed once, scattered to both stages.
+    for i_fine in 0..nloc {
+        let ocols = p.offd.row_cols(i_fine);
+        let dcols = p.diag.row_cols(i_fine);
+        if ocols.is_empty() && dcols.is_empty() {
+            continue;
+        }
+        scratch.symbolic_row(v, i_fine);
+        scratch.rd.collect_sorted(&mut scratch.dcols);
+        scratch.ro.collect_sorted(&mut scratch.ocols);
+        for &t in ocols {
+            let set = cs.row_mut(t as usize);
+            for &c in &scratch.dcols {
+                set.insert((c + cbeg) as u32);
+            }
+            for &c in &scratch.ocols {
+                set.insert(c as u32);
+            }
+        }
+        for &i_coarse in dcols {
+            let (d, o) = clh.row_mut(i_coarse as usize);
+            for &c in &scratch.dcols {
+                d.insert(c as u32);
+            }
+            for &c in &scratch.ocols {
+                o.insert(c as u32);
+            }
+        }
+    }
+    tracker.alloc(Cat::Hash, cs.bytes());
+    // Lines 16–19: send, receive, merge.
+    let sends = cs.serialize(&p.garray, &p.col_layout, comm.size());
+    let send_bytes: u64 = sends.iter().map(|(_, b)| b.len() as u64).sum();
+    tracker.alloc(Cat::Comm, send_bytes);
+    let recvd = exchange_tracked(comm, sends, &mut stats.sym_msgs, &mut stats.sym_bytes);
+    tracker.free(Cat::Hash, cs.bytes());
+    drop(cs);
+    let recv_bytes: u64 = recvd.iter().map(|(_, b)| b.len() as u64).sum();
+    tracker.alloc(Cat::Comm, recv_bytes);
+    for (_src, payload) in &recvd {
+        for_each_sym_row(payload, |grow, cols| {
+            clh.insert_global((grow - cbeg) as usize, cols, cbeg, cend);
+        });
+    }
+    tracker.alloc(Cat::Hash, clh.bytes());
+    tracker.free(Cat::Comm, send_bytes + recv_bytes);
+    // Lines 20–27: counts, free, preallocate.
+    let (nzd, nzo) = clh.counts();
+    tracker.free(Cat::Hash, clh.bytes());
+    drop(clh);
+    let c = COutput::prealloc(p.rank, p.col_layout.clone(), &nzd, &nzo);
+    tracker.alloc(Cat::MatC, c.bytes());
+    (AaoState::default(), c)
+}
+
+/// Alg. 10: numeric phase (single fused loop, re-runnable).
+pub fn numeric(
+    state: &mut AaoState,
+    comm: &Comm,
+    a: &DistCsr,
+    p: &DistCsr,
+    pr: &PrMat,
+    scratch: &mut RowScratch,
+    c: &mut COutput,
+    stats: &mut PtapStats,
+    tracker: &MemTracker,
+) {
+    let v = RowView::new(a, p, pr);
+    let cbeg = v.cbeg;
+    let nloc = a.local_nrows();
+    c.zero_values();
+
+    let mut csm = RemoteStageNum::new(p.garray.len());
+    // Lines 4–13: fused loop.
+    for i_fine in 0..nloc {
+        let (ocols, ovals) = p.offd.row(i_fine);
+        let (dcols, dvals) = p.diag.row(i_fine);
+        if ocols.is_empty() && dcols.is_empty() {
+            continue;
+        }
+        scratch.numeric_row(v, i_fine);
+        scratch.extract_numeric();
+        for (&t, &w) in ocols.iter().zip(ovals) {
+            let map = csm.row_mut(t as usize);
+            for (&cc, &vv) in scratch.dcols.iter().zip(&scratch.dvals) {
+                map.add(cc + cbeg, w * vv);
+            }
+            for (&cc, &vv) in scratch.ocols.iter().zip(&scratch.ovals) {
+                map.add(cc, w * vv);
+            }
+        }
+        if !dcols.is_empty() {
+            state.scatter_local(scratch, c, dcols, dvals);
+        }
+    }
+    tracker.alloc(Cat::Hash, csm.bytes());
+    // Lines 14–16: send, receive, merge.
+    let sends = csm.serialize(&p.garray, &p.col_layout, comm.size());
+    let send_bytes: u64 = sends.iter().map(|(_, b)| b.len() as u64).sum();
+    tracker.alloc(Cat::Comm, send_bytes);
+    let recvd = exchange_tracked(comm, sends, &mut stats.num_msgs, &mut stats.num_bytes);
+    tracker.free(Cat::Hash, csm.bytes());
+    drop(csm);
+    let recv_bytes: u64 = recvd.iter().map(|(_, b)| b.len() as u64).sum();
+    tracker.alloc(Cat::Comm, recv_bytes);
+    for (_src, payload) in &recvd {
+        for_each_num_row(payload, |grow, cols, vals| {
+            c.add_global_row((grow - cbeg) as usize, cols, vals);
+        });
+    }
+    tracker.free(Cat::Comm, send_bytes + recv_bytes);
+    stats.num_calls += 1;
+}

@@ -1,0 +1,191 @@
+//! General triple product `C = R·A·P` with an explicit restriction `R`
+//! (PETSc `MatMatMatMult` / `MatRARt` analog).
+//!
+//! The paper's all-at-once algorithms exploit `R = Pᵀ`; this module serves
+//! the *general* case the paper's introduction cites (Schur-complement
+//! style products, non-Galerkin restriction).  Implementation: the
+//! row-wise SpGEMM twice — `C̃ = A·P` materialized per-rank, converted to
+//! a distributed matrix, then `C = R·C̃` with a second remote-row gather
+//! driven by `R`'s off-diagonal columns.
+
+use crate::dist::{Comm, DistCsr, DistCsrBuilder, RowGatherPlan};
+use crate::mem::{Cat, MemTracker};
+use crate::spgemm::{ApProduct, RowScratch, RowView, StampedAccumulator};
+
+/// Compute `C = R·A·P` (collective).
+///
+/// Layout requirements: `R.col_layout == A.row_layout`,
+/// `A.col_layout == P.row_layout`.  The result is distributed over
+/// `R.row_layout × P.col_layout`.
+pub fn rap(
+    comm: &Comm,
+    r: &DistCsr,
+    a: &DistCsr,
+    p: &DistCsr,
+    tracker: &MemTracker,
+) -> DistCsr {
+    assert_eq!(r.col_layout, a.row_layout, "R cols must match A rows");
+    assert_eq!(a.col_layout, p.row_layout, "A cols must match P rows");
+
+    // --- C̃ = A·P (row-wise, materialized) ---------------------------
+    let plan = RowGatherPlan::build(comm, &p.row_layout, &a.garray);
+    let pr = plan.gather_csr(comm, p);
+    tracker.alloc(Cat::Comm, plan.bytes() + pr.bytes());
+    let v = RowView::new(a, p, &pr);
+    let mut scratch = RowScratch::default();
+    let mut acc = StampedAccumulator::new(p.global_ncols());
+    let mut ap = ApProduct::symbolic(v, &mut scratch);
+    ap.numeric(v, &mut acc);
+    tracker.alloc(Cat::Aux, ap.bytes() + acc.bytes());
+    tracker.free(Cat::Comm, plan.bytes() + pr.bytes());
+    drop((plan, pr));
+
+    // convert C̃ to a distributed matrix over A.rows × P.cols
+    let mut tb = DistCsrBuilder::new(comm.rank(), a.row_layout.clone(), p.col_layout.clone());
+    let mut entries: Vec<(u64, f64)> = Vec::new();
+    for i in 0..a.local_nrows() {
+        let (cols, vals) = ap.mat.row(i);
+        entries.clear();
+        entries.extend(cols.iter().zip(vals).map(|(&c, &v)| (c as u64, v)));
+        tb.push_row(&entries);
+    }
+    let ctilde = tb.finish();
+    tracker.alloc(Cat::Aux, ctilde.bytes());
+    let ap_bytes = ap.bytes() + acc.bytes();
+    drop(ap);
+
+    // --- C = R·C̃ (row-wise over local R rows) -----------------------
+    let plan2 = RowGatherPlan::build(comm, &ctilde.row_layout, &r.garray);
+    let cr = plan2.gather_csr(comm, &ctilde);
+    tracker.alloc(Cat::Comm, plan2.bytes() + cr.bytes());
+    let v2 = RowView::new(r, &ctilde, &cr);
+    let mut acc2 = StampedAccumulator::new(p.global_ncols());
+    let mut ob = DistCsrBuilder::new(comm.rank(), r.row_layout.clone(), p.col_layout.clone());
+    let mut cols32: Vec<u32> = Vec::new();
+    let mut vals: Vec<f64> = Vec::new();
+    let cbeg2 = v2.cbeg as u32;
+    for i in 0..r.local_nrows() {
+        // accumulate Σ_k R(i,k) C̃(k,:) densely (global columns)
+        {
+            let (rc, rv) = r.diag.row(i);
+            for (&k, &rval) in rc.iter().zip(rv) {
+                let k = k as usize;
+                let (tc, tv) = ctilde.diag.row(k);
+                for (&j, &tval) in tc.iter().zip(tv) {
+                    acc2.add(cbeg2 + j, rval * tval);
+                }
+                let (oc, ov) = ctilde.offd.row(k);
+                for (&j, &tval) in oc.iter().zip(ov) {
+                    acc2.add(ctilde.garray[j as usize] as u32, rval * tval);
+                }
+            }
+            let (rc, rv) = r.offd.row(i);
+            for (&k, &rval) in rc.iter().zip(rv) {
+                let (gc, gv) = cr.row(k as usize);
+                for (&gj, &tval) in gc.iter().zip(gv) {
+                    acc2.add(gj as u32, rval * tval);
+                }
+            }
+        }
+        acc2.extract_sorted(&mut cols32, &mut vals);
+        let entries: Vec<(u64, f64)> =
+            cols32.iter().zip(&vals).map(|(&c, &v)| (c as u64, v)).collect();
+        ob.push_row(&entries);
+    }
+    tracker.free(Cat::Comm, plan2.bytes() + cr.bytes());
+    tracker.free(Cat::Aux, ap_bytes + ctilde.bytes());
+    let c = ob.finish();
+    tracker.alloc(Cat::MatC, c.bytes());
+    tracker.free(Cat::MatC, c.bytes()); // caller owns the charge
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{transpose_dist, World};
+    use crate::gen::{random_dist_csr, Grid3, ModelProblem};
+    use crate::ptap::{ptap_once, Algo};
+
+    /// R = Pᵀ (built by the general distributed transpose) must make
+    /// rap() agree with the all-at-once PtAP.
+    #[test]
+    fn rap_with_transposed_p_equals_ptap() {
+        for np in [1, 3] {
+            let world = World::new(np);
+            world.run(|comm| {
+                let mp = ModelProblem::build(Grid3::cube(4), comm.rank(), comm.size());
+                let tracker = MemTracker::new();
+                let rt = transpose_dist(&comm, &mp.p);
+                rt.validate().unwrap();
+                let c_rap = rap(&comm, &rt, &mp.a, &mp.p, &tracker);
+                c_rap.validate().unwrap();
+                let (c_ptap, _) = ptap_once(Algo::AllAtOnce, &comm, &mp.a, &mp.p, &tracker);
+                let g1 = c_rap.gather_global(&comm);
+                let g2 = c_ptap.gather_global(&comm);
+                let diff = g1.max_abs_diff(&g2);
+                assert!(diff < 1e-10, "rap vs ptap diff {diff}");
+            });
+        }
+    }
+
+    /// Random rectangular R (not Pᵀ): compare against the sequential
+    /// reference R·(A·P).
+    #[test]
+    fn general_rap_matches_sequential() {
+        let world = World::new(2);
+        world.run(|comm| {
+            let n = 30;
+            let m = 10;
+            let k = 8; // R rows
+            let a = random_dist_csr(comm.rank(), comm.size(), n, n, 4, 1);
+            let p = random_dist_csr(comm.rank(), comm.size(), n, m, 2, 2);
+            // R: k x n
+            let r = random_dist_csr(comm.rank(), comm.size(), k, n, 5, 3);
+            let tracker = MemTracker::new();
+            let c = rap(&comm, &r, &a, &p, &tracker);
+            let got = c.gather_global(&comm);
+            // sequential reference
+            let (rg, ag, pg) =
+                (r.gather_global(&comm), a.gather_global(&comm), p.gather_global(&comm));
+            let seq_mm = |x: &crate::mat::Csr, y: &crate::mat::Csr| {
+                let mut b = crate::mat::CsrBuilder::new(y.ncols);
+                let mut accm: std::collections::BTreeMap<u32, f64> = Default::default();
+                for i in 0..x.nrows {
+                    accm.clear();
+                    let (xc, xv) = x.row(i);
+                    for (&kk, &xval) in xc.iter().zip(xv) {
+                        let (yc, yv) = y.row(kk as usize);
+                        for (&j, &yval) in yc.iter().zip(yv) {
+                            *accm.entry(j).or_insert(0.0) += xval * yval;
+                        }
+                    }
+                    let cols: Vec<u32> = accm.keys().copied().collect();
+                    let vals: Vec<f64> = accm.values().copied().collect();
+                    b.push_row(&cols, &vals);
+                }
+                b.finish()
+            };
+            let want = seq_mm(&rg, &seq_mm(&ag, &pg));
+            let diff = got.max_abs_diff(&want);
+            assert!(diff < 1e-10, "diff {diff}");
+        });
+    }
+
+    #[test]
+    fn transpose_dist_round_trips() {
+        let world = World::new(3);
+        world.run(|comm| {
+            let p = random_dist_csr(comm.rank(), comm.size(), 25, 9, 3, 7);
+            let t = transpose_dist(&comm, &p);
+            t.validate().unwrap();
+            let tt = transpose_dist(&comm, &t);
+            let g1 = p.gather_global(&comm);
+            let g2 = tt.gather_global(&comm);
+            assert_eq!(g1, g2);
+            // and the transpose itself matches the sequential transpose
+            let gt = t.gather_global(&comm);
+            assert_eq!(gt, g1.transpose());
+        });
+    }
+}

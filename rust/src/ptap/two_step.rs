@@ -1,0 +1,251 @@
+//! The traditional two-step triple product (paper Alg. 5–6):
+//! `C̃ = A·P` (row-wise, materialized), then `C = Pᵀ·C̃` via explicit
+//! local transpose of `P` and an owner-send of the off-rank rows.
+//!
+//! This is the memory-hungry baseline: `C̃` and `Pᵀ` are retained across
+//! numeric re-products (PETSc keeps them in the `MatPtAP` context for
+//! MAT_REUSE_MATRIX), which is exactly the overhead the all-at-once
+//! algorithms eliminate.
+
+use crate::dist::{Comm, DistCsr, PrMat};
+use crate::mat::Csr;
+use crate::mem::{Cat, MemTracker};
+use crate::spgemm::{ApProduct, RowScratch, RowView, StampedAccumulator};
+use crate::util::bytebuf::ByteWriter;
+
+use super::common::{
+    exchange_tracked, for_each_num_row, for_each_sym_row, COutput, LocalSymTables, PtapStats,
+    RemoteStageSym,
+};
+
+/// Retained two-step state: the auxiliary matrices the paper charges.
+#[derive(Debug)]
+pub struct TwoStepState {
+    /// C̃ = A·P with global columns (pattern fixed by symbolic).
+    pub ap: ApProduct,
+    /// Explicit transpose of P's diag block (rows = local coarse cols).
+    pub ptd: Csr,
+    /// Explicit transpose of P's offd block (rows = P.garray positions).
+    pub pto: Csr,
+    /// Dense stamped accumulator (PETSc `apa`): shared by the C̃ numeric
+    /// fill and the second product's row accumulation — the two-step
+    /// method's hash-free numeric path, retained in the context (and
+    /// charged as part of its memory footprint).
+    acc: StampedAccumulator,
+    cbuf32: Vec<u32>,
+    vbuf: Vec<f64>,
+}
+
+/// Alg. 5: symbolic phase.  Returns the retained state and preallocated C.
+pub fn symbolic(
+    comm: &Comm,
+    a: &DistCsr,
+    p: &DistCsr,
+    pr: &PrMat,
+    scratch: &mut RowScratch,
+    stats: &mut PtapStats,
+    tracker: &MemTracker,
+) -> (TwoStepState, COutput) {
+    let v = RowView::new(a, p, pr);
+    // Line 2: C̃ = Alg.2(A_l, P_l) — symbolic with materialized pattern.
+    let ap = ApProduct::symbolic(v, scratch);
+    tracker.alloc(Cat::Aux, ap.bytes());
+    // Line 3: explicit transpose of P_l (symbolic would be structure-only;
+    // we build the full transpose once and refresh values each numeric
+    // pass, which charges the same retained bytes).
+    let ptd = p.diag.transpose();
+    let pto = p.offd.transpose();
+    tracker.alloc(Cat::Aux, ptd.bytes() + pto.bytes());
+
+    // Line 4: symbolically compute C_s = P_oᵀ C̃ (rows -> remote owners).
+    let mut cs = RemoteStageSym::new(p.garray.len());
+    for t in 0..pto.nrows {
+        if pto.row_len(t) == 0 {
+            continue;
+        }
+        let set = cs.row_mut(t);
+        for &iu in pto.row_cols(t) {
+            for &c in ap.mat.row(iu as usize).0 {
+                set.insert(c);
+            }
+        }
+    }
+    tracker.alloc(Cat::Hash, cs.bytes());
+    // Line 5: send C_s to its owners.
+    let sends = cs.serialize(&p.garray, &p.col_layout, comm.size());
+    let send_bytes: u64 = sends.iter().map(|(_, b)| b.len() as u64).sum();
+    tracker.alloc(Cat::Comm, send_bytes);
+    let recvd = exchange_tracked(comm, sends, &mut stats.sym_msgs, &mut stats.sym_bytes);
+    tracker.free(Cat::Hash, cs.bytes());
+    drop(cs);
+    let recv_bytes: u64 = recvd.iter().map(|(_, b)| b.len() as u64).sum();
+    tracker.alloc(Cat::Comm, recv_bytes);
+
+    // Line 6: symbolically compute C_l = P_dᵀ C̃.
+    let cbeg = v.cbeg;
+    let cend = v.cend;
+    let mut clh = LocalSymTables::new(ptd.nrows);
+    for i in 0..ptd.nrows {
+        if ptd.row_len(i) == 0 {
+            continue;
+        }
+        for &iu in ptd.row_cols(i) {
+            let cols = ap.mat.row(iu as usize).0;
+            let (d, o) = clh.row_mut(i);
+            for &c in cols {
+                let c = c as u64;
+                if c >= cbeg && c < cend {
+                    d.insert((c - cbeg) as u32);
+                } else {
+                    o.insert(c as u32);
+                }
+            }
+        }
+    }
+    // Lines 7–8: receive C_r and merge.
+    for (_src, payload) in &recvd {
+        for_each_sym_row(payload, |grow, cols| {
+            clh.insert_global((grow - cbeg) as usize, cols, cbeg, cend);
+        });
+    }
+    tracker.alloc(Cat::Hash, clh.bytes());
+    tracker.free(Cat::Comm, send_bytes + recv_bytes);
+    let (nzd, nzo) = clh.counts();
+    tracker.free(Cat::Hash, clh.bytes());
+    drop(clh);
+    let c = COutput::prealloc(p.rank, p.col_layout.clone(), &nzd, &nzo);
+    tracker.alloc(Cat::MatC, c.bytes());
+    let acc = StampedAccumulator::new(p.global_ncols());
+    tracker.alloc(Cat::Aux, acc.bytes());
+    (TwoStepState { ap, ptd, pto, acc, cbuf32: Vec::new(), vbuf: Vec::new() }, c)
+}
+
+/// Alg. 6: numeric phase (re-runnable; values of A/P may have changed).
+pub fn numeric(
+    state: &mut TwoStepState,
+    comm: &Comm,
+    a: &DistCsr,
+    p: &DistCsr,
+    pr: &PrMat,
+    _scratch: &mut RowScratch,
+    c: &mut COutput,
+    stats: &mut PtapStats,
+    tracker: &MemTracker,
+) {
+    let v = RowView::new(a, p, pr);
+    // Line 2: numeric C̃ (pattern reused; dense stamped accumulation).
+    state.ap.numeric(v, &mut state.acc);
+    // Line 3: numeric transpose of P_l (values refresh).
+    refresh_transpose_values(&p.diag, &mut state.ptd);
+    refresh_transpose_values(&p.offd, &mut state.pto);
+    c.zero_values();
+
+    // Line 4: numeric C_s = P_oᵀ C̃ — per remote target row, accumulate
+    // densely and serialize straight into the per-owner send buffer
+    // (garray ascending => owners ascending).
+    let np = comm.size();
+    let mut writers: Vec<Option<ByteWriter>> = (0..np).map(|_| None).collect();
+    for t in 0..state.pto.nrows {
+        if state.pto.row_len(t) == 0 {
+            continue;
+        }
+        let (icols, ivals) = state.pto.row(t);
+        for (&iu, &w) in icols.iter().zip(ivals) {
+            let (cols, vals) = state.ap.mat.row(iu as usize);
+            for (&cc, &vv) in cols.iter().zip(vals) {
+                state.acc.add(cc, w * vv);
+            }
+        }
+        state.acc.extract_sorted(&mut state.cbuf32, &mut state.vbuf);
+        let grow = p.garray[t];
+        let owner = p.col_layout.owner(grow as usize);
+        let wtr = writers[owner].get_or_insert_with(ByteWriter::new);
+        wtr.u64(grow);
+        wtr.u32(state.cbuf32.len() as u32);
+        for &cc in &state.cbuf32 {
+            wtr.u64(cc as u64);
+        }
+        wtr.f64_slice(&state.vbuf);
+    }
+    // Line 5: send.
+    let sends: Vec<(usize, Vec<u8>)> = writers
+        .into_iter()
+        .enumerate()
+        .filter_map(|(d, w)| w.map(|w| (d, w.into_bytes())))
+        .collect();
+    let send_bytes: u64 = sends.iter().map(|(_, b)| b.len() as u64).sum();
+    tracker.alloc(Cat::Comm, send_bytes);
+    let recvd = exchange_tracked(comm, sends, &mut stats.num_msgs, &mut stats.num_bytes);
+    let recv_bytes: u64 = recvd.iter().map(|(_, b)| b.len() as u64).sum();
+    tracker.alloc(Cat::Comm, recv_bytes);
+
+    // Line 6: numeric C_l = P_dᵀ C̃ — accumulate one output row at a time.
+    for i in 0..state.ptd.nrows {
+        if state.ptd.row_len(i) == 0 {
+            continue;
+        }
+        let (icols, ivals) = state.ptd.row(i);
+        for (&iu, &w) in icols.iter().zip(ivals) {
+            let (cols, vals) = state.ap.mat.row(iu as usize);
+            for (&cc, &vv) in cols.iter().zip(vals) {
+                state.acc.add(cc, w * vv);
+            }
+        }
+        state.acc.extract_sorted(&mut state.cbuf32, &mut state.vbuf);
+        c.add_global_row(i, &state.cbuf32, &state.vbuf);
+    }
+    // Lines 7–8: receive C_r, C_l += C_r.
+    let cbeg = v.cbeg;
+    for (_src, payload) in &recvd {
+        for_each_num_row(payload, |grow, cols, vals| {
+            c.add_global_row((grow - cbeg) as usize, cols, vals);
+        });
+    }
+    tracker.free(Cat::Comm, send_bytes + recv_bytes);
+    stats.num_calls += 1;
+}
+
+/// Refresh the values of a previously built transpose without touching its
+/// structure (the "numeric transpose" of Alg. 6 line 3).
+fn refresh_transpose_values(orig: &Csr, t: &mut Csr) {
+    debug_assert_eq!(t.nrows, orig.ncols);
+    let mut cursor: Vec<u32> = t.rowptr[..t.nrows].to_vec();
+    for i in 0..orig.nrows {
+        let (cols, vals) = orig.row(i);
+        for (&c, &v) in cols.iter().zip(vals) {
+            let p = cursor[c as usize] as usize;
+            debug_assert_eq!(t.cols[p] as usize, i);
+            t.vals[p] = v;
+            cursor[c as usize] += 1;
+        }
+    }
+}
+
+/// Retained auxiliary bytes (C̃ + Pᵀ + dense accumulator) — what the
+/// paper charges the two-step method for.
+pub fn retained_aux_bytes(state: &TwoStepState) -> u64 {
+    state.ap.bytes() + state.ptd.bytes() + state.pto.bytes() + state.acc.bytes()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mat::CsrBuilder;
+
+    #[test]
+    fn transpose_value_refresh_matches_rebuild() {
+        let mut b = CsrBuilder::new(4);
+        b.push_row(&[0, 2], &[1.0, 2.0]);
+        b.push_row(&[1, 3], &[3.0, 4.0]);
+        b.push_row(&[0, 1], &[5.0, 6.0]);
+        let mut m = b.finish();
+        let mut t = m.transpose();
+        // change values, refresh
+        for v in m.vals.iter_mut() {
+            *v *= 10.0;
+        }
+        refresh_transpose_values(&m, &mut t);
+        let want = m.transpose();
+        assert_eq!(t, want);
+    }
+}

@@ -1,0 +1,199 @@
+//! Batching layer between the block numeric phase and the compiled
+//! kernel: collects elementary triple products `plᵀ·a·pr` into fixed-shape
+//! chunks, pads the tail with zero blocks (zero in → zero out, harmless
+//! for accumulation), executes, and hands each result block back with its
+//! caller-supplied tag.
+
+use crate::mat::dense::block_triple_product_add;
+
+use super::pjrt::KernelRuntime;
+
+/// Which engine evaluates the batched triple products.
+#[derive(Clone, Copy)]
+pub enum BlockBackend<'rt> {
+    /// Pure-rust scalar loop (f64) — fallback and correctness oracle.
+    Native,
+    /// Compiled Pallas kernel through PJRT (f32 on the wire).
+    Pjrt(&'rt KernelRuntime),
+}
+
+impl<'rt> BlockBackend<'rt> {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BlockBackend::Native => "native",
+            BlockBackend::Pjrt(_) => "pjrt",
+        }
+    }
+}
+
+/// Accumulates (pl, a, pr, tag) quadruples and flushes them through the
+/// backend in compiled-batch-size chunks.
+pub struct TripleBatcher<'rt> {
+    backend: BlockBackend<'rt>,
+    b: usize,
+    /// chunk capacity (the artifact's compiled batch, or a native tile)
+    cap: usize,
+    pl: Vec<f32>,
+    a: Vec<f32>,
+    pr: Vec<f32>,
+    // f64 copies for the native path (no precision loss)
+    pl64: Vec<f64>,
+    a64: Vec<f64>,
+    pr64: Vec<f64>,
+    tags: Vec<u64>,
+    /// Count of kernel invocations (perf accounting).
+    pub flushes: u64,
+    /// Total triples pushed.
+    pub triples: u64,
+}
+
+impl<'rt> TripleBatcher<'rt> {
+    pub fn new(backend: BlockBackend<'rt>, b: usize) -> Self {
+        let cap = match backend {
+            BlockBackend::Native => 256,
+            BlockBackend::Pjrt(rt) => rt
+                .batch_of("block_ptap", b)
+                .expect("no block_ptap artifact for this block size"),
+        };
+        let s = cap * b * b;
+        TripleBatcher {
+            backend,
+            b,
+            cap,
+            pl: Vec::with_capacity(s),
+            a: Vec::with_capacity(s),
+            pr: Vec::with_capacity(s),
+            pl64: Vec::with_capacity(s),
+            a64: Vec::with_capacity(s),
+            pr64: Vec::with_capacity(s),
+            tags: Vec::with_capacity(cap),
+            flushes: 0,
+            triples: 0,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.b
+    }
+
+    pub fn bytes(&self) -> u64 {
+        ((self.pl.capacity() + self.a.capacity() + self.pr.capacity()) * 4
+            + (self.pl64.capacity() + self.a64.capacity() + self.pr64.capacity()) * 8
+            + self.tags.capacity() * 8) as u64
+    }
+
+    /// Queue one triple product; flushes into `sink(tag, block)` when the
+    /// chunk fills.  `sink` receives the `b*b` result block to accumulate.
+    pub fn push<F: FnMut(u64, &[f64]) + ?Sized>(
+        &mut self,
+        pl: &[f64],
+        a: &[f64],
+        pr: &[f64],
+        tag: u64,
+        sink: &mut F,
+    ) {
+        debug_assert_eq!(a.len(), self.b * self.b);
+        match self.backend {
+            BlockBackend::Native => {
+                self.pl64.extend_from_slice(pl);
+                self.a64.extend_from_slice(a);
+                self.pr64.extend_from_slice(pr);
+            }
+            BlockBackend::Pjrt(_) => {
+                self.pl.extend(pl.iter().map(|&v| v as f32));
+                self.a.extend(a.iter().map(|&v| v as f32));
+                self.pr.extend(pr.iter().map(|&v| v as f32));
+            }
+        }
+        self.tags.push(tag);
+        self.triples += 1;
+        if self.tags.len() == self.cap {
+            self.flush(sink);
+        }
+    }
+
+    /// Evaluate everything queued (padding the tail) and drain results.
+    pub fn flush<F: FnMut(u64, &[f64]) + ?Sized>(&mut self, sink: &mut F) {
+        if self.tags.is_empty() {
+            return;
+        }
+        let bb = self.b * self.b;
+        let n = self.tags.len();
+        self.flushes += 1;
+        match self.backend {
+            BlockBackend::Native => {
+                let mut out = vec![0.0f64; bb];
+                for k in 0..n {
+                    out.fill(0.0);
+                    block_triple_product_add(
+                        self.b,
+                        &self.pl64[k * bb..(k + 1) * bb],
+                        &self.a64[k * bb..(k + 1) * bb],
+                        &self.pr64[k * bb..(k + 1) * bb],
+                        &mut out,
+                    );
+                    sink(self.tags[k], &out);
+                }
+                self.pl64.clear();
+                self.a64.clear();
+                self.pr64.clear();
+            }
+            BlockBackend::Pjrt(rt) => {
+                // zero-pad to the compiled batch
+                let full = self.cap * bb;
+                self.pl.resize(full, 0.0);
+                self.a.resize(full, 0.0);
+                self.pr.resize(full, 0.0);
+                let res = rt
+                    .run_block_ptap(self.b, &self.pl, &self.a, &self.pr)
+                    .expect("kernel execution failed");
+                let mut out = vec![0.0f64; bb];
+                for k in 0..n {
+                    for (o, &v) in out.iter_mut().zip(&res[k * bb..(k + 1) * bb]) {
+                        *o = v as f64;
+                    }
+                    sink(self.tags[k], &out);
+                }
+                self.pl.clear();
+                self.a.clear();
+                self.pr.clear();
+            }
+        }
+        self.tags.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn native_batcher_matches_direct_product() {
+        let b = 3;
+        let mut rng = Rng::new(5);
+        let mut batcher = TripleBatcher::new(BlockBackend::Native, b);
+        let mk = |rng: &mut Rng| (0..b * b).map(|_| rng.normal()).collect::<Vec<f64>>();
+        let mut results: Vec<(u64, Vec<f64>)> = Vec::new();
+        let mut want: Vec<Vec<f64>> = Vec::new();
+        for tag in 0..700u64 {
+            let (pl, a, pr) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+            let mut w = vec![0.0; b * b];
+            block_triple_product_add(b, &pl, &a, &pr, &mut w);
+            want.push(w);
+            let mut sink = |t: u64, blk: &[f64]| results.push((t, blk.to_vec()));
+            batcher.push(&pl, &a, &pr, tag, &mut sink);
+        }
+        let mut sink = |t: u64, blk: &[f64]| results.push((t, blk.to_vec()));
+        batcher.flush(&mut sink);
+        assert_eq!(results.len(), 700);
+        assert_eq!(batcher.triples, 700);
+        assert!(batcher.flushes >= 2, "multi-chunk path must be exercised");
+        for (tag, blk) in &results {
+            let w = &want[*tag as usize];
+            for (x, y) in blk.iter().zip(w) {
+                assert!((x - y).abs() < 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT-compiled HLO text artifacts produced by
+//! `python/compile/aot.py` and serves them to the Layer-3 hot path.
+//!
+//! Python is build-time only: after `make artifacts` the rust binary is
+//! self-contained — this module parses HLO **text** (the 64-bit-id-safe
+//! interchange, see DESIGN.md / aot recipe), compiles it once on the PJRT
+//! CPU client, and executes batched block kernels from the numeric phase.
+
+mod batcher;
+mod pjrt;
+
+pub use batcher::{BlockBackend, TripleBatcher};
+pub use pjrt::{KernelRuntime, Manifest, ManifestEntry};
+
+/// Default artifact directory relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";

@@ -1,0 +1,7 @@
+//! Sparse matrix–matrix multiplication kernels (paper Section 2).
+
+mod accumulator;
+mod rowwise;
+
+pub use accumulator::StampedAccumulator;
+pub use rowwise::{ApProduct, RowScratch, RowView};

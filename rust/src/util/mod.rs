@@ -1,0 +1,56 @@
+//! Small self-contained utilities (no external crates are available offline
+//! beyond the xla closure, so PRNG, byte codec, timers and table printing
+//! are implemented here).
+
+pub mod bytebuf;
+pub mod plot;
+pub mod prng;
+pub mod table;
+pub mod timer;
+
+/// Format a byte count the way the paper reports memory: whole megabytes
+/// ("M") with one decimal below 10 M.
+pub fn fmt_mb(bytes: u64) -> String {
+    let mb = bytes as f64 / (1024.0 * 1024.0);
+    if mb >= 10.0 {
+        format!("{:.0}", mb)
+    } else {
+        format!("{:.1}", mb)
+    }
+}
+
+/// Bytes -> MiB as f64 (for table math).
+pub fn mb(bytes: u64) -> f64 {
+    bytes as f64 / (1024.0 * 1024.0)
+}
+
+/// Format seconds like the paper's time columns (two significant-ish digits).
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{:.0}", s)
+    } else if s >= 1.0 {
+        format!("{:.1}", s)
+    } else if s >= 0.001 {
+        format!("{:.1}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_mb_rounds() {
+        assert_eq!(fmt_mb(554 * 1024 * 1024), "554");
+        assert_eq!(fmt_mb(3 * 1024 * 1024 + 200 * 1024), "3.2");
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(63.0), "63.0");
+        assert_eq!(fmt_secs(218.0), "218");
+        assert_eq!(fmt_secs(0.0064), "6.4ms");
+    }
+}

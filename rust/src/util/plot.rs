@@ -1,0 +1,118 @@
+//! Minimal ASCII line plots for the paper's figure series (no plotting
+//! libraries offline).  Benches render Figs 1/3/7/9-style speedup and
+//! efficiency curves into the terminal and results/*.txt.
+
+/// One named series of (x, y) points.
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Render series as a fixed-size ASCII chart with axes and a legend.
+/// Distinct markers per series; the ideal-scaling guide can be added as
+/// its own series.
+pub fn ascii_plot(title: &str, xlabel: &str, ylabel: &str, series: &[Series]) -> String {
+    const W: usize = 56;
+    const H: usize = 18;
+    const MARKS: [char; 6] = ['o', '+', 'x', '*', '#', '@'];
+    let all: Vec<(f64, f64)> = series.iter().flat_map(|s| s.points.iter().copied()).collect();
+    if all.is_empty() {
+        return format!("{title}\n(no data)\n");
+    }
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &all {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+        ymin = ymin.min(y);
+        ymax = ymax.max(y);
+    }
+    if (xmax - xmin).abs() < 1e-300 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-300 {
+        ymax = ymin + 1.0;
+    }
+    // pad y a little
+    let ypad = 0.05 * (ymax - ymin);
+    ymin -= ypad;
+    ymax += ypad;
+    let mut grid = vec![vec![' '; W]; H];
+    for (si, s) in series.iter().enumerate() {
+        let mark = MARKS[si % MARKS.len()];
+        // draw line segments by sampling
+        for w in s.points.windows(2) {
+            let (x0, y0) = w[0];
+            let (x1, y1) = w[1];
+            let steps = 2 * W;
+            for k in 0..=steps {
+                let t = k as f64 / steps as f64;
+                let x = x0 + t * (x1 - x0);
+                let y = y0 + t * (y1 - y0);
+                let cx = ((x - xmin) / (xmax - xmin) * (W - 1) as f64).round() as usize;
+                let cy = ((y - ymin) / (ymax - ymin) * (H - 1) as f64).round() as usize;
+                let row = H - 1 - cy.min(H - 1);
+                let col = cx.min(W - 1);
+                if grid[row][col] == ' ' || grid[row][col] == '.' {
+                    grid[row][col] = '.';
+                }
+            }
+        }
+        for &(x, y) in &s.points {
+            let cx = ((x - xmin) / (xmax - xmin) * (W - 1) as f64).round() as usize;
+            let cy = ((y - ymin) / (ymax - ymin) * (H - 1) as f64).round() as usize;
+            grid[H - 1 - cy.min(H - 1)][cx.min(W - 1)] = mark;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("{title}\n"));
+    for (r, row) in grid.iter().enumerate() {
+        let yv = ymax - (ymax - ymin) * r as f64 / (H - 1) as f64;
+        let label = if r % 4 == 0 { format!("{yv:8.2} |") } else { "         |".to_string() };
+        out.push_str(&label);
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str("         +");
+    out.push_str(&"-".repeat(W));
+    out.push('\n');
+    out.push_str(&format!(
+        "          {:<10}{:^36}{:>10}\n",
+        format!("{xmin:.0}"),
+        xlabel,
+        format!("{xmax:.0}")
+    ));
+    out.push_str(&format!("  y: {ylabel}   legend: "));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("{}={} ", MARKS[si % MARKS.len()], s.name));
+    }
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plots_contain_markers_and_legend() {
+        let s = vec![
+            Series { name: "aao".into(), points: vec![(2.0, 1.0), (4.0, 1.9), (8.0, 3.6)] },
+            Series { name: "ideal".into(), points: vec![(2.0, 1.0), (8.0, 4.0)] },
+        ];
+        let out = ascii_plot("speedup", "ranks", "speedup", &s);
+        assert!(out.contains('o'));
+        assert!(out.contains('+'));
+        assert!(out.contains("o=aao"));
+        assert!(out.lines().count() > 15);
+    }
+
+    #[test]
+    fn degenerate_inputs_do_not_panic() {
+        let out = ascii_plot("t", "x", "y", &[]);
+        assert!(out.contains("no data"));
+        let one = vec![Series { name: "p".into(), points: vec![(1.0, 1.0)] }];
+        let out = ascii_plot("t", "x", "y", &one);
+        assert!(out.contains('o'));
+    }
+}

@@ -1,0 +1,101 @@
+//! Timers.  The key instrument is [`thread_cpu_time`]: per-thread CPU time
+//! via `CLOCK_THREAD_CPUTIME_ID`.  Rank threads are scheduled onto however
+//! many host cores exist (one, here); blocking in barriers/mailboxes
+//! accrues no CPU time, so `max over ranks of busy CPU time` is the
+//! simulated parallel compute time (see DESIGN.md §7).
+
+use std::time::Instant;
+
+/// Seconds of CPU time consumed by the *calling thread*.
+pub fn thread_cpu_time() -> f64 {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    // Safety: plain syscall writing into a local out-param.
+    unsafe {
+        libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts);
+    }
+    ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+}
+
+/// Accumulating busy-time stopwatch over thread CPU time.
+#[derive(Default, Debug, Clone, Copy)]
+pub struct BusyTimer {
+    start: Option<f64>,
+    total: f64,
+}
+
+impl BusyTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn start(&mut self) {
+        debug_assert!(self.start.is_none(), "timer already running");
+        self.start = Some(thread_cpu_time());
+    }
+
+    pub fn stop(&mut self) {
+        let s = self.start.take().expect("timer not running");
+        self.total += thread_cpu_time() - s;
+    }
+
+    pub fn total(&self) -> f64 {
+        self.total
+    }
+}
+
+/// Wall-clock stopwatch (for end-to-end numbers where wall time is what a
+/// user experiences).
+pub struct WallTimer {
+    start: Instant,
+}
+
+impl WallTimer {
+    pub fn start() -> Self {
+        WallTimer { start: Instant::now() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_cpu_advances_under_work() {
+        let t0 = thread_cpu_time();
+        let mut acc = 0u64;
+        for i in 0..2_000_000u64 {
+            acc = acc.wrapping_add(i * i);
+        }
+        std::hint::black_box(acc);
+        assert!(thread_cpu_time() > t0);
+    }
+
+    #[test]
+    fn busy_timer_accumulates() {
+        let mut t = BusyTimer::new();
+        t.start();
+        let mut acc = 0u64;
+        for i in 0..1_000_000u64 {
+            acc = acc.wrapping_add(i);
+        }
+        std::hint::black_box(acc);
+        t.stop();
+        let first = t.total();
+        assert!(first >= 0.0);
+        t.start();
+        t.stop();
+        assert!(t.total() >= first);
+    }
+
+    #[test]
+    fn sleep_accrues_no_cpu_time() {
+        let t0 = thread_cpu_time();
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let dt = thread_cpu_time() - t0;
+        assert!(dt < 0.02, "sleep consumed {dt}s of CPU time");
+    }
+}

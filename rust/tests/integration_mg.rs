@@ -1,0 +1,263 @@
+//! Integration tests for the multigrid stack built on the triple products:
+//! hierarchy construction (geometric + algebraic), V-cycle solves, and the
+//! neutron-analog experiment plumbing.
+
+use galerkin_ptap::coordinator::{run_neutron, NeutronConfigExp};
+use galerkin_ptap::dist::{DistSpmv, DistVec, World};
+use galerkin_ptap::gen::{grid_laplacian, Grid3};
+use galerkin_ptap::mem::MemTracker;
+use galerkin_ptap::mg::{
+    build_hierarchy, geometric_chain, pcg, AggregateOpts, Coarsening, CycleType, Hierarchy,
+    HierarchyConfig, MgOpts, MgPreconditioner,
+};
+use galerkin_ptap::ptap::{Algo, ALL_ALGOS};
+
+fn build_geo(comm: &galerkin_ptap::dist::Comm, grids: &[Grid3], algo: Algo) -> Hierarchy {
+    let a0 = grid_laplacian(grids[0], comm.rank(), comm.size());
+    let tracker = MemTracker::new();
+    build_hierarchy(
+        comm,
+        a0,
+        &Coarsening::Geometric { grids: grids.to_vec() },
+        HierarchyConfig { algo, cache: false, numeric_repeats: 1 },
+        &tracker,
+    )
+}
+
+/// MG-PCG converges at mesh-independent-ish iteration counts for every
+/// triple-product algorithm and several rank counts.
+#[test]
+fn mg_pcg_converges_for_all_algos_and_ranks() {
+    for np in [1, 2, 4] {
+        for algo in ALL_ALGOS {
+            let world = World::new(np);
+            world.run(|comm| {
+                let grids = geometric_chain(Grid3::cube(4), 3);
+                let h = build_geo(&comm, &grids, algo);
+                let a = h.levels[0].a.clone();
+                let spmv = DistSpmv::new(&comm, &a);
+                let mut pc = MgPreconditioner::new(&comm, h, MgOpts::default());
+                let layout = a.row_layout.clone();
+                let b = DistVec::from_fn(layout.clone(), comm.rank(), |g| {
+                    ((g * 31 % 11) as f64) - 5.0
+                });
+                let mut x = DistVec::zeros(layout, comm.rank());
+                let res = pcg(&comm, &a, &spmv, &b, &mut x, Some(&mut pc), 1e-8, 40);
+                assert!(res.converged, "np={np} {}", algo.name());
+                assert!(
+                    res.iterations <= 16,
+                    "np={np} {}: {} iterations",
+                    algo.name(),
+                    res.iterations
+                );
+            });
+        }
+    }
+}
+
+/// Deeper grids should not blow up the iteration count (h-independence,
+/// the property Galerkin coarsening exists to provide).
+#[test]
+fn iteration_count_stays_bounded_with_depth() {
+    let world = World::new(2);
+    world.run(|comm| {
+        let mut iters = Vec::new();
+        for levels in [2usize, 3, 4] {
+            let grids = geometric_chain(Grid3::cube(3), levels);
+            let h = build_geo(&comm, &grids, Algo::AllAtOnce);
+            let a = h.levels[0].a.clone();
+            let spmv = DistSpmv::new(&comm, &a);
+            let mut pc = MgPreconditioner::new(&comm, h, MgOpts::default());
+            let layout = a.row_layout.clone();
+            let b = DistVec::from_fn(layout.clone(), comm.rank(), |_| 1.0);
+            let mut x = DistVec::zeros(layout, comm.rank());
+            let res = pcg(&comm, &a, &spmv, &b, &mut x, Some(&mut pc), 1e-8, 60);
+            assert!(res.converged, "levels={levels}");
+            iters.push(res.iterations);
+        }
+        // deepest grid (17^3) should still converge in O(10) iterations
+        assert!(*iters.last().unwrap() <= 20, "{iters:?}");
+    });
+}
+
+/// The algebraic (aggregation) hierarchy also supports the solver.
+#[test]
+fn amg_hierarchy_preconditions() {
+    let world = World::new(2);
+    world.run(|comm| {
+        let a0 = grid_laplacian(Grid3::cube(12), comm.rank(), comm.size());
+        let a = a0.clone();
+        let tracker = MemTracker::new();
+        let h = build_hierarchy(
+            &comm,
+            a0,
+            &Coarsening::Aggregation {
+                opts: AggregateOpts::default(),
+                min_rows: 20,
+                max_levels: 6,
+            },
+            HierarchyConfig::default(),
+            &tracker,
+        );
+        assert!(h.n_levels() >= 2);
+        let spmv = DistSpmv::new(&comm, &a);
+        let mut pc = MgPreconditioner::new(&comm, h, MgOpts::default());
+        let layout = a.row_layout.clone();
+        let b = DistVec::from_fn(layout.clone(), comm.rank(), |_| 1.0);
+        let mut x = DistVec::zeros(layout, comm.rank());
+        let res = pcg(&comm, &a, &spmv, &b, &mut x, Some(&mut pc), 1e-8, 60);
+        assert!(res.converged);
+        // must beat unpreconditioned CG on iteration count
+        let mut x2 = DistVec::zeros(a.row_layout.clone(), comm.rank());
+        let plain = pcg(&comm, &a, &spmv, &b, &mut x2, None, 1e-8, 200);
+        // on a 12³ grid plain CG needs noticeably more iterations
+        assert!(
+            res.iterations < plain.iterations,
+            "AMG {} vs plain {}",
+            res.iterations,
+            plain.iterations
+        );
+    });
+}
+
+/// Hierarchy statistics have the Table 5/6 shape: rows strictly decrease,
+/// interpolation dims chain, nnz positive everywhere.
+#[test]
+fn level_stats_shape() {
+    let r = run_neutron(NeutronConfigExp {
+        grid: Grid3::cube(6),
+        groups: 4,
+        np: 2,
+        algo: Algo::AllAtOnce,
+        cache: false,
+        max_levels: 12,
+        solve_iters: 3,
+    });
+    assert!(r.n_levels >= 3);
+    assert_eq!(r.op_stats.len(), r.n_levels);
+    assert_eq!(r.interp_stats.len(), r.n_levels - 1);
+    for w in r.op_stats.windows(2) {
+        assert!(w[1].rows < w[0].rows);
+        assert!(w[1].nnz > 0);
+    }
+    for (k, is) in r.interp_stats.iter().enumerate() {
+        assert_eq!(is.rows, r.op_stats[k].rows, "interp {k} rows");
+        assert_eq!(is.cols, r.op_stats[k + 1].rows, "interp {k} cols");
+    }
+}
+
+/// Cached vs non-cached hierarchy setup: caching must cost extra retained
+/// memory, and both must produce the same operators (Table 7 vs 8).
+#[test]
+fn caching_costs_memory_not_correctness() {
+    let mk = |cache: bool| {
+        run_neutron(NeutronConfigExp {
+            grid: Grid3::cube(6),
+            groups: 4,
+            np: 2,
+            algo: Algo::AllAtOnce,
+            cache,
+            max_levels: 8,
+            solve_iters: 3,
+        })
+    };
+    let free = mk(false);
+    let cached = mk(true);
+    assert!(cached.mem_product > free.mem_product, "caching must retain more");
+    assert_eq!(free.n_levels, cached.n_levels);
+    for (a, b) in free.op_stats.iter().zip(&cached.op_stats) {
+        assert_eq!(a.rows, b.rows);
+        assert_eq!(a.nnz, b.nnz);
+    }
+}
+
+/// W-cycles must converge at least as fast as V-cycles (per iteration).
+#[test]
+fn w_cycle_converges_no_slower_than_v() {
+    let world = World::new(2);
+    world.run(|comm| {
+        let grids = geometric_chain(Grid3::cube(3), 4);
+        let mut iters = Vec::new();
+        for cycle in [CycleType::V, CycleType::W] {
+            let h = build_geo(&comm, &grids, Algo::AllAtOnce);
+            let a = h.levels[0].a.clone();
+            let spmv = DistSpmv::new(&comm, &a);
+            let mut pc =
+                MgPreconditioner::new(&comm, h, MgOpts { cycle, ..Default::default() });
+            let layout = a.row_layout.clone();
+            let b = DistVec::from_fn(layout.clone(), comm.rank(), |g| (g as f64).sin());
+            let mut x = DistVec::zeros(layout, comm.rank());
+            let res = pcg(&comm, &a, &spmv, &b, &mut x, Some(&mut pc), 1e-8, 60);
+            assert!(res.converged, "{cycle:?}");
+            iters.push(res.iterations);
+        }
+        assert!(iters[1] <= iters[0], "W {} vs V {}", iters[1], iters[0]);
+    });
+}
+
+/// GMRES with the MG preconditioner solves the nonsymmetric neutron
+/// operator (the paper's actual solver configuration).
+#[test]
+fn mg_gmres_on_neutron_operator() {
+    use galerkin_ptap::gen::{neutron_block_operator, NeutronConfig};
+    use galerkin_ptap::mg::gmres;
+    let world = World::new(2);
+    world.run(|comm| {
+        let cfg = NeutronConfig { grid: Grid3::cube(5), groups: 4, seed: 17 };
+        let a = neutron_block_operator(cfg, comm.rank(), comm.size()).to_scalar();
+        let tracker = MemTracker::new();
+        let h = build_hierarchy(
+            &comm,
+            a.clone(),
+            &Coarsening::Aggregation {
+                opts: AggregateOpts { threshold: 0.25, smooth_omega: 0.0 },
+                min_rows: 30,
+                max_levels: 8,
+            },
+            HierarchyConfig::default(),
+            &tracker,
+        );
+        let spmv = DistSpmv::new(&comm, &a);
+        let mut pc = MgPreconditioner::new(&comm, h, MgOpts::default());
+        let layout = a.row_layout.clone();
+        let b = DistVec::from_fn(layout.clone(), comm.rank(), |_| 1.0);
+        let mut x = DistVec::zeros(layout, comm.rank());
+        let res = gmres(&comm, &a, &spmv, &b, &mut x, Some(&mut pc), 30, 1e-8, 100);
+        assert!(res.converged, "MG-GMRES stalled on the transport operator");
+    });
+}
+
+/// Every smoother kind supports the V-cycle; Chebyshev(2) should need no
+/// more outer iterations than point-Jacobi.
+#[test]
+fn all_smoothers_drive_mg() {
+    use galerkin_ptap::mg::SmootherKind;
+    let world = World::new(2);
+    world.run(|comm| {
+        let grids = geometric_chain(Grid3::cube(3), 3);
+        let mut iters = Vec::new();
+        for sm in [
+            SmootherKind::Jacobi,
+            SmootherKind::Chebyshev(2),
+            SmootherKind::HybridSor,
+        ] {
+            let h = build_geo(&comm, &grids, Algo::AllAtOnce);
+            let a = h.levels[0].a.clone();
+            let spmv = DistSpmv::new(&comm, &a);
+            let mut pc = MgPreconditioner::new(
+                &comm,
+                h,
+                MgOpts { smoother: sm, ..Default::default() },
+            );
+            let layout = a.row_layout.clone();
+            let b = DistVec::from_fn(layout.clone(), comm.rank(), |g| ((g % 13) as f64) - 6.0);
+            let mut x = DistVec::zeros(layout, comm.rank());
+            let res = pcg(&comm, &a, &spmv, &b, &mut x, Some(&mut pc), 1e-8, 40);
+            assert!(res.converged, "{sm:?}");
+            iters.push((sm, res.iterations));
+        }
+        let jac = iters[0].1;
+        let cheb = iters[1].1;
+        assert!(cheb <= jac, "chebyshev {cheb} vs jacobi {jac}");
+    });
+}

@@ -1,0 +1,241 @@
+//! Integration tests over the whole PtAP stack at paper-shaped scale:
+//! correctness across algorithms and rank counts, the memory-ratio claims,
+//! scaling behaviour, and the simulated Table-3 OOM row.
+
+use galerkin_ptap::dist::World;
+use galerkin_ptap::gen::{Grid3, ModelProblem};
+use galerkin_ptap::mem::MemTracker;
+use galerkin_ptap::ptap::{ptap_once, seq_ptap_reference, Algo, Ptap, ALL_ALGOS};
+
+/// All algorithms × rank counts produce the sequential reference on the
+/// model problem.
+#[test]
+fn model_problem_all_algos_match_reference() {
+    let coarse = Grid3::cube(5);
+    let mut reference: Option<galerkin_ptap::mat::Csr> = None;
+    for np in [1, 2, 3, 4] {
+        for algo in ALL_ALGOS {
+            let world = World::new(np);
+            let got = world
+                .run(|comm| {
+                    let mp = ModelProblem::build(coarse, comm.rank(), comm.size());
+                    let tracker = MemTracker::new();
+                    let (c, _) = ptap_once(algo, &comm, &mp.a, &mp.p, &tracker);
+                    let cg = c.gather_global(&comm);
+                    let (ag, pg) = (mp.a.gather_global(&comm), mp.p.gather_global(&comm));
+                    (cg, ag, pg)
+                })
+                .remove(0);
+            let want = reference.get_or_insert_with(|| seq_ptap_reference(&got.1, &got.2));
+            let diff = got.0.max_abs_diff(want);
+            assert!(diff < 1e-10, "np={np} {}: diff {diff}", algo.name());
+        }
+    }
+}
+
+/// Galerkin invariant: PᵀAP of a symmetric A is symmetric.
+#[test]
+fn coarse_operator_is_symmetric() {
+    let world = World::new(3);
+    world.run(|comm| {
+        let mp = ModelProblem::build(Grid3::cube(6), comm.rank(), comm.size());
+        let tracker = MemTracker::new();
+        let (c, _) = ptap_once(Algo::AllAtOnce, &comm, &mp.a, &mp.p, &tracker);
+        let g = c.gather_global(&comm);
+        assert!(g.max_abs_diff(&g.transpose()) < 1e-11);
+    });
+}
+
+/// The paper's memory claim at integration scale: two-step needs several
+/// times the all-at-once product memory, and the gap does NOT shrink with
+/// more ranks (Tables 1–4).
+#[test]
+fn memory_ratio_matches_paper_shape() {
+    let coarse = Grid3::cube(16);
+    let mut ratios = Vec::new();
+    for np in [2, 4] {
+        let world = World::new(np);
+        let peaks = world.run(|comm| {
+            let mp = ModelProblem::build(coarse, comm.rank(), comm.size());
+            let mut out = Vec::new();
+            for algo in [Algo::AllAtOnce, Algo::TwoStep] {
+                let tracker = MemTracker::new();
+                tracker.alloc(galerkin_ptap::mem::Cat::MatA, mp.a.bytes());
+                tracker.alloc(galerkin_ptap::mem::Cat::MatP, mp.p.bytes());
+                tracker.reset_peaks();
+                let mut op = Ptap::symbolic(algo, &comm, &mp.a, &mp.p, &tracker);
+                // the paper's protocol: repeated numeric products with the
+                // context retained
+                for _ in 0..3 {
+                    op.numeric(&comm, &mp.a, &mp.p);
+                }
+                out.push(tracker.peak_total() - mp.a.bytes() - mp.p.bytes());
+            }
+            out
+        });
+        let aao = peaks.iter().map(|p| p[0]).max().unwrap();
+        let two = peaks.iter().map(|p| p[1]).max().unwrap();
+        let ratio = two as f64 / aao as f64;
+        // the paper sees 8-10x at billion-scale; at this testbed scale the
+        // structural gap is ~3x and grows with problem size (next assert)
+        assert!(ratio > 2.5, "np={np}: ratio only {ratio:.2}");
+        ratios.push(ratio);
+    }
+    // ratio roughly stable across rank counts (structure-determined)
+    assert!((ratios[0] - ratios[1]).abs() < 0.5 * ratios[0]);
+}
+
+/// The two-step/all-at-once memory ratio grows with problem size toward
+/// the paper's asymptotic regime (C̃+Pᵀ dominate every fixed overhead).
+#[test]
+fn memory_ratio_grows_with_problem_size() {
+    let ratio_for = |m: usize| -> f64 {
+        let world = World::new(2);
+        let peaks = world.run(|comm| {
+            let mp = ModelProblem::build(Grid3::cube(m), comm.rank(), comm.size());
+            let mut out = Vec::new();
+            for algo in [Algo::AllAtOnce, Algo::TwoStep] {
+                let tracker = MemTracker::new();
+                let mut op = Ptap::symbolic(algo, &comm, &mp.a, &mp.p, &tracker);
+                op.numeric(&comm, &mp.a, &mp.p);
+                out.push(tracker.peak_total());
+            }
+            out
+        });
+        let aao = peaks.iter().map(|p| p[0]).max().unwrap();
+        let two = peaks.iter().map(|p| p[1]).max().unwrap();
+        two as f64 / aao as f64
+    };
+    let small = ratio_for(8);
+    let large = ratio_for(18);
+    assert!(large > small, "ratio must grow: {small:.2} -> {large:.2}");
+}
+
+/// Per-rank product memory shrinks as ranks are added (the paper's
+/// "perfectly scalable in the memory usage").
+#[test]
+fn memory_scales_down_with_ranks() {
+    let coarse = Grid3::cube(20);
+    let mut mems = Vec::new();
+    for np in [1, 2, 4] {
+        let world = World::new(np);
+        let peak = world
+            .run(|comm| {
+                let mp = ModelProblem::build(coarse, comm.rank(), comm.size());
+                let tracker = MemTracker::new();
+                let mut op = Ptap::symbolic(Algo::AllAtOnce, &comm, &mp.a, &mp.p, &tracker);
+                op.numeric(&comm, &mp.a, &mp.p);
+                tracker.peak_total()
+            })
+            .into_iter()
+            .max()
+            .unwrap();
+        mems.push(peak);
+    }
+    // doubling ranks should cut per-rank memory substantially (fixed
+    // per-rank overheads — scratch, plans — temper the ideal 2x)
+    assert!(mems[0] as f64 > 1.6 * mems[1] as f64, "{mems:?}");
+    assert!(mems[1] as f64 > 1.35 * mems[2] as f64, "{mems:?}");
+}
+
+/// The Table 3 "two-step could not run at np=8192" row, simulated with a
+/// per-rank memory budget: at the small rank count the two-step method
+/// exceeds a budget the all-at-once algorithm fits in; at a larger rank
+/// count both fit.
+#[test]
+fn two_step_exceeds_budget_where_all_at_once_fits() {
+    let coarse = Grid3::cube(12);
+    let run = |np: usize, algo: Algo| -> u64 {
+        let world = World::new(np);
+        world
+            .run(|comm| {
+                let mp = ModelProblem::build(coarse, comm.rank(), comm.size());
+                let tracker = MemTracker::new();
+                let mut op = Ptap::symbolic(algo, &comm, &mp.a, &mp.p, &tracker);
+                op.numeric(&comm, &mp.a, &mp.p);
+                tracker.peak_total() + mp.a.bytes() + mp.p.bytes()
+            })
+            .into_iter()
+            .max()
+            .unwrap()
+    };
+    let aao_small = run(2, Algo::AllAtOnce);
+    let two_small = run(2, Algo::TwoStep);
+    let two_large = run(8, Algo::TwoStep);
+    // pick the budget between: aao fits, two-step doesn't (at np=2)
+    let budget = (aao_small + two_small) / 2;
+    assert!(aao_small <= budget, "all-at-once must fit the node budget");
+    assert!(two_small > budget, "two-step must exceed it at low np");
+    assert!(two_large <= budget, "two-step must fit once ranks are added");
+}
+
+/// Numeric re-products must not change C (the 1 symbolic + 11 numeric
+/// protocol) and must not grow memory.
+#[test]
+fn repeated_numeric_is_stable() {
+    let world = World::new(4);
+    world.run(|comm| {
+        let mp = ModelProblem::build(Grid3::cube(6), comm.rank(), comm.size());
+        for algo in ALL_ALGOS {
+            let tracker = MemTracker::new();
+            let mut op = Ptap::symbolic(algo, &comm, &mp.a, &mp.p, &tracker);
+            op.numeric(&comm, &mp.a, &mp.p);
+            let c1 = op.extract_c().gather_global(&comm);
+            let peak1 = tracker.peak_total();
+            for _ in 0..10 {
+                op.numeric(&comm, &mp.a, &mp.p);
+            }
+            let c11 = op.extract_c().gather_global(&comm);
+            assert_eq!(c1, c11, "{}: numeric rerun changed C", algo.name());
+            let peak11 = tracker.peak_total();
+            assert!(
+                peak11 as f64 <= peak1 as f64 * 1.05,
+                "{}: memory grew across reruns {peak1} -> {peak11}",
+                algo.name()
+            );
+        }
+    });
+}
+
+/// Symbolic preallocation is exact: the numeric phase fills every slot.
+#[test]
+fn preallocation_is_exact_on_model_problem() {
+    let world = World::new(3);
+    world.run(|comm| {
+        let mp = ModelProblem::build(Grid3::cube(6), comm.rank(), comm.size());
+        for algo in ALL_ALGOS {
+            let tracker = MemTracker::new();
+            let mut op = Ptap::symbolic(algo, &comm, &mp.a, &mp.p, &tracker);
+            op.numeric(&comm, &mp.a, &mp.p);
+            let fill_d = op.c.diag.fill_ratio();
+            let fill_o = op.c.offd.fill_ratio();
+            assert!(
+                fill_d > 0.999,
+                "{}: diag fill {fill_d} (symbolic overcounted)",
+                algo.name()
+            );
+            // offd can legitimately be empty on a 1-rank run
+            if op.c.offd.capacity() > 0 {
+                assert!(fill_o > 0.999, "{}: offd fill {fill_o}", algo.name());
+            }
+        }
+    });
+}
+
+/// Non-cubic grids and rank counts that do not divide the rows.
+#[test]
+fn irregular_shapes_and_rank_counts() {
+    let coarse = Grid3 { nx: 4, ny: 3, nz: 5 };
+    for np in [3, 5, 7] {
+        let world = World::new(np);
+        let ok = world.run(|comm| {
+            let fine = coarse.refine();
+            let a = galerkin_ptap::gen::grid_laplacian(fine, comm.rank(), comm.size());
+            let p = galerkin_ptap::gen::trilinear_interp(coarse, comm.rank(), comm.size());
+            let tracker = MemTracker::new();
+            let (c, _) = ptap_once(Algo::Merged, &comm, &a, &p, &tracker);
+            c.validate().is_ok()
+        });
+        assert!(ok.iter().all(|&x| x), "np={np}");
+    }
+}

@@ -1,0 +1,222 @@
+//! Integration tests for the PJRT runtime: artifact loading, kernel
+//! execution vs the native f64 oracle, padding semantics, and the block
+//! triple product end to end on the compiled path.
+//!
+//! These tests require `make artifacts`; they are skipped (with a stderr
+//! note) when no artifact directory exists so `cargo test` stays green in
+//! a fresh checkout.
+
+use galerkin_ptap::dist::World;
+use galerkin_ptap::gen::{neutron_block_interp, neutron_block_operator, Grid3, NeutronConfig};
+use galerkin_ptap::mat::dense::block_triple_product_add;
+use galerkin_ptap::mem::MemTracker;
+use galerkin_ptap::ptap::block::block_ptap;
+use galerkin_ptap::runtime::{BlockBackend, KernelRuntime, TripleBatcher};
+use galerkin_ptap::util::prng::Rng;
+
+fn runtime_or_skip() -> Option<KernelRuntime> {
+    match KernelRuntime::load_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn artifacts_enumerate_expected_variants() {
+    let Some(rt) = runtime_or_skip() else { return };
+    for b in [4usize, 8, 16] {
+        assert!(rt.has("block_ptap", b), "missing block_ptap b={b}");
+        assert!(rt.has("block_spmv", b), "missing block_spmv b={b}");
+        assert_eq!(rt.batch_of("block_ptap", b), Some(256));
+    }
+}
+
+#[test]
+fn kernel_matches_f64_oracle_per_block() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(31337);
+    for &b in &[4usize, 8, 16] {
+        let n = rt.batch_of("block_ptap", b).unwrap();
+        let bb = b * b;
+        let mk = |rng: &mut Rng, len: usize| -> Vec<f64> {
+            (0..len).map(|_| rng.normal()).collect()
+        };
+        let pl = mk(&mut rng, n * bb);
+        let a = mk(&mut rng, n * bb);
+        let pr = mk(&mut rng, n * bb);
+        let to32 = |v: &[f64]| v.iter().map(|&x| x as f32).collect::<Vec<f32>>();
+        let got = rt
+            .run_block_ptap(b, &to32(&pl), &to32(&a), &to32(&pr))
+            .expect("kernel run");
+        for k in 0..n {
+            let mut want = vec![0.0f64; bb];
+            block_triple_product_add(
+                b,
+                &pl[k * bb..(k + 1) * bb],
+                &a[k * bb..(k + 1) * bb],
+                &pr[k * bb..(k + 1) * bb],
+                &mut want,
+            );
+            for (g, w) in got[k * bb..(k + 1) * bb].iter().zip(&want) {
+                // f32 kernel vs f64 oracle: b^2-term dot products
+                let tol = 1e-3 * (1.0 + w.abs());
+                assert!(
+                    ((*g as f64) - w).abs() < tol,
+                    "b={b} block {k}: {} vs {}",
+                    g,
+                    w
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn spmv_kernel_matches_oracle() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let b = 8usize;
+    let n = rt.batch_of("block_spmv", b).unwrap();
+    let mut rng = Rng::new(5);
+    let a: Vec<f32> = (0..n * b * b).map(|_| rng.normal() as f32).collect();
+    let x: Vec<f32> = (0..n * b).map(|_| rng.normal() as f32).collect();
+    let y = rt.run_block_spmv(b, &a, &x).unwrap();
+    for k in 0..n {
+        for i in 0..b {
+            let mut want = 0.0f64;
+            for j in 0..b {
+                want += a[k * b * b + i * b + j] as f64 * x[k * b + j] as f64;
+            }
+            assert!((y[k * b + i] as f64 - want).abs() < 1e-3 * (1.0 + want.abs()));
+        }
+    }
+}
+
+#[test]
+fn batcher_pjrt_path_handles_padding_and_multiple_chunks() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let b = 4usize;
+    let mut rng = Rng::new(9);
+    let mut batcher = TripleBatcher::new(BlockBackend::Pjrt(&rt), b);
+    let mk = |rng: &mut Rng| (0..b * b).map(|_| rng.normal()).collect::<Vec<f64>>();
+    let total = 300; // > one 256 chunk, tail forces padding
+    let mut inputs = Vec::new();
+    let mut results: Vec<Option<Vec<f64>>> = vec![None; total];
+    {
+        let mut sink = |tag: u64, blk: &[f64]| {
+            results[tag as usize] = Some(blk.to_vec());
+        };
+        for tag in 0..total {
+            let (pl, a, pr) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+            inputs.push((pl.clone(), a.clone(), pr.clone()));
+            batcher.push(&pl, &a, &pr, tag as u64, &mut sink);
+        }
+        batcher.flush(&mut sink);
+    }
+    assert_eq!(batcher.flushes, 2);
+    for (k, r) in results.iter().enumerate() {
+        let r = r.as_ref().expect("missing result");
+        let (pl, a, pr) = &inputs[k];
+        let mut want = vec![0.0f64; b * b];
+        block_triple_product_add(b, pl, a, pr, &mut want);
+        for (g, w) in r.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-3 * (1.0 + w.abs()), "block {k}");
+        }
+    }
+}
+
+#[test]
+fn block_ptap_pjrt_equals_native_distributed() {
+    let Some(_) = runtime_or_skip() else { return };
+    let dir = KernelRuntime::find_dir().unwrap();
+    let grid = Grid3::cube(5);
+    let groups = 4usize;
+    let world = World::new(3);
+    let dir_ref = &dir;
+    world.run(move |comm| {
+        let rt = KernelRuntime::load_filtered(dir_ref, |m| {
+            m.entry == "block_ptap" && m.block == groups
+        })
+        .unwrap();
+        let cfg = NeutronConfig { grid, groups, seed: 3 };
+        let a = neutron_block_operator(cfg, comm.rank(), comm.size());
+        let p = neutron_block_interp(grid, groups, comm.rank(), comm.size());
+        let tracker = MemTracker::new();
+        let native = block_ptap(&comm, &a, &p, BlockBackend::Native, &tracker);
+        let pjrt = block_ptap(&comm, &a, &p, BlockBackend::Pjrt(&rt), &tracker);
+        assert_eq!(native.triples, pjrt.triples);
+        let gn = native.c.to_scalar().gather_global(&comm);
+        let gp = pjrt.c.to_scalar().gather_global(&comm);
+        let diff = gn.max_abs_diff(&gp);
+        assert!(diff < 1e-3, "diff {diff}");
+    });
+}
+
+#[test]
+fn jacobi_kernel_matches_oracle_and_smooths() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let b = 8usize;
+    let n = rt.batch_of("block_spmv", b).unwrap();
+    let mut rng = Rng::new(12);
+    // SPD-ish diagonal blocks and their inverses
+    let mut dinv = vec![0.0f32; n * b * b];
+    let mut ablk = vec![0.0f64; n * b * b];
+    for k in 0..n {
+        let raw: Vec<f64> = (0..b * b).map(|_| rng.normal()).collect();
+        let mut spd = vec![0.0f64; b * b];
+        for i in 0..b {
+            for j in 0..b {
+                let mut acc = 0.0;
+                for l in 0..b {
+                    acc += raw[i * b + l] * raw[j * b + l];
+                }
+                spd[i * b + j] = acc + if i == j { 4.0 } else { 0.0 };
+            }
+        }
+        let inv = galerkin_ptap::mat::block_invert(b, &spd).unwrap();
+        for (t, &v) in inv.iter().enumerate() {
+            dinv[k * b * b + t] = v as f32;
+        }
+        ablk[k * b * b..(k + 1) * b * b].copy_from_slice(&spd);
+    }
+    let xstar: Vec<f64> = (0..n * b).map(|_| rng.normal()).collect();
+    // rhs = A xstar (block-diagonal system)
+    let mut rhs = vec![0.0f64; n * b];
+    for k in 0..n {
+        galerkin_ptap::mat::block_matvec_add(
+            b,
+            &ablk[k * b * b..(k + 1) * b * b],
+            &xstar[k * b..(k + 1) * b],
+            &mut rhs[k * b..(k + 1) * b],
+        );
+    }
+    // iterate x <- x + w dinv (rhs - A x) through the compiled kernel
+    let mut x = vec![0.0f32; n * b];
+    let omega = 0.9f32;
+    for _ in 0..30 {
+        let mut r = vec![0.0f64; n * b];
+        for k in 0..n {
+            let mut ax = vec![0.0f64; b];
+            galerkin_ptap::mat::block_matvec_add(
+                b,
+                &ablk[k * b * b..(k + 1) * b * b],
+                &x[k * b..(k + 1) * b].iter().map(|&v| v as f64).collect::<Vec<_>>(),
+                &mut ax,
+            );
+            for i in 0..b {
+                r[k * b + i] = rhs[k * b + i] - ax[i];
+            }
+        }
+        let r32: Vec<f32> = r.iter().map(|&v| v as f32).collect();
+        x = rt.run_block_jacobi(b, &dinv, &r32, &x, omega).unwrap();
+    }
+    // error must be tiny: with exact block inverses, omega-damped Jacobi
+    // on a block-diagonal system contracts geometrically
+    let mut err = 0.0f64;
+    for i in 0..n * b {
+        err = err.max((x[i] as f64 - xstar[i]).abs());
+    }
+    assert!(err < 1e-3, "block-Jacobi kernel failed to converge: err {err}");
+}

@@ -1,0 +1,137 @@
+//! Property tests for the triple-product algorithms: randomized matrices,
+//! partitions and rank counts; every algorithm must agree with the
+//! sequential reference and with each other, with exact preallocation and
+//! balanced memory accounting.
+
+use galerkin_ptap::dist::World;
+use galerkin_ptap::gen::random_dist_csr;
+use galerkin_ptap::mem::MemTracker;
+use galerkin_ptap::ptap::{ptap_once, seq_ptap_reference, Ptap, ALL_ALGOS};
+use galerkin_ptap::util::prng::Rng;
+
+/// 20 random (n, m, density, np) configurations × 3 algorithms.
+#[test]
+fn random_triple_products_match_reference() {
+    let mut rng = Rng::new(0xBEEF);
+    for case in 0..20 {
+        let n = 12 + rng.below(50);
+        let m = 3 + rng.below(25);
+        let nnz_a = 1 + rng.below(8);
+        let nnz_p = 1 + rng.below(4);
+        let np = 1 + rng.below(5);
+        let seed_a = rng.next_u64();
+        let seed_p = rng.next_u64();
+        let world = World::new(np);
+        let per_rank = world.run(|comm| {
+            let a = random_dist_csr(comm.rank(), comm.size(), n, n, nnz_a, seed_a);
+            let p = random_dist_csr(comm.rank(), comm.size(), n, m, nnz_p, seed_p);
+            let tracker = MemTracker::new();
+            let cs: Vec<_> = ALL_ALGOS
+                .iter()
+                .map(|&algo| ptap_once(algo, &comm, &a, &p, &tracker).0.gather_global(&comm))
+                .collect();
+            assert_eq!(tracker.current_total(), 0, "tracker must balance");
+            (cs, a.gather_global(&comm), p.gather_global(&comm))
+        });
+        let (cs, ag, pg) = &per_rank[0];
+        let want = seq_ptap_reference(ag, pg);
+        for (c, algo) in cs.iter().zip(ALL_ALGOS) {
+            let diff = c.max_abs_diff(&want);
+            assert!(
+                diff < 1e-9,
+                "case {case} np={np} {}: diff {diff}",
+                algo.name()
+            );
+        }
+    }
+}
+
+/// Values-change-pattern-stays: re-running numeric with modified values
+/// reproduces the triple product of the *new* values (MAT_REUSE protocol).
+#[test]
+fn numeric_follows_value_updates() {
+    let world = World::new(3);
+    world.run(|comm| {
+        let n = 40;
+        let a = random_dist_csr(comm.rank(), comm.size(), n, n, 5, 1000);
+        let p = random_dist_csr(comm.rank(), comm.size(), n, 10, 2, 2000);
+        for algo in ALL_ALGOS {
+            let tracker = MemTracker::new();
+            let mut op = Ptap::symbolic(algo, &comm, &a, &p, &tracker);
+            op.numeric(&comm, &a, &p);
+            // perturb A's values (same pattern), rerun numeric
+            let mut a2 = a.clone();
+            for v in a2.diag.vals.iter_mut().chain(a2.offd.vals.iter_mut()) {
+                *v = -*v * 3.0;
+            }
+            op.numeric(&comm, &a2, &p);
+            let got = op.extract_c().gather_global(&comm);
+            let want = seq_ptap_reference(&a2.gather_global(&comm), &p.gather_global(&comm));
+            let diff = got.max_abs_diff(&want);
+            assert!(diff < 1e-9, "{}: diff {diff}", algo.name());
+        }
+    });
+}
+
+/// Empty / degenerate inputs must not crash any algorithm.
+#[test]
+fn degenerate_inputs() {
+    for np in [1, 2, 3] {
+        let world = World::new(np);
+        world.run(|comm| {
+            // zero-size P columns (coarse space of 1)
+            let n = 9;
+            let a = random_dist_csr(comm.rank(), comm.size(), n, n, 3, 5);
+            let p = random_dist_csr(comm.rank(), comm.size(), n, 1, 1, 6);
+            let tracker = MemTracker::new();
+            for algo in ALL_ALGOS {
+                let (c, _) = ptap_once(algo, &comm, &a, &p, &tracker);
+                assert_eq!(c.global_nrows(), 1);
+                c.validate().unwrap();
+            }
+            // completely empty A
+            let layout = a.row_layout.clone();
+            let mut b = galerkin_ptap::dist::DistCsrBuilder::new(
+                comm.rank(),
+                layout.clone(),
+                layout,
+            );
+            for _ in a.row_layout.range(comm.rank()) {
+                b.push_row(&[]);
+            }
+            let empty = b.finish();
+            for algo in ALL_ALGOS {
+                let (c, _) = ptap_once(algo, &comm, &empty, &p, &tracker);
+                assert_eq!(c.nnz_global(&comm), 0, "{}", algo.name());
+            }
+        });
+    }
+}
+
+/// The product is independent of the rank count (bitwise pattern, values
+/// to round-off).
+#[test]
+fn rank_count_invariance() {
+    let run = |np: usize| {
+        let world = World::new(np);
+        world
+            .run(|comm| {
+                let a = random_dist_csr(comm.rank(), comm.size(), 45, 45, 6, 777);
+                let p = random_dist_csr(comm.rank(), comm.size(), 45, 15, 3, 888);
+                let tracker = MemTracker::new();
+                ptap_once(galerkin_ptap::ptap::Algo::Merged, &comm, &a, &p, &tracker)
+                    .0
+                    .gather_global(&comm)
+            })
+            .remove(0)
+    };
+    let c1 = run(1);
+    for np in [2, 4, 5] {
+        let c = run(np);
+        // same pattern
+        assert_eq!(c1.rowptr, c.rowptr, "np={np}");
+        assert_eq!(c1.cols, c.cols, "np={np}");
+        // values to accumulation round-off
+        assert!(c1.max_abs_diff(&c) < 1e-11, "np={np}");
+    }
+}

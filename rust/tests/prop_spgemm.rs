@@ -1,0 +1,160 @@
+//! Property tests for the row-wise SpGEMM: randomized shapes, densities
+//! and rank counts against a sequential oracle (our hand-rolled
+//! quickcheck — proptest is unavailable offline).
+
+use galerkin_ptap::dist::{RowGatherPlan, World};
+use galerkin_ptap::gen::random_dist_csr;
+use galerkin_ptap::mat::{Csr, CsrBuilder};
+use galerkin_ptap::spgemm::{ApProduct, RowScratch, RowView, StampedAccumulator};
+use galerkin_ptap::util::prng::Rng;
+
+fn seq_matmul(a: &Csr, b: &Csr) -> Csr {
+    let mut out = CsrBuilder::new(b.ncols);
+    let mut acc: std::collections::BTreeMap<u32, f64> = Default::default();
+    for i in 0..a.nrows {
+        acc.clear();
+        let (ac, av) = a.row(i);
+        for (&k, &aval) in ac.iter().zip(av) {
+            let (bc, bv) = b.row(k as usize);
+            for (&j, &bval) in bc.iter().zip(bv) {
+                *acc.entry(j).or_insert(0.0) += aval * bval;
+            }
+        }
+        let cols: Vec<u32> = acc.keys().copied().collect();
+        let vals: Vec<f64> = acc.values().copied().collect();
+        out.push_row(&cols, &vals);
+    }
+    out.finish()
+}
+
+/// Randomized sweep: 30 configurations of (n, m, density, np).
+#[test]
+fn random_ap_products_match_oracle() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for case in 0..30 {
+        let n = 10 + rng.below(60);
+        let m = 4 + rng.below(40);
+        let nnz_a = 1 + rng.below(7);
+        let nnz_p = 1 + rng.below(4);
+        let np = 1 + rng.below(5);
+        let seed_a = rng.next_u64();
+        let seed_p = rng.next_u64();
+        let world = World::new(np);
+        let (got_rows, ag, pg) = world
+            .run(|comm| {
+                let a = random_dist_csr(comm.rank(), comm.size(), n, n, nnz_a, seed_a);
+                let p = random_dist_csr(comm.rank(), comm.size(), n, m, nnz_p, seed_p);
+                let plan = RowGatherPlan::build(&comm, &p.row_layout, &a.garray);
+                let pr = plan.gather_csr(&comm, &p);
+                let v = RowView::new(&a, &p, &pr);
+                let mut scratch = RowScratch::default();
+                let mut acc = StampedAccumulator::new(p.global_ncols());
+                let mut ap = ApProduct::symbolic(v, &mut scratch);
+                ap.numeric(v, &mut acc);
+                // exact preallocation is an invariant, not a coincidence
+                assert!((ap.mat.fill_ratio() - 1.0).abs() < 1e-12);
+                let rbeg = a.row_begin();
+                let mat = ap.mat.clone().finish();
+                let rows: Vec<(usize, Vec<(u32, f64)>)> = (0..mat.nrows)
+                    .map(|i| {
+                        let (c, vv) = mat.row(i);
+                        (rbeg + i, c.iter().zip(vv).map(|(&x, &y)| (x, y)).collect())
+                    })
+                    .collect();
+                (rows, a.gather_global(&comm), p.gather_global(&comm))
+            })
+            .into_iter()
+            .fold((vec![Vec::new(); n], None, None), |(mut acc, _, _), (rows, ag, pg)| {
+                for (gi, row) in rows {
+                    acc[gi] = row;
+                }
+                (acc, Some(ag), Some(pg))
+            });
+        let want = seq_matmul(&ag.unwrap(), &pg.unwrap());
+        for i in 0..n {
+            let (wc, wv) = want.row(i);
+            assert_eq!(got_rows[i].len(), wc.len(), "case {case} row {i}");
+            for (k, (&c, &v)) in wc.iter().zip(wv).enumerate() {
+                assert_eq!(got_rows[i][k].0, c, "case {case} row {i}");
+                assert!((got_rows[i][k].1 - v).abs() < 1e-10, "case {case} row {i}");
+            }
+        }
+    }
+}
+
+/// Identity propagation: A * I == A for any partitioning.
+#[test]
+fn multiplying_by_identity_preserves() {
+    let mut rng = Rng::new(77);
+    for _ in 0..10 {
+        let n = 8 + rng.below(40);
+        let np = 1 + rng.below(4);
+        let seed = rng.next_u64();
+        let world = World::new(np);
+        world.run(|comm| {
+            let a = random_dist_csr(comm.rank(), comm.size(), n, n, 4, seed);
+            // identity as a distributed matrix
+            let layout = a.row_layout.clone();
+            let mut b =
+                galerkin_ptap::dist::DistCsrBuilder::new(comm.rank(), layout.clone(), layout);
+            for gi in a.row_layout.range(comm.rank()) {
+                b.push_row(&[(gi as u64, 1.0)]);
+            }
+            let eye = b.finish();
+            let plan = RowGatherPlan::build(&comm, &eye.row_layout, &a.garray);
+            let pr = plan.gather_csr(&comm, &eye);
+            let v = RowView::new(&a, &eye, &pr);
+            let mut scratch = RowScratch::default();
+            let mut acc = StampedAccumulator::new(eye.global_ncols());
+            let mut ap = ApProduct::symbolic(v, &mut scratch);
+            ap.numeric(v, &mut acc);
+            let got = ap.mat.clone().finish();
+            let want = a.gather_global(&comm);
+            // compare local slice
+            let rbeg = a.row_begin();
+            for i in 0..a.local_nrows() {
+                let (gc, gv) = got.row(i);
+                let (wc, wv) = want.row(rbeg + i);
+                assert_eq!(gc, wc);
+                assert_eq!(gv, wv);
+            }
+        });
+    }
+}
+
+/// Linearity: (αA)·P == α(A·P).
+#[test]
+fn scaling_a_scales_product() {
+    let world = World::new(3);
+    world.run(|comm| {
+        let n = 36;
+        let a1 = random_dist_csr(comm.rank(), comm.size(), n, n, 5, 42);
+        let mut a2 = a1.clone();
+        for v in a2.diag.vals.iter_mut().chain(a2.offd.vals.iter_mut()) {
+            *v *= 2.5;
+        }
+        let p = random_dist_csr(comm.rank(), comm.size(), n, 12, 2, 43);
+        let product = |a: &galerkin_ptap::dist::DistCsr,
+                       comm: &galerkin_ptap::dist::Comm|
+         -> Csr {
+            let plan = RowGatherPlan::build(comm, &p.row_layout, &a.garray);
+            let pr = plan.gather_csr(comm, &p);
+            let v = RowView::new(a, &p, &pr);
+            let mut scratch = RowScratch::default();
+            let mut acc = StampedAccumulator::new(p.global_ncols());
+            let mut ap = ApProduct::symbolic(v, &mut scratch);
+            ap.numeric(v, &mut acc);
+            ap.mat.clone().finish()
+        };
+        let c1 = product(&a1, &comm);
+        let c2 = product(&a2, &comm);
+        for i in 0..c1.nrows {
+            let (k1, v1) = c1.row(i);
+            let (k2, v2) = c2.row(i);
+            assert_eq!(k1, k2);
+            for (a, b) in v1.iter().zip(v2) {
+                assert!((a * 2.5 - b).abs() < 1e-11);
+            }
+        }
+    });
+}
