@@ -1,0 +1,291 @@
+//! Distributed block-CSR matrix (PETSc MPIBAIJ analog): the diag/offd
+//! split of [`super::DistCsr`] over dense `b×b` blocks.  Layouts are in
+//! *block* units; [`DistBcsr::to_scalar`] expands to the scalar layout for
+//! cross-checking the block path against the scalar algorithms.
+
+use crate::mat::{Bcsr, BcsrBuilder};
+
+use super::csr::{DistCsr, DistCsrBuilder};
+use super::layout::Layout;
+
+/// One rank's slice of a distributed block sparse matrix.
+#[derive(Debug, Clone)]
+pub struct DistBcsr {
+    pub rank: usize,
+    /// Block size.
+    pub b: usize,
+    /// Block-row layout.
+    pub row_layout: Layout,
+    /// Block-column layout.
+    pub col_layout: Layout,
+    pub diag: Bcsr,
+    pub offd: Bcsr,
+    /// Sorted global *block* column ids of the offd part.
+    pub garray: Vec<u64>,
+}
+
+impl DistBcsr {
+    /// Block rows owned by this rank.
+    pub fn local_nrows(&self) -> usize {
+        self.diag.nrows
+    }
+
+    /// First global block row owned by this rank.
+    pub fn row_begin(&self) -> usize {
+        self.row_layout.start(self.rank)
+    }
+
+    /// First global block column owned by this rank.
+    pub fn col_begin(&self) -> usize {
+        self.col_layout.start(self.rank)
+    }
+
+    pub fn global_nrows(&self) -> usize {
+        self.row_layout.global_size()
+    }
+
+    pub fn global_ncols(&self) -> usize {
+        self.col_layout.global_size()
+    }
+
+    /// Local nonzero blocks (diag + offd).
+    pub fn nnz_blocks_local(&self) -> usize {
+        self.diag.nnz_blocks() + self.offd.nnz_blocks()
+    }
+
+    /// Heap bytes of this rank's slice.
+    pub fn bytes(&self) -> u64 {
+        self.diag.bytes() + self.offd.bytes() + (self.garray.len() * 8) as u64
+    }
+
+    /// Expand into the scalar distributed CSR over the scaled layouts
+    /// (explicit zeros inside blocks are dropped, so the pattern matches
+    /// what a scalar assembly of the same operator would produce).
+    pub fn to_scalar(&self) -> DistCsr {
+        let b = self.b;
+        let mut builder = DistCsrBuilder::new(
+            self.rank,
+            self.row_layout.scaled(b),
+            self.col_layout.scaled(b),
+        );
+        let cbeg = self.col_begin() as u64;
+        let mut entries: Vec<(u64, f64)> = Vec::new();
+        for i in 0..self.local_nrows() {
+            for r in 0..b {
+                entries.clear();
+                for idx in self.diag.row_range(i) {
+                    let gc = cbeg + self.diag.cols[idx] as u64;
+                    let blk = self.diag.block(idx);
+                    for j in 0..b {
+                        let v = blk[r * b + j];
+                        if v != 0.0 {
+                            entries.push((gc * b as u64 + j as u64, v));
+                        }
+                    }
+                }
+                for idx in self.offd.row_range(i) {
+                    let gc = self.garray[self.offd.cols[idx] as usize];
+                    let blk = self.offd.block(idx);
+                    for j in 0..b {
+                        let v = blk[r * b + j];
+                        if v != 0.0 {
+                            entries.push((gc * b as u64 + j as u64, v));
+                        }
+                    }
+                }
+                entries.sort_unstable_by_key(|&(c, _)| c);
+                builder.push_row(&entries);
+            }
+        }
+        builder.finish()
+    }
+
+    /// Check the distributed block invariants.
+    pub fn validate(&self) -> Result<(), String> {
+        self.diag.validate().map_err(|e| format!("diag: {e}"))?;
+        self.offd.validate().map_err(|e| format!("offd: {e}"))?;
+        if self.diag.b != self.b || self.offd.b != self.b {
+            return Err("block size mismatch".into());
+        }
+        let local_rows = self.row_layout.local_size(self.rank);
+        if self.diag.nrows != local_rows || self.offd.nrows != local_rows {
+            return Err("block row count mismatch with layout".into());
+        }
+        if self.diag.ncols != self.col_layout.local_size(self.rank) {
+            return Err("diag ncols != owned block columns".into());
+        }
+        if self.offd.ncols != self.garray.len() {
+            return Err("offd ncols != garray length".into());
+        }
+        let cbeg = self.col_begin() as u64;
+        let cend = self.col_layout.end(self.rank) as u64;
+        let ncols = self.global_ncols() as u64;
+        for w in self.garray.windows(2) {
+            if w[0] >= w[1] {
+                return Err("garray not strictly sorted".into());
+            }
+        }
+        for &g in &self.garray {
+            if g >= ncols {
+                return Err(format!("garray entry {g} out of range"));
+            }
+            if g >= cbeg && g < cend {
+                return Err(format!("garray entry {g} is locally owned"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Row-by-row builder over (global block column, `b*b` block) entries.
+#[derive(Debug)]
+pub struct DistBcsrBuilder {
+    rank: usize,
+    b: usize,
+    row_layout: Layout,
+    col_layout: Layout,
+    rowptr: Vec<usize>,
+    cols: Vec<u64>,
+    vals: Vec<f64>,
+}
+
+impl DistBcsrBuilder {
+    pub fn new(rank: usize, b: usize, row_layout: Layout, col_layout: Layout) -> DistBcsrBuilder {
+        assert!(b >= 1);
+        DistBcsrBuilder {
+            rank,
+            b,
+            row_layout,
+            col_layout,
+            rowptr: vec![0],
+            cols: Vec::new(),
+            vals: Vec::new(),
+        }
+    }
+
+    /// Append the next local block row: strictly ascending global block
+    /// columns with their blocks concatenated (`blocks.len() == cols.len()
+    /// * b * b`).
+    pub fn push_row(&mut self, cols: &[u64], blocks: &[f64]) {
+        debug_assert_eq!(blocks.len(), cols.len() * self.b * self.b);
+        debug_assert!(cols.windows(2).all(|w| w[0] < w[1]));
+        self.cols.extend_from_slice(cols);
+        self.vals.extend_from_slice(blocks);
+        self.rowptr.push(self.cols.len());
+    }
+
+    pub fn finish(self) -> DistBcsr {
+        let nrows = self.rowptr.len() - 1;
+        debug_assert_eq!(nrows, self.row_layout.local_size(self.rank));
+        let b = self.b;
+        let bb = b * b;
+        let cbeg = self.col_layout.start(self.rank) as u64;
+        let cend = self.col_layout.end(self.rank) as u64;
+        let mut garray: Vec<u64> = self
+            .cols
+            .iter()
+            .copied()
+            .filter(|&c| c < cbeg || c >= cend)
+            .collect();
+        garray.sort_unstable();
+        garray.dedup();
+        let mut diag = BcsrBuilder::new(self.col_layout.local_size(self.rank), b);
+        let mut offd = BcsrBuilder::new(garray.len(), b);
+        let mut dc: Vec<u32> = Vec::new();
+        let mut dv: Vec<f64> = Vec::new();
+        let mut oc: Vec<u32> = Vec::new();
+        let mut ov: Vec<f64> = Vec::new();
+        for i in 0..nrows {
+            dc.clear();
+            dv.clear();
+            oc.clear();
+            ov.clear();
+            for k in self.rowptr[i]..self.rowptr[i + 1] {
+                let c = self.cols[k];
+                let blk = &self.vals[k * bb..(k + 1) * bb];
+                if c >= cbeg && c < cend {
+                    dc.push((c - cbeg) as u32);
+                    dv.extend_from_slice(blk);
+                } else {
+                    oc.push(garray.binary_search(&c).unwrap() as u32);
+                    ov.extend_from_slice(blk);
+                }
+            }
+            diag.push_row(&dc, &dv);
+            offd.push_row(&oc, &ov);
+        }
+        DistBcsr {
+            rank: self.rank,
+            b,
+            row_layout: self.row_layout,
+            col_layout: self.col_layout,
+            diag: diag.finish(),
+            offd: offd.finish(),
+            garray,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::World;
+
+    fn sample(rank: usize, np: usize) -> DistBcsr {
+        // 4 block rows/cols of 2x2 blocks; row i hits cols i and (i+2)%4
+        let b = 2usize;
+        let l = Layout::new_equal(4, np);
+        let mut bld = DistBcsrBuilder::new(rank, b, l.clone(), l.clone());
+        for gi in l.range(rank) {
+            let mut cols = vec![gi as u64, ((gi + 2) % 4) as u64];
+            cols.sort_unstable();
+            let mut blocks = Vec::new();
+            for &c in &cols {
+                // block value encodes (row, col): entry (r,j) = 100*gi + 10*c + r*2 + j
+                for r in 0..b {
+                    for j in 0..b {
+                        blocks.push((100 * gi + 10 * c as usize + r * 2 + j) as f64);
+                    }
+                }
+            }
+            bld.push_row(&cols, &blocks);
+        }
+        bld.finish()
+    }
+
+    #[test]
+    fn split_blocks_and_validate() {
+        let d = sample(0, 2);
+        d.validate().unwrap();
+        assert_eq!(d.garray, vec![2, 3]);
+        assert_eq!(d.diag.nnz_blocks(), 2);
+        assert_eq!(d.offd.nnz_blocks(), 2);
+    }
+
+    #[test]
+    fn to_scalar_matches_single_rank_expansion() {
+        let w = World::new(3);
+        let gs = w.run(|c| sample(c.rank(), c.size()).to_scalar().gather_global(&c));
+        let seq = sample(0, 1).to_scalar().gather_global_np1();
+        for g in &gs {
+            assert_eq!(g, &seq);
+        }
+    }
+
+    impl DistCsr {
+        /// np=1 shortcut used by the test above (no communicator needed).
+        fn gather_global_np1(&self) -> crate::mat::Csr {
+            assert_eq!(self.row_layout.np(), 1);
+            let mut b = crate::mat::CsrBuilder::new(self.global_ncols());
+            let (mut cols, mut vals) = (Vec::new(), Vec::new());
+            let mut c32: Vec<u32> = Vec::new();
+            for i in 0..self.local_nrows() {
+                self.row_global(i, &mut cols, &mut vals);
+                c32.clear();
+                c32.extend(cols.iter().map(|&c| c as u32));
+                b.push_row(&c32, &vals);
+            }
+            b.finish()
+        }
+    }
+}

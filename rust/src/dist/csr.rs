@@ -1,0 +1,395 @@
+//! Distributed CSR matrix (PETSc MPIAIJ analog): each rank owns a
+//! contiguous block of rows, stored as two sequential CSRs — `diag` (the
+//! columns this rank owns, with *local* column ids) and `offd` (everything
+//! else, with column ids compacted against the sorted global id table
+//! `garray`).  This is exactly the layout the paper's algorithms (and
+//! PETSc's `MatPtAP`) are written against.
+
+use crate::mat::{Csr, CsrBuilder};
+use crate::util::bytebuf::{ByteReader, ByteWriter};
+
+use super::layout::Layout;
+use super::world::Comm;
+
+/// One rank's slice of a distributed sparse matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DistCsr {
+    pub rank: usize,
+    pub row_layout: Layout,
+    pub col_layout: Layout,
+    /// Rows over this rank's own column range; columns are local ids
+    /// (global id = `col_begin() + local`).
+    pub diag: Csr,
+    /// Rows over off-rank columns, compacted: column `c` means global
+    /// column `garray[c]`.
+    pub offd: Csr,
+    /// Sorted global ids of the off-diagonal columns referenced here.
+    pub garray: Vec<u64>,
+}
+
+impl DistCsr {
+    /// Rows owned by this rank.
+    pub fn local_nrows(&self) -> usize {
+        self.diag.nrows
+    }
+
+    /// First global row owned by this rank.
+    pub fn row_begin(&self) -> usize {
+        self.row_layout.start(self.rank)
+    }
+
+    /// First global column owned by this rank.
+    pub fn col_begin(&self) -> usize {
+        self.col_layout.start(self.rank)
+    }
+
+    pub fn global_nrows(&self) -> usize {
+        self.row_layout.global_size()
+    }
+
+    pub fn global_ncols(&self) -> usize {
+        self.col_layout.global_size()
+    }
+
+    /// Local nonzeros (diag + offd).
+    pub fn nnz_local(&self) -> usize {
+        self.diag.nnz() + self.offd.nnz()
+    }
+
+    /// Global nonzeros (collective).
+    pub fn nnz_global(&self, comm: &Comm) -> u64 {
+        comm.allreduce_sum_u64(self.nnz_local() as u64)
+    }
+
+    /// Heap bytes of this rank's slice (the tables' A/P/C storage).
+    pub fn bytes(&self) -> u64 {
+        self.diag.bytes() + self.offd.bytes() + (self.garray.len() * 8) as u64
+    }
+
+    /// Global (min, max, avg) nonzeros per row (collective) — the paper's
+    /// Table 5/6 `cols` columns.
+    pub fn row_nnz_stats(&self, comm: &Comm) -> (u64, u64, f64) {
+        let mut lmin = u64::MAX;
+        let mut lmax = 0u64;
+        let mut lsum = 0u64;
+        for i in 0..self.local_nrows() {
+            let n = (self.diag.row_len(i) + self.offd.row_len(i)) as u64;
+            lmin = lmin.min(n);
+            lmax = lmax.max(n);
+            lsum += n;
+        }
+        let mins = comm.all_u64(lmin);
+        let maxs = comm.all_u64(lmax);
+        let sums = comm.all_u64(lsum);
+        let gmin = mins.into_iter().min().unwrap();
+        let gmax = maxs.into_iter().max().unwrap();
+        let gsum: u64 = sums.into_iter().sum();
+        let rows = self.global_nrows();
+        let avg = if rows == 0 { 0.0 } else { gsum as f64 / rows as f64 };
+        (if gmin == u64::MAX { 0 } else { gmin }, gmax, avg)
+    }
+
+    /// Row `i` with *global* column ids, sorted ascending, appended into
+    /// the provided buffers (cleared first).
+    pub fn row_global(&self, i: usize, cols: &mut Vec<u64>, vals: &mut Vec<f64>) {
+        cols.clear();
+        vals.clear();
+        let cbeg = self.col_begin() as u64;
+        let (oc, ov) = self.offd.row(i);
+        let (dc, dv) = self.diag.row(i);
+        // offd garray values are ascending with the compacted ids, so the
+        // sorted merge is: offd below the diag range, diag, offd above.
+        let split = oc.partition_point(|&c| self.garray[c as usize] < cbeg);
+        for k in 0..split {
+            cols.push(self.garray[oc[k] as usize]);
+            vals.push(ov[k]);
+        }
+        for (&c, &v) in dc.iter().zip(dv) {
+            cols.push(cbeg + c as u64);
+            vals.push(v);
+        }
+        for k in split..oc.len() {
+            cols.push(self.garray[oc[k] as usize]);
+            vals.push(ov[k]);
+        }
+    }
+
+    /// Assemble the full global matrix on every rank (collective, tests
+    /// and coarse direct solves only).  Every rank returns the identical
+    /// sequential [`Csr`].
+    pub fn gather_global(&self, comm: &Comm) -> Csr {
+        assert!(self.global_ncols() < u32::MAX as usize, "global cols exceed u32");
+        let mut w = ByteWriter::new();
+        let mut cols: Vec<u64> = Vec::new();
+        let mut vals: Vec<f64> = Vec::new();
+        for i in 0..self.local_nrows() {
+            self.row_global(i, &mut cols, &mut vals);
+            w.u32(cols.len() as u32);
+            w.u64_slice(&cols);
+            w.f64_slice(&vals);
+        }
+        let all = comm.allgather_bytes(w.into_bytes());
+        let mut b = CsrBuilder::with_capacity(
+            self.global_ncols(),
+            self.global_nrows(),
+            self.nnz_local() * comm.size(),
+        );
+        let mut cols32: Vec<u32> = Vec::new();
+        let mut v: Vec<f64> = Vec::new();
+        for (r, payload) in all.iter().enumerate() {
+            let mut reader = ByteReader::new(payload);
+            for _ in 0..self.row_layout.local_size(r) {
+                let n = reader.u32() as usize;
+                cols32.clear();
+                v.clear();
+                for _ in 0..n {
+                    cols32.push(reader.u64() as u32);
+                }
+                for _ in 0..n {
+                    v.push(reader.f64());
+                }
+                b.push_row(&cols32, &v);
+            }
+            debug_assert!(reader.done(), "trailing bytes from rank {r}");
+        }
+        b.finish()
+    }
+
+    /// Check the distributed invariants (local CSRs valid, garray sorted,
+    /// strictly off-rank, in range; shapes consistent with the layouts).
+    pub fn validate(&self) -> Result<(), String> {
+        self.diag.validate().map_err(|e| format!("diag: {e}"))?;
+        self.offd.validate().map_err(|e| format!("offd: {e}"))?;
+        let local_rows = self.row_layout.local_size(self.rank);
+        if self.diag.nrows != local_rows || self.offd.nrows != local_rows {
+            return Err(format!(
+                "row count mismatch: diag {} offd {} layout {local_rows}",
+                self.diag.nrows, self.offd.nrows
+            ));
+        }
+        if self.diag.ncols != self.col_layout.local_size(self.rank) {
+            return Err("diag ncols != owned column count".into());
+        }
+        if self.offd.ncols != self.garray.len() {
+            return Err("offd ncols != garray length".into());
+        }
+        let cbeg = self.col_begin() as u64;
+        let cend = self.col_layout.end(self.rank) as u64;
+        let ncols = self.global_ncols() as u64;
+        for w in self.garray.windows(2) {
+            if w[0] >= w[1] {
+                return Err("garray not strictly sorted".into());
+            }
+        }
+        for &g in &self.garray {
+            if g >= ncols {
+                return Err(format!("garray entry {g} out of range"));
+            }
+            if g >= cbeg && g < cend {
+                return Err(format!("garray entry {g} is locally owned"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Row-by-row builder taking (global column, value) entries; splits into
+/// diag/offd and compacts `garray` on [`DistCsrBuilder::finish`].
+#[derive(Debug)]
+pub struct DistCsrBuilder {
+    rank: usize,
+    row_layout: Layout,
+    col_layout: Layout,
+    rowptr: Vec<usize>,
+    cols: Vec<u64>,
+    vals: Vec<f64>,
+}
+
+impl DistCsrBuilder {
+    pub fn new(rank: usize, row_layout: Layout, col_layout: Layout) -> DistCsrBuilder {
+        DistCsrBuilder {
+            rank,
+            row_layout,
+            col_layout,
+            rowptr: vec![0],
+            cols: Vec::new(),
+            vals: Vec::new(),
+        }
+    }
+
+    /// Append the next local row; `entries` are (global col, value) sorted
+    /// by strictly ascending column.
+    pub fn push_row(&mut self, entries: &[(u64, f64)]) {
+        debug_assert!(
+            entries.windows(2).all(|w| w[0].0 < w[1].0),
+            "row entries must have strictly ascending columns"
+        );
+        for &(c, v) in entries {
+            debug_assert!((c as usize) < self.col_layout.global_size(), "column {c} out of range");
+            self.cols.push(c);
+            self.vals.push(v);
+        }
+        self.rowptr.push(self.cols.len());
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.rowptr.len() - 1
+    }
+
+    pub fn finish(self) -> DistCsr {
+        let nrows = self.rowptr.len() - 1;
+        debug_assert_eq!(
+            nrows,
+            self.row_layout.local_size(self.rank),
+            "pushed rows must match the layout's local count"
+        );
+        let cbeg = self.col_layout.start(self.rank) as u64;
+        let cend = self.col_layout.end(self.rank) as u64;
+        let mut garray: Vec<u64> = self
+            .cols
+            .iter()
+            .copied()
+            .filter(|&c| c < cbeg || c >= cend)
+            .collect();
+        garray.sort_unstable();
+        garray.dedup();
+        let nloc_cols = self.col_layout.local_size(self.rank);
+        let offd_nnz = self
+            .cols
+            .iter()
+            .filter(|&&c| c < cbeg || c >= cend)
+            .count();
+        let mut diag = CsrBuilder::with_capacity(nloc_cols, nrows, self.cols.len() - offd_nnz);
+        let mut offd = CsrBuilder::with_capacity(garray.len(), nrows, offd_nnz);
+        let mut dc: Vec<u32> = Vec::new();
+        let mut dv: Vec<f64> = Vec::new();
+        let mut oc: Vec<u32> = Vec::new();
+        let mut ov: Vec<f64> = Vec::new();
+        for i in 0..nrows {
+            dc.clear();
+            dv.clear();
+            oc.clear();
+            ov.clear();
+            for k in self.rowptr[i]..self.rowptr[i + 1] {
+                let (c, v) = (self.cols[k], self.vals[k]);
+                if c >= cbeg && c < cend {
+                    dc.push((c - cbeg) as u32);
+                    dv.push(v);
+                } else {
+                    oc.push(garray.binary_search(&c).unwrap() as u32);
+                    ov.push(v);
+                }
+            }
+            diag.push_row(&dc, &dv);
+            offd.push_row(&oc, &ov);
+        }
+        DistCsr {
+            rank: self.rank,
+            row_layout: self.row_layout,
+            col_layout: self.col_layout,
+            diag: diag.finish(),
+            offd: offd.finish(),
+            garray,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::World;
+
+    /// rank-local helper: a 4x6 matrix over 2 ranks.
+    fn sample(rank: usize) -> DistCsr {
+        let rl = Layout::new_equal(4, 2);
+        let cl = Layout::new_equal(6, 2);
+        let mut b = DistCsrBuilder::new(rank, rl.clone(), cl);
+        for gi in rl.range(rank) {
+            // row gi: entries at (gi) and (gi + 3) mod 6, value = col + 10*gi
+            let mut e = vec![
+                (gi as u64, (gi * 10 + gi) as f64),
+                (((gi + 3) % 6) as u64, ((gi + 3) % 6 + 10 * gi) as f64),
+            ];
+            e.sort_unstable_by_key(|&(c, _)| c);
+            b.push_row(&e);
+        }
+        b.finish()
+    }
+
+    #[test]
+    fn split_and_garray() {
+        let d = sample(0);
+        d.validate().unwrap();
+        // rank 0 owns cols 0..3; rows 0,1 hit cols {0,3} and {1,4}
+        assert_eq!(d.garray, vec![3, 4]);
+        assert_eq!(d.diag.nnz(), 2);
+        assert_eq!(d.offd.nnz(), 2);
+        let d1 = sample(1);
+        d1.validate().unwrap();
+        // rank 1 owns cols 3..6; rows 2,3 hit cols {2,5} and {0,3}
+        assert_eq!(d1.garray, vec![0, 2]);
+    }
+
+    #[test]
+    fn row_global_is_sorted_merge() {
+        let d = sample(1);
+        let (mut c, mut v) = (Vec::new(), Vec::new());
+        // local row 0 == global row 2: cols {2, 5}
+        d.row_global(0, &mut c, &mut v);
+        assert_eq!(c, vec![2, 5]);
+        // local row 1 == global row 3: cols {0, 3}
+        d.row_global(1, &mut c, &mut v);
+        assert_eq!(c, vec![0, 3]);
+        assert_eq!(v, vec![30.0, 33.0]);
+    }
+
+    #[test]
+    fn gather_global_identical_on_all_ranks() {
+        let w = World::new(2);
+        let gs = w.run(|comm| sample(comm.rank()).gather_global(&comm));
+        assert_eq!(gs[0], gs[1]);
+        let g = &gs[0];
+        g.validate().unwrap();
+        assert_eq!(g.nrows, 4);
+        assert_eq!(g.ncols, 6);
+        assert_eq!(g.nnz(), 8);
+        assert_eq!(g.row_cols(3), &[0, 3]);
+    }
+
+    #[test]
+    fn validate_rejects_owned_garray_entry() {
+        let mut d = sample(0);
+        d.garray[0] = 1; // owned by rank 0
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn empty_rows_and_ranks() {
+        let rl = Layout::new_equal(3, 4); // rank 3 owns nothing
+        let cl = Layout::new_equal(3, 4);
+        let w = World::new(4);
+        w.run(|comm| {
+            let mut b = DistCsrBuilder::new(comm.rank(), rl.clone(), cl.clone());
+            for _ in rl.range(comm.rank()) {
+                b.push_row(&[]);
+            }
+            let d = b.finish();
+            d.validate().unwrap();
+            let g = d.gather_global(&comm);
+            assert_eq!(g.nnz(), 0);
+            assert_eq!(g.nrows, 3);
+        });
+    }
+
+    #[test]
+    fn nnz_and_row_stats() {
+        let w = World::new(2);
+        w.run(|comm| {
+            let d = sample(comm.rank());
+            assert_eq!(d.nnz_global(&comm), 8);
+            let (mn, mx, avg) = d.row_nnz_stats(&comm);
+            assert_eq!((mn, mx), (2, 2));
+            assert!((avg - 2.0).abs() < 1e-12);
+        });
+    }
+}

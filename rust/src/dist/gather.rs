@@ -1,0 +1,474 @@
+//! One-shot row/value gathers (PETSc `VecScatter` / `MatGetSubMatrix`
+//! analogs).  A plan is built once per operator from the sorted list of
+//! needed global ids (always a `garray`): owners are looked up, requests
+//! exchanged, and both sides remember their half of the pattern.  After
+//! that, gathering is a single sparse exchange — the paper's "one-shot
+//! communication to get the remote rows of P" (Alg. 2/7/9 line 2), and its
+//! numeric refresh (Alg. 4 line 3) reuses the same plan.
+
+use crate::util::bytebuf::{ByteReader, ByteWriter};
+
+use super::bcsr::DistBcsr;
+use super::csr::DistCsr;
+use super::layout::Layout;
+use super::world::Comm;
+
+/// Owner/serve pattern shared by the row and vector gather plans.
+#[derive(Debug)]
+struct GatherMap {
+    /// Number of gathered ids (positions `0..n_needed`).
+    n_needed: usize,
+    /// (owner rank, contiguous position range) runs, ascending by owner.
+    runs: Vec<(usize, std::ops::Range<usize>)>,
+    /// (destination rank, owned local indices to send), ascending by rank.
+    serve: Vec<(usize, Vec<u32>)>,
+}
+
+impl GatherMap {
+    /// Collective: route requests for `needed` (strictly ascending global
+    /// ids) to their owners under `layout`.
+    fn build(comm: &Comm, layout: &Layout, needed: &[u64]) -> GatherMap {
+        debug_assert!(needed.windows(2).all(|w| w[0] < w[1]), "needed ids must be sorted");
+        let mut runs = Vec::new();
+        let mut sends = Vec::new();
+        let mut k = 0usize;
+        while k < needed.len() {
+            let owner = layout.owner(needed[k] as usize);
+            let owner_end = layout.end(owner) as u64;
+            let mut e = k + 1;
+            while e < needed.len() && needed[e] < owner_end {
+                e += 1;
+            }
+            let mut w = ByteWriter::with_capacity(8 * (e - k));
+            w.u64_slice(&needed[k..e]);
+            sends.push((owner, w.into_bytes()));
+            runs.push((owner, k..e));
+            k = e;
+        }
+        let recvd = comm.exchange(sends);
+        let my_start = layout.start(comm.rank()) as u64;
+        let my_len = layout.local_size(comm.rank());
+        let serve = recvd
+            .into_iter()
+            .map(|(src, payload)| {
+                let mut r = ByteReader::new(&payload);
+                let mut ids = Vec::with_capacity(payload.len() / 8);
+                while !r.done() {
+                    let g = r.u64();
+                    debug_assert!(
+                        g >= my_start && g < my_start + my_len as u64,
+                        "request for unowned id {g}"
+                    );
+                    ids.push((g - my_start) as u32);
+                }
+                (src, ids)
+            })
+            .collect();
+        GatherMap { n_needed: needed.len(), runs, serve }
+    }
+
+    fn bytes(&self) -> u64 {
+        let serve: usize = self.serve.iter().map(|(_, v)| 16 + v.len() * 4).sum();
+        (serve + self.runs.len() * 24 + 24) as u64
+    }
+
+    /// Pair each run with its received payload (both ascend by rank).
+    fn zip_runs<'a>(
+        &'a self,
+        recvd: &'a [(usize, Vec<u8>)],
+    ) -> impl Iterator<Item = (&'a (usize, std::ops::Range<usize>), &'a [u8])> {
+        debug_assert_eq!(recvd.len(), self.runs.len());
+        self.runs.iter().zip(recvd.iter()).map(|(run, (src, payload))| {
+            debug_assert_eq!(*src, run.0, "response/run misalignment");
+            (run, payload.as_slice())
+        })
+    }
+}
+
+/// Gathered remote rows of a scalar matrix, in the order of the driving
+/// `garray`; columns are *global* ids.
+#[derive(Debug, Clone)]
+pub struct PrMat {
+    /// 32-bit row pointers (PetscInt width, matching [`crate::mat::Csr`]).
+    rowptr: Vec<u32>,
+    cols: Vec<u64>,
+    vals: Vec<f64>,
+}
+
+impl PrMat {
+    pub fn nrows(&self) -> usize {
+        self.rowptr.len() - 1
+    }
+
+    #[inline]
+    pub fn row(&self, k: usize) -> (&[u64], &[f64]) {
+        let (a, b) = (self.rowptr[k] as usize, self.rowptr[k + 1] as usize);
+        (&self.cols[a..b], &self.vals[a..b])
+    }
+
+    #[inline]
+    pub fn row_cols(&self, k: usize) -> &[u64] {
+        &self.cols[self.rowptr[k] as usize..self.rowptr[k + 1] as usize]
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.cols.len()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.rowptr.len() * 4 + (self.cols.len() + self.vals.len()) * 8) as u64
+    }
+}
+
+/// Gathered remote block rows, in `garray` order; block columns are
+/// *global* block ids.
+#[derive(Debug, Clone)]
+pub struct PrBlocks {
+    pub b: usize,
+    rowptr: Vec<u32>,
+    pub gcols: Vec<u64>,
+    vals: Vec<f64>,
+}
+
+impl PrBlocks {
+    pub fn nrows(&self) -> usize {
+        self.rowptr.len() - 1
+    }
+
+    /// Block index range of gathered row `k`.
+    #[inline]
+    pub fn row_range(&self, k: usize) -> std::ops::Range<usize> {
+        self.rowptr[k] as usize..self.rowptr[k + 1] as usize
+    }
+
+    /// Global block columns of gathered row `k`.
+    #[inline]
+    pub fn row_cols(&self, k: usize) -> &[u64] {
+        &self.gcols[self.rowptr[k] as usize..self.rowptr[k + 1] as usize]
+    }
+
+    /// Dense block at block index `idx`.
+    #[inline]
+    pub fn block(&self, idx: usize) -> &[f64] {
+        let s = self.b * self.b;
+        &self.vals[idx * s..(idx + 1) * s]
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.rowptr.len() * 4 + (self.gcols.len() + self.vals.len()) * 8) as u64
+    }
+}
+
+/// Plan for gathering whole remote *rows* of a distributed matrix.
+#[derive(Debug)]
+pub struct RowGatherPlan {
+    map: GatherMap,
+}
+
+impl RowGatherPlan {
+    /// Collective: plan the gather of the rows named by `needed` (sorted
+    /// global ids — a `garray`) under the target matrix's `rows` layout.
+    pub fn build(comm: &Comm, rows: &Layout, needed: &[u64]) -> RowGatherPlan {
+        RowGatherPlan { map: GatherMap::build(comm, rows, needed) }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.map.n_needed
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.map.bytes()
+    }
+
+    /// Collective: gather pattern + values of the planned rows of `p`.
+    pub fn gather_csr(&self, comm: &Comm, p: &DistCsr) -> PrMat {
+        self.gather_csr_inner(comm, p, true)
+    }
+
+    /// Collective: gather the pattern only (symbolic phase); values are
+    /// zero until [`RowGatherPlan::update_values_csr`] refreshes them.
+    pub fn gather_pattern_csr(&self, comm: &Comm, p: &DistCsr) -> PrMat {
+        self.gather_csr_inner(comm, p, false)
+    }
+
+    fn gather_csr_inner(&self, comm: &Comm, p: &DistCsr, with_values: bool) -> PrMat {
+        let mut cbuf: Vec<u64> = Vec::new();
+        let mut vbuf: Vec<f64> = Vec::new();
+        let mut sends = Vec::with_capacity(self.map.serve.len());
+        for (dest, rows) in &self.map.serve {
+            let mut w = ByteWriter::new();
+            for &li in rows {
+                p.row_global(li as usize, &mut cbuf, &mut vbuf);
+                w.u32(cbuf.len() as u32);
+                w.u64_slice(&cbuf);
+                if with_values {
+                    w.f64_slice(&vbuf);
+                }
+            }
+            sends.push((*dest, w.into_bytes()));
+        }
+        let recvd = comm.exchange(sends);
+        let mut rowptr: Vec<u32> = Vec::with_capacity(self.map.n_needed + 1);
+        rowptr.push(0);
+        let mut cols: Vec<u64> = Vec::new();
+        let mut vals: Vec<f64> = Vec::new();
+        for ((_, range), payload) in self.map.zip_runs(&recvd) {
+            let mut r = ByteReader::new(payload);
+            for _ in range.clone() {
+                let n = r.u32() as usize;
+                for _ in 0..n {
+                    cols.push(r.u64());
+                }
+                if with_values {
+                    for _ in 0..n {
+                        vals.push(r.f64());
+                    }
+                }
+                rowptr.push(cols.len() as u32);
+            }
+            debug_assert!(r.done());
+        }
+        debug_assert_eq!(rowptr.len(), self.map.n_needed + 1);
+        if !with_values {
+            vals = vec![0.0; cols.len()];
+        }
+        PrMat { rowptr, cols, vals }
+    }
+
+    /// Collective: refresh `pr`'s values from the current values of `p`
+    /// without touching the pattern (Alg. 4 line 3 — the numeric-phase
+    /// sparse communication).
+    pub fn update_values_csr(&self, comm: &Comm, p: &DistCsr, pr: &mut PrMat) {
+        let mut cbuf: Vec<u64> = Vec::new();
+        let mut vbuf: Vec<f64> = Vec::new();
+        let mut sends = Vec::with_capacity(self.map.serve.len());
+        for (dest, rows) in &self.map.serve {
+            let mut w = ByteWriter::new();
+            for &li in rows {
+                p.row_global(li as usize, &mut cbuf, &mut vbuf);
+                w.f64_slice(&vbuf);
+            }
+            sends.push((*dest, w.into_bytes()));
+        }
+        let recvd = comm.exchange(sends);
+        debug_assert_eq!(pr.nrows(), self.map.n_needed);
+        for ((_, range), payload) in self.map.zip_runs(&recvd) {
+            let mut r = ByteReader::new(payload);
+            for t in range.clone() {
+                for k in pr.rowptr[t] as usize..pr.rowptr[t + 1] as usize {
+                    pr.vals[k] = r.f64();
+                }
+            }
+            debug_assert!(r.done(), "pattern drift between symbolic and numeric");
+        }
+    }
+
+    /// Collective: gather the planned block rows of `p`.
+    pub fn gather_bcsr(&self, comm: &Comm, p: &DistBcsr) -> PrBlocks {
+        let b = p.b;
+        let bb = b * b;
+        let cbeg = p.col_begin() as u64;
+        // serialize one block row with global ids in sorted merge order
+        let write_row = |w: &mut ByteWriter, i: usize| {
+            let oc = p.offd.row_cols(i);
+            let dc = p.diag.row_cols(i);
+            w.u32((oc.len() + dc.len()) as u32);
+            let split = oc.partition_point(|&c| p.garray[c as usize] < cbeg);
+            let orange = p.offd.row_range(i);
+            let drange = p.diag.row_range(i);
+            for k in 0..split {
+                w.u64(p.garray[oc[k] as usize]);
+            }
+            for &c in dc {
+                w.u64(cbeg + c as u64);
+            }
+            for k in split..oc.len() {
+                w.u64(p.garray[oc[k] as usize]);
+            }
+            for k in 0..split {
+                w.f64_slice(p.offd.block(orange.start + k));
+            }
+            for k in drange {
+                w.f64_slice(p.diag.block(k));
+            }
+            for k in split..oc.len() {
+                w.f64_slice(p.offd.block(orange.start + k));
+            }
+        };
+        let mut sends = Vec::with_capacity(self.map.serve.len());
+        for (dest, rows) in &self.map.serve {
+            let mut w = ByteWriter::new();
+            for &li in rows {
+                write_row(&mut w, li as usize);
+            }
+            sends.push((*dest, w.into_bytes()));
+        }
+        let recvd = comm.exchange(sends);
+        let mut rowptr: Vec<u32> = Vec::with_capacity(self.map.n_needed + 1);
+        rowptr.push(0);
+        let mut gcols: Vec<u64> = Vec::new();
+        let mut vals: Vec<f64> = Vec::new();
+        for ((_, range), payload) in self.map.zip_runs(&recvd) {
+            let mut r = ByteReader::new(payload);
+            for _ in range.clone() {
+                let n = r.u32() as usize;
+                for _ in 0..n {
+                    gcols.push(r.u64());
+                }
+                for _ in 0..n * bb {
+                    vals.push(r.f64());
+                }
+                rowptr.push(gcols.len() as u32);
+            }
+            debug_assert!(r.done());
+        }
+        PrBlocks { b, rowptr, gcols, vals }
+    }
+}
+
+/// Plan for gathering remote *entries* of a distributed vector (the halo
+/// used by SpMV, smoothers and the matrix-free transfers).
+#[derive(Debug)]
+pub struct VecGatherPlan {
+    map: GatherMap,
+}
+
+impl VecGatherPlan {
+    /// Collective: plan the gather of the entries named by `needed`
+    /// (sorted global ids) under the vector's `layout`.
+    pub fn build(comm: &Comm, layout: &Layout, needed: &[u64]) -> VecGatherPlan {
+        VecGatherPlan { map: GatherMap::build(comm, layout, needed) }
+    }
+
+    pub fn n_needed(&self) -> usize {
+        self.map.n_needed
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.map.bytes() + (self.map.n_needed * 8) as u64
+    }
+
+    /// Collective: fetch the needed entries from `local` slices; the
+    /// result is indexed like the driving `garray`.
+    pub fn gather(&self, comm: &Comm, local: &[f64]) -> Vec<f64> {
+        let mut sends = Vec::with_capacity(self.map.serve.len());
+        for (dest, ids) in &self.map.serve {
+            let mut w = ByteWriter::with_capacity(ids.len() * 8);
+            for &li in ids {
+                w.f64(local[li as usize]);
+            }
+            sends.push((*dest, w.into_bytes()));
+        }
+        let recvd = comm.exchange(sends);
+        let mut out = vec![0.0f64; self.map.n_needed];
+        for ((_, range), payload) in self.map.zip_runs(&recvd) {
+            let mut r = ByteReader::new(payload);
+            for slot in &mut out[range.clone()] {
+                *slot = r.f64();
+            }
+            debug_assert!(r.done());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{DistCsrBuilder, World};
+
+    /// P: 8x4 over np ranks, row gi has entries at cols {gi % 4} and
+    /// {(gi + 1) % 4} with values 10*gi + col.
+    fn p_matrix(rank: usize, np: usize) -> DistCsr {
+        let rl = Layout::new_equal(8, np);
+        let cl = Layout::new_equal(4, np);
+        let mut b = DistCsrBuilder::new(rank, rl.clone(), cl);
+        for gi in rl.range(rank) {
+            let mut cols = vec![(gi % 4) as u64, ((gi + 1) % 4) as u64];
+            cols.sort_unstable();
+            cols.dedup();
+            let entries: Vec<(u64, f64)> =
+                cols.iter().map(|&c| (c, (10 * gi) as f64 + c as f64)).collect();
+            b.push_row(&entries);
+        }
+        b.finish()
+    }
+
+    #[test]
+    fn gather_rows_matches_local_content() {
+        let w = World::new(3);
+        w.run(|comm| {
+            let p = p_matrix(comm.rank(), comm.size());
+            // every rank asks for rows it does NOT own
+            let needed: Vec<u64> = (0..8u64)
+                .filter(|&g| p.row_layout.owner(g as usize) != comm.rank())
+                .collect();
+            let plan = RowGatherPlan::build(&comm, &p.row_layout, &needed);
+            let pr = plan.gather_csr(&comm, &p);
+            assert_eq!(pr.nrows(), needed.len());
+            for (k, &g) in needed.iter().enumerate() {
+                let (cols, vals) = pr.row(k);
+                let gi = g as usize;
+                let mut want: Vec<u64> = vec![(gi % 4) as u64, ((gi + 1) % 4) as u64];
+                want.sort_unstable();
+                want.dedup();
+                assert_eq!(cols, &want[..], "row {g}");
+                for (&c, &v) in cols.iter().zip(vals) {
+                    assert_eq!(v, (10 * gi) as f64 + c as f64);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn pattern_then_update_equals_full_gather() {
+        let w = World::new(2);
+        w.run(|comm| {
+            let p = p_matrix(comm.rank(), comm.size());
+            let needed: Vec<u64> = (0..8u64)
+                .filter(|&g| p.row_layout.owner(g as usize) != comm.rank())
+                .collect();
+            let plan = RowGatherPlan::build(&comm, &p.row_layout, &needed);
+            let mut pr = plan.gather_pattern_csr(&comm, &p);
+            // pattern present, values zero
+            assert!(pr.nnz() > 0);
+            assert!(pr.vals.iter().all(|&v| v == 0.0));
+            plan.update_values_csr(&comm, &p, &mut pr);
+            let full = plan.gather_csr(&comm, &p);
+            assert_eq!(pr.rowptr, full.rowptr);
+            assert_eq!(pr.cols, full.cols);
+            assert_eq!(pr.vals, full.vals);
+        });
+    }
+
+    #[test]
+    fn empty_needed_is_fine() {
+        let w = World::new(2);
+        w.run(|comm| {
+            let p = p_matrix(comm.rank(), comm.size());
+            let plan = RowGatherPlan::build(&comm, &p.row_layout, &[]);
+            let pr = plan.gather_csr(&comm, &p);
+            assert_eq!(pr.nrows(), 0);
+            assert_eq!(pr.nnz(), 0);
+        });
+    }
+
+    #[test]
+    fn vector_halo_gather() {
+        let w = World::new(3);
+        w.run(|comm| {
+            let layout = Layout::new_equal(10, comm.size());
+            let local: Vec<f64> =
+                layout.range(comm.rank()).map(|g| (g * g) as f64).collect();
+            let needed: Vec<u64> = (0..10u64)
+                .filter(|&g| layout.owner(g as usize) != comm.rank() && g % 2 == 0)
+                .collect();
+            let plan = VecGatherPlan::build(&comm, &layout, &needed);
+            let halo = plan.gather(&comm, &local);
+            assert_eq!(halo.len(), needed.len());
+            for (k, &g) in needed.iter().enumerate() {
+                assert_eq!(halo[k], (g * g) as f64, "id {g}");
+            }
+        });
+    }
+}

@@ -1,0 +1,147 @@
+//! Contiguous row-block ownership (PETSc `PetscLayout` analog): rank `r`
+//! owns the half-open global index range `[start(r), end(r))`.  Both row
+//! and column spaces of every distributed matrix carry one of these; the
+//! diag/offd split and every owner lookup in the gather plans derive from
+//! it.
+
+/// Contiguous partition of `0..global_size()` over `np` ranks.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Layout {
+    /// `np + 1` cumulative boundaries; rank `r` owns `starts[r]..starts[r+1]`.
+    starts: Vec<usize>,
+}
+
+impl Layout {
+    /// PETSc-style near-equal split: the first `n % np` ranks own one
+    /// extra index.
+    pub fn new_equal(n: usize, np: usize) -> Layout {
+        assert!(np >= 1, "need at least one rank");
+        let base = n / np;
+        let rem = n % np;
+        let mut starts = Vec::with_capacity(np + 1);
+        let mut s = 0usize;
+        starts.push(0);
+        for r in 0..np {
+            s += base + usize::from(r < rem);
+            starts.push(s);
+        }
+        Layout { starts }
+    }
+
+    /// Build from explicit per-rank counts (aggregation coarse layouts).
+    pub fn from_counts(counts: &[usize]) -> Layout {
+        assert!(!counts.is_empty(), "need at least one rank");
+        let mut starts = Vec::with_capacity(counts.len() + 1);
+        let mut s = 0usize;
+        starts.push(0);
+        for &c in counts {
+            s += c;
+            starts.push(s);
+        }
+        Layout { starts }
+    }
+
+    /// Number of ranks this layout partitions over.
+    pub fn np(&self) -> usize {
+        self.starts.len() - 1
+    }
+
+    /// Total number of global indices.
+    pub fn global_size(&self) -> usize {
+        *self.starts.last().unwrap()
+    }
+
+    /// First global index owned by `rank`.
+    pub fn start(&self, rank: usize) -> usize {
+        self.starts[rank]
+    }
+
+    /// One past the last global index owned by `rank`.
+    pub fn end(&self, rank: usize) -> usize {
+        self.starts[rank + 1]
+    }
+
+    /// Number of indices owned by `rank`.
+    pub fn local_size(&self, rank: usize) -> usize {
+        self.starts[rank + 1] - self.starts[rank]
+    }
+
+    /// The global index range owned by `rank` (iterable).
+    pub fn range(&self, rank: usize) -> std::ops::Range<usize> {
+        self.starts[rank]..self.starts[rank + 1]
+    }
+
+    /// The rank owning global index `g`.
+    pub fn owner(&self, g: usize) -> usize {
+        debug_assert!(g < self.global_size(), "index {g} out of layout");
+        // starts is sorted; the owner is the last boundary <= g.
+        self.starts.partition_point(|&s| s <= g) - 1
+    }
+
+    /// The same partition with every boundary scaled by `b` (block layout
+    /// -> scalar layout of a block matrix).
+    pub fn scaled(&self, b: usize) -> Layout {
+        Layout { starts: self.starts.iter().map(|&s| s * b).collect() }
+    }
+
+    /// Heap bytes (for memory accounting).
+    pub fn bytes(&self) -> u64 {
+        (self.starts.len() * std::mem::size_of::<usize>()) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_split_covers_all_indices() {
+        let l = Layout::new_equal(10, 3);
+        assert_eq!(l.global_size(), 10);
+        assert_eq!(l.local_size(0), 4); // 10 % 3 = 1 extra on rank 0
+        assert_eq!(l.local_size(1), 3);
+        assert_eq!(l.local_size(2), 3);
+        assert_eq!(l.range(1), 4..7);
+        let total: usize = (0..3).map(|r| l.local_size(r)).sum();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn owner_matches_ranges() {
+        let l = Layout::new_equal(11, 4);
+        for r in 0..4 {
+            for g in l.range(r) {
+                assert_eq!(l.owner(g), r, "index {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn from_counts_allows_empty_ranks() {
+        let l = Layout::from_counts(&[3, 0, 2]);
+        assert_eq!(l.global_size(), 5);
+        assert_eq!(l.local_size(1), 0);
+        assert_eq!(l.owner(3), 2);
+        assert_eq!(l.range(1), 3..3);
+    }
+
+    #[test]
+    fn more_ranks_than_rows() {
+        let l = Layout::new_equal(2, 5);
+        assert_eq!(l.local_size(0), 1);
+        assert_eq!(l.local_size(1), 1);
+        for r in 2..5 {
+            assert_eq!(l.local_size(r), 0);
+        }
+        assert_eq!(l.owner(1), 1);
+    }
+
+    #[test]
+    fn scaled_multiplies_boundaries() {
+        let l = Layout::new_equal(5, 2);
+        let s = l.scaled(3);
+        assert_eq!(s.global_size(), 15);
+        assert_eq!(s.start(1), l.start(1) * 3);
+        assert_eq!(s.local_size(0), l.local_size(0) * 3);
+    }
+}

@@ -1,0 +1,29 @@
+//! Distributed-memory substrate (simulated MPI, PETSc-shaped).
+//!
+//! The paper's algorithms are written against a PETSc-style layout:
+//! contiguous per-rank row ownership ([`Layout`]), distributed matrices
+//! split into an owned-column `diag` block and a compacted off-rank `offd`
+//! block ([`DistCsr`], [`DistBcsr`]), one-shot gathers of remote `P` rows
+//! ([`RowGatherPlan`] → [`PrMat`]/[`PrBlocks`]), and vector halos
+//! ([`VecGatherPlan`], [`DistSpmv`]).  [`World`] runs `np` rank closures
+//! on threads with real byte-level message passing ([`Comm`]), so message
+//! counts and bytes are measured, not modeled — the α-β model
+//! ([`COMM_ALPHA_SECS`], [`COMM_BETA_SECS_PER_BYTE`]) is applied on top of
+//! the measured traffic when simulated parallel times are reported
+//! (DESIGN.md §7).
+
+mod bcsr;
+mod csr;
+mod gather;
+mod layout;
+mod transpose;
+pub mod vec;
+mod world;
+
+pub use bcsr::{DistBcsr, DistBcsrBuilder};
+pub use csr::{DistCsr, DistCsrBuilder};
+pub use gather::{PrBlocks, PrMat, RowGatherPlan, VecGatherPlan};
+pub use layout::Layout;
+pub use transpose::transpose_dist;
+pub use vec::{DistSpmv, DistVec};
+pub use world::{Comm, CommStats, World, COMM_ALPHA_SECS, COMM_BETA_SECS_PER_BYTE};

@@ -1,0 +1,116 @@
+//! Explicit distributed transpose (PETSc `MatTranspose` analog) — the
+//! general-`R` path of [`crate::ptap::rap`] and the baseline's `Pᵀ` when a
+//! whole-matrix transpose is wanted rather than the local-block transposes
+//! the two-step product keeps.
+
+use crate::util::bytebuf::{ByteReader, ByteWriter};
+
+use super::csr::{DistCsr, DistCsrBuilder};
+use super::world::Comm;
+
+/// Compute `Aᵀ`, distributed over `A.col_layout × A.row_layout`
+/// (collective).  Every local entry `(i, j)` is shipped to the owner of
+/// global row `j` in the transpose; receivers sort and assemble.
+pub fn transpose_dist(comm: &Comm, a: &DistCsr) -> DistCsr {
+    let np = comm.size();
+    let rbeg = a.row_begin() as u64;
+    let cbeg = a.col_begin() as u64;
+    // bucket (t_row = a_col, t_col = a_row, v) triples by owner of t_row
+    let mut writers: Vec<Option<ByteWriter>> = (0..np).map(|_| None).collect();
+    let mut push = |owner: usize, trow: u64, tcol: u64, v: f64| {
+        let w = writers[owner].get_or_insert_with(ByteWriter::new);
+        w.u64(trow);
+        w.u64(tcol);
+        w.f64(v);
+    };
+    for i in 0..a.local_nrows() {
+        let gi = rbeg + i as u64;
+        let (dc, dv) = a.diag.row(i);
+        for (&c, &v) in dc.iter().zip(dv) {
+            let gc = cbeg + c as u64;
+            push(a.col_layout.owner(gc as usize), gc, gi, v);
+        }
+        let (oc, ov) = a.offd.row(i);
+        for (&c, &v) in oc.iter().zip(ov) {
+            let gc = a.garray[c as usize];
+            push(a.col_layout.owner(gc as usize), gc, gi, v);
+        }
+    }
+    let sends: Vec<(usize, Vec<u8>)> = writers
+        .into_iter()
+        .enumerate()
+        .filter_map(|(d, w)| w.map(|w| (d, w.into_bytes())))
+        .collect();
+    let recvd = comm.exchange(sends);
+
+    let mut triples: Vec<(u64, u64, f64)> = Vec::new();
+    for (_src, payload) in &recvd {
+        let mut r = ByteReader::new(payload);
+        while !r.done() {
+            let trow = r.u64();
+            let tcol = r.u64();
+            let v = r.f64();
+            triples.push((trow, tcol, v));
+        }
+    }
+    // entries of A are unique, so (trow, tcol) keys are unique
+    triples.sort_unstable_by_key(|&(r, c, _)| (r, c));
+
+    let row_layout = a.col_layout.clone();
+    let col_layout = a.row_layout.clone();
+    let mut b = DistCsrBuilder::new(comm.rank(), row_layout.clone(), col_layout);
+    let mut entries: Vec<(u64, f64)> = Vec::new();
+    let mut k = 0usize;
+    for gr in row_layout.range(comm.rank()) {
+        entries.clear();
+        while k < triples.len() && triples[k].0 == gr as u64 {
+            entries.push((triples[k].1, triples[k].2));
+            k += 1;
+        }
+        b.push_row(&entries);
+    }
+    debug_assert_eq!(k, triples.len(), "received transpose entries for unowned rows");
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::World;
+    use crate::gen::random_dist_csr;
+
+    #[test]
+    fn matches_sequential_transpose() {
+        for np in [1, 2, 4] {
+            let w = World::new(np);
+            w.run(|comm| {
+                let a = random_dist_csr(comm.rank(), comm.size(), 17, 9, 3, 123);
+                let t = transpose_dist(&comm, &a);
+                t.validate().unwrap();
+                assert_eq!(t.global_nrows(), 9);
+                assert_eq!(t.global_ncols(), 17);
+                let gt = t.gather_global(&comm);
+                let ga = a.gather_global(&comm);
+                assert_eq!(gt, ga.transpose(), "np={np}");
+            });
+        }
+    }
+
+    #[test]
+    fn empty_matrix_transposes_to_empty() {
+        let w = World::new(2);
+        w.run(|comm| {
+            use crate::dist::{DistCsrBuilder, Layout};
+            let rl = Layout::new_equal(6, comm.size());
+            let cl = Layout::new_equal(4, comm.size());
+            let mut b = DistCsrBuilder::new(comm.rank(), rl.clone(), cl);
+            for _ in rl.range(comm.rank()) {
+                b.push_row(&[]);
+            }
+            let a = b.finish();
+            let t = transpose_dist(&comm, &a);
+            t.validate().unwrap();
+            assert_eq!(t.nnz_global(&comm), 0);
+        });
+    }
+}

@@ -1,0 +1,189 @@
+//! Distributed vectors and the halo-exchange SpMV built on them.
+
+use super::csr::DistCsr;
+use super::gather::VecGatherPlan;
+use super::layout::Layout;
+use super::world::Comm;
+
+/// One rank's contiguous slice of a global vector.
+#[derive(Debug, Clone)]
+pub struct DistVec {
+    pub layout: Layout,
+    pub rank: usize,
+    /// Local entries; `vals[i]` is global entry `layout.start(rank) + i`.
+    pub vals: Vec<f64>,
+}
+
+impl DistVec {
+    pub fn zeros(layout: Layout, rank: usize) -> DistVec {
+        let n = layout.local_size(rank);
+        DistVec { layout, rank, vals: vec![0.0; n] }
+    }
+
+    /// Build from a function of the *global* index — every rank computes
+    /// its slice of the same global vector, independent of the rank count.
+    pub fn from_fn(layout: Layout, rank: usize, f: impl Fn(usize) -> f64) -> DistVec {
+        let vals = layout.range(rank).map(f).collect();
+        DistVec { layout, rank, vals }
+    }
+
+    pub fn local_len(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn global_len(&self) -> usize {
+        self.layout.global_size()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.vals.len() * 8) as u64
+    }
+
+    pub fn fill(&mut self, v: f64) {
+        self.vals.fill(v);
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for v in &mut self.vals {
+            *v *= s;
+        }
+    }
+
+    /// `self += alpha * x`.
+    pub fn axpy(&mut self, alpha: f64, x: &DistVec) {
+        debug_assert_eq!(self.vals.len(), x.vals.len());
+        for (a, &b) in self.vals.iter_mut().zip(&x.vals) {
+            *a += alpha * b;
+        }
+    }
+
+    /// `self = beta * self + x`.
+    pub fn aypx(&mut self, beta: f64, x: &DistVec) {
+        debug_assert_eq!(self.vals.len(), x.vals.len());
+        for (a, &b) in self.vals.iter_mut().zip(&x.vals) {
+            *a = beta * *a + b;
+        }
+    }
+
+    /// Global dot product (collective; bit-identical on every rank).
+    pub fn dot(&self, comm: &Comm, other: &DistVec) -> f64 {
+        debug_assert_eq!(self.vals.len(), other.vals.len());
+        let local: f64 = self.vals.iter().zip(&other.vals).map(|(&a, &b)| a * b).sum();
+        comm.allreduce_sum_f64(local)
+    }
+
+    /// Global 2-norm (collective).
+    pub fn norm2(&self, comm: &Comm) -> f64 {
+        self.dot(comm, self).sqrt()
+    }
+}
+
+/// Halo-exchange sparse matrix-vector product: the plan for `A.garray` is
+/// built once and reused every application (PETSc `MatMult` scatter).
+#[derive(Debug)]
+pub struct DistSpmv {
+    halo: VecGatherPlan,
+}
+
+impl DistSpmv {
+    /// Collective: build the halo plan for `a`'s off-diagonal columns.
+    pub fn new(comm: &Comm, a: &DistCsr) -> DistSpmv {
+        DistSpmv { halo: VecGatherPlan::build(comm, &a.col_layout, &a.garray) }
+    }
+
+    /// Fetch the halo entries of `x` named by `a.garray` (collective).
+    pub fn gather_halo(&self, comm: &Comm, x: &DistVec) -> Vec<f64> {
+        self.halo.gather(comm, &x.vals)
+    }
+
+    /// `y = A x` (collective).
+    pub fn apply(&self, comm: &Comm, a: &DistCsr, x: &DistVec, y: &mut DistVec) {
+        debug_assert_eq!(x.vals.len(), a.diag.ncols);
+        debug_assert_eq!(y.vals.len(), a.local_nrows());
+        let halo = self.halo.gather(comm, &x.vals);
+        for i in 0..a.local_nrows() {
+            let mut acc = 0.0;
+            let (dc, dv) = a.diag.row(i);
+            for (&c, &v) in dc.iter().zip(dv) {
+                acc += v * x.vals[c as usize];
+            }
+            let (oc, ov) = a.offd.row(i);
+            for (&c, &v) in oc.iter().zip(ov) {
+                acc += v * halo[c as usize];
+            }
+            y.vals[i] = acc;
+        }
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.halo.bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::World;
+    use crate::gen::{grid_laplacian, Grid3};
+
+    #[test]
+    fn spmv_matches_sequential() {
+        for np in [1, 2, 3] {
+            let w = World::new(np);
+            let pieces = w.run(|comm| {
+                let a = grid_laplacian(Grid3::cube(4), comm.rank(), comm.size());
+                let spmv = DistSpmv::new(&comm, &a);
+                let x = DistVec::from_fn(a.row_layout.clone(), comm.rank(), |g| {
+                    (g as f64 * 0.3).sin()
+                });
+                let mut y = DistVec::zeros(a.row_layout.clone(), comm.rank());
+                spmv.apply(&comm, &a, &x, &mut y);
+                (a.row_begin(), y.vals, a.gather_global(&comm))
+            });
+            let g = &pieces[0].2;
+            let xf: Vec<f64> = (0..g.ncols).map(|i| (i as f64 * 0.3).sin()).collect();
+            let mut want = vec![0.0; g.nrows];
+            g.spmv(&xf, &mut want);
+            for (start, vals, _) in &pieces {
+                for (k, &v) in vals.iter().enumerate() {
+                    assert!((v - want[start + k]).abs() < 1e-12, "np={np} row {}", start + k);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dot_and_norm_are_rank_invariant() {
+        let run = |np: usize| -> (f64, f64) {
+            let w = World::new(np);
+            w.run(|comm| {
+                let l = Layout::new_equal(37, comm.size());
+                let x = DistVec::from_fn(l.clone(), comm.rank(), |g| g as f64 - 18.0);
+                let y = DistVec::from_fn(l, comm.rank(), |g| 1.0 / (1.0 + g as f64));
+                (x.dot(&comm, &y), x.norm2(&comm))
+            })
+            .remove(0)
+        };
+        let (d1, n1) = run(1);
+        for np in [2, 4] {
+            let (d, n) = run(np);
+            assert!((d - d1).abs() < 1e-9, "np={np}");
+            assert!((n - n1).abs() < 1e-9, "np={np}");
+        }
+    }
+
+    #[test]
+    fn blas1_ops() {
+        let l = Layout::new_equal(5, 1);
+        let mut x = DistVec::from_fn(l.clone(), 0, |g| g as f64);
+        let y = DistVec::from_fn(l, 0, |_| 2.0);
+        x.axpy(0.5, &y); // x = g + 1
+        assert_eq!(x.vals, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        x.aypx(2.0, &y); // x = 2x + 2
+        assert_eq!(x.vals, vec![4.0, 6.0, 8.0, 10.0, 12.0]);
+        x.scale(0.5);
+        assert_eq!(x.vals[0], 2.0);
+        x.fill(0.0);
+        assert!(x.vals.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,346 @@
+//! Simulated MPI: a thread-per-rank world with deterministic collectives.
+//!
+//! [`World::run`] spawns one OS thread per rank and hands each a [`Comm`].
+//! Communication runs over a full mesh of FIFO channels — one per ordered
+//! rank pair — and every collective moves **exactly one frame per pair**,
+//! so collectives stay aligned without barriers and a panicking rank
+//! cascades cleanly (peers observe a disconnected channel) instead of
+//! deadlocking the test suite.
+//!
+//! Determinism: received payloads are always ordered by source rank and
+//! reductions combine in rank order, so every rank computes bit-identical
+//! global values and repeated runs of a world reproduce byte-identical
+//! messages.
+
+use std::cell::Cell;
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// α (per-message latency) of the α-β communication model, seconds.
+/// Tuned to a commodity cluster interconnect (DESIGN.md §7).
+pub const COMM_ALPHA_SECS: f64 = 2.0e-6;
+
+/// β (per-byte) of the α-β communication model, seconds/byte (~2 GB/s).
+pub const COMM_BETA_SECS_PER_BYTE: f64 = 5.0e-10;
+
+/// Snapshot of one rank's cumulative send-side traffic.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct CommStats {
+    /// Point-to-point messages sent to other ranks.
+    pub msgs: u64,
+    /// Payload bytes sent to other ranks.
+    pub bytes: u64,
+}
+
+impl CommStats {
+    /// The α-β model applied to this rank's traffic.
+    pub fn modeled_secs(&self) -> f64 {
+        self.msgs as f64 * COMM_ALPHA_SECS + self.bytes as f64 * COMM_BETA_SECS_PER_BYTE
+    }
+}
+
+/// One rank's endpoint of the simulated communicator.
+pub struct Comm {
+    rank: usize,
+    np: usize,
+    /// `tx[d]` sends one frame to rank `d` (index `rank` loops back).
+    tx: Vec<Sender<Vec<u8>>>,
+    /// `rx[s]` receives frames sent by rank `s`.
+    rx: Vec<Receiver<Vec<u8>>>,
+    sent_msgs: Cell<u64>,
+    sent_bytes: Cell<u64>,
+}
+
+impl Comm {
+    /// This rank's id, `0..size()`.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Number of ranks in the world.
+    pub fn size(&self) -> usize {
+        self.np
+    }
+
+    /// Cumulative send-side traffic of this rank.
+    pub fn stats(&self) -> CommStats {
+        CommStats { msgs: self.sent_msgs.get(), bytes: self.sent_bytes.get() }
+    }
+
+    /// One collective round: every rank sends exactly one frame to every
+    /// rank (self included) and receives one frame from every rank.
+    fn round(&self, frames: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
+        debug_assert_eq!(frames.len(), self.np);
+        for (d, frame) in frames.into_iter().enumerate() {
+            self.tx[d].send(frame).expect("peer rank terminated early");
+        }
+        (0..self.np)
+            .map(|s| self.rx[s].recv().expect("peer rank panicked"))
+            .collect()
+    }
+
+    /// Sparse all-to-all (collective): deliver each `(dest, payload)` pair
+    /// and return the `(source, payload)` pairs addressed to this rank,
+    /// ordered by source rank (then send order within a source).  Every
+    /// rank must call this the same number of times; empty `sends` are
+    /// fine.
+    pub fn exchange(&self, sends: Vec<(usize, Vec<u8>)>) -> Vec<(usize, Vec<u8>)> {
+        // frame per destination: [count u32, (len u32, bytes)*]
+        let mut buckets: Vec<Vec<Vec<u8>>> = (0..self.np).map(|_| Vec::new()).collect();
+        for (dest, payload) in sends {
+            if dest != self.rank {
+                self.sent_msgs.set(self.sent_msgs.get() + 1);
+                self.sent_bytes.set(self.sent_bytes.get() + payload.len() as u64);
+            }
+            buckets[dest].push(payload);
+        }
+        let frames: Vec<Vec<u8>> = buckets
+            .into_iter()
+            .map(|payloads| {
+                let total: usize = payloads.iter().map(|p| p.len() + 4).sum();
+                let mut f = Vec::with_capacity(4 + total);
+                f.extend_from_slice(&(payloads.len() as u32).to_le_bytes());
+                for p in &payloads {
+                    f.extend_from_slice(&(p.len() as u32).to_le_bytes());
+                    f.extend_from_slice(p);
+                }
+                f
+            })
+            .collect();
+        let recvd = self.round(frames);
+        let mut out = Vec::new();
+        for (src, frame) in recvd.into_iter().enumerate() {
+            let count = u32::from_le_bytes(frame[0..4].try_into().unwrap()) as usize;
+            let mut pos = 4usize;
+            for _ in 0..count {
+                let len = u32::from_le_bytes(frame[pos..pos + 4].try_into().unwrap()) as usize;
+                pos += 4;
+                out.push((src, frame[pos..pos + len].to_vec()));
+                pos += len;
+            }
+        }
+        out
+    }
+
+    /// Allgather of raw byte payloads (collective): returns one payload
+    /// per rank, indexed by rank.
+    pub fn allgather_bytes(&self, payload: Vec<u8>) -> Vec<Vec<u8>> {
+        self.sent_msgs.set(self.sent_msgs.get() + (self.np as u64 - 1));
+        self.sent_bytes
+            .set(self.sent_bytes.get() + (self.np as u64 - 1) * payload.len() as u64);
+        let frames: Vec<Vec<u8>> = (0..self.np).map(|_| payload.clone()).collect();
+        self.round(frames)
+    }
+
+    /// Allgather of one `u64` per rank (collective), indexed by rank.
+    pub fn all_u64(&self, v: u64) -> Vec<u64> {
+        self.sent_msgs.set(self.sent_msgs.get() + (self.np as u64 - 1));
+        self.sent_bytes.set(self.sent_bytes.get() + (self.np as u64 - 1) * 8);
+        let frames: Vec<Vec<u8>> = (0..self.np).map(|_| v.to_le_bytes().to_vec()).collect();
+        self.round(frames)
+            .into_iter()
+            .map(|f| u64::from_le_bytes(f[0..8].try_into().unwrap()))
+            .collect()
+    }
+
+    /// Global sum of one `u64` per rank (collective).
+    pub fn allreduce_sum_u64(&self, v: u64) -> u64 {
+        self.all_u64(v).into_iter().sum()
+    }
+
+    /// Global sum of one `f64` per rank (collective).  Combines in rank
+    /// order, so every rank computes the bit-identical result.
+    pub fn allreduce_sum_f64(&self, v: f64) -> f64 {
+        self.sent_msgs.set(self.sent_msgs.get() + (self.np as u64 - 1));
+        self.sent_bytes.set(self.sent_bytes.get() + (self.np as u64 - 1) * 8);
+        let frames: Vec<Vec<u8>> = (0..self.np).map(|_| v.to_le_bytes().to_vec()).collect();
+        self.round(frames)
+            .into_iter()
+            .map(|f| f64::from_le_bytes(f[0..8].try_into().unwrap()))
+            .sum()
+    }
+}
+
+/// A set of `np` simulated ranks.
+pub struct World {
+    np: usize,
+}
+
+impl World {
+    pub fn new(np: usize) -> World {
+        assert!(np >= 1, "world needs at least one rank");
+        World { np }
+    }
+
+    pub fn size(&self) -> usize {
+        self.np
+    }
+
+    /// Run `f` once per rank on its own thread and return the per-rank
+    /// results ordered by rank.  Scoped threads: `f` may borrow from the
+    /// caller.  A panic in any rank propagates (preferring the original
+    /// panic over the "peer died" cascades it triggers in other ranks).
+    pub fn run<T, F>(&self, f: F) -> Vec<T>
+    where
+        F: Fn(Comm) -> T + Send + Sync,
+        T: Send,
+    {
+        let np = self.np;
+        // full channel mesh: pair (s, d) has its own FIFO
+        let mut txs: Vec<Vec<Option<Sender<Vec<u8>>>>> =
+            (0..np).map(|_| (0..np).map(|_| None).collect()).collect();
+        let mut rxs: Vec<Vec<Option<Receiver<Vec<u8>>>>> =
+            (0..np).map(|_| (0..np).map(|_| None).collect()).collect();
+        for (s, row) in txs.iter_mut().enumerate() {
+            for (d, slot) in row.iter_mut().enumerate() {
+                let (tx, rx) = channel();
+                *slot = Some(tx);
+                rxs[d][s] = Some(rx);
+            }
+        }
+        let comms: Vec<Comm> = txs
+            .into_iter()
+            .zip(rxs)
+            .enumerate()
+            .map(|(rank, (tx_row, rx_col))| Comm {
+                rank,
+                np,
+                tx: tx_row.into_iter().map(|t| t.unwrap()).collect(),
+                rx: rx_col.into_iter().map(|r| r.unwrap()).collect(),
+                sent_msgs: Cell::new(0),
+                sent_bytes: Cell::new(0),
+            })
+            .collect();
+
+        let f_ref = &f;
+        let joined: Vec<std::thread::Result<T>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = comms
+                .into_iter()
+                .map(|comm| scope.spawn(move || f_ref(comm)))
+                .collect();
+            handles.into_iter().map(|h| h.join()).collect()
+        });
+        // prefer the original panic over "peer rank ..." cascades
+        if joined.iter().any(|r| r.is_err()) {
+            let is_cascade = |p: &(dyn std::any::Any + Send)| -> bool {
+                let msg = p
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| p.downcast_ref::<String>().cloned())
+                    .unwrap_or_default();
+                msg.contains("peer rank")
+            };
+            let mut cascade = None;
+            for r in joined {
+                if let Err(p) = r {
+                    if !is_cascade(p.as_ref()) {
+                        std::panic::resume_unwind(p);
+                    }
+                    cascade.get_or_insert(p);
+                }
+            }
+            std::panic::resume_unwind(cascade.unwrap());
+        }
+        joined.into_iter().map(|r| r.unwrap()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_ordered_by_rank() {
+        let w = World::new(4);
+        let out = w.run(|c| (c.rank(), c.size()));
+        assert_eq!(out, vec![(0, 4), (1, 4), (2, 4), (3, 4)]);
+    }
+
+    #[test]
+    fn exchange_routes_and_orders_by_source() {
+        let w = World::new(3);
+        let all = w.run(|c| {
+            // every rank sends its id to every *other* rank
+            let sends: Vec<(usize, Vec<u8>)> = (0..c.size())
+                .filter(|&d| d != c.rank())
+                .map(|d| (d, vec![c.rank() as u8]))
+                .collect();
+            c.exchange(sends)
+        });
+        for (me, inbox) in all.iter().enumerate() {
+            let srcs: Vec<usize> = inbox.iter().map(|&(s, _)| s).collect();
+            let want: Vec<usize> = (0..3).filter(|&s| s != me).collect();
+            assert_eq!(srcs, want);
+            for (s, p) in inbox {
+                assert_eq!(p, &vec![*s as u8]);
+            }
+        }
+    }
+
+    #[test]
+    fn exchange_supports_empty_and_multiple_payloads() {
+        let w = World::new(2);
+        let all = w.run(|c| {
+            if c.rank() == 0 {
+                c.exchange(vec![(1, vec![1]), (1, vec![2, 3])])
+            } else {
+                c.exchange(Vec::new())
+            }
+        });
+        assert!(all[0].is_empty());
+        assert_eq!(all[1], vec![(0, vec![1]), (0, vec![2, 3])]);
+    }
+
+    #[test]
+    fn collectives_compose_over_many_rounds() {
+        let w = World::new(3);
+        let sums = w.run(|c| {
+            let mut acc = 0u64;
+            for round in 0..50u64 {
+                acc += c.allreduce_sum_u64(round + c.rank() as u64);
+            }
+            acc
+        });
+        assert!(sums.iter().all(|&s| s == sums[0]));
+    }
+
+    #[test]
+    fn allgather_indexed_by_rank() {
+        let w = World::new(3);
+        let all = w.run(|c| c.allgather_bytes(vec![c.rank() as u8 * 10]));
+        for per_rank in all {
+            assert_eq!(per_rank, vec![vec![0], vec![10], vec![20]]);
+        }
+    }
+
+    #[test]
+    fn reduce_f64_is_identical_on_all_ranks() {
+        let w = World::new(4);
+        let vals = w.run(|c| c.allreduce_sum_f64(0.1 * (c.rank() as f64 + 1.0)));
+        assert!(vals.iter().all(|v| v.to_bits() == vals[0].to_bits()));
+    }
+
+    #[test]
+    fn stats_count_remote_traffic_only() {
+        let w = World::new(2);
+        let stats = w.run(|c| {
+            let _ = c.exchange(vec![(c.rank(), vec![9; 100]), ((c.rank() + 1) % 2, vec![7; 8])]);
+            c.stats()
+        });
+        for s in stats {
+            assert_eq!(s.msgs, 1);
+            assert_eq!(s.bytes, 8);
+        }
+    }
+
+    #[test]
+    fn single_rank_world_loops_back() {
+        let w = World::new(1);
+        let out = w.run(|c| {
+            let r = c.exchange(vec![(0, vec![42])]);
+            assert_eq!(r, vec![(0, vec![42])]);
+            assert_eq!(c.all_u64(7), vec![7]);
+            c.allreduce_sum_u64(3)
+        });
+        assert_eq!(out, vec![3]);
+    }
+}

@@ -177,6 +177,64 @@ mod tests {
         assert_eq!(m.get(1), Some(3.0));
     }
 
+    /// Keys 0, 7, 13, 16 share slot 7 of an 8-slot table (splitmix64
+    /// finalizer, precomputed): probing must wrap and `+=` must still find
+    /// the right pair after the wrap.
+    #[test]
+    fn probing_wraps_and_accumulates() {
+        let mut m = IntMap::with_capacity(4); // 8 slots
+        for &k in &[0u64, 7, 13, 16] {
+            m.add(k, k as f64);
+        }
+        // key 6 hashes to slot 0, occupied by the wrapped cluster
+        m.add(6, 0.5);
+        m.add(13, 100.0); // accumulate into a wrapped slot
+        assert_eq!(m.get(13), Some(113.0));
+        assert_eq!(m.get(6), Some(0.5));
+        assert_eq!(m.get(0), Some(0.0));
+        assert_eq!(m.get(29), None);
+        assert_eq!(m.len(), 5);
+    }
+
+    /// Growth in the middle of accumulation must preserve every partial
+    /// sum (rehash moves pairs, not just keys).
+    #[test]
+    fn resize_preserves_partial_sums() {
+        let mut m = IntMap::with_capacity(4);
+        for round in 0..4 {
+            for k in 0..200u64 {
+                m.add(k, 0.25);
+            }
+            for k in 0..200u64 {
+                assert_eq!(m.get(k), Some(0.25 * (round + 1) as f64), "key {k}");
+            }
+        }
+    }
+
+    /// The numeric row-accumulator pattern (paper Alg. 3): one map reused
+    /// across rows with O(1) clear; per-row contents exact, no
+    /// reallocation after warm-up.
+    #[test]
+    fn reuse_across_rows_is_exact_and_allocation_stable() {
+        let mut m = IntMap::with_capacity(32);
+        let (mut ks, mut vs) = (Vec::new(), Vec::new());
+        // warm the collect_sorted scratch, then freeze the footprint
+        m.add(1, 1.0);
+        m.collect_sorted(&mut ks, &mut vs);
+        m.clear();
+        let warm_bytes = m.bytes();
+        for row in 0..3_000u64 {
+            m.add(row, 1.0);
+            m.add(row + 1, 2.0);
+            m.add(row, 0.5);
+            m.collect_sorted(&mut ks, &mut vs);
+            assert_eq!(ks, vec![row, row + 1]);
+            assert_eq!(vs, vec![1.5, 2.0]);
+            m.clear();
+            assert_eq!(m.bytes(), warm_bytes, "row {row} reallocated");
+        }
+    }
+
     #[test]
     fn collect_sorted_by_key() {
         let mut m = IntMap::default();

@@ -179,6 +179,62 @@ mod tests {
         assert_eq!(out, vec![1, 3, 5, 7, 9]);
     }
 
+    /// Keys 0, 7, 13, 16, 21 all hash to slot 7 of an 8-slot table
+    /// (precomputed from the splitmix64 finalizer), so linear probing must
+    /// wrap around the end of the key array.
+    #[test]
+    fn probing_wraps_around_table_end() {
+        let mut s = IntSet::with_capacity(4); // 8 slots
+        for &k in &[0u64, 7, 13, 16] {
+            assert!(s.insert(k));
+        }
+        // key 6 hashes to slot 0, which the wrapped probes occupied
+        assert!(s.insert(6));
+        for &k in &[0u64, 7, 13, 16, 6] {
+            assert!(s.contains(k), "key {k} lost after wrap-around");
+        }
+        assert!(!s.contains(21));
+        assert!(!s.contains(29));
+        assert_eq!(s.len(), 5);
+    }
+
+    /// Growing rehashes every live key and drops none, including a
+    /// colliding cluster, and keys stay findable through further growth.
+    #[test]
+    fn resize_rehashes_colliding_cluster() {
+        let mut s = IntSet::with_capacity(4);
+        let keys: Vec<u64> = [0u64, 7, 13, 16, 21].into_iter().chain(100..160).collect();
+        for (i, &k) in keys.iter().enumerate() {
+            s.insert(k);
+            assert_eq!(s.len(), i + 1);
+            for &prev in &keys[..=i] {
+                assert!(s.contains(prev), "lost {prev} after inserting {k}");
+            }
+        }
+        let bytes_grown = s.bytes();
+        assert!(bytes_grown > IntSet::with_capacity(4).bytes(), "table never grew");
+    }
+
+    /// The row-accumulator reuse pattern (paper Alg. 1): one set serves
+    /// thousands of rows via O(1) clear, never freeing and never leaking
+    /// keys between rows.
+    #[test]
+    fn reuse_across_rows_is_exact_and_allocation_stable() {
+        let mut s = IntSet::with_capacity(64);
+        let mut out = Vec::new();
+        let warm_bytes = s.bytes();
+        for row in 0..5_000u64 {
+            // row i contributes keys {3i, 3i+1, 3i+2} with duplicates
+            for k in [3 * row, 3 * row + 1, 3 * row + 2, 3 * row] {
+                s.insert(k);
+            }
+            s.collect_sorted(&mut out);
+            assert_eq!(out, vec![3 * row, 3 * row + 1, 3 * row + 2]);
+            s.clear();
+            assert_eq!(s.bytes(), warm_bytes, "row {row} reallocated");
+        }
+    }
+
     #[test]
     fn many_generations() {
         let mut s = IntSet::with_capacity(8);

@@ -165,6 +165,65 @@ mod tests {
         }
     }
 
+    /// u32 keys 0, 7, 13, 16 hash (via the shared u64 finalizer) to slot 7
+    /// of an 8-slot table: wrap-around probing with 1-byte stamps.
+    #[test]
+    fn probing_wraps_around_table_end() {
+        let mut s = Set32::with_capacity(4); // 8 slots
+        for &k in &[0u32, 7, 13, 16] {
+            assert!(s.insert(k));
+            assert!(!s.insert(k));
+        }
+        assert!(s.insert(6)); // slot 0, occupied by the wrapped cluster
+        for &k in &[0u32, 7, 13, 16, 6] {
+            assert!(s.contains(k), "key {k} lost after wrap-around");
+        }
+        assert!(!s.contains(21));
+        assert_eq!(s.len(), 5);
+    }
+
+    /// Rehash on growth keeps every live key across repeated doublings,
+    /// and the generation stamp survives the grow (fresh table, gen 1).
+    #[test]
+    fn resize_rehash_after_clears() {
+        let mut s = Set32::with_capacity(4);
+        // age the generation counter first
+        for _ in 0..300 {
+            s.insert(1);
+            s.clear();
+        }
+        for k in 0..500u32 {
+            s.insert(k * 3);
+        }
+        assert_eq!(s.len(), 500);
+        for k in 0..500u32 {
+            assert!(s.contains(k * 3));
+            assert!(!s.contains(k * 3 + 1));
+        }
+    }
+
+    /// The symbolic-table reuse pattern (`C_l^H` row sets): exact contents
+    /// per row, zero reallocation after warm-up, across > 255 generations
+    /// (u8 stamp wrap included).
+    #[test]
+    fn reuse_across_rows_many_generations() {
+        let mut s = Set32::with_capacity(16);
+        let mut out = Vec::new();
+        let warm_bytes = s.bytes();
+        for row in 0..2_000u32 {
+            for k in [row, row ^ 1, row, row.wrapping_mul(7)] {
+                s.insert(k);
+            }
+            s.collect_sorted_u64(&mut out);
+            let mut want: Vec<u64> = vec![row as u64, (row ^ 1) as u64, row.wrapping_mul(7) as u64];
+            want.sort_unstable();
+            want.dedup();
+            assert_eq!(out, want, "row {row}");
+            s.clear();
+            assert_eq!(s.bytes(), warm_bytes, "row {row} reallocated");
+        }
+    }
+
     #[test]
     fn collect_sorted_widens() {
         let mut s = Set32::default();

@@ -5,7 +5,8 @@
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 
 use super::csr::{Csr, CsrBuilder};
 use crate::dist::{DistCsr, DistCsrBuilder, Layout};

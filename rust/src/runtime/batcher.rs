@@ -6,7 +6,7 @@
 
 use crate::mat::dense::block_triple_product_add;
 
-use super::pjrt::KernelRuntime;
+use super::KernelRuntime;
 
 /// Which engine evaluates the batched triple products.
 #[derive(Clone, Copy)]

@@ -1,0 +1,85 @@
+//! Artifact manifest parsing and discovery — pure std, compiled with or
+//! without the `pjrt` feature so callers can always enumerate artifacts
+//! (and skip cleanly when there are none).
+
+use std::path::{Path, PathBuf};
+
+use crate::bail;
+use crate::util::error::{Context, Result};
+
+/// One row of `artifacts/manifest.tsv`.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub entry: String,
+    pub file: String,
+    pub block: usize,
+    pub batch: usize,
+}
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let mut entries = Vec::new();
+        for line in text.lines() {
+            if line.starts_with('#') || line.trim().is_empty() {
+                continue;
+            }
+            let f: Vec<&str> = line.split('\t').collect();
+            if f.len() != 4 {
+                bail!("malformed manifest line: {line:?}");
+            }
+            entries.push(ManifestEntry {
+                entry: f[0].to_string(),
+                file: f[1].to_string(),
+                block: f[2].parse()?,
+                batch: f[3].parse()?,
+            });
+        }
+        Ok(Manifest { entries })
+    }
+}
+
+/// Locate the artifact directory, searching upward from the cwd (lets
+/// examples/benches run from any directory in the repo).
+pub(super) fn find_dir() -> Result<PathBuf> {
+    let mut dir = std::env::current_dir()?;
+    loop {
+        let cand = dir.join(super::DEFAULT_ARTIFACT_DIR);
+        if cand.join("manifest.tsv").exists() {
+            return Ok(cand);
+        }
+        if !dir.pop() {
+            bail!("no artifacts/manifest.tsv found — run `make artifacts`");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_and_rejects_garbage() {
+        let dir = std::env::temp_dir().join("gptap_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.tsv"),
+            "# entry\tfile\tblock\tbatch\nblock_ptap\tf.hlo.txt\t8\t256\n",
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        assert_eq!(m.entries[0].block, 8);
+        std::fs::write(dir.join("manifest.tsv"), "bad line\n").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

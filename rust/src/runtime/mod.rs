@@ -5,12 +5,26 @@
 //! self-contained — this module parses HLO **text** (the 64-bit-id-safe
 //! interchange, see DESIGN.md / aot recipe), compiles it once on the PJRT
 //! CPU client, and executes batched block kernels from the numeric phase.
+//!
+//! The PJRT client itself sits behind the off-by-default `pjrt` cargo
+//! feature (it needs the `xla` crate, unavailable offline).  Without the
+//! feature a stub [`KernelRuntime`] reports the missing feature from its
+//! `load*` constructors and [`BlockBackend::Native`] carries the block
+//! numeric path, so every consumer compiles and runs unchanged.
 
 mod batcher;
+mod manifest;
+#[cfg(feature = "pjrt")]
 mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+mod stub;
 
 pub use batcher::{BlockBackend, TripleBatcher};
-pub use pjrt::{KernelRuntime, Manifest, ManifestEntry};
+pub use manifest::{Manifest, ManifestEntry};
+#[cfg(feature = "pjrt")]
+pub use pjrt::KernelRuntime;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::KernelRuntime;
 
 /// Default artifact directory relative to the repo root.
 pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";

@@ -1,49 +1,14 @@
 //! PJRT CPU client wrapper: manifest-driven artifact loading + execution.
+//! Compiled only with the `pjrt` feature (needs the `xla` crate); without
+//! it, [`super::stub`] provides the same API surface.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::format_err;
+use crate::util::error::{Context, Result};
 
-/// One row of `artifacts/manifest.tsv`.
-#[derive(Debug, Clone)]
-pub struct ManifestEntry {
-    pub entry: String,
-    pub file: String,
-    pub block: usize,
-    pub batch: usize,
-}
-
-/// Parsed artifact manifest.
-#[derive(Debug, Clone, Default)]
-pub struct Manifest {
-    pub entries: Vec<ManifestEntry>,
-}
-
-impl Manifest {
-    pub fn load(dir: &Path) -> Result<Self> {
-        let path = dir.join("manifest.tsv");
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
-        let mut entries = Vec::new();
-        for line in text.lines() {
-            if line.starts_with('#') || line.trim().is_empty() {
-                continue;
-            }
-            let f: Vec<&str> = line.split('\t').collect();
-            if f.len() != 4 {
-                bail!("malformed manifest line: {line:?}");
-            }
-            entries.push(ManifestEntry {
-                entry: f[0].to_string(),
-                file: f[1].to_string(),
-                block: f[2].parse()?,
-                batch: f[3].parse()?,
-            });
-        }
-        Ok(Manifest { entries })
-    }
-}
+use super::manifest::{self, Manifest, ManifestEntry};
 
 /// A compiled kernel executable plus its static shapes.
 struct LoadedKernel {
@@ -71,18 +36,18 @@ impl KernelRuntime {
     /// MPI), so rank closures load their own filtered instance cheaply.
     pub fn load_filtered(dir: &Path, pred: impl Fn(&ManifestEntry) -> bool) -> Result<Self> {
         let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e}"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| format_err!("PJRT client: {e}"))?;
         let mut kernels = HashMap::new();
         for m in manifest.entries.iter().filter(|m| pred(m)) {
             let path = dir.join(&m.file);
             let proto = xla::HloModuleProto::from_text_file(
                 path.to_str().context("non-utf8 path")?,
             )
-            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+            .map_err(|e| format_err!("parsing {}: {e}", path.display()))?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = client
                 .compile(&comp)
-                .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+                .map_err(|e| format_err!("compiling {}: {e}", path.display()))?;
             kernels.insert(
                 (m.entry.clone(), m.block),
                 LoadedKernel { exe, batch: m.batch },
@@ -94,16 +59,7 @@ impl KernelRuntime {
     /// Locate the artifact directory, searching upward from the cwd
     /// (lets examples/benches run from any directory in the repo).
     pub fn find_dir() -> Result<PathBuf> {
-        let mut dir = std::env::current_dir()?;
-        loop {
-            let cand = dir.join(super::DEFAULT_ARTIFACT_DIR);
-            if cand.join("manifest.tsv").exists() {
-                return Ok(cand);
-            }
-            if !dir.pop() {
-                bail!("no artifacts/manifest.tsv found — run `make artifacts`");
-            }
-        }
+        manifest::find_dir()
     }
 
     /// Load everything from the default location.
@@ -132,7 +88,9 @@ impl KernelRuntime {
     }
 
     fn literal_3d(data: &[f32], n: usize, b: usize) -> Result<xla::Literal> {
-        Ok(xla::Literal::vec1(data).reshape(&[n as i64, b as i64, b as i64])?)
+        xla::Literal::vec1(data)
+            .reshape(&[n as i64, b as i64, b as i64])
+            .map_err(|e| format_err!("reshape: {e}"))
     }
 
     /// Run the fused triple-product kernel: `out[k] = pl[k]ᵀ a[k] pr[k]`
@@ -156,9 +114,14 @@ impl KernelRuntime {
             Self::literal_3d(a, n, block)?,
             Self::literal_3d(pr, n, block)?,
         ];
-        let result = k.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
+        let result = k
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| format_err!("execute block_ptap: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| format_err!("device->host: {e}"))?;
+        let out = result.to_tuple1().map_err(|e| format_err!("untuple: {e}"))?;
+        out.to_vec::<f32>().map_err(|e| format_err!("to_vec: {e}"))
     }
 
     /// Run the batched block-Jacobi smoother update:
@@ -177,11 +140,21 @@ impl KernelRuntime {
             .with_context(|| format!("no block_jacobi artifact for b={block}"))?;
         let n = k.batch;
         let ld = Self::literal_3d(dinv, n, block)?;
-        let lr = xla::Literal::vec1(r).reshape(&[n as i64, block as i64])?;
-        let lx = xla::Literal::vec1(x).reshape(&[n as i64, block as i64])?;
+        let lr = xla::Literal::vec1(r)
+            .reshape(&[n as i64, block as i64])
+            .map_err(|e| format_err!("reshape: {e}"))?;
+        let lx = xla::Literal::vec1(x)
+            .reshape(&[n as i64, block as i64])
+            .map_err(|e| format_err!("reshape: {e}"))?;
         let lw = xla::Literal::vec1(&[omega]);
-        let result = k.exe.execute::<xla::Literal>(&[ld, lr, lx, lw])?[0][0].to_literal_sync()?;
-        Ok(result.to_tuple1()?.to_vec::<f32>()?)
+        let result = k
+            .exe
+            .execute::<xla::Literal>(&[ld, lr, lx, lw])
+            .map_err(|e| format_err!("execute block_jacobi: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| format_err!("device->host: {e}"))?;
+        let out = result.to_tuple1().map_err(|e| format_err!("untuple: {e}"))?;
+        out.to_vec::<f32>().map_err(|e| format_err!("to_vec: {e}"))
     }
 
     /// Run the batched block SpMV kernel: `y[k] = a[k] x[k]` for one
@@ -193,33 +166,16 @@ impl KernelRuntime {
             .with_context(|| format!("no block_spmv artifact for b={block}"))?;
         let n = k.batch;
         let la = Self::literal_3d(a, n, block)?;
-        let lx = xla::Literal::vec1(x).reshape(&[n as i64, block as i64])?;
-        let result = k.exe.execute::<xla::Literal>(&[la, lx])?[0][0].to_literal_sync()?;
-        Ok(result.to_tuple1()?.to_vec::<f32>()?)
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    // Runtime tests that need built artifacts live in
-    // rust/tests/integration_runtime.rs; here only manifest parsing.
-
-    #[test]
-    fn manifest_parses_and_rejects_garbage() {
-        let dir = std::env::temp_dir().join("gptap_manifest_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        std::fs::write(
-            dir.join("manifest.tsv"),
-            "# entry\tfile\tblock\tbatch\nblock_ptap\tf.hlo.txt\t8\t256\n",
-        )
-        .unwrap();
-        let m = Manifest::load(&dir).unwrap();
-        assert_eq!(m.entries.len(), 1);
-        assert_eq!(m.entries[0].block, 8);
-        std::fs::write(dir.join("manifest.tsv"), "bad line\n").unwrap();
-        assert!(Manifest::load(&dir).is_err());
-        let _ = std::fs::remove_dir_all(&dir);
+        let lx = xla::Literal::vec1(x)
+            .reshape(&[n as i64, block as i64])
+            .map_err(|e| format_err!("reshape: {e}"))?;
+        let result = k
+            .exe
+            .execute::<xla::Literal>(&[la, lx])
+            .map_err(|e| format_err!("execute block_spmv: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| format_err!("device->host: {e}"))?;
+        let out = result.to_tuple1().map_err(|e| format_err!("untuple: {e}"))?;
+        out.to_vec::<f32>().map_err(|e| format_err!("to_vec: {e}"))
     }
 }

@@ -1,0 +1,102 @@
+//! Stub kernel runtime for builds without the `pjrt` feature.
+//!
+//! The type exists so `BlockBackend::Pjrt` and every call site compile
+//! unchanged, but it can never be constructed: `load*` report the missing
+//! feature and callers fall back to [`super::BlockBackend::Native`] (or
+//! skip, as `tests/integration_runtime.rs` and `selfcheck` do).
+
+use std::convert::Infallible;
+use std::path::{Path, PathBuf};
+
+use crate::format_err;
+use crate::util::error::Result;
+
+use super::manifest::{self, ManifestEntry};
+
+/// Uninhabited stand-in for the PJRT runtime (see module docs).
+pub struct KernelRuntime {
+    never: Infallible,
+}
+
+impl KernelRuntime {
+    fn unavailable<T>(dir: &Path) -> Result<T> {
+        Err(format_err!(
+            "artifacts found at {} but this binary was built without the `pjrt` feature \
+             (rebuild with --features pjrt and the xla dependency); the native backend \
+             remains available",
+            dir.display()
+        ))
+    }
+
+    /// Always fails: the PJRT client is not compiled in.
+    pub fn load(dir: &Path) -> Result<Self> {
+        Self::unavailable(dir)
+    }
+
+    /// Always fails: the PJRT client is not compiled in.
+    pub fn load_filtered(dir: &Path, pred: impl Fn(&ManifestEntry) -> bool) -> Result<Self> {
+        let _ = pred;
+        Self::unavailable(dir)
+    }
+
+    /// Locate the artifact directory (works without the feature).
+    pub fn find_dir() -> Result<PathBuf> {
+        manifest::find_dir()
+    }
+
+    /// Always fails: the PJRT client is not compiled in.
+    pub fn load_default() -> Result<Self> {
+        Self::unavailable(&Self::find_dir()?)
+    }
+
+    pub fn has(&self, _entry: &str, _block: usize) -> bool {
+        match self.never {}
+    }
+
+    pub fn block_sizes(&self, _entry: &str) -> Vec<usize> {
+        match self.never {}
+    }
+
+    pub fn batch_of(&self, _entry: &str, _block: usize) -> Option<usize> {
+        match self.never {}
+    }
+
+    pub fn run_block_ptap(
+        &self,
+        _block: usize,
+        _pl: &[f32],
+        _a: &[f32],
+        _pr: &[f32],
+    ) -> Result<Vec<f32>> {
+        match self.never {}
+    }
+
+    pub fn run_block_jacobi(
+        &self,
+        _block: usize,
+        _dinv: &[f32],
+        _r: &[f32],
+        _x: &[f32],
+        _omega: f32,
+    ) -> Result<Vec<f32>> {
+        match self.never {}
+    }
+
+    pub fn run_block_spmv(&self, _block: usize, _a: &[f32], _x: &[f32]) -> Result<Vec<f32>> {
+        match self.never {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_missing_feature() {
+        let dir = std::env::temp_dir().join("gptap_stub_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = KernelRuntime::load(&dir).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

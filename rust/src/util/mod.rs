@@ -3,6 +3,7 @@
 //! are implemented here).
 
 pub mod bytebuf;
+pub mod error;
 pub mod plot;
 pub mod prng;
 pub mod table;

@@ -6,14 +6,48 @@
 
 use std::time::Instant;
 
+/// Raw `clock_gettime` binding (no `libc` crate offline; the symbol comes
+/// from the C runtime every Rust binary already links on unix).  Only the
+/// 64-bit layout is declared, so the binding is gated to 64-bit targets;
+/// 32-bit unix (different `timespec` ABI) takes the portable fallback.
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    #[repr(C)]
+    pub struct Timespec {
+        pub tv_sec: i64,
+        pub tv_nsec: i64,
+    }
+
+    /// `CLOCK_THREAD_CPUTIME_ID` on Linux; the macOS value differs but the
+    /// same symbol exists — gate precisely where it matters.
+    #[cfg(target_os = "linux")]
+    pub const CLOCK_THREAD_CPUTIME_ID: i32 = 3;
+    #[cfg(all(unix, not(target_os = "linux")))]
+    pub const CLOCK_THREAD_CPUTIME_ID: i32 = 16;
+
+    extern "C" {
+        pub fn clock_gettime(clockid: i32, tp: *mut Timespec) -> i32;
+    }
+}
+
 /// Seconds of CPU time consumed by the *calling thread*.
+#[cfg(all(unix, target_pointer_width = "64"))]
 pub fn thread_cpu_time() -> f64 {
-    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    let mut ts = sys::Timespec { tv_sec: 0, tv_nsec: 0 };
     // Safety: plain syscall writing into a local out-param.
     unsafe {
-        libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts);
+        sys::clock_gettime(sys::CLOCK_THREAD_CPUTIME_ID, &mut ts);
     }
     ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+}
+
+/// Fallback for targets without the raw binding: monotonic wall time
+/// (busy-time simulation loses fidelity but everything still runs).
+#[cfg(not(all(unix, target_pointer_width = "64")))]
+pub fn thread_cpu_time() -> f64 {
+    use std::sync::OnceLock;
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_secs_f64()
 }
 
 /// Accumulating busy-time stopwatch over thread CPU time.
@@ -92,6 +126,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg(all(unix, target_pointer_width = "64"))]
     fn sleep_accrues_no_cpu_time() {
         let t0 = thread_cpu_time();
         std::thread::sleep(std::time::Duration::from_millis(50));
