@@ -40,6 +40,15 @@ pub struct ModelProblemResult {
     /// Simulated parallel times (max busy + comm model), seconds.
     pub time_sym: f64,
     pub time_num: f64,
+    /// Numeric-phase overlap window (max over ranks), busy seconds — how
+    /// long communication was in flight behind compute.
+    pub overlap_num: f64,
+    /// Measured traffic, max over ranks (the rank-local counts the α-β
+    /// model is applied to).
+    pub sym_msgs: u64,
+    pub sym_bytes: u64,
+    pub num_msgs: u64,
+    pub num_bytes: u64,
 }
 
 impl ModelProblemResult {
@@ -88,6 +97,11 @@ fn aggregate_model(
         mem_c: 0,
         time_sym: 0.0,
         time_num: 0.0,
+        overlap_num: 0.0,
+        sym_msgs: 0,
+        sym_bytes: 0,
+        num_msgs: 0,
+        num_bytes: 0,
     };
     for (stats, mem_product, a, p, c) in per_rank {
         r.mem_product = r.mem_product.max(mem_product);
@@ -96,6 +110,11 @@ fn aggregate_model(
         r.mem_c = r.mem_c.max(c);
         r.time_sym = r.time_sym.max(stats.time_sym_modeled());
         r.time_num = r.time_num.max(stats.time_num_modeled());
+        r.overlap_num = r.overlap_num.max(stats.num_overlap);
+        r.sym_msgs = r.sym_msgs.max(stats.sym_msgs);
+        r.sym_bytes = r.sym_bytes.max(stats.sym_bytes);
+        r.num_msgs = r.num_msgs.max(stats.num_msgs);
+        r.num_bytes = r.num_bytes.max(stats.num_bytes);
     }
     r
 }
@@ -263,6 +282,33 @@ mod tests {
         );
         // identical C storage
         assert_eq!(aao.mem_c, two.mem_c);
+    }
+
+    #[test]
+    fn overlap_window_separates_all_at_once_from_merged() {
+        // The refactor's point: all-at-once posts its remote sends during
+        // the outer-product loops, so its numeric overlap window spans
+        // the whole local loop; merged stages sends to the end and earns
+        // (near) zero.  Identical remote contributions mean identical
+        // measured byte totals either way.
+        let mk = |algo| {
+            run_model_problem(ModelProblemConfig {
+                coarse: Grid3::cube(6),
+                np: 4,
+                algo,
+                numeric_repeats: 2,
+            })
+        };
+        let aao = mk(Algo::AllAtOnce);
+        let merged = mk(Algo::Merged);
+        assert!(aao.overlap_num > 0.0, "all-at-once overlap window must be positive");
+        assert!(
+            merged.overlap_num < aao.overlap_num,
+            "merged ({}) must overlap less than all-at-once ({})",
+            merged.overlap_num,
+            aao.overlap_num
+        );
+        assert_eq!(aao.num_bytes, merged.num_bytes, "same remote contributions, same bytes");
     }
 
     #[test]

@@ -11,5 +11,5 @@ pub use experiment::{
 };
 pub use report::{
     eff_column, level_tables, model_problem_tables, neutron_tables, speedup_column,
-    write_results,
+    write_bench_json, write_results,
 };

@@ -38,7 +38,9 @@ pub fn eff_column(nps: &[usize], times: &[f64]) -> Vec<f64> {
 /// algorithms.  Returns (main table, storage table).
 pub fn model_problem_tables(rows: &[ModelProblemResult]) -> (Table, Table) {
     // EFF per algorithm relative to its smallest np
-    let mut main = Table::new(vec!["np", "Algorithm", "Mem", "Time_sym", "Time_num", "Time", "EFF"]);
+    let mut main = Table::new(vec![
+        "np", "Algorithm", "Mem", "Time_sym", "Time_num", "Overlap", "Time", "EFF",
+    ]);
     let algos: Vec<_> = {
         let mut v: Vec<_> = rows.iter().map(|r| r.algo).collect();
         v.dedup();
@@ -57,6 +59,7 @@ pub fn model_problem_tables(rows: &[ModelProblemResult]) -> (Table, Table) {
             format!("{:.1}", mb(r.mem_product)),
             fmt_secs(r.time_sym),
             fmt_secs(r.time_num),
+            fmt_secs(r.overlap_num),
             fmt_secs(r.time()),
             format!("{:.0}%", effs[k]),
         ]);
@@ -125,6 +128,35 @@ pub fn level_tables(r: &NeutronResult) -> (Table, Table) {
     (t5, t6)
 }
 
+/// Write the benchmark-smoke artifact (CI's `BENCH_pr2.json`): one record
+/// per (np, algo) cell with modeled times, the overlap window, the peak
+/// product bytes and the measured traffic — the numbers a perf trajectory
+/// can diff across PRs.  Hand-rolled JSON (no serde offline).
+pub fn write_bench_json(rows: &[ModelProblemResult], path: &Path) -> std::io::Result<()> {
+    let mut s = String::from("{\n  \"bench\": \"model_problem_smoke\",\n  \"cells\": [\n");
+    for (k, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"algo\": \"{}\", \"np\": {}, \
+             \"time_sym_modeled\": {:.6e}, \"time_num_modeled\": {:.6e}, \
+             \"overlap_num\": {:.6e}, \"peak_product_bytes\": {}, \
+             \"sym_msgs\": {}, \"sym_bytes\": {}, \"num_msgs\": {}, \"num_bytes\": {}}}{}\n",
+            r.algo.name(),
+            r.np,
+            r.time_sym,
+            r.time_num,
+            r.overlap_num,
+            r.mem_product,
+            r.sym_msgs,
+            r.sym_bytes,
+            r.num_msgs,
+            r.num_bytes,
+            if k + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(path, s)
+}
+
 /// Write a table to results/<name>.tsv (and echo the path).
 pub fn write_results(table: &Table, name: &str) {
     let path = Path::new("results").join(format!("{name}.tsv"));
@@ -138,6 +170,33 @@ pub fn write_results(table: &Table, name: &str) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn bench_json_round_trips_fields() {
+        use crate::ptap::Algo;
+        let rows = vec![ModelProblemResult {
+            np: 4,
+            algo: Algo::AllAtOnce,
+            mem_product: 123,
+            mem_a: 1,
+            mem_p: 1,
+            mem_c: 1,
+            time_sym: 0.5,
+            time_num: 0.25,
+            overlap_num: 0.1,
+            sym_msgs: 3,
+            sym_bytes: 100,
+            num_msgs: 4,
+            num_bytes: 200,
+        }];
+        let path = std::env::temp_dir().join("gptap_bench_smoke_test.json");
+        write_bench_json(&rows, &path).unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert!(s.contains("\"algo\": \"allatonce\""), "{s}");
+        assert!(s.contains("\"peak_product_bytes\": 123"), "{s}");
+        assert!(s.contains("\"num_msgs\": 4"), "{s}");
+        let _ = std::fs::remove_file(&path);
+    }
 
     #[test]
     fn eff_and_speedup_math() {

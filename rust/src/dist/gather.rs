@@ -11,7 +11,14 @@ use crate::util::bytebuf::{ByteReader, ByteWriter};
 use super::bcsr::DistBcsr;
 use super::csr::DistCsr;
 use super::layout::Layout;
-use super::world::Comm;
+use super::world::{tag, Comm};
+
+/// Plan traffic rides the nonblocking engine on its own tag: one bulk
+/// epoch per gather.  Delivery order (source rank, then send order) is
+/// identical to the old collective, so `zip_runs` alignment is unchanged.
+fn sendrecv(comm: &Comm, sends: Vec<(usize, Vec<u8>)>) -> Vec<(usize, Vec<u8>)> {
+    comm.exchange_on(tag::GATHER, sends)
+}
 
 /// Owner/serve pattern shared by the row and vector gather plans.
 #[derive(Debug)]
@@ -45,7 +52,7 @@ impl GatherMap {
             runs.push((owner, k..e));
             k = e;
         }
-        let recvd = comm.exchange(sends);
+        let recvd = sendrecv(comm, sends);
         let my_start = layout.start(comm.rank()) as u64;
         let my_len = layout.local_size(comm.rank());
         let serve = recvd
@@ -207,7 +214,7 @@ impl RowGatherPlan {
             }
             sends.push((*dest, w.into_bytes()));
         }
-        let recvd = comm.exchange(sends);
+        let recvd = sendrecv(comm, sends);
         let mut rowptr: Vec<u32> = Vec::with_capacity(self.map.n_needed + 1);
         rowptr.push(0);
         let mut cols: Vec<u64> = Vec::new();
@@ -250,7 +257,7 @@ impl RowGatherPlan {
             }
             sends.push((*dest, w.into_bytes()));
         }
-        let recvd = comm.exchange(sends);
+        let recvd = sendrecv(comm, sends);
         debug_assert_eq!(pr.nrows(), self.map.n_needed);
         for ((_, range), payload) in self.map.zip_runs(&recvd) {
             let mut r = ByteReader::new(payload);
@@ -303,7 +310,7 @@ impl RowGatherPlan {
             }
             sends.push((*dest, w.into_bytes()));
         }
-        let recvd = comm.exchange(sends);
+        let recvd = sendrecv(comm, sends);
         let mut rowptr: Vec<u32> = Vec::with_capacity(self.map.n_needed + 1);
         rowptr.push(0);
         let mut gcols: Vec<u64> = Vec::new();
@@ -359,7 +366,7 @@ impl VecGatherPlan {
             }
             sends.push((*dest, w.into_bytes()));
         }
-        let recvd = comm.exchange(sends);
+        let recvd = sendrecv(comm, sends);
         let mut out = vec![0.0f64; self.map.n_needed];
         for ((_, range), payload) in self.map.zip_runs(&recvd) {
             let mut r = ByteReader::new(payload);

@@ -6,8 +6,11 @@
 //! block ([`DistCsr`], [`DistBcsr`]), one-shot gathers of remote `P` rows
 //! ([`RowGatherPlan`] → [`PrMat`]/[`PrBlocks`]), and vector halos
 //! ([`VecGatherPlan`], [`DistSpmv`]).  [`World`] runs `np` rank closures
-//! on threads with real byte-level message passing ([`Comm`]), so message
-//! counts and bytes are measured, not modeled — the α-β model
+//! on threads with real byte-level message passing ([`Comm`]): a
+//! nonblocking tag-addressed engine ([`Comm::isend`] /
+//! [`Comm::try_recv_any`] / [`Comm::drain`]) underneath the deterministic
+//! collectives, so message counts and bytes are measured, not modeled —
+//! the α-β model
 //! ([`COMM_ALPHA_SECS`], [`COMM_BETA_SECS_PER_BYTE`]) is applied on top of
 //! the measured traffic when simulated parallel times are reported
 //! (DESIGN.md §7).
@@ -26,4 +29,4 @@ pub use gather::{PrBlocks, PrMat, RowGatherPlan, VecGatherPlan};
 pub use layout::Layout;
 pub use transpose::transpose_dist;
 pub use vec::{DistSpmv, DistVec};
-pub use world::{Comm, CommStats, World, COMM_ALPHA_SECS, COMM_BETA_SECS_PER_BYTE};
+pub use world::{tag, Comm, CommStats, World, COMM_ALPHA_SECS, COMM_BETA_SECS_PER_BYTE};

@@ -1,19 +1,40 @@
-//! Simulated MPI: a thread-per-rank world with deterministic collectives.
+//! Simulated MPI: a thread-per-rank world with a nonblocking,
+//! tag-addressed communication engine underneath deterministic
+//! collectives.
 //!
 //! [`World::run`] spawns one OS thread per rank and hands each a [`Comm`].
 //! Communication runs over a full mesh of FIFO channels — one per ordered
-//! rank pair — and every collective moves **exactly one frame per pair**,
-//! so collectives stay aligned without barriers and a panicking rank
-//! cascades cleanly (peers observe a disconnected channel) instead of
-//! deadlocking the test suite.
+//! rank pair.  Every frame on the wire carries a one-byte kind:
 //!
-//! Determinism: received payloads are always ordered by source rank and
-//! reductions combine in rank order, so every rank computes bit-identical
-//! global values and repeated runs of a world reproduce byte-identical
-//! messages.
+//! - **collective** frames belong to the barrier-style collectives
+//!   (`allgather_bytes`, `all_u64`, `allreduce_sum_*`), which still move
+//!   exactly one frame per pair per call;
+//! - **data** frames carry an epoch's point-to-point payloads for one
+//!   `tag` ([`Comm::isend`] posts them immediately and returns);
+//! - **close** frames are the epoch sentinels: a rank's promise that it
+//!   will send no more data for that tag this epoch ([`Comm::drain`]
+//!   posts one to every rank, then blocks until it has one from every
+//!   rank).
+//!
+//! A per-source inbox demultiplexes the shared FIFO: frames that arrive
+//! "early" (an engine payload while a peer is inside a collective, or
+//! vice versa) are buffered per (source, tag) and consumed by whichever
+//! call they belong to, so the SPMD call discipline never deadlocks and
+//! never sees another epoch's traffic.
+//!
+//! Determinism: payloads are *released* to the consumer in source-rank
+//! order — [`Comm::try_recv_any`] hands out the longest prefix of the
+//! canonical order (all of rank 0's payloads in send order, then rank
+//! 1's, ...) that has already arrived and closed, and [`Comm::drain`]
+//! blocks for the rest — so interleaving sends with receives cannot
+//! reorder anything relative to the bulk-synchronous [`Comm::exchange`]
+//! shim, and repeated runs of a world reproduce byte-identical messages.
+//! Reductions combine in rank order, so every rank computes bit-identical
+//! global values.
 
-use std::cell::Cell;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::cell::{Cell, RefCell};
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 
 /// α (per-message latency) of the α-β communication model, seconds.
 /// Tuned to a commodity cluster interconnect (DESIGN.md §7).
@@ -21,6 +42,25 @@ pub const COMM_ALPHA_SECS: f64 = 2.0e-6;
 
 /// β (per-byte) of the α-β communication model, seconds/byte (~2 GB/s).
 pub const COMM_BETA_SECS_PER_BYTE: f64 = 5.0e-10;
+
+/// Reserved engine tags.  A tag names one logical stream of epochs; all
+/// ranks must open and close epochs on a tag in the same global order
+/// (the usual SPMD discipline), and a consumer must close its epoch
+/// (`drain`) before any other consumer opens one on the same tag.
+pub mod tag {
+    /// The bulk-synchronous [`super::Comm::exchange`] compatibility shim.
+    pub const EXCHANGE: u32 = 0;
+    /// Gather-plan request/response traffic (`dist::gather`).
+    pub const GATHER: u32 = 1;
+    /// Triple-product symbolic-phase scatter (`ptap`).
+    pub const PTAP_SYM: u32 = 2;
+    /// Triple-product numeric-phase scatter (`ptap`).
+    pub const PTAP_NUM: u32 = 3;
+}
+
+const FRAME_COLL: u8 = 0;
+const FRAME_DATA: u8 = 1;
+const FRAME_CLOSE: u8 = 2;
 
 /// Snapshot of one rank's cumulative send-side traffic.
 #[derive(Debug, Default, Clone, Copy)]
@@ -38,6 +78,22 @@ impl CommStats {
     }
 }
 
+/// One buffered engine frame: a payload, or the epoch-close sentinel.
+enum EngineFrame {
+    Data(Vec<u8>),
+    Close,
+}
+
+/// Demultiplexed arrivals from one source rank.
+#[derive(Default)]
+struct SourceInbox {
+    /// Collective frames, in arrival (= send) order.
+    coll: VecDeque<Vec<u8>>,
+    /// Engine frames per tag, in arrival order; `Close` entries delimit
+    /// epochs.
+    tags: HashMap<u32, VecDeque<EngineFrame>>,
+}
+
 /// One rank's endpoint of the simulated communicator.
 pub struct Comm {
     rank: usize,
@@ -48,6 +104,11 @@ pub struct Comm {
     rx: Vec<Receiver<Vec<u8>>>,
     sent_msgs: Cell<u64>,
     sent_bytes: Cell<u64>,
+    /// Early arrivals, demultiplexed per source.
+    inbox: RefCell<Vec<SourceInbox>>,
+    /// Per-tag release cursor: the next source rank whose current-epoch
+    /// payloads have not been fully released yet (absent = 0).
+    cursor: RefCell<HashMap<u32, usize>>,
 }
 
 impl Comm {
@@ -61,9 +122,41 @@ impl Comm {
         self.np
     }
 
-    /// Cumulative send-side traffic of this rank.
+    /// Cumulative send-side traffic of this rank (payload bytes; engine
+    /// framing and close sentinels are protocol overhead and uncounted,
+    /// exactly as the one-frame-per-pair barrier was).
     pub fn stats(&self) -> CommStats {
         CommStats { msgs: self.sent_msgs.get(), bytes: self.sent_bytes.get() }
+    }
+
+    /// Route an arrived frame into the per-source inbox.
+    fn deliver(&self, src: usize, frame: Vec<u8>) {
+        let mut inbox = self.inbox.borrow_mut();
+        let slot = &mut inbox[src];
+        match frame[0] {
+            FRAME_COLL => slot.coll.push_back(frame[1..].to_vec()),
+            FRAME_DATA => {
+                let t = u32::from_le_bytes(frame[1..5].try_into().unwrap());
+                slot.tags.entry(t).or_default().push_back(EngineFrame::Data(frame[5..].to_vec()));
+            }
+            FRAME_CLOSE => {
+                let t = u32::from_le_bytes(frame[1..5].try_into().unwrap());
+                slot.tags.entry(t).or_default().push_back(EngineFrame::Close);
+            }
+            k => unreachable!("bad frame kind {k}"),
+        }
+    }
+
+    /// Next collective frame from `src`, demuxing engine frames aside.
+    fn recv_collective(&self, src: usize) -> Vec<u8> {
+        loop {
+            let buffered = self.inbox.borrow_mut()[src].coll.pop_front();
+            if let Some(f) = buffered {
+                return f;
+            }
+            let frame = self.rx[src].recv().expect("peer rank panicked");
+            self.deliver(src, frame);
+        }
     }
 
     /// One collective round: every rank sends exactly one frame to every
@@ -71,54 +164,127 @@ impl Comm {
     fn round(&self, frames: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
         debug_assert_eq!(frames.len(), self.np);
         for (d, frame) in frames.into_iter().enumerate() {
-            self.tx[d].send(frame).expect("peer rank terminated early");
+            let mut f = Vec::with_capacity(1 + frame.len());
+            f.push(FRAME_COLL);
+            f.extend_from_slice(&frame);
+            self.tx[d].send(f).expect("peer rank terminated early");
         }
-        (0..self.np)
-            .map(|s| self.rx[s].recv().expect("peer rank panicked"))
-            .collect()
+        (0..self.np).map(|s| self.recv_collective(s)).collect()
     }
 
-    /// Sparse all-to-all (collective): deliver each `(dest, payload)` pair
-    /// and return the `(source, payload)` pairs addressed to this rank,
-    /// ordered by source rank (then send order within a source).  Every
-    /// rank must call this the same number of times; empty `sends` are
-    /// fine.
-    pub fn exchange(&self, sends: Vec<(usize, Vec<u8>)>) -> Vec<(usize, Vec<u8>)> {
-        // frame per destination: [count u32, (len u32, bytes)*]
-        let mut buckets: Vec<Vec<Vec<u8>>> = (0..self.np).map(|_| Vec::new()).collect();
-        for (dest, payload) in sends {
-            if dest != self.rank {
-                self.sent_msgs.set(self.sent_msgs.get() + 1);
-                self.sent_bytes.set(self.sent_bytes.get() + payload.len() as u64);
-            }
-            buckets[dest].push(payload);
+    /// Post `payload` to `dest` under `tag` and return immediately (the
+    /// nonblocking send).  Payloads are delivered in send order per
+    /// (source, tag) pair; `dest == rank()` loops back.
+    pub fn isend(&self, dest: usize, tag: u32, payload: Vec<u8>) {
+        if dest != self.rank {
+            self.sent_msgs.set(self.sent_msgs.get() + 1);
+            self.sent_bytes.set(self.sent_bytes.get() + payload.len() as u64);
         }
-        let frames: Vec<Vec<u8>> = buckets
-            .into_iter()
-            .map(|payloads| {
-                let total: usize = payloads.iter().map(|p| p.len() + 4).sum();
-                let mut f = Vec::with_capacity(4 + total);
-                f.extend_from_slice(&(payloads.len() as u32).to_le_bytes());
-                for p in &payloads {
-                    f.extend_from_slice(&(p.len() as u32).to_le_bytes());
-                    f.extend_from_slice(p);
+        let mut f = Vec::with_capacity(5 + payload.len());
+        f.push(FRAME_DATA);
+        f.extend_from_slice(&tag.to_le_bytes());
+        f.extend_from_slice(&payload);
+        self.tx[dest].send(f).expect("peer rank terminated early");
+    }
+
+    fn send_close(&self, dest: usize, tag: u32) {
+        let mut f = Vec::with_capacity(5);
+        f.push(FRAME_CLOSE);
+        f.extend_from_slice(&tag.to_le_bytes());
+        self.tx[dest].send(f).expect("peer rank terminated early");
+    }
+
+    /// Release loop shared by [`Comm::try_recv_any`] and [`Comm::drain`]:
+    /// walk sources in rank order from the tag's cursor, handing out data
+    /// frames until the epoch closes (every source's `Close` consumed) or
+    /// — nonblocking — until the cursor source has nothing buffered.
+    /// Returns whether the epoch fully closed (and resets the cursor).
+    fn release_into(&self, tag: u32, blocking: bool, out: &mut Vec<(usize, Vec<u8>)>) -> bool {
+        let mut cur = self.cursor.borrow_mut().remove(&tag).unwrap_or(0);
+        'sources: while cur < self.np {
+            loop {
+                let next = self.inbox.borrow_mut()[cur]
+                    .tags
+                    .get_mut(&tag)
+                    .and_then(|q| q.pop_front());
+                match next {
+                    Some(EngineFrame::Data(p)) => {
+                        out.push((cur, p));
+                        continue;
+                    }
+                    Some(EngineFrame::Close) => {
+                        cur += 1;
+                        continue 'sources;
+                    }
+                    None => {}
                 }
-                f
-            })
-            .collect();
-        let recvd = self.round(frames);
-        let mut out = Vec::new();
-        for (src, frame) in recvd.into_iter().enumerate() {
-            let count = u32::from_le_bytes(frame[0..4].try_into().unwrap()) as usize;
-            let mut pos = 4usize;
-            for _ in 0..count {
-                let len = u32::from_le_bytes(frame[pos..pos + 4].try_into().unwrap()) as usize;
-                pos += 4;
-                out.push((src, frame[pos..pos + len].to_vec()));
-                pos += len;
+                if blocking {
+                    let frame = self.rx[cur].recv().expect("peer rank panicked");
+                    self.deliver(cur, frame);
+                } else {
+                    match self.rx[cur].try_recv() {
+                        Ok(frame) => self.deliver(cur, frame),
+                        Err(TryRecvError::Empty) => break 'sources,
+                        Err(TryRecvError::Disconnected) => panic!("peer rank panicked"),
+                    }
+                }
             }
         }
+        if cur >= self.np {
+            true
+        } else {
+            self.cursor.borrow_mut().insert(tag, cur);
+            false
+        }
+    }
+
+    /// Nonblocking receive: whatever prefix of this epoch's canonical
+    /// delivery order (source-rank major, send order within a source) has
+    /// already arrived.  A source's payloads are only released once every
+    /// lower-ranked source has closed its epoch — that restriction is
+    /// what makes interleaved send/receive schedules bit-deterministic.
+    pub fn try_recv_any(&self, tag: u32) -> Vec<(usize, Vec<u8>)> {
+        let mut out = Vec::new();
+        self.release_into(tag, false, &mut out);
         out
+    }
+
+    /// Close this rank's epoch on `tag` (collective over the tag): post
+    /// the close sentinel to every rank, then block until every rank's
+    /// sentinel has arrived, returning all not-yet-released payloads in
+    /// canonical order.  After `drain` the tag is ready for a new epoch.
+    pub fn drain(&self, tag: u32) -> Vec<(usize, Vec<u8>)> {
+        for d in 0..self.np {
+            self.send_close(d, tag);
+        }
+        let mut out = Vec::new();
+        let closed = self.release_into(tag, true, &mut out);
+        debug_assert!(closed, "blocking release must close the epoch");
+        out
+    }
+
+    /// Bulk epoch on an explicit tag: one `isend` per payload plus one
+    /// `drain` — a one-epoch, zero-overlap use of the engine with the
+    /// canonical delivery order (source rank, then send order within a
+    /// source).  Every rank must call it collectively per epoch; empty
+    /// `sends` are fine.
+    pub fn exchange_on(&self, tag: u32, sends: Vec<(usize, Vec<u8>)>) -> Vec<(usize, Vec<u8>)> {
+        for (dest, payload) in sends {
+            self.isend(dest, tag, payload);
+        }
+        self.drain(tag)
+    }
+
+    /// Sparse all-to-all: deliver each `(dest, payload)` pair and return
+    /// the `(source, payload)` pairs addressed to this rank, ordered by
+    /// source rank (then send order within a source).  Every rank must
+    /// call this the same number of times; empty `sends` are fine.
+    ///
+    /// Compatibility shim over [`Comm::exchange_on`] with identical
+    /// delivery order and identical measured traffic to the historical
+    /// bulk-synchronous collective.
+    pub fn exchange(&self, sends: Vec<(usize, Vec<u8>)>) -> Vec<(usize, Vec<u8>)> {
+        self.exchange_on(tag::EXCHANGE, sends)
     }
 
     /// Allgather of raw byte payloads (collective): returns one payload
@@ -208,6 +374,8 @@ impl World {
                 rx: rx_col.into_iter().map(|r| r.unwrap()).collect(),
                 sent_msgs: Cell::new(0),
                 sent_bytes: Cell::new(0),
+                inbox: RefCell::new((0..np).map(|_| SourceInbox::default()).collect()),
+                cursor: RefCell::new(HashMap::new()),
             })
             .collect();
 
@@ -342,5 +510,103 @@ mod tests {
             c.allreduce_sum_u64(3)
         });
         assert_eq!(out, vec![3]);
+    }
+
+    #[test]
+    fn isend_drain_matches_exchange_order() {
+        let w = World::new(4);
+        let all = w.run(|c| {
+            // two payloads to every rank (self included), posted early
+            for d in 0..c.size() {
+                c.isend(d, tag::PTAP_NUM, vec![c.rank() as u8, 0]);
+                c.isend(d, tag::PTAP_NUM, vec![c.rank() as u8, 1]);
+            }
+            c.drain(tag::PTAP_NUM)
+        });
+        for inbox in all {
+            let want: Vec<(usize, Vec<u8>)> = (0..4)
+                .flat_map(|s| [(s, vec![s as u8, 0]), (s, vec![s as u8, 1])])
+                .collect();
+            assert_eq!(inbox, want);
+        }
+    }
+
+    #[test]
+    fn epochs_reuse_a_tag() {
+        let w = World::new(3);
+        let all = w.run(|c| {
+            let mut epochs = Vec::new();
+            for e in 0..4u8 {
+                let next = (c.rank() + 1) % c.size();
+                c.isend(next, tag::GATHER, vec![e, c.rank() as u8]);
+                epochs.push(c.drain(tag::GATHER));
+            }
+            epochs
+        });
+        for (me, epochs) in all.iter().enumerate() {
+            let prev = (me + 3 - 1) % 3;
+            for (e, inbox) in epochs.iter().enumerate() {
+                assert_eq!(inbox, &vec![(prev, vec![e as u8, prev as u8])]);
+            }
+        }
+    }
+
+    #[test]
+    fn try_recv_then_drain_release_canonical_prefix_and_rest() {
+        let w = World::new(3);
+        let all = w.run(|c| {
+            for d in 0..c.size() {
+                c.isend(d, tag::PTAP_SYM, vec![c.rank() as u8]);
+            }
+            // poll a few times mid-"compute"; releases are a prefix of the
+            // canonical order, the drain returns the rest
+            let mut got = Vec::new();
+            for _ in 0..10 {
+                got.extend(c.try_recv_any(tag::PTAP_SYM));
+            }
+            got.extend(c.drain(tag::PTAP_SYM));
+            got
+        });
+        for inbox in all {
+            let want: Vec<(usize, Vec<u8>)> = (0..3).map(|s| (s, vec![s as u8])).collect();
+            assert_eq!(inbox, want);
+        }
+    }
+
+    #[test]
+    fn engine_traffic_interleaves_with_collectives() {
+        let w = World::new(3);
+        let all = w.run(|c| {
+            // post engine payloads, run collectives on top of the open
+            // epoch, then close it — the inbox must demux both streams
+            for d in 0..c.size() {
+                c.isend(d, tag::PTAP_NUM, vec![7; c.rank() + 1]);
+            }
+            let total = c.allreduce_sum_u64(c.rank() as u64 + 1);
+            let gathered = c.all_u64(10 + c.rank() as u64);
+            let drained = c.drain(tag::PTAP_NUM);
+            (total, gathered, drained)
+        });
+        for (total, gathered, drained) in all {
+            assert_eq!(total, 6);
+            assert_eq!(gathered, vec![10, 11, 12]);
+            let want: Vec<(usize, Vec<u8>)> = (0..3).map(|s| (s, vec![7; s + 1])).collect();
+            assert_eq!(drained, want);
+        }
+    }
+
+    #[test]
+    fn isend_counts_remote_payload_bytes_only() {
+        let w = World::new(2);
+        let stats = w.run(|c| {
+            c.isend(c.rank(), tag::PTAP_NUM, vec![1; 64]); // self: uncounted
+            c.isend((c.rank() + 1) % 2, tag::PTAP_NUM, vec![2; 10]);
+            let _ = c.drain(tag::PTAP_NUM); // close sentinels: uncounted
+            c.stats()
+        });
+        for s in stats {
+            assert_eq!(s.msgs, 1);
+            assert_eq!(s.bytes, 10);
+        }
     }
 }

@@ -12,7 +12,7 @@
 
 use galerkin_ptap::coordinator::{
     level_tables, model_problem_tables, neutron_tables, run_model_problem, run_neutron,
-    write_results, ModelProblemConfig, NeutronConfigExp,
+    write_bench_json, write_results, ModelProblemConfig, NeutronConfigExp,
 };
 use galerkin_ptap::dist::{DistSpmv, DistVec, World};
 use galerkin_ptap::gen::{
@@ -86,6 +86,7 @@ fn main() {
     let args = Args::parse();
     match args.sub.as_str() {
         "model-problem" => cmd_model_problem(&args),
+        "bench-smoke" => cmd_bench_smoke(&args),
         "neutron" => cmd_neutron(&args),
         "levels" => cmd_levels(&args),
         "solve" => cmd_solve(&args),
@@ -106,6 +107,7 @@ fn print_help() {
          USAGE: galerkin-ptap <subcommand> [--key value] [--flag]\n\n\
          SUBCOMMANDS\n\
            model-problem  --coarse N --np a,b,c --repeats R --algos LIST   (Tables 1-4, Figs 1-4)\n\
+           bench-smoke    --coarse N --np P --repeats R --out F.json       (CI perf artifact)\n\
            neutron        --grid N --groups G --np a,b,c [--cache]         (Tables 7-8, Figs 7-10)\n\
            levels         --grid N --groups G                              (Tables 5-6)\n\
            solve          --coarse N --levels L --algo NAME --np P         (end-to-end MG-CG)\n\
@@ -146,6 +148,47 @@ fn cmd_model_problem(args: &Args) {
     println!("Table 2/4 analog — storage of A, P, C (MB/rank):\n{}", storage.render());
     write_results(&main, "model_problem_main");
     write_results(&storage, "model_problem_storage");
+}
+
+/// CI's benchmark smoke: the model-problem experiment at one rank count,
+/// all three algorithms, dumped as a machine-diffable JSON artifact so
+/// the perf trajectory (modeled times, overlap windows, peak bytes,
+/// message counts) is recorded on every push.
+fn cmd_bench_smoke(args: &Args) {
+    let coarse = Grid3::cube(args.usize_or("coarse", 8));
+    let np = args.usize_or("np", 4);
+    let repeats = args.usize_or("repeats", 3);
+    let out = args.kv.get("out").cloned().unwrap_or_else(|| "BENCH_pr2.json".to_string());
+    println!(
+        "bench smoke: coarse {}³ (fine {}³), np={np}, repeats={repeats}",
+        coarse.nx,
+        coarse.refine().nx
+    );
+    let mut rows = Vec::new();
+    for &algo in &ALL_ALGOS {
+        let r = run_model_problem(ModelProblemConfig {
+            coarse,
+            np,
+            algo,
+            numeric_repeats: repeats,
+        });
+        println!(
+            "  {:<10} time_sym {:>8} time_num {:>8} overlap {:>8} peak {:.1} MB",
+            algo.name(),
+            galerkin_ptap::util::fmt_secs(r.time_sym),
+            galerkin_ptap::util::fmt_secs(r.time_num),
+            galerkin_ptap::util::fmt_secs(r.overlap_num),
+            r.mem_product as f64 / 1048576.0
+        );
+        rows.push(r);
+    }
+    match write_bench_json(&rows, std::path::Path::new(&out)) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => {
+            eprintln!("FAIL: could not write {out}: {e}");
+            std::process::exit(1);
+        }
+    }
 }
 
 fn cmd_neutron(args: &Args) {

@@ -189,6 +189,8 @@ fn sum_stats(mut acc: PtapStats, s: PtapStats) -> PtapStats {
     acc.sym_bytes += s.sym_bytes;
     acc.num_msgs += s.num_msgs;
     acc.num_bytes += s.num_bytes;
+    acc.sym_overlap += s.sym_overlap;
+    acc.num_overlap += s.num_overlap;
     acc
 }
 

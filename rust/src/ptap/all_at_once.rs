@@ -6,22 +6,40 @@
 //! `P(I,:) ⊗ R`: nonzeros of `P_o(I,:)` select *remote* target rows of `C`
 //! (staged per P.garray position and shipped to their owners), nonzeros of
 //! `P_d(I,:)` select *local* rows.  Two loops (remote first, then local)
-//! let the communication overlap the local compute.
+//! let the communication overlap the local compute — and with the
+//! nonblocking engine the overlap is real: each staged row is posted
+//! ([`crate::dist::Comm::isend`]) the moment its *last* contributing fine
+//! row has passed (the precomputed last-touch schedule), so chunks are in
+//! flight throughout the remainder of the remote loop and the whole local
+//! loop, and the epoch closes only after the local loop finishes.
+//!
+//! Determinism: received remote contributions are folded into `C` after
+//! the local loop, in the engine's canonical source-rank order, so the
+//! pipelined product is bit-identical to the bulk-synchronous one (each
+//! source sends at most one contribution row per global C row, and
+//! distinct target rows touch disjoint slots — only the cross-source and
+//! local-vs-remote fold orders matter, and both are preserved).
 
-use crate::dist::{Comm, DistCsr, PrMat};
+use crate::dist::{tag, Comm, DistCsr, PrMat};
 use crate::mem::{Cat, MemTracker};
 use crate::spgemm::{RowScratch, RowView};
 
 use super::common::{
-    exchange_tracked, for_each_num_row, for_each_sym_row, COutput, LocalSymTables, PtapStats,
-    RemoteStageNum, RemoteStageSym,
+    for_each_num_row, for_each_sym_row, write_num_row, write_sym_row, COutput, LocalSymTables,
+    PtapStats, RemoteStageNum, RemoteStageSym, ScatterPipeline,
 };
 
-/// Reusable u32 conversion buffers for the numeric scatter.
+/// Reusable u32 conversion buffers for the numeric scatter, plus the
+/// pipeline's send schedule (fixed by P's structure, computed once in the
+/// symbolic phase and reused by every numeric call).
 #[derive(Debug, Default)]
 pub struct AaoState {
     dcols32: Vec<u32>,
     ocols32: Vec<u32>,
+    /// rowptr over fine rows / P.garray positions whose staged C row
+    /// completes at that row (its last off-diagonal touch).
+    finish_ptr: Vec<u32>,
+    finish_items: Vec<u32>,
 }
 
 impl AaoState {
@@ -51,6 +69,37 @@ impl AaoState {
     }
 }
 
+/// The pipeline's send schedule: for each fine row, the P.garray positions
+/// whose staged C row completes there (i.e. whose last off-diagonal touch
+/// is that row).  Returned as a rowptr/items pair over `0..nloc`.
+fn stage_finish_lists(p: &DistCsr, nloc: usize) -> (Vec<u32>, Vec<u32>) {
+    let nt = p.garray.len();
+    let mut last = vec![u32::MAX; nt];
+    for i in 0..nloc {
+        for &t in p.offd.row_cols(i) {
+            last[t as usize] = i as u32;
+        }
+    }
+    let mut ptr = vec![0u32; nloc + 1];
+    for &l in &last {
+        if l != u32::MAX {
+            ptr[l as usize + 1] += 1;
+        }
+    }
+    for i in 0..nloc {
+        ptr[i + 1] += ptr[i];
+    }
+    let mut items = vec![0u32; *ptr.last().unwrap() as usize];
+    let mut cursor = ptr.clone();
+    for (t, &l) in last.iter().enumerate() {
+        if l != u32::MAX {
+            items[cursor[l as usize] as usize] = t as u32;
+            cursor[l as usize] += 1;
+        }
+    }
+    (ptr, items)
+}
+
 /// Alg. 7: symbolic phase.
 pub fn symbolic(
     comm: &Comm,
@@ -66,40 +115,58 @@ pub fn symbolic(
     let cend = v.cend;
     let nloc = a.local_nrows();
 
-    // First loop (lines 5–13): remote contributions C_s^H += P_o(I,:) ⊗ R.
+    // First loop (lines 5–13): remote contributions C_s^H += P_o(I,:) ⊗ R,
+    // posting each staged row as soon as its last touch has passed.
+    let (finish_ptr, finish_items) = stage_finish_lists(p, nloc);
+    let mut pipe = ScatterPipeline::new(comm.size(), tag::PTAP_SYM);
+    let mut sorted: Vec<u64> = Vec::new();
     let mut cs = RemoteStageSym::new(p.garray.len());
     for i_fine in 0..nloc {
         let ocols = p.offd.row_cols(i_fine);
-        if ocols.is_empty() {
-            continue;
+        if !ocols.is_empty() {
+            scratch.symbolic_row(v, i_fine);
+            scratch.rd.collect_sorted(&mut scratch.dcols);
+            scratch.ro.collect_sorted(&mut scratch.ocols);
+            for &t in ocols {
+                let set = cs.row_mut(t as usize);
+                for &c in &scratch.dcols {
+                    set.insert((c + cbeg) as u32);
+                }
+                for &c in &scratch.ocols {
+                    set.insert(c as u32);
+                }
+            }
         }
-        scratch.symbolic_row(v, i_fine);
-        scratch.rd.collect_sorted(&mut scratch.dcols);
-        scratch.ro.collect_sorted(&mut scratch.ocols);
-        for &t in ocols {
-            let set = cs.row_mut(t as usize);
-            for &c in &scratch.dcols {
-                set.insert((c + cbeg) as u32);
+        // Line 14, pipelined: ship every stage row that just completed.
+        for &t in &finish_items[finish_ptr[i_fine] as usize..finish_ptr[i_fine + 1] as usize] {
+            let Some(set) = &cs.rows[t as usize] else { continue };
+            if set.is_empty() {
+                continue;
             }
-            for &c in &scratch.ocols {
-                set.insert(c as u32);
-            }
+            let grow = p.garray[t as usize];
+            let owner = p.col_layout.owner(grow as usize);
+            set.collect_sorted_u64(&mut sorted);
+            write_sym_row(pipe.writer(owner), grow, &sorted);
+            pipe.row_done(comm, owner);
         }
     }
     tracker.alloc(Cat::Hash, cs.bytes());
-    // Line 14: send C_s^H to its owners.
-    let sends = cs.serialize(&p.garray, &p.col_layout, comm.size());
-    let send_bytes: u64 = sends.iter().map(|(_, b)| b.len() as u64).sum();
-    tracker.alloc(Cat::Comm, send_bytes);
-    let recvd = exchange_tracked(comm, sends, &mut stats.sym_msgs, &mut stats.sym_bytes);
-    tracker.free(Cat::Hash, cs.bytes());
-    drop(cs);
-    let recv_bytes: u64 = recvd.iter().map(|(_, b)| b.len() as u64).sum();
-    tracker.alloc(Cat::Comm, recv_bytes);
 
-    // Second loop (lines 16–25): local contributions C_l^H += P_d(I,:) ⊗ R.
+    // Second loop (lines 16–25): local contributions C_l^H += P_d(I,:) ⊗ R,
+    // folding received remote rows between chunks (set union is
+    // order-independent, so the eager merge cannot change the pattern).
     let mut clh = LocalSymTables::new(p.diag.ncols);
+    let mut recv_bytes: u64 = 0;
+    let poll_every = pipe.chunk_rows();
     for i_fine in 0..nloc {
+        if i_fine % poll_every == 0 {
+            for (_src, payload) in pipe.poll(comm) {
+                recv_bytes += payload.len() as u64;
+                for_each_sym_row(&payload, |grow, cols| {
+                    clh.insert_global((grow - cbeg) as usize, cols, cbeg, cend);
+                });
+            }
+        }
         let dcols = p.diag.row_cols(i_fine);
         if dcols.is_empty() {
             continue;
@@ -117,21 +184,35 @@ pub fn symbolic(
             }
         }
     }
-    // Lines 26–27: receive C_r^H and merge.
-    for (_src, payload) in &recvd {
-        for_each_sym_row(payload, |grow, cols| {
+    // Lines 26–27: epoch close — merge the stragglers.
+    for (_src, payload) in pipe.finish(comm) {
+        recv_bytes += payload.len() as u64;
+        for_each_sym_row(&payload, |grow, cols| {
             clh.insert_global((grow - cbeg) as usize, cols, cbeg, cend);
         });
     }
+    stats.sym_msgs += pipe.msgs;
+    stats.sym_bytes += pipe.bytes;
+    stats.sym_overlap += pipe.overlap;
+    // Comm-buffer accounting in the bulk path's order: send-side bytes
+    // coexist with the stage tables, receive-side bytes only after the
+    // stage is freed.
+    tracker.alloc(Cat::Comm, pipe.bytes);
+    tracker.free(Cat::Hash, cs.bytes());
+    drop(cs);
+    tracker.alloc(Cat::Comm, recv_bytes);
     tracker.alloc(Cat::Hash, clh.bytes());
-    tracker.free(Cat::Comm, send_bytes + recv_bytes);
+    tracker.free(Cat::Comm, pipe.bytes + recv_bytes);
     // Lines 29–36: counts, free tables, preallocate C.
     let (nzd, nzo) = clh.counts();
     tracker.free(Cat::Hash, clh.bytes());
     drop(clh);
     let c = COutput::prealloc(p.rank, p.col_layout.clone(), &nzd, &nzo);
     tracker.alloc(Cat::MatC, c.bytes());
-    (AaoState::default(), c)
+    // retain the send schedule: every numeric call replays it
+    let state =
+        AaoState { dcols32: Vec::new(), ocols32: Vec::new(), finish_ptr, finish_items };
+    (state, c)
 }
 
 /// Alg. 8: numeric phase (re-runnable).
@@ -151,39 +232,58 @@ pub fn numeric(
     let nloc = a.local_nrows();
     c.zero_values();
 
-    // First loop (lines 4–12): remote contributions C_s += P_o(I,:) ⊗ R.
+    // First loop (lines 4–12): remote contributions C_s += P_o(I,:) ⊗ R,
+    // posted on stage-row completion (the symbolic phase's last-touch
+    // schedule, retained in `state`).
+    let mut pipe = ScatterPipeline::new(comm.size(), tag::PTAP_NUM);
+    let mut kbuf: Vec<u64> = Vec::new();
+    let mut vbuf: Vec<f64> = Vec::new();
     let mut csm = RemoteStageNum::new(p.garray.len());
     for i_fine in 0..nloc {
         let (ocols, ovals) = p.offd.row(i_fine);
-        if ocols.is_empty() {
-            continue;
+        if !ocols.is_empty() {
+            scratch.numeric_row(v, i_fine);
+            scratch.extract_numeric();
+            for (&t, &w) in ocols.iter().zip(ovals) {
+                let map = csm.row_mut(t as usize);
+                for (&cc, &vv) in scratch.dcols.iter().zip(&scratch.dvals) {
+                    map.add(cc + cbeg, w * vv);
+                }
+                for (&cc, &vv) in scratch.ocols.iter().zip(&scratch.ovals) {
+                    map.add(cc, w * vv);
+                }
+            }
         }
-        scratch.numeric_row(v, i_fine);
-        scratch.extract_numeric();
-        for (&t, &w) in ocols.iter().zip(ovals) {
-            let map = csm.row_mut(t as usize);
-            for (&cc, &vv) in scratch.dcols.iter().zip(&scratch.dvals) {
-                map.add(cc + cbeg, w * vv);
+        // Line 13, pipelined: ship completed stage rows while the loop
+        // keeps computing.
+        let finishing = &state.finish_items
+            [state.finish_ptr[i_fine] as usize..state.finish_ptr[i_fine + 1] as usize];
+        for &t in finishing {
+            let Some(map) = csm.rows[t as usize].as_mut() else { continue };
+            if map.is_empty() {
+                continue;
             }
-            for (&cc, &vv) in scratch.ocols.iter().zip(&scratch.ovals) {
-                map.add(cc, w * vv);
-            }
+            let grow = p.garray[t as usize];
+            let owner = p.col_layout.owner(grow as usize);
+            map.collect_sorted(&mut kbuf, &mut vbuf);
+            write_num_row(pipe.writer(owner), grow, &kbuf, &vbuf);
+            pipe.row_done(comm, owner);
         }
     }
     tracker.alloc(Cat::Hash, csm.bytes());
-    // Line 13: send C_s.
-    let sends = csm.serialize(&p.garray, &p.col_layout, comm.size());
-    let send_bytes: u64 = sends.iter().map(|(_, b)| b.len() as u64).sum();
-    tracker.alloc(Cat::Comm, send_bytes);
-    let recvd = exchange_tracked(comm, sends, &mut stats.num_msgs, &mut stats.num_bytes);
-    tracker.free(Cat::Hash, csm.bytes());
-    drop(csm);
-    let recv_bytes: u64 = recvd.iter().map(|(_, b)| b.len() as u64).sum();
-    tracker.alloc(Cat::Comm, recv_bytes);
 
     // Second loop (lines 15–23): local contributions straight into the
-    // preallocated C.
+    // preallocated C.  Received chunks are *released* (taken off the
+    // wire) between chunks, but folded only after the loop: a C row can
+    // take both local and remote contributions, and the bulk path folds
+    // all locals first — deferring keeps the slot update order, hence the
+    // bits, identical.
+    let mut recvd: Vec<(usize, Vec<u8>)> = Vec::new();
+    let poll_every = pipe.chunk_rows();
     for i_fine in 0..nloc {
+        if i_fine % poll_every == 0 {
+            recvd.extend(pipe.poll(comm));
+        }
         let (dcols, dvals) = p.diag.row(i_fine);
         if dcols.is_empty() {
             continue;
@@ -192,12 +292,23 @@ pub fn numeric(
         scratch.extract_numeric();
         state.scatter_local(scratch, c, dcols, dvals);
     }
-    // Lines 24–25: receive C_r, C_l += C_r.
+    // Lines 24–25: epoch close; C_l += C_r in canonical source order.
+    recvd.extend(pipe.finish(comm));
+    // Comm-buffer accounting in the bulk path's order: send-side bytes
+    // coexist with the stage, receive-side bytes only after it is freed.
+    let recv_bytes: u64 = recvd.iter().map(|(_, b)| b.len() as u64).sum();
+    tracker.alloc(Cat::Comm, pipe.bytes);
+    tracker.free(Cat::Hash, csm.bytes());
+    drop(csm);
+    tracker.alloc(Cat::Comm, recv_bytes);
     for (_src, payload) in &recvd {
         for_each_num_row(payload, |grow, cols, vals| {
             c.add_global_row((grow - cbeg) as usize, cols, vals);
         });
     }
-    tracker.free(Cat::Comm, send_bytes + recv_bytes);
+    tracker.free(Cat::Comm, pipe.bytes + recv_bytes);
+    stats.num_msgs += pipe.msgs;
+    stats.num_bytes += pipe.bytes;
+    stats.num_overlap += pipe.overlap;
     stats.num_calls += 1;
 }

@@ -19,7 +19,7 @@ use crate::runtime::{BlockBackend, TripleBatcher};
 use crate::util::bytebuf::{ByteReader, ByteWriter};
 use crate::util::timer::BusyTimer;
 
-use super::common::PtapStats;
+use super::common::{exchange_tracked, write_sym_row, PtapStats};
 
 /// Result of a block triple product.
 pub struct BlockPtapResult {
@@ -243,9 +243,7 @@ pub fn block_ptap(
         let owner = p.col_layout.owner(grow as usize);
         let w = writers[owner].get_or_insert_with(ByteWriter::new);
         set.collect_sorted(&mut row_cols_buf);
-        w.u64(grow);
-        w.u32(row_cols_buf.len() as u32);
-        w.u64_slice(&row_cols_buf);
+        write_sym_row(w, grow, &row_cols_buf);
     }
     let sym_hash_bytes: u64 = loc_sets
         .iter()
@@ -259,9 +257,7 @@ pub fn block_ptap(
         .enumerate()
         .filter_map(|(d, w)| w.map(|w| (d, w.into_bytes())))
         .collect();
-    stats.sym_msgs += sends.len() as u64;
-    stats.sym_bytes += sends.iter().map(|(_, p)| p.len() as u64).sum::<u64>();
-    let recvd = comm.exchange(sends);
+    let recvd = exchange_tracked(comm, sends, &mut stats.sym_msgs, &mut stats.sym_bytes);
     for (_src, payload) in &recvd {
         let mut r = ByteReader::new(payload);
         while !r.done() {
@@ -405,9 +401,7 @@ pub fn block_ptap(
         .enumerate()
         .filter_map(|(d, w)| w.map(|w| (d, w.into_bytes())))
         .collect();
-    stats.num_msgs += sends.len() as u64;
-    stats.num_bytes += sends.iter().map(|(_, p)| p.len() as u64).sum::<u64>();
-    let recvd = comm.exchange(sends);
+    let recvd = exchange_tracked(comm, sends, &mut stats.num_msgs, &mut stats.num_bytes);
     for (_src, payload) in &recvd {
         let mut r = ByteReader::new(payload);
         let mut blk = vec![0.0f64; bb];

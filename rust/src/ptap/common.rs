@@ -5,6 +5,7 @@ use crate::dist::{Comm, DistCsr, Layout};
 use crate::hash::{IntMap, Set32};
 use crate::mat::PreallocCsr;
 use crate::util::bytebuf::{ByteReader, ByteWriter};
+use crate::util::timer::thread_cpu_time;
 
 /// Per-phase communication + time accounting for one rank.
 #[derive(Debug, Default, Clone, Copy)]
@@ -20,6 +21,13 @@ pub struct PtapStats {
     pub sym_bytes: u64,
     pub num_msgs: u64,
     pub num_bytes: u64,
+    /// Overlap windows: busy CPU seconds between the phase's first posted
+    /// send and its epoch close — the span in which communication was in
+    /// flight behind compute.  All-at-once earns a large window (remote
+    /// loop posts, local loop computes), merged stages its sends to the
+    /// end and earns ≈ 0 (the paper's §3 trade-off).
+    pub sym_overlap: f64,
+    pub num_overlap: f64,
 }
 
 /// The α-β comm model can be disabled with `GPTAP_COMM_MODEL=off`
@@ -30,23 +38,25 @@ pub fn comm_model_enabled() -> bool {
 }
 
 impl PtapStats {
-    /// Modeled symbolic time including the α-β communication model.
+    /// Modeled symbolic time: busy time plus the α-β communication model,
+    /// crediting the measured overlap window (communication hidden behind
+    /// compute costs nothing up to the window's length).
     pub fn time_sym_modeled(&self) -> f64 {
         if !comm_model_enabled() {
             return self.time_sym;
         }
-        self.time_sym
-            + self.sym_msgs as f64 * crate::dist::COMM_ALPHA_SECS
-            + self.sym_bytes as f64 * crate::dist::COMM_BETA_SECS_PER_BYTE
+        let comm = self.sym_msgs as f64 * crate::dist::COMM_ALPHA_SECS
+            + self.sym_bytes as f64 * crate::dist::COMM_BETA_SECS_PER_BYTE;
+        self.time_sym + (comm - self.sym_overlap).max(0.0)
     }
 
     pub fn time_num_modeled(&self) -> f64 {
         if !comm_model_enabled() {
             return self.time_num;
         }
-        self.time_num
-            + self.num_msgs as f64 * crate::dist::COMM_ALPHA_SECS
-            + self.num_bytes as f64 * crate::dist::COMM_BETA_SECS_PER_BYTE
+        let comm = self.num_msgs as f64 * crate::dist::COMM_ALPHA_SECS
+            + self.num_bytes as f64 * crate::dist::COMM_BETA_SECS_PER_BYTE;
+        self.time_num + (comm - self.num_overlap).max(0.0)
     }
 }
 
@@ -157,6 +167,25 @@ impl COutput {
     }
 }
 
+/// Serialize one symbolic contribution row — `[grow u64, n u32, cols
+/// u64…]`, the wire format [`for_each_sym_row`] parses.  Every producer
+/// (bulk serializers and pipelined writers alike) must go through this so
+/// the format cannot drift per algorithm.
+pub fn write_sym_row(w: &mut ByteWriter, grow: u64, cols: &[u64]) {
+    w.u64(grow);
+    w.u32(cols.len() as u32);
+    w.u64_slice(cols);
+}
+
+/// Serialize one numeric contribution row — `[grow u64, n u32, cols
+/// u64…, vals f64…]`, the wire format [`for_each_num_row`] parses.
+pub fn write_num_row(w: &mut ByteWriter, grow: u64, cols: &[u64], vals: &[f64]) {
+    w.u64(grow);
+    w.u32(cols.len() as u32);
+    w.u64_slice(cols);
+    w.f64_slice(vals);
+}
+
 /// Staging for contributions to *remote* rows of C, keyed by P's offd
 /// compacted column (P.garray position).  The symbolic side stages column
 /// sets (`C_s^H`), the numeric side value maps (`C_s`).
@@ -195,9 +224,7 @@ impl RemoteStageSym {
             let owner = layout.owner(grow as usize);
             let w = writers[owner].get_or_insert_with(ByteWriter::new);
             set.collect_sorted_u64(&mut buf);
-            w.u64(grow);
-            w.u32(buf.len() as u32);
-            w.u64_slice(&buf);
+            write_sym_row(w, grow, &buf);
         }
         writers
             .into_iter()
@@ -243,10 +270,7 @@ impl RemoteStageNum {
             let owner = layout.owner(grow as usize);
             let w = writers[owner].get_or_insert_with(ByteWriter::new);
             map.collect_sorted(&mut kbuf, &mut vbuf);
-            w.u64(grow);
-            w.u32(kbuf.len() as u32);
-            w.u64_slice(&kbuf);
-            w.f64_slice(&vbuf);
+            write_num_row(w, grow, &kbuf, &vbuf);
         }
         writers
             .into_iter()
@@ -266,6 +290,138 @@ pub fn exchange_tracked(
     *msgs += sends.len() as u64;
     *bytes += sends.iter().map(|(_, p)| p.len() as u64).sum::<u64>();
     comm.exchange(sends)
+}
+
+/// Default staged rows per pipelined chunk; `GPTAP_PIPELINE_CHUNK`
+/// overrides (any positive integer — 1 posts every row immediately, a
+/// huge value degenerates to end-staging).
+pub const DEFAULT_PIPELINE_CHUNK: usize = 64;
+
+/// Rows per pipelined chunk.  Read per pipeline (not cached) so tests can
+/// sweep chunk sizes within one process.
+pub fn pipeline_chunk_rows() -> usize {
+    std::env::var("GPTAP_PIPELINE_CHUNK")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&c| c > 0)
+        .unwrap_or(DEFAULT_PIPELINE_CHUNK)
+}
+
+/// Pipelined scatter over the nonblocking engine: staged rows are
+/// serialized into per-destination buffers and posted (`Comm::isend`) as
+/// soon as a destination has a full chunk, so the payloads are in flight
+/// while the caller keeps computing.  `poll` releases whatever the engine
+/// can hand out deterministically mid-loop; `finish` flushes the open
+/// buffers, closes the epoch and measures the overlap window.
+///
+/// Chunk boundaries never split a row and never reorder rows within a
+/// destination, so the receiver sees exactly the bulk path's rows —
+/// identical byte totals, deterministic content.
+#[derive(Debug)]
+pub struct ScatterPipeline {
+    tag: u32,
+    chunk_rows: usize,
+    writers: Vec<Option<ByteWriter>>,
+    rows_staged: Vec<usize>,
+    first_isend_busy: Option<f64>,
+    /// Messages/payload bytes posted (chunks count as messages).
+    pub msgs: u64,
+    pub bytes: u64,
+    /// Busy seconds between the first posted chunk and the epoch close
+    /// (0 until `finish`, and 0 if nothing was sent).
+    pub overlap: f64,
+}
+
+impl ScatterPipeline {
+    pub fn new(np: usize, tag: u32) -> Self {
+        ScatterPipeline {
+            tag,
+            chunk_rows: pipeline_chunk_rows(),
+            writers: (0..np).map(|_| None).collect(),
+            rows_staged: vec![0; np],
+            first_isend_busy: None,
+            msgs: 0,
+            bytes: 0,
+            overlap: 0.0,
+        }
+    }
+
+    /// Rows per chunk (also a sensible poll cadence for receive loops).
+    pub fn chunk_rows(&self) -> usize {
+        self.chunk_rows
+    }
+
+    /// The open serialization buffer for `dest` (serialize one row, then
+    /// call [`ScatterPipeline::row_done`]).
+    pub fn writer(&mut self, dest: usize) -> &mut ByteWriter {
+        self.writers[dest].get_or_insert_with(ByteWriter::new)
+    }
+
+    /// Mark one staged row complete for `dest`; posts the buffer once a
+    /// full chunk has accumulated.
+    pub fn row_done(&mut self, comm: &Comm, dest: usize) {
+        self.rows_staged[dest] += 1;
+        if self.rows_staged[dest] >= self.chunk_rows {
+            self.flush_dest(comm, dest);
+        }
+    }
+
+    fn flush_dest(&mut self, comm: &Comm, dest: usize) {
+        if let Some(w) = self.writers[dest].take() {
+            if !w.is_empty() {
+                let payload = w.into_bytes();
+                self.msgs += 1;
+                self.bytes += payload.len() as u64;
+                if self.first_isend_busy.is_none() {
+                    self.first_isend_busy = Some(thread_cpu_time());
+                }
+                comm.isend(dest, self.tag, payload);
+            }
+        }
+        self.rows_staged[dest] = 0;
+    }
+
+    /// Nonblocking: whatever received payloads the engine can release in
+    /// canonical (source-rank, send) order right now.
+    pub fn poll(&mut self, comm: &Comm) -> Vec<(usize, Vec<u8>)> {
+        comm.try_recv_any(self.tag)
+    }
+
+    /// Flush every open buffer, close the epoch, record the overlap
+    /// window, and return the remaining payloads (canonical order).
+    pub fn finish(&mut self, comm: &Comm) -> Vec<(usize, Vec<u8>)> {
+        for dest in 0..self.writers.len() {
+            self.flush_dest(comm, dest);
+        }
+        let recvd = comm.drain(self.tag);
+        if let Some(t0) = self.first_isend_busy.take() {
+            self.overlap = thread_cpu_time() - t0;
+        }
+        recvd
+    }
+}
+
+/// End-staged engine send (the merged algorithm's side of the paper's §3
+/// trade-off): post every already-serialized payload at once, close the
+/// epoch, and record stats plus the — by construction ≈ 0 — overlap
+/// window.  Delivery order and byte totals match the bulk shim exactly.
+pub fn send_staged_tracked(
+    comm: &Comm,
+    tag: u32,
+    sends: Vec<(usize, Vec<u8>)>,
+    msgs: &mut u64,
+    bytes: &mut u64,
+    overlap: &mut f64,
+) -> Vec<(usize, Vec<u8>)> {
+    *msgs += sends.len() as u64;
+    *bytes += sends.iter().map(|(_, p)| p.len() as u64).sum::<u64>();
+    let sent_any = !sends.is_empty();
+    let t0 = thread_cpu_time();
+    let recvd = comm.exchange_on(tag, sends);
+    if sent_any {
+        *overlap += thread_cpu_time() - t0;
+    }
+    recvd
 }
 
 /// Iterate a received symbolic payload: (global row, sorted global cols).

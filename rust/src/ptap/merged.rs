@@ -2,16 +2,20 @@
 //! all-at-once except the remote and local outer-product loops are fused,
 //! so the row `R = (AP)(I,:)` is computed ONCE per fine row instead of
 //! twice.  The trade-off: sends are staged until the single loop ends, so
-//! there is less communication/compute overlap — "if the communication in
-//! the first loop is expensive, we may prefer the all-at-once" (paper §3).
+//! there is (almost) no communication/compute overlap — "if the
+//! communication in the first loop is expensive, we may prefer the
+//! all-at-once" (paper §3).  The sends still ride the nonblocking engine
+//! ([`send_staged_tracked`]), which *measures* that missing overlap: the
+//! window between the first post and the epoch close is by construction
+//! ≈ 0 here, versus the whole local loop for all-at-once.
 
-use crate::dist::{Comm, DistCsr, PrMat};
+use crate::dist::{tag, Comm, DistCsr, PrMat};
 use crate::mem::{Cat, MemTracker};
 use crate::spgemm::{RowScratch, RowView};
 
 use super::all_at_once::AaoState;
 use super::common::{
-    exchange_tracked, for_each_num_row, for_each_sym_row, COutput, LocalSymTables, PtapStats,
+    for_each_num_row, for_each_sym_row, send_staged_tracked, COutput, LocalSymTables, PtapStats,
     RemoteStageNum, RemoteStageSym,
 };
 
@@ -62,11 +66,19 @@ pub fn symbolic(
         }
     }
     tracker.alloc(Cat::Hash, cs.bytes());
-    // Lines 16–19: send, receive, merge.
+    // Lines 16–19: send (end-staged — the fused loop traded the overlap
+    // away), receive, merge.
     let sends = cs.serialize(&p.garray, &p.col_layout, comm.size());
     let send_bytes: u64 = sends.iter().map(|(_, b)| b.len() as u64).sum();
     tracker.alloc(Cat::Comm, send_bytes);
-    let recvd = exchange_tracked(comm, sends, &mut stats.sym_msgs, &mut stats.sym_bytes);
+    let recvd = send_staged_tracked(
+        comm,
+        tag::PTAP_SYM,
+        sends,
+        &mut stats.sym_msgs,
+        &mut stats.sym_bytes,
+        &mut stats.sym_overlap,
+    );
     tracker.free(Cat::Hash, cs.bytes());
     drop(cs);
     let recv_bytes: u64 = recvd.iter().map(|(_, b)| b.len() as u64).sum();
@@ -128,11 +140,18 @@ pub fn numeric(
         }
     }
     tracker.alloc(Cat::Hash, csm.bytes());
-    // Lines 14–16: send, receive, merge.
+    // Lines 14–16: send (end-staged), receive, merge.
     let sends = csm.serialize(&p.garray, &p.col_layout, comm.size());
     let send_bytes: u64 = sends.iter().map(|(_, b)| b.len() as u64).sum();
     tracker.alloc(Cat::Comm, send_bytes);
-    let recvd = exchange_tracked(comm, sends, &mut stats.num_msgs, &mut stats.num_bytes);
+    let recvd = send_staged_tracked(
+        comm,
+        tag::PTAP_NUM,
+        sends,
+        &mut stats.num_msgs,
+        &mut stats.num_bytes,
+        &mut stats.num_overlap,
+    );
     tracker.free(Cat::Hash, csm.bytes());
     drop(csm);
     let recv_bytes: u64 = recvd.iter().map(|(_, b)| b.len() as u64).sum();

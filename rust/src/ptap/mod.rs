@@ -12,7 +12,10 @@
 //! preallocation of `C`, and any retained auxiliaries), then
 //! [`Ptap::numeric`] any number of times as the values of `A`/`P` change
 //! (the paper runs 1 symbolic + 11 numeric).  Every phase measures its own
-//! busy CPU time, message counts and bytes, and charges every byte it
+//! busy CPU time, message counts and bytes, plus the *overlap window* —
+//! busy seconds between its first posted send and the epoch close on the
+//! nonblocking engine (large for all-at-once, ≈ 0 for merged — the
+//! paper's §3 trade-off made measurable) — and charges every byte it
 //! holds to the rank's [`MemTracker`] — those numbers are the tables.
 
 mod all_at_once;

@@ -7,15 +7,14 @@
 //! MAT_REUSE_MATRIX), which is exactly the overhead the all-at-once
 //! algorithms eliminate.
 
-use crate::dist::{Comm, DistCsr, PrMat};
+use crate::dist::{tag, Comm, DistCsr, PrMat};
 use crate::mat::Csr;
 use crate::mem::{Cat, MemTracker};
 use crate::spgemm::{ApProduct, RowScratch, RowView, StampedAccumulator};
-use crate::util::bytebuf::ByteWriter;
 
 use super::common::{
-    exchange_tracked, for_each_num_row, for_each_sym_row, COutput, LocalSymTables, PtapStats,
-    RemoteStageSym,
+    exchange_tracked, for_each_num_row, for_each_sym_row, write_num_row, COutput, LocalSymTables,
+    PtapStats, RemoteStageSym, ScatterPipeline,
 };
 
 /// Retained two-step state: the auxiliary matrices the paper charges.
@@ -140,11 +139,12 @@ pub fn numeric(
     refresh_transpose_values(&p.offd, &mut state.pto);
     c.zero_values();
 
-    // Line 4: numeric C_s = P_oᵀ C̃ — per remote target row, accumulate
-    // densely and serialize straight into the per-owner send buffer
-    // (garray ascending => owners ascending).
-    let np = comm.size();
-    let mut writers: Vec<Option<ByteWriter>> = (0..np).map(|_| None).collect();
+    // Lines 4–5: numeric C_s = P_oᵀ C̃ — per remote target row, accumulate
+    // densely and serialize straight into the pipeline, which posts every
+    // full chunk while the loop keeps computing (garray ascending => rows
+    // ascend within each destination, exactly as the bulk path sent them).
+    let mut pipe = ScatterPipeline::new(comm.size(), tag::PTAP_NUM);
+    let mut cbuf64: Vec<u64> = Vec::new();
     for t in 0..state.pto.nrows {
         if state.pto.row_len(t) == 0 {
             continue;
@@ -157,30 +157,22 @@ pub fn numeric(
             }
         }
         state.acc.extract_sorted(&mut state.cbuf32, &mut state.vbuf);
+        cbuf64.clear();
+        cbuf64.extend(state.cbuf32.iter().map(|&cc| cc as u64));
         let grow = p.garray[t];
         let owner = p.col_layout.owner(grow as usize);
-        let wtr = writers[owner].get_or_insert_with(ByteWriter::new);
-        wtr.u64(grow);
-        wtr.u32(state.cbuf32.len() as u32);
-        for &cc in &state.cbuf32 {
-            wtr.u64(cc as u64);
-        }
-        wtr.f64_slice(&state.vbuf);
+        write_num_row(pipe.writer(owner), grow, &cbuf64, &state.vbuf);
+        pipe.row_done(comm, owner);
     }
-    // Line 5: send.
-    let sends: Vec<(usize, Vec<u8>)> = writers
-        .into_iter()
-        .enumerate()
-        .filter_map(|(d, w)| w.map(|w| (d, w.into_bytes())))
-        .collect();
-    let send_bytes: u64 = sends.iter().map(|(_, b)| b.len() as u64).sum();
-    tracker.alloc(Cat::Comm, send_bytes);
-    let recvd = exchange_tracked(comm, sends, &mut stats.num_msgs, &mut stats.num_bytes);
-    let recv_bytes: u64 = recvd.iter().map(|(_, b)| b.len() as u64).sum();
-    tracker.alloc(Cat::Comm, recv_bytes);
 
-    // Line 6: numeric C_l = P_dᵀ C̃ — accumulate one output row at a time.
+    // Line 6: numeric C_l = P_dᵀ C̃ — accumulate one output row at a time,
+    // releasing received chunks off the wire between pipeline chunks.
+    let mut recvd: Vec<(usize, Vec<u8>)> = Vec::new();
+    let poll_every = pipe.chunk_rows();
     for i in 0..state.ptd.nrows {
+        if i % poll_every == 0 {
+            recvd.extend(pipe.poll(comm));
+        }
         if state.ptd.row_len(i) == 0 {
             continue;
         }
@@ -194,14 +186,24 @@ pub fn numeric(
         state.acc.extract_sorted(&mut state.cbuf32, &mut state.vbuf);
         c.add_global_row(i, &state.cbuf32, &state.vbuf);
     }
-    // Lines 7–8: receive C_r, C_l += C_r.
+    // Lines 7–8: epoch close, then C_l += C_r — folded after the local
+    // loop, in canonical source order, so the slot update order (hence
+    // the bits) matches the bulk-synchronous path.
+    recvd.extend(pipe.finish(comm));
+    // bulk-equivalent comm-buffer accounting across the fold window
+    let recv_bytes: u64 = recvd.iter().map(|(_, b)| b.len() as u64).sum();
+    let comm_bytes = pipe.bytes + recv_bytes;
+    tracker.alloc(Cat::Comm, comm_bytes);
     let cbeg = v.cbeg;
     for (_src, payload) in &recvd {
         for_each_num_row(payload, |grow, cols, vals| {
             c.add_global_row((grow - cbeg) as usize, cols, vals);
         });
     }
-    tracker.free(Cat::Comm, send_bytes + recv_bytes);
+    tracker.free(Cat::Comm, comm_bytes);
+    stats.num_msgs += pipe.msgs;
+    stats.num_bytes += pipe.bytes;
+    stats.num_overlap += pipe.overlap;
     stats.num_calls += 1;
 }
 

@@ -1,0 +1,175 @@
+//! Algorithm equivalence on irregular `Layout::from_counts` partitions —
+//! including an empty rank and a rank whose `P` offd block is empty — and
+//! a pipeline chunk-size sweep: every `GPTAP_PIPELINE_CHUNK` setting
+//! (1 = post every row, huge = end-staged/bulk) must produce the
+//! bit-identical `C` and identical measured byte totals.
+
+use std::sync::Mutex;
+
+use galerkin_ptap::dist::{DistCsr, DistCsrBuilder, Layout, World};
+use galerkin_ptap::mat::Csr;
+use galerkin_ptap::mem::MemTracker;
+use galerkin_ptap::ptap::{ptap_once, seq_ptap_reference, Algo, ALL_ALGOS};
+use galerkin_ptap::util::prng::Rng;
+
+/// `GPTAP_PIPELINE_CHUNK` is process-global state read by the pipelines;
+/// `std::env::set_var` racing a concurrent `env::var` is UB on glibc.
+/// Every test in this binary takes this lock so the chunk sweep never
+/// overlaps another test's env reads.
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+const N_FINE: usize = 40;
+
+/// A: `N_FINE × N_FINE` (row and column space both partitioned by `rl`),
+/// ~5 nnz/row, globally deterministic (the same matrix under any
+/// partition).
+fn build_a(rank: usize, rl: &Layout) -> DistCsr {
+    let ncols = rl.global_size();
+    let mut b = DistCsrBuilder::new(rank, rl.clone(), rl.clone());
+    for gi in rl.range(rank) {
+        let mut rng = Rng::new(900 + gi as u64 * 7919);
+        let mut cols: Vec<u64> = (0..5).map(|_| rng.below(ncols) as u64).collect();
+        cols.sort_unstable();
+        cols.dedup();
+        let entries: Vec<(u64, f64)> =
+            cols.iter().map(|&c| (c, rng.range_f64(-1.0, 1.0))).collect();
+        b.push_row(&entries);
+    }
+    b.finish()
+}
+
+/// P: `N_FINE × m`, ~2 nnz/row; rows owned by `local_only_rank` reference
+/// only that rank's own coarse columns, so its offd block is empty.
+fn build_p(rank: usize, rl: &Layout, cl: &Layout, local_only_rank: usize) -> DistCsr {
+    let mut b = DistCsrBuilder::new(rank, rl.clone(), cl.clone());
+    for gi in rl.range(rank) {
+        let mut rng = Rng::new(7000 + gi as u64 * 104729);
+        let range = if rank == local_only_rank {
+            cl.range(local_only_rank)
+        } else {
+            0..cl.global_size()
+        };
+        assert!(!range.is_empty(), "local-only rank must own coarse columns");
+        let lo = range.start as u64;
+        let n = range.end - range.start;
+        let mut cols: Vec<u64> = (0..2).map(|_| lo + rng.below(n) as u64).collect();
+        cols.sort_unstable();
+        cols.dedup();
+        let entries: Vec<(u64, f64)> =
+            cols.iter().map(|&c| (c, rng.range_f64(-1.0, 1.0))).collect();
+        b.push_row(&entries);
+    }
+    b.finish()
+}
+
+struct Cell {
+    row_counts: Vec<usize>,
+    coarse_counts: Vec<usize>,
+    local_only_rank: usize,
+}
+
+/// The partitions under test, all via `Layout::from_counts`:
+/// - np = 1: trivial single-rank baseline;
+/// - np = 2: rank 0 owns *no fine rows* (empty rank — its P offd is
+///   trivially empty) while owning most coarse columns, so rank 1
+///   computes everything and ships rank 0 its C block;
+/// - np = 4: rank 0 owns no fine rows, rank 1 owns no coarse columns,
+///   and rank 2 is the local-only rank (nonzero rows, empty P offd).
+fn cells() -> Vec<Cell> {
+    vec![
+        Cell { row_counts: vec![N_FINE], coarse_counts: vec![12], local_only_rank: 0 },
+        Cell {
+            row_counts: vec![0, N_FINE],
+            coarse_counts: vec![8, 4],
+            local_only_rank: 0,
+        },
+        Cell {
+            row_counts: vec![0, 18, 4, 18],
+            coarse_counts: vec![6, 0, 4, 2],
+            local_only_rank: 2,
+        },
+    ]
+}
+
+/// Run one algorithm on one partition; every rank returns the gathered
+/// global C (plus A and P for the sequential reference).
+fn run_cell(cell: &Cell, algo: Algo) -> Vec<(Csr, Csr, Csr, u64, u64)> {
+    let np = cell.row_counts.len();
+    let rl = Layout::from_counts(&cell.row_counts);
+    let cl = Layout::from_counts(&cell.coarse_counts);
+    let w = World::new(np);
+    w.run(|comm| {
+        let a = build_a(comm.rank(), &rl);
+        let p = build_p(comm.rank(), &rl, &cl, cell.local_only_rank);
+        if comm.rank() == cell.local_only_rank {
+            assert_eq!(p.offd.nnz(), 0, "local-only rank must have an empty P offd");
+        }
+        let tracker = MemTracker::new();
+        let (c, stats) = ptap_once(algo, &comm, &a, &p, &tracker);
+        c.validate().unwrap();
+        (
+            c.gather_global(&comm),
+            a.gather_global(&comm),
+            p.gather_global(&comm),
+            stats.sym_bytes,
+            stats.num_bytes,
+        )
+    })
+}
+
+#[test]
+fn algorithms_agree_on_irregular_partitions() {
+    let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    for cell in cells() {
+        let np = cell.row_counts.len();
+        let aao = run_cell(&cell, Algo::AllAtOnce);
+        let merged = run_cell(&cell, Algo::Merged);
+        let two = run_cell(&cell, Algo::TwoStep);
+        let want = seq_ptap_reference(&aao[0].1, &aao[0].2);
+        for rank in 0..np {
+            // every rank assembles the same global C as rank 0
+            assert_eq!(aao[rank].0, aao[0].0, "np={np} rank {rank} inconsistent");
+            // all-at-once and merged perform identical per-slot float
+            // sequences: bit-identical C
+            assert_eq!(aao[rank].0, merged[rank].0, "np={np} rank {rank} aao vs merged");
+            // two-step accumulates through the dense apa scratch; same
+            // per-slot order, compared to ulp-level tolerance
+            let d2 = two[rank].0.max_abs_diff(&aao[rank].0);
+            assert!(d2 < 1e-12, "np={np} rank {rank} two-step diff {d2}");
+            let dr = aao[rank].0.max_abs_diff(&want);
+            assert!(dr < 1e-10, "np={np} rank {rank} vs reference diff {dr}");
+        }
+    }
+}
+
+#[test]
+fn pipeline_chunk_sweep_is_bit_identical_to_bulk() {
+    // chunk = 1 posts every staged row immediately (maximal pipelining);
+    // a huge chunk degenerates to end-staged sends, i.e. exactly the
+    // bulk-synchronous schedule.  C bits and byte totals must not move.
+    let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let cells = cells();
+    let cell = &cells[2];
+    for algo in ALL_ALGOS {
+        std::env::set_var("GPTAP_PIPELINE_CHUNK", "1000000000");
+        let bulk = run_cell(cell, algo);
+        for chunk in ["1", "3", "64"] {
+            std::env::set_var("GPTAP_PIPELINE_CHUNK", chunk);
+            let piped = run_cell(cell, algo);
+            for rank in 0..cell.row_counts.len() {
+                assert_eq!(
+                    piped[rank].0, bulk[rank].0,
+                    "{:?} chunk {chunk} rank {rank}: C bits moved",
+                    algo
+                );
+                assert_eq!(
+                    (piped[rank].3, piped[rank].4),
+                    (bulk[rank].3, bulk[rank].4),
+                    "{:?} chunk {chunk} rank {rank}: byte totals moved",
+                    algo
+                );
+            }
+        }
+    }
+    std::env::remove_var("GPTAP_PIPELINE_CHUNK");
+}
