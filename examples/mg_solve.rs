@@ -46,7 +46,7 @@ fn main() {
             &comm,
             a0.clone(),
             &Coarsening::Geometric { grids: grids_ref.clone() },
-            HierarchyConfig { algo: Algo::AllAtOnce, cache: false, numeric_repeats: 1 },
+            HierarchyConfig { algo: Algo::AllAtOnce, cache: false, numeric_repeats: 1, eq_limit: None },
             &tracker,
         );
         let setup_aao = t0.elapsed().as_secs_f64();
@@ -57,7 +57,7 @@ fn main() {
             &comm,
             a0.clone(),
             &Coarsening::Geometric { grids: grids_ref.clone() },
-            HierarchyConfig { algo: Algo::TwoStep, cache: false, numeric_repeats: 1 },
+            HierarchyConfig { algo: Algo::TwoStep, cache: false, numeric_repeats: 1, eq_limit: None },
             &tracker,
         );
         let c1 = h.levels.last().unwrap().a.gather_global(&comm);

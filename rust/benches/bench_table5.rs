@@ -16,6 +16,7 @@ fn main() {
         cache: false,
         max_levels: 12,
         solve_iters: 3,
+        eq_limit: None,
     };
     println!(
         "== Table 5/6 analog ==\nneutron hierarchy: {}³ vertices × {} groups = {} unknowns\n",

@@ -35,6 +35,7 @@ fn main() {
                     cache,
                     max_levels: 12,
                     solve_iters: 25,
+                    eq_limit: None,
                 });
                 eprintln!("  cache={cache} np={np} {} done", algo.name());
                 rows.push(r);

@@ -1,0 +1,33 @@
+//! Coarse-level rank agglomeration (the PETSc PCTelescope /
+//! `-pc_gamg_process_eq_limit` analog).
+//!
+//! On the coarsest AMG levels most ranks own a handful of rows, yet every
+//! communication epoch still pays an all-ranks close barrier and the full
+//! α term of the model.  This subsystem telescopes such levels onto a
+//! contiguous prefix of *active* ranks:
+//!
+//! - [`choose_active_ranks`] picks the active count `k` from an
+//!   `eq_limit` rows-per-rank knob (a level telescopes when its global
+//!   rows fall under `eq_limit × np`);
+//! - [`RedistPlan`] maps a [`crate::dist::Layout`] over `np` ranks onto
+//!   the equal split over the first `k` ranks and moves
+//!   [`crate::dist::DistCsr`] / [`crate::dist::DistVec`] data both
+//!   directions — one-shot symbolic scatters plus value-only numeric
+//!   refreshes over the same schedule;
+//! - [`telescope_operators`] splits the communicator
+//!   ([`crate::dist::Comm::split`]) and redistributes a level's `A` and
+//!   `P` onto the sub-communicator,
+//!   so the triple product (and everything coarser) runs entirely inside
+//!   it while idle ranks never enter an epoch's close barrier.
+//!
+//! Determinism: both layouts are contiguous partitions of the same
+//! global index space, so redistribution is pure interval arithmetic —
+//! rows move in ascending global order and land in ascending global
+//! order (the engine releases sources rank-major), making the telescoped
+//! operators bitwise-equal re-partitions of the originals.
+
+mod redist;
+mod telescope;
+
+pub use redist::{choose_active_ranks, RedistPlan};
+pub use telescope::{telescope_operators, Telescope};

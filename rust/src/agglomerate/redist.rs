@@ -1,0 +1,407 @@
+//! Layout-to-layout redistribution: move a contiguous row partition over
+//! `np` ranks onto the equal split over the first `k` ranks (and back).
+//!
+//! Because both sides are contiguous partitions of the same global index
+//! space, the schedule is pure interval intersection — each rank sends at
+//! most a few contiguous global ranges, receivers reassemble them in
+//! ascending source order, which *is* ascending global-row order.  The
+//! wire format per matrix row is `[n u32, cols u64×n, vals f64×n]` with
+//! globally-sorted columns ([`DistCsr::row_global`] order); the value
+//! refresh resends `vals f64×n` alone over the identical schedule.
+
+use std::ops::Range;
+
+use crate::dist::{tag, Comm, DistCsr, DistCsrBuilder, DistVec, Layout};
+use crate::util::bytebuf::{ByteReader, ByteWriter};
+
+/// Active rank count for `n` global rows under an `eq_limit` rows-per-rank
+/// knob (PETSc `-pc_gamg_process_eq_limit` analog): enough ranks that each
+/// active rank owns roughly `eq_limit` rows, never more than `np`, never
+/// fewer than one.
+pub fn choose_active_ranks(n: usize, np: usize, eq_limit: usize) -> usize {
+    assert!(eq_limit > 0, "eq_limit must be positive");
+    if n == 0 {
+        return 1;
+    }
+    n.div_ceil(eq_limit).clamp(1, np)
+}
+
+/// Precomputed redistribution schedule between an `old` layout over the
+/// parent communicator's `np` ranks and the equal `new` layout over the
+/// contiguous prefix of `k` active ranks.  Built once per telescoped
+/// level (the one-shot symbolic plan); every scatter/gather/refresh
+/// replays the same schedule.
+#[derive(Debug, Clone)]
+pub struct RedistPlan {
+    old: Layout,
+    new: Layout,
+    k: usize,
+    /// This rank's outgoing runs: (active destination, global range),
+    /// ascending by destination (and hence by range).
+    sends: Vec<(usize, Range<usize>)>,
+    /// This rank's incoming runs under `new` (active ranks only):
+    /// (parent source, global range), ascending by source.
+    recvs: Vec<(usize, Range<usize>)>,
+}
+
+/// Intersection of two half-open ranges (possibly empty).
+fn isect(a: &Range<usize>, b: &Range<usize>) -> Range<usize> {
+    a.start.max(b.start)..a.end.min(b.end)
+}
+
+impl RedistPlan {
+    /// Plan the redistribution of `old` onto `k` active ranks for the
+    /// calling `rank` (pure layout arithmetic — no communication).
+    pub fn new(old: &Layout, k: usize, rank: usize) -> RedistPlan {
+        assert!((1..=old.np()).contains(&k), "active count {k} out of 1..={}", old.np());
+        let new = Layout::new_equal(old.global_size(), k);
+        let mine = old.range(rank);
+        let mut sends = Vec::new();
+        for d in 0..k {
+            let r = isect(&mine, &new.range(d));
+            if !r.is_empty() {
+                sends.push((d, r));
+            }
+        }
+        let mut recvs = Vec::new();
+        if rank < k {
+            let mine_new = new.range(rank);
+            for s in 0..old.np() {
+                let r = isect(&mine_new, &old.range(s));
+                if !r.is_empty() {
+                    recvs.push((s, r));
+                }
+            }
+        }
+        RedistPlan { old: old.clone(), new, k, sends, recvs }
+    }
+
+    /// Number of active ranks.
+    pub fn active(&self) -> usize {
+        self.k
+    }
+
+    /// The layout on the parent communicator.
+    pub fn old_layout(&self) -> &Layout {
+        &self.old
+    }
+
+    /// The layout on the active prefix (a `k`-rank layout).
+    pub fn new_layout(&self) -> &Layout {
+        &self.new
+    }
+
+    /// Heap bytes of the plan (schedules + layouts), for memory
+    /// accounting.
+    pub fn bytes(&self) -> u64 {
+        self.old.bytes()
+            + self.new.bytes()
+            + ((self.sends.len() + self.recvs.len()) * 24) as u64
+    }
+
+    /// Scatter a distributed matrix onto the active ranks (collective
+    /// over the *parent* communicator; `m.row_layout` must equal the
+    /// plan's old layout).  Active ranks return the telescoped matrix
+    /// under the new row layout and the given column layout; idle ranks
+    /// return `None`.
+    pub fn scatter_csr(&self, comm: &Comm, m: &DistCsr, col_layout: Layout) -> Option<DistCsr> {
+        debug_assert_eq!(m.row_layout, self.old, "matrix layout does not match the plan");
+        let rank = comm.rank();
+        let my_start = self.old.start(rank);
+        let mut cbuf: Vec<u64> = Vec::new();
+        let mut vbuf: Vec<f64> = Vec::new();
+        let mut sends = Vec::with_capacity(self.sends.len());
+        for (dest, range) in &self.sends {
+            let mut w = ByteWriter::new();
+            for g in range.clone() {
+                m.row_global(g - my_start, &mut cbuf, &mut vbuf);
+                w.u32(cbuf.len() as u32);
+                w.u64_slice(&cbuf);
+                w.f64_slice(&vbuf);
+            }
+            sends.push((*dest, w.into_bytes()));
+        }
+        let recvd = comm.exchange_on(tag::REDIST, sends);
+        if rank >= self.k {
+            debug_assert!(recvd.is_empty(), "idle rank received redistributed rows");
+            return None;
+        }
+        debug_assert_eq!(recvd.len(), self.recvs.len(), "recv runs out of step");
+        let mut b = DistCsrBuilder::new(rank, self.new.clone(), col_layout);
+        let mut entries: Vec<(u64, f64)> = Vec::new();
+        for ((src, range), (psrc, payload)) in self.recvs.iter().zip(&recvd) {
+            debug_assert_eq!(src, psrc, "recv run misalignment");
+            let mut r = ByteReader::new(payload);
+            for _ in range.clone() {
+                let n = r.u32() as usize;
+                entries.clear();
+                for _ in 0..n {
+                    entries.push((r.u64(), 0.0));
+                }
+                for e in entries.iter_mut() {
+                    e.1 = r.f64();
+                }
+                b.push_row(&entries);
+            }
+            debug_assert!(r.done(), "trailing redistribution bytes from rank {src}");
+        }
+        Some(b.finish())
+    }
+
+    /// Refresh the values of an already-telescoped matrix from the
+    /// current values of `m` without resending structure (collective over
+    /// the parent communicator) — the numeric-refresh half of the
+    /// one-shot plan.  `out` must be the matrix a prior
+    /// [`RedistPlan::scatter_csr`] built (`Some` exactly on active ranks).
+    pub fn refresh_csr(&self, comm: &Comm, m: &DistCsr, out: Option<&mut DistCsr>) {
+        debug_assert_eq!(m.row_layout, self.old, "matrix layout does not match the plan");
+        let rank = comm.rank();
+        let my_start = self.old.start(rank);
+        let mut cbuf: Vec<u64> = Vec::new();
+        let mut vbuf: Vec<f64> = Vec::new();
+        let mut sends = Vec::with_capacity(self.sends.len());
+        for (dest, range) in &self.sends {
+            let mut w = ByteWriter::new();
+            for g in range.clone() {
+                m.row_global(g - my_start, &mut cbuf, &mut vbuf);
+                w.f64_slice(&vbuf);
+            }
+            sends.push((*dest, w.into_bytes()));
+        }
+        let recvd = comm.exchange_on(tag::REDIST, sends);
+        let Some(out) = out else {
+            debug_assert!(rank >= self.k && recvd.is_empty(), "active rank must pass its matrix");
+            return;
+        };
+        debug_assert_eq!(out.row_layout, self.new, "out is not this plan's telescoped matrix");
+        let new_start = self.new.start(rank);
+        let mut vals: Vec<f64> = Vec::new();
+        for ((src, range), (psrc, payload)) in self.recvs.iter().zip(&recvd) {
+            debug_assert_eq!(src, psrc, "recv run misalignment");
+            let mut r = ByteReader::new(payload);
+            for g in range.clone() {
+                let li = g - new_start;
+                let n = out.diag.row_len(li) + out.offd.row_len(li);
+                vals.clear();
+                for _ in 0..n {
+                    vals.push(r.f64());
+                }
+                out.set_row_global_vals(li, &vals);
+            }
+            debug_assert!(r.done(), "pattern drift in redistribution refresh");
+        }
+    }
+
+    /// Scatter a vector in the old layout onto the active ranks
+    /// (collective over the parent communicator).  Active ranks return
+    /// their slice under the new layout; idle ranks return `None`.
+    pub fn scatter_vec(&self, comm: &Comm, v: &DistVec) -> Option<DistVec> {
+        debug_assert_eq!(v.layout, self.old, "vector layout does not match the plan");
+        let rank = comm.rank();
+        let my_start = self.old.start(rank);
+        let mut sends = Vec::with_capacity(self.sends.len());
+        for (dest, range) in &self.sends {
+            let mut w = ByteWriter::with_capacity(8 * range.len());
+            w.f64_slice(&v.vals[range.start - my_start..range.end - my_start]);
+            sends.push((*dest, w.into_bytes()));
+        }
+        let recvd = comm.exchange_on(tag::REDIST, sends);
+        if rank >= self.k {
+            debug_assert!(recvd.is_empty());
+            return None;
+        }
+        let new_start = self.new.start(rank);
+        let mut out = DistVec::zeros(self.new.clone(), rank);
+        for ((src, range), (psrc, payload)) in self.recvs.iter().zip(&recvd) {
+            debug_assert_eq!(src, psrc, "recv run misalignment");
+            let mut r = ByteReader::new(payload);
+            for slot in &mut out.vals[range.start - new_start..range.end - new_start] {
+                *slot = r.f64();
+            }
+            debug_assert!(r.done());
+        }
+        Some(out)
+    }
+
+    /// Gather a vector from the active ranks back into the old layout
+    /// (collective over the parent communicator — the reverse schedule of
+    /// [`RedistPlan::scatter_vec`]).  Active ranks pass their slice;
+    /// idle ranks pass `None`; every rank returns its old-layout slice.
+    pub fn gather_vec(&self, comm: &Comm, v: Option<&DistVec>) -> DistVec {
+        let rank = comm.rank();
+        let mut sends = Vec::with_capacity(self.recvs.len());
+        if let Some(v) = v {
+            debug_assert_eq!(v.layout, self.new, "vector layout does not match the plan");
+            let new_start = self.new.start(rank);
+            for (dest, range) in &self.recvs {
+                let mut w = ByteWriter::with_capacity(8 * range.len());
+                w.f64_slice(&v.vals[range.start - new_start..range.end - new_start]);
+                sends.push((*dest, w.into_bytes()));
+            }
+        } else {
+            debug_assert!(rank >= self.k, "active rank must pass its slice");
+        }
+        let recvd = comm.exchange_on(tag::REDIST, sends);
+        let my_start = self.old.start(rank);
+        let mut out = DistVec::zeros(self.old.clone(), rank);
+        debug_assert_eq!(recvd.len(), self.sends.len(), "gather runs out of step");
+        for ((src, range), (psrc, payload)) in self.sends.iter().zip(&recvd) {
+            debug_assert_eq!(src, psrc, "gather run misalignment");
+            let mut r = ByteReader::new(payload);
+            for slot in &mut out.vals[range.start - my_start..range.end - my_start] {
+                *slot = r.f64();
+            }
+            debug_assert!(r.done());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::World;
+
+    /// Deterministic dyadic-valued matrix over an arbitrary layout: sums
+    /// and products stay exact in f64, so redistribution equality checks
+    /// can be bitwise.
+    fn dyadic_matrix(rank: usize, rl: &Layout, cl: &Layout) -> DistCsr {
+        let n = cl.global_size() as u64;
+        let mut b = DistCsrBuilder::new(rank, rl.clone(), cl.clone());
+        for g in rl.range(rank) {
+            let g = g as u64;
+            let mut cols = vec![g % n, (g * 7 + 3) % n];
+            cols.sort_unstable();
+            cols.dedup();
+            let entries: Vec<(u64, f64)> = cols
+                .iter()
+                .map(|&c| (c, ((g * 5 + c) % 16) as f64 / 4.0 - 2.0))
+                .collect();
+            b.push_row(&entries);
+        }
+        b.finish()
+    }
+
+    #[test]
+    fn choose_active_ranks_respects_eq_limit() {
+        assert_eq!(choose_active_ranks(1000, 8, 500), 2);
+        assert_eq!(choose_active_ranks(27, 8, 64), 1);
+        assert_eq!(choose_active_ranks(1_000_000, 8, 100), 8); // clamped
+        assert_eq!(choose_active_ranks(0, 8, 100), 1);
+        assert_eq!(choose_active_ranks(129, 8, 64), 3); // ceil
+    }
+
+    #[test]
+    fn vec_scatter_gather_round_trips_with_zero_row_ranks() {
+        // irregular old layout with zero-row ranks (aggregation coarse
+        // layouts produce these)
+        let old = Layout::from_counts(&[6, 0, 4, 2]);
+        let w = World::new(4);
+        w.run(|c| {
+            let plan = RedistPlan::new(&old, 2, c.rank());
+            let v = DistVec::from_fn(old.clone(), c.rank(), |g| g as f64 * 0.25);
+            let sub = plan.scatter_vec(&c, &v);
+            assert_eq!(sub.is_some(), c.rank() < 2);
+            if let Some(sv) = &sub {
+                assert_eq!(sv.local_len(), plan.new_layout().local_size(c.rank()));
+                for (i, &x) in sv.vals.iter().enumerate() {
+                    let g = plan.new_layout().start(c.rank()) + i;
+                    assert_eq!(x, g as f64 * 0.25);
+                }
+            }
+            let back = plan.gather_vec(&c, sub.as_ref());
+            assert_eq!(back.vals, v.vals, "rank {} round trip", c.rank());
+        });
+    }
+
+    #[test]
+    fn csr_scatter_preserves_global_matrix_bitwise() {
+        let old = Layout::from_counts(&[0, 5, 3, 4]);
+        let cl = Layout::from_counts(&[4, 2, 0, 3]);
+        let w = World::new(4);
+        w.run(|c| {
+            let m = dyadic_matrix(c.rank(), &old, &cl);
+            let before = m.gather_global(&c);
+            for k in [1, 2, 3] {
+                let plan = RedistPlan::new(&old, k, c.rank());
+                let cl_new = Layout::new_equal(cl.global_size(), k);
+                let mt = plan.scatter_csr(&c, &m, cl_new);
+                assert_eq!(mt.is_some(), c.rank() < k);
+                // assemble the telescoped matrix on the active prefix and
+                // compare bitwise — gather_global is partition-invariant
+                if let Some(mt) = &mt {
+                    mt.validate().unwrap();
+                }
+                let sub = c.split(usize::from(c.rank() >= k));
+                if let Some(mt) = &mt {
+                    let after = mt.gather_global(&sub);
+                    assert_eq!(after, before, "k={k} bits moved");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn csr_refresh_updates_values_only() {
+        let old = Layout::from_counts(&[3, 0, 5]);
+        let cl = Layout::new_equal(6, 3);
+        let w = World::new(3);
+        w.run(|c| {
+            let m = dyadic_matrix(c.rank(), &old, &cl);
+            let plan = RedistPlan::new(&old, 2, c.rank());
+            let cl_new = Layout::new_equal(cl.global_size(), 2);
+            let mut mt = plan.scatter_csr(&c, &m, cl_new);
+            // scale the source values, refresh, compare to a re-scatter
+            let mut m2 = m.clone();
+            for v in m2.diag.vals.iter_mut().chain(m2.offd.vals.iter_mut()) {
+                *v *= 2.0;
+            }
+            plan.refresh_csr(&c, &m2, mt.as_mut());
+            let fresh = plan.scatter_csr(&c, &m2, Layout::new_equal(cl.global_size(), 2));
+            match (&mt, &fresh) {
+                (Some(a), Some(b)) => assert_eq!(a, b, "refresh drifted from re-scatter"),
+                (None, None) => {}
+                _ => panic!("active/idle mismatch"),
+            }
+        });
+    }
+
+    #[test]
+    fn single_rank_world_noop_telescope() {
+        let old = Layout::new_equal(7, 1);
+        let w = World::new(1);
+        w.run(|c| {
+            let plan = RedistPlan::new(&old, 1, c.rank());
+            let v = DistVec::from_fn(old.clone(), 0, |g| g as f64);
+            let sub = plan.scatter_vec(&c, &v).unwrap();
+            assert_eq!(sub.vals, v.vals);
+            let back = plan.gather_vec(&c, Some(&sub));
+            assert_eq!(back.vals, v.vals);
+            let m = dyadic_matrix(0, &old, &old);
+            let mt = plan.scatter_csr(&c, &m, old.clone()).unwrap();
+            assert_eq!(mt.gather_global(&c), m.gather_global(&c));
+        });
+    }
+
+    #[test]
+    fn gather_to_root_collects_everything() {
+        let old = Layout::new_equal(10, 4);
+        let w = World::new(4);
+        w.run(|c| {
+            let plan = RedistPlan::new(&old, 1, c.rank());
+            let v = DistVec::from_fn(old.clone(), c.rank(), |g| (g * g) as f64);
+            let sub = plan.scatter_vec(&c, &v);
+            if c.rank() == 0 {
+                let sv = sub.as_ref().unwrap();
+                assert_eq!(sv.local_len(), 10);
+                for (g, &x) in sv.vals.iter().enumerate() {
+                    assert_eq!(x, (g * g) as f64);
+                }
+            } else {
+                assert!(sub.is_none());
+            }
+            let back = plan.gather_vec(&c, sub.as_ref());
+            assert_eq!(back.vals, v.vals);
+        });
+    }
+}

@@ -1,0 +1,92 @@
+//! One telescoped level: the sub-communicator, the coarse-space
+//! redistribution plan the V-cycle crosses every iteration, and the
+//! one-shot redistribution of a level's operators onto the active ranks.
+
+use crate::dist::{Comm, DistCsr};
+
+use super::redist::RedistPlan;
+
+/// The scope boundary below a telescoped level, retained by the
+/// hierarchy: restriction scatters coarse vectors *into* the subcomm
+/// through `coarse`, the coarse correction runs on `subcomm`, and
+/// prolongation gathers back out.
+#[derive(Clone)]
+pub struct Telescope {
+    /// The active ranks' communicator (`None` on idle ranks, which skip
+    /// everything between the boundary's scatter and gather).
+    pub subcomm: Option<Comm>,
+    /// Coarse-space plan: parent coarse layout ↔ subcomm coarse layout.
+    pub coarse: RedistPlan,
+    /// Number of active ranks.
+    pub active: usize,
+}
+
+impl Telescope {
+    /// Heap bytes of the retained plan (for memory accounting).
+    pub fn bytes(&self) -> u64 {
+        self.coarse.bytes()
+    }
+}
+
+/// Telescope one level onto `k` active ranks (collective over `parent`):
+/// split the communicator, redistribute the level operator `a`
+/// (rows *and* columns onto the new fine layout) and the interpolation
+/// `p` (rows onto the new fine layout, columns onto the new coarse
+/// layout).  Active ranks get `Some((a, p))` telescoped plus the
+/// subcommunicator inside the returned [`Telescope`]; idle ranks get
+/// `None` for both and will never enter a sub-scope epoch.
+pub fn telescope_operators(
+    parent: &Comm,
+    a: &DistCsr,
+    p: &DistCsr,
+    k: usize,
+) -> (Telescope, Option<(DistCsr, DistCsr)>) {
+    debug_assert!(k < parent.size(), "telescoping onto all ranks is a no-op");
+    let rank = parent.rank();
+    let fine = RedistPlan::new(&a.row_layout, k, rank);
+    let coarse = RedistPlan::new(&p.col_layout, k, rank);
+    let active = rank < k;
+    // active ranks are color 0 so the sub-rank order matches the prefix
+    let sub = parent.split(usize::from(!active));
+    let a_t = fine.scatter_csr(parent, a, fine.new_layout().clone());
+    let p_t = fine.scatter_csr(parent, p, coarse.new_layout().clone());
+    let tel = Telescope { subcomm: active.then_some(sub), coarse, active: k };
+    let ops = match (a_t, p_t) {
+        (Some(a_t), Some(p_t)) => Some((a_t, p_t)),
+        (None, None) => None,
+        _ => unreachable!("fine-plan activity must agree for A and P"),
+    };
+    (tel, ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{Layout, World};
+    use crate::gen::{grid_laplacian, trilinear_interp, Grid3};
+
+    #[test]
+    fn telescoped_operators_match_originals_globally() {
+        let coarse_grid = Grid3::cube(3);
+        let w = World::new(4);
+        w.run(|c| {
+            let a = grid_laplacian(coarse_grid.refine(), c.rank(), c.size());
+            let p = trilinear_interp(coarse_grid, c.rank(), c.size());
+            let a_full = a.gather_global(&c);
+            let p_full = p.gather_global(&c);
+            let (tel, ops) = telescope_operators(&c, &a, &p, 2);
+            assert_eq!(tel.active, 2);
+            assert_eq!(ops.is_some(), c.rank() < 2);
+            assert_eq!(tel.subcomm.is_some(), c.rank() < 2);
+            if let (Some(sc), Some((a_t, p_t))) = (&tel.subcomm, &ops) {
+                a_t.validate().unwrap();
+                p_t.validate().unwrap();
+                assert_eq!(sc.size(), 2);
+                assert_eq!(a_t.gather_global(sc), a_full);
+                assert_eq!(p_t.gather_global(sc), p_full);
+                // P's coarse columns moved to the subcomm coarse layout
+                assert_eq!(p_t.col_layout, Layout::new_equal(p.global_ncols(), 2));
+            }
+        });
+    }
+}

@@ -5,14 +5,14 @@
 //! ranks plus the α-β model applied to that rank's message counts.  Memory
 //! is the max over ranks of the tracker's per-category peaks.
 
-use crate::dist::{DistSpmv, DistVec, World};
+use crate::dist::{DistSpmv, DistVec, World, COMM_ALPHA_SECS};
 use crate::gen::{
-    neutron_block_operator, Grid3, ModelProblem, NeutronConfig,
+    grid_laplacian, neutron_block_operator, Grid3, ModelProblem, NeutronConfig,
 };
 use crate::mem::{Cat, MemTracker};
 use crate::mg::{
-    build_hierarchy, gmres, Coarsening, HierarchyConfig, InterpStats, LevelStats, MgOpts,
-    MgPreconditioner,
+    build_hierarchy, geometric_chain, gmres, Coarsening, HierarchyConfig, InterpStats,
+    LevelStats, MgOpts, MgPreconditioner,
 };
 use crate::ptap::{Algo, Ptap, PtapStats};
 
@@ -132,6 +132,8 @@ pub struct NeutronConfigExp {
     pub max_levels: usize,
     /// Outer MG-PCG iterations standing in for the transport solve.
     pub solve_iters: usize,
+    /// Coarse-level agglomeration knob (rows per rank); `None` disables.
+    pub eq_limit: Option<usize>,
 }
 
 /// One row of Table 7/8 plus the per-level Tables 5/6.
@@ -151,6 +153,8 @@ pub struct NeutronResult {
     pub n_levels: usize,
     pub op_stats: Vec<LevelStats>,
     pub interp_stats: Vec<InterpStats>,
+    /// Ranks holding each level (all `np` until a telescope boundary).
+    pub active_ranks: Vec<usize>,
     /// Residual history of the mock solve (end-to-end signal).
     pub residuals: Vec<f64>,
 }
@@ -189,12 +193,14 @@ pub fn run_neutron(cfg: NeutronConfigExp) -> NeutronResult {
                 algo: cfg.algo,
                 cache: cfg.cache,
                 numeric_repeats: 1,
+                eq_limit: cfg.eq_limit,
             },
             &tracker,
         );
         let ptap_stats = h.ptap_stats;
         let op_stats = h.op_stats.clone();
         let interp_stats = h.interp_stats.clone();
+        let active_ranks = h.active_ranks.clone();
         let n_levels = h.n_levels();
         // product memory: everything above the A0 floor minus the
         // interpolations charged along the way (read BEFORE solver state
@@ -220,7 +226,8 @@ pub fn run_neutron(cfg: NeutronConfigExp) -> NeutronResult {
             gmres(&comm, &a0, &spmv, &b, &mut x, Some(&mut pc), 30, 1e-8, cfg.solve_iters);
         total_timer.stop();
 
-        let comm_model = comm.stats().modeled_secs();
+        // rank-wide totals: subcomm traffic counts toward the model too
+        let comm_model = comm.stats_global().modeled_secs();
         (
             ptap_stats,
             mem_product,
@@ -229,6 +236,7 @@ pub fn run_neutron(cfg: NeutronConfigExp) -> NeutronResult {
             op_stats,
             interp_stats,
             n_levels,
+            active_ranks,
             solve.residuals,
         )
     });
@@ -241,7 +249,8 @@ pub fn run_neutron(cfg: NeutronConfigExp) -> NeutronResult {
         time_product = time_product.max(stats.time_sym_modeled() + stats.time_num_modeled());
         time_total = time_total.max(*tt);
     }
-    let (_, _, _, _, op_stats, interp_stats, n_levels, residuals) = per_rank.remove(0);
+    let (_, _, _, _, op_stats, interp_stats, n_levels, active_ranks, residuals) =
+        per_rank.remove(0);
     NeutronResult {
         np: cfg.np,
         algo: cfg.algo,
@@ -253,7 +262,66 @@ pub fn run_neutron(cfg: NeutronConfigExp) -> NeutronResult {
         n_levels,
         op_stats,
         interp_stats,
+        active_ranks,
         residuals,
+    }
+}
+
+/// One hierarchy-build bench cell: per-level traffic of a geometric
+/// Galerkin hierarchy, with or without coarse-level agglomeration — the
+/// evidence that telescoped levels pay fewer messages and a smaller
+/// modeled α term.
+#[derive(Debug, Clone)]
+pub struct HierarchyBenchResult {
+    pub np: usize,
+    pub eq_limit: Option<usize>,
+    pub n_levels: usize,
+    /// Ranks holding each level.
+    pub active_ranks: Vec<usize>,
+    /// Rank-0 messages/bytes per coarse-level build (PtAP + level stats).
+    pub level_msgs: Vec<u64>,
+    pub level_bytes: Vec<u64>,
+    /// Rank-0 redistribution traffic across telescope boundaries.
+    pub redist_msgs: u64,
+    pub redist_bytes: u64,
+    /// Modeled α seconds of the coarse-level builds (rank 0).
+    pub alpha_secs: f64,
+}
+
+/// Build a geometric hierarchy and report rank 0's per-level traffic.
+pub fn run_hierarchy_bench(
+    coarse: Grid3,
+    levels: usize,
+    np: usize,
+    algo: Algo,
+    eq_limit: Option<usize>,
+) -> HierarchyBenchResult {
+    let world = World::new(np);
+    let grids = geometric_chain(coarse, levels);
+    let per_rank = world.run(|comm| {
+        let tracker = MemTracker::new();
+        let a0 = grid_laplacian(grids[0], comm.rank(), comm.size());
+        let h = build_hierarchy(
+            &comm,
+            a0,
+            &Coarsening::Geometric { grids: grids.clone() },
+            HierarchyConfig { algo, cache: false, numeric_repeats: 1, eq_limit },
+            &tracker,
+        );
+        (h.active_ranks.clone(), h.level_comm.clone(), h.redist_comm, h.n_levels())
+    });
+    let (active_ranks, level_comm, redist, n_levels) = per_rank.into_iter().next().unwrap();
+    let total_msgs: u64 = level_comm.iter().map(|c| c.msgs).sum();
+    HierarchyBenchResult {
+        np,
+        eq_limit,
+        n_levels,
+        active_ranks,
+        level_msgs: level_comm.iter().map(|c| c.msgs).collect(),
+        level_bytes: level_comm.iter().map(|c| c.bytes).collect(),
+        redist_msgs: redist.msgs,
+        redist_bytes: redist.bytes,
+        alpha_secs: total_msgs as f64 * COMM_ALPHA_SECS,
     }
 }
 
@@ -321,6 +389,7 @@ mod tests {
             cache: false,
             max_levels: 6,
             solve_iters: 40,
+            eq_limit: None,
         });
         assert!(r.n_levels >= 3);
         assert!(r.mem_total >= r.mem_product);

@@ -6,10 +6,10 @@ mod experiment;
 mod report;
 
 pub use experiment::{
-    run_model_problem, run_neutron, ModelProblemConfig, ModelProblemResult, NeutronConfigExp,
-    NeutronResult,
+    run_hierarchy_bench, run_model_problem, run_neutron, HierarchyBenchResult,
+    ModelProblemConfig, ModelProblemResult, NeutronConfigExp, NeutronResult,
 };
 pub use report::{
-    eff_column, level_tables, model_problem_tables, neutron_tables, speedup_column,
-    write_bench_json, write_results,
+    diff_bench, eff_column, level_tables, model_problem_tables, neutron_tables,
+    parse_bench_cells, speedup_column, write_bench_json, write_results,
 };

@@ -6,7 +6,7 @@ use std::path::Path;
 use crate::util::table::Table;
 use crate::util::{fmt_secs, mb};
 
-use super::experiment::{ModelProblemResult, NeutronResult};
+use super::experiment::{HierarchyBenchResult, ModelProblemResult, NeutronResult};
 
 /// Speedups relative to the smallest rank count *within one algorithm*
 /// (paper Figs 1/3/7/9 top panels).
@@ -128,11 +128,21 @@ pub fn level_tables(r: &NeutronResult) -> (Table, Table) {
     (t5, t6)
 }
 
-/// Write the benchmark-smoke artifact (CI's `BENCH_pr2.json`): one record
+/// Write the benchmark-smoke artifact (CI's `BENCH_pr3.json`): one record
 /// per (np, algo) cell with modeled times, the overlap window, the peak
-/// product bytes and the measured traffic — the numbers a perf trajectory
-/// can diff across PRs.  Hand-rolled JSON (no serde offline).
-pub fn write_bench_json(rows: &[ModelProblemResult], path: &Path) -> std::io::Result<()> {
+/// product bytes and the measured traffic, plus one record per
+/// hierarchy-agglomeration cell (per-level messages, active ranks, the
+/// modeled α term) — the numbers [`diff_bench`] compares across PRs.
+/// Hand-rolled JSON (no serde offline).
+pub fn write_bench_json(
+    rows: &[ModelProblemResult],
+    hier: &[HierarchyBenchResult],
+    path: &Path,
+) -> std::io::Result<()> {
+    let fmt_list = |v: &[u64]| -> String {
+        let items: Vec<String> = v.iter().map(|x| x.to_string()).collect();
+        format!("[{}]", items.join(", "))
+    };
     let mut s = String::from("{\n  \"bench\": \"model_problem_smoke\",\n  \"cells\": [\n");
     for (k, r) in rows.iter().enumerate() {
         s.push_str(&format!(
@@ -153,8 +163,149 @@ pub fn write_bench_json(rows: &[ModelProblemResult], path: &Path) -> std::io::Re
             if k + 1 < rows.len() { "," } else { "" }
         ));
     }
+    s.push_str("  ],\n  \"hierarchy\": [\n");
+    for (k, h) in hier.iter().enumerate() {
+        let total_msgs: u64 = h.level_msgs.iter().sum();
+        s.push_str(&format!(
+            "    {{\"np\": {}, \"eq_limit\": {}, \"n_levels\": {}, \
+             \"active_ranks\": {}, \"level_msgs\": {}, \"level_bytes\": {}, \
+             \"total_msgs\": {}, \"redist_msgs\": {}, \"redist_bytes\": {}, \
+             \"alpha_secs\": {:.6e}}}{}\n",
+            h.np,
+            h.eq_limit.unwrap_or(0),
+            h.n_levels,
+            fmt_list(&h.active_ranks.iter().map(|&x| x as u64).collect::<Vec<_>>()),
+            fmt_list(&h.level_msgs),
+            fmt_list(&h.level_bytes),
+            total_msgs,
+            h.redist_msgs,
+            h.redist_bytes,
+            h.alpha_secs,
+            if k + 1 < hier.len() { "," } else { "" }
+        ));
+    }
     s.push_str("  ]\n}\n");
     std::fs::write(path, s)
+}
+
+/// One parsed bench record: raw `key -> value-text` pairs (values keep
+/// their JSON spelling; arrays stay bracketed).
+pub type BenchCell = Vec<(String, String)>;
+
+/// Scan our own bench JSON for depth-2 objects (the cells of every
+/// section) without a JSON dependency.  Tolerant of unknown keys, so a
+/// newer artifact can still be compared against an older one.
+pub fn parse_bench_cells(text: &str) -> Vec<BenchCell> {
+    let mut out = Vec::new();
+    let mut depth = 0i32;
+    let mut start = None;
+    let bytes = text.as_bytes();
+    for (i, &b) in bytes.iter().enumerate() {
+        match b {
+            b'{' => {
+                depth += 1;
+                if depth == 2 {
+                    start = Some(i);
+                }
+            }
+            b'}' => {
+                if depth == 2 {
+                    if let Some(s) = start.take() {
+                        out.push(parse_cell_fields(&text[s + 1..i]));
+                    }
+                }
+                depth -= 1;
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Split `"key": value` pairs at the top bracket level of one object body.
+fn parse_cell_fields(body: &str) -> BenchCell {
+    let mut fields = Vec::new();
+    let mut level = 0i32;
+    let mut item_start = 0usize;
+    let bytes = body.as_bytes();
+    let push_item = |s: &str, fields: &mut BenchCell| {
+        if let Some((k, v)) = s.split_once(':') {
+            let key = k.trim().trim_matches('"').to_string();
+            fields.push((key, v.trim().to_string()));
+        }
+    };
+    for (i, &b) in bytes.iter().enumerate() {
+        match b {
+            b'[' => level += 1,
+            b']' => level -= 1,
+            b',' if level == 0 => {
+                push_item(&body[item_start..i], &mut fields);
+                item_start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    push_item(&body[item_start..], &mut fields);
+    fields
+}
+
+fn cell_field<'a>(cell: &'a BenchCell, key: &str) -> Option<&'a str> {
+    cell.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+}
+
+/// Identity of a cell: its non-numeric/discriminator keys.
+fn cell_key(cell: &BenchCell) -> String {
+    let algo = cell_field(cell, "algo").unwrap_or("-");
+    let np = cell_field(cell, "np").unwrap_or("-");
+    let eq = cell_field(cell, "eq_limit").unwrap_or("-");
+    format!("algo={algo} np={np} eq={eq}")
+}
+
+/// Metrics the regression gate watches, with per-metric absolute floors
+/// (modeled times at smoke scale sit in the microsecond range where
+/// scheduler noise dominates; counters and bytes are deterministic).
+const DIFF_METRICS: [(&str, f64); 9] = [
+    ("time_sym_modeled", 1e-3),
+    ("time_num_modeled", 1e-3),
+    ("peak_product_bytes", 0.0),
+    ("sym_msgs", 0.0),
+    ("sym_bytes", 0.0),
+    ("num_msgs", 0.0),
+    ("num_bytes", 0.0),
+    // hierarchy cells: deterministic totals of the per-level builds
+    ("total_msgs", 0.0),
+    ("redist_msgs", 0.0),
+];
+
+/// Compare two bench artifacts; returns the list of regressions — any
+/// watched metric that grew by more than `tol` (relative) above its
+/// absolute floor in a cell present in both files.  Cells only in one
+/// file are ignored (the artifact schema may grow across PRs).
+pub fn diff_bench(old: &str, new: &str, tol: f64) -> Vec<String> {
+    let old_cells = parse_bench_cells(old);
+    let new_cells = parse_bench_cells(new);
+    let mut regressions = Vec::new();
+    for nc in &new_cells {
+        let key = cell_key(nc);
+        let Some(oc) = old_cells.iter().find(|c| cell_key(c) == key) else {
+            continue;
+        };
+        for (metric, floor) in DIFF_METRICS {
+            let (Some(ov), Some(nv)) = (cell_field(oc, metric), cell_field(nc, metric)) else {
+                continue;
+            };
+            let (Ok(ov), Ok(nv)) = (ov.parse::<f64>(), nv.parse::<f64>()) else {
+                continue;
+            };
+            if nv > ov * (1.0 + tol) && nv - ov > floor {
+                regressions.push(format!(
+                    "{key}: {metric} regressed {ov:.6e} -> {nv:.6e} (+{:.1}%)",
+                    100.0 * (nv - ov) / ov.max(f64::MIN_POSITIVE)
+                ));
+            }
+        }
+    }
+    regressions
 }
 
 /// Write a table to results/<name>.tsv (and echo the path).
@@ -171,10 +322,9 @@ pub fn write_results(table: &Table, name: &str) {
 mod tests {
     use super::*;
 
-    #[test]
-    fn bench_json_round_trips_fields() {
+    fn sample_rows() -> Vec<ModelProblemResult> {
         use crate::ptap::Algo;
-        let rows = vec![ModelProblemResult {
+        vec![ModelProblemResult {
             np: 4,
             algo: Algo::AllAtOnce,
             mem_product: 123,
@@ -188,14 +338,79 @@ mod tests {
             sym_bytes: 100,
             num_msgs: 4,
             num_bytes: 200,
-        }];
+        }]
+    }
+
+    fn sample_hier() -> Vec<HierarchyBenchResult> {
+        vec![HierarchyBenchResult {
+            np: 4,
+            eq_limit: Some(64),
+            n_levels: 3,
+            active_ranks: vec![4, 2, 1],
+            level_msgs: vec![40, 6],
+            level_bytes: vec![4000, 300],
+            redist_msgs: 9,
+            redist_bytes: 800,
+            alpha_secs: 9.2e-5,
+        }]
+    }
+
+    #[test]
+    fn bench_json_round_trips_fields() {
         let path = std::env::temp_dir().join("gptap_bench_smoke_test.json");
-        write_bench_json(&rows, &path).unwrap();
+        write_bench_json(&sample_rows(), &sample_hier(), &path).unwrap();
         let s = std::fs::read_to_string(&path).unwrap();
         assert!(s.contains("\"algo\": \"allatonce\""), "{s}");
         assert!(s.contains("\"peak_product_bytes\": 123"), "{s}");
         assert!(s.contains("\"num_msgs\": 4"), "{s}");
+        assert!(s.contains("\"active_ranks\": [4, 2, 1]"), "{s}");
+        assert!(s.contains("\"total_msgs\": 46"), "{s}");
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn parse_bench_cells_reads_own_format() {
+        let path = std::env::temp_dir().join("gptap_bench_parse_test.json");
+        write_bench_json(&sample_rows(), &sample_hier(), &path).unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let cells = parse_bench_cells(&s);
+        assert_eq!(cells.len(), 2, "one model cell + one hierarchy cell");
+        assert_eq!(cell_field(&cells[0], "algo"), Some("\"allatonce\""));
+        assert_eq!(cell_field(&cells[0], "num_msgs"), Some("4"));
+        assert_eq!(cell_field(&cells[1], "eq_limit"), Some("64"));
+        assert_eq!(cell_field(&cells[1], "level_msgs"), Some("[40, 6]"));
+        assert_eq!(cell_field(&cells[1], "total_msgs"), Some("46"));
+    }
+
+    #[test]
+    fn diff_bench_flags_only_regressions_past_tolerance() {
+        let mk = |msgs: u64, time: f64| {
+            let mut rows = sample_rows();
+            rows[0].num_msgs = msgs;
+            rows[0].time_num = time;
+            let path = std::env::temp_dir()
+                .join(format!("gptap_bench_diff_{msgs}_{}.json", (time * 1e6) as u64));
+            write_bench_json(&rows, &sample_hier(), &path).unwrap();
+            let s = std::fs::read_to_string(&path).unwrap();
+            let _ = std::fs::remove_file(&path);
+            s
+        };
+        let base = mk(100, 0.25);
+        // within tolerance: no findings
+        assert!(diff_bench(&base, &mk(105, 0.25), 0.10).is_empty());
+        // >10% message growth: flagged
+        let regs = diff_bench(&base, &mk(120, 0.25), 0.10);
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].contains("num_msgs"), "{regs:?}");
+        // time regression above floor: flagged
+        let regs = diff_bench(&base, &mk(100, 0.30), 0.10);
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].contains("time_num_modeled"), "{regs:?}");
+        // improvements never flag
+        assert!(diff_bench(&mk(120, 0.30), &base, 0.10).is_empty());
+        // a cell missing from the old file is skipped, not flagged
+        assert!(diff_bench("{\n  \"cells\": [\n  ]\n}\n", &base, 0.10).is_empty());
     }
 
     #[test]

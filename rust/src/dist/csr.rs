@@ -89,6 +89,18 @@ impl DistCsr {
         (if gmin == u64::MAX { 0 } else { gmin }, gmax, avg)
     }
 
+    /// Index within row `i`'s offd entries where the global column ids
+    /// pass this rank's diag range — the single definition of the split
+    /// every ascending-global-column fold uses (offd below the diag
+    /// range, then diag, then offd above; see [`DistCsr::row_global`]).
+    /// `garray` ascends with the compacted ids, so this is a binary
+    /// search.
+    #[inline]
+    pub fn offd_split(&self, i: usize) -> usize {
+        let cbeg = self.col_begin() as u64;
+        self.offd.row_cols(i).partition_point(|&c| self.garray[c as usize] < cbeg)
+    }
+
     /// Row `i` with *global* column ids, sorted ascending, appended into
     /// the provided buffers (cleared first).
     pub fn row_global(&self, i: usize, cols: &mut Vec<u64>, vals: &mut Vec<f64>) {
@@ -97,9 +109,7 @@ impl DistCsr {
         let cbeg = self.col_begin() as u64;
         let (oc, ov) = self.offd.row(i);
         let (dc, dv) = self.diag.row(i);
-        // offd garray values are ascending with the compacted ids, so the
-        // sorted merge is: offd below the diag range, diag, offd above.
-        let split = oc.partition_point(|&c| self.garray[c as usize] < cbeg);
+        let split = self.offd_split(i);
         for k in 0..split {
             cols.push(self.garray[oc[k] as usize]);
             vals.push(ov[k]);
@@ -111,6 +121,29 @@ impl DistCsr {
         for k in split..oc.len() {
             cols.push(self.garray[oc[k] as usize]);
             vals.push(ov[k]);
+        }
+    }
+
+    /// Overwrite row `i`'s values from `vals`, given in [`DistCsr::row_global`]
+    /// order (ascending global column) — the redistribution refresh's
+    /// wire order.  The pattern must be unchanged.
+    pub fn set_row_global_vals(&mut self, i: usize, vals: &[f64]) {
+        let or = self.offd.rowptr[i] as usize..self.offd.rowptr[i + 1] as usize;
+        let dr = self.diag.rowptr[i] as usize..self.diag.rowptr[i + 1] as usize;
+        debug_assert_eq!(vals.len(), or.len() + dr.len(), "pattern drift in value refresh");
+        let split = self.offd_split(i);
+        let mut k = 0usize;
+        for j in 0..split {
+            self.offd.vals[or.start + j] = vals[k];
+            k += 1;
+        }
+        for j in dr {
+            self.diag.vals[j] = vals[k];
+            k += 1;
+        }
+        for j in split..or.len() {
+            self.offd.vals[or.start + j] = vals[k];
+            k += 1;
         }
     }
 

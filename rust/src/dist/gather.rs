@@ -7,11 +7,26 @@
 //! numeric refresh (Alg. 4 line 3) reuses the same plan.
 
 use crate::util::bytebuf::{ByteReader, ByteWriter};
+use crate::util::timer::thread_cpu_time;
 
 use super::bcsr::DistBcsr;
 use super::csr::DistCsr;
 use super::layout::Layout;
-use super::world::{tag, Comm};
+use super::world::{pipeline_chunk_rows, tag, Comm};
+
+/// Measured traffic and overlap window of one pipelined gather refresh
+/// ([`RowGatherPlan::update_values_csr`]): the serve payloads are posted
+/// in `GPTAP_PIPELINE_CHUNK`-row chunks as they serialize, so the early
+/// chunks are in flight while the later rows are still being packed.
+/// `overlap` is the busy seconds between the first posted chunk and the
+/// epoch close — creditable against the α-β model exactly like the
+/// triple products' scatter windows.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct GatherWindow {
+    pub msgs: u64,
+    pub bytes: u64,
+    pub overlap: f64,
+}
 
 /// Plan traffic rides the nonblocking engine on its own tag: one bulk
 /// epoch per gather.  Delivery order (source rank, then send order) is
@@ -244,22 +259,59 @@ impl RowGatherPlan {
 
     /// Collective: refresh `pr`'s values from the current values of `p`
     /// without touching the pattern (Alg. 4 line 3 — the numeric-phase
-    /// sparse communication).
-    pub fn update_values_csr(&self, comm: &Comm, p: &DistCsr, pr: &mut PrMat) {
+    /// sparse communication).  Pipelined: each destination's payload is
+    /// posted in `GPTAP_PIPELINE_CHUNK`-row chunks the moment a chunk is
+    /// serialized, so serving overlaps the flight of earlier chunks;
+    /// chunk boundaries never split a row and the engine's canonical
+    /// release order makes the reassembled values byte-identical to the
+    /// bulk path.
+    pub fn update_values_csr(&self, comm: &Comm, p: &DistCsr, pr: &mut PrMat) -> GatherWindow {
+        let chunk_rows = pipeline_chunk_rows();
+        let mut win = GatherWindow::default();
+        let mut first_post: Option<f64> = None;
         let mut cbuf: Vec<u64> = Vec::new();
         let mut vbuf: Vec<f64> = Vec::new();
-        let mut sends = Vec::with_capacity(self.map.serve.len());
         for (dest, rows) in &self.map.serve {
             let mut w = ByteWriter::new();
+            let mut staged = 0usize;
+            let post =
+                |w: &mut ByteWriter, win: &mut GatherWindow, first: &mut Option<f64>| {
+                    let payload = std::mem::take(w).into_bytes();
+                    win.msgs += 1;
+                    win.bytes += payload.len() as u64;
+                    if first.is_none() {
+                        *first = Some(thread_cpu_time());
+                    }
+                    comm.isend(*dest, tag::GATHER, payload);
+                };
             for &li in rows {
                 p.row_global(li as usize, &mut cbuf, &mut vbuf);
                 w.f64_slice(&vbuf);
+                staged += 1;
+                if staged == chunk_rows {
+                    post(&mut w, &mut win, &mut first_post);
+                    staged = 0;
+                }
             }
-            sends.push((*dest, w.into_bytes()));
+            if staged > 0 {
+                post(&mut w, &mut win, &mut first_post);
+            }
         }
-        let recvd = sendrecv(comm, sends);
+        let recvd = comm.drain(tag::GATHER);
+        if let Some(t0) = first_post {
+            win.overlap = thread_cpu_time() - t0;
+        }
+        // Reassemble: concatenate a source's chunks (canonical order =
+        // send order) back into its one-bulk-payload equivalent.
+        let mut merged: Vec<(usize, Vec<u8>)> = Vec::new();
+        for (src, payload) in recvd {
+            match merged.last_mut() {
+                Some((s, buf)) if *s == src => buf.extend_from_slice(&payload),
+                _ => merged.push((src, payload)),
+            }
+        }
         debug_assert_eq!(pr.nrows(), self.map.n_needed);
-        for ((_, range), payload) in self.map.zip_runs(&recvd) {
+        for ((_, range), payload) in self.map.zip_runs(&merged) {
             let mut r = ByteReader::new(payload);
             for t in range.clone() {
                 for k in pr.rowptr[t] as usize..pr.rowptr[t + 1] as usize {
@@ -268,6 +320,7 @@ impl RowGatherPlan {
             }
             debug_assert!(r.done(), "pattern drift between symbolic and numeric");
         }
+        win
     }
 
     /// Collective: gather the planned block rows of `p`.

@@ -25,8 +25,11 @@ mod world;
 
 pub use bcsr::{DistBcsr, DistBcsrBuilder};
 pub use csr::{DistCsr, DistCsrBuilder};
-pub use gather::{PrBlocks, PrMat, RowGatherPlan, VecGatherPlan};
+pub use gather::{GatherWindow, PrBlocks, PrMat, RowGatherPlan, VecGatherPlan};
 pub use layout::Layout;
 pub use transpose::transpose_dist;
 pub use vec::{DistSpmv, DistVec};
-pub use world::{tag, Comm, CommStats, World, COMM_ALPHA_SECS, COMM_BETA_SECS_PER_BYTE};
+pub use world::{
+    pipeline_chunk_rows, tag, Comm, CommStats, World, COMM_ALPHA_SECS, COMM_BETA_SECS_PER_BYTE,
+    DEFAULT_PIPELINE_CHUNK,
+};

@@ -83,12 +83,19 @@ impl DistVec {
 #[derive(Debug)]
 pub struct DistSpmv {
     halo: VecGatherPlan,
+    /// Per-local-row offd split ([`DistCsr::offd_split`]) — pattern-static,
+    /// precomputed so the global-column-order fold costs no search per
+    /// application.
+    splits: Vec<u32>,
 }
 
 impl DistSpmv {
     /// Collective: build the halo plan for `a`'s off-diagonal columns.
     pub fn new(comm: &Comm, a: &DistCsr) -> DistSpmv {
-        DistSpmv { halo: VecGatherPlan::build(comm, &a.col_layout, &a.garray) }
+        DistSpmv {
+            halo: VecGatherPlan::build(comm, &a.col_layout, &a.garray),
+            splits: (0..a.local_nrows()).map(|i| a.offd_split(i) as u32).collect(),
+        }
     }
 
     /// Fetch the halo entries of `x` named by `a.garray` (collective).
@@ -96,27 +103,37 @@ impl DistSpmv {
         self.halo.gather(comm, &x.vals)
     }
 
-    /// `y = A x` (collective).
+    /// `y = A x` (collective).  Each row folds in ascending *global*
+    /// column order (offd below the diag range, diag, offd above —
+    /// `garray` ascends with the compacted ids), so the accumulation
+    /// bits are independent of how the rows are partitioned: a
+    /// telescoped level and the full-communicator level produce
+    /// bit-identical products.
     pub fn apply(&self, comm: &Comm, a: &DistCsr, x: &DistVec, y: &mut DistVec) {
         debug_assert_eq!(x.vals.len(), a.diag.ncols);
         debug_assert_eq!(y.vals.len(), a.local_nrows());
         let halo = self.halo.gather(comm, &x.vals);
+        debug_assert_eq!(self.splits.len(), a.local_nrows());
         for i in 0..a.local_nrows() {
             let mut acc = 0.0;
             let (dc, dv) = a.diag.row(i);
+            let (oc, ov) = a.offd.row(i);
+            let split = self.splits[i] as usize;
+            for k in 0..split {
+                acc += ov[k] * halo[oc[k] as usize];
+            }
             for (&c, &v) in dc.iter().zip(dv) {
                 acc += v * x.vals[c as usize];
             }
-            let (oc, ov) = a.offd.row(i);
-            for (&c, &v) in oc.iter().zip(ov) {
-                acc += v * halo[c as usize];
+            for k in split..oc.len() {
+                acc += ov[k] * halo[oc[k] as usize];
             }
             y.vals[i] = acc;
         }
     }
 
     pub fn bytes(&self) -> u64 {
-        self.halo.bytes()
+        self.halo.bytes() + (self.splits.len() * 4) as u64
     }
 }
 

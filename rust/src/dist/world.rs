@@ -1,6 +1,7 @@
 //! Simulated MPI: a thread-per-rank world with a nonblocking,
 //! tag-addressed communication engine underneath deterministic
-//! collectives.
+//! collectives — plus sub-communicators ([`Comm::split`]) that scope
+//! ranks, tags, epochs and traffic accounting to a subset of the world.
 //!
 //! [`World::run`] spawns one OS thread per rank and hands each a [`Comm`].
 //! Communication runs over a full mesh of FIFO channels — one per ordered
@@ -31,9 +32,34 @@
 //! shim, and repeated runs of a world reproduce byte-identical messages.
 //! Reductions combine in rank order, so every rank computes bit-identical
 //! global values.
+//!
+//! ## Sub-communicators
+//!
+//! [`Comm::split`] is the `MPI_Comm_split` analog: a collective that
+//! partitions the calling communicator by `color` and returns each rank
+//! its color group as a new [`Comm`].  The child shares the parent's
+//! channel mesh but
+//!
+//! - **scopes ranks**: `rank()`/`size()` are relative to the group, and
+//!   every collective/engine call addresses group members only;
+//! - **scopes epochs**: `drain` posts close sentinels to members only, so
+//!   ranks outside the group never enter (or hold up) the close barrier;
+//! - **scopes tags**: every user tag is offset by the child's `tag_base`
+//!   on the wire, so concurrent epochs on the same logical tag in
+//!   different communicators cannot cross.  Bases are allocated from a
+//!   per-endpoint monotonic counter, agreed across the parent's members
+//!   at each split (max over members, then everyone bumps past it):
+//!   any two communicators sharing *any* rank — including the rank's
+//!   self-loopback channel — were both allocated through that rank's
+//!   counter and therefore got distinct bases.  Communicators sharing
+//!   no rank may reuse a base, but they share no channel either;
+//! - **scopes stats**: [`Comm::stats`] counts only traffic sent through
+//!   this communicator (shared by its clones); [`Comm::stats_global`]
+//!   keeps the rank-wide total across all communicators.
 
 use std::cell::{Cell, RefCell};
 use std::collections::{HashMap, VecDeque};
+use std::rc::Rc;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 
 /// α (per-message latency) of the α-β communication model, seconds.
@@ -56,6 +82,27 @@ pub mod tag {
     pub const PTAP_SYM: u32 = 2;
     /// Triple-product numeric-phase scatter (`ptap`).
     pub const PTAP_NUM: u32 = 3;
+    /// Layout redistribution traffic (`agglomerate`).
+    pub const REDIST: u32 = 4;
+}
+
+/// Tag-space stride between communicators: user tags must stay below
+/// this; each [`Comm::split`] child gets its own `tag_base` multiple.
+const TAG_STRIDE: u32 = 256;
+
+/// Default staged rows per pipelined chunk; `GPTAP_PIPELINE_CHUNK`
+/// overrides (any positive integer — 1 posts every row immediately, a
+/// huge value degenerates to end-staging).
+pub const DEFAULT_PIPELINE_CHUNK: usize = 64;
+
+/// Rows per pipelined chunk.  Read per pipeline (not cached) so tests can
+/// sweep chunk sizes within one process.
+pub fn pipeline_chunk_rows() -> usize {
+    std::env::var("GPTAP_PIPELINE_CHUNK")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&c| c > 0)
+        .unwrap_or(DEFAULT_PIPELINE_CHUNK)
 }
 
 const FRAME_COLL: u8 = 0;
@@ -76,6 +123,11 @@ impl CommStats {
     pub fn modeled_secs(&self) -> f64 {
         self.msgs as f64 * COMM_ALPHA_SECS + self.bytes as f64 * COMM_BETA_SECS_PER_BYTE
     }
+
+    /// Traffic since `earlier` (same counters, monotone).
+    pub fn since(&self, earlier: CommStats) -> CommStats {
+        CommStats { msgs: self.msgs - earlier.msgs, bytes: self.bytes - earlier.bytes }
+    }
 }
 
 /// One buffered engine frame: a payload, or the epoch-close sentinel.
@@ -89,46 +141,36 @@ enum EngineFrame {
 struct SourceInbox {
     /// Collective frames, in arrival (= send) order.
     coll: VecDeque<Vec<u8>>,
-    /// Engine frames per tag, in arrival order; `Close` entries delimit
-    /// epochs.
+    /// Engine frames per wire tag, in arrival order; `Close` entries
+    /// delimit epochs.
     tags: HashMap<u32, VecDeque<EngineFrame>>,
 }
 
-/// One rank's endpoint of the simulated communicator.
-pub struct Comm {
-    rank: usize,
-    np: usize,
-    /// `tx[d]` sends one frame to rank `d` (index `rank` loops back).
+/// One rank's physical end of the channel mesh, shared by every
+/// communicator ([`Comm`]) this rank holds.
+struct Endpoint {
+    world_rank: usize,
+    world_np: usize,
+    /// `tx[d]` sends one frame to world rank `d` (index `world_rank`
+    /// loops back).
     tx: Vec<Sender<Vec<u8>>>,
-    /// `rx[s]` receives frames sent by rank `s`.
+    /// `rx[s]` receives frames sent by world rank `s`.
     rx: Vec<Receiver<Vec<u8>>>,
-    sent_msgs: Cell<u64>,
-    sent_bytes: Cell<u64>,
-    /// Early arrivals, demultiplexed per source.
+    /// Rank-wide send-side totals across all communicators.
+    total_msgs: Cell<u64>,
+    total_bytes: Cell<u64>,
+    /// Next free wire-tag base for communicators created through this
+    /// rank (monotonic; every split involving this rank bumps it).
+    next_tag_base: Cell<u32>,
+    /// Early arrivals, demultiplexed per world source.
     inbox: RefCell<Vec<SourceInbox>>,
-    /// Per-tag release cursor: the next source rank whose current-epoch
-    /// payloads have not been fully released yet (absent = 0).
+    /// Per-wire-tag release cursor: the next *member index* (within the
+    /// communicator owning that tag) whose current-epoch payloads have
+    /// not been fully released yet (absent = 0).
     cursor: RefCell<HashMap<u32, usize>>,
 }
 
-impl Comm {
-    /// This rank's id, `0..size()`.
-    pub fn rank(&self) -> usize {
-        self.rank
-    }
-
-    /// Number of ranks in the world.
-    pub fn size(&self) -> usize {
-        self.np
-    }
-
-    /// Cumulative send-side traffic of this rank (payload bytes; engine
-    /// framing and close sentinels are protocol overhead and uncounted,
-    /// exactly as the one-frame-per-pair barrier was).
-    pub fn stats(&self) -> CommStats {
-        CommStats { msgs: self.sent_msgs.get(), bytes: self.sent_bytes.get() }
-    }
-
+impl Endpoint {
     /// Route an arrived frame into the per-source inbox.
     fn deliver(&self, src: usize, frame: Vec<u8>) {
         let mut inbox = self.inbox.borrow_mut();
@@ -147,7 +189,8 @@ impl Comm {
         }
     }
 
-    /// Next collective frame from `src`, demuxing engine frames aside.
+    /// Next collective frame from world rank `src`, demuxing engine
+    /// frames aside.
     fn recv_collective(&self, src: usize) -> Vec<u8> {
         loop {
             let buffered = self.inbox.borrow_mut()[src].coll.pop_front();
@@ -158,54 +201,196 @@ impl Comm {
             self.deliver(src, frame);
         }
     }
+}
 
-    /// One collective round: every rank sends exactly one frame to every
-    /// rank (self included) and receives one frame from every rank.
+/// Membership of one communicator: the world ranks it spans, this rank's
+/// index among them, the wire-tag offset, and the scoped traffic stats
+/// (shared by clones of the same communicator).
+struct Group {
+    /// World ranks of the members, strictly ascending.
+    members: Vec<usize>,
+    /// This rank's index within `members` — its rank in this communicator.
+    my: usize,
+    /// Added to every user tag on the wire (epoch scoping).
+    tag_base: u32,
+    /// Send-side traffic through this communicator.
+    msgs: Cell<u64>,
+    bytes: Cell<u64>,
+}
+
+/// One rank's endpoint of a (sub-)communicator.  Cheap to clone: clones
+/// share the channel mesh and the communicator's scoped stats.
+#[derive(Clone)]
+pub struct Comm {
+    ep: Rc<Endpoint>,
+    group: Rc<Group>,
+}
+
+impl Comm {
+    /// Build the world communicator for one rank (called on its thread).
+    fn root(
+        world_rank: usize,
+        world_np: usize,
+        tx: Vec<Sender<Vec<u8>>>,
+        rx: Vec<Receiver<Vec<u8>>>,
+    ) -> Comm {
+        Comm {
+            ep: Rc::new(Endpoint {
+                world_rank,
+                world_np,
+                tx,
+                rx,
+                total_msgs: Cell::new(0),
+                total_bytes: Cell::new(0),
+                next_tag_base: Cell::new(TAG_STRIDE),
+                inbox: RefCell::new((0..world_np).map(|_| SourceInbox::default()).collect()),
+                cursor: RefCell::new(HashMap::new()),
+            }),
+            group: Rc::new(Group {
+                members: (0..world_np).collect(),
+                my: world_rank,
+                tag_base: 0,
+                msgs: Cell::new(0),
+                bytes: Cell::new(0),
+            }),
+        }
+    }
+
+    /// This rank's id within this communicator, `0..size()`.
+    pub fn rank(&self) -> usize {
+        self.group.my
+    }
+
+    /// Number of ranks in this communicator.
+    pub fn size(&self) -> usize {
+        self.group.members.len()
+    }
+
+    /// World rank behind member index `r` of this communicator.
+    pub fn world_rank_of(&self, r: usize) -> usize {
+        self.group.members[r]
+    }
+
+    /// Cumulative send-side traffic through *this* communicator (payload
+    /// bytes; engine framing and close sentinels are protocol overhead
+    /// and uncounted, exactly as the one-frame-per-pair barrier was).
+    /// Scoped: a sub-communicator counts only its own epochs and
+    /// collectives — see [`Comm::stats_global`] for the rank-wide total.
+    pub fn stats(&self) -> CommStats {
+        CommStats { msgs: self.group.msgs.get(), bytes: self.group.bytes.get() }
+    }
+
+    /// Rank-wide send-side totals across every communicator this rank
+    /// holds (world + all sub-communicators).
+    pub fn stats_global(&self) -> CommStats {
+        CommStats { msgs: self.ep.total_msgs.get(), bytes: self.ep.total_bytes.get() }
+    }
+
+    fn count_send(&self, msgs: u64, bytes: u64) {
+        self.group.msgs.set(self.group.msgs.get() + msgs);
+        self.group.bytes.set(self.group.bytes.get() + bytes);
+        self.ep.total_msgs.set(self.ep.total_msgs.get() + msgs);
+        self.ep.total_bytes.set(self.ep.total_bytes.get() + bytes);
+    }
+
+    /// The wire tag carrying user `tag` for this communicator.
+    fn wire_tag(&self, tag: u32) -> u32 {
+        debug_assert!(tag < TAG_STRIDE, "user tag {tag} exceeds the communicator tag space");
+        self.group.tag_base + tag
+    }
+
+    /// Split this communicator by `color` (collective — the
+    /// `MPI_Comm_split` analog): members that passed the same color form
+    /// a new communicator, ordered by their rank here.  The child scopes
+    /// ranks, tags, epochs and stats to its members; ranks outside a
+    /// child never participate in its collectives or epoch close
+    /// barriers.
+    pub fn split(&self, color: usize) -> Comm {
+        let colors = self.all_u64(color as u64);
+        let members: Vec<usize> = colors
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c == color as u64)
+            .map(|(i, _)| self.group.members[i])
+            .collect();
+        let my = members
+            .binary_search(&self.ep.world_rank)
+            .expect("split: caller missing from its own color group");
+        // Agree on the children's wire-tag base: the max of the members'
+        // next free bases, which everyone then bumps past.  Allocating
+        // through each member's endpoint counter makes the base unique
+        // among all communicators sharing any rank (self-loopback
+        // channel included); sibling color groups share one base but are
+        // disjoint rank sets, so they share no channel at all.
+        let bases = self.all_u64(self.ep.next_tag_base.get() as u64);
+        let tag_base = bases.into_iter().max().unwrap() as u32;
+        self.ep.next_tag_base.set(tag_base + TAG_STRIDE);
+        Comm {
+            ep: Rc::clone(&self.ep),
+            group: Rc::new(Group {
+                members,
+                my,
+                tag_base,
+                msgs: Cell::new(0),
+                bytes: Cell::new(0),
+            }),
+        }
+    }
+
+    /// One collective round: every member sends exactly one frame to
+    /// every member (self included) and receives one frame from every
+    /// member, in member order.
     fn round(&self, frames: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
-        debug_assert_eq!(frames.len(), self.np);
+        debug_assert_eq!(frames.len(), self.size());
         for (d, frame) in frames.into_iter().enumerate() {
             let mut f = Vec::with_capacity(1 + frame.len());
             f.push(FRAME_COLL);
             f.extend_from_slice(&frame);
-            self.tx[d].send(f).expect("peer rank terminated early");
+            self.ep.tx[self.group.members[d]].send(f).expect("peer rank terminated early");
         }
-        (0..self.np).map(|s| self.recv_collective(s)).collect()
+        self.group.members.iter().map(|&s| self.ep.recv_collective(s)).collect()
     }
 
-    /// Post `payload` to `dest` under `tag` and return immediately (the
-    /// nonblocking send).  Payloads are delivered in send order per
+    /// Post `payload` to member `dest` under `tag` and return immediately
+    /// (the nonblocking send).  Payloads are delivered in send order per
     /// (source, tag) pair; `dest == rank()` loops back.
     pub fn isend(&self, dest: usize, tag: u32, payload: Vec<u8>) {
-        if dest != self.rank {
-            self.sent_msgs.set(self.sent_msgs.get() + 1);
-            self.sent_bytes.set(self.sent_bytes.get() + payload.len() as u64);
+        let wdest = self.group.members[dest];
+        if wdest != self.ep.world_rank {
+            self.count_send(1, payload.len() as u64);
         }
+        let wire = self.wire_tag(tag);
         let mut f = Vec::with_capacity(5 + payload.len());
         f.push(FRAME_DATA);
-        f.extend_from_slice(&tag.to_le_bytes());
+        f.extend_from_slice(&wire.to_le_bytes());
         f.extend_from_slice(&payload);
-        self.tx[dest].send(f).expect("peer rank terminated early");
+        self.ep.tx[wdest].send(f).expect("peer rank terminated early");
     }
 
     fn send_close(&self, dest: usize, tag: u32) {
+        let wire = self.wire_tag(tag);
         let mut f = Vec::with_capacity(5);
         f.push(FRAME_CLOSE);
-        f.extend_from_slice(&tag.to_le_bytes());
-        self.tx[dest].send(f).expect("peer rank terminated early");
+        f.extend_from_slice(&wire.to_le_bytes());
+        self.ep.tx[self.group.members[dest]].send(f).expect("peer rank terminated early");
     }
 
     /// Release loop shared by [`Comm::try_recv_any`] and [`Comm::drain`]:
-    /// walk sources in rank order from the tag's cursor, handing out data
-    /// frames until the epoch closes (every source's `Close` consumed) or
-    /// — nonblocking — until the cursor source has nothing buffered.
-    /// Returns whether the epoch fully closed (and resets the cursor).
+    /// walk member sources in rank order from the tag's cursor, handing
+    /// out data frames until the epoch closes (every member's `Close`
+    /// consumed) or — nonblocking — until the cursor source has nothing
+    /// buffered.  Returns whether the epoch fully closed (and resets the
+    /// cursor).  Released source ids are member indices.
     fn release_into(&self, tag: u32, blocking: bool, out: &mut Vec<(usize, Vec<u8>)>) -> bool {
-        let mut cur = self.cursor.borrow_mut().remove(&tag).unwrap_or(0);
-        'sources: while cur < self.np {
+        let wire = self.wire_tag(tag);
+        let np = self.size();
+        let mut cur = self.ep.cursor.borrow_mut().remove(&wire).unwrap_or(0);
+        'sources: while cur < np {
+            let wsrc = self.group.members[cur];
             loop {
-                let next = self.inbox.borrow_mut()[cur]
+                let next = self.ep.inbox.borrow_mut()[wsrc]
                     .tags
-                    .get_mut(&tag)
+                    .get_mut(&wire)
                     .and_then(|q| q.pop_front());
                 match next {
                     Some(EngineFrame::Data(p)) => {
@@ -219,21 +404,21 @@ impl Comm {
                     None => {}
                 }
                 if blocking {
-                    let frame = self.rx[cur].recv().expect("peer rank panicked");
-                    self.deliver(cur, frame);
+                    let frame = self.ep.rx[wsrc].recv().expect("peer rank panicked");
+                    self.ep.deliver(wsrc, frame);
                 } else {
-                    match self.rx[cur].try_recv() {
-                        Ok(frame) => self.deliver(cur, frame),
+                    match self.ep.rx[wsrc].try_recv() {
+                        Ok(frame) => self.ep.deliver(wsrc, frame),
                         Err(TryRecvError::Empty) => break 'sources,
                         Err(TryRecvError::Disconnected) => panic!("peer rank panicked"),
                     }
                 }
             }
         }
-        if cur >= self.np {
+        if cur >= np {
             true
         } else {
-            self.cursor.borrow_mut().insert(tag, cur);
+            self.ep.cursor.borrow_mut().insert(wire, cur);
             false
         }
     }
@@ -250,11 +435,13 @@ impl Comm {
     }
 
     /// Close this rank's epoch on `tag` (collective over the tag): post
-    /// the close sentinel to every rank, then block until every rank's
-    /// sentinel has arrived, returning all not-yet-released payloads in
-    /// canonical order.  After `drain` the tag is ready for a new epoch.
+    /// the close sentinel to every member, then block until every
+    /// member's sentinel has arrived, returning all not-yet-released
+    /// payloads in canonical order.  After `drain` the tag is ready for a
+    /// new epoch.  Ranks outside this communicator are not involved —
+    /// the close barrier spans members only.
     pub fn drain(&self, tag: u32) -> Vec<(usize, Vec<u8>)> {
-        for d in 0..self.np {
+        for d in 0..self.size() {
             self.send_close(d, tag);
         }
         let mut out = Vec::new();
@@ -288,20 +475,19 @@ impl Comm {
     }
 
     /// Allgather of raw byte payloads (collective): returns one payload
-    /// per rank, indexed by rank.
+    /// per member, indexed by member rank.
     pub fn allgather_bytes(&self, payload: Vec<u8>) -> Vec<Vec<u8>> {
-        self.sent_msgs.set(self.sent_msgs.get() + (self.np as u64 - 1));
-        self.sent_bytes
-            .set(self.sent_bytes.get() + (self.np as u64 - 1) * payload.len() as u64);
-        let frames: Vec<Vec<u8>> = (0..self.np).map(|_| payload.clone()).collect();
+        let others = self.size() as u64 - 1;
+        self.count_send(others, others * payload.len() as u64);
+        let frames: Vec<Vec<u8>> = (0..self.size()).map(|_| payload.clone()).collect();
         self.round(frames)
     }
 
     /// Allgather of one `u64` per rank (collective), indexed by rank.
     pub fn all_u64(&self, v: u64) -> Vec<u64> {
-        self.sent_msgs.set(self.sent_msgs.get() + (self.np as u64 - 1));
-        self.sent_bytes.set(self.sent_bytes.get() + (self.np as u64 - 1) * 8);
-        let frames: Vec<Vec<u8>> = (0..self.np).map(|_| v.to_le_bytes().to_vec()).collect();
+        let others = self.size() as u64 - 1;
+        self.count_send(others, others * 8);
+        let frames: Vec<Vec<u8>> = (0..self.size()).map(|_| v.to_le_bytes().to_vec()).collect();
         self.round(frames)
             .into_iter()
             .map(|f| u64::from_le_bytes(f[0..8].try_into().unwrap()))
@@ -316,9 +502,9 @@ impl Comm {
     /// Global sum of one `f64` per rank (collective).  Combines in rank
     /// order, so every rank computes the bit-identical result.
     pub fn allreduce_sum_f64(&self, v: f64) -> f64 {
-        self.sent_msgs.set(self.sent_msgs.get() + (self.np as u64 - 1));
-        self.sent_bytes.set(self.sent_bytes.get() + (self.np as u64 - 1) * 8);
-        let frames: Vec<Vec<u8>> = (0..self.np).map(|_| v.to_le_bytes().to_vec()).collect();
+        let others = self.size() as u64 - 1;
+        self.count_send(others, others * 8);
+        let frames: Vec<Vec<u8>> = (0..self.size()).map(|_| v.to_le_bytes().to_vec()).collect();
         self.round(frames)
             .into_iter()
             .map(|f| f64::from_le_bytes(f[0..8].try_into().unwrap()))
@@ -363,27 +549,28 @@ impl World {
                 rxs[d][s] = Some(rx);
             }
         }
-        let comms: Vec<Comm> = txs
+        // the Comm itself is single-threaded (Rc innards): ship the raw
+        // channel halves to each thread and build the Comm there
+        let parts: Vec<(usize, Vec<Sender<Vec<u8>>>, Vec<Receiver<Vec<u8>>>)> = txs
             .into_iter()
             .zip(rxs)
             .enumerate()
-            .map(|(rank, (tx_row, rx_col))| Comm {
-                rank,
-                np,
-                tx: tx_row.into_iter().map(|t| t.unwrap()).collect(),
-                rx: rx_col.into_iter().map(|r| r.unwrap()).collect(),
-                sent_msgs: Cell::new(0),
-                sent_bytes: Cell::new(0),
-                inbox: RefCell::new((0..np).map(|_| SourceInbox::default()).collect()),
-                cursor: RefCell::new(HashMap::new()),
+            .map(|(rank, (tx_row, rx_col))| {
+                (
+                    rank,
+                    tx_row.into_iter().map(|t| t.unwrap()).collect(),
+                    rx_col.into_iter().map(|r| r.unwrap()).collect(),
+                )
             })
             .collect();
 
         let f_ref = &f;
         let joined: Vec<std::thread::Result<T>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = comms
+            let handles: Vec<_> = parts
                 .into_iter()
-                .map(|comm| scope.spawn(move || f_ref(comm)))
+                .map(|(rank, tx, rx)| {
+                    scope.spawn(move || f_ref(Comm::root(rank, np, tx, rx)))
+                })
                 .collect();
             handles.into_iter().map(|h| h.join()).collect()
         });
@@ -607,6 +794,109 @@ mod tests {
         for s in stats {
             assert_eq!(s.msgs, 1);
             assert_eq!(s.bytes, 10);
+        }
+    }
+
+    #[test]
+    fn split_scopes_ranks_and_collectives() {
+        let w = World::new(5);
+        let out = w.run(|c| {
+            // colors: {0,1,2} and {3,4}
+            let color = usize::from(c.rank() >= 3);
+            let sub = c.split(color);
+            let sum = sub.allreduce_sum_u64(c.rank() as u64);
+            (sub.rank(), sub.size(), sum)
+        });
+        assert_eq!(out[0], (0, 3, 3)); // 0+1+2
+        assert_eq!(out[1], (1, 3, 3));
+        assert_eq!(out[2], (2, 3, 3));
+        assert_eq!(out[3], (0, 2, 7)); // 3+4
+        assert_eq!(out[4], (1, 2, 7));
+    }
+
+    #[test]
+    fn split_scopes_epochs_to_members_only() {
+        // the active group runs several engine epochs while the idle
+        // ranks never touch the tag — the close barrier spans members
+        // only, so this would deadlock if idle ranks were required
+        let w = World::new(4);
+        let out = w.run(|c| {
+            let active = c.rank() < 2;
+            let sub = c.split(usize::from(!active));
+            let mut got = Vec::new();
+            if active {
+                for e in 0..3u8 {
+                    let peer = 1 - sub.rank();
+                    sub.isend(peer, tag::GATHER, vec![e, sub.rank() as u8]);
+                    got.extend(sub.drain(tag::GATHER));
+                }
+            }
+            // everyone rejoins a world collective afterwards
+            let total = c.allreduce_sum_u64(1);
+            (got, total)
+        });
+        for (me, (got, total)) in out.iter().enumerate() {
+            assert_eq!(*total, 4);
+            if me < 2 {
+                let peer = 1 - me;
+                let want: Vec<(usize, Vec<u8>)> =
+                    (0..3u8).map(|e| (peer, vec![e, peer as u8])).collect();
+                assert_eq!(got, &want);
+            } else {
+                assert!(got.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn split_tags_do_not_cross_communicators() {
+        // parent and child post on the same user tag concurrently; the
+        // tag_base offset keeps the epochs apart
+        let w = World::new(2);
+        let out = w.run(|c| {
+            let sub = c.split(0); // same members, new tag scope
+            c.isend(1 - c.rank(), tag::GATHER, vec![1]);
+            sub.isend(1 - sub.rank(), tag::GATHER, vec![2]);
+            let parent = c.drain(tag::GATHER);
+            let child = sub.drain(tag::GATHER);
+            (parent, child)
+        });
+        for (me, (parent, child)) in out.iter().enumerate() {
+            assert_eq!(parent, &vec![(1 - me, vec![1])]);
+            assert_eq!(child, &vec![(1 - me, vec![2])]);
+        }
+    }
+
+    #[test]
+    fn split_stats_are_scoped_and_totals_global() {
+        let w = World::new(4);
+        let out = w.run(|c| {
+            let sub = c.split(usize::from(c.rank() >= 2));
+            let pre = c.stats().msgs;
+            let _ = sub.exchange(vec![(1 - sub.rank(), vec![0; 16])]);
+            (c.stats().msgs - pre, sub.stats(), c.stats_global())
+        });
+        for (parent_delta, sub_stats, global) in out {
+            assert_eq!(parent_delta, 0, "subcomm traffic must not count in the parent scope");
+            assert_eq!(sub_stats.msgs, 1);
+            assert_eq!(sub_stats.bytes, 16);
+            assert!(global.msgs >= sub_stats.msgs, "global totals include subcomm traffic");
+        }
+    }
+
+    #[test]
+    fn nested_split_scopes_compose() {
+        let w = World::new(4);
+        let out = w.run(|c| {
+            let half = c.split(usize::from(c.rank() >= 2)); // {0,1} {2,3}
+            let solo = half.split(half.rank()); // singletons
+            let r = solo.exchange(vec![(0, vec![c.rank() as u8])]);
+            (half.size(), solo.size(), r)
+        });
+        for (me, (hs, ss, r)) in out.iter().enumerate() {
+            assert_eq!(*hs, 2);
+            assert_eq!(*ss, 1);
+            assert_eq!(r, &vec![(0, vec![me as u8])]);
         }
     }
 }

@@ -23,6 +23,7 @@
 // P̃r, scratch, C, stats, tracker) — more readable than a bundled context.
 #![allow(clippy::too_many_arguments)]
 
+pub mod agglomerate;
 pub mod coordinator;
 pub mod dist;
 pub mod gen;

@@ -11,8 +11,9 @@
 //! ```
 
 use galerkin_ptap::coordinator::{
-    level_tables, model_problem_tables, neutron_tables, run_model_problem, run_neutron,
-    write_bench_json, write_results, ModelProblemConfig, NeutronConfigExp,
+    diff_bench, level_tables, model_problem_tables, neutron_tables, run_hierarchy_bench,
+    run_model_problem, run_neutron, write_bench_json, write_results, ModelProblemConfig,
+    NeutronConfigExp,
 };
 use galerkin_ptap::dist::{DistSpmv, DistVec, World};
 use galerkin_ptap::gen::{
@@ -60,6 +61,10 @@ impl Args {
         self.kv.get(key).map(|v| v.parse().expect(key)).unwrap_or(default)
     }
 
+    fn opt_usize(&self, key: &str) -> Option<usize> {
+        self.kv.get(key).map(|v| v.parse().expect(key))
+    }
+
     fn usize_list_or(&self, key: &str, default: &[usize]) -> Vec<usize> {
         match self.kv.get(key) {
             Some(v) => v.split(',').map(|x| x.trim().parse().expect(key)).collect(),
@@ -87,6 +92,7 @@ fn main() {
     match args.sub.as_str() {
         "model-problem" => cmd_model_problem(&args),
         "bench-smoke" => cmd_bench_smoke(&args),
+        "bench-diff" => cmd_bench_diff(&args),
         "neutron" => cmd_neutron(&args),
         "levels" => cmd_levels(&args),
         "solve" => cmd_solve(&args),
@@ -108,12 +114,14 @@ fn print_help() {
          SUBCOMMANDS\n\
            model-problem  --coarse N --np a,b,c --repeats R --algos LIST   (Tables 1-4, Figs 1-4)\n\
            bench-smoke    --coarse N --np P --repeats R --out F.json       (CI perf artifact)\n\
-           neutron        --grid N --groups G --np a,b,c [--cache]         (Tables 7-8, Figs 7-10)\n\
+           bench-diff     --old F.json --new F.json [--tol 0.10]           (CI perf gate)\n\
+           neutron        --grid N --groups G --np a,b,c [--cache] [--eq-limit N]  (Tables 7-8)\n\
            levels         --grid N --groups G                              (Tables 5-6)\n\
-           solve          --coarse N --levels L --algo NAME --np P         (end-to-end MG-CG)\n\
+           solve          --coarse N --levels L --algo NAME --np P [--eq-limit N]  (MG-CG)\n\
            selfcheck                                                       (PJRT kernels vs native)\n\
            external       --matrix F.mtx --np P [--algos LIST]            (PtAP on a MatrixMarket file)\n\n\
-         ALGOS: allatonce | merged | two-step | all"
+         ALGOS: allatonce | merged | two-step | all\n\
+         --eq-limit telescopes coarse levels onto ceil(rows/eq_limit) ranks (PCTelescope analog)"
     );
 }
 
@@ -151,14 +159,15 @@ fn cmd_model_problem(args: &Args) {
 }
 
 /// CI's benchmark smoke: the model-problem experiment at one rank count,
-/// all three algorithms, dumped as a machine-diffable JSON artifact so
-/// the perf trajectory (modeled times, overlap windows, peak bytes,
-/// message counts) is recorded on every push.
+/// all three algorithms, plus a hierarchy-agglomeration cell pair
+/// (eq_limit off/on), dumped as a machine-diffable JSON artifact so the
+/// perf trajectory (modeled times, overlap windows, peak bytes, message
+/// counts, per-level α evidence) is recorded on every push.
 fn cmd_bench_smoke(args: &Args) {
     let coarse = Grid3::cube(args.usize_or("coarse", 8));
     let np = args.usize_or("np", 4);
     let repeats = args.usize_or("repeats", 3);
-    let out = args.kv.get("out").cloned().unwrap_or_else(|| "BENCH_pr2.json".to_string());
+    let out = args.kv.get("out").cloned().unwrap_or_else(|| "BENCH_pr3.json".to_string());
     println!(
         "bench smoke: coarse {}³ (fine {}³), np={np}, repeats={repeats}",
         coarse.nx,
@@ -182,12 +191,56 @@ fn cmd_bench_smoke(args: &Args) {
         );
         rows.push(r);
     }
-    match write_bench_json(&rows, std::path::Path::new(&out)) {
+    // hierarchy cells: a 3-level geometric chain with agglomeration off
+    // and on, recording per-level messages and the modeled α term
+    let eq = args.usize_or("eq-limit", 64);
+    let mut hier = Vec::new();
+    for eq_limit in [None, Some(eq)] {
+        let h = run_hierarchy_bench(
+            Grid3::cube(args.usize_or("hier-coarse", 3)),
+            args.usize_or("hier-levels", 3),
+            np,
+            Algo::AllAtOnce,
+            eq_limit,
+        );
+        println!(
+            "  hierarchy eq_limit={:<4} active {:?} level_msgs {:?} alpha {:.2e}s",
+            eq_limit.map_or("off".to_string(), |e| e.to_string()),
+            h.active_ranks,
+            h.level_msgs,
+            h.alpha_secs
+        );
+        hier.push(h);
+    }
+    match write_bench_json(&rows, &hier, std::path::Path::new(&out)) {
         Ok(()) => println!("wrote {out}"),
         Err(e) => {
             eprintln!("FAIL: could not write {out}: {e}");
             std::process::exit(1);
         }
+    }
+}
+
+/// CI's perf gate: compare a fresh bench artifact against the previous
+/// one and fail on any watched metric regressing by more than `--tol`
+/// (default 10%).
+fn cmd_bench_diff(args: &Args) {
+    let old = args.kv.get("old").expect("--old FILE.json required").clone();
+    let new = args.kv.get("new").expect("--new FILE.json required").clone();
+    let tol: f64 = args.kv.get("tol").map(|v| v.parse().expect("tol")).unwrap_or(0.10);
+    let old_s = std::fs::read_to_string(&old)
+        .unwrap_or_else(|e| panic!("cannot read {old}: {e}"));
+    let new_s = std::fs::read_to_string(&new)
+        .unwrap_or_else(|e| panic!("cannot read {new}: {e}"));
+    let regressions = diff_bench(&old_s, &new_s, tol);
+    if regressions.is_empty() {
+        println!("bench diff OK: {new} within {:.0}% of {old}", tol * 100.0);
+    } else {
+        eprintln!("FAIL: {} perf regression(s) vs {old}:", regressions.len());
+        for r in &regressions {
+            eprintln!("  {r}");
+        }
+        std::process::exit(1);
     }
 }
 
@@ -215,6 +268,7 @@ fn cmd_neutron(args: &Args) {
                 cache,
                 max_levels: args.usize_or("max-levels", 12),
                 solve_iters: args.usize_or("solve-iters", 30),
+                eq_limit: args.opt_usize("eq-limit"),
             });
             println!("  np={np} {}: {} levels", algo.name(), r.n_levels);
             rows.push(r);
@@ -236,6 +290,7 @@ fn cmd_levels(args: &Args) {
         cache: false,
         max_levels: args.usize_or("max-levels", 12),
         solve_iters: 5,
+        eq_limit: None,
     });
     let (t5, t6) = level_tables(&r);
     println!("Table 5 analog — operator matrices per level:\n{}", t5.render());
@@ -248,6 +303,7 @@ fn cmd_solve(args: &Args) {
     let coarse = Grid3::cube(args.usize_or("coarse", 16));
     let levels = args.usize_or("levels", 3);
     let np = args.usize_or("np", 4);
+    let eq_limit = args.opt_usize("eq-limit");
     let algo = args
         .kv
         .get("algo")
@@ -255,12 +311,16 @@ fn cmd_solve(args: &Args) {
         .unwrap_or(Algo::AllAtOnce);
     let grids = geometric_chain(coarse, levels);
     println!(
-        "MG-CG solve: fine {}³ = {} unknowns, {} levels, {} ranks, {}",
+        "MG-CG solve: fine {}³ = {} unknowns, {} levels, {} ranks, {}{}",
         grids[0].nx,
         grids[0].len(),
         levels,
         np,
-        algo.name()
+        algo.name(),
+        match eq_limit {
+            Some(eq) => format!(", eq_limit {eq}"),
+            None => String::new(),
+        }
     );
     let world = World::new(np);
     let grids2 = grids.clone();
@@ -272,9 +332,10 @@ fn cmd_solve(args: &Args) {
             &comm,
             a0.clone(),
             &Coarsening::Geometric { grids: grids2.clone() },
-            HierarchyConfig { algo, cache: false, numeric_repeats: 1 },
+            HierarchyConfig { algo, cache: false, numeric_repeats: 1, eq_limit },
             &tracker,
         );
+        let active = h.active_ranks.clone();
         let spmv = DistSpmv::new(&comm, &a0);
         let mut pc = MgPreconditioner::new(&comm, h, MgOpts::default());
         let layout = a0.row_layout.clone();
@@ -282,15 +343,16 @@ fn cmd_solve(args: &Args) {
         let mut x = DistVec::zeros(layout, comm.rank());
         let t = std::time::Instant::now();
         let res = pcg(&comm, &a0, &spmv, &b, &mut x, Some(&mut pc), 1e-8, 100);
-        (res, t.elapsed().as_secs_f64(), tracker.peak_total())
+        (res, t.elapsed().as_secs_f64(), tracker.peak_total(), active)
     });
-    let (res, secs, peak) = &results[0];
+    let (res, secs, peak, active) = &results[0];
     println!(
-        "converged={} iters={} wall={:.2}s peak_mem/rank={:.1} MB",
+        "converged={} iters={} wall={:.2}s peak_mem/rank={:.1} MB active_ranks/level={:?}",
         res.converged,
         res.iterations,
         secs,
-        *peak as f64 / 1048576.0
+        *peak as f64 / 1048576.0,
+        active
     );
     for (k, r) in res.residuals.iter().enumerate() {
         println!("  iter {k:>3}  ||r|| = {r:.3e}");

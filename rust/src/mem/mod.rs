@@ -106,6 +106,20 @@ impl MemTracker {
         self.alloc(to, bytes);
     }
 
+    /// Track an incrementally-grown (or evicted) structure: charge or
+    /// free the delta between its previously-reported size and its
+    /// current one.  Feeding every growth step through this keeps the
+    /// category peak equal to the true *running maximum* — the point of
+    /// stage eviction, where rows are freed mid-phase and a bulk
+    /// end-of-phase charge would overstate the peak.
+    pub fn update(&self, cat: Cat, old_bytes: u64, new_bytes: u64) {
+        if new_bytes >= old_bytes {
+            self.alloc(cat, new_bytes - old_bytes);
+        } else {
+            self.free(cat, old_bytes - new_bytes);
+        }
+    }
+
     pub fn current(&self, cat: Cat) -> u64 {
         self.inner.borrow().cur[cat.idx()]
     }

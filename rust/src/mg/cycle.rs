@@ -1,6 +1,21 @@
 //! V-cycle preconditioner over a built hierarchy: Jacobi smoothing,
 //! matrix-free transfers, redundant dense solve on the coarsest level.
+//!
+//! Telescoped hierarchies: every level context remembers the
+//! communicator its operators live on.  At a telescope boundary the
+//! restricted right-hand side is scattered into the sub-communicator
+//! ([`crate::agglomerate::RedistPlan::scatter_vec`]), the coarse
+//! correction (smoothing, deeper levels, the direct solve) runs on the
+//! active ranks alone — idle ranks skip straight to the gather — and the
+//! correction is scattered back out before prolongation.  The crossing
+//! moves bytes but reorders no arithmetic, so a telescoped V-cycle whose
+//! coarse work is partition-invariant (sorted-merge SpMV, fixed-ω
+//! smoothing, the gathered direct solve) reproduces the full-communicator
+//! cycle bit for bit.
 
+use std::rc::Rc;
+
+use crate::agglomerate::Telescope;
 use crate::dist::{Comm, DistSpmv, DistVec};
 use crate::mat::block_invert;
 use crate::util::bytebuf::{ByteReader, ByteWriter};
@@ -79,6 +94,12 @@ impl Relax {
 }
 
 struct LevelCtx {
+    /// The communicator this level's operators live on (the world until
+    /// the first telescope boundary, then the active sub-communicator).
+    comm: Comm,
+    /// The boundary below this level, if one exists (shared with the
+    /// hierarchy; Rc so the recursive cycle can hold it cheaply).
+    telescope: Option<Rc<Telescope>>,
     spmv: DistSpmv,
     smoother: Relax,
     transfer: Option<Transfer>,
@@ -100,51 +121,76 @@ pub struct MgPreconditioner {
 
 impl MgPreconditioner {
     /// Collective setup: smoothers, transfer plans, coarse factorization.
+    /// Each level's context is built on the communicator the level lives
+    /// on; an idle rank's contexts end at its telescope boundary.
     pub fn new(comm: &Comm, hierarchy: Hierarchy, opts: MgOpts) -> Self {
-        let mut levels = Vec::new();
-        for lvl in &hierarchy.levels {
-            let spmv = DistSpmv::new(comm, &lvl.a);
-            let omega = match opts.omega {
-                Some(w) => w,
-                None => chebyshev_bounds(comm, &lvl.a, &spmv, 10).1,
-            };
-            let smoother = match opts.smoother {
-                SmootherKind::Jacobi => Relax::Jacobi(JacobiSmoother::new(&lvl.a, omega)),
-                SmootherKind::Chebyshev(deg) => {
-                    Relax::Chebyshev(ChebyshevSmoother::new(comm, &lvl.a, &spmv, deg))
+        let mut levels: Vec<LevelCtx> = Vec::new();
+        let mut cur = comm.clone();
+        let nlev = hierarchy.levels.len();
+        for (li, lvl) in hierarchy.levels.iter().enumerate() {
+            let spmv = DistSpmv::new(&cur, &lvl.a);
+            // the true coarsest level under the direct-solve threshold
+            // never smooths: skip its power iteration (no coarse-level
+            // epochs wasted on an unused ω)
+            let direct =
+                li + 1 == nlev && lvl.p.is_none() && lvl.a.global_nrows() <= opts.max_direct;
+            let smoother = if direct {
+                Relax::Jacobi(JacobiSmoother::new(&lvl.a, 1.0))
+            } else {
+                let omega = match opts.omega {
+                    Some(w) => w,
+                    None => chebyshev_bounds(&cur, &lvl.a, &spmv, 10).1,
+                };
+                match opts.smoother {
+                    SmootherKind::Jacobi => Relax::Jacobi(JacobiSmoother::new(&lvl.a, omega)),
+                    SmootherKind::Chebyshev(deg) => {
+                        Relax::Chebyshev(ChebyshevSmoother::new(&cur, &lvl.a, &spmv, deg))
+                    }
+                    SmootherKind::HybridSor => Relax::Sor(HybridSorSmoother::new(&lvl.a, 1.0)),
                 }
-                SmootherKind::HybridSor => {
-                    Relax::Sor(HybridSorSmoother::new(&lvl.a, 1.0))
-                }
             };
-            let transfer = lvl.p.as_ref().map(|p| Transfer::new(comm, p));
+            let transfer = lvl.p.as_ref().map(|p| Transfer::new(&cur, p));
             let layout = lvl.a.row_layout.clone();
             levels.push(LevelCtx {
+                comm: cur.clone(),
+                telescope: lvl.telescope.clone(),
                 spmv,
                 smoother,
                 transfer,
-                r: DistVec::zeros(layout.clone(), comm.rank()),
-                e: DistVec::zeros(layout.clone(), comm.rank()),
-                work: DistVec::zeros(layout, comm.rank()),
+                r: DistVec::zeros(layout.clone(), cur.rank()),
+                e: DistVec::zeros(layout.clone(), cur.rank()),
+                work: DistVec::zeros(layout, cur.rank()),
             });
-        }
-        // coarsest: redundant dense inverse
-        let coarsest = &hierarchy.levels.last().unwrap().a;
-        let n = coarsest.global_nrows();
-        let coarse_inv = if n <= opts.max_direct {
-            let g = coarsest.gather_global(comm);
-            let mut dense = vec![0.0; n * n];
-            for i in 0..n {
-                let (cols, vals) = g.row(i);
-                for (&c, &v) in cols.iter().zip(vals) {
-                    dense[i * n + c as usize] = v;
+            if let Some(tel) = &lvl.telescope {
+                match &tel.subcomm {
+                    Some(sc) => cur = sc.clone(),
+                    // idle rank: the boundary level is its last
+                    None => break,
                 }
             }
-            Some(block_invert(n, &dense).expect("coarsest operator is singular"))
-        } else {
-            None
-        };
-        MgPreconditioner { hierarchy, levels, coarse_inv, coarse_n: n, opts }
+        }
+        // coarsest: redundant dense inverse, built only on ranks holding
+        // the true coarsest level (idle ranks' lists end at a boundary)
+        let last = hierarchy.levels.last().unwrap();
+        let (mut coarse_inv, mut coarse_n) = (None, 0);
+        if last.p.is_none() {
+            let ccomm = &levels.last().unwrap().comm;
+            let n = last.a.global_nrows();
+            coarse_n = n;
+            if n <= opts.max_direct {
+                let g = last.a.gather_global(ccomm);
+                let mut dense = vec![0.0; n * n];
+                for i in 0..n {
+                    let (cols, vals) = g.row(i);
+                    for (&c, &v) in cols.iter().zip(vals) {
+                        dense[i * n + c as usize] = v;
+                    }
+                }
+                coarse_inv =
+                    Some(block_invert(n, &dense).expect("coarsest operator is singular"));
+            }
+        }
+        MgPreconditioner { hierarchy, levels, coarse_inv, coarse_n, opts }
     }
 
     /// Total bytes of solver state beyond the matrices (work vectors,
@@ -158,16 +204,21 @@ impl MgPreconditioner {
         per_level + self.coarse_inv.as_ref().map_or(0, |m| (m.len() * 8) as u64)
     }
 
-    /// Apply one V-cycle: `x = M⁻¹ b` with zero initial guess (collective).
+    /// Apply one V-cycle: `x = M⁻¹ b` with zero initial guess (collective
+    /// over the finest level's communicator — each deeper level uses the
+    /// communicator recorded at setup, so telescoped levels involve
+    /// active ranks only).
     pub fn apply(&mut self, comm: &Comm, b: &DistVec, x: &mut DistVec) {
+        debug_assert_eq!(comm.size(), self.levels[0].comm.size());
         x.fill(0.0);
-        self.cycle(comm, 0, b, x);
+        self.cycle(0, b, x);
     }
 
-    fn cycle(&mut self, comm: &Comm, k: usize, b: &DistVec, x: &mut DistVec) {
+    fn cycle(&mut self, k: usize, b: &DistVec, x: &mut DistVec) {
+        let comm = self.levels[k].comm.clone();
+        let comm = &comm;
         let nlev = self.levels.len();
-        let is_coarsest = k + 1 == nlev;
-        if is_coarsest {
+        if k + 1 == nlev && self.hierarchy.levels[k].p.is_none() {
             self.coarse_solve(comm, k, b, x);
             return;
         }
@@ -188,33 +239,47 @@ impl MgPreconditioner {
                 lvl.r.vals[i] -= lvl.work.vals[i];
             }
         }
-        // restrict to coarse rhs
-        let mut bc = DistVec::zeros(self.hierarchy.levels[k + 1].a.row_layout.clone(), comm.rank());
+        // restrict to coarse rhs (in this level's coarse layout)
+        let p_col_layout = self.hierarchy.levels[k].p.as_ref().unwrap().col_layout.clone();
+        let mut bc = DistVec::zeros(p_col_layout, comm.rank());
         {
             let p = self.hierarchy.levels[k].p.as_ref().unwrap();
             let lvl = &self.levels[k];
             lvl.transfer.as_ref().unwrap().restrict(comm, p, &lvl.r, &mut bc);
         }
-        // coarse correction (W-cycle: recurse twice, re-restricting the
+        // coarse correction — across the telescope boundary when one sits
+        // below this level (W-cycle: recurse twice, re-restricting the
         // updated residual before the second visit)
-        let mut ec = DistVec::zeros(bc.layout.clone(), comm.rank());
-        self.cycle(comm, k + 1, &bc, &mut ec);
-        if self.opts.cycle == CycleType::W && k + 2 < nlev {
-            // rc2 = bc - A_c ec ; ec += cycle(rc2)
-            let ac = &self.hierarchy.levels[k + 1].a;
-            let mut rc2 = DistVec::zeros(bc.layout.clone(), comm.rank());
-            {
-                let lvl = &mut self.levels[k + 1];
-                lvl.spmv.apply(comm, ac, &ec, &mut lvl.work);
-                rc2.vals.clone_from(&bc.vals);
-                for i in 0..rc2.vals.len() {
-                    rc2.vals[i] -= lvl.work.vals[i];
+        // W-cycle revisit gate: "level k+1 is not the coarsest".  Decided
+        // from the level itself, NOT the rank-local level count — at a
+        // telescope boundary, idle ranks' lists end early while they must
+        // still join the second visit's redistribution epochs.
+        let w_revisit = self.opts.cycle == CycleType::W
+            && self.hierarchy.levels.get(k + 1).is_some_and(|l| l.p.is_some());
+        let ec = if let Some(tel) = self.levels[k].telescope.clone() {
+            // scatter the rhs into the subcomm; idle ranks skip straight
+            // to the gather below
+            let bc_sub = tel.coarse.scatter_vec(comm, &bc);
+            let ec_sub = match (&tel.subcomm, bc_sub) {
+                (Some(_), Some(bc_sub)) => {
+                    let mut ec_sub = DistVec::zeros(bc_sub.layout.clone(), bc_sub.rank);
+                    self.cycle(k + 1, &bc_sub, &mut ec_sub);
+                    if w_revisit {
+                        self.w_revisit(k, &bc_sub, &mut ec_sub);
+                    }
+                    Some(ec_sub)
                 }
+                _ => None,
+            };
+            tel.coarse.gather_vec(comm, ec_sub.as_ref())
+        } else {
+            let mut ec = DistVec::zeros(bc.layout.clone(), comm.rank());
+            self.cycle(k + 1, &bc, &mut ec);
+            if w_revisit {
+                self.w_revisit(k, &bc, &mut ec);
             }
-            let mut ec2 = DistVec::zeros(bc.layout.clone(), comm.rank());
-            self.cycle(comm, k + 1, &rc2, &mut ec2);
-            ec.axpy(1.0, &ec2);
-        }
+            ec
+        };
         // prolongate and correct
         {
             let p = self.hierarchy.levels[k].p.as_ref().unwrap();
@@ -231,6 +296,26 @@ impl MgPreconditioner {
             let (sm, spmv) = (&lvl.smoother, &lvl.spmv);
             sm.sweep(comm, a, spmv, b, x, &mut lvl.work);
         }
+    }
+
+    /// W-cycle second coarse visit at level `k + 1`:
+    /// `rc2 = bc - A_c ec; ec += cycle(rc2)` — `bc`/`ec` live in level
+    /// `k + 1`'s layout (inside the subcomm when level `k` telescopes).
+    fn w_revisit(&mut self, k: usize, bc: &DistVec, ec: &mut DistVec) {
+        let comm = self.levels[k + 1].comm.clone();
+        let ac = &self.hierarchy.levels[k + 1].a;
+        let mut rc2 = DistVec::zeros(bc.layout.clone(), bc.rank);
+        {
+            let lvl = &mut self.levels[k + 1];
+            lvl.spmv.apply(&comm, ac, ec, &mut lvl.work);
+            rc2.vals.clone_from(&bc.vals);
+            for i in 0..rc2.vals.len() {
+                rc2.vals[i] -= lvl.work.vals[i];
+            }
+        }
+        let mut ec2 = DistVec::zeros(bc.layout.clone(), bc.rank);
+        self.cycle(k + 1, &rc2, &mut ec2);
+        ec.axpy(1.0, &ec2);
     }
 
     fn coarse_solve(&mut self, comm: &Comm, k: usize, b: &DistVec, x: &mut DistVec) {

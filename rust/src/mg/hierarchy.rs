@@ -2,8 +2,20 @@
 //! triple-product algorithm — the paper's actual use case ("eleven
 //! interpolations and twelve operator matrices", Table 5/6), including the
 //! cached-vs-freed intermediate-data protocols of Tables 7/8.
+//!
+//! Coarse-level rank agglomeration: with [`HierarchyConfig::eq_limit`]
+//! set, a level whose global rows fall under `eq_limit × active_ranks` is
+//! telescoped — its `A` and `P` are redistributed onto
+//! `⌈rows / eq_limit⌉` active ranks via [`crate::agglomerate`], the
+//! triple product runs entirely inside the sub-communicator, and every
+//! coarser level lives there too (telescoping again if it shrinks
+//! enough).  Idle ranks' hierarchies end at the boundary level; they
+//! rejoin only at the boundary's vector scatter/gather during cycling.
 
-use crate::dist::{Comm, DistCsr};
+use std::rc::Rc;
+
+use crate::agglomerate::{choose_active_ranks, telescope_operators, Telescope};
+use crate::dist::{Comm, CommStats, DistCsr};
 use crate::gen::{trilinear_interp, Grid3};
 use crate::mem::{Cat, MemTracker};
 use crate::ptap::{Algo, Ptap, PtapStats};
@@ -30,11 +42,16 @@ pub struct HierarchyConfig {
     pub cache: bool,
     /// Numeric products per level (the paper re-runs numeric 1–11 times).
     pub numeric_repeats: usize,
+    /// Rows-per-rank agglomeration knob (PETSc
+    /// `-pc_gamg_process_eq_limit` analog): a level with fewer than
+    /// `eq_limit × active_ranks` global rows telescopes onto
+    /// `⌈rows / eq_limit⌉` ranks.  `None` disables agglomeration.
+    pub eq_limit: Option<usize>,
 }
 
 impl Default for HierarchyConfig {
     fn default() -> Self {
-        HierarchyConfig { algo: Algo::AllAtOnce, cache: false, numeric_repeats: 1 }
+        HierarchyConfig { algo: Algo::AllAtOnce, cache: false, numeric_repeats: 1, eq_limit: None }
     }
 }
 
@@ -57,13 +74,22 @@ pub struct InterpStats {
     pub cols_max: u64,
 }
 
-/// One level: its operator and the interpolation to the next coarser one.
+/// One level: its operator, the interpolation to the next coarser one,
+/// and — when the next level was agglomerated — the telescope boundary
+/// sitting below it.
 pub struct Level {
     pub a: DistCsr,
     pub p: Option<DistCsr>,
+    /// `Some` when the next-coarser level lives on a sub-communicator
+    /// (shared with the preconditioner's level contexts).
+    pub telescope: Option<Rc<Telescope>>,
 }
 
 /// The built hierarchy plus everything the experiments report.
+///
+/// With agglomeration on, the fields are *rank-local*: an idle rank's
+/// `levels` (and per-level stats) end at its last telescope boundary.
+/// Rank 0 is always in the active prefix, so it sees the full hierarchy.
 pub struct Hierarchy {
     pub levels: Vec<Level>,
     pub op_stats: Vec<LevelStats>,
@@ -72,6 +98,16 @@ pub struct Hierarchy {
     pub ptap_stats: PtapStats,
     /// Retained triple-product contexts when `cache` is on.
     pub cached_ops: Vec<Ptap>,
+    /// Ranks holding each level (world size until the first boundary,
+    /// then the active counts).
+    pub active_ranks: Vec<usize>,
+    /// This rank's traffic during each coarse level's triple product and
+    /// stats collectives (index l = the build of level l+1's operator) —
+    /// the per-level α/β evidence the bench artifact diffs.
+    pub level_comm: Vec<CommStats>,
+    /// This rank's traffic spent redistributing operators across
+    /// telescope boundaries (split + scatter epochs).
+    pub redist_comm: CommStats,
 }
 
 impl Hierarchy {
@@ -111,6 +147,12 @@ fn interp_stats(comm: &Comm, p: &DistCsr) -> InterpStats {
 
 /// Build the hierarchy (collective).  `a0` is the finest operator; its
 /// storage is charged to the tracker as `MatA` by the caller.
+///
+/// With [`HierarchyConfig::eq_limit`] set, small levels telescope onto a
+/// rank prefix before their triple product: the current communicator is
+/// split, `A`/`P` are redistributed, the PtAP (and all coarser work)
+/// runs inside the sub-communicator, and idle ranks return immediately
+/// with a hierarchy that ends at the boundary level.
 pub fn build_hierarchy(
     comm: &Comm,
     a0: DistCsr,
@@ -118,9 +160,13 @@ pub fn build_hierarchy(
     cfg: HierarchyConfig,
     tracker: &MemTracker,
 ) -> Hierarchy {
+    let mut cur = comm.clone();
     let mut levels: Vec<Level> = Vec::new();
-    let mut op_stats_v = vec![op_stats(comm, &a0)];
+    let mut op_stats_v = vec![op_stats(&cur, &a0)];
     let mut interp_stats_v = Vec::new();
+    let mut active_ranks = vec![cur.size()];
+    let mut level_comm: Vec<CommStats> = Vec::new();
+    let mut redist_comm = CommStats::default();
     let mut total = PtapStats::default();
     let mut cached_ops = Vec::new();
 
@@ -134,41 +180,92 @@ pub fn build_hierarchy(
                     None
                 } else {
                     debug_assert_eq!(grids[k + 1].refine(), grids[k], "grid chain broken");
-                    Some(trilinear_interp(grids[k + 1], comm.rank(), comm.size()))
+                    Some(trilinear_interp(grids[k + 1], cur.rank(), cur.size()))
                 }
             }
             Coarsening::Aggregation { opts, min_rows, max_levels } => {
-                let global_rows = comm.allreduce_sum_u64(a.local_nrows() as u64);
+                let global_rows = cur.allreduce_sum_u64(a.local_nrows() as u64);
                 if global_rows <= *min_rows as u64 || k + 1 >= *max_levels {
                     None
                 } else {
-                    Some(aggregate_interp(comm, &a, *opts))
+                    Some(aggregate_interp(&cur, &a, *opts))
                 }
             }
         };
         let Some(p) = p else {
-            levels.push(Level { a, p: None });
+            levels.push(Level { a, p: None, telescope: None });
             break;
         };
         tracker.alloc(Cat::MatP, p.bytes());
-        interp_stats_v.push(interp_stats(comm, &p));
+        interp_stats_v.push(interp_stats(&cur, &p));
 
-        // the paper's protocol: one symbolic + `numeric_repeats` numerics
-        let mut op = Ptap::symbolic(cfg.algo, comm, &a, &p, tracker);
-        for _ in 0..cfg.numeric_repeats {
-            op.numeric(comm, &a, &p);
-        }
-        let c = op.extract_c();
-        tracker.alloc(Cat::MatC, c.bytes());
-        total = sum_stats(total, op.stats);
-        if cfg.cache {
-            cached_ops.push(op);
+        // agglomeration decision: this level's global rows vs the knob
+        let n_rows = op_stats_v[k].rows as usize;
+        let tel_k = cfg
+            .eq_limit
+            .map(|eq| choose_active_ranks(n_rows, cur.size(), eq))
+            .filter(|&kact| kact < cur.size());
+
+        if let Some(kact) = tel_k {
+            // telescope A and P onto the active prefix; the triple
+            // product (and everything coarser) runs inside the subcomm
+            let before = cur.stats_global();
+            let (tel, ops) = telescope_operators(&cur, &a, &p, kact);
+            let delta = cur.stats_global().since(before);
+            redist_comm.msgs += delta.msgs;
+            redist_comm.bytes += delta.bytes;
+            let telescoped_bytes = ops.as_ref().map_or(0, |(at, pt)| at.bytes() + pt.bytes());
+            tracker.alloc(Cat::Comm, tel.bytes() + telescoped_bytes);
+            let subcomm = tel.subcomm.clone();
+            levels.push(Level { a, p: Some(p), telescope: Some(Rc::new(tel)) });
+            active_ranks.push(kact);
+            let (Some(sc), Some((a_t, p_t))) = (subcomm, ops) else {
+                // idle rank: its hierarchy ends at the boundary level
+                break;
+            };
+            let before = sc.stats_global();
+            let mut op = Ptap::symbolic(cfg.algo, &sc, &a_t, &p_t, tracker);
+            for _ in 0..cfg.numeric_repeats {
+                op.numeric(&sc, &a_t, &p_t);
+            }
+            let c = op.extract_c();
+            tracker.alloc(Cat::MatC, c.bytes());
+            total = sum_stats(total, op.stats);
+            if cfg.cache {
+                cached_ops.push(op);
+            } else {
+                drop(op);
+            }
+            // the telescoped copies served the build; release them
+            // (value refreshes would reuse RedistPlan::refresh_csr)
+            tracker.free(Cat::Comm, telescoped_bytes);
+            drop((a_t, p_t));
+            op_stats_v.push(op_stats(&sc, &c));
+            level_comm.push(sc.stats_global().since(before));
+            cur = sc;
+            a = c;
         } else {
-            drop(op);
+            // the paper's protocol: one symbolic + `numeric_repeats`
+            // numerics on the current communicator
+            let before = cur.stats_global();
+            let mut op = Ptap::symbolic(cfg.algo, &cur, &a, &p, tracker);
+            for _ in 0..cfg.numeric_repeats {
+                op.numeric(&cur, &a, &p);
+            }
+            let c = op.extract_c();
+            tracker.alloc(Cat::MatC, c.bytes());
+            total = sum_stats(total, op.stats);
+            if cfg.cache {
+                cached_ops.push(op);
+            } else {
+                drop(op);
+            }
+            op_stats_v.push(op_stats(&cur, &c));
+            level_comm.push(cur.stats_global().since(before));
+            active_ranks.push(cur.size());
+            levels.push(Level { a, p: Some(p), telescope: None });
+            a = c;
         }
-        op_stats_v.push(op_stats(comm, &c));
-        levels.push(Level { a, p: Some(p) });
-        a = c;
         k += 1;
     }
 
@@ -178,6 +275,9 @@ pub fn build_hierarchy(
         interp_stats: interp_stats_v,
         ptap_stats: total,
         cached_ops,
+        active_ranks,
+        level_comm,
+        redist_comm,
     }
 }
 

@@ -2,6 +2,16 @@
 //! hybrid (processor-block) SOR — the standard multigrid relaxation menu
 //! (PETSc's sor/chebyshev/jacobi).  A power-iteration eigenvalue
 //! estimator picks damping and Chebyshev bounds automatically.
+//!
+//! Partition invariance (what telescoped levels rely on): Jacobi and
+//! Chebyshev sweeps are elementwise over a [`DistSpmv`] product that
+//! folds each row in global column order, so with a *fixed* ω/bounds a
+//! sweep's bits do not depend on how the rows are distributed — a level
+//! smoothed on a sub-communicator reproduces the full-communicator
+//! sweep exactly.  Two caveats: [`chebyshev_bounds`] reduces partial
+//! sums in rank order (auto-tuned ω is partition-*dependent*), and
+//! [`HybridSorSmoother`] is local-block Gauss-Seidel by construction —
+//! its sweep changes with the partition on purpose.
 
 use crate::dist::vec::DistSpmv;
 use crate::dist::{Comm, DistCsr, DistVec};

@@ -2,6 +2,15 @@
 //! prolongation `x_f += P x_c` (halo-gather of coarse values) and
 //! restriction `r_c = Pᵀ r_f` (scatter + owner sends, the same
 //! communication shape as the all-at-once product's remote loop).
+//!
+//! Partition invariance: prolongation folds each fine row in global
+//! column order (like [`crate::dist::DistSpmv`]), so its bits do not
+//! depend on the partition.  Restriction is a scatter — each coarse slot
+//! accumulates local contributions (fine-row order) then remote ones
+//! (source-rank order), so its rounding *is* partition-dependent; a
+//! telescoped level whose restriction runs on the subcomm reproduces the
+//! full-communicator bits only when the products are exact (e.g. the
+//! model problem's power-of-two weights against exact values).
 
 use crate::dist::{Comm, DistCsr, DistVec, VecGatherPlan};
 use crate::util::bytebuf::{ByteReader, ByteWriter};
@@ -13,6 +22,9 @@ pub struct Transfer {
     halo: VecGatherPlan,
     /// Owner of each P.garray entry (restriction sends).
     garray_owner: Vec<usize>,
+    /// Per-fine-row offd split ([`DistCsr::offd_split`]), precomputed for
+    /// prolongation's global-column-order fold.
+    splits: Vec<u32>,
 }
 
 impl Transfer {
@@ -21,21 +33,28 @@ impl Transfer {
         let halo = VecGatherPlan::build(comm, &p.col_layout, &p.garray);
         let garray_owner =
             p.garray.iter().map(|&g| p.col_layout.owner(g as usize)).collect();
-        Transfer { halo, garray_owner }
+        let splits = (0..p.local_nrows()).map(|i| p.offd_split(i) as u32).collect();
+        Transfer { halo, garray_owner, splits }
     }
 
-    /// `x_f += P x_c` (collective).
+    /// `x_f += P x_c` (collective).  Folds each row in ascending global
+    /// column order, so the bits are partition-invariant.
     pub fn prolong_add(&self, comm: &Comm, p: &DistCsr, xc: &DistVec, xf: &mut DistVec) {
         let halo = self.halo.gather(comm, &xc.vals);
+        debug_assert_eq!(self.splits.len(), p.local_nrows());
         for i in 0..p.local_nrows() {
             let (dc, dv) = p.diag.row(i);
+            let (oc, ov) = p.offd.row(i);
+            let split = self.splits[i] as usize;
             let mut acc = 0.0;
+            for k in 0..split {
+                acc += ov[k] * halo[oc[k] as usize];
+            }
             for (&c, &v) in dc.iter().zip(dv) {
                 acc += v * xc.vals[c as usize];
             }
-            let (oc, ov) = p.offd.row(i);
-            for (&c, &v) in oc.iter().zip(ov) {
-                acc += v * halo[c as usize];
+            for k in split..oc.len() {
+                acc += ov[k] * halo[oc[k] as usize];
             }
             xf.vals[i] += acc;
         }

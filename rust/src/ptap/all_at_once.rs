@@ -116,11 +116,19 @@ pub fn symbolic(
     let nloc = a.local_nrows();
 
     // First loop (lines 5–13): remote contributions C_s^H += P_o(I,:) ⊗ R,
-    // posting each staged row as soon as its last touch has passed.
+    // posting each staged row as soon as its last touch has passed — and
+    // *evicting* it: the row's hash set is freed the moment the pipelined
+    // send has serialized it, so the symbolic hash peak is the running
+    // maximum of live stage rows, not the whole stage.  Growth and
+    // eviction both flow through the tracker incrementally
+    // (`MemTracker::update`), so the reported peak is that running max.
     let (finish_ptr, finish_items) = stage_finish_lists(p, nloc);
     let mut pipe = ScatterPipeline::new(comm.size(), tag::PTAP_SYM);
     let mut sorted: Vec<u64> = Vec::new();
     let mut cs = RemoteStageSym::new(p.garray.len());
+    let slot_bytes = cs.bytes();
+    tracker.alloc(Cat::Hash, slot_bytes);
+    let mut row_bytes: Vec<u64> = vec![0; p.garray.len()];
     for i_fine in 0..nloc {
         let ocols = p.offd.row_cols(i_fine);
         if !ocols.is_empty() {
@@ -135,22 +143,31 @@ pub fn symbolic(
                 for &c in &scratch.ocols {
                     set.insert(c as u32);
                 }
+                let nb = set.bytes();
+                tracker.update(Cat::Hash, row_bytes[t as usize], nb);
+                row_bytes[t as usize] = nb;
             }
         }
-        // Line 14, pipelined: ship every stage row that just completed.
+        // Line 14, pipelined: ship every stage row that just completed,
+        // freeing its set immediately after the post.
         for &t in &finish_items[finish_ptr[i_fine] as usize..finish_ptr[i_fine + 1] as usize] {
-            let Some(set) = &cs.rows[t as usize] else { continue };
-            if set.is_empty() {
-                continue;
+            let Some(set) = cs.rows[t as usize].take() else { continue };
+            if !set.is_empty() {
+                let grow = p.garray[t as usize];
+                let owner = p.col_layout.owner(grow as usize);
+                set.collect_sorted_u64(&mut sorted);
+                write_sym_row(pipe.writer(owner), grow, &sorted);
+                pipe.row_done(comm, owner);
             }
-            let grow = p.garray[t as usize];
-            let owner = p.col_layout.owner(grow as usize);
-            set.collect_sorted_u64(&mut sorted);
-            write_sym_row(pipe.writer(owner), grow, &sorted);
-            pipe.row_done(comm, owner);
+            tracker.free(Cat::Hash, row_bytes[t as usize]);
+            row_bytes[t as usize] = 0;
         }
     }
-    tracker.alloc(Cat::Hash, cs.bytes());
+    // every touched row has a last touch, so the stage is empty here —
+    // only the slot array remains to release
+    debug_assert!(row_bytes.iter().all(|&b| b == 0), "stage row escaped eviction");
+    tracker.free(Cat::Hash, slot_bytes);
+    drop(cs);
 
     // Second loop (lines 16–25): local contributions C_l^H += P_d(I,:) ⊗ R,
     // folding received remote rows between chunks (set union is
@@ -194,13 +211,10 @@ pub fn symbolic(
     stats.sym_msgs += pipe.msgs;
     stats.sym_bytes += pipe.bytes;
     stats.sym_overlap += pipe.overlap;
-    // Comm-buffer accounting in the bulk path's order: send-side bytes
-    // coexist with the stage tables, receive-side bytes only after the
-    // stage is freed.
-    tracker.alloc(Cat::Comm, pipe.bytes);
-    tracker.free(Cat::Hash, cs.bytes());
-    drop(cs);
-    tracker.alloc(Cat::Comm, recv_bytes);
+    // Comm-buffer accounting: the stage was evicted row by row during
+    // the remote loop, so only the send/receive buffers and the local
+    // tables coexist here.
+    tracker.alloc(Cat::Comm, pipe.bytes + recv_bytes);
     tracker.alloc(Cat::Hash, clh.bytes());
     tracker.free(Cat::Comm, pipe.bytes + recv_bytes);
     // Lines 29–36: counts, free tables, preallocate C.
@@ -234,11 +248,15 @@ pub fn numeric(
 
     // First loop (lines 4–12): remote contributions C_s += P_o(I,:) ⊗ R,
     // posted on stage-row completion (the symbolic phase's last-touch
-    // schedule, retained in `state`).
+    // schedule, retained in `state`) and evicted right after the post —
+    // the numeric hash peak is the running max of live stage rows.
     let mut pipe = ScatterPipeline::new(comm.size(), tag::PTAP_NUM);
     let mut kbuf: Vec<u64> = Vec::new();
     let mut vbuf: Vec<f64> = Vec::new();
     let mut csm = RemoteStageNum::new(p.garray.len());
+    let slot_bytes = csm.bytes();
+    tracker.alloc(Cat::Hash, slot_bytes);
+    let mut row_bytes: Vec<u64> = vec![0; p.garray.len()];
     for i_fine in 0..nloc {
         let (ocols, ovals) = p.offd.row(i_fine);
         if !ocols.is_empty() {
@@ -252,25 +270,31 @@ pub fn numeric(
                 for (&cc, &vv) in scratch.ocols.iter().zip(&scratch.ovals) {
                     map.add(cc, w * vv);
                 }
+                let nb = map.bytes();
+                tracker.update(Cat::Hash, row_bytes[t as usize], nb);
+                row_bytes[t as usize] = nb;
             }
         }
         // Line 13, pipelined: ship completed stage rows while the loop
-        // keeps computing.
+        // keeps computing, freeing each row's map after its post.
         let finishing = &state.finish_items
             [state.finish_ptr[i_fine] as usize..state.finish_ptr[i_fine + 1] as usize];
         for &t in finishing {
-            let Some(map) = csm.rows[t as usize].as_mut() else { continue };
-            if map.is_empty() {
-                continue;
+            let Some(mut map) = csm.rows[t as usize].take() else { continue };
+            if !map.is_empty() {
+                let grow = p.garray[t as usize];
+                let owner = p.col_layout.owner(grow as usize);
+                map.collect_sorted(&mut kbuf, &mut vbuf);
+                write_num_row(pipe.writer(owner), grow, &kbuf, &vbuf);
+                pipe.row_done(comm, owner);
             }
-            let grow = p.garray[t as usize];
-            let owner = p.col_layout.owner(grow as usize);
-            map.collect_sorted(&mut kbuf, &mut vbuf);
-            write_num_row(pipe.writer(owner), grow, &kbuf, &vbuf);
-            pipe.row_done(comm, owner);
+            tracker.free(Cat::Hash, row_bytes[t as usize]);
+            row_bytes[t as usize] = 0;
         }
     }
-    tracker.alloc(Cat::Hash, csm.bytes());
+    debug_assert!(row_bytes.iter().all(|&b| b == 0), "stage row escaped eviction");
+    tracker.free(Cat::Hash, slot_bytes);
+    drop(csm);
 
     // Second loop (lines 15–23): local contributions straight into the
     // preallocated C.  Received chunks are *released* (taken off the
@@ -294,13 +318,10 @@ pub fn numeric(
     }
     // Lines 24–25: epoch close; C_l += C_r in canonical source order.
     recvd.extend(pipe.finish(comm));
-    // Comm-buffer accounting in the bulk path's order: send-side bytes
-    // coexist with the stage, receive-side bytes only after it is freed.
+    // Comm-buffer accounting: the stage was evicted row by row during
+    // the remote loop, so only the send/receive buffers remain.
     let recv_bytes: u64 = recvd.iter().map(|(_, b)| b.len() as u64).sum();
-    tracker.alloc(Cat::Comm, pipe.bytes);
-    tracker.free(Cat::Hash, csm.bytes());
-    drop(csm);
-    tracker.alloc(Cat::Comm, recv_bytes);
+    tracker.alloc(Cat::Comm, pipe.bytes + recv_bytes);
     for (_src, payload) in &recvd {
         for_each_num_row(payload, |grow, cols, vals| {
             c.add_global_row((grow - cbeg) as usize, cols, vals);

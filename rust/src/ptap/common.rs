@@ -292,20 +292,9 @@ pub fn exchange_tracked(
     comm.exchange(sends)
 }
 
-/// Default staged rows per pipelined chunk; `GPTAP_PIPELINE_CHUNK`
-/// overrides (any positive integer — 1 posts every row immediately, a
-/// huge value degenerates to end-staging).
-pub const DEFAULT_PIPELINE_CHUNK: usize = 64;
-
-/// Rows per pipelined chunk.  Read per pipeline (not cached) so tests can
-/// sweep chunk sizes within one process.
-pub fn pipeline_chunk_rows() -> usize {
-    std::env::var("GPTAP_PIPELINE_CHUNK")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
-        .filter(|&c| c > 0)
-        .unwrap_or(DEFAULT_PIPELINE_CHUNK)
-}
+// The pipeline chunk knob lives in `dist` now (the gather plans pipeline
+// too); re-exported here for the algorithm modules.
+pub use crate::dist::{pipeline_chunk_rows, DEFAULT_PIPELINE_CHUNK};
 
 /// Pipelined scatter over the nonblocking engine: staged rows are
 /// serialized into per-destination buffers and posted (`Comm::isend`) as

@@ -19,7 +19,7 @@ fn build_geo(comm: &galerkin_ptap::dist::Comm, grids: &[Grid3], algo: Algo) -> H
         comm,
         a0,
         &Coarsening::Geometric { grids: grids.to_vec() },
-        HierarchyConfig { algo, cache: false, numeric_repeats: 1 },
+        HierarchyConfig { algo, cache: false, numeric_repeats: 1, eq_limit: None },
         &tracker,
     )
 }
@@ -132,6 +132,7 @@ fn level_stats_shape() {
         cache: false,
         max_levels: 12,
         solve_iters: 3,
+        eq_limit: None,
     });
     assert!(r.n_levels >= 3);
     assert_eq!(r.op_stats.len(), r.n_levels);
@@ -159,6 +160,7 @@ fn caching_costs_memory_not_correctness() {
             cache,
             max_levels: 8,
             solve_iters: 3,
+            eq_limit: None,
         })
     };
     let free = mk(false);
