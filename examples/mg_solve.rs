@@ -46,7 +46,13 @@ fn main() {
             &comm,
             a0.clone(),
             &Coarsening::Geometric { grids: grids_ref.clone() },
-            HierarchyConfig { algo: Algo::AllAtOnce, cache: false, numeric_repeats: 1, eq_limit: None },
+            HierarchyConfig {
+                algo: Algo::AllAtOnce,
+                cache: false,
+                numeric_repeats: 1,
+                eq_limit: None,
+                retain: false,
+            },
             &tracker,
         );
         let setup_aao = t0.elapsed().as_secs_f64();
@@ -57,7 +63,13 @@ fn main() {
             &comm,
             a0.clone(),
             &Coarsening::Geometric { grids: grids_ref.clone() },
-            HierarchyConfig { algo: Algo::TwoStep, cache: false, numeric_repeats: 1, eq_limit: None },
+            HierarchyConfig {
+                algo: Algo::TwoStep,
+                cache: false,
+                numeric_repeats: 1,
+                eq_limit: None,
+                retain: false,
+            },
             &tracker,
         );
         let c1 = h.levels.last().unwrap().a.gather_global(&comm);

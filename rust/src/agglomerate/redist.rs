@@ -196,6 +196,16 @@ impl RedistPlan {
     /// (collective over the parent communicator).  Active ranks return
     /// their slice under the new layout; idle ranks return `None`.
     pub fn scatter_vec(&self, comm: &Comm, v: &DistVec) -> Option<DistVec> {
+        let mut out =
+            (comm.rank() < self.k).then(|| DistVec::zeros(self.new.clone(), comm.rank()));
+        self.scatter_vec_into(comm, v, out.as_mut());
+        out
+    }
+
+    /// [`RedistPlan::scatter_vec`] into a caller-owned buffer — the
+    /// cycle's per-application boundary crossing without re-allocation.
+    /// Active ranks pass `Some` of a new-layout vector; idle ranks `None`.
+    pub fn scatter_vec_into(&self, comm: &Comm, v: &DistVec, out: Option<&mut DistVec>) {
         debug_assert_eq!(v.layout, self.old, "vector layout does not match the plan");
         let rank = comm.rank();
         let my_start = self.old.start(rank);
@@ -206,12 +216,12 @@ impl RedistPlan {
             sends.push((*dest, w.into_bytes()));
         }
         let recvd = comm.exchange_on(tag::REDIST, sends);
-        if rank >= self.k {
-            debug_assert!(recvd.is_empty());
-            return None;
-        }
+        let Some(out) = out else {
+            debug_assert!(rank >= self.k && recvd.is_empty(), "active rank must pass a buffer");
+            return;
+        };
+        debug_assert_eq!(out.layout, self.new, "out buffer layout does not match the plan");
         let new_start = self.new.start(rank);
-        let mut out = DistVec::zeros(self.new.clone(), rank);
         for ((src, range), (psrc, payload)) in self.recvs.iter().zip(&recvd) {
             debug_assert_eq!(src, psrc, "recv run misalignment");
             let mut r = ByteReader::new(payload);
@@ -220,7 +230,6 @@ impl RedistPlan {
             }
             debug_assert!(r.done());
         }
-        Some(out)
     }
 
     /// Gather a vector from the active ranks back into the old layout
@@ -228,6 +237,13 @@ impl RedistPlan {
     /// [`RedistPlan::scatter_vec`]).  Active ranks pass their slice;
     /// idle ranks pass `None`; every rank returns its old-layout slice.
     pub fn gather_vec(&self, comm: &Comm, v: Option<&DistVec>) -> DistVec {
+        let mut out = DistVec::zeros(self.old.clone(), comm.rank());
+        self.gather_vec_into(comm, v, &mut out);
+        out
+    }
+
+    /// [`RedistPlan::gather_vec`] into a caller-owned old-layout buffer.
+    pub fn gather_vec_into(&self, comm: &Comm, v: Option<&DistVec>, out: &mut DistVec) {
         let rank = comm.rank();
         let mut sends = Vec::with_capacity(self.recvs.len());
         if let Some(v) = v {
@@ -242,8 +258,9 @@ impl RedistPlan {
             debug_assert!(rank >= self.k, "active rank must pass its slice");
         }
         let recvd = comm.exchange_on(tag::REDIST, sends);
+        debug_assert_eq!(out.layout, self.old, "out buffer layout does not match the plan");
         let my_start = self.old.start(rank);
-        let mut out = DistVec::zeros(self.old.clone(), rank);
+        out.fill(0.0);
         debug_assert_eq!(recvd.len(), self.sends.len(), "gather runs out of step");
         for ((src, range), (psrc, payload)) in self.sends.iter().zip(&recvd) {
             debug_assert_eq!(src, psrc, "gather run misalignment");
@@ -253,7 +270,6 @@ impl RedistPlan {
             }
             debug_assert!(r.done());
         }
-        out
     }
 }
 

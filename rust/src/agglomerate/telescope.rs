@@ -15,6 +15,10 @@ pub struct Telescope {
     /// The active ranks' communicator (`None` on idle ranks, which skip
     /// everything between the boundary's scatter and gather).
     pub subcomm: Option<Comm>,
+    /// Fine-space plan: parent row layout ↔ subcomm row layout — the
+    /// schedule the operators moved through, retained so a numeric
+    /// refresh ([`RedistPlan::refresh_csr`]) can resend values alone.
+    pub fine: RedistPlan,
     /// Coarse-space plan: parent coarse layout ↔ subcomm coarse layout.
     pub coarse: RedistPlan,
     /// Number of active ranks.
@@ -22,9 +26,9 @@ pub struct Telescope {
 }
 
 impl Telescope {
-    /// Heap bytes of the retained plan (for memory accounting).
+    /// Heap bytes of the retained plans (for memory accounting).
     pub fn bytes(&self) -> u64 {
-        self.coarse.bytes()
+        self.fine.bytes() + self.coarse.bytes()
     }
 }
 
@@ -50,7 +54,7 @@ pub fn telescope_operators(
     let sub = parent.split(usize::from(!active));
     let a_t = fine.scatter_csr(parent, a, fine.new_layout().clone());
     let p_t = fine.scatter_csr(parent, p, coarse.new_layout().clone());
-    let tel = Telescope { subcomm: active.then_some(sub), coarse, active: k };
+    let tel = Telescope { subcomm: active.then_some(sub), fine, coarse, active: k };
     let ops = match (a_t, p_t) {
         (Some(a_t), Some(p_t)) => Some((a_t, p_t)),
         (None, None) => None,

@@ -5,16 +5,19 @@
 //! ranks plus the α-β model applied to that rank's message counts.  Memory
 //! is the max over ranks of the tracker's per-category peaks.
 
-use crate::dist::{DistSpmv, DistVec, World, COMM_ALPHA_SECS};
+use crate::dist::{
+    Comm, DistCsr, DistSpmv, DistVec, World, COMM_ALPHA_SECS, COMM_BETA_SECS_PER_BYTE,
+};
 use crate::gen::{
-    grid_laplacian, neutron_block_operator, Grid3, ModelProblem, NeutronConfig,
+    grid_laplacian, heat_operator, neutron_block_operator, Grid3, ModelProblem, NeutronConfig,
 };
 use crate::mem::{Cat, MemTracker};
 use crate::mg::{
-    build_hierarchy, geometric_chain, gmres, Coarsening, HierarchyConfig, InterpStats,
+    build_hierarchy, geometric_chain, gmres, pcg, Coarsening, HierarchyConfig, InterpStats,
     LevelStats, MgOpts, MgPreconditioner,
 };
 use crate::ptap::{Algo, Ptap, PtapStats};
+use crate::reuse::HierarchyRefresher;
 
 /// Model-problem experiment parameters (one (np, algo) cell of Table 1/3).
 #[derive(Debug, Clone, Copy)]
@@ -40,6 +43,10 @@ pub struct ModelProblemResult {
     /// Simulated parallel times (max busy + comm model), seconds.
     pub time_sym: f64,
     pub time_num: f64,
+    /// Whole-product time under the *calibrated* per-message α credit
+    /// (derived from the measured chunk-size distribution) — reported
+    /// next to the fixed-α `time()` so both models stay visible.
+    pub time_cal: f64,
     /// Numeric-phase overlap window (max over ranks), busy seconds — how
     /// long communication was in flight behind compute.
     pub overlap_num: f64,
@@ -67,11 +74,23 @@ pub fn run_model_problem(cfg: ModelProblemConfig) -> ModelProblemResult {
         tracker.alloc(Cat::MatA, mp.a.bytes());
         tracker.alloc(Cat::MatP, mp.p.bytes());
         tracker.reset_peaks();
+        let comm_before = comm.stats();
         let mut op = Ptap::symbolic(cfg.algo, &comm, &mp.a, &mp.p, &tracker);
         for _ in 0..cfg.numeric_repeats {
             op.numeric(&comm, &mp.a, &mp.p);
         }
         let stats = op.stats;
+        // the calibrated model reads the engine's measured chunk-size
+        // distribution over the whole product (both phases); it honors
+        // the same GPTAP_COMM_MODEL=off switch as the fixed-α times
+        let comm_delta = comm.stats().since(comm_before);
+        let time_cal = if crate::ptap::comm_model_enabled() {
+            let cal_comm = comm_delta.alpha_secs_calibrated()
+                + comm_delta.bytes as f64 * COMM_BETA_SECS_PER_BYTE;
+            stats.time_sym + stats.time_num + (cal_comm - stats.overlap_total()).max(0.0)
+        } else {
+            stats.time_sym + stats.time_num
+        };
         // True peak of product-related memory: peaks were reset after A/P
         // were charged, so everything above that floor is the product's
         // (C + auxiliaries + hash + staging).  Summing per-category peaks
@@ -79,14 +98,14 @@ pub fn run_model_problem(cfg: ModelProblemConfig) -> ModelProblemResult {
         // and C peak (numeric) never coexist — the paper's key effect.
         let mem_product = tracker.peak_total() - mp.a.bytes() - mp.p.bytes();
         let c_bytes = op.extract_c().bytes();
-        (stats, mem_product, mp.a.bytes(), mp.p.bytes(), c_bytes)
+        (stats, mem_product, mp.a.bytes(), mp.p.bytes(), c_bytes, time_cal)
     });
     aggregate_model(cfg, per_rank)
 }
 
 fn aggregate_model(
     cfg: ModelProblemConfig,
-    per_rank: Vec<(PtapStats, u64, u64, u64, u64)>,
+    per_rank: Vec<(PtapStats, u64, u64, u64, u64, f64)>,
 ) -> ModelProblemResult {
     let mut r = ModelProblemResult {
         np: cfg.np,
@@ -97,19 +116,21 @@ fn aggregate_model(
         mem_c: 0,
         time_sym: 0.0,
         time_num: 0.0,
+        time_cal: 0.0,
         overlap_num: 0.0,
         sym_msgs: 0,
         sym_bytes: 0,
         num_msgs: 0,
         num_bytes: 0,
     };
-    for (stats, mem_product, a, p, c) in per_rank {
+    for (stats, mem_product, a, p, c, time_cal) in per_rank {
         r.mem_product = r.mem_product.max(mem_product);
         r.mem_a = r.mem_a.max(a);
         r.mem_p = r.mem_p.max(p);
         r.mem_c = r.mem_c.max(c);
         r.time_sym = r.time_sym.max(stats.time_sym_modeled());
         r.time_num = r.time_num.max(stats.time_num_modeled());
+        r.time_cal = r.time_cal.max(time_cal);
         r.overlap_num = r.overlap_num.max(stats.num_overlap);
         r.sym_msgs = r.sym_msgs.max(stats.sym_msgs);
         r.sym_bytes = r.sym_bytes.max(stats.sym_bytes);
@@ -194,6 +215,7 @@ pub fn run_neutron(cfg: NeutronConfigExp) -> NeutronResult {
                 cache: cfg.cache,
                 numeric_repeats: 1,
                 eq_limit: cfg.eq_limit,
+                retain: false,
             },
             &tracker,
         );
@@ -284,11 +306,20 @@ pub struct HierarchyBenchResult {
     /// Rank-0 redistribution traffic across telescope boundaries.
     pub redist_msgs: u64,
     pub redist_bytes: u64,
+    /// Rank-0 traffic of a fixed number of V-cycle applications on the
+    /// built hierarchy — the solve-phase side the perf gate watches.
+    pub solve_msgs: u64,
+    pub solve_bytes: u64,
     /// Modeled α seconds of the coarse-level builds (rank 0).
     pub alpha_secs: f64,
 }
 
-/// Build a geometric hierarchy and report rank 0's per-level traffic.
+/// V-cycle applications measured for the solve-phase bench traffic.
+const BENCH_SOLVE_CYCLES: usize = 3;
+
+/// Build a geometric hierarchy and report rank 0's per-level traffic,
+/// plus the traffic of [`BENCH_SOLVE_CYCLES`] preconditioner
+/// applications (solve phase).
 pub fn run_hierarchy_bench(
     coarse: Grid3,
     levels: usize,
@@ -301,16 +332,29 @@ pub fn run_hierarchy_bench(
     let per_rank = world.run(|comm| {
         let tracker = MemTracker::new();
         let a0 = grid_laplacian(grids[0], comm.rank(), comm.size());
+        let layout = a0.row_layout.clone();
         let h = build_hierarchy(
             &comm,
             a0,
             &Coarsening::Geometric { grids: grids.clone() },
-            HierarchyConfig { algo, cache: false, numeric_repeats: 1, eq_limit },
+            HierarchyConfig { algo, cache: false, numeric_repeats: 1, eq_limit, retain: false },
             &tracker,
         );
-        (h.active_ranks.clone(), h.level_comm.clone(), h.redist_comm, h.n_levels())
+        let hier = (h.active_ranks.clone(), h.level_comm.clone(), h.redist_comm, h.n_levels());
+        // solve phase: a fixed number of V-cycles, traffic measured
+        // rank-wide (boundary crossings and subcomm epochs included)
+        let mut pc = MgPreconditioner::new(&comm, h, MgOpts::default());
+        let b = DistVec::from_fn(layout.clone(), comm.rank(), |g| ((g % 11) as f64) - 5.0);
+        let mut z = DistVec::zeros(layout, comm.rank());
+        let before = comm.stats_global();
+        for _ in 0..BENCH_SOLVE_CYCLES {
+            pc.apply(&comm, &b, &mut z);
+        }
+        let solve = comm.stats_global().since(before);
+        (hier, solve)
     });
-    let (active_ranks, level_comm, redist, n_levels) = per_rank.into_iter().next().unwrap();
+    let ((active_ranks, level_comm, redist, n_levels), solve) =
+        per_rank.into_iter().next().unwrap();
     let total_msgs: u64 = level_comm.iter().map(|c| c.msgs).sum();
     HierarchyBenchResult {
         np,
@@ -321,7 +365,286 @@ pub fn run_hierarchy_bench(
         level_bytes: level_comm.iter().map(|c| c.bytes).collect(),
         redist_msgs: redist.msgs,
         redist_bytes: redist.bytes,
+        solve_msgs: solve.msgs,
+        solve_bytes: solve.bytes,
         alpha_secs: total_msgs as f64 * COMM_ALPHA_SECS,
+    }
+}
+
+/// Which time-dependent workload drives the hierarchy refresh.
+#[derive(Debug, Clone, Copy)]
+pub enum TimedepWorkload {
+    /// Implicit (backward-Euler) heat stepping: `A(dt) = M + dt·K` on a
+    /// geometric chain, `dt` ramping by a factor per step — values
+    /// change, the pattern never does.
+    Heat { coarse: Grid3, levels: usize },
+    /// Lagged-coefficient nonlinear neutron variant: the previous step's
+    /// iterate feeds back into the removal term on the diagonal
+    /// (Picard/lagged nonlinearity); the aggregation hierarchy is frozen
+    /// at step 0, exactly the regime `MAT_REUSE_MATRIX` serves.
+    NeutronLagged { grid: Grid3, groups: usize, max_levels: usize },
+}
+
+/// One timedep experiment: N implicit steps, one symbolic build, N−1
+/// hierarchy refreshes (or N−1 full rebuilds as the baseline).
+#[derive(Debug, Clone)]
+pub struct TimedepConfig {
+    pub workload: TimedepWorkload,
+    pub np: usize,
+    pub algo: Algo,
+    pub steps: usize,
+    /// First time step / feedback scale; multiplied by `ramp` each step.
+    pub dt0: f64,
+    pub ramp: f64,
+    pub eq_limit: Option<usize>,
+    /// `true`: numeric refresh between steps (the reuse path); `false`:
+    /// full symbolic rebuild per step (the baseline it is measured
+    /// against).
+    pub refresh: bool,
+}
+
+/// What a timedep run measures (rank 0's view; build times are the max
+/// over ranks like the other experiments).
+#[derive(Debug, Clone)]
+pub struct TimedepResult {
+    pub np: usize,
+    pub algo: Algo,
+    pub steps: usize,
+    pub refresh: bool,
+    pub n_levels: usize,
+    /// Initial build's triple-product times (modeled, summed over
+    /// levels, max over ranks): the symbolic cost paid exactly once.
+    pub build_time_sym: f64,
+    pub build_time_num: f64,
+    /// Rank-wide traffic of the initial hierarchy build (rank 0).
+    pub build_msgs: u64,
+    pub build_bytes: u64,
+    /// Outer Krylov iterations per step.
+    pub step_iters: Vec<usize>,
+    /// Per-update (refresh or rebuild) triple-product numeric seconds
+    /// (modeled) — the cell compared against `build_time_sym`.
+    pub update_ptap_num: Vec<f64>,
+    /// Per-update whole-cost seconds (modeled: busy + α-β on all its
+    /// traffic, smoother/factorization re-setup included).
+    pub update_modeled: Vec<f64>,
+    /// Per-update rank-wide traffic.
+    pub update_msgs: Vec<u64>,
+    pub update_bytes: Vec<u64>,
+    /// Last step's relative residual (end-to-end signal).
+    pub final_rel_residual: f64,
+}
+
+impl TimedepResult {
+    pub fn mean(v: &[f64]) -> f64 {
+        if v.is_empty() {
+            0.0
+        } else {
+            v.iter().sum::<f64>() / v.len() as f64
+        }
+    }
+
+    pub fn mean_u64(v: &[u64]) -> f64 {
+        if v.is_empty() {
+            0.0
+        } else {
+            v.iter().sum::<u64>() as f64 / v.len() as f64
+        }
+    }
+}
+
+/// Lagged-coefficient feedback: the previous iterate hardens the removal
+/// term on the diagonal (pattern-preserving — the diagonal is always
+/// present in the neutron operator).
+fn lagged_feedback(base: &DistCsr, x: &DistVec, gamma: f64) -> DistCsr {
+    let mut a = base.clone();
+    for i in 0..a.local_nrows() {
+        let cols = a.diag.row_cols(i);
+        if let Some(pos) = cols.iter().position(|&c| c as usize == i) {
+            let xi = x.vals[i];
+            let k = a.diag.rowptr[i] as usize + pos;
+            a.diag.vals[k] += gamma * xi * xi / (1.0 + xi * xi);
+        }
+    }
+    a
+}
+
+/// Run one timedep cell: one hierarchy build, then `steps − 1` value
+/// updates — numeric refreshes over the retained symbolic state, or full
+/// rebuilds for the baseline — with an implicit solve per step.
+pub fn run_timedep(cfg: TimedepConfig) -> TimedepResult {
+    use crate::util::timer::BusyTimer;
+    let world = World::new(cfg.np);
+    let cfg2 = cfg.clone();
+    let mut per_rank = world.run(move |comm: Comm| {
+        let cfg = cfg2.clone();
+        let (rank, np) = (comm.rank(), comm.size());
+        let tracker = MemTracker::new();
+        // workload: step-0 operator + a value-only maker for later steps
+        let (coarsening, base, fine_grid) = match cfg.workload {
+            TimedepWorkload::Heat { coarse, levels } => {
+                let grids = geometric_chain(coarse, levels);
+                let fine = grids[0];
+                (Coarsening::Geometric { grids }, None, Some(fine))
+            }
+            TimedepWorkload::NeutronLagged { grid, groups, max_levels } => {
+                let ncfg = NeutronConfig { grid, groups, seed: 20190701 };
+                let b = neutron_block_operator(ncfg, rank, np).to_scalar();
+                (
+                    Coarsening::Aggregation {
+                        opts: crate::mg::AggregateOpts { threshold: 0.25, smooth_omega: 0.0 },
+                        min_rows: 64,
+                        max_levels,
+                    },
+                    Some(b),
+                    None,
+                )
+            }
+        };
+        let dt_at = |s: usize| cfg.dt0 * cfg.ramp.powi(s as i32);
+        let make_a = |s: usize, x_prev: &DistVec| -> DistCsr {
+            match fine_grid {
+                Some(fine) => heat_operator(fine, rank, np, dt_at(s)),
+                None => lagged_feedback(base.as_ref().unwrap(), x_prev, dt_at(s)),
+            }
+        };
+        let zero_guess = |layout: &crate::dist::Layout| DistVec::zeros(layout.clone(), rank);
+
+        let hcfg = HierarchyConfig {
+            algo: cfg.algo,
+            cache: false,
+            numeric_repeats: 1,
+            eq_limit: cfg.eq_limit,
+            retain: cfg.refresh,
+        };
+        let mut x = match fine_grid {
+            Some(fine) => DistVec::zeros(crate::dist::Layout::new_equal(fine.len(), np), rank),
+            None => DistVec::zeros(base.as_ref().unwrap().row_layout.clone(), rank),
+        };
+        let mut a_cur = make_a(0, &x);
+        let layout = a_cur.row_layout.clone();
+        tracker.alloc(Cat::MatA, a_cur.bytes());
+        let build_before = comm.stats_global();
+        let h = build_hierarchy(&comm, a_cur.clone(), &coarsening, hcfg, &tracker);
+        let build_ptap = h.ptap_stats;
+        let n_levels = h.n_levels();
+        let spmv = DistSpmv::new(&comm, &a_cur);
+        let mut refresher = None;
+        let mut pc_plain = None;
+        if cfg.refresh {
+            refresher = Some(HierarchyRefresher::new(&comm, h, MgOpts::default(), &tracker));
+        } else {
+            pc_plain = Some(MgPreconditioner::new(&comm, h, MgOpts::default()));
+        }
+        let build_delta = comm.stats_global().since(build_before);
+
+        let mut step_iters = Vec::new();
+        let mut update_ptap_num = Vec::new();
+        let mut update_modeled = Vec::new();
+        let mut update_msgs = Vec::new();
+        let mut update_bytes = Vec::new();
+        let mut final_rel = 1.0f64;
+        for s in 0..cfg.steps {
+            if s > 0 {
+                let a_new = make_a(s, &x);
+                if let Some(rf) = refresher.as_mut() {
+                    let st = rf.refresh(&comm, &a_new);
+                    update_ptap_num.push(st.ptap.time_num_modeled());
+                    update_modeled.push(st.modeled_secs);
+                    update_msgs.push(st.comm.msgs);
+                    update_bytes.push(st.comm.bytes);
+                    a_cur.copy_values_from(&a_new);
+                } else {
+                    // the baseline pays symbolic + numeric + setup again
+                    let before = comm.stats_global();
+                    let mut t = BusyTimer::new();
+                    t.start();
+                    let h = build_hierarchy(&comm, a_new.clone(), &coarsening, hcfg, &tracker);
+                    let ptap = h.ptap_stats;
+                    pc_plain = Some(MgPreconditioner::new(&comm, h, MgOpts::default()));
+                    t.stop();
+                    let d = comm.stats_global().since(before);
+                    update_ptap_num.push(ptap.time_num_modeled());
+                    // same overlap credit as the refresh path's modeled
+                    // seconds, so the two modes compare on equal terms
+                    update_modeled
+                        .push(t.total() + (d.modeled_secs() - ptap.overlap_total()).max(0.0));
+                    update_msgs.push(d.msgs);
+                    update_bytes.push(d.bytes);
+                    a_cur = a_new;
+                }
+            }
+            // implicit step: heat solves (M + dt·K) x = x_prev + dt·f
+            // (f ≡ 1); the lagged neutron iteration solves
+            // A(x_prev) x = q with the fixed source q
+            let b = match fine_grid {
+                Some(_) => {
+                    let mut b = x.clone();
+                    for v in &mut b.vals {
+                        *v += dt_at(s);
+                    }
+                    b
+                }
+                None => DistVec::from_fn(layout.clone(), rank, |g| {
+                    ((g % 17) as f64 - 8.0) / 8.0
+                }),
+            };
+            let mut xs = zero_guess(&layout);
+            let pc = match refresher.as_mut() {
+                Some(rf) => rf.pc(),
+                None => pc_plain.as_mut().unwrap(),
+            };
+            let res = match fine_grid {
+                Some(_) => pcg(&comm, &a_cur, &spmv, &b, &mut xs, Some(pc), 1e-8, 200),
+                None => gmres(&comm, &a_cur, &spmv, &b, &mut xs, Some(pc), 30, 1e-8, 60),
+            };
+            step_iters.push(res.iterations);
+            let r0 = res.residuals.first().copied().unwrap_or(1.0).max(f64::MIN_POSITIVE);
+            final_rel = res.residuals.last().copied().unwrap_or(1.0) / r0;
+            x = xs;
+        }
+        (
+            n_levels,
+            build_ptap,
+            build_delta,
+            step_iters,
+            update_ptap_num,
+            update_modeled,
+            update_msgs,
+            update_bytes,
+            final_rel,
+        )
+    });
+    let build_time_sym =
+        per_rank.iter().map(|r| r.1.time_sym_modeled()).fold(0.0f64, f64::max);
+    let build_time_num =
+        per_rank.iter().map(|r| r.1.time_num_modeled()).fold(0.0f64, f64::max);
+    let (
+        n_levels,
+        _ptap,
+        build_delta,
+        step_iters,
+        update_ptap_num,
+        update_modeled,
+        update_msgs,
+        update_bytes,
+        final_rel_residual,
+    ) = per_rank.remove(0);
+    TimedepResult {
+        np: cfg.np,
+        algo: cfg.algo,
+        steps: cfg.steps,
+        refresh: cfg.refresh,
+        n_levels,
+        build_time_sym,
+        build_time_num,
+        build_msgs: build_delta.msgs,
+        build_bytes: build_delta.bytes,
+        step_iters,
+        update_ptap_num,
+        update_modeled,
+        update_msgs,
+        update_bytes,
+        final_rel_residual,
     }
 }
 

@@ -6,10 +6,11 @@ mod experiment;
 mod report;
 
 pub use experiment::{
-    run_hierarchy_bench, run_model_problem, run_neutron, HierarchyBenchResult,
-    ModelProblemConfig, ModelProblemResult, NeutronConfigExp, NeutronResult,
+    run_hierarchy_bench, run_model_problem, run_neutron, run_timedep, HierarchyBenchResult,
+    ModelProblemConfig, ModelProblemResult, NeutronConfigExp, NeutronResult, TimedepConfig,
+    TimedepResult, TimedepWorkload,
 };
 pub use report::{
     diff_bench, eff_column, level_tables, model_problem_tables, neutron_tables,
-    parse_bench_cells, speedup_column, write_bench_json, write_results,
+    parse_bench_cells, speedup_column, timedep_table, write_bench_json, write_results,
 };

@@ -6,7 +6,9 @@ use std::path::Path;
 use crate::util::table::Table;
 use crate::util::{fmt_secs, mb};
 
-use super::experiment::{HierarchyBenchResult, ModelProblemResult, NeutronResult};
+use super::experiment::{
+    HierarchyBenchResult, ModelProblemResult, NeutronResult, TimedepResult,
+};
 
 /// Speedups relative to the smallest rank count *within one algorithm*
 /// (paper Figs 1/3/7/9 top panels).
@@ -39,7 +41,7 @@ pub fn eff_column(nps: &[usize], times: &[f64]) -> Vec<f64> {
 pub fn model_problem_tables(rows: &[ModelProblemResult]) -> (Table, Table) {
     // EFF per algorithm relative to its smallest np
     let mut main = Table::new(vec![
-        "np", "Algorithm", "Mem", "Time_sym", "Time_num", "Overlap", "Time", "EFF",
+        "np", "Algorithm", "Mem", "Time_sym", "Time_num", "Overlap", "Time", "Time_cal", "EFF",
     ]);
     let algos: Vec<_> = {
         let mut v: Vec<_> = rows.iter().map(|r| r.algo).collect();
@@ -61,6 +63,7 @@ pub fn model_problem_tables(rows: &[ModelProblemResult]) -> (Table, Table) {
             fmt_secs(r.time_num),
             fmt_secs(r.overlap_num),
             fmt_secs(r.time()),
+            fmt_secs(r.time_cal),
             format!("{:.0}%", effs[k]),
         ]);
     }
@@ -128,15 +131,48 @@ pub fn level_tables(r: &NeutronResult) -> (Table, Table) {
     (t5, t6)
 }
 
-/// Write the benchmark-smoke artifact (CI's `BENCH_pr3.json`): one record
-/// per (np, algo) cell with modeled times, the overlap window, the peak
-/// product bytes and the measured traffic, plus one record per
-/// hierarchy-agglomeration cell (per-level messages, active ranks, the
-/// modeled α term) — the numbers [`diff_bench`] compares across PRs.
+/// Render the timedep run: one row per step — its iterations plus the
+/// operator update that preceded it (step 0's "update" is the one-off
+/// symbolic+numeric build; `update_s` is the whole update's modeled
+/// cost, `ptap_num_s` its triple-product numeric part).
+pub fn timedep_table(r: &TimedepResult) -> Table {
+    let mut t =
+        Table::new(vec!["step", "iters", "update", "update_s", "ptap_num_s", "msgs", "bytes"]);
+    for (s, &iters) in r.step_iters.iter().enumerate() {
+        let (kind, upd, ptap, msgs, bytes) = if s == 0 {
+            (
+                "build",
+                fmt_secs(r.build_time_sym + r.build_time_num),
+                fmt_secs(r.build_time_num),
+                r.build_msgs.to_string(),
+                r.build_bytes.to_string(),
+            )
+        } else {
+            (
+                if r.refresh { "refresh" } else { "rebuild" },
+                fmt_secs(r.update_modeled[s - 1]),
+                fmt_secs(r.update_ptap_num[s - 1]),
+                r.update_msgs[s - 1].to_string(),
+                r.update_bytes[s - 1].to_string(),
+            )
+        };
+        t.row(vec![s.to_string(), iters.to_string(), kind.to_string(), upd, ptap, msgs, bytes]);
+    }
+    t
+}
+
+/// Write the benchmark-smoke artifact (CI's `BENCH_pr4.json`): one record
+/// per (np, algo) cell with modeled times (fixed *and* calibrated α), the
+/// overlap window, the peak product bytes and the measured traffic; one
+/// record per hierarchy-agglomeration cell (per-level messages, active
+/// ranks, solve-phase traffic, the modeled α term); and one record per
+/// timedep refresh cell (symbolic build time vs per-refresh numeric time
+/// and bytes) — the numbers [`diff_bench`] compares across PRs.
 /// Hand-rolled JSON (no serde offline).
 pub fn write_bench_json(
     rows: &[ModelProblemResult],
     hier: &[HierarchyBenchResult],
+    refresh: &[TimedepResult],
     path: &Path,
 ) -> std::io::Result<()> {
     let fmt_list = |v: &[u64]| -> String {
@@ -148,12 +184,14 @@ pub fn write_bench_json(
         s.push_str(&format!(
             "    {{\"algo\": \"{}\", \"np\": {}, \
              \"time_sym_modeled\": {:.6e}, \"time_num_modeled\": {:.6e}, \
+             \"time_cal_modeled\": {:.6e}, \
              \"overlap_num\": {:.6e}, \"peak_product_bytes\": {}, \
              \"sym_msgs\": {}, \"sym_bytes\": {}, \"num_msgs\": {}, \"num_bytes\": {}}}{}\n",
             r.algo.name(),
             r.np,
             r.time_sym,
             r.time_num,
+            r.time_cal,
             r.overlap_num,
             r.mem_product,
             r.sym_msgs,
@@ -170,6 +208,7 @@ pub fn write_bench_json(
             "    {{\"np\": {}, \"eq_limit\": {}, \"n_levels\": {}, \
              \"active_ranks\": {}, \"level_msgs\": {}, \"level_bytes\": {}, \
              \"total_msgs\": {}, \"redist_msgs\": {}, \"redist_bytes\": {}, \
+             \"solve_msgs\": {}, \"solve_bytes\": {}, \
              \"alpha_secs\": {:.6e}}}{}\n",
             h.np,
             h.eq_limit.unwrap_or(0),
@@ -180,8 +219,30 @@ pub fn write_bench_json(
             total_msgs,
             h.redist_msgs,
             h.redist_bytes,
+            h.solve_msgs,
+            h.solve_bytes,
             h.alpha_secs,
             if k + 1 < hier.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n  \"refresh\": [\n");
+    for (k, r) in refresh.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"kind\": \"refresh\", \"algo\": \"{}\", \"np\": {}, \"steps\": {}, \
+             \"time_sym_build\": {:.6e}, \"time_num_refresh\": {:.6e}, \
+             \"refresh_modeled\": {:.6e}, \"refresh_msgs\": {:.1}, \"refresh_bytes\": {:.1}, \
+             \"build_msgs\": {}, \"build_bytes\": {}}}{}\n",
+            r.algo.name(),
+            r.np,
+            r.steps,
+            r.build_time_sym,
+            TimedepResult::mean(&r.update_ptap_num),
+            TimedepResult::mean(&r.update_modeled),
+            TimedepResult::mean_u64(&r.update_msgs),
+            TimedepResult::mean_u64(&r.update_bytes),
+            r.build_msgs,
+            r.build_bytes,
+            if k + 1 < refresh.len() { "," } else { "" }
         ));
     }
     s.push_str("  ]\n}\n");
@@ -258,29 +319,53 @@ fn cell_key(cell: &BenchCell) -> String {
     let algo = cell_field(cell, "algo").unwrap_or("-");
     let np = cell_field(cell, "np").unwrap_or("-");
     let eq = cell_field(cell, "eq_limit").unwrap_or("-");
-    format!("algo={algo} np={np} eq={eq}")
+    let kind = cell_field(cell, "kind").unwrap_or("-");
+    format!("algo={algo} np={np} eq={eq} kind={kind}")
 }
 
 /// Metrics the regression gate watches, with per-metric absolute floors
 /// (modeled times at smoke scale sit in the microsecond range where
 /// scheduler noise dominates; counters and bytes are deterministic).
-const DIFF_METRICS: [(&str, f64); 9] = [
+const DIFF_METRICS: [(&str, f64); 15] = [
     ("time_sym_modeled", 1e-3),
     ("time_num_modeled", 1e-3),
+    ("time_cal_modeled", 1e-3),
     ("peak_product_bytes", 0.0),
     ("sym_msgs", 0.0),
     ("sym_bytes", 0.0),
     ("num_msgs", 0.0),
     ("num_bytes", 0.0),
-    // hierarchy cells: deterministic totals of the per-level builds
+    // hierarchy cells: deterministic totals of the per-level builds plus
+    // the solve-phase traffic of a fixed number of V-cycles
     ("total_msgs", 0.0),
     ("redist_msgs", 0.0),
+    ("solve_msgs", 0.0),
+    ("solve_bytes", 0.0),
+    // refresh cells: the reuse win must not erode
+    ("time_num_refresh", 1e-3),
+    ("refresh_msgs", 0.0),
+    ("refresh_bytes", 0.0),
 ];
+
+/// Per-level array metrics: compared *elementwise*, so a single level's
+/// regression fails the gate even when the totals stay flat (more active
+/// ranks on a level counts as a regression — agglomeration got weaker).
+const DIFF_ARRAY_METRICS: [&str; 3] = ["level_msgs", "level_bytes", "active_ranks"];
+
+/// Parse a bracketed JSON number list (`"[40, 6]"`).
+fn parse_num_list(v: &str) -> Option<Vec<f64>> {
+    let inner = v.trim().strip_prefix('[')?.strip_suffix(']')?;
+    if inner.trim().is_empty() {
+        return Some(Vec::new());
+    }
+    inner.split(',').map(|x| x.trim().parse::<f64>().ok()).collect()
+}
 
 /// Compare two bench artifacts; returns the list of regressions — any
 /// watched metric that grew by more than `tol` (relative) above its
-/// absolute floor in a cell present in both files.  Cells only in one
-/// file are ignored (the artifact schema may grow across PRs).
+/// absolute floor in a cell present in both files, and any per-level
+/// array entry that grew by more than `tol`.  Cells only in one file are
+/// ignored (the artifact schema may grow across PRs).
 pub fn diff_bench(old: &str, new: &str, tol: f64) -> Vec<String> {
     let old_cells = parse_bench_cells(old);
     let new_cells = parse_bench_cells(new);
@@ -302,6 +387,31 @@ pub fn diff_bench(old: &str, new: &str, tol: f64) -> Vec<String> {
                     "{key}: {metric} regressed {ov:.6e} -> {nv:.6e} (+{:.1}%)",
                     100.0 * (nv - ov) / ov.max(f64::MIN_POSITIVE)
                 ));
+            }
+        }
+        for metric in DIFF_ARRAY_METRICS {
+            let (Some(ov), Some(nv)) = (cell_field(oc, metric), cell_field(nc, metric)) else {
+                continue;
+            };
+            let (Some(ov), Some(nv)) = (parse_num_list(ov), parse_num_list(nv)) else {
+                continue;
+            };
+            // a level-count change is itself a shape regression — the
+            // truncated zip below would otherwise skip the moved levels
+            if ov.len() != nv.len() {
+                regressions.push(format!(
+                    "{key}: {metric} level count changed {} -> {}",
+                    ov.len(),
+                    nv.len()
+                ));
+            }
+            for (lvl, (o, n)) in ov.iter().zip(&nv).enumerate() {
+                if *n > o * (1.0 + tol) && n - o > 0.0 {
+                    regressions.push(format!(
+                        "{key}: {metric}[{lvl}] regressed {o} -> {n} (+{:.1}%)",
+                        100.0 * (n - o) / o.max(f64::MIN_POSITIVE)
+                    ));
+                }
             }
         }
     }
@@ -333,6 +443,7 @@ mod tests {
             mem_c: 1,
             time_sym: 0.5,
             time_num: 0.25,
+            time_cal: 0.6,
             overlap_num: 0.1,
             sym_msgs: 3,
             sym_bytes: 100,
@@ -351,36 +462,64 @@ mod tests {
             level_bytes: vec![4000, 300],
             redist_msgs: 9,
             redist_bytes: 800,
+            solve_msgs: 120,
+            solve_bytes: 9000,
             alpha_secs: 9.2e-5,
+        }]
+    }
+
+    fn sample_refresh() -> Vec<TimedepResult> {
+        vec![TimedepResult {
+            np: 4,
+            algo: Algo::AllAtOnce,
+            steps: 3,
+            refresh: true,
+            n_levels: 3,
+            build_time_sym: 2.0e-3,
+            build_time_num: 1.0e-3,
+            build_msgs: 400,
+            build_bytes: 50_000,
+            step_iters: vec![8, 8, 8],
+            update_ptap_num: vec![4.0e-4, 4.0e-4],
+            update_modeled: vec![9.0e-4, 9.0e-4],
+            update_msgs: vec![60, 60],
+            update_bytes: vec![7000, 7000],
+            final_rel_residual: 1e-9,
         }]
     }
 
     #[test]
     fn bench_json_round_trips_fields() {
         let path = std::env::temp_dir().join("gptap_bench_smoke_test.json");
-        write_bench_json(&sample_rows(), &sample_hier(), &path).unwrap();
+        write_bench_json(&sample_rows(), &sample_hier(), &sample_refresh(), &path).unwrap();
         let s = std::fs::read_to_string(&path).unwrap();
         assert!(s.contains("\"algo\": \"allatonce\""), "{s}");
         assert!(s.contains("\"peak_product_bytes\": 123"), "{s}");
         assert!(s.contains("\"num_msgs\": 4"), "{s}");
         assert!(s.contains("\"active_ranks\": [4, 2, 1]"), "{s}");
         assert!(s.contains("\"total_msgs\": 46"), "{s}");
+        assert!(s.contains("\"solve_msgs\": 120"), "{s}");
+        assert!(s.contains("\"kind\": \"refresh\""), "{s}");
+        assert!(s.contains("\"time_num_refresh\""), "{s}");
         let _ = std::fs::remove_file(&path);
     }
 
     #[test]
     fn parse_bench_cells_reads_own_format() {
         let path = std::env::temp_dir().join("gptap_bench_parse_test.json");
-        write_bench_json(&sample_rows(), &sample_hier(), &path).unwrap();
+        write_bench_json(&sample_rows(), &sample_hier(), &sample_refresh(), &path).unwrap();
         let s = std::fs::read_to_string(&path).unwrap();
         let _ = std::fs::remove_file(&path);
         let cells = parse_bench_cells(&s);
-        assert_eq!(cells.len(), 2, "one model cell + one hierarchy cell");
+        assert_eq!(cells.len(), 3, "one model + one hierarchy + one refresh cell");
         assert_eq!(cell_field(&cells[0], "algo"), Some("\"allatonce\""));
         assert_eq!(cell_field(&cells[0], "num_msgs"), Some("4"));
         assert_eq!(cell_field(&cells[1], "eq_limit"), Some("64"));
         assert_eq!(cell_field(&cells[1], "level_msgs"), Some("[40, 6]"));
         assert_eq!(cell_field(&cells[1], "total_msgs"), Some("46"));
+        assert_eq!(cell_field(&cells[2], "kind"), Some("\"refresh\""));
+        // model vs refresh cells share algo/np but must not collide
+        assert_ne!(cell_key(&cells[0]), cell_key(&cells[2]));
     }
 
     #[test]
@@ -391,7 +530,7 @@ mod tests {
             rows[0].time_num = time;
             let path = std::env::temp_dir()
                 .join(format!("gptap_bench_diff_{msgs}_{}.json", (time * 1e6) as u64));
-            write_bench_json(&rows, &sample_hier(), &path).unwrap();
+            write_bench_json(&rows, &sample_hier(), &sample_refresh(), &path).unwrap();
             let s = std::fs::read_to_string(&path).unwrap();
             let _ = std::fs::remove_file(&path);
             s
@@ -411,6 +550,46 @@ mod tests {
         assert!(diff_bench(&mk(120, 0.30), &base, 0.10).is_empty());
         // a cell missing from the old file is skipped, not flagged
         assert!(diff_bench("{\n  \"cells\": [\n  ]\n}\n", &base, 0.10).is_empty());
+    }
+
+    #[test]
+    fn diff_bench_catches_per_level_and_refresh_regressions() {
+        let mk = |level1_msgs: u64, active1: usize, refresh_bytes: u64| {
+            let mut hier = sample_hier();
+            hier[0].level_msgs[1] = level1_msgs;
+            hier[0].active_ranks[1] = active1;
+            let mut refresh = sample_refresh();
+            refresh[0].update_bytes = vec![refresh_bytes; 2];
+            let path = std::env::temp_dir().join(format!(
+                "gptap_bench_arr_{level1_msgs}_{active1}_{refresh_bytes}.json"
+            ));
+            write_bench_json(&sample_rows(), &hier, &refresh, &path).unwrap();
+            let s = std::fs::read_to_string(&path).unwrap();
+            let _ = std::fs::remove_file(&path);
+            s
+        };
+        let base = mk(6, 2, 7000);
+        // one level's messages grow while another could shrink: the
+        // elementwise gate flags it even though this leaves totals flat
+        let regs = diff_bench(&base, &mk(20, 2, 7000), 0.10);
+        assert!(
+            regs.iter().any(|r| r.contains("level_msgs[1]")),
+            "per-level regression missed: {regs:?}"
+        );
+        // a level re-activating more ranks is an agglomeration regression
+        let regs = diff_bench(&base, &mk(6, 4, 7000), 0.10);
+        assert!(
+            regs.iter().any(|r| r.contains("active_ranks[1]")),
+            "active-rank regression missed: {regs:?}"
+        );
+        // refresh traffic growth trips the reuse gate
+        let regs = diff_bench(&base, &mk(6, 2, 9000), 0.10);
+        assert!(
+            regs.iter().any(|r| r.contains("refresh_bytes")),
+            "refresh regression missed: {regs:?}"
+        );
+        // equal artifacts stay clean
+        assert!(diff_bench(&base, &mk(6, 2, 7000), 0.10).is_empty());
     }
 
     #[test]

@@ -147,6 +147,18 @@ impl DistCsr {
         }
     }
 
+    /// Overwrite every value from `other`, which must have the identical
+    /// distributed pattern (the `MAT_REUSE_MATRIX` value path: a numeric
+    /// refresh replaces values without touching structure or layouts).
+    pub fn copy_values_from(&mut self, other: &DistCsr) {
+        debug_assert_eq!(self.row_layout, other.row_layout, "value copy across layouts");
+        debug_assert_eq!(self.diag.cols, other.diag.cols, "diag pattern drift in value copy");
+        debug_assert_eq!(self.offd.cols, other.offd.cols, "offd pattern drift in value copy");
+        debug_assert_eq!(self.garray, other.garray, "garray drift in value copy");
+        self.diag.vals.copy_from_slice(&other.diag.vals);
+        self.offd.vals.copy_from_slice(&other.offd.vals);
+    }
+
     /// Assemble the full global matrix on every rank (collective, tests
     /// and coarse direct solves only).  Every rank returns the identical
     /// sequential [`Csr`].

@@ -109,6 +109,26 @@ const FRAME_COLL: u8 = 0;
 const FRAME_DATA: u8 = 1;
 const FRAME_CLOSE: u8 = 2;
 
+/// Number of logarithmic message-size buckets in [`CommStats::hist`].
+pub const SIZE_BUCKETS: usize = 8;
+
+/// Upper edge (exclusive, bytes) of each size bucket; the last bucket is
+/// unbounded.
+pub const SIZE_BUCKET_EDGES: [u64; SIZE_BUCKETS - 1] =
+    [64, 256, 1024, 4096, 16384, 65536, 262144];
+
+fn size_bucket(bytes: u64) -> usize {
+    SIZE_BUCKET_EDGES.iter().position(|&e| bytes < e).unwrap_or(SIZE_BUCKETS - 1)
+}
+
+/// Representative payload size of bucket `b` (geometric midpoint of its
+/// edges), used by the calibrated α model.
+fn bucket_rep_bytes(b: usize) -> f64 {
+    let lo = if b == 0 { 1 } else { SIZE_BUCKET_EDGES[b - 1] };
+    let hi = if b + 1 == SIZE_BUCKETS { 4 * lo } else { SIZE_BUCKET_EDGES[b] };
+    ((lo * hi) as f64).sqrt()
+}
+
 /// Snapshot of one rank's cumulative send-side traffic.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct CommStats {
@@ -116,17 +136,54 @@ pub struct CommStats {
     pub msgs: u64,
     /// Payload bytes sent to other ranks.
     pub bytes: u64,
+    /// Message counts by payload-size bucket ([`SIZE_BUCKET_EDGES`]) —
+    /// the measured chunk-size distribution the calibrated α model reads.
+    pub hist: [u64; SIZE_BUCKETS],
 }
 
 impl CommStats {
-    /// The α-β model applied to this rank's traffic.
+    /// The α-β model applied to this rank's traffic (fixed per-message α).
     pub fn modeled_secs(&self) -> f64 {
         self.msgs as f64 * COMM_ALPHA_SECS + self.bytes as f64 * COMM_BETA_SECS_PER_BYTE
     }
 
+    /// The α term under the *calibrated* per-message credit: a pipelined
+    /// chunk posted back-to-back behind another is spaced by its own
+    /// serialization time, so a message of size `s` adds only
+    /// `min(α, s·β)` of latency — small chunks (the engine's pipelined
+    /// trains) amortize α, bulk messages still pay it in full.  Derived
+    /// from the measured size histogram rather than the single constant.
+    pub fn alpha_secs_calibrated(&self) -> f64 {
+        self.hist
+            .iter()
+            .enumerate()
+            .map(|(b, &n)| {
+                n as f64 * COMM_ALPHA_SECS.min(bucket_rep_bytes(b) * COMM_BETA_SECS_PER_BYTE)
+            })
+            .sum()
+    }
+
+    /// The α-β model with the calibrated per-message α credit.
+    pub fn modeled_secs_calibrated(&self) -> f64 {
+        self.alpha_secs_calibrated() + self.bytes as f64 * COMM_BETA_SECS_PER_BYTE
+    }
+
     /// Traffic since `earlier` (same counters, monotone).
     pub fn since(&self, earlier: CommStats) -> CommStats {
-        CommStats { msgs: self.msgs - earlier.msgs, bytes: self.bytes - earlier.bytes }
+        let mut hist = [0u64; SIZE_BUCKETS];
+        for (h, (a, b)) in hist.iter_mut().zip(self.hist.iter().zip(earlier.hist)) {
+            *h = a - b;
+        }
+        CommStats { msgs: self.msgs - earlier.msgs, bytes: self.bytes - earlier.bytes, hist }
+    }
+
+    /// Accumulate another snapshot's counters into this one.
+    pub fn merge(&mut self, other: CommStats) {
+        self.msgs += other.msgs;
+        self.bytes += other.bytes;
+        for (h, o) in self.hist.iter_mut().zip(other.hist) {
+            *h += o;
+        }
     }
 }
 
@@ -159,6 +216,7 @@ struct Endpoint {
     /// Rank-wide send-side totals across all communicators.
     total_msgs: Cell<u64>,
     total_bytes: Cell<u64>,
+    total_hist: Cell<[u64; SIZE_BUCKETS]>,
     /// Next free wire-tag base for communicators created through this
     /// rank (monotonic; every split involving this rank bumps it).
     next_tag_base: Cell<u32>,
@@ -216,6 +274,7 @@ struct Group {
     /// Send-side traffic through this communicator.
     msgs: Cell<u64>,
     bytes: Cell<u64>,
+    hist: Cell<[u64; SIZE_BUCKETS]>,
 }
 
 /// One rank's endpoint of a (sub-)communicator.  Cheap to clone: clones
@@ -242,6 +301,7 @@ impl Comm {
                 rx,
                 total_msgs: Cell::new(0),
                 total_bytes: Cell::new(0),
+                total_hist: Cell::new([0; SIZE_BUCKETS]),
                 next_tag_base: Cell::new(TAG_STRIDE),
                 inbox: RefCell::new((0..world_np).map(|_| SourceInbox::default()).collect()),
                 cursor: RefCell::new(HashMap::new()),
@@ -252,6 +312,7 @@ impl Comm {
                 tag_base: 0,
                 msgs: Cell::new(0),
                 bytes: Cell::new(0),
+                hist: Cell::new([0; SIZE_BUCKETS]),
             }),
         }
     }
@@ -277,20 +338,39 @@ impl Comm {
     /// Scoped: a sub-communicator counts only its own epochs and
     /// collectives — see [`Comm::stats_global`] for the rank-wide total.
     pub fn stats(&self) -> CommStats {
-        CommStats { msgs: self.group.msgs.get(), bytes: self.group.bytes.get() }
+        CommStats {
+            msgs: self.group.msgs.get(),
+            bytes: self.group.bytes.get(),
+            hist: self.group.hist.get(),
+        }
     }
 
     /// Rank-wide send-side totals across every communicator this rank
     /// holds (world + all sub-communicators).
     pub fn stats_global(&self) -> CommStats {
-        CommStats { msgs: self.ep.total_msgs.get(), bytes: self.ep.total_bytes.get() }
+        CommStats {
+            msgs: self.ep.total_msgs.get(),
+            bytes: self.ep.total_bytes.get(),
+            hist: self.ep.total_hist.get(),
+        }
     }
 
-    fn count_send(&self, msgs: u64, bytes: u64) {
+    /// Count `msgs` sent messages of `msg_bytes` payload bytes each.
+    fn count_send(&self, msgs: u64, msg_bytes: u64) {
+        let bytes = msgs * msg_bytes;
         self.group.msgs.set(self.group.msgs.get() + msgs);
         self.group.bytes.set(self.group.bytes.get() + bytes);
         self.ep.total_msgs.set(self.ep.total_msgs.get() + msgs);
         self.ep.total_bytes.set(self.ep.total_bytes.get() + bytes);
+        if msgs > 0 {
+            let b = size_bucket(msg_bytes);
+            let mut gh = self.group.hist.get();
+            gh[b] += msgs;
+            self.group.hist.set(gh);
+            let mut th = self.ep.total_hist.get();
+            th[b] += msgs;
+            self.ep.total_hist.set(th);
+        }
     }
 
     /// The wire tag carrying user `tag` for this communicator.
@@ -333,6 +413,7 @@ impl Comm {
                 tag_base,
                 msgs: Cell::new(0),
                 bytes: Cell::new(0),
+                hist: Cell::new([0; SIZE_BUCKETS]),
             }),
         }
     }
@@ -478,7 +559,7 @@ impl Comm {
     /// per member, indexed by member rank.
     pub fn allgather_bytes(&self, payload: Vec<u8>) -> Vec<Vec<u8>> {
         let others = self.size() as u64 - 1;
-        self.count_send(others, others * payload.len() as u64);
+        self.count_send(others, payload.len() as u64);
         let frames: Vec<Vec<u8>> = (0..self.size()).map(|_| payload.clone()).collect();
         self.round(frames)
     }
@@ -486,7 +567,7 @@ impl Comm {
     /// Allgather of one `u64` per rank (collective), indexed by rank.
     pub fn all_u64(&self, v: u64) -> Vec<u64> {
         let others = self.size() as u64 - 1;
-        self.count_send(others, others * 8);
+        self.count_send(others, 8);
         let frames: Vec<Vec<u8>> = (0..self.size()).map(|_| v.to_le_bytes().to_vec()).collect();
         self.round(frames)
             .into_iter()
@@ -503,7 +584,7 @@ impl Comm {
     /// order, so every rank computes the bit-identical result.
     pub fn allreduce_sum_f64(&self, v: f64) -> f64 {
         let others = self.size() as u64 - 1;
-        self.count_send(others, others * 8);
+        self.count_send(others, 8);
         let frames: Vec<Vec<u8>> = (0..self.size()).map(|_| v.to_le_bytes().to_vec()).collect();
         self.round(frames)
             .into_iter()
@@ -794,6 +875,32 @@ mod tests {
         for s in stats {
             assert_eq!(s.msgs, 1);
             assert_eq!(s.bytes, 10);
+        }
+    }
+
+    #[test]
+    fn size_histogram_tracks_chunk_distribution() {
+        let w = World::new(2);
+        let stats = w.run(|c| {
+            let peer = 1 - c.rank();
+            c.isend(peer, tag::PTAP_NUM, vec![0; 10]); // bucket 0 (<64)
+            c.isend(peer, tag::PTAP_NUM, vec![0; 10]);
+            c.isend(peer, tag::PTAP_NUM, vec![0; 100_000]); // bucket 6 (<256K)
+            let _ = c.drain(tag::PTAP_NUM);
+            c.stats()
+        });
+        for s in stats {
+            assert_eq!(s.msgs, 3);
+            assert_eq!(s.hist[0], 2);
+            assert_eq!(s.hist[6], 1);
+            assert_eq!(s.hist.iter().sum::<u64>(), s.msgs);
+            // calibrated α: the two tiny chunks amortize their latency, so
+            // the calibrated term sits strictly below fixed α·msgs while
+            // the bulk message still pays (nearly) full α
+            let fixed_alpha = s.msgs as f64 * COMM_ALPHA_SECS;
+            let cal = s.alpha_secs_calibrated();
+            assert!(cal < fixed_alpha, "calibrated {cal} !< fixed {fixed_alpha}");
+            assert!(cal > 0.9 * COMM_ALPHA_SECS, "bulk message must keep its α: {cal}");
         }
     }
 

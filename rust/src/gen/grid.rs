@@ -43,8 +43,9 @@ impl Grid3 {
     }
 }
 
-/// 7-point Laplacian rows owned by `rank` (Dirichlet-eliminated exterior).
-pub fn grid_laplacian(grid: Grid3, rank: usize, np: usize) -> DistCsr {
+/// Shared 7-point-stencil assembly (Dirichlet-eliminated exterior):
+/// `diag` on the center, `offd` on each in-grid neighbour.
+fn stencil_operator(grid: Grid3, rank: usize, np: usize, diag: f64, offd: f64) -> DistCsr {
     let layout = Layout::new_equal(grid.len(), np);
     let mut b = DistCsrBuilder::new(rank, layout.clone(), layout.clone());
     let mut row: Vec<(u64, f64)> = Vec::with_capacity(7);
@@ -52,27 +53,42 @@ pub fn grid_laplacian(grid: Grid3, rank: usize, np: usize) -> DistCsr {
         let (x, y, z) = grid.coords(gid);
         row.clear();
         if z > 0 {
-            row.push((grid.id(x, y, z - 1) as u64, -1.0));
+            row.push((grid.id(x, y, z - 1) as u64, offd));
         }
         if y > 0 {
-            row.push((grid.id(x, y - 1, z) as u64, -1.0));
+            row.push((grid.id(x, y - 1, z) as u64, offd));
         }
         if x > 0 {
-            row.push((grid.id(x - 1, y, z) as u64, -1.0));
+            row.push((grid.id(x - 1, y, z) as u64, offd));
         }
-        row.push((gid as u64, 6.0));
+        row.push((gid as u64, diag));
         if x + 1 < grid.nx {
-            row.push((grid.id(x + 1, y, z) as u64, -1.0));
+            row.push((grid.id(x + 1, y, z) as u64, offd));
         }
         if y + 1 < grid.ny {
-            row.push((grid.id(x, y + 1, z) as u64, -1.0));
+            row.push((grid.id(x, y + 1, z) as u64, offd));
         }
         if z + 1 < grid.nz {
-            row.push((grid.id(x, y, z + 1) as u64, -1.0));
+            row.push((grid.id(x, y, z + 1) as u64, offd));
         }
         b.push_row(&row);
     }
     b.finish()
+}
+
+/// 7-point Laplacian rows owned by `rank` (Dirichlet-eliminated exterior).
+pub fn grid_laplacian(grid: Grid3, rank: usize, np: usize) -> DistCsr {
+    stencil_operator(grid, rank, np, 6.0, -1.0)
+}
+
+/// Backward-Euler heat operator `A(dt) = M + dt·K` on the 7-point
+/// stencil: lumped unit mass on the diagonal plus the scaled Laplacian.
+/// The pattern is `dt`-independent (the diagonal is always present), so a
+/// time step changes *values only* — the `MAT_REUSE_MATRIX` regime the
+/// hierarchy refresh exercises.  With dyadic `dt` the values stay exact
+/// in f64, keeping refresh-vs-rebuild comparisons bitwise.
+pub fn heat_operator(grid: Grid3, rank: usize, np: usize, dt: f64) -> DistCsr {
+    stencil_operator(grid, rank, np, 1.0 + 6.0 * dt, -dt)
 }
 
 /// Trilinear interpolation from `coarse` to its refinement: even fine

@@ -5,6 +5,6 @@ mod grid;
 mod neutron;
 mod random;
 
-pub use grid::{grid_laplacian, trilinear_interp, Grid3, ModelProblem};
+pub use grid::{grid_laplacian, heat_operator, trilinear_interp, Grid3, ModelProblem};
 pub use neutron::{neutron_block_interp, neutron_block_operator, NeutronConfig};
 pub use random::random_dist_csr;

@@ -32,6 +32,7 @@ pub mod mat;
 pub mod mem;
 pub mod mg;
 pub mod ptap;
+pub mod reuse;
 pub mod runtime;
 pub mod spgemm;
 pub mod util;

@@ -12,8 +12,8 @@
 
 use galerkin_ptap::coordinator::{
     diff_bench, level_tables, model_problem_tables, neutron_tables, run_hierarchy_bench,
-    run_model_problem, run_neutron, write_bench_json, write_results, ModelProblemConfig,
-    NeutronConfigExp,
+    run_model_problem, run_neutron, run_timedep, timedep_table, write_bench_json, write_results,
+    ModelProblemConfig, NeutronConfigExp, TimedepConfig, TimedepResult, TimedepWorkload,
 };
 use galerkin_ptap::dist::{DistSpmv, DistVec, World};
 use galerkin_ptap::gen::{
@@ -96,6 +96,7 @@ fn main() {
         "neutron" => cmd_neutron(&args),
         "levels" => cmd_levels(&args),
         "solve" => cmd_solve(&args),
+        "timedep" => cmd_timedep(&args),
         "selfcheck" => cmd_selfcheck(&args),
         "external" => cmd_external(&args),
         "help" | "--help" | "-h" => print_help(),
@@ -118,10 +119,14 @@ fn print_help() {
            neutron        --grid N --groups G --np a,b,c [--cache] [--eq-limit N]  (Tables 7-8)\n\
            levels         --grid N --groups G                              (Tables 5-6)\n\
            solve          --coarse N --levels L --algo NAME --np P [--eq-limit N]  (MG-CG)\n\
+           timedep        --scenario heat|neutron --steps N [--refresh|--rebuild]\n\
+                          --coarse N --levels L --np P --algo NAME [--eq-limit N]\n\
+                          [--dt0 X --ramp X]   (implicit stepping: 1 symbolic build, N-1 refreshes)\n\
            selfcheck                                                       (PJRT kernels vs native)\n\
            external       --matrix F.mtx --np P [--algos LIST]            (PtAP on a MatrixMarket file)\n\n\
          ALGOS: allatonce | merged | two-step | all\n\
-         --eq-limit telescopes coarse levels onto ceil(rows/eq_limit) ranks (PCTelescope analog)"
+         --eq-limit telescopes coarse levels onto ceil(rows/eq_limit) ranks (PCTelescope analog)\n\
+         timedep --rebuild pays the full symbolic build every step (the baseline --refresh beats)"
     );
 }
 
@@ -160,14 +165,16 @@ fn cmd_model_problem(args: &Args) {
 
 /// CI's benchmark smoke: the model-problem experiment at one rank count,
 /// all three algorithms, plus a hierarchy-agglomeration cell pair
-/// (eq_limit off/on), dumped as a machine-diffable JSON artifact so the
-/// perf trajectory (modeled times, overlap windows, peak bytes, message
-/// counts, per-level α evidence) is recorded on every push.
+/// (eq_limit off/on) and a timedep refresh cell per algorithm
+/// (symbolic-build time vs per-refresh numeric time and bytes), dumped as
+/// a machine-diffable JSON artifact so the perf trajectory (modeled
+/// times, overlap windows, peak bytes, message counts, per-level α and
+/// solve-phase evidence, the reuse win) is recorded on every push.
 fn cmd_bench_smoke(args: &Args) {
     let coarse = Grid3::cube(args.usize_or("coarse", 8));
     let np = args.usize_or("np", 4);
     let repeats = args.usize_or("repeats", 3);
-    let out = args.kv.get("out").cloned().unwrap_or_else(|| "BENCH_pr3.json".to_string());
+    let out = args.kv.get("out").cloned().unwrap_or_else(|| "BENCH_pr4.json".to_string());
     println!(
         "bench smoke: coarse {}³ (fine {}³), np={np}, repeats={repeats}",
         coarse.nx,
@@ -212,7 +219,33 @@ fn cmd_bench_smoke(args: &Args) {
         );
         hier.push(h);
     }
-    match write_bench_json(&rows, &hier, std::path::Path::new(&out)) {
+    // refresh cells: the timedep heat scenario, one symbolic build +
+    // refreshes, per algorithm — the reuse win the gate watches
+    let mut refresh = Vec::new();
+    for &algo in &ALL_ALGOS {
+        let r = run_timedep(TimedepConfig {
+            workload: TimedepWorkload::Heat {
+                coarse: Grid3::cube(args.usize_or("hier-coarse", 3)),
+                levels: args.usize_or("hier-levels", 3),
+            },
+            np,
+            algo,
+            steps: args.usize_or("steps", 4),
+            dt0: 0.125,
+            ramp: 0.5,
+            eq_limit: None,
+            refresh: true,
+        });
+        println!(
+            "  refresh {:<10} sym_build {:>8} num_refresh {:>8} bytes/refresh {:>9.0}",
+            algo.name(),
+            galerkin_ptap::util::fmt_secs(r.build_time_sym),
+            galerkin_ptap::util::fmt_secs(TimedepResult::mean(&r.update_ptap_num)),
+            TimedepResult::mean_u64(&r.update_bytes),
+        );
+        refresh.push(r);
+    }
+    match write_bench_json(&rows, &hier, &refresh, std::path::Path::new(&out)) {
         Ok(()) => println!("wrote {out}"),
         Err(e) => {
             eprintln!("FAIL: could not write {out}: {e}");
@@ -332,7 +365,7 @@ fn cmd_solve(args: &Args) {
             &comm,
             a0.clone(),
             &Coarsening::Geometric { grids: grids2.clone() },
-            HierarchyConfig { algo, cache: false, numeric_repeats: 1, eq_limit },
+            HierarchyConfig { algo, cache: false, numeric_repeats: 1, eq_limit, retain: false },
             &tracker,
         );
         let active = h.active_ranks.clone();
@@ -357,6 +390,82 @@ fn cmd_solve(args: &Args) {
     for (k, r) in res.residuals.iter().enumerate() {
         println!("  iter {k:>3}  ||r|| = {r:.3e}");
     }
+}
+
+/// Time-dependent workload: N implicit steps with one symbolic hierarchy
+/// build and N−1 numeric refreshes (`--rebuild` pays the full build every
+/// step instead — the baseline).  Scenarios: `heat` (backward Euler,
+/// `A(t) = M + dt·K`, dt ramping) and `neutron` (lagged-coefficient
+/// nonlinear iteration on the transport analog).
+fn cmd_timedep(args: &Args) {
+    let steps = args.usize_or("steps", 5);
+    let np = args.usize_or("np", 4);
+    let refresh = !args.flag("rebuild");
+    let algo = args
+        .kv
+        .get("algo")
+        .map(|s| Algo::parse(s).expect("algo"))
+        .unwrap_or(Algo::AllAtOnce);
+    let dt0: f64 = args.kv.get("dt0").map(|v| v.parse().expect("dt0")).unwrap_or(0.125);
+    let ramp: f64 = args.kv.get("ramp").map(|v| v.parse().expect("ramp")).unwrap_or(0.5);
+    let scenario = args.kv.get("scenario").map(|s| s.as_str()).unwrap_or("heat").to_string();
+    let workload = match scenario.as_str() {
+        "heat" => TimedepWorkload::Heat {
+            coarse: Grid3::cube(args.usize_or("coarse", 8)),
+            levels: args.usize_or("levels", 3),
+        },
+        "neutron" => TimedepWorkload::NeutronLagged {
+            grid: Grid3::cube(args.usize_or("grid", 6)),
+            groups: args.usize_or("groups", 4),
+            max_levels: args.usize_or("max-levels", 8),
+        },
+        other => panic!("unknown scenario {other:?} (heat | neutron)"),
+    };
+    println!(
+        "timedep {scenario}: {} steps on {} ranks, {} mode, {}{}",
+        steps,
+        np,
+        if refresh { "refresh" } else { "rebuild" },
+        algo.name(),
+        match args.opt_usize("eq-limit") {
+            Some(eq) => format!(", eq_limit {eq}"),
+            None => String::new(),
+        }
+    );
+    let r = run_timedep(TimedepConfig {
+        workload,
+        np,
+        algo,
+        steps,
+        dt0,
+        ramp,
+        eq_limit: args.opt_usize("eq-limit"),
+        refresh,
+    });
+    let t = timedep_table(&r);
+    println!("{}", t.render());
+    let num_mean = TimedepResult::mean(&r.update_ptap_num);
+    println!(
+        "levels={} build: sym {} + num {} ({} msgs, {} bytes)\n\
+         per-{}: ptap numeric {} ({:.0} msgs, {:.0} bytes)  |  final rel residual {:.2e}",
+        r.n_levels,
+        galerkin_ptap::util::fmt_secs(r.build_time_sym),
+        galerkin_ptap::util::fmt_secs(r.build_time_num),
+        r.build_msgs,
+        r.build_bytes,
+        if refresh { "refresh" } else { "rebuild" },
+        galerkin_ptap::util::fmt_secs(num_mean),
+        TimedepResult::mean_u64(&r.update_msgs),
+        TimedepResult::mean_u64(&r.update_bytes),
+        r.final_rel_residual,
+    );
+    if refresh && num_mean > 0.0 {
+        println!(
+            "reuse win: per-refresh numeric time is {:.1}x the one-off symbolic build",
+            num_mean / r.build_time_sym.max(f64::MIN_POSITIVE)
+        );
+    }
+    write_results(&t, &format!("timedep_{scenario}"));
 }
 
 /// Run the triple products on an external MatrixMarket operator with an

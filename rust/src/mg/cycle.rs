@@ -107,6 +107,19 @@ struct LevelCtx {
     r: DistVec,
     e: DistVec,
     work: DistVec,
+    // Cached coarse-space cycle scratch, alive between applications (the
+    // ROADMAP "coarse-grid caching" allocation half): `Option` so the
+    // recursive cycle can take a buffer out while it crosses the level.
+    /// Restricted rhs / coarse correction in this level's coarse layout.
+    bc: Option<DistVec>,
+    ec: Option<DistVec>,
+    /// Their sub-communicator-side twins at a telescope boundary
+    /// (active ranks only).
+    bc_sub: Option<DistVec>,
+    ec_sub: Option<DistVec>,
+    /// W-cycle second-visit scratch in *this* level's row layout.
+    rc2: Option<DistVec>,
+    ec2: Option<DistVec>,
 }
 
 /// A ready-to-apply V-cycle preconditioner.
@@ -129,28 +142,43 @@ impl MgPreconditioner {
         let nlev = hierarchy.levels.len();
         for (li, lvl) in hierarchy.levels.iter().enumerate() {
             let spmv = DistSpmv::new(&cur, &lvl.a);
-            // the true coarsest level under the direct-solve threshold
-            // never smooths: skip its power iteration (no coarse-level
-            // epochs wasted on an unused ω)
             let direct =
                 li + 1 == nlev && lvl.p.is_none() && lvl.a.global_nrows() <= opts.max_direct;
-            let smoother = if direct {
-                Relax::Jacobi(JacobiSmoother::new(&lvl.a, 1.0))
-            } else {
-                let omega = match opts.omega {
-                    Some(w) => w,
-                    None => chebyshev_bounds(&cur, &lvl.a, &spmv, 10).1,
-                };
-                match opts.smoother {
-                    SmootherKind::Jacobi => Relax::Jacobi(JacobiSmoother::new(&lvl.a, omega)),
-                    SmootherKind::Chebyshev(deg) => {
-                        Relax::Chebyshev(ChebyshevSmoother::new(&cur, &lvl.a, &spmv, deg))
-                    }
-                    SmootherKind::HybridSor => Relax::Sor(HybridSorSmoother::new(&lvl.a, 1.0)),
-                }
-            };
+            let smoother = Self::build_relax(&cur, &lvl.a, &spmv, &opts, direct);
             let transfer = lvl.p.as_ref().map(|p| Transfer::new(&cur, p));
             let layout = lvl.a.row_layout.clone();
+            // coarse-space scratch: kept alive between cycle applications
+            let (bc, ec) = match &lvl.p {
+                Some(p) => {
+                    let cl = p.col_layout.clone();
+                    (
+                        Some(DistVec::zeros(cl.clone(), cur.rank())),
+                        Some(DistVec::zeros(cl, cur.rank())),
+                    )
+                }
+                None => (None, None),
+            };
+            let (bc_sub, ec_sub) = match &lvl.telescope {
+                Some(tel) if tel.subcomm.is_some() => {
+                    let sc = tel.subcomm.as_ref().unwrap();
+                    let nl = tel.coarse.new_layout().clone();
+                    (
+                        Some(DistVec::zeros(nl.clone(), sc.rank())),
+                        Some(DistVec::zeros(nl, sc.rank())),
+                    )
+                }
+                _ => (None, None),
+            };
+            // second-visit scratch only exists for W cycles (V never
+            // calls w_revisit; don't hold dead vectors per level)
+            let (rc2, ec2) = if opts.cycle == CycleType::W && li > 0 {
+                (
+                    Some(DistVec::zeros(layout.clone(), cur.rank())),
+                    Some(DistVec::zeros(layout.clone(), cur.rank())),
+                )
+            } else {
+                (None, None)
+            };
             levels.push(LevelCtx {
                 comm: cur.clone(),
                 telescope: lvl.telescope.clone(),
@@ -160,6 +188,12 @@ impl MgPreconditioner {
                 r: DistVec::zeros(layout.clone(), cur.rank()),
                 e: DistVec::zeros(layout.clone(), cur.rank()),
                 work: DistVec::zeros(layout, cur.rank()),
+                bc,
+                ec,
+                bc_sub,
+                ec_sub,
+                rc2,
+                ec2,
             });
             if let Some(tel) = &lvl.telescope {
                 match &tel.subcomm {
@@ -169,37 +203,108 @@ impl MgPreconditioner {
                 }
             }
         }
-        // coarsest: redundant dense inverse, built only on ranks holding
-        // the true coarsest level (idle ranks' lists end at a boundary)
-        let last = hierarchy.levels.last().unwrap();
-        let (mut coarse_inv, mut coarse_n) = (None, 0);
-        if last.p.is_none() {
-            let ccomm = &levels.last().unwrap().comm;
-            let n = last.a.global_nrows();
-            coarse_n = n;
-            if n <= opts.max_direct {
-                let g = last.a.gather_global(ccomm);
-                let mut dense = vec![0.0; n * n];
-                for i in 0..n {
-                    let (cols, vals) = g.row(i);
-                    for (&c, &v) in cols.iter().zip(vals) {
-                        dense[i * n + c as usize] = v;
-                    }
-                }
-                coarse_inv =
-                    Some(block_invert(n, &dense).expect("coarsest operator is singular"));
-            }
-        }
+        let (coarse_inv, coarse_n) =
+            Self::build_coarse_inv(&levels, &hierarchy, opts.max_direct);
         MgPreconditioner { hierarchy, levels, coarse_inv, coarse_n, opts }
     }
 
+    /// One level's relaxation, built from the operator's current values.
+    /// The true coarsest level under the direct-solve threshold never
+    /// smooths: skip its power iteration (no coarse-level epochs wasted
+    /// on an unused ω).
+    fn build_relax(
+        comm: &Comm,
+        a: &crate::dist::DistCsr,
+        spmv: &DistSpmv,
+        opts: &MgOpts,
+        direct: bool,
+    ) -> Relax {
+        if direct {
+            return Relax::Jacobi(JacobiSmoother::new(a, 1.0));
+        }
+        let omega = match opts.omega {
+            Some(w) => w,
+            None => chebyshev_bounds(comm, a, spmv, 10).1,
+        };
+        match opts.smoother {
+            SmootherKind::Jacobi => Relax::Jacobi(JacobiSmoother::new(a, omega)),
+            SmootherKind::Chebyshev(deg) => {
+                Relax::Chebyshev(ChebyshevSmoother::new(comm, a, spmv, deg))
+            }
+            SmootherKind::HybridSor => Relax::Sor(HybridSorSmoother::new(a, 1.0)),
+        }
+    }
+
+    /// Coarsest-level redundant dense inverse, built only on ranks
+    /// holding the true coarsest level (idle ranks' lists end at a
+    /// boundary, whose level still has a `p`).
+    fn build_coarse_inv(
+        levels: &[LevelCtx],
+        hierarchy: &Hierarchy,
+        max_direct: usize,
+    ) -> (Option<Vec<f64>>, usize) {
+        let last = hierarchy.levels.last().unwrap();
+        if last.p.is_some() {
+            return (None, 0);
+        }
+        let ccomm = &levels.last().unwrap().comm;
+        let n = last.a.global_nrows();
+        if n > max_direct {
+            return (None, n);
+        }
+        let g = last.a.gather_global(ccomm);
+        let mut dense = vec![0.0; n * n];
+        for i in 0..n {
+            let (cols, vals) = g.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                dense[i * n + c as usize] = v;
+            }
+        }
+        (Some(block_invert(n, &dense).expect("coarsest operator is singular")), n)
+    }
+
+    /// Numeric-only re-setup after the hierarchy's operator values were
+    /// refreshed in place (collective, level order — the same collective
+    /// sequence as [`MgPreconditioner::new`], so a refreshed
+    /// preconditioner is bit-identical to a fresh one): rebuild each
+    /// level's smoother (diagonal extraction and, when auto-tuned, the ω
+    /// power iteration) and re-factorize the coarsest direct solve.
+    /// Communication plans, transfers and cycle scratch are reused — no
+    /// pattern work, no re-allocation.
+    pub fn refresh_solver_state(&mut self) {
+        let nlev = self.hierarchy.levels.len();
+        for li in 0..self.levels.len() {
+            let lvl = &self.hierarchy.levels[li];
+            let ctx = &mut self.levels[li];
+            let direct = li + 1 == nlev
+                && lvl.p.is_none()
+                && lvl.a.global_nrows() <= self.opts.max_direct;
+            ctx.smoother = Self::build_relax(&ctx.comm, &lvl.a, &ctx.spmv, &self.opts, direct);
+        }
+        let (ci, cn) = Self::build_coarse_inv(&self.levels, &self.hierarchy, self.opts.max_direct);
+        self.coarse_inv = ci;
+        self.coarse_n = cn;
+    }
+
     /// Total bytes of solver state beyond the matrices (work vectors,
-    /// smoothers, coarse inverse).
+    /// cached cycle scratch, smoothers, coarse inverse).
     pub fn bytes(&self) -> u64 {
+        let opt = |v: &Option<DistVec>| v.as_ref().map_or(0, |x| x.bytes());
         let per_level: u64 = self
             .levels
             .iter()
-            .map(|l| l.r.bytes() + l.e.bytes() + l.work.bytes() + l.smoother.bytes())
+            .map(|l| {
+                l.r.bytes()
+                    + l.e.bytes()
+                    + l.work.bytes()
+                    + l.smoother.bytes()
+                    + opt(&l.bc)
+                    + opt(&l.ec)
+                    + opt(&l.bc_sub)
+                    + opt(&l.ec_sub)
+                    + opt(&l.rc2)
+                    + opt(&l.ec2)
+            })
             .sum();
         per_level + self.coarse_inv.as_ref().map_or(0, |m| (m.len() * 8) as u64)
     }
@@ -239,9 +344,9 @@ impl MgPreconditioner {
                 lvl.r.vals[i] -= lvl.work.vals[i];
             }
         }
-        // restrict to coarse rhs (in this level's coarse layout)
-        let p_col_layout = self.hierarchy.levels[k].p.as_ref().unwrap().col_layout.clone();
-        let mut bc = DistVec::zeros(p_col_layout, comm.rank());
+        // restrict to coarse rhs (cached coarse-layout scratch — taken
+        // out for the crossing, put back after prolongation)
+        let mut bc = self.levels[k].bc.take().expect("coarse rhs scratch in use");
         {
             let p = self.hierarchy.levels[k].p.as_ref().unwrap();
             let lvl = &self.levels[k];
@@ -256,30 +361,35 @@ impl MgPreconditioner {
         // still join the second visit's redistribution epochs.
         let w_revisit = self.opts.cycle == CycleType::W
             && self.hierarchy.levels.get(k + 1).is_some_and(|l| l.p.is_some());
-        let ec = if let Some(tel) = self.levels[k].telescope.clone() {
+        let mut ec = self.levels[k].ec.take().expect("coarse correction scratch in use");
+        if let Some(tel) = self.levels[k].telescope.clone() {
             // scatter the rhs into the subcomm; idle ranks skip straight
             // to the gather below
-            let bc_sub = tel.coarse.scatter_vec(comm, &bc);
-            let ec_sub = match (&tel.subcomm, bc_sub) {
-                (Some(_), Some(bc_sub)) => {
-                    let mut ec_sub = DistVec::zeros(bc_sub.layout.clone(), bc_sub.rank);
-                    self.cycle(k + 1, &bc_sub, &mut ec_sub);
+            let mut bc_sub = self.levels[k].bc_sub.take();
+            tel.coarse.scatter_vec_into(comm, &bc, bc_sub.as_mut());
+            let ec_sub = match (&tel.subcomm, bc_sub.as_ref()) {
+                (Some(_), Some(bc_s)) => {
+                    let mut ec_sub =
+                        self.levels[k].ec_sub.take().expect("subcomm scratch in use");
+                    ec_sub.fill(0.0);
+                    self.cycle(k + 1, bc_s, &mut ec_sub);
                     if w_revisit {
-                        self.w_revisit(k, &bc_sub, &mut ec_sub);
+                        self.w_revisit(k, bc_s, &mut ec_sub);
                     }
                     Some(ec_sub)
                 }
                 _ => None,
             };
-            tel.coarse.gather_vec(comm, ec_sub.as_ref())
+            tel.coarse.gather_vec_into(comm, ec_sub.as_ref(), &mut ec);
+            self.levels[k].ec_sub = ec_sub;
+            self.levels[k].bc_sub = bc_sub;
         } else {
-            let mut ec = DistVec::zeros(bc.layout.clone(), comm.rank());
+            ec.fill(0.0);
             self.cycle(k + 1, &bc, &mut ec);
             if w_revisit {
                 self.w_revisit(k, &bc, &mut ec);
             }
-            ec
-        };
+        }
         // prolongate and correct
         {
             let p = self.hierarchy.levels[k].p.as_ref().unwrap();
@@ -287,6 +397,8 @@ impl MgPreconditioner {
             lvl.e.fill(0.0);
             lvl.transfer.as_ref().unwrap().prolong_add(comm, p, &ec, &mut lvl.e);
         }
+        self.levels[k].bc = Some(bc);
+        self.levels[k].ec = Some(ec);
         for i in 0..x.vals.len() {
             x.vals[i] += self.levels[k].e.vals[i];
         }
@@ -303,9 +415,9 @@ impl MgPreconditioner {
     /// `k + 1`'s layout (inside the subcomm when level `k` telescopes).
     fn w_revisit(&mut self, k: usize, bc: &DistVec, ec: &mut DistVec) {
         let comm = self.levels[k + 1].comm.clone();
-        let ac = &self.hierarchy.levels[k + 1].a;
-        let mut rc2 = DistVec::zeros(bc.layout.clone(), bc.rank);
+        let mut rc2 = self.levels[k + 1].rc2.take().expect("W-cycle rhs scratch in use");
         {
+            let ac = &self.hierarchy.levels[k + 1].a;
             let lvl = &mut self.levels[k + 1];
             lvl.spmv.apply(&comm, ac, ec, &mut lvl.work);
             rc2.vals.clone_from(&bc.vals);
@@ -313,9 +425,12 @@ impl MgPreconditioner {
                 rc2.vals[i] -= lvl.work.vals[i];
             }
         }
-        let mut ec2 = DistVec::zeros(bc.layout.clone(), bc.rank);
+        let mut ec2 = self.levels[k + 1].ec2.take().expect("W-cycle correction scratch in use");
+        ec2.fill(0.0);
         self.cycle(k + 1, &rc2, &mut ec2);
         ec.axpy(1.0, &ec2);
+        self.levels[k + 1].rc2 = Some(rc2);
+        self.levels[k + 1].ec2 = Some(ec2);
     }
 
     fn coarse_solve(&mut self, comm: &Comm, k: usize, b: &DistVec, x: &mut DistVec) {

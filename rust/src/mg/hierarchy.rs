@@ -19,6 +19,7 @@ use crate::dist::{Comm, CommStats, DistCsr};
 use crate::gen::{trilinear_interp, Grid3};
 use crate::mem::{Cat, MemTracker};
 use crate::ptap::{Algo, Ptap, PtapStats};
+use crate::reuse::RetainedLevel;
 
 use super::aggregate::{aggregate_interp, AggregateOpts};
 
@@ -47,11 +48,23 @@ pub struct HierarchyConfig {
     /// `eq_limit × active_ranks` global rows telescopes onto
     /// `⌈rows / eq_limit⌉` ranks.  `None` disables agglomeration.
     pub eq_limit: Option<usize>,
+    /// Retain everything a hierarchy-wide numeric refresh needs (the
+    /// `MAT_REUSE_MATRIX` analog): each level's triple-product context
+    /// *and* the telescoped `A`/`P` copies, collected into
+    /// [`Hierarchy::retained`] for [`crate::reuse::HierarchyRefresher`].
+    /// Supersedes `cache` (the ops live in `retained`, not `cached_ops`).
+    pub retain: bool,
 }
 
 impl Default for HierarchyConfig {
     fn default() -> Self {
-        HierarchyConfig { algo: Algo::AllAtOnce, cache: false, numeric_repeats: 1, eq_limit: None }
+        HierarchyConfig {
+            algo: Algo::AllAtOnce,
+            cache: false,
+            numeric_repeats: 1,
+            eq_limit: None,
+            retain: false,
+        }
     }
 }
 
@@ -108,6 +121,10 @@ pub struct Hierarchy {
     /// This rank's traffic spent redistributing operators across
     /// telescope boundaries (split + scatter epochs).
     pub redist_comm: CommStats,
+    /// One entry per built triple product when
+    /// [`HierarchyConfig::retain`] is set: the symbolic state a
+    /// hierarchy-wide numeric refresh replays (empty otherwise).
+    pub retained: Vec<RetainedLevel>,
 }
 
 impl Hierarchy {
@@ -169,6 +186,7 @@ pub fn build_hierarchy(
     let mut redist_comm = CommStats::default();
     let mut total = PtapStats::default();
     let mut cached_ops = Vec::new();
+    let mut retained: Vec<RetainedLevel> = Vec::new();
 
     let mut a = a0;
     let mut k = 0usize;
@@ -212,15 +230,19 @@ pub fn build_hierarchy(
             let before = cur.stats_global();
             let (tel, ops) = telescope_operators(&cur, &a, &p, kact);
             let delta = cur.stats_global().since(before);
-            redist_comm.msgs += delta.msgs;
-            redist_comm.bytes += delta.bytes;
+            redist_comm.merge(delta);
             let telescoped_bytes = ops.as_ref().map_or(0, |(at, pt)| at.bytes() + pt.bytes());
             tracker.alloc(Cat::Comm, tel.bytes() + telescoped_bytes);
             let subcomm = tel.subcomm.clone();
             levels.push(Level { a, p: Some(p), telescope: Some(Rc::new(tel)) });
             active_ranks.push(kact);
             let (Some(sc), Some((a_t, p_t))) = (subcomm, ops) else {
-                // idle rank: its hierarchy ends at the boundary level
+                // idle rank: its hierarchy ends at the boundary level (a
+                // retain-mode refresh still replays the boundary's
+                // value-only redistribution, so mark the slot)
+                if cfg.retain {
+                    retained.push(RetainedLevel { op: None, tele_ops: None });
+                }
                 break;
             };
             let before = sc.stats_global();
@@ -231,17 +253,23 @@ pub fn build_hierarchy(
             let c = op.extract_c();
             tracker.alloc(Cat::MatC, c.bytes());
             total = sum_stats(total, op.stats);
-            if cfg.cache {
-                cached_ops.push(op);
-            } else {
-                drop(op);
-            }
-            // the telescoped copies served the build; release them
-            // (value refreshes would reuse RedistPlan::refresh_csr)
-            tracker.free(Cat::Comm, telescoped_bytes);
-            drop((a_t, p_t));
             op_stats_v.push(op_stats(&sc, &c));
             level_comm.push(sc.stats_global().since(before));
+            if cfg.retain {
+                // keep the op, the telescoped copies and their Comm
+                // charge alive: the refresh resends values over the
+                // retained fine plan and re-runs numeric in place
+                retained.push(RetainedLevel { op: Some(op), tele_ops: Some((a_t, p_t)) });
+            } else {
+                if cfg.cache {
+                    cached_ops.push(op);
+                } else {
+                    drop(op);
+                }
+                // the telescoped copies served the build; release them
+                tracker.free(Cat::Comm, telescoped_bytes);
+                drop((a_t, p_t));
+            }
             cur = sc;
             a = c;
         } else {
@@ -255,7 +283,9 @@ pub fn build_hierarchy(
             let c = op.extract_c();
             tracker.alloc(Cat::MatC, c.bytes());
             total = sum_stats(total, op.stats);
-            if cfg.cache {
+            if cfg.retain {
+                retained.push(RetainedLevel { op: Some(op), tele_ops: None });
+            } else if cfg.cache {
                 cached_ops.push(op);
             } else {
                 drop(op);
@@ -278,19 +308,12 @@ pub fn build_hierarchy(
         active_ranks,
         level_comm,
         redist_comm,
+        retained,
     }
 }
 
 fn sum_stats(mut acc: PtapStats, s: PtapStats) -> PtapStats {
-    acc.time_sym += s.time_sym;
-    acc.time_num += s.time_num;
-    acc.num_calls += s.num_calls;
-    acc.sym_msgs += s.sym_msgs;
-    acc.sym_bytes += s.sym_bytes;
-    acc.num_msgs += s.num_msgs;
-    acc.num_bytes += s.num_bytes;
-    acc.sym_overlap += s.sym_overlap;
-    acc.num_overlap += s.num_overlap;
+    acc.add(s);
     acc
 }
 

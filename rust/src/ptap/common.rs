@@ -38,6 +38,39 @@ pub fn comm_model_enabled() -> bool {
 }
 
 impl PtapStats {
+    /// Field-wise accumulation (level sums, refresh totals).
+    pub fn add(&mut self, s: PtapStats) {
+        self.time_sym += s.time_sym;
+        self.time_num += s.time_num;
+        self.num_calls += s.num_calls;
+        self.sym_msgs += s.sym_msgs;
+        self.sym_bytes += s.sym_bytes;
+        self.num_msgs += s.num_msgs;
+        self.num_bytes += s.num_bytes;
+        self.sym_overlap += s.sym_overlap;
+        self.num_overlap += s.num_overlap;
+    }
+
+    /// Field-wise delta since `earlier` (counters are monotone).
+    pub fn since(&self, earlier: PtapStats) -> PtapStats {
+        PtapStats {
+            time_sym: self.time_sym - earlier.time_sym,
+            time_num: self.time_num - earlier.time_num,
+            num_calls: self.num_calls - earlier.num_calls,
+            sym_msgs: self.sym_msgs - earlier.sym_msgs,
+            sym_bytes: self.sym_bytes - earlier.sym_bytes,
+            num_msgs: self.num_msgs - earlier.num_msgs,
+            num_bytes: self.num_bytes - earlier.num_bytes,
+            sym_overlap: self.sym_overlap - earlier.sym_overlap,
+            num_overlap: self.num_overlap - earlier.num_overlap,
+        }
+    }
+
+    /// Total overlap window across both phases.
+    pub fn overlap_total(&self) -> f64 {
+        self.sym_overlap + self.num_overlap
+    }
+
     /// Modeled symbolic time: busy time plus the α-β communication model,
     /// crediting the measured overlap window (communication hidden behind
     /// compute costs nothing up to the window's length).

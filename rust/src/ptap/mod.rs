@@ -25,7 +25,7 @@ mod merged;
 pub mod rap;
 mod two_step;
 
-pub use common::{COutput, PtapStats};
+pub use common::{comm_model_enabled, COutput, PtapStats};
 pub use rap::rap;
 
 use crate::dist::{Comm, DistCsr, PrMat, RowGatherPlan};

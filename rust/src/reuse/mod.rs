@@ -1,0 +1,53 @@
+//! Hierarchy-wide numeric reuse — the `MAT_REUSE_MATRIX` analog.
+//!
+//! The paper's premise is "symbolic once, numeric many", and
+//! [`crate::ptap::Ptap`] honors it per triple product — but a one-shot
+//! [`crate::mg::build_hierarchy`] throws every plan away, so a solver
+//! whose operator *values* change (time stepping, lagged nonlinear
+//! coefficients) pays the full symbolic cost again at every step.  This
+//! subsystem closes that gap the way PETSc's `MAT_REUSE_MATRIX` does for
+//! `MatPtAP`/Galerkin rebuilds:
+//!
+//! - a `retain`-mode build ([`crate::mg::HierarchyConfig::retain`])
+//!   collects one [`RetainedLevel`] per triple product — the `Ptap` op
+//!   (gather plan, gathered `P̃_r` pattern, preallocated `C`, scratch)
+//!   plus, at telescope boundaries, the sub-communicator-side `A`/`P`
+//!   copies that the one-shot build used to drop;
+//! - [`HierarchyRefresher::refresh`] re-runs *only the numeric halves*
+//!   level by level: [`crate::agglomerate::RedistPlan::refresh_csr`]
+//!   value scatters across telescope boundaries, [`crate::ptap::Ptap::numeric`]
+//!   for each coarse operator, then smoother re-setup (diagonal
+//!   extraction, ω power iteration) and the coarsest direct
+//!   re-factorization on the deepest scope — no symbolic hash tables, no
+//!   pattern traffic, no re-allocation of cycle scratch;
+//! - every refresh appends a [`RefreshStats`] record, so the
+//!   symbolic-vs-numeric cost split the paper reports per product becomes
+//!   measurable end to end across the solver lifecycle.
+
+mod refresher;
+
+pub use refresher::{HierarchyRefresher, RefreshStats};
+
+use crate::dist::DistCsr;
+use crate::ptap::Ptap;
+
+/// Symbolic state retained for one built triple product (one per level
+/// that has an interpolation), aligned with the hierarchy's level index.
+pub struct RetainedLevel {
+    /// The triple-product context whose `numeric` the refresh replays.
+    /// `None` only on an idle rank's telescope-boundary slot (it joins
+    /// the boundary's value redistribution but runs no product).
+    pub op: Option<Ptap>,
+    /// The telescoped `A`/`P` copies living in the sub-communicator's
+    /// layouts (active ranks of a telescoped level; `None` elsewhere).
+    /// `refresh_csr` overwrites `A`'s values in place; `P` is structural
+    /// and never resent.
+    pub tele_ops: Option<(DistCsr, DistCsr)>,
+}
+
+impl RetainedLevel {
+    /// Heap bytes of the retained copies (the op accounts for itself).
+    pub fn tele_bytes(&self) -> u64 {
+        self.tele_ops.as_ref().map_or(0, |(a, p)| a.bytes() + p.bytes())
+    }
+}

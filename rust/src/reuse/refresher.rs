@@ -1,0 +1,165 @@
+//! The refresher: owns the preconditioner plus the retained symbolic
+//! state and replays the numeric halves when the fine operator's values
+//! change.
+
+use crate::dist::{Comm, CommStats, DistCsr};
+use crate::mem::MemTracker;
+use crate::mg::{Hierarchy, MgOpts, MgPreconditioner};
+use crate::ptap::PtapStats;
+use crate::util::timer::BusyTimer;
+
+use super::RetainedLevel;
+
+/// Accounting for one [`HierarchyRefresher::refresh`] call — the numeric
+/// side of the paper's symbolic/numeric split, measured across the whole
+/// hierarchy instead of one product.
+#[derive(Debug, Clone, Copy)]
+pub struct RefreshStats {
+    /// Busy CPU seconds of the whole refresh on this rank.
+    pub time_busy: f64,
+    /// Rank-wide traffic of the refresh (all communicators: value
+    /// gathers, numeric scatters, boundary redistributions, smoother
+    /// collectives, the coarse re-factorization gather).
+    pub comm: CommStats,
+    /// The slice of `comm` spent resending operator values across
+    /// telescope boundaries over the retained fine plans.
+    pub redist: CommStats,
+    /// Triple-product stats delta over the refresh.  By construction its
+    /// symbolic fields are zero — the refresh runs no symbolic phase.
+    pub ptap: PtapStats,
+    /// Busy time plus the α-β model over the refresh traffic, crediting
+    /// the numeric overlap windows.
+    pub modeled_secs: f64,
+    /// Tracker bytes currently held after the refresh (no growth vs the
+    /// build: everything was preallocated).
+    pub mem_current: u64,
+}
+
+/// Hierarchy-wide numeric refresher (`MAT_REUSE_MATRIX` analog): wraps a
+/// ready [`MgPreconditioner`] built from a `retain`-mode hierarchy and
+/// re-runs only numeric work when the fine operator's values change.
+pub struct HierarchyRefresher {
+    pc: MgPreconditioner,
+    retained: Vec<RetainedLevel>,
+    tracker: MemTracker,
+    /// One record per completed refresh, in call order.
+    pub refreshes: Vec<RefreshStats>,
+}
+
+fn ptap_sum(retained: &[RetainedLevel]) -> PtapStats {
+    let mut acc = PtapStats::default();
+    for op in retained.iter().filter_map(|r| r.op.as_ref()) {
+        acc.add(op.stats);
+    }
+    acc
+}
+
+impl HierarchyRefresher {
+    /// Take ownership of a `retain`-mode hierarchy, build the solver
+    /// state on it (collective), and stand ready to refresh.  Panics if
+    /// the hierarchy was built without [`crate::mg::HierarchyConfig::retain`].
+    pub fn new(
+        comm: &Comm,
+        mut hierarchy: Hierarchy,
+        opts: MgOpts,
+        tracker: &MemTracker,
+    ) -> HierarchyRefresher {
+        let retained = std::mem::take(&mut hierarchy.retained);
+        let n_products = hierarchy.levels.iter().filter(|l| l.p.is_some()).count();
+        assert_eq!(
+            retained.len(),
+            n_products,
+            "hierarchy must be built with HierarchyConfig::retain for numeric reuse"
+        );
+        let pc = MgPreconditioner::new(comm, hierarchy, opts);
+        HierarchyRefresher { pc, retained, tracker: tracker.clone(), refreshes: Vec::new() }
+    }
+
+    /// The preconditioner (apply it, hand it to the Krylov solvers).
+    pub fn pc(&mut self) -> &mut MgPreconditioner {
+        &mut self.pc
+    }
+
+    pub fn hierarchy(&self) -> &Hierarchy {
+        &self.pc.hierarchy
+    }
+
+    /// Bytes held by the retained telescoped operator copies.
+    pub fn retained_tele_bytes(&self) -> u64 {
+        self.retained.iter().map(|r| r.tele_bytes()).sum()
+    }
+
+    /// Hierarchy-wide numeric refresh (collective over the finest
+    /// communicator): overwrite the finest operator's values from
+    /// `new_a0` (same pattern), then walk the levels re-running only the
+    /// numeric halves — value redistribution over the retained telescope
+    /// plans, `Ptap::numeric` per product, coarse-operator value copies —
+    /// and finally re-set-up the value-dependent solver state (smoother
+    /// diagonals/ω, coarsest factorization).  No symbolic phase runs and
+    /// no plan or cycle scratch is re-allocated; the refreshed hierarchy
+    /// is bit-identical to a from-scratch rebuild with the same values.
+    pub fn refresh(&mut self, comm: &Comm, new_a0: &DistCsr) -> &RefreshStats {
+        let before_global = comm.stats_global();
+        let before_ptap = ptap_sum(&self.retained);
+        let mut redist = CommStats::default();
+        let mut timer = BusyTimer::new();
+        timer.start();
+
+        let h = &mut self.pc.hierarchy;
+        h.levels[0].a.copy_values_from(new_a0);
+        let mut cur = comm.clone();
+        let nlev = h.levels.len();
+        for k in 0..nlev {
+            let (head, tail) = h.levels.split_at_mut(k + 1);
+            let lvl = &head[k];
+            let Some(p) = &lvl.p else {
+                break; // true coarsest level: nothing below to rebuild
+            };
+            let rl = &mut self.retained[k];
+            let c_new = if let Some(tel) = &lvl.telescope {
+                // value-only scatter of A over the retained fine plan
+                // (collective on the parent scope; P is structural and
+                // stays put)
+                let before = cur.stats_global();
+                tel.fine.refresh_csr(&cur, &lvl.a, rl.tele_ops.as_mut().map(|(a_t, _)| a_t));
+                redist.merge(cur.stats_global().since(before));
+                let Some(sc) = &tel.subcomm else {
+                    break; // idle rank: its refresh ends at the boundary
+                };
+                let (a_t, p_t) =
+                    rl.tele_ops.as_ref().expect("active rank retains its telescoped copies");
+                let op = rl.op.as_mut().expect("active rank retains its op");
+                op.numeric(sc, a_t, p_t);
+                let c = op.extract_c();
+                cur = sc.clone();
+                c
+            } else {
+                let op = rl.op.as_mut().expect("non-telescoped level retains its op");
+                op.numeric(&cur, &lvl.a, p);
+                op.extract_c()
+            };
+            tail[0].a.copy_values_from(&c_new);
+        }
+        // value-dependent solver state: smoother diagonals/ω bounds and
+        // the deepest scope's direct factorization (collective, same
+        // sequence as initial setup — the refreshed preconditioner is
+        // bit-identical to a fresh one)
+        self.pc.refresh_solver_state();
+        timer.stop();
+
+        let ptap = ptap_sum(&self.retained).since(before_ptap);
+        debug_assert_eq!(ptap.sym_msgs, 0, "refresh must not run a symbolic phase");
+        let delta = comm.stats_global().since(before_global);
+        let time_busy = timer.total();
+        let modeled_secs = time_busy + (delta.modeled_secs() - ptap.overlap_total()).max(0.0);
+        self.refreshes.push(RefreshStats {
+            time_busy,
+            comm: delta,
+            redist,
+            ptap,
+            modeled_secs,
+            mem_current: self.tracker.current_total(),
+        });
+        self.refreshes.last().unwrap()
+    }
+}

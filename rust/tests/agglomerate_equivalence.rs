@@ -38,7 +38,7 @@ fn run_case(
             &comm,
             a0.clone(),
             &Coarsening::Geometric { grids: grids.clone() },
-            HierarchyConfig { algo, cache: false, numeric_repeats: 1, eq_limit },
+            HierarchyConfig { algo, cache: false, numeric_repeats: 1, eq_limit, retain: false },
             &tracker,
         );
         let active = h.active_ranks.clone();
@@ -168,6 +168,7 @@ fn aggregation_hierarchy_telescopes_and_converges() {
                 cache: false,
                 numeric_repeats: 1,
                 eq_limit,
+                retain: false,
             };
             let h = build_hierarchy(&comm, a0, &coarsening, cfg, &tracker);
             (

@@ -19,7 +19,7 @@ fn build_geo(comm: &galerkin_ptap::dist::Comm, grids: &[Grid3], algo: Algo) -> H
         comm,
         a0,
         &Coarsening::Geometric { grids: grids.to_vec() },
-        HierarchyConfig { algo, cache: false, numeric_repeats: 1, eq_limit: None },
+        HierarchyConfig { algo, cache: false, numeric_repeats: 1, eq_limit: None, retain: false },
         &tracker,
     )
 }

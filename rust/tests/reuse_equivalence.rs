@@ -1,0 +1,276 @@
+//! Hierarchy-wide numeric refresh equivalence (`MAT_REUSE_MATRIX`
+//! analog): after the fine operator's *values* change, a refreshed
+//! hierarchy must be bit-identical — every level's coarse operator and
+//! the solver's residual history — to a from-scratch rebuild with the
+//! new values, across all three PtAP algorithms, with and without
+//! telescoping (including the k = 1 full-collapse layout), while sending
+//! strictly fewer bytes and running no symbolic phase at all.
+//!
+//! Bitwise equality is exact, not approximate: the heat operator
+//! `A(dt) = M + dt·K` uses dyadic `dt`, the trilinear interpolation has
+//! power-of-two weights, and every distributed fold is partition- and
+//! history-invariant, so the refreshed numeric pass reproduces the
+//! rebuilt one to the last bit.
+
+use galerkin_ptap::dist::{Comm, DistSpmv, DistVec, World};
+use galerkin_ptap::gen::{heat_operator, Grid3};
+use galerkin_ptap::mat::Csr;
+use galerkin_ptap::mem::MemTracker;
+use galerkin_ptap::mg::{
+    build_hierarchy, geometric_chain, pcg, Coarsening, Hierarchy, HierarchyConfig, MgOpts,
+    MgPreconditioner,
+};
+use galerkin_ptap::ptap::{Algo, ALL_ALGOS};
+use galerkin_ptap::reuse::HierarchyRefresher;
+
+/// Gather every level's operator on its own communicator scope (walking
+/// telescope boundaries exactly like the preconditioner does).
+fn gather_levels(h: &Hierarchy, comm: &Comm) -> Vec<Csr> {
+    let mut out = Vec::new();
+    let mut cur = comm.clone();
+    for lvl in &h.levels {
+        out.push(lvl.a.gather_global(&cur));
+        if let Some(tel) = &lvl.telescope {
+            match &tel.subcomm {
+                Some(sc) => cur = sc.clone(),
+                None => break,
+            }
+        }
+    }
+    out
+}
+
+/// Solve `A x = b` by MG-PCG and return the residual history bits.
+fn solve_bits(
+    comm: &Comm,
+    a: &galerkin_ptap::dist::DistCsr,
+    pc: &mut MgPreconditioner,
+) -> Vec<u64> {
+    let spmv = DistSpmv::new(comm, a);
+    let layout = a.row_layout.clone();
+    let b = DistVec::from_fn(layout.clone(), comm.rank(), |g| ((g % 13) as f64) - 6.0);
+    let mut x = DistVec::zeros(layout, comm.rank());
+    let res = pcg(comm, a, &spmv, &b, &mut x, Some(pc), 1e-10, 40);
+    res.residuals.iter().map(|r| r.to_bits()).collect()
+}
+
+/// Refresh path: build on `dts[0]`, refresh through `dts[1..]`, then
+/// gather operators + solve with the final values.  Returns rank 0's
+/// (ops, residual bits, last-refresh global bytes, symbolic-phase delta
+/// evidence, per-refresh tracker bytes).
+#[allow(clippy::type_complexity)]
+fn refreshed_case(
+    np: usize,
+    levels: usize,
+    algo: Algo,
+    eq_limit: Option<usize>,
+    dts: &[f64],
+) -> (Vec<Csr>, Vec<u64>, u64, (u64, u64, f64), Vec<u64>) {
+    let grids = geometric_chain(Grid3::cube(3), levels);
+    let fine = grids[0];
+    let w = World::new(np);
+    let mut out = w.run(|comm| {
+        let tracker = MemTracker::new();
+        let a0 = heat_operator(fine, comm.rank(), comm.size(), dts[0]);
+        let h = build_hierarchy(
+            &comm,
+            a0,
+            &Coarsening::Geometric { grids: grids.clone() },
+            HierarchyConfig {
+                algo,
+                cache: false,
+                numeric_repeats: 1,
+                eq_limit,
+                retain: true,
+            },
+            &tracker,
+        );
+        let mut rf = HierarchyRefresher::new(&comm, h, MgOpts::default(), &tracker);
+        let mut a_new = None;
+        for &dt in &dts[1..] {
+            let a = heat_operator(fine, comm.rank(), comm.size(), dt);
+            rf.refresh(&comm, &a);
+            a_new = Some(a);
+        }
+        let a_new = a_new.expect("at least one refresh");
+        let ops = gather_levels(rf.hierarchy(), &comm);
+        let bits = solve_bits(&comm, &a_new, rf.pc());
+        let last = rf.refreshes.last().unwrap();
+        let mem: Vec<u64> = rf.refreshes.iter().map(|r| r.mem_current).collect();
+        (
+            ops,
+            bits,
+            last.comm.bytes,
+            (last.ptap.sym_msgs, last.ptap.sym_bytes, last.ptap.time_sym),
+            mem,
+        )
+    });
+    out.remove(0)
+}
+
+/// Rebuild path: one-shot build directly on the final values.  Returns
+/// rank 0's (ops, residual bits, global build+setup bytes).
+fn rebuilt_case(
+    np: usize,
+    levels: usize,
+    algo: Algo,
+    eq_limit: Option<usize>,
+    dt: f64,
+) -> (Vec<Csr>, Vec<u64>, u64) {
+    let grids = geometric_chain(Grid3::cube(3), levels);
+    let fine = grids[0];
+    let w = World::new(np);
+    let mut out = w.run(|comm| {
+        let tracker = MemTracker::new();
+        let a0 = heat_operator(fine, comm.rank(), comm.size(), dt);
+        let before = comm.stats_global();
+        let h = build_hierarchy(
+            &comm,
+            a0.clone(),
+            &Coarsening::Geometric { grids: grids.clone() },
+            HierarchyConfig {
+                algo,
+                cache: false,
+                numeric_repeats: 1,
+                eq_limit,
+                retain: false,
+            },
+            &tracker,
+        );
+        let mut pc = MgPreconditioner::new(&comm, h, MgOpts::default());
+        let build_bytes = comm.stats_global().since(before).bytes;
+        let ops = gather_levels(&pc.hierarchy, &comm);
+        let bits = solve_bits(&comm, &a0, &mut pc);
+        (ops, bits, build_bytes)
+    });
+    out.remove(0)
+}
+
+fn check_case(np: usize, levels: usize, algo: Algo, eq_limit: Option<usize>) {
+    let dts = [0.25f64, 0.125];
+    let (ops_r, bits_r, refresh_bytes, (sym_msgs, sym_bytes, sym_time), _mem) =
+        refreshed_case(np, levels, algo, eq_limit, &dts);
+    let (ops_b, bits_b, build_bytes) = rebuilt_case(np, levels, algo, eq_limit, dts[1]);
+    assert_eq!(
+        ops_r.len(),
+        ops_b.len(),
+        "{algo:?} eq={eq_limit:?}: level counts diverged"
+    );
+    for (lvl, (r, b)) in ops_r.iter().zip(&ops_b).enumerate() {
+        assert_eq!(r, b, "{algo:?} eq={eq_limit:?}: level {lvl} operator bits moved");
+    }
+    assert_eq!(bits_r, bits_b, "{algo:?} eq={eq_limit:?}: residual history bits moved");
+    // no symbolic phase: zero symbolic traffic and zero symbolic time
+    assert_eq!(sym_msgs, 0, "{algo:?}: refresh ran a symbolic phase");
+    assert_eq!(sym_bytes, 0, "{algo:?}: refresh sent symbolic bytes");
+    assert_eq!(sym_time, 0.0, "{algo:?}: refresh spent symbolic time");
+    // strictly fewer bytes than a rebuild with the same values (np > 1:
+    // on one rank neither path sends anything)
+    if np > 1 {
+        assert!(
+            refresh_bytes < build_bytes,
+            "{algo:?} eq={eq_limit:?}: refresh bytes {refresh_bytes} !< build bytes {build_bytes}"
+        );
+    }
+}
+
+#[test]
+fn refresh_matches_rebuild_all_algorithms() {
+    for algo in ALL_ALGOS {
+        check_case(4, 3, algo, None);
+    }
+}
+
+#[test]
+fn refresh_matches_rebuild_telescoped() {
+    // eq_limit 64 telescopes the 125-row level onto 2 of 4 ranks: the
+    // refresh must replay the boundary's value-only redistribution over
+    // the retained fine plan, then run numeric inside the subcomm
+    for algo in ALL_ALGOS {
+        check_case(4, 3, algo, Some(64));
+    }
+}
+
+#[test]
+fn refresh_matches_rebuild_full_collapse() {
+    // eq_limit 200 collapses everything below the finest level onto one
+    // rank (k = 1): idle ranks' refreshes end at the boundary, the root
+    // re-runs every coarse product locally
+    for algo in ALL_ALGOS {
+        check_case(4, 3, algo, Some(200));
+    }
+}
+
+#[test]
+fn repeated_refreshes_hold_memory_flat() {
+    // refreshing must not leak: everything is preallocated once, so the
+    // tracker's current bytes are identical after every refresh
+    let dts = [0.25f64, 0.125, 0.5, 0.0625];
+    let (_, _, _, _, mem) = refreshed_case(2, 3, Algo::AllAtOnce, None, &dts);
+    assert_eq!(mem.len(), 3);
+    assert!(
+        mem.windows(2).all(|w| w[0] == w[1]),
+        "tracker bytes drifted across refreshes: {mem:?}"
+    );
+}
+
+#[test]
+fn timedep_driver_refresh_beats_rebuild_traffic() {
+    use galerkin_ptap::coordinator::{run_timedep, TimedepConfig, TimedepResult, TimedepWorkload};
+    let mk = |refresh: bool| {
+        run_timedep(TimedepConfig {
+            workload: TimedepWorkload::Heat { coarse: Grid3::cube(3), levels: 3 },
+            np: 4,
+            algo: Algo::AllAtOnce,
+            steps: 4,
+            dt0: 0.125,
+            ramp: 0.5,
+            eq_limit: None,
+            refresh,
+        })
+    };
+    let r = mk(true);
+    let b = mk(false);
+    assert_eq!(r.step_iters.len(), 4);
+    assert!(r.final_rel_residual < 1e-7, "heat stepping stalled: {}", r.final_rel_residual);
+    assert!(b.final_rel_residual < 1e-7);
+    // every refresh moves strictly fewer bytes than the rebuild baseline
+    for (i, (rb, bb)) in r.update_bytes.iter().zip(&b.update_bytes).enumerate() {
+        assert!(rb < bb, "step {i}: refresh bytes {rb} !< rebuild bytes {bb}");
+    }
+    // and the per-refresh numeric cost sits below the one-off symbolic
+    // build — the acceptance bar the bench artifact records
+    let num_mean = TimedepResult::mean(&r.update_ptap_num);
+    assert!(
+        num_mean < r.build_time_sym.max(f64::MIN_POSITIVE) + r.build_time_num,
+        "refresh numeric {num_mean} not below build cost {} + {}",
+        r.build_time_sym,
+        r.build_time_num
+    );
+}
+
+#[test]
+fn timedep_neutron_lagged_converges_with_refresh() {
+    use galerkin_ptap::coordinator::{run_timedep, TimedepConfig, TimedepWorkload};
+    let r = run_timedep(TimedepConfig {
+        workload: TimedepWorkload::NeutronLagged {
+            grid: Grid3::cube(5),
+            groups: 3,
+            max_levels: 6,
+        },
+        np: 2,
+        algo: Algo::Merged,
+        steps: 3,
+        dt0: 0.5,
+        ramp: 1.0,
+        eq_limit: None,
+        refresh: true,
+    });
+    assert_eq!(r.step_iters.len(), 3);
+    assert!(r.n_levels >= 2);
+    assert!(
+        r.final_rel_residual < 1e-6,
+        "lagged neutron iteration stalled: {}",
+        r.final_rel_residual
+    );
+}
