@@ -11,7 +11,7 @@
 
 use std::time::Instant;
 
-use galerkin_ptap::dist::{DistSpmv, DistVec, World};
+use galerkin_ptap::dist::{CsrOperator, DistSpmv, DistVec, World};
 use galerkin_ptap::gen::{grid_laplacian, Grid3};
 use galerkin_ptap::mem::{Cat, MemTracker};
 use galerkin_ptap::mg::{
@@ -72,8 +72,8 @@ fn main() {
             },
             &tracker,
         );
-        let c1 = h.levels.last().unwrap().a.gather_global(&comm);
-        let c2 = h2.levels.last().unwrap().a.gather_global(&comm);
+        let c1 = h.levels.last().unwrap().a.csr().gather_global(&comm);
+        let c2 = h2.levels.last().unwrap().a.csr().gather_global(&comm);
         let hierarchy_diff = c1.max_abs_diff(&c2);
         drop(h2);
 
@@ -86,7 +86,8 @@ fn main() {
         spmv.apply(&comm, &a0, &xstar, &mut b);
         let mut x = DistVec::zeros(layout, comm.rank());
         let t0 = Instant::now();
-        let res = pcg(&comm, &a0, &spmv, &b, &mut x, Some(&mut pc), 1e-8, 100);
+        let op = CsrOperator::new(&a0, &spmv);
+        let res = pcg(&comm, &op, &b, &mut x, Some(&mut pc), 1e-8, 100);
         let solve_secs = t0.elapsed().as_secs_f64();
         // error vs manufactured solution
         let mut err = x.clone();

@@ -6,18 +6,21 @@
 //! is the max over ranks of the tracker's per-category peaks.
 
 use crate::dist::{
-    Comm, DistCsr, DistSpmv, DistVec, World, COMM_ALPHA_SECS, COMM_BETA_SECS_PER_BYTE,
+    Comm, CsrOperator, DistBSpmv, DistCsr, DistOperator, DistSpmv, DistVec, World,
+    COMM_ALPHA_SECS, COMM_BETA_SECS_PER_BYTE,
 };
 use crate::gen::{
     grid_laplacian, heat_operator, neutron_block_operator, Grid3, ModelProblem, NeutronConfig,
+    StencilOperator,
 };
 use crate::mem::{Cat, MemTracker};
 use crate::mg::{
-    build_hierarchy, geometric_chain, gmres, pcg, Coarsening, HierarchyConfig, InterpStats,
-    LevelStats, MgOpts, MgPreconditioner,
+    build_hierarchy, build_hierarchy_matrix_free, geometric_chain, gmres, pcg, Coarsening,
+    HierarchyConfig, InterpStats, LevelStats, MgOpts, MgPreconditioner, OpHandle,
 };
 use crate::ptap::{Algo, Ptap, PtapStats};
 use crate::reuse::HierarchyRefresher;
+use crate::runtime::{BlockBackend, SpmvBatcher};
 
 /// Model-problem experiment parameters (one (np, algo) cell of Table 1/3).
 #[derive(Debug, Clone, Copy)]
@@ -244,8 +247,8 @@ pub fn run_neutron(cfg: NeutronConfigExp) -> NeutronResult {
         let mut x = DistVec::zeros(layout, comm.rank());
         // transport-like operators are nonsymmetric: GMRES(30) as in the
         // paper's RattleSnake runs
-        let solve =
-            gmres(&comm, &a0, &spmv, &b, &mut x, Some(&mut pc), 30, 1e-8, cfg.solve_iters);
+        let op = CsrOperator::new(&a0, &spmv);
+        let solve = gmres(&comm, &op, &b, &mut x, Some(&mut pc), 30, 1e-8, cfg.solve_iters);
         total_timer.stop();
 
         // rank-wide totals: subcomm traffic counts toward the model too
@@ -368,6 +371,233 @@ pub fn run_hierarchy_bench(
         solve_msgs: solve.msgs,
         solve_bytes: solve.bytes,
         alpha_secs: total_msgs as f64 * COMM_ALPHA_SECS,
+    }
+}
+
+/// One level-0 operator cell of the flops-per-byte bench: the same
+/// scenario run with an assembled CSR fine level (`mode = "csr"`) and a
+/// matrix-free stencil fine level (`mode = "mf"`).  The runner asserts
+/// the two modes' PCG residual histories are *bitwise* identical, so the
+/// cells differ only in storage and apply cost.
+#[derive(Debug, Clone)]
+pub struct Level0Cell {
+    pub scenario: &'static str,
+    pub mode: &'static str,
+    pub np: usize,
+    /// Busy seconds of the timed fine-operator applications (max rank).
+    pub apply_secs: f64,
+    /// Global fine-operator storage: CSR tables + SpMV plan, or the
+    /// stencil coefficients + footprint halo plan.
+    pub op_bytes: u64,
+    /// Arithmetic intensity of one apply: 2·nnz flops over the operator
+    /// bytes plus the x/y vector traffic.
+    pub flops_per_byte: f64,
+    /// Fine-level + hierarchy halo-buffer reuses over applies + solve
+    /// (summed over ranks) — the persistent-buffer evidence.
+    pub halo_reuses: u64,
+    /// Tracked matrix bytes alive after the build (max rank): the
+    /// matrix-free memory delta reads directly off this column.
+    pub cur_bytes: u64,
+    /// Tracked peak bytes across build + solve (max rank).
+    pub peak_bytes: u64,
+    pub solve_iters: usize,
+}
+
+/// Fine-operator applications timed per level-0 cell.
+const LEVEL0_APPLIES: usize = 8;
+
+/// Run the level-0 bench: for each scenario (7-point grid Laplacian and
+/// backward-Euler heat operator) build the same geometric hierarchy from
+/// an assembled fine matrix and from the matrix-free stencil, time
+/// repeated fine-operator applications, solve with MG-PCG, and demand
+/// bit-identical residual histories.  Two cells per scenario.
+pub fn run_level0_bench(coarse: Grid3, levels: usize, np: usize) -> Vec<Level0Cell> {
+    let mut cells = Vec::new();
+    for scenario in ["grid", "heat"] {
+        let mut hist: Vec<Vec<f64>> = Vec::new();
+        for mode in ["csr", "mf"] {
+            let (cell, residuals) = level0_cell(scenario, mode, coarse, levels, np);
+            hist.push(residuals);
+            cells.push(cell);
+        }
+        let (h_csr, h_mf) = (&hist[0], &hist[1]);
+        assert_eq!(
+            h_csr.len(),
+            h_mf.len(),
+            "{scenario}: matrix-free residual history length diverged from CSR"
+        );
+        for (k, (u, v)) in h_csr.iter().zip(h_mf.iter()).enumerate() {
+            assert_eq!(
+                u.to_bits(),
+                v.to_bits(),
+                "{scenario}: residual {k} differs between csr ({u:e}) and mf ({v:e})"
+            );
+        }
+    }
+    cells
+}
+
+fn level0_cell(
+    scenario: &'static str,
+    mode: &'static str,
+    coarse: Grid3,
+    levels: usize,
+    np: usize,
+) -> (Level0Cell, Vec<f64>) {
+    use crate::util::timer::BusyTimer;
+    let dt = 0.1;
+    let mf = mode == "mf";
+    let world = World::new(np);
+    let grids = geometric_chain(coarse, levels);
+    let mut per_rank = world.run(|comm| {
+        let (rank, size) = (comm.rank(), comm.size());
+        let fine = grids[0];
+        let tracker = MemTracker::new();
+        let coarsening = Coarsening::Geometric { grids: grids.clone() };
+        let hcfg = HierarchyConfig::default();
+        // the external fine operator pcg applies (the hierarchy holds its
+        // own level-0 copy either way)
+        let mut sten = None;
+        let mut assembled = None;
+        let h = if mf {
+            let s0 = match scenario {
+                "grid" => StencilOperator::laplacian(&comm, fine),
+                _ => StencilOperator::heat(&comm, fine, dt),
+            };
+            tracker.alloc(Cat::MatA, DistOperator::bytes(&s0));
+            sten = Some(match scenario {
+                "grid" => StencilOperator::laplacian(&comm, fine),
+                _ => StencilOperator::heat(&comm, fine, dt),
+            });
+            build_hierarchy_matrix_free(&comm, s0, &coarsening, hcfg, &tracker)
+        } else {
+            let a0 = match scenario {
+                "grid" => grid_laplacian(fine, rank, size),
+                _ => heat_operator(fine, rank, size, dt),
+            };
+            tracker.alloc(Cat::MatA, a0.bytes());
+            let h = build_hierarchy(&comm, a0.clone(), &coarsening, hcfg, &tracker);
+            let spmv = DistSpmv::new(&comm, &a0);
+            assembled = Some((a0, spmv));
+            h
+        };
+        let op: OpHandle<'_> = match (&sten, &assembled) {
+            (Some(s), _) => OpHandle::Stencil(s),
+            (_, Some((a, spmv))) => OpHandle::Csr(CsrOperator::new(a, spmv)),
+            _ => unreachable!(),
+        };
+        let layout = op.row_layout().clone();
+        let local_op_bytes = match &assembled {
+            Some((a, spmv)) => a.bytes() + spmv.bytes(),
+            None => DistOperator::bytes(sten.as_ref().unwrap()),
+        };
+        let op_bytes = comm.allreduce_sum_u64(local_op_bytes);
+        let nnz = op.nnz_global(&comm);
+        let n = layout.global_size() as u64;
+
+        let x = DistVec::from_fn(layout.clone(), rank, |g| ((g % 13) as f64) - 6.0);
+        let mut y = DistVec::zeros(layout.clone(), rank);
+        let mut t = BusyTimer::new();
+        t.start();
+        for _ in 0..LEVEL0_APPLIES {
+            op.apply(&comm, &x, &mut y);
+        }
+        t.stop();
+
+        let mut pc = MgPreconditioner::new(&comm, h, MgOpts::default());
+        let b = DistVec::from_fn(layout.clone(), rank, |g| ((g % 17) as f64 - 8.0) / 8.0);
+        let mut xs = DistVec::zeros(layout.clone(), rank);
+        let res = pcg(&comm, &op, &b, &mut xs, Some(&mut pc), 1e-10, 60);
+
+        let halo_reuses = comm.allreduce_sum_u64(op.halo_reuses() + pc.halo_reuses());
+        let flops_per_byte = (2.0 * nnz as f64) / (op_bytes + 16 * n) as f64;
+        (
+            t.total(),
+            op_bytes,
+            flops_per_byte,
+            halo_reuses,
+            tracker.current_total(),
+            tracker.peak_total(),
+            res.iterations,
+            res.residuals,
+        )
+    });
+    let apply_secs = per_rank.iter().map(|r| r.0).fold(0.0f64, f64::max);
+    let cur_bytes = per_rank.iter().map(|r| r.4).max().unwrap();
+    let peak_bytes = per_rank.iter().map(|r| r.5).max().unwrap();
+    let (_, op_bytes, flops_per_byte, halo_reuses, _, _, solve_iters, residuals) =
+        per_rank.remove(0);
+    (
+        Level0Cell {
+            scenario,
+            mode,
+            np,
+            apply_secs,
+            op_bytes,
+            flops_per_byte,
+            halo_reuses,
+            cur_bytes,
+            peak_bytes,
+            solve_iters,
+        },
+        residuals,
+    )
+}
+
+/// One batched block-kernel cell: stream every BCSR block multiply of a
+/// distributed block SpMV through [`SpmvBatcher`] and report the launch
+/// shape and flop rate — the Native-backend baseline the `pjrt` seam is
+/// measured against.
+#[derive(Debug, Clone)]
+pub struct BlockKernelCell {
+    pub b: usize,
+    pub np: usize,
+    /// Block multiplies executed (summed over ranks and applies).
+    pub mults: u64,
+    /// Batched kernel launches those multiplies were folded into.
+    pub flushes: u64,
+    /// Busy seconds of the timed block applies (max rank).
+    pub apply_secs: f64,
+    /// 2·b²·mults flops over `apply_secs`, in Gflop/s.
+    pub gflops: f64,
+}
+
+/// Block applies timed for the kernel cell.
+const BLOCK_KERNEL_APPLIES: usize = 4;
+
+/// Run the batched block-kernel bench on the neutron block operator.
+pub fn run_block_kernel_bench(grid: Grid3, groups: usize, np: usize) -> BlockKernelCell {
+    use crate::util::timer::BusyTimer;
+    let world = World::new(np);
+    let per_rank = world.run(|comm| {
+        let ncfg = NeutronConfig { grid, groups, seed: 20190701 };
+        let a = neutron_block_operator(ncfg, comm.rank(), comm.size());
+        let bspmv = DistBSpmv::new(&comm, &a);
+        let mut batcher = SpmvBatcher::new(BlockBackend::Native, a.b);
+        let x = DistVec::from_fn(a.col_layout.scaled(a.b), comm.rank(), |g| {
+            ((g % 13) as f64) - 6.0
+        });
+        let mut y = DistVec::zeros(a.row_layout.scaled(a.b), comm.rank());
+        let mut t = BusyTimer::new();
+        t.start();
+        for _ in 0..BLOCK_KERNEL_APPLIES {
+            bspmv.apply(&comm, &a, &mut batcher, &x, &mut y);
+        }
+        t.stop();
+        let mults = comm.allreduce_sum_u64(batcher.mults);
+        let flushes = comm.allreduce_sum_u64(batcher.flushes);
+        (t.total(), mults, flushes, a.b)
+    });
+    let apply_secs = per_rank.iter().map(|r| r.0).fold(0.0f64, f64::max);
+    let (_, mults, flushes, b) = per_rank[0];
+    let flops = mults as f64 * (2 * b * b) as f64;
+    BlockKernelCell {
+        b,
+        np,
+        mults,
+        flushes,
+        apply_secs,
+        gflops: if apply_secs > 0.0 { flops / apply_secs / 1e9 } else { 0.0 },
     }
 }
 
@@ -593,9 +823,10 @@ pub fn run_timedep(cfg: TimedepConfig) -> TimedepResult {
                 Some(rf) => rf.pc(),
                 None => pc_plain.as_mut().unwrap(),
             };
+            let op = CsrOperator::new(&a_cur, &spmv);
             let res = match fine_grid {
-                Some(_) => pcg(&comm, &a_cur, &spmv, &b, &mut xs, Some(pc), 1e-8, 200),
-                None => gmres(&comm, &a_cur, &spmv, &b, &mut xs, Some(pc), 30, 1e-8, 60),
+                Some(_) => pcg(&comm, &op, &b, &mut xs, Some(pc), 1e-8, 200),
+                None => gmres(&comm, &op, &b, &mut xs, Some(pc), 30, 1e-8, 60),
             };
             step_iters.push(res.iterations);
             let r0 = res.residuals.first().copied().unwrap_or(1.0).max(f64::MIN_POSITIVE);
@@ -700,6 +931,49 @@ mod tests {
             aao.overlap_num
         );
         assert_eq!(aao.num_bytes, merged.num_bytes, "same remote contributions, same bytes");
+    }
+
+    #[test]
+    fn level0_bench_matrix_free_saves_memory_and_matches_csr() {
+        // the runner itself asserts bit-identical residual histories
+        let cells = run_level0_bench(Grid3::cube(3), 2, 2);
+        assert_eq!(cells.len(), 4);
+        for pair in cells.chunks(2) {
+            let (csr, mf) = (&pair[0], &pair[1]);
+            assert_eq!(csr.mode, "csr");
+            assert_eq!(mf.mode, "mf");
+            assert_eq!(csr.scenario, mf.scenario);
+            assert!(
+                mf.op_bytes * 4 < csr.op_bytes,
+                "{}: stencil operator {} vs assembled {}",
+                mf.scenario,
+                mf.op_bytes,
+                csr.op_bytes
+            );
+            assert!(
+                mf.cur_bytes < csr.cur_bytes,
+                "{}: matrix-free hierarchy {} must sit below assembled {}",
+                mf.scenario,
+                mf.cur_bytes,
+                csr.cur_bytes
+            );
+            assert!(mf.halo_reuses > 0, "persistent halo buffer never reused");
+            assert_eq!(csr.solve_iters, mf.solve_iters);
+        }
+    }
+
+    #[test]
+    fn block_kernel_bench_batches_multiplies() {
+        let cell = run_block_kernel_bench(Grid3::cube(4), 4, 2);
+        assert_eq!(cell.b, 4);
+        assert!(cell.mults > 0);
+        assert!(cell.flushes > 0);
+        assert!(
+            cell.flushes < cell.mults,
+            "batching must fold multiplies into fewer launches: {} vs {}",
+            cell.flushes,
+            cell.mults
+        );
     }
 
     #[test]

@@ -6,7 +6,8 @@ mod experiment;
 mod report;
 
 pub use experiment::{
-    run_hierarchy_bench, run_model_problem, run_neutron, run_timedep, HierarchyBenchResult,
+    run_block_kernel_bench, run_hierarchy_bench, run_level0_bench, run_model_problem,
+    run_neutron, run_timedep, BlockKernelCell, HierarchyBenchResult, Level0Cell,
     ModelProblemConfig, ModelProblemResult, NeutronConfigExp, NeutronResult, TimedepConfig,
     TimedepResult, TimedepWorkload,
 };

@@ -7,7 +7,8 @@ use crate::util::table::Table;
 use crate::util::{fmt_secs, mb};
 
 use super::experiment::{
-    HierarchyBenchResult, ModelProblemResult, NeutronResult, TimedepResult,
+    BlockKernelCell, HierarchyBenchResult, Level0Cell, ModelProblemResult, NeutronResult,
+    TimedepResult,
 };
 
 /// Speedups relative to the smallest rank count *within one algorithm*
@@ -161,18 +162,22 @@ pub fn timedep_table(r: &TimedepResult) -> Table {
     t
 }
 
-/// Write the benchmark-smoke artifact (CI's `BENCH_pr4.json`): one record
+/// Write the benchmark-smoke artifact (CI's `BENCH_pr6.json`): one record
 /// per (np, algo) cell with modeled times (fixed *and* calibrated α), the
 /// overlap window, the peak product bytes and the measured traffic; one
 /// record per hierarchy-agglomeration cell (per-level messages, active
-/// ranks, solve-phase traffic, the modeled α term); and one record per
+/// ranks, solve-phase traffic, the modeled α term); one record per
 /// timedep refresh cell (symbolic build time vs per-refresh numeric time
-/// and bytes) — the numbers [`diff_bench`] compares across PRs.
-/// Hand-rolled JSON (no serde offline).
+/// and bytes); one record per level-0 operator cell (apply seconds,
+/// operator bytes, flops/byte, matrix-free memory delta); and one record
+/// per batched block-kernel cell — the numbers [`diff_bench`] compares
+/// across PRs.  Hand-rolled JSON (no serde offline).
 pub fn write_bench_json(
     rows: &[ModelProblemResult],
     hier: &[HierarchyBenchResult],
     refresh: &[TimedepResult],
+    level0: &[Level0Cell],
+    block: &[BlockKernelCell],
     path: &Path,
 ) -> std::io::Result<()> {
     let fmt_list = |v: &[u64]| -> String {
@@ -245,6 +250,40 @@ pub fn write_bench_json(
             if k + 1 < refresh.len() { "," } else { "" }
         ));
     }
+    s.push_str("  ],\n  \"level0\": [\n");
+    for (k, c) in level0.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"kind\": \"level0\", \"scenario\": \"{}\", \"mode\": \"{}\", \"np\": {}, \
+             \"apply_secs\": {:.6e}, \"op_bytes\": {}, \"flops_per_byte\": {:.6e}, \
+             \"halo_reuses\": {}, \"cur_bytes\": {}, \"peak_bytes\": {}, \
+             \"solve_iters\": {}}}{}\n",
+            c.scenario,
+            c.mode,
+            c.np,
+            c.apply_secs,
+            c.op_bytes,
+            c.flops_per_byte,
+            c.halo_reuses,
+            c.cur_bytes,
+            c.peak_bytes,
+            c.solve_iters,
+            if k + 1 < level0.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n  \"block_kernel\": [\n");
+    for (k, c) in block.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"kind\": \"block_kernel\", \"b\": {}, \"np\": {}, \"mults\": {}, \
+             \"flushes\": {}, \"apply_secs\": {:.6e}, \"gflops\": {:.6e}}}{}\n",
+            c.b,
+            c.np,
+            c.mults,
+            c.flushes,
+            c.apply_secs,
+            c.gflops,
+            if k + 1 < block.len() { "," } else { "" }
+        ));
+    }
     s.push_str("  ]\n}\n");
     std::fs::write(path, s)
 }
@@ -314,19 +353,24 @@ fn cell_field<'a>(cell: &'a BenchCell, key: &str) -> Option<&'a str> {
     cell.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
 }
 
-/// Identity of a cell: its non-numeric/discriminator keys.
+/// Identity of a cell: its non-numeric/discriminator keys.  Older
+/// artifacts simply lack the newer discriminators, so their keys render
+/// `-` on both sides and still match.
 fn cell_key(cell: &BenchCell) -> String {
     let algo = cell_field(cell, "algo").unwrap_or("-");
     let np = cell_field(cell, "np").unwrap_or("-");
     let eq = cell_field(cell, "eq_limit").unwrap_or("-");
     let kind = cell_field(cell, "kind").unwrap_or("-");
-    format!("algo={algo} np={np} eq={eq} kind={kind}")
+    let scenario = cell_field(cell, "scenario").unwrap_or("-");
+    let mode = cell_field(cell, "mode").unwrap_or("-");
+    let b = cell_field(cell, "b").unwrap_or("-");
+    format!("algo={algo} np={np} eq={eq} kind={kind} sc={scenario} mode={mode} b={b}")
 }
 
 /// Metrics the regression gate watches, with per-metric absolute floors
 /// (modeled times at smoke scale sit in the microsecond range where
 /// scheduler noise dominates; counters and bytes are deterministic).
-const DIFF_METRICS: [(&str, f64); 15] = [
+const DIFF_METRICS: [(&str, f64); 20] = [
     ("time_sym_modeled", 1e-3),
     ("time_num_modeled", 1e-3),
     ("time_cal_modeled", 1e-3),
@@ -345,6 +389,16 @@ const DIFF_METRICS: [(&str, f64); 15] = [
     ("time_num_refresh", 1e-3),
     ("refresh_msgs", 0.0),
     ("refresh_bytes", 0.0),
+    // level0 cells: fine-operator apply time (floored — wall noise),
+    // operator storage and post-build matrix bytes (the matrix-free
+    // memory delta is exactly these columns' csr-vs-mf gap)
+    ("apply_secs", 1e-3),
+    ("op_bytes", 0.0),
+    ("cur_bytes", 0.0),
+    // block_kernel cells: more multiplies or more launches per multiply
+    // means the batching got weaker
+    ("mults", 0.0),
+    ("flushes", 0.0),
 ];
 
 /// Per-level array metrics: compared *elementwise*, so a single level's
@@ -488,10 +542,58 @@ mod tests {
         }]
     }
 
+    fn sample_level0() -> Vec<Level0Cell> {
+        vec![
+            Level0Cell {
+                scenario: "grid",
+                mode: "csr",
+                np: 2,
+                apply_secs: 2.0e-4,
+                op_bytes: 90_000,
+                flops_per_byte: 0.12,
+                halo_reuses: 40,
+                cur_bytes: 120_000,
+                peak_bytes: 150_000,
+                solve_iters: 9,
+            },
+            Level0Cell {
+                scenario: "grid",
+                mode: "mf",
+                np: 2,
+                apply_secs: 1.8e-4,
+                op_bytes: 2_000,
+                flops_per_byte: 1.9,
+                halo_reuses: 44,
+                cur_bytes: 40_000,
+                peak_bytes: 150_000,
+                solve_iters: 9,
+            },
+        ]
+    }
+
+    fn sample_block() -> Vec<BlockKernelCell> {
+        vec![BlockKernelCell {
+            b: 4,
+            np: 2,
+            mults: 5000,
+            flushes: 24,
+            apply_secs: 3.0e-4,
+            gflops: 0.5,
+        }]
+    }
+
     #[test]
     fn bench_json_round_trips_fields() {
         let path = std::env::temp_dir().join("gptap_bench_smoke_test.json");
-        write_bench_json(&sample_rows(), &sample_hier(), &sample_refresh(), &path).unwrap();
+        write_bench_json(
+            &sample_rows(),
+            &sample_hier(),
+            &sample_refresh(),
+            &sample_level0(),
+            &sample_block(),
+            &path,
+        )
+        .unwrap();
         let s = std::fs::read_to_string(&path).unwrap();
         assert!(s.contains("\"algo\": \"allatonce\""), "{s}");
         assert!(s.contains("\"peak_product_bytes\": 123"), "{s}");
@@ -501,25 +603,43 @@ mod tests {
         assert!(s.contains("\"solve_msgs\": 120"), "{s}");
         assert!(s.contains("\"kind\": \"refresh\""), "{s}");
         assert!(s.contains("\"time_num_refresh\""), "{s}");
+        assert!(s.contains("\"kind\": \"level0\""), "{s}");
+        assert!(s.contains("\"mode\": \"mf\""), "{s}");
+        assert!(s.contains("\"op_bytes\": 2000"), "{s}");
+        assert!(s.contains("\"kind\": \"block_kernel\""), "{s}");
+        assert!(s.contains("\"flushes\": 24"), "{s}");
         let _ = std::fs::remove_file(&path);
     }
 
     #[test]
     fn parse_bench_cells_reads_own_format() {
         let path = std::env::temp_dir().join("gptap_bench_parse_test.json");
-        write_bench_json(&sample_rows(), &sample_hier(), &sample_refresh(), &path).unwrap();
+        write_bench_json(
+            &sample_rows(),
+            &sample_hier(),
+            &sample_refresh(),
+            &sample_level0(),
+            &sample_block(),
+            &path,
+        )
+        .unwrap();
         let s = std::fs::read_to_string(&path).unwrap();
         let _ = std::fs::remove_file(&path);
         let cells = parse_bench_cells(&s);
-        assert_eq!(cells.len(), 3, "one model + one hierarchy + one refresh cell");
+        assert_eq!(cells.len(), 6, "model + hierarchy + refresh + 2 level0 + block");
         assert_eq!(cell_field(&cells[0], "algo"), Some("\"allatonce\""));
         assert_eq!(cell_field(&cells[0], "num_msgs"), Some("4"));
         assert_eq!(cell_field(&cells[1], "eq_limit"), Some("64"));
         assert_eq!(cell_field(&cells[1], "level_msgs"), Some("[40, 6]"));
         assert_eq!(cell_field(&cells[1], "total_msgs"), Some("46"));
         assert_eq!(cell_field(&cells[2], "kind"), Some("\"refresh\""));
+        assert_eq!(cell_field(&cells[3], "mode"), Some("\"csr\""));
+        assert_eq!(cell_field(&cells[4], "mode"), Some("\"mf\""));
+        assert_eq!(cell_field(&cells[5], "kind"), Some("\"block_kernel\""));
         // model vs refresh cells share algo/np but must not collide
         assert_ne!(cell_key(&cells[0]), cell_key(&cells[2]));
+        // the two level0 modes must key apart
+        assert_ne!(cell_key(&cells[3]), cell_key(&cells[4]));
     }
 
     #[test]
@@ -530,7 +650,15 @@ mod tests {
             rows[0].time_num = time;
             let path = std::env::temp_dir()
                 .join(format!("gptap_bench_diff_{msgs}_{}.json", (time * 1e6) as u64));
-            write_bench_json(&rows, &sample_hier(), &sample_refresh(), &path).unwrap();
+            write_bench_json(
+                &rows,
+                &sample_hier(),
+                &sample_refresh(),
+                &sample_level0(),
+                &sample_block(),
+                &path,
+            )
+            .unwrap();
             let s = std::fs::read_to_string(&path).unwrap();
             let _ = std::fs::remove_file(&path);
             s
@@ -563,7 +691,15 @@ mod tests {
             let path = std::env::temp_dir().join(format!(
                 "gptap_bench_arr_{level1_msgs}_{active1}_{refresh_bytes}.json"
             ));
-            write_bench_json(&sample_rows(), &hier, &refresh, &path).unwrap();
+            write_bench_json(
+                &sample_rows(),
+                &hier,
+                &refresh,
+                &sample_level0(),
+                &sample_block(),
+                &path,
+            )
+            .unwrap();
             let s = std::fs::read_to_string(&path).unwrap();
             let _ = std::fs::remove_file(&path);
             s
@@ -590,6 +726,45 @@ mod tests {
         );
         // equal artifacts stay clean
         assert!(diff_bench(&base, &mk(6, 2, 7000), 0.10).is_empty());
+    }
+
+    #[test]
+    fn diff_bench_gates_level0_and_block_kernel_cells() {
+        let mk = |mf_bytes: u64, flushes: u64| {
+            let mut level0 = sample_level0();
+            level0[1].op_bytes = mf_bytes;
+            let mut block = sample_block();
+            block[0].flushes = flushes;
+            let path = std::env::temp_dir()
+                .join(format!("gptap_bench_l0_{mf_bytes}_{flushes}.json"));
+            write_bench_json(
+                &sample_rows(),
+                &sample_hier(),
+                &sample_refresh(),
+                &level0,
+                &block,
+                &path,
+            )
+            .unwrap();
+            let s = std::fs::read_to_string(&path).unwrap();
+            let _ = std::fs::remove_file(&path);
+            s
+        };
+        let base = mk(2_000, 24);
+        // matrix-free operator storage creeping back toward assembled
+        // size trips the memory-delta gate
+        let regs = diff_bench(&base, &mk(10_000, 24), 0.10);
+        assert!(
+            regs.iter().any(|r| r.contains("op_bytes") && r.contains("mode=\"mf\"")),
+            "mf op_bytes regression missed: {regs:?}"
+        );
+        // more kernel launches for the same multiplies = weaker batching
+        let regs = diff_bench(&base, &mk(2_000, 300), 0.10);
+        assert!(
+            regs.iter().any(|r| r.contains("flushes")),
+            "flush regression missed: {regs:?}"
+        );
+        assert!(diff_bench(&base, &mk(2_000, 24), 0.10).is_empty());
     }
 
     #[test]

@@ -411,6 +411,16 @@ impl VecGatherPlan {
     /// Collective: fetch the needed entries from `local` slices; the
     /// result is indexed like the driving `garray`.
     pub fn gather(&self, comm: &Comm, local: &[f64]) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.gather_into(comm, local, &mut out);
+        out
+    }
+
+    /// Collective: like [`VecGatherPlan::gather`] but fills a
+    /// caller-provided buffer, so a plan applied every sweep (SpMV halos,
+    /// transfer halos, the matrix-free stencil halo) allocates once over
+    /// the solver lifetime instead of once per application.
+    pub fn gather_into(&self, comm: &Comm, local: &[f64], out: &mut Vec<f64>) {
         let mut sends = Vec::with_capacity(self.map.serve.len());
         for (dest, ids) in &self.map.serve {
             let mut w = ByteWriter::with_capacity(ids.len() * 8);
@@ -420,7 +430,8 @@ impl VecGatherPlan {
             sends.push((*dest, w.into_bytes()));
         }
         let recvd = sendrecv(comm, sends);
-        let mut out = vec![0.0f64; self.map.n_needed];
+        out.clear();
+        out.resize(self.map.n_needed, 0.0);
         for ((_, range), payload) in self.map.zip_runs(&recvd) {
             let mut r = ByteReader::new(payload);
             for slot in &mut out[range.clone()] {
@@ -428,7 +439,6 @@ impl VecGatherPlan {
             }
             debug_assert!(r.done());
         }
-        out
     }
 }
 

@@ -19,14 +19,16 @@ mod bcsr;
 mod csr;
 mod gather;
 mod layout;
+mod operator;
 mod transpose;
 pub mod vec;
 mod world;
 
-pub use bcsr::{DistBcsr, DistBcsrBuilder};
+pub use bcsr::{DistBSpmv, DistBcsr, DistBcsrBuilder};
 pub use csr::{DistCsr, DistCsrBuilder};
 pub use gather::{GatherWindow, PrBlocks, PrMat, RowGatherPlan, VecGatherPlan};
 pub use layout::Layout;
+pub use operator::{CsrOperator, DistOperator};
 pub use transpose::transpose_dist;
 pub use vec::{DistSpmv, DistVec};
 pub use world::{

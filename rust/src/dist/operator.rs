@@ -1,0 +1,171 @@
+//! The distributed-operator abstraction: what the smoothers, Krylov
+//! solvers, and the V-cycle's level-0 hot loop actually need from "a
+//! matrix".  Two implementations exist — [`CsrOperator`] viewing an
+//! assembled [`DistCsr`] + [`DistSpmv`] pair, and the matrix-free
+//! [`crate::gen::StencilOperator`] that evaluates the generators'
+//! stencils directly — and both fold rows in ascending *global* column
+//! order, so swapping one for the other changes no bits anywhere in the
+//! solve.
+
+use super::csr::DistCsr;
+use super::vec::{DistSpmv, DistVec};
+use super::world::Comm;
+use crate::dist::Layout;
+
+/// A distributed linear operator with square row/column ownership (the
+/// level-operator shape): apply, diagonal/row-norm extraction for the
+/// smoothers, processor-block SOR relaxation, and the memory/nnz
+/// accounting the reports read.
+///
+/// Contract shared by all implementations:
+/// - `apply` folds each row in ascending global column order, so the
+///   product's bits are partition-invariant;
+/// - `sor_sweep` relaxes the local block in row order (forward, then
+///   backward when `symmetric`) against a halo frozen at sweep start,
+///   subtracting owned-column entries in ascending global order and then
+///   off-rank entries in ascending global order — the
+///   [`DistCsr`] diag-then-offd order;
+/// - the collective counters (`row_nnz_stats`, `nnz_global`) issue the
+///   same collective sequence in every implementation, so mixed
+///   CSR/matrix-free ranks would stay in lockstep.
+pub trait DistOperator {
+    fn rank(&self) -> usize;
+    fn row_layout(&self) -> &Layout;
+    /// Owned rows on this rank.
+    fn local_nrows(&self) -> usize {
+        self.row_layout().local_size(self.rank())
+    }
+    fn global_nrows(&self) -> usize {
+        self.row_layout().global_size()
+    }
+    /// `y = A x` (collective).
+    fn apply(&self, comm: &Comm, x: &DistVec, y: &mut DistVec);
+    /// Local diagonal entries `a_ii` (0.0 where the row has no diagonal
+    /// entry); the smoothers own the invert-with-fallback policy.
+    fn diagonal(&self) -> Vec<f64>;
+    /// Local 1-norms of the rows (diag + offd entries).
+    fn row_norms1(&self) -> Vec<f64>;
+    /// Global (min, max, avg) nonzeros per row (collective).
+    fn row_nnz_stats(&self, comm: &Comm) -> (u64, u64, f64);
+    /// Global nonzero count (collective).
+    fn nnz_global(&self, comm: &Comm) -> u64;
+    /// Heap bytes this rank holds for the operator.
+    fn bytes(&self) -> u64;
+    /// Hybrid (processor-block) SOR relaxation: Gauss-Seidel over the
+    /// local rows with `x[i] += omega*(dinv[i]*acc - x[i])`, halo frozen
+    /// at sweep start (collective: one halo gather).
+    fn sor_sweep(
+        &self,
+        comm: &Comm,
+        dinv: &[f64],
+        omega: f64,
+        b: &DistVec,
+        x: &mut DistVec,
+        symmetric: bool,
+    );
+    /// Halo gathers served from a warm persistent buffer since build.
+    fn halo_reuses(&self) -> u64;
+}
+
+/// [`DistOperator`] view over an assembled matrix: borrows the
+/// [`DistCsr`] tables and the prebuilt [`DistSpmv`] halo plan.
+pub struct CsrOperator<'a> {
+    pub a: &'a DistCsr,
+    pub spmv: &'a DistSpmv,
+}
+
+impl<'a> CsrOperator<'a> {
+    pub fn new(a: &'a DistCsr, spmv: &'a DistSpmv) -> Self {
+        CsrOperator { a, spmv }
+    }
+
+    #[inline]
+    fn relax_row(&self, halo: &[f64], dinv: &[f64], omega: f64, b: &DistVec, x: &mut DistVec, i: usize) {
+        let a = self.a;
+        let mut acc = b.vals[i];
+        let (dc, dv) = a.diag.row(i);
+        for (&c, &v) in dc.iter().zip(dv) {
+            if c as usize != i {
+                acc -= v * x.vals[c as usize];
+            }
+        }
+        let (oc, ov) = a.offd.row(i);
+        for (&c, &v) in oc.iter().zip(ov) {
+            acc -= v * halo[c as usize];
+        }
+        x.vals[i] += omega * (dinv[i] * acc - x.vals[i]);
+    }
+}
+
+impl DistOperator for CsrOperator<'_> {
+    fn rank(&self) -> usize {
+        self.a.rank
+    }
+
+    fn row_layout(&self) -> &Layout {
+        &self.a.row_layout
+    }
+
+    fn apply(&self, comm: &Comm, x: &DistVec, y: &mut DistVec) {
+        self.spmv.apply(comm, self.a, x, y);
+    }
+
+    fn diagonal(&self) -> Vec<f64> {
+        let n = self.a.local_nrows();
+        let mut d = vec![0.0; n];
+        for (i, di) in d.iter_mut().enumerate() {
+            let (cols, vals) = self.a.diag.row(i);
+            if let Some((_, &v)) = cols.iter().zip(vals).find(|&(&c, _)| c as usize == i) {
+                *di = v;
+            }
+        }
+        d
+    }
+
+    fn row_norms1(&self) -> Vec<f64> {
+        let n = self.a.local_nrows();
+        let mut norms = vec![0.0; n];
+        for (i, ni) in norms.iter_mut().enumerate() {
+            let (_, dv) = self.a.diag.row(i);
+            let (_, ov) = self.a.offd.row(i);
+            *ni = dv.iter().chain(ov).map(|v| v.abs()).sum();
+        }
+        norms
+    }
+
+    fn row_nnz_stats(&self, comm: &Comm) -> (u64, u64, f64) {
+        self.a.row_nnz_stats(comm)
+    }
+
+    fn nnz_global(&self, comm: &Comm) -> u64 {
+        self.a.nnz_global(comm)
+    }
+
+    fn bytes(&self) -> u64 {
+        self.a.bytes()
+    }
+
+    fn sor_sweep(
+        &self,
+        comm: &Comm,
+        dinv: &[f64],
+        omega: f64,
+        b: &DistVec,
+        x: &mut DistVec,
+        symmetric: bool,
+    ) {
+        let halo = self.spmv.gather_halo(comm, x);
+        for i in 0..self.a.local_nrows() {
+            self.relax_row(&halo, dinv, omega, b, x, i);
+        }
+        if symmetric {
+            for i in (0..self.a.local_nrows()).rev() {
+                self.relax_row(&halo, dinv, omega, b, x, i);
+            }
+        }
+    }
+
+    fn halo_reuses(&self) -> u64 {
+        self.spmv.halo_reuses()
+    }
+}

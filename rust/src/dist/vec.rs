@@ -1,5 +1,7 @@
 //! Distributed vectors and the halo-exchange SpMV built on them.
 
+use std::cell::{Cell, Ref, RefCell};
+
 use super::csr::DistCsr;
 use super::gather::VecGatherPlan;
 use super::layout::Layout;
@@ -87,6 +89,11 @@ pub struct DistSpmv {
     /// precomputed so the global-column-order fold costs no search per
     /// application.
     splits: Vec<u32>,
+    /// Persistent halo buffer: sized on first gather, reused (no
+    /// allocation) on every later application.
+    buf: RefCell<Vec<f64>>,
+    /// How many gathers hit the warm buffer instead of allocating.
+    reuses: Cell<u64>,
 }
 
 impl DistSpmv {
@@ -95,12 +102,29 @@ impl DistSpmv {
         DistSpmv {
             halo: VecGatherPlan::build(comm, &a.col_layout, &a.garray),
             splits: (0..a.local_nrows()).map(|i| a.offd_split(i) as u32).collect(),
+            buf: RefCell::new(Vec::new()),
+            reuses: Cell::new(0),
         }
     }
 
     /// Fetch the halo entries of `x` named by `a.garray` (collective).
-    pub fn gather_halo(&self, comm: &Comm, x: &DistVec) -> Vec<f64> {
-        self.halo.gather(comm, &x.vals)
+    /// The returned borrow views the persistent buffer — drop it before
+    /// the next gather.
+    pub fn gather_halo(&self, comm: &Comm, x: &DistVec) -> Ref<'_, [f64]> {
+        {
+            let mut buf = self.buf.borrow_mut();
+            if buf.capacity() >= self.halo.n_needed() && self.halo.n_needed() > 0 {
+                self.reuses.set(self.reuses.get() + 1);
+            }
+            self.halo.gather_into(comm, &x.vals, &mut buf);
+        }
+        Ref::map(self.buf.borrow(), |v| v.as_slice())
+    }
+
+    /// Halo gathers that reused the warm persistent buffer (saved
+    /// allocations since construction).
+    pub fn halo_reuses(&self) -> u64 {
+        self.reuses.get()
     }
 
     /// `y = A x` (collective).  Each row folds in ascending *global*
@@ -112,7 +136,7 @@ impl DistSpmv {
     pub fn apply(&self, comm: &Comm, a: &DistCsr, x: &DistVec, y: &mut DistVec) {
         debug_assert_eq!(x.vals.len(), a.diag.ncols);
         debug_assert_eq!(y.vals.len(), a.local_nrows());
-        let halo = self.halo.gather(comm, &x.vals);
+        let halo = self.gather_halo(comm, x);
         debug_assert_eq!(self.splits.len(), a.local_nrows());
         for i in 0..a.local_nrows() {
             let mut acc = 0.0;
@@ -133,7 +157,9 @@ impl DistSpmv {
     }
 
     pub fn bytes(&self) -> u64 {
-        self.halo.bytes() + (self.splits.len() * 4) as u64
+        self.halo.bytes()
+            + (self.splits.len() * 4) as u64
+            + (self.buf.borrow().capacity() * 8) as u64
     }
 }
 

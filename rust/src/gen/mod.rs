@@ -4,7 +4,9 @@
 mod grid;
 mod neutron;
 mod random;
+mod stencil;
 
 pub use grid::{grid_laplacian, heat_operator, trilinear_interp, Grid3, ModelProblem};
 pub use neutron::{neutron_block_interp, neutron_block_operator, NeutronConfig};
 pub use random::random_dist_csr;
+pub use stencil::{grid_laplacian27, StencilFamily, StencilOperator};

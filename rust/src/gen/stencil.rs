@@ -1,0 +1,568 @@
+//! Matrix-free stencil operators: the structured-grid generators already
+//! know every nonzero of the fine-level operator, so level 0 never needs
+//! the assembled CSR — O(stencil) coefficients plus a halo plan built
+//! from the stencil *footprint* replace O(n·stencil) matrix storage.
+//!
+//! Bit-compatibility with the assembled path is the design invariant:
+//! the stencil offsets are stored in ascending linearized-offset order,
+//! which for a row-major grid is ascending *global column* order — the
+//! exact fold order of [`crate::dist::DistSpmv::apply`] (offd below the
+//! diag range, diag, offd above).  Applying the stencil therefore
+//! produces bitwise the products, sweeps, and residual histories of the
+//! eagerly assembled generator output, while [`StencilOperator::bytes`]
+//! stays O(surface halo), not O(volume).
+
+use std::cell::{Cell, Ref, RefCell};
+
+use crate::dist::{
+    Comm, CsrOperator, DistCsr, DistCsrBuilder, DistOperator, DistSpmv, DistVec, Layout,
+    VecGatherPlan,
+};
+
+use super::grid::Grid3;
+
+/// Which generator family the operator evaluates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StencilFamily {
+    /// 7-point Laplacian (center 6, faces −1), Dirichlet-eliminated.
+    Laplace7,
+    /// 27-point Laplacian (center 56, face −4, edge −2, corner −1):
+    /// zero interior row sums, the wide-stencil stress case.
+    Laplace27,
+    /// Backward-Euler heat operator `M + dt·K` on the 7-point footprint.
+    Heat { dt: f64 },
+}
+
+/// One stencil leg: grid-coordinate offset, its linearized id offset
+/// (`dx + nx·dy + nx·ny·dz`), and the coefficient.
+#[derive(Debug, Clone, Copy)]
+struct StencilEntry {
+    dx: i64,
+    dy: i64,
+    dz: i64,
+    delta: i64,
+    coef: f64,
+}
+
+fn stencil_entries(family: StencilFamily, grid: Grid3) -> Vec<StencilEntry> {
+    let (nx, ny) = (grid.nx as i64, grid.ny as i64);
+    let mk = |dx: i64, dy: i64, dz: i64, coef: f64| StencilEntry {
+        dx,
+        dy,
+        dz,
+        delta: dx + nx * (dy + ny * dz),
+        coef,
+    };
+    let mut out = Vec::new();
+    match family {
+        StencilFamily::Laplace7 | StencilFamily::Heat { .. } => {
+            let (diag, offd) = match family {
+                StencilFamily::Laplace7 => (6.0, -1.0),
+                StencilFamily::Heat { dt } => (1.0 + 6.0 * dt, -dt),
+                StencilFamily::Laplace27 => unreachable!(),
+            };
+            assert!(
+                grid.nx >= 2 && grid.ny >= 2,
+                "7-point stencil needs nx,ny >= 2 for distinct linearized offsets"
+            );
+            out.push(mk(0, 0, -1, offd));
+            out.push(mk(0, -1, 0, offd));
+            out.push(mk(-1, 0, 0, offd));
+            out.push(mk(0, 0, 0, diag));
+            out.push(mk(1, 0, 0, offd));
+            out.push(mk(0, 1, 0, offd));
+            out.push(mk(0, 0, 1, offd));
+        }
+        StencilFamily::Laplace27 => {
+            assert!(
+                grid.nx >= 3 && grid.ny >= 3,
+                "27-point stencil needs nx,ny >= 3 for ascending linearized offsets"
+            );
+            for dz in -1i64..=1 {
+                for dy in -1i64..=1 {
+                    for dx in -1i64..=1 {
+                        let taxi = dx.abs() + dy.abs() + dz.abs();
+                        let coef = match taxi {
+                            0 => 56.0,
+                            1 => -4.0,
+                            2 => -2.0,
+                            _ => -1.0,
+                        };
+                        out.push(mk(dx, dy, dz, coef));
+                    }
+                }
+            }
+        }
+    }
+    debug_assert!(out.windows(2).all(|w| w[0].delta < w[1].delta));
+    out
+}
+
+/// Assemble the stencil into a [`DistCsr`] with the generators' exact
+/// per-row push order (ascending global column) — bitwise-identical to
+/// [`super::grid_laplacian`]/[`super::heat_operator`] output.
+fn assemble_entries(grid: Grid3, rank: usize, np: usize, entries: &[StencilEntry]) -> DistCsr {
+    let layout = Layout::new_equal(grid.len(), np);
+    let mut b = DistCsrBuilder::new(rank, layout.clone(), layout.clone());
+    let mut row: Vec<(u64, f64)> = Vec::with_capacity(entries.len());
+    for gid in layout.range(rank) {
+        let (x, y, z) = grid.coords(gid);
+        row.clear();
+        for e in entries {
+            let (x2, y2, z2) = (x as i64 + e.dx, y as i64 + e.dy, z as i64 + e.dz);
+            if x2 < 0 || y2 < 0 || z2 < 0 {
+                continue;
+            }
+            let (x2, y2, z2) = (x2 as usize, y2 as usize, z2 as usize);
+            if x2 >= grid.nx || y2 >= grid.ny || z2 >= grid.nz {
+                continue;
+            }
+            row.push((grid.id(x2, y2, z2) as u64, e.coef));
+        }
+        b.push_row(&row);
+    }
+    b.finish()
+}
+
+/// Eager 27-point Laplacian (the assembled cross-check for
+/// [`StencilFamily::Laplace27`]).
+pub fn grid_laplacian27(grid: Grid3, rank: usize, np: usize) -> DistCsr {
+    assemble_entries(grid, rank, np, &stencil_entries(StencilFamily::Laplace27, grid))
+}
+
+/// Matrix-free distributed stencil operator: O(stencil) coefficients, a
+/// halo plan over the stencil footprint's off-rank ids, and nothing else.
+#[derive(Debug)]
+pub struct StencilOperator {
+    pub grid: Grid3,
+    pub layout: Layout,
+    pub rank: usize,
+    family: StencilFamily,
+    entries: Vec<StencilEntry>,
+    /// Sorted off-rank in-grid neighbour gids of this rank's rows — the
+    /// same id set an assembled offd's `garray` would hold.
+    halo_ids: Vec<u64>,
+    halo: VecGatherPlan,
+    buf: RefCell<Vec<f64>>,
+    reuses: Cell<u64>,
+}
+
+impl StencilOperator {
+    /// Collective: build the operator and its footprint halo plan.
+    pub fn new(comm: &Comm, grid: Grid3, family: StencilFamily) -> StencilOperator {
+        let rank = comm.rank();
+        let layout = Layout::new_equal(grid.len(), comm.size());
+        let entries = stencil_entries(family, grid);
+        let rbeg = layout.start(rank) as i64;
+        let rend = layout.end(rank) as i64;
+        let mut halo_ids: Vec<u64> = Vec::new();
+        for gid in layout.range(rank) {
+            let (x, y, z) = grid.coords(gid);
+            for e in &entries {
+                let (x2, y2, z2) = (x as i64 + e.dx, y as i64 + e.dy, z as i64 + e.dz);
+                if x2 < 0
+                    || y2 < 0
+                    || z2 < 0
+                    || x2 >= grid.nx as i64
+                    || y2 >= grid.ny as i64
+                    || z2 >= grid.nz as i64
+                {
+                    continue;
+                }
+                let g2 = gid as i64 + e.delta;
+                if g2 < rbeg || g2 >= rend {
+                    halo_ids.push(g2 as u64);
+                }
+            }
+        }
+        halo_ids.sort_unstable();
+        halo_ids.dedup();
+        let halo = VecGatherPlan::build(comm, &layout, &halo_ids);
+        StencilOperator {
+            grid,
+            layout,
+            rank,
+            family,
+            entries,
+            halo_ids,
+            halo,
+            buf: RefCell::new(Vec::new()),
+            reuses: Cell::new(0),
+        }
+    }
+
+    /// Collective: 7-point Laplacian, matrix-free.
+    pub fn laplacian(comm: &Comm, grid: Grid3) -> StencilOperator {
+        StencilOperator::new(comm, grid, StencilFamily::Laplace7)
+    }
+
+    /// Collective: 27-point Laplacian, matrix-free.
+    pub fn laplacian27(comm: &Comm, grid: Grid3) -> StencilOperator {
+        StencilOperator::new(comm, grid, StencilFamily::Laplace27)
+    }
+
+    /// Collective: heat operator `M + dt·K`, matrix-free.
+    pub fn heat(comm: &Comm, grid: Grid3, dt: f64) -> StencilOperator {
+        StencilOperator::new(comm, grid, StencilFamily::Heat { dt })
+    }
+
+    pub fn family(&self) -> StencilFamily {
+        self.family
+    }
+
+    /// Value-only refresh: take the coefficients (and family tag) from a
+    /// same-footprint operator — no communication, no plan rebuild; the
+    /// matrix-free analog of [`DistCsr::copy_values_from`].
+    pub fn set_coefs_from(&mut self, other: &StencilOperator) {
+        assert_eq!(self.grid, other.grid, "refresh requires the same grid");
+        assert_eq!(self.entries.len(), other.entries.len(), "stencil footprint must match");
+        for (e, o) in self.entries.iter_mut().zip(&other.entries) {
+            debug_assert_eq!(e.delta, o.delta, "stencil footprint must match");
+            e.coef = o.coef;
+        }
+        self.family = other.family;
+    }
+
+    /// Assemble into an explicit [`DistCsr`] — bitwise-identical to the
+    /// eager generator for this family (same push order, same values).
+    /// Local (non-collective); the scratch the hierarchy build uses when
+    /// a product needs real tables.
+    pub fn assemble(&self) -> DistCsr {
+        assemble_entries(self.grid, self.rank, self.layout.np(), &self.entries)
+    }
+
+    #[inline]
+    fn in_grid(&self, x: i64, y: i64, z: i64) -> bool {
+        x >= 0
+            && y >= 0
+            && z >= 0
+            && x < self.grid.nx as i64
+            && y < self.grid.ny as i64
+            && z < self.grid.nz as i64
+    }
+
+    /// Fetch the stencil halo of `x` (collective; warm persistent buffer).
+    fn gather_halo(&self, comm: &Comm, x: &DistVec) -> Ref<'_, [f64]> {
+        {
+            let mut buf = self.buf.borrow_mut();
+            if buf.capacity() >= self.halo.n_needed() && self.halo.n_needed() > 0 {
+                self.reuses.set(self.reuses.get() + 1);
+            }
+            self.halo.gather_into(comm, &x.vals, &mut buf);
+        }
+        Ref::map(self.buf.borrow(), |v| v.as_slice())
+    }
+
+    #[inline]
+    fn relax_row(
+        &self,
+        i: usize,
+        halo: &[f64],
+        dinv: &[f64],
+        omega: f64,
+        b: &DistVec,
+        x: &mut DistVec,
+    ) {
+        let rbeg = self.layout.start(self.rank);
+        let rend = self.layout.end(self.rank);
+        let gid = rbeg + i;
+        let (gx, gy, gz) = self.grid.coords(gid);
+        let mut acc = b.vals[i];
+        // owned columns ascending (skip the center) — the diag pass
+        for e in &self.entries {
+            if e.delta == 0 {
+                continue;
+            }
+            let g2 = gid as i64 + e.delta;
+            if g2 < rbeg as i64 || g2 >= rend as i64 {
+                continue;
+            }
+            if !self.in_grid(gx as i64 + e.dx, gy as i64 + e.dy, gz as i64 + e.dz) {
+                continue;
+            }
+            acc -= e.coef * x.vals[(g2 as usize) - rbeg];
+        }
+        // off-rank columns ascending against the frozen halo — the offd pass
+        for e in &self.entries {
+            let g2 = gid as i64 + e.delta;
+            if g2 >= rbeg as i64 && g2 < rend as i64 {
+                continue;
+            }
+            if !self.in_grid(gx as i64 + e.dx, gy as i64 + e.dy, gz as i64 + e.dz) {
+                continue;
+            }
+            let slot = self.halo_ids.binary_search(&(g2 as u64)).expect("halo id in plan");
+            acc -= e.coef * halo[slot];
+        }
+        x.vals[i] += omega * (dinv[i] * acc - x.vals[i]);
+    }
+}
+
+impl DistOperator for StencilOperator {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn row_layout(&self) -> &Layout {
+        &self.layout
+    }
+
+    fn apply(&self, comm: &Comm, x: &DistVec, y: &mut DistVec) {
+        debug_assert_eq!(x.vals.len(), self.local_nrows());
+        debug_assert_eq!(y.vals.len(), self.local_nrows());
+        let halo = self.gather_halo(comm, x);
+        let rbeg = self.layout.start(self.rank);
+        let rend = self.layout.end(self.rank);
+        for i in 0..x.vals.len() {
+            let gid = rbeg + i;
+            let (gx, gy, gz) = self.grid.coords(gid);
+            let mut acc = 0.0;
+            // ascending delta == ascending global column: the DistSpmv fold
+            for e in &self.entries {
+                if !self.in_grid(gx as i64 + e.dx, gy as i64 + e.dy, gz as i64 + e.dz) {
+                    continue;
+                }
+                let g2 = gid as i64 + e.delta;
+                if g2 >= rbeg as i64 && g2 < rend as i64 {
+                    acc += e.coef * x.vals[(g2 as usize) - rbeg];
+                } else {
+                    let slot =
+                        self.halo_ids.binary_search(&(g2 as u64)).expect("halo id in plan");
+                    acc += e.coef * halo[slot];
+                }
+            }
+            y.vals[i] = acc;
+        }
+    }
+
+    fn diagonal(&self) -> Vec<f64> {
+        let center =
+            self.entries.iter().find(|e| e.delta == 0).map(|e| e.coef).unwrap_or(0.0);
+        vec![center; self.local_nrows()]
+    }
+
+    fn row_norms1(&self) -> Vec<f64> {
+        let rbeg = self.layout.start(self.rank);
+        let mut norms = vec![0.0; self.local_nrows()];
+        for (i, ni) in norms.iter_mut().enumerate() {
+            let (gx, gy, gz) = self.grid.coords(rbeg + i);
+            *ni = self
+                .entries
+                .iter()
+                .filter(|e| self.in_grid(gx as i64 + e.dx, gy as i64 + e.dy, gz as i64 + e.dz))
+                .map(|e| e.coef.abs())
+                .sum();
+        }
+        norms
+    }
+
+    fn row_nnz_stats(&self, comm: &Comm) -> (u64, u64, f64) {
+        // same local scan + collective sequence as DistCsr::row_nnz_stats
+        let rbeg = self.layout.start(self.rank);
+        let mut lmin = u64::MAX;
+        let mut lmax = 0u64;
+        let mut lsum = 0u64;
+        for i in 0..self.local_nrows() {
+            let (gx, gy, gz) = self.grid.coords(rbeg + i);
+            let n = self
+                .entries
+                .iter()
+                .filter(|e| self.in_grid(gx as i64 + e.dx, gy as i64 + e.dy, gz as i64 + e.dz))
+                .count() as u64;
+            lmin = lmin.min(n);
+            lmax = lmax.max(n);
+            lsum += n;
+        }
+        let mins = comm.all_u64(lmin);
+        let maxs = comm.all_u64(lmax);
+        let sums = comm.all_u64(lsum);
+        let gmin = mins.into_iter().min().unwrap();
+        let gmax = maxs.into_iter().max().unwrap();
+        let gsum: u64 = sums.into_iter().sum();
+        let rows = self.global_nrows();
+        let avg = if rows == 0 { 0.0 } else { gsum as f64 / rows as f64 };
+        (if gmin == u64::MAX { 0 } else { gmin }, gmax, avg)
+    }
+
+    fn nnz_global(&self, comm: &Comm) -> u64 {
+        let rbeg = self.layout.start(self.rank);
+        let local: u64 = (0..self.local_nrows())
+            .map(|i| {
+                let (gx, gy, gz) = self.grid.coords(rbeg + i);
+                self.entries
+                    .iter()
+                    .filter(|e| {
+                        self.in_grid(gx as i64 + e.dx, gy as i64 + e.dy, gz as i64 + e.dz)
+                    })
+                    .count() as u64
+            })
+            .sum();
+        comm.allreduce_sum_u64(local)
+    }
+
+    fn bytes(&self) -> u64 {
+        (self.entries.len() * std::mem::size_of::<StencilEntry>()) as u64
+            + (self.halo_ids.len() * 8) as u64
+            + self.halo.bytes()
+            + (self.buf.borrow().capacity() * 8) as u64
+    }
+
+    fn sor_sweep(
+        &self,
+        comm: &Comm,
+        dinv: &[f64],
+        omega: f64,
+        b: &DistVec,
+        x: &mut DistVec,
+        symmetric: bool,
+    ) {
+        let halo = self.gather_halo(comm, x);
+        for i in 0..self.local_nrows() {
+            self.relax_row(i, &halo, dinv, omega, b, x);
+        }
+        if symmetric {
+            for i in (0..self.local_nrows()).rev() {
+                self.relax_row(i, &halo, dinv, omega, b, x);
+            }
+        }
+    }
+
+    fn halo_reuses(&self) -> u64 {
+        self.reuses.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::World;
+    use crate::gen::{grid_laplacian, heat_operator};
+
+    fn bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn stencil_apply_bit_identical_to_assembled() {
+        for np in [1, 3] {
+            let w = World::new(np);
+            w.run(|c| {
+                for family in [
+                    StencilFamily::Laplace7,
+                    StencilFamily::Laplace27,
+                    StencilFamily::Heat { dt: 0.125 },
+                ] {
+                    let grid = Grid3 { nx: 4, ny: 3, nz: 5 };
+                    let op = StencilOperator::new(&c, grid, family);
+                    let a = op.assemble();
+                    let spmv = DistSpmv::new(&c, &a);
+                    let x = DistVec::from_fn(a.row_layout.clone(), c.rank(), |g| {
+                        (g as f64 * 0.37).sin()
+                    });
+                    let mut y1 = DistVec::zeros(a.row_layout.clone(), c.rank());
+                    let mut y2 = y1.clone();
+                    spmv.apply(&c, &a, &x, &mut y1);
+                    op.apply(&c, &x, &mut y2);
+                    assert_eq!(bits(&y1.vals), bits(&y2.vals), "{family:?}");
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn assemble_matches_eager_generator_bitwise() {
+        let grid = Grid3 { nx: 5, ny: 4, nz: 3 };
+        let w = World::new(2);
+        w.run(|c| {
+            let lap = StencilOperator::laplacian(&c, grid).assemble();
+            let want = grid_laplacian(grid, c.rank(), c.size());
+            assert_eq!(bits(&lap.diag.vals), bits(&want.diag.vals));
+            assert_eq!(bits(&lap.offd.vals), bits(&want.offd.vals));
+            assert_eq!(lap.garray, want.garray);
+            let heat = StencilOperator::heat(&c, grid, 0.25).assemble();
+            let wanth = heat_operator(grid, c.rank(), c.size(), 0.25);
+            assert_eq!(bits(&heat.diag.vals), bits(&wanth.diag.vals));
+            assert_eq!(bits(&heat.offd.vals), bits(&wanth.offd.vals));
+        });
+    }
+
+    #[test]
+    fn laplacian27_zero_interior_row_sums_and_symmetry() {
+        let g27 = grid_laplacian27(Grid3::cube(4), 0, 1);
+        g27.validate().unwrap();
+        let full = g27.diag.clone();
+        let t = full.transpose();
+        assert_eq!(full, t);
+        let grid = Grid3::cube(4);
+        for i in 0..g27.local_nrows() {
+            let (x, y, z) = grid.coords(i);
+            let interior = x > 0
+                && y > 0
+                && z > 0
+                && x + 1 < grid.nx
+                && y + 1 < grid.ny
+                && z + 1 < grid.nz;
+            if interior {
+                let s: f64 = g27.diag.row(i).1.iter().sum();
+                assert!(s.abs() < 1e-12, "interior row {i} sums to {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn sor_sweep_bit_identical_to_csr_operator() {
+        let w = World::new(3);
+        w.run(|c| {
+            let grid = Grid3 { nx: 4, ny: 4, nz: 4 };
+            let op = StencilOperator::heat(&c, grid, 0.5);
+            let a = op.assemble();
+            let spmv = DistSpmv::new(&c, &a);
+            let csr = CsrOperator::new(&a, &spmv);
+            let dinv: Vec<f64> =
+                op.diagonal().iter().map(|&d| if d != 0.0 { 1.0 / d } else { 1.0 }).collect();
+            let b = DistVec::from_fn(a.row_layout.clone(), c.rank(), |g| ((g % 7) as f64) - 3.0);
+            let mut x1 = DistVec::from_fn(a.row_layout.clone(), c.rank(), |g| (g as f64).cos());
+            let mut x2 = x1.clone();
+            for sym in [false, true] {
+                csr.sor_sweep(&c, &dinv, 1.1, &b, &mut x1, sym);
+                op.sor_sweep(&c, &dinv, 1.1, &b, &mut x2, sym);
+                assert_eq!(bits(&x1.vals), bits(&x2.vals), "sym={sym}");
+            }
+        });
+    }
+
+    #[test]
+    fn diag_and_norms_match_csr_operator() {
+        let w = World::new(2);
+        w.run(|c| {
+            let grid = Grid3 { nx: 3, ny: 5, nz: 4 };
+            let op = StencilOperator::laplacian27(&c, grid);
+            let a = op.assemble();
+            let spmv = DistSpmv::new(&c, &a);
+            let csr = CsrOperator::new(&a, &spmv);
+            assert_eq!(bits(&op.diagonal()), bits(&csr.diagonal()));
+            let (n1, n2) = (op.row_norms1(), csr.row_norms1());
+            for (a, b) in n1.iter().zip(&n2) {
+                assert!((a - b).abs() < 1e-12);
+            }
+            assert_eq!(op.row_nnz_stats(&c), csr.row_nnz_stats(&c));
+            assert_eq!(op.nnz_global(&c), csr.nnz_global(&c));
+            assert!(op.bytes() < csr.bytes() / 4, "matrix-free must be much smaller");
+        });
+    }
+
+    #[test]
+    fn value_only_refresh_matches_fresh_build() {
+        let w = World::new(2);
+        w.run(|c| {
+            let grid = Grid3::cube(4);
+            let mut op = StencilOperator::heat(&c, grid, 0.25);
+            let fresh = StencilOperator::heat(&c, grid, 0.0625);
+            op.set_coefs_from(&fresh);
+            let a1 = op.assemble();
+            let a2 = heat_operator(grid, c.rank(), c.size(), 0.0625);
+            assert_eq!(bits(&a1.diag.vals), bits(&a2.diag.vals));
+            assert_eq!(bits(&a1.offd.vals), bits(&a2.offd.vals));
+        });
+    }
+}

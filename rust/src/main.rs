@@ -11,11 +11,12 @@
 //! ```
 
 use galerkin_ptap::coordinator::{
-    diff_bench, level_tables, model_problem_tables, neutron_tables, run_hierarchy_bench,
-    run_model_problem, run_neutron, run_timedep, timedep_table, write_bench_json, write_results,
-    ModelProblemConfig, NeutronConfigExp, TimedepConfig, TimedepResult, TimedepWorkload,
+    diff_bench, level_tables, model_problem_tables, neutron_tables, run_block_kernel_bench,
+    run_hierarchy_bench, run_level0_bench, run_model_problem, run_neutron, run_timedep,
+    timedep_table, write_bench_json, write_results, ModelProblemConfig, NeutronConfigExp,
+    TimedepConfig, TimedepResult, TimedepWorkload,
 };
-use galerkin_ptap::dist::{DistSpmv, DistVec, World};
+use galerkin_ptap::dist::{CsrOperator, DistSpmv, DistVec, World};
 use galerkin_ptap::gen::{
     grid_laplacian, neutron_block_interp, neutron_block_operator, Grid3, NeutronConfig,
 };
@@ -174,7 +175,7 @@ fn cmd_bench_smoke(args: &Args) {
     let coarse = Grid3::cube(args.usize_or("coarse", 8));
     let np = args.usize_or("np", 4);
     let repeats = args.usize_or("repeats", 3);
-    let out = args.kv.get("out").cloned().unwrap_or_else(|| "BENCH_pr4.json".to_string());
+    let out = args.kv.get("out").cloned().unwrap_or_else(|| "BENCH_pr6.json".to_string());
     println!(
         "bench smoke: coarse {}³ (fine {}³), np={np}, repeats={repeats}",
         coarse.nx,
@@ -245,7 +246,35 @@ fn cmd_bench_smoke(args: &Args) {
         );
         refresh.push(r);
     }
-    match write_bench_json(&rows, &hier, &refresh, std::path::Path::new(&out)) {
+    // level-0 cells: the same geometric scenario assembled vs matrix-free
+    // (the runner asserts bitwise-identical residual histories), plus a
+    // batched block-kernel cell on the neutron operator
+    let level0 = run_level0_bench(
+        Grid3::cube(args.usize_or("hier-coarse", 3)),
+        args.usize_or("hier-levels", 3),
+        np,
+    );
+    for c in &level0 {
+        println!(
+            "  level0 {:<5} {:<4} apply {:>8} op {:>9} B  {:.3} flops/B  halo_reuses {}",
+            c.scenario,
+            c.mode,
+            galerkin_ptap::util::fmt_secs(c.apply_secs),
+            c.op_bytes,
+            c.flops_per_byte,
+            c.halo_reuses
+        );
+    }
+    let block = vec![run_block_kernel_bench(
+        Grid3::cube(args.usize_or("block-grid", 4)),
+        args.usize_or("groups", 4),
+        np,
+    )];
+    println!(
+        "  block_kernel b={} mults {} flushes {} ({:.2} Gflop/s)",
+        block[0].b, block[0].mults, block[0].flushes, block[0].gflops
+    );
+    match write_bench_json(&rows, &hier, &refresh, &level0, &block, std::path::Path::new(&out)) {
         Ok(()) => println!("wrote {out}"),
         Err(e) => {
             eprintln!("FAIL: could not write {out}: {e}");
@@ -375,7 +404,8 @@ fn cmd_solve(args: &Args) {
         let b = DistVec::from_fn(layout.clone(), comm.rank(), |_| 1.0);
         let mut x = DistVec::zeros(layout, comm.rank());
         let t = std::time::Instant::now();
-        let res = pcg(&comm, &a0, &spmv, &b, &mut x, Some(&mut pc), 1e-8, 100);
+        let op = CsrOperator::new(&a0, &spmv);
+        let res = pcg(&comm, &op, &b, &mut x, Some(&mut pc), 1e-8, 100);
         (res, t.elapsed().as_secs_f64(), tracker.peak_total(), active)
     });
     let (res, secs, peak, active) = &results[0];

@@ -2,7 +2,7 @@
 //! analog) — how the neutron problem's twelve-level hierarchy is built
 //! algebraically (paper §4.2 / Kong et al. 2019b's subspace coarsening).
 
-use crate::dist::{Comm, DistCsr, DistCsrBuilder, Layout, RowGatherPlan};
+use crate::dist::{Comm, DistCsr, DistCsrBuilder, Layout, PrMat, RowGatherPlan};
 use crate::spgemm::{RowScratch, RowView};
 
 /// Aggregation options.
@@ -80,31 +80,10 @@ fn aggregate_local(a: &DistCsr, threshold: f64) -> (Vec<i64>, usize) {
     (agg, n_agg)
 }
 
-/// Build the aggregation interpolation for `a` (collective).  Tentative
-/// `P` has one unit entry per row (its aggregate); with
-/// `smooth_omega > 0` the prolongator is smoothed:
-/// `P = (I − ω D⁻¹ A) P_tent`, computed with the row-wise SpGEMM.
-pub fn aggregate_interp(comm: &Comm, a: &DistCsr, opts: AggregateOpts) -> DistCsr {
-    let (agg, n_agg) = aggregate_local(a, opts.threshold);
-    // coarse layout from per-rank aggregate counts
-    let counts_u64 = comm.all_u64(n_agg as u64);
-    let counts: Vec<usize> = counts_u64.iter().map(|&c| c as usize).collect();
-    let coarse_layout = Layout::from_counts(&counts);
-    let coarse_start = coarse_layout.start(comm.rank()) as u64;
-
-    // tentative prolongator (injection)
-    let mut tent_b = DistCsrBuilder::new(comm.rank(), a.row_layout.clone(), coarse_layout.clone());
-    for &g in agg.iter() {
-        tent_b.push_row(&[(coarse_start + g as u64, 1.0)]);
-    }
-    let tent = tent_b.finish();
-    if opts.smooth_omega == 0.0 {
-        return tent;
-    }
-
-    // damped-Jacobi smoothing operator S = I - ω D⁻¹ A (rows local)
-    let mut s_b = DistCsrBuilder::new(comm.rank(), a.row_layout.clone(), a.row_layout.clone());
-    let rbeg = a.row_begin() as u64;
+/// The damped-Jacobi smoothing operator S = I − ω D⁻¹ A (rows local,
+/// pattern = A's pattern; built from A's *current* values).
+fn build_smoother_matrix(a: &DistCsr, omega: f64) -> DistCsr {
+    let mut s_b = DistCsrBuilder::new(a.rank, a.row_layout.clone(), a.row_layout.clone());
     let mut entries: Vec<(u64, f64)> = Vec::new();
     for i in 0..a.local_nrows() {
         let (dc, dv) = a.diag.row(i);
@@ -114,7 +93,7 @@ pub fn aggregate_interp(comm: &Comm, a: &DistCsr, opts: AggregateOpts) -> DistCs
             .find(|&(&c, _)| c as usize == i)
             .map(|(_, &v)| v)
             .unwrap_or(1.0);
-        let w = opts.smooth_omega / dii;
+        let w = omega / dii;
         entries.clear();
         for (&c, &v) in dc.iter().zip(dv) {
             let gcol = a.col_layout.start(a.rank) as u64 + c as u64;
@@ -126,17 +105,17 @@ pub fn aggregate_interp(comm: &Comm, a: &DistCsr, opts: AggregateOpts) -> DistCs
             entries.push((a.garray[c as usize], -w * v));
         }
         entries.sort_unstable_by_key(|&(c, _)| c);
-        let _ = rbeg;
         s_b.push_row(&entries);
     }
-    let s = s_b.finish();
+    s_b.finish()
+}
 
-    // P = S * tent via the row-wise SpGEMM
-    let plan = RowGatherPlan::build(comm, &tent.row_layout, &s.garray);
-    let pr = plan.gather_csr(comm, &tent);
-    let v = RowView::new(&s, &tent, &pr);
+/// `P = S · tent` with the row-wise SpGEMM over already-gathered remote
+/// tent rows (local — the traffic happened when `pr` was gathered).
+fn smooth_product(s: &DistCsr, tent: &DistCsr, pr: &PrMat, coarse_layout: Layout) -> DistCsr {
+    let v = RowView::new(s, tent, pr);
     let mut scratch = RowScratch::default();
-    let mut p_b = DistCsrBuilder::new(comm.rank(), a.row_layout.clone(), coarse_layout);
+    let mut p_b = DistCsrBuilder::new(s.rank, s.row_layout.clone(), coarse_layout);
     let mut entries: Vec<(u64, f64)> = Vec::new();
     for i in 0..s.local_nrows() {
         scratch.numeric_row(v, i);
@@ -152,6 +131,79 @@ pub fn aggregate_interp(comm: &Comm, a: &DistCsr, opts: AggregateOpts) -> DistCs
         p_b.push_row(&entries);
     }
     p_b.finish()
+}
+
+/// Everything a value-only smoothed-aggregation `P` refresh needs, all of
+/// it value-static: the tentative prolongator, the gathered remote tent
+/// rows, and ω.  When `A`'s values change (same pattern), `S = I − ωD⁻¹A`
+/// is rebuilt locally and `P = S·tent` recomputed with **zero traffic** —
+/// the symbolic half (aggregation, gather plan, gathered rows) is reused.
+#[derive(Debug)]
+pub struct InterpRefresh {
+    tent: DistCsr,
+    pr: PrMat,
+    omega: f64,
+}
+
+impl InterpRefresh {
+    /// Recompute `p`'s values from `a`'s current values, in place (local,
+    /// no communication).  `p` must be the operator this context was
+    /// built with (same pattern).
+    pub fn refresh_values(&self, a: &DistCsr, p: &mut DistCsr) {
+        let s = build_smoother_matrix(a, self.omega);
+        let p_new = smooth_product(&s, &self.tent, &self.pr, p.col_layout.clone());
+        p.copy_values_from(&p_new);
+    }
+
+    /// Retained bytes (tent tables + gathered rows).
+    pub fn bytes(&self) -> u64 {
+        self.tent.bytes() + self.pr.bytes()
+    }
+}
+
+/// Build the aggregation interpolation for `a` (collective).  Tentative
+/// `P` has one unit entry per row (its aggregate); with
+/// `smooth_omega > 0` the prolongator is smoothed:
+/// `P = (I − ω D⁻¹ A) P_tent`, computed with the row-wise SpGEMM.
+pub fn aggregate_interp(comm: &Comm, a: &DistCsr, opts: AggregateOpts) -> DistCsr {
+    aggregate_interp_with_refresh(comm, a, opts, false).0
+}
+
+/// Like [`aggregate_interp`], additionally returning the value-only
+/// refresh context when `retain` is set (and the prolongator is actually
+/// smoothed — a tentative P is value-static and needs no refresh).
+pub fn aggregate_interp_with_refresh(
+    comm: &Comm,
+    a: &DistCsr,
+    opts: AggregateOpts,
+    retain: bool,
+) -> (DistCsr, Option<InterpRefresh>) {
+    let (agg, n_agg) = aggregate_local(a, opts.threshold);
+    // coarse layout from per-rank aggregate counts
+    let counts_u64 = comm.all_u64(n_agg as u64);
+    let counts: Vec<usize> = counts_u64.iter().map(|&c| c as usize).collect();
+    let coarse_layout = Layout::from_counts(&counts);
+    let coarse_start = coarse_layout.start(comm.rank()) as u64;
+
+    // tentative prolongator (injection)
+    let mut tent_b = DistCsrBuilder::new(comm.rank(), a.row_layout.clone(), coarse_layout.clone());
+    for &g in agg.iter() {
+        tent_b.push_row(&[(coarse_start + g as u64, 1.0)]);
+    }
+    let tent = tent_b.finish();
+    if opts.smooth_omega == 0.0 {
+        return (tent, None);
+    }
+
+    let s = build_smoother_matrix(a, opts.smooth_omega);
+
+    // P = S * tent via the row-wise SpGEMM
+    let plan = RowGatherPlan::build(comm, &tent.row_layout, &s.garray);
+    let pr = plan.gather_csr(comm, &tent);
+    let p = smooth_product(&s, &tent, &pr, coarse_layout);
+    let refresh =
+        if retain { Some(InterpRefresh { tent, pr, omega: opts.smooth_omega }) } else { None };
+    (p, refresh)
 }
 
 #[cfg(test)]

@@ -16,11 +16,11 @@
 use std::rc::Rc;
 
 use crate::agglomerate::Telescope;
-use crate::dist::{Comm, DistSpmv, DistVec};
+use crate::dist::{Comm, DistOperator, DistSpmv, DistVec};
 use crate::mat::block_invert;
 use crate::util::bytebuf::{ByteReader, ByteWriter};
 
-use super::hierarchy::Hierarchy;
+use super::hierarchy::{Hierarchy, LevelOp};
 use super::smoother::{
     chebyshev_bounds, ChebyshevSmoother, HybridSorSmoother, JacobiSmoother, SmootherKind,
 };
@@ -71,16 +71,15 @@ impl Relax {
     fn sweep(
         &self,
         comm: &Comm,
-        a: &crate::dist::DistCsr,
-        spmv: &DistSpmv,
+        a: &dyn DistOperator,
         b: &DistVec,
         x: &mut DistVec,
         work: &mut DistVec,
     ) {
         match self {
-            Relax::Jacobi(s) => s.sweep(comm, a, spmv, b, x, work),
-            Relax::Chebyshev(s) => s.sweep(comm, a, spmv, b, x, work),
-            Relax::Sor(s) => s.sweep(comm, a, spmv, b, x),
+            Relax::Jacobi(s) => s.sweep(comm, a, b, x, work),
+            Relax::Chebyshev(s) => s.sweep(comm, a, b, x, work),
+            Relax::Sor(s) => s.sweep(comm, a, b, x),
         }
     }
 
@@ -100,7 +99,9 @@ struct LevelCtx {
     /// The boundary below this level, if one exists (shared with the
     /// hierarchy; Rc so the recursive cycle can hold it cheaply).
     telescope: Option<Rc<Telescope>>,
-    spmv: DistSpmv,
+    /// Halo plan for an assembled level; `None` when the level is
+    /// matrix-free (the stencil operator carries its own halo plan).
+    spmv: Option<DistSpmv>,
     smoother: Relax,
     transfer: Option<Transfer>,
     // work vectors
@@ -141,12 +142,19 @@ impl MgPreconditioner {
         let mut cur = comm.clone();
         let nlev = hierarchy.levels.len();
         for (li, lvl) in hierarchy.levels.iter().enumerate() {
-            let spmv = DistSpmv::new(&cur, &lvl.a);
-            let direct =
-                li + 1 == nlev && lvl.p.is_none() && lvl.a.global_nrows() <= opts.max_direct;
-            let smoother = Self::build_relax(&cur, &lvl.a, &spmv, &opts, direct);
+            let spmv = match &lvl.a {
+                LevelOp::Csr(a) => Some(DistSpmv::new(&cur, a)),
+                LevelOp::Stencil(_) => None,
+            };
+            let direct = li + 1 == nlev
+                && lvl.p.is_none()
+                && lvl.a.row_layout().global_size() <= opts.max_direct;
+            let smoother = {
+                let op = lvl.a.operator(spmv.as_ref());
+                Self::build_relax(&cur, &op, &opts, direct)
+            };
             let transfer = lvl.p.as_ref().map(|p| Transfer::new(&cur, p));
-            let layout = lvl.a.row_layout.clone();
+            let layout = lvl.a.row_layout().clone();
             // coarse-space scratch: kept alive between cycle applications
             let (bc, ec) = match &lvl.p {
                 Some(p) => {
@@ -212,32 +220,25 @@ impl MgPreconditioner {
     /// The true coarsest level under the direct-solve threshold never
     /// smooths: skip its power iteration (no coarse-level epochs wasted
     /// on an unused ω).
-    fn build_relax(
-        comm: &Comm,
-        a: &crate::dist::DistCsr,
-        spmv: &DistSpmv,
-        opts: &MgOpts,
-        direct: bool,
-    ) -> Relax {
+    fn build_relax(comm: &Comm, a: &dyn DistOperator, opts: &MgOpts, direct: bool) -> Relax {
         if direct {
             return Relax::Jacobi(JacobiSmoother::new(a, 1.0));
         }
         let omega = match opts.omega {
             Some(w) => w,
-            None => chebyshev_bounds(comm, a, spmv, 10).1,
+            None => chebyshev_bounds(comm, a, 10).1,
         };
         match opts.smoother {
             SmootherKind::Jacobi => Relax::Jacobi(JacobiSmoother::new(a, omega)),
-            SmootherKind::Chebyshev(deg) => {
-                Relax::Chebyshev(ChebyshevSmoother::new(comm, a, spmv, deg))
-            }
+            SmootherKind::Chebyshev(deg) => Relax::Chebyshev(ChebyshevSmoother::new(comm, a, deg)),
             SmootherKind::HybridSor => Relax::Sor(HybridSorSmoother::new(a, 1.0)),
         }
     }
 
     /// Coarsest-level redundant dense inverse, built only on ranks
     /// holding the true coarsest level (idle ranks' lists end at a
-    /// boundary, whose level still has a `p`).
+    /// boundary, whose level still has a `p`).  A matrix-free coarsest
+    /// level (single-level hierarchy) falls back to heavy smoothing.
     fn build_coarse_inv(
         levels: &[LevelCtx],
         hierarchy: &Hierarchy,
@@ -248,11 +249,14 @@ impl MgPreconditioner {
             return (None, 0);
         }
         let ccomm = &levels.last().unwrap().comm;
-        let n = last.a.global_nrows();
+        let n = last.a.row_layout().global_size();
+        let LevelOp::Csr(last_a) = &last.a else {
+            return (None, n);
+        };
         if n > max_direct {
             return (None, n);
         }
-        let g = last.a.gather_global(ccomm);
+        let g = last_a.gather_global(ccomm);
         let mut dense = vec![0.0; n * n];
         for i in 0..n {
             let (cols, vals) = g.row(i);
@@ -278,8 +282,9 @@ impl MgPreconditioner {
             let ctx = &mut self.levels[li];
             let direct = li + 1 == nlev
                 && lvl.p.is_none()
-                && lvl.a.global_nrows() <= self.opts.max_direct;
-            ctx.smoother = Self::build_relax(&ctx.comm, &lvl.a, &ctx.spmv, &self.opts, direct);
+                && lvl.a.row_layout().global_size() <= self.opts.max_direct;
+            let op = lvl.a.operator(ctx.spmv.as_ref());
+            ctx.smoother = Self::build_relax(&ctx.comm, &op, &self.opts, direct);
         }
         let (ci, cn) = Self::build_coarse_inv(&self.levels, &self.hierarchy, self.opts.max_direct);
         self.coarse_inv = ci;
@@ -309,6 +314,25 @@ impl MgPreconditioner {
         per_level + self.coarse_inv.as_ref().map_or(0, |m| (m.len() * 8) as u64)
     }
 
+    /// Total halo gathers that hit a warm persistent buffer instead of
+    /// allocating, summed over every level's SpMV plan, every transfer's
+    /// prolongation plan, and any matrix-free level's stencil halo.
+    pub fn halo_reuses(&self) -> u64 {
+        let mut total = 0u64;
+        for (li, ctx) in self.levels.iter().enumerate() {
+            if let Some(s) = &ctx.spmv {
+                total += s.halo_reuses();
+            }
+            if let Some(t) = &ctx.transfer {
+                total += t.halo_reuses();
+            }
+            if let LevelOp::Stencil(s) = &self.hierarchy.levels[li].a {
+                total += DistOperator::halo_reuses(s);
+            }
+        }
+        total
+    }
+
     /// Apply one V-cycle: `x = M⁻¹ b` with zero initial guess (collective
     /// over the finest level's communicator — each deeper level uses the
     /// communicator recorded at setup, so telescoped levels involve
@@ -331,14 +355,15 @@ impl MgPreconditioner {
         for _ in 0..self.opts.pre_smooth {
             let lvl = &mut self.levels[k];
             let a = &self.hierarchy.levels[k].a;
-            let (sm, spmv) = (&lvl.smoother, &lvl.spmv);
-            sm.sweep(comm, a, spmv, b, x, &mut lvl.work);
+            let op = a.operator(lvl.spmv.as_ref());
+            lvl.smoother.sweep(comm, &op, b, x, &mut lvl.work);
         }
         // residual r = b - A x
         {
             let lvl = &mut self.levels[k];
             let a = &self.hierarchy.levels[k].a;
-            lvl.spmv.apply(comm, a, x, &mut lvl.work);
+            let op = a.operator(lvl.spmv.as_ref());
+            op.apply(comm, x, &mut lvl.work);
             lvl.r.vals.clone_from(&b.vals);
             for i in 0..lvl.r.vals.len() {
                 lvl.r.vals[i] -= lvl.work.vals[i];
@@ -405,8 +430,8 @@ impl MgPreconditioner {
         for _ in 0..self.opts.post_smooth {
             let lvl = &mut self.levels[k];
             let a = &self.hierarchy.levels[k].a;
-            let (sm, spmv) = (&lvl.smoother, &lvl.spmv);
-            sm.sweep(comm, a, spmv, b, x, &mut lvl.work);
+            let op = a.operator(lvl.spmv.as_ref());
+            lvl.smoother.sweep(comm, &op, b, x, &mut lvl.work);
         }
     }
 
@@ -419,7 +444,8 @@ impl MgPreconditioner {
         {
             let ac = &self.hierarchy.levels[k + 1].a;
             let lvl = &mut self.levels[k + 1];
-            lvl.spmv.apply(&comm, ac, ec, &mut lvl.work);
+            let op = ac.operator(lvl.spmv.as_ref());
+            op.apply(&comm, ec, &mut lvl.work);
             rc2.vals.clone_from(&bc.vals);
             for i in 0..rc2.vals.len() {
                 rc2.vals[i] -= lvl.work.vals[i];
@@ -465,8 +491,8 @@ impl MgPreconditioner {
                 for _ in 0..20 {
                     let lvl = &mut self.levels[k];
                     let a = &self.hierarchy.levels[k].a;
-                    let (sm, spmv) = (&lvl.smoother, &lvl.spmv);
-                    sm.sweep(comm, a, spmv, b, x, &mut lvl.work);
+                    let op = a.operator(lvl.spmv.as_ref());
+                    lvl.smoother.sweep(comm, &op, b, x, &mut lvl.work);
                 }
             }
         }
@@ -496,7 +522,7 @@ mod tests {
                 HierarchyConfig::default(),
                 &tracker,
             );
-            let a = h.levels[0].a.clone();
+            let a = h.levels[0].a.csr().clone();
             let spmv = DistSpmv::new(&c, &a);
             let mut pc = MgPreconditioner::new(&c, h, MgOpts::default());
             // b = A * ones

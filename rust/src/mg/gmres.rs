@@ -5,7 +5,7 @@
 //! CG's assumptions do not hold; GMRES(m) is the appropriate Krylov
 //! method and what RattleSnake/PETSc run.
 
-use crate::dist::{Comm, DistCsr, DistSpmv, DistVec};
+use crate::dist::{Comm, DistOperator, DistVec};
 
 use super::cycle::MgPreconditioner;
 use super::solver::SolveResult;
@@ -15,8 +15,7 @@ use super::solver::SolveResult;
 #[allow(clippy::too_many_arguments)]
 pub fn gmres(
     comm: &Comm,
-    a: &DistCsr,
-    spmv: &DistSpmv,
+    a: &dyn DistOperator,
     b: &DistVec,
     x: &mut DistVec,
     mut pc: Option<&mut MgPreconditioner>,
@@ -24,7 +23,7 @@ pub fn gmres(
     rtol: f64,
     max_iters: usize,
 ) -> SolveResult {
-    let layout = a.row_layout.clone();
+    let layout = a.row_layout().clone();
     let rank = comm.rank();
     let m = restart.max(1);
 
@@ -33,7 +32,7 @@ pub fn gmres(
     let mut z = DistVec::zeros(layout.clone(), rank);
 
     // r = b - A x
-    spmv.apply(comm, a, x, &mut w);
+    a.apply(comm, x, &mut w);
     r.vals.clone_from(&b.vals);
     for i in 0..r.vals.len() {
         r.vals[i] -= w.vals[i];
@@ -69,9 +68,9 @@ pub fn gmres(
             match pc.as_deref_mut() {
                 Some(p) => {
                     p.apply(comm, &v[k], &mut z);
-                    spmv.apply(comm, a, &z, &mut w);
+                    a.apply(comm, &z, &mut w);
                 }
-                None => spmv.apply(comm, a, &v[k], &mut w),
+                None => a.apply(comm, &v[k], &mut w),
             }
             // modified Gram-Schmidt
             for j in 0..=k {
@@ -142,7 +141,7 @@ pub fn gmres(
             }
         }
         // true residual for the restart
-        spmv.apply(comm, a, x, &mut w);
+        a.apply(comm, x, &mut w);
         r.vals.clone_from(&b.vals);
         for i in 0..r.vals.len() {
             r.vals[i] -= w.vals[i];
@@ -162,7 +161,7 @@ pub fn gmres(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dist::World;
+    use crate::dist::{CsrOperator, DistSpmv, World};
     use crate::gen::{grid_laplacian, neutron_block_operator, Grid3, NeutronConfig};
     use crate::mem::MemTracker;
     use crate::mg::cycle::MgOpts;
@@ -174,12 +173,13 @@ mod tests {
         w.run(|c| {
             let a = grid_laplacian(Grid3::cube(4), c.rank(), c.size());
             let spmv = DistSpmv::new(&c, &a);
+            let op = CsrOperator::new(&a, &spmv);
             let layout = a.row_layout.clone();
             let xs = DistVec::from_fn(layout.clone(), c.rank(), |g| ((g % 9) as f64) - 4.0);
             let mut b = DistVec::zeros(layout.clone(), c.rank());
-            spmv.apply(&c, &a, &xs, &mut b);
+            op.apply(&c, &xs, &mut b);
             let mut x = DistVec::zeros(layout, c.rank());
-            let res = gmres(&c, &a, &spmv, &b, &mut x, None, 30, 1e-10, 400);
+            let res = gmres(&c, &op, &b, &mut x, None, 30, 1e-10, 400);
             assert!(res.converged, "residuals: {:?}", res.residuals.last());
             let mut err = x.clone();
             err.axpy(-1.0, &xs);
@@ -195,10 +195,11 @@ mod tests {
             let ab = neutron_block_operator(cfg, c.rank(), c.size());
             let a = ab.to_scalar();
             let spmv = DistSpmv::new(&c, &a);
+            let op = CsrOperator::new(&a, &spmv);
             let layout = a.row_layout.clone();
             let b = DistVec::from_fn(layout.clone(), c.rank(), |_| 1.0);
             let mut x = DistVec::zeros(layout, c.rank());
-            let res = gmres(&c, &a, &spmv, &b, &mut x, None, 30, 1e-8, 400);
+            let res = gmres(&c, &op, &b, &mut x, None, 30, 1e-8, 400);
             assert!(res.converged, "GMRES stalled on the transport operator");
         });
     }
@@ -219,13 +220,14 @@ mod tests {
                 &tracker,
             );
             let spmv = DistSpmv::new(&c, &a);
+            let op = CsrOperator::new(&a, &spmv);
             let mut pc = MgPreconditioner::new(&c, h, MgOpts::default());
             let layout = a.row_layout.clone();
             let b = DistVec::from_fn(layout.clone(), c.rank(), |_| 1.0);
             let mut x1 = DistVec::zeros(layout.clone(), c.rank());
-            let with_pc = gmres(&c, &a, &spmv, &b, &mut x1, Some(&mut pc), 30, 1e-8, 300);
+            let with_pc = gmres(&c, &op, &b, &mut x1, Some(&mut pc), 30, 1e-8, 300);
             let mut x2 = DistVec::zeros(layout, c.rank());
-            let plain = gmres(&c, &a, &spmv, &b, &mut x2, None, 30, 1e-8, 300);
+            let plain = gmres(&c, &op, &b, &mut x2, None, 30, 1e-8, 300);
             assert!(with_pc.converged);
             assert!(
                 with_pc.iterations < plain.iterations,
@@ -242,11 +244,12 @@ mod tests {
         w.run(|c| {
             let a = grid_laplacian(Grid3::cube(4), c.rank(), c.size());
             let spmv = DistSpmv::new(&c, &a);
+            let op = CsrOperator::new(&a, &spmv);
             let layout = a.row_layout.clone();
             let b = DistVec::from_fn(layout.clone(), c.rank(), |g| (g as f64).cos());
             // tiny restart forces many outer cycles
             let mut x = DistVec::zeros(layout, c.rank());
-            let res = gmres(&c, &a, &spmv, &b, &mut x, None, 5, 1e-8, 2000);
+            let res = gmres(&c, &op, &b, &mut x, None, 5, 1e-8, 2000);
             assert!(res.converged, "GMRES(5) stalled");
         });
     }

@@ -15,13 +15,13 @@
 use std::rc::Rc;
 
 use crate::agglomerate::{choose_active_ranks, telescope_operators, Telescope};
-use crate::dist::{Comm, CommStats, DistCsr};
-use crate::gen::{trilinear_interp, Grid3};
+use crate::dist::{Comm, CommStats, CsrOperator, DistCsr, DistOperator, DistSpmv, DistVec, Layout};
+use crate::gen::{trilinear_interp, Grid3, StencilOperator};
 use crate::mem::{Cat, MemTracker};
 use crate::ptap::{Algo, Ptap, PtapStats};
 use crate::reuse::RetainedLevel;
 
-use super::aggregate::{aggregate_interp, AggregateOpts};
+use super::aggregate::{aggregate_interp_with_refresh, AggregateOpts};
 
 /// How interpolations are produced.
 #[derive(Debug, Clone)]
@@ -87,11 +87,177 @@ pub struct InterpStats {
     pub cols_max: u64,
 }
 
+/// How a level stores its operator: assembled tables, or the matrix-free
+/// stencil form (level 0 of a structured-grid hierarchy — O(stencil)
+/// memory instead of O(nnz)).
+pub enum LevelOp {
+    Csr(DistCsr),
+    Stencil(StencilOperator),
+}
+
+impl LevelOp {
+    /// The assembled tables; panics on a matrix-free level (callers that
+    /// can face one must match instead).
+    pub fn csr(&self) -> &DistCsr {
+        match self {
+            LevelOp::Csr(a) => a,
+            LevelOp::Stencil(_) => panic!("level is matrix-free: no assembled CSR"),
+        }
+    }
+
+    pub fn csr_mut(&mut self) -> &mut DistCsr {
+        match self {
+            LevelOp::Csr(a) => a,
+            LevelOp::Stencil(_) => panic!("level is matrix-free: no assembled CSR"),
+        }
+    }
+
+    pub fn is_matrix_free(&self) -> bool {
+        matches!(self, LevelOp::Stencil(_))
+    }
+
+    pub fn row_layout(&self) -> &Layout {
+        match self {
+            LevelOp::Csr(a) => &a.row_layout,
+            LevelOp::Stencil(s) => &s.layout,
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        match self {
+            LevelOp::Csr(a) => a.rank,
+            LevelOp::Stencil(s) => s.rank,
+        }
+    }
+
+    pub fn local_nrows(&self) -> usize {
+        self.row_layout().local_size(self.rank())
+    }
+
+    pub fn bytes(&self) -> u64 {
+        match self {
+            LevelOp::Csr(a) => a.bytes(),
+            LevelOp::Stencil(s) => s.bytes(),
+        }
+    }
+
+    pub fn nnz_global(&self, comm: &Comm) -> u64 {
+        match self {
+            LevelOp::Csr(a) => a.nnz_global(comm),
+            LevelOp::Stencil(s) => s.nnz_global(comm),
+        }
+    }
+
+    pub fn row_nnz_stats(&self, comm: &Comm) -> (u64, u64, f64) {
+        match self {
+            LevelOp::Csr(a) => a.row_nnz_stats(comm),
+            LevelOp::Stencil(s) => s.row_nnz_stats(comm),
+        }
+    }
+
+    /// The [`DistOperator`] view: a CSR level borrows its prebuilt
+    /// [`DistSpmv`] plan (must be `Some`), a stencil level applies itself.
+    pub fn operator<'a>(&'a self, spmv: Option<&'a DistSpmv>) -> OpHandle<'a> {
+        match self {
+            LevelOp::Csr(a) => {
+                OpHandle::Csr(CsrOperator::new(a, spmv.expect("CSR level needs its DistSpmv")))
+            }
+            LevelOp::Stencil(s) => OpHandle::Stencil(s),
+        }
+    }
+}
+
+/// Borrowed [`DistOperator`] over a level (CSR view or stencil).
+pub enum OpHandle<'a> {
+    Csr(CsrOperator<'a>),
+    Stencil(&'a StencilOperator),
+}
+
+impl DistOperator for OpHandle<'_> {
+    fn rank(&self) -> usize {
+        match self {
+            OpHandle::Csr(o) => o.rank(),
+            OpHandle::Stencil(s) => DistOperator::rank(*s),
+        }
+    }
+
+    fn row_layout(&self) -> &Layout {
+        match self {
+            OpHandle::Csr(o) => o.row_layout(),
+            OpHandle::Stencil(s) => DistOperator::row_layout(*s),
+        }
+    }
+
+    fn apply(&self, comm: &Comm, x: &DistVec, y: &mut DistVec) {
+        match self {
+            OpHandle::Csr(o) => o.apply(comm, x, y),
+            OpHandle::Stencil(s) => s.apply(comm, x, y),
+        }
+    }
+
+    fn diagonal(&self) -> Vec<f64> {
+        match self {
+            OpHandle::Csr(o) => o.diagonal(),
+            OpHandle::Stencil(s) => s.diagonal(),
+        }
+    }
+
+    fn row_norms1(&self) -> Vec<f64> {
+        match self {
+            OpHandle::Csr(o) => o.row_norms1(),
+            OpHandle::Stencil(s) => s.row_norms1(),
+        }
+    }
+
+    fn row_nnz_stats(&self, comm: &Comm) -> (u64, u64, f64) {
+        match self {
+            OpHandle::Csr(o) => o.row_nnz_stats(comm),
+            OpHandle::Stencil(s) => DistOperator::row_nnz_stats(*s, comm),
+        }
+    }
+
+    fn nnz_global(&self, comm: &Comm) -> u64 {
+        match self {
+            OpHandle::Csr(o) => o.nnz_global(comm),
+            OpHandle::Stencil(s) => DistOperator::nnz_global(*s, comm),
+        }
+    }
+
+    fn bytes(&self) -> u64 {
+        match self {
+            OpHandle::Csr(o) => DistOperator::bytes(o),
+            OpHandle::Stencil(s) => DistOperator::bytes(*s),
+        }
+    }
+
+    fn sor_sweep(
+        &self,
+        comm: &Comm,
+        dinv: &[f64],
+        omega: f64,
+        b: &DistVec,
+        x: &mut DistVec,
+        symmetric: bool,
+    ) {
+        match self {
+            OpHandle::Csr(o) => o.sor_sweep(comm, dinv, omega, b, x, symmetric),
+            OpHandle::Stencil(s) => s.sor_sweep(comm, dinv, omega, b, x, symmetric),
+        }
+    }
+
+    fn halo_reuses(&self) -> u64 {
+        match self {
+            OpHandle::Csr(o) => o.halo_reuses(),
+            OpHandle::Stencil(s) => DistOperator::halo_reuses(*s),
+        }
+    }
+}
+
 /// One level: its operator, the interpolation to the next coarser one,
 /// and — when the next level was agglomerated — the telescope boundary
 /// sitting below it.
 pub struct Level {
-    pub a: DistCsr,
+    pub a: LevelOp,
     pub p: Option<DistCsr>,
     /// `Some` when the next-coarser level lives on a sub-communicator
     /// (shared with the preconditioner's level contexts).
@@ -152,6 +318,17 @@ fn op_stats(comm: &Comm, a: &DistCsr) -> LevelStats {
     }
 }
 
+fn op_stats_level(comm: &Comm, a: &LevelOp) -> LevelStats {
+    let (cols_min, cols_max, cols_avg) = a.row_nnz_stats(comm);
+    LevelStats {
+        rows: comm.allreduce_sum_u64(a.local_nrows() as u64),
+        nnz: a.nnz_global(comm),
+        cols_min,
+        cols_max,
+        cols_avg,
+    }
+}
+
 fn interp_stats(comm: &Comm, p: &DistCsr) -> InterpStats {
     let (cols_min, cols_max, _) = p.row_nnz_stats(comm);
     InterpStats {
@@ -177,9 +354,34 @@ pub fn build_hierarchy(
     cfg: HierarchyConfig,
     tracker: &MemTracker,
 ) -> Hierarchy {
+    build_hierarchy_op(comm, LevelOp::Csr(a0), coarsening, cfg, tracker)
+}
+
+/// Build a hierarchy whose finest level is matrix-free (collective):
+/// level 0 holds only the stencil coefficients and footprint halo plan.
+/// When a coarser level must be built, `A₀` is assembled once into a
+/// scratch charged to [`Cat::Aux`] and dropped right after the level-1
+/// triple product — the tracker shows the level-0 CSR savings either way.
+pub fn build_hierarchy_matrix_free(
+    comm: &Comm,
+    a0: StencilOperator,
+    coarsening: &Coarsening,
+    cfg: HierarchyConfig,
+    tracker: &MemTracker,
+) -> Hierarchy {
+    build_hierarchy_op(comm, LevelOp::Stencil(a0), coarsening, cfg, tracker)
+}
+
+fn build_hierarchy_op(
+    comm: &Comm,
+    a0: LevelOp,
+    coarsening: &Coarsening,
+    cfg: HierarchyConfig,
+    tracker: &MemTracker,
+) -> Hierarchy {
     let mut cur = comm.clone();
     let mut levels: Vec<Level> = Vec::new();
-    let mut op_stats_v = vec![op_stats(&cur, &a0)];
+    let mut op_stats_v = vec![op_stats_level(&cur, &a0)];
     let mut interp_stats_v = Vec::new();
     let mut active_ranks = vec![cur.size()];
     let mut level_comm: Vec<CommStats> = Vec::new();
@@ -191,28 +393,56 @@ pub fn build_hierarchy(
     let mut a = a0;
     let mut k = 0usize;
     loop {
-        // decide whether to coarsen further and build P
-        let p = match coarsening {
+        // decide whether to coarsen further (collective sequence is
+        // identical to the historical per-variant checks)
+        let will_coarsen = match coarsening {
             Coarsening::Geometric { grids } => {
-                if k + 1 >= grids.len() {
-                    None
-                } else {
+                if k + 1 < grids.len() {
                     debug_assert_eq!(grids[k + 1].refine(), grids[k], "grid chain broken");
-                    Some(trilinear_interp(grids[k + 1], cur.rank(), cur.size()))
+                    true
+                } else {
+                    false
                 }
             }
-            Coarsening::Aggregation { opts, min_rows, max_levels } => {
+            Coarsening::Aggregation { min_rows, max_levels, .. } => {
                 let global_rows = cur.allreduce_sum_u64(a.local_nrows() as u64);
-                if global_rows <= *min_rows as u64 || k + 1 >= *max_levels {
-                    None
-                } else {
-                    Some(aggregate_interp(&cur, &a, *opts))
-                }
+                global_rows > *min_rows as u64 && k + 1 < *max_levels
             }
         };
-        let Some(p) = p else {
+        if !will_coarsen {
             levels.push(Level { a, p: None, telescope: None });
             break;
+        }
+        // a matrix-free level assembles its tables once into a scratch
+        // for everything the coarsening needs explicit CSR for (strength
+        // graph, telescoping, the triple product); the scratch is dropped
+        // as soon as the next level's operator exists
+        let scratch: Option<DistCsr> = match &a {
+            LevelOp::Stencil(s) => {
+                let m = s.assemble();
+                tracker.alloc(Cat::Aux, m.bytes());
+                Some(m)
+            }
+            LevelOp::Csr(_) => None,
+        };
+        let scratch_bytes = scratch.as_ref().map_or(0, |m| m.bytes());
+        let free_scratch = |sc: Option<DistCsr>| {
+            if sc.is_some() {
+                tracker.free(Cat::Aux, scratch_bytes);
+            }
+        };
+        let a_csr: &DistCsr = match &scratch {
+            Some(m) => m,
+            None => a.csr(),
+        };
+        let (p, mut interp_refresh) = match coarsening {
+            Coarsening::Geometric { grids } => {
+                (trilinear_interp(grids[k + 1], cur.rank(), cur.size()), None)
+            }
+            Coarsening::Aggregation { opts, .. } => {
+                let (p, ir) = aggregate_interp_with_refresh(&cur, a_csr, *opts, cfg.retain);
+                (p, ir)
+            }
         };
         tracker.alloc(Cat::MatP, p.bytes());
         interp_stats_v.push(interp_stats(&cur, &p));
@@ -228,7 +458,7 @@ pub fn build_hierarchy(
             // telescope A and P onto the active prefix; the triple
             // product (and everything coarser) runs inside the subcomm
             let before = cur.stats_global();
-            let (tel, ops) = telescope_operators(&cur, &a, &p, kact);
+            let (tel, ops) = telescope_operators(&cur, a_csr, &p, kact);
             let delta = cur.stats_global().since(before);
             redist_comm.merge(delta);
             let telescoped_bytes = ops.as_ref().map_or(0, |(at, pt)| at.bytes() + pt.bytes());
@@ -239,12 +469,19 @@ pub fn build_hierarchy(
             let (Some(sc), Some((a_t, p_t))) = (subcomm, ops) else {
                 // idle rank: its hierarchy ends at the boundary level (a
                 // retain-mode refresh still replays the boundary's
-                // value-only redistribution, so mark the slot)
+                // value-only redistribution — and the local P value
+                // recompute — so mark the slot)
+                free_scratch(scratch);
                 if cfg.retain {
-                    retained.push(RetainedLevel { op: None, tele_ops: None });
+                    retained.push(RetainedLevel {
+                        op: None,
+                        tele_ops: None,
+                        interp: interp_refresh.take(),
+                    });
                 }
                 break;
             };
+            free_scratch(scratch);
             let before = sc.stats_global();
             let mut op = Ptap::symbolic(cfg.algo, &sc, &a_t, &p_t, tracker);
             for _ in 0..cfg.numeric_repeats {
@@ -259,7 +496,11 @@ pub fn build_hierarchy(
                 // keep the op, the telescoped copies and their Comm
                 // charge alive: the refresh resends values over the
                 // retained fine plan and re-runs numeric in place
-                retained.push(RetainedLevel { op: Some(op), tele_ops: Some((a_t, p_t)) });
+                retained.push(RetainedLevel {
+                    op: Some(op),
+                    tele_ops: Some((a_t, p_t)),
+                    interp: interp_refresh.take(),
+                });
             } else {
                 if cfg.cache {
                     cached_ops.push(op);
@@ -271,20 +512,25 @@ pub fn build_hierarchy(
                 drop((a_t, p_t));
             }
             cur = sc;
-            a = c;
+            a = LevelOp::Csr(c);
         } else {
             // the paper's protocol: one symbolic + `numeric_repeats`
             // numerics on the current communicator
             let before = cur.stats_global();
-            let mut op = Ptap::symbolic(cfg.algo, &cur, &a, &p, tracker);
+            let mut op = Ptap::symbolic(cfg.algo, &cur, a_csr, &p, tracker);
             for _ in 0..cfg.numeric_repeats {
-                op.numeric(&cur, &a, &p);
+                op.numeric(&cur, a_csr, &p);
             }
             let c = op.extract_c();
+            free_scratch(scratch);
             tracker.alloc(Cat::MatC, c.bytes());
             total = sum_stats(total, op.stats);
             if cfg.retain {
-                retained.push(RetainedLevel { op: Some(op), tele_ops: None });
+                retained.push(RetainedLevel {
+                    op: Some(op),
+                    tele_ops: None,
+                    interp: interp_refresh.take(),
+                });
             } else if cfg.cache {
                 cached_ops.push(op);
             } else {
@@ -294,7 +540,7 @@ pub fn build_hierarchy(
             level_comm.push(cur.stats_global().since(before));
             active_ranks.push(cur.size());
             levels.push(Level { a, p: Some(p), telescope: None });
-            a = c;
+            a = LevelOp::Csr(c);
         }
         k += 1;
     }
@@ -365,7 +611,7 @@ mod tests {
             assert_eq!(h.op_stats[1].rows, 5 * 5 * 5);
             assert_eq!(h.op_stats[2].rows, 27);
             // Galerkin operators stay symmetric for symmetric A and full-rank P
-            let coarsest = h.levels[2].a.gather_global(&c);
+            let coarsest = h.levels[2].a.csr().gather_global(&c);
             assert!(coarsest.max_abs_diff(&coarsest.transpose()) < 1e-10);
         });
     }
@@ -436,7 +682,7 @@ mod tests {
                     HierarchyConfig { algo, ..Default::default() },
                     &tracker,
                 );
-                coarsest.push(h.levels.last().unwrap().a.gather_global(&c));
+                coarsest.push(h.levels.last().unwrap().a.csr().gather_global(&c));
             }
             assert!(coarsest[0].max_abs_diff(&coarsest[1]) < 1e-10);
             assert!(coarsest[0].max_abs_diff(&coarsest[2]) < 1e-10);

@@ -14,11 +14,11 @@ mod smoother;
 mod solver;
 mod transfer;
 
-pub use aggregate::{aggregate_interp, AggregateOpts};
+pub use aggregate::{aggregate_interp, aggregate_interp_with_refresh, AggregateOpts, InterpRefresh};
 pub use cycle::{CycleType, MgOpts, MgPreconditioner};
 pub use hierarchy::{
-    build_hierarchy, geometric_chain, Coarsening, Hierarchy, HierarchyConfig, InterpStats, Level,
-    LevelStats,
+    build_hierarchy, build_hierarchy_matrix_free, geometric_chain, Coarsening, Hierarchy,
+    HierarchyConfig, InterpStats, Level, LevelOp, LevelStats, OpHandle,
 };
 pub use gmres::gmres;
 pub use smoother::{

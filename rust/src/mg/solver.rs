@@ -1,6 +1,8 @@
 //! Outer Krylov solvers: preconditioned CG and Richardson iteration.
+//! Both are written against [`DistOperator`], so a matrix-free fine
+//! level drops in without touching the Krylov loop.
 
-use crate::dist::{Comm, DistCsr, DistSpmv, DistVec};
+use crate::dist::{Comm, DistOperator, DistVec};
 
 use super::cycle::MgPreconditioner;
 
@@ -17,22 +19,21 @@ pub struct SolveResult {
 /// `‖r‖ <= rtol * ‖r₀‖` (collective).  `pc = None` runs plain CG.
 pub fn pcg(
     comm: &Comm,
-    a: &DistCsr,
-    spmv: &DistSpmv,
+    a: &dyn DistOperator,
     b: &DistVec,
     x: &mut DistVec,
     mut pc: Option<&mut MgPreconditioner>,
     rtol: f64,
     max_iters: usize,
 ) -> SolveResult {
-    let layout = a.row_layout.clone();
+    let layout = a.row_layout().clone();
     let rank = comm.rank();
     let mut r = DistVec::zeros(layout.clone(), rank);
     let mut z = DistVec::zeros(layout.clone(), rank);
     let mut q = DistVec::zeros(layout.clone(), rank);
 
     // r = b - A x
-    spmv.apply(comm, a, x, &mut q);
+    a.apply(comm, x, &mut q);
     r.vals.clone_from(&b.vals);
     for i in 0..r.vals.len() {
         r.vals[i] -= q.vals[i];
@@ -55,7 +56,7 @@ pub fn pcg(
     let mut p = z.clone();
     let mut rz = r.dot(comm, &z);
     for it in 1..=max_iters {
-        spmv.apply(comm, a, &p, &mut q);
+        a.apply(comm, &p, &mut q);
         let pq = p.dot(comm, &q);
         let alpha = rz / pq;
         x.axpy(alpha, &p);
@@ -77,20 +78,19 @@ pub fn pcg(
 /// Richardson iteration `x += M⁻¹ (b − A x)` (stationary MG solve).
 pub fn richardson(
     comm: &Comm,
-    a: &DistCsr,
-    spmv: &DistSpmv,
+    a: &dyn DistOperator,
     b: &DistVec,
     x: &mut DistVec,
     pc: &mut MgPreconditioner,
     rtol: f64,
     max_iters: usize,
 ) -> SolveResult {
-    let layout = a.row_layout.clone();
+    let layout = a.row_layout().clone();
     let rank = comm.rank();
     let mut r = DistVec::zeros(layout.clone(), rank);
     let mut z = DistVec::zeros(layout.clone(), rank);
     let mut ax = DistVec::zeros(layout, rank);
-    spmv.apply(comm, a, x, &mut ax);
+    a.apply(comm, x, &mut ax);
     r.vals.clone_from(&b.vals);
     for i in 0..r.vals.len() {
         r.vals[i] -= ax.vals[i];
@@ -100,7 +100,7 @@ pub fn richardson(
     for it in 1..=max_iters {
         pc.apply(comm, &r, &mut z);
         x.axpy(1.0, &z);
-        spmv.apply(comm, a, x, &mut ax);
+        a.apply(comm, x, &mut ax);
         r.vals.clone_from(&b.vals);
         for i in 0..r.vals.len() {
             r.vals[i] -= ax.vals[i];
@@ -117,7 +117,7 @@ pub fn richardson(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dist::World;
+    use crate::dist::{CsrOperator, DistSpmv, World};
     use crate::gen::{grid_laplacian, Grid3};
     use crate::mem::MemTracker;
     use crate::mg::cycle::MgOpts;
@@ -129,12 +129,13 @@ mod tests {
         w.run(|c| {
             let a = grid_laplacian(Grid3::cube(4), c.rank(), c.size());
             let spmv = DistSpmv::new(&c, &a);
+            let op = CsrOperator::new(&a, &spmv);
             let layout = a.row_layout.clone();
             let xs = DistVec::from_fn(layout.clone(), c.rank(), |g| (g as f64 * 0.37).sin());
             let mut b = DistVec::zeros(layout.clone(), c.rank());
-            spmv.apply(&c, &a, &xs, &mut b);
+            op.apply(&c, &xs, &mut b);
             let mut x = DistVec::zeros(layout, c.rank());
-            let res = pcg(&c, &a, &spmv, &b, &mut x, None, 1e-10, 500);
+            let res = pcg(&c, &op, &b, &mut x, None, 1e-10, 500);
             assert!(res.converged, "CG stalled: {:?}", res.residuals.last());
             let mut err = x.clone();
             err.axpy(-1.0, &xs);
@@ -159,10 +160,11 @@ mod tests {
                 &tracker,
             );
             let spmv = DistSpmv::new(&c, &a);
+            let op = CsrOperator::new(&a, &spmv);
             let mut pc = MgPreconditioner::new(&c, h, MgOpts::default());
             let b = DistVec::from_fn(layout.clone(), c.rank(), |g| ((g * 13 % 7) as f64) - 3.0);
             let mut x = DistVec::zeros(layout, c.rank());
-            let res = pcg(&c, &a, &spmv, &b, &mut x, Some(&mut pc), 1e-8, 60);
+            let res = pcg(&c, &op, &b, &mut x, Some(&mut pc), 1e-8, 60);
             assert!(res.converged);
             assert!(
                 res.iterations <= 15,

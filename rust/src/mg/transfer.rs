@@ -12,6 +12,8 @@
 //! full-communicator bits only when the products are exact (e.g. the
 //! model problem's power-of-two weights against exact values).
 
+use std::cell::{Cell, RefCell};
+
 use crate::dist::{Comm, DistCsr, DistVec, VecGatherPlan};
 use crate::util::bytebuf::{ByteReader, ByteWriter};
 
@@ -25,6 +27,9 @@ pub struct Transfer {
     /// Per-fine-row offd split ([`DistCsr::offd_split`]), precomputed for
     /// prolongation's global-column-order fold.
     splits: Vec<u32>,
+    /// Persistent prolongation halo buffer (warm after the first cycle).
+    buf: RefCell<Vec<f64>>,
+    reuses: Cell<u64>,
 }
 
 impl Transfer {
@@ -34,13 +39,22 @@ impl Transfer {
         let garray_owner =
             p.garray.iter().map(|&g| p.col_layout.owner(g as usize)).collect();
         let splits = (0..p.local_nrows()).map(|i| p.offd_split(i) as u32).collect();
-        Transfer { halo, garray_owner, splits }
+        Transfer { halo, garray_owner, splits, buf: RefCell::new(Vec::new()), reuses: Cell::new(0) }
+    }
+
+    /// Prolongation halo gathers served from the warm persistent buffer.
+    pub fn halo_reuses(&self) -> u64 {
+        self.reuses.get()
     }
 
     /// `x_f += P x_c` (collective).  Folds each row in ascending global
     /// column order, so the bits are partition-invariant.
     pub fn prolong_add(&self, comm: &Comm, p: &DistCsr, xc: &DistVec, xf: &mut DistVec) {
-        let halo = self.halo.gather(comm, &xc.vals);
+        let mut halo = self.buf.borrow_mut();
+        if halo.capacity() >= self.halo.n_needed() && self.halo.n_needed() > 0 {
+            self.reuses.set(self.reuses.get() + 1);
+        }
+        self.halo.gather_into(comm, &xc.vals, &mut halo);
         debug_assert_eq!(self.splits.len(), p.local_nrows());
         for i in 0..p.local_nrows() {
             let (dc, dv) = p.diag.row(i);

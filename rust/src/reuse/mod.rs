@@ -29,6 +29,7 @@ mod refresher;
 pub use refresher::{HierarchyRefresher, RefreshStats};
 
 use crate::dist::DistCsr;
+use crate::mg::InterpRefresh;
 use crate::ptap::Ptap;
 
 /// Symbolic state retained for one built triple product (one per level
@@ -40,14 +41,20 @@ pub struct RetainedLevel {
     pub op: Option<Ptap>,
     /// The telescoped `A`/`P` copies living in the sub-communicator's
     /// layouts (active ranks of a telescoped level; `None` elsewhere).
-    /// `refresh_csr` overwrites `A`'s values in place; `P` is structural
-    /// and never resent.
+    /// `refresh_csr` overwrites values in place: `A` always, and `P` too
+    /// when the prolongator is value-dependent (`interp` is `Some`) —
+    /// a geometric / tentative `P` is structural and never resent.
     pub tele_ops: Option<(DistCsr, DistCsr)>,
+    /// Value-only prolongator refresh context (smoothed aggregation:
+    /// `P = (I − ωD⁻¹A)·tent` recomputed locally from `A`'s new values).
+    /// `None` when `P` is value-static (geometric, tentative).
+    pub interp: Option<InterpRefresh>,
 }
 
 impl RetainedLevel {
     /// Heap bytes of the retained copies (the op accounts for itself).
     pub fn tele_bytes(&self) -> u64 {
         self.tele_ops.as_ref().map_or(0, |(a, p)| a.bytes() + p.bytes())
+            + self.interp.as_ref().map_or(0, |ir| ir.bytes())
     }
 }

@@ -3,8 +3,9 @@
 //! change.
 
 use crate::dist::{Comm, CommStats, DistCsr};
-use crate::mem::MemTracker;
-use crate::mg::{Hierarchy, MgOpts, MgPreconditioner};
+use crate::gen::StencilOperator;
+use crate::mem::{Cat, MemTracker};
+use crate::mg::{Hierarchy, LevelOp, MgOpts, MgPreconditioner};
 use crate::ptap::PtapStats;
 use crate::util::timer::BusyTimer;
 
@@ -33,6 +34,9 @@ pub struct RefreshStats {
     /// Tracker bytes currently held after the refresh (no growth vs the
     /// build: everything was preallocated).
     pub mem_current: u64,
+    /// Halo gathers during the refresh that hit warm persistent buffers
+    /// instead of allocating (SpMV, prolongation, and stencil halos).
+    pub halo_reuses: u64,
 }
 
 /// Hierarchy-wide numeric refresher (`MAT_REUSE_MATRIX` analog): wraps a
@@ -99,33 +103,80 @@ impl HierarchyRefresher {
     /// no plan or cycle scratch is re-allocated; the refreshed hierarchy
     /// is bit-identical to a from-scratch rebuild with the same values.
     pub fn refresh(&mut self, comm: &Comm, new_a0: &DistCsr) -> &RefreshStats {
+        self.pc.hierarchy.levels[0].a.csr_mut().copy_values_from(new_a0);
+        self.refresh_walk(comm)
+    }
+
+    /// Like [`HierarchyRefresher::refresh`] for a hierarchy whose finest
+    /// level is matrix-free: copy the stencil coefficients from
+    /// `new_fine` (same grid/footprint — an O(stencil) value-only
+    /// update), then replay the numeric walk.  The stencil is assembled
+    /// into a scratch CSR only for the duration of the level-0 product
+    /// and freed immediately after, exactly as during the build.
+    pub fn refresh_matrix_free(&mut self, comm: &Comm, new_fine: &StencilOperator) -> &RefreshStats {
+        match &mut self.pc.hierarchy.levels[0].a {
+            LevelOp::Stencil(s) => s.set_coefs_from(new_fine),
+            LevelOp::Csr(_) => panic!("finest level is assembled: use refresh()"),
+        }
+        self.refresh_walk(comm)
+    }
+
+    fn refresh_walk(&mut self, comm: &Comm) -> &RefreshStats {
         let before_global = comm.stats_global();
         let before_ptap = ptap_sum(&self.retained);
+        let before_reuses = self.pc.halo_reuses();
         let mut redist = CommStats::default();
         let mut timer = BusyTimer::new();
         timer.start();
 
         let h = &mut self.pc.hierarchy;
-        h.levels[0].a.copy_values_from(new_a0);
         let mut cur = comm.clone();
         let nlev = h.levels.len();
         for k in 0..nlev {
             let (head, tail) = h.levels.split_at_mut(k + 1);
-            let lvl = &head[k];
-            let Some(p) = &lvl.p else {
+            let lvl = &mut head[k];
+            let Some(p) = &mut lvl.p else {
                 break; // true coarsest level: nothing below to rebuild
             };
             let rl = &mut self.retained[k];
+            // A matrix-free level assembles its refreshed coefficients
+            // into a scratch CSR for the product, dropped right after.
+            let scratch: Option<DistCsr> = match &lvl.a {
+                LevelOp::Stencil(s) => {
+                    let m = s.assemble();
+                    self.tracker.alloc(Cat::Aux, m.bytes());
+                    Some(m)
+                }
+                LevelOp::Csr(_) => None,
+            };
+            let a_src: &DistCsr = match &scratch {
+                Some(m) => m,
+                None => lvl.a.csr(),
+            };
+            // value-only prolongator refresh (smoothed aggregation):
+            // rebuild S = I − ωD⁻¹A locally and recompute P = S·tent —
+            // zero traffic, the symbolic half is retained
+            if let Some(ir) = &rl.interp {
+                ir.refresh_values(a_src, p);
+            }
             let c_new = if let Some(tel) = &lvl.telescope {
-                // value-only scatter of A over the retained fine plan
-                // (collective on the parent scope; P is structural and
-                // stays put)
+                // value-only scatter of A (and of P when it is
+                // value-dependent) over the retained fine plans
+                // (collective on the parent scope)
                 let before = cur.stats_global();
-                tel.fine.refresh_csr(&cur, &lvl.a, rl.tele_ops.as_mut().map(|(a_t, _)| a_t));
+                tel.fine.refresh_csr(&cur, a_src, rl.tele_ops.as_mut().map(|(a_t, _)| a_t));
+                if rl.interp.is_some() {
+                    tel.fine.refresh_csr(&cur, p, rl.tele_ops.as_mut().map(|(_, p_t)| p_t));
+                }
                 redist.merge(cur.stats_global().since(before));
-                let Some(sc) = &tel.subcomm else {
-                    break; // idle rank: its refresh ends at the boundary
-                };
+                if tel.subcomm.is_none() {
+                    // idle rank: its refresh ends at the boundary
+                    if let Some(m) = scratch {
+                        self.tracker.free(Cat::Aux, m.bytes());
+                    }
+                    break;
+                }
+                let sc = tel.subcomm.as_ref().unwrap();
                 let (a_t, p_t) =
                     rl.tele_ops.as_ref().expect("active rank retains its telescoped copies");
                 let op = rl.op.as_mut().expect("active rank retains its op");
@@ -135,10 +186,13 @@ impl HierarchyRefresher {
                 c
             } else {
                 let op = rl.op.as_mut().expect("non-telescoped level retains its op");
-                op.numeric(&cur, &lvl.a, p);
+                op.numeric(&cur, a_src, p);
                 op.extract_c()
             };
-            tail[0].a.copy_values_from(&c_new);
+            if let Some(m) = scratch {
+                self.tracker.free(Cat::Aux, m.bytes());
+            }
+            tail[0].a.csr_mut().copy_values_from(&c_new);
         }
         // value-dependent solver state: smoother diagonals/ω bounds and
         // the deepest scope's direct factorization (collective, same
@@ -159,6 +213,7 @@ impl HierarchyRefresher {
             ptap,
             modeled_secs,
             mem_current: self.tracker.current_total(),
+            halo_reuses: self.pc.halo_reuses() - before_reuses,
         });
         self.refreshes.last().unwrap()
     }

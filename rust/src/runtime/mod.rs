@@ -6,24 +6,32 @@
 //! interchange, see DESIGN.md / aot recipe), compiles it once on the PJRT
 //! CPU client, and executes batched block kernels from the numeric phase.
 //!
-//! The PJRT client itself sits behind the off-by-default `pjrt` cargo
-//! feature (it needs the `xla` crate, unavailable offline).  Without the
-//! feature a stub [`KernelRuntime`] reports the missing feature from its
-//! `load*` constructors and [`BlockBackend::Native`] carries the block
-//! numeric path, so every consumer compiles and runs unchanged.
+//! Two cargo features stage the accelerator seam:
+//!
+//! - `pjrt` — the seam itself: batch sizes, artifact manifests, and every
+//!   consumer's `BlockBackend::Pjrt` code path compile (CI builds this
+//!   offline), but `KernelRuntime::load*` still report the client as
+//!   unavailable;
+//! - `pjrt-xla` (implies `pjrt`) — additionally compiles the real PJRT
+//!   CPU client, which needs the `xla` crate (unavailable offline).
+//!
+//! Without `pjrt-xla` the stub [`KernelRuntime`] reports the missing
+//! client from its `load*` constructors and [`BlockBackend::Native`]
+//! carries the block numeric path, so every consumer compiles and runs
+//! unchanged.
 
 mod batcher;
 mod manifest;
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "pjrt-xla")]
 mod pjrt;
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(feature = "pjrt-xla"))]
 mod stub;
 
-pub use batcher::{BlockBackend, TripleBatcher};
+pub use batcher::{BlockBackend, SpmvBatcher, TripleBatcher};
 pub use manifest::{Manifest, ManifestEntry};
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "pjrt-xla")]
 pub use pjrt::KernelRuntime;
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(feature = "pjrt-xla"))]
 pub use stub::KernelRuntime;
 
 /// Default artifact directory relative to the repo root.

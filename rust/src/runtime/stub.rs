@@ -1,4 +1,4 @@
-//! Stub kernel runtime for builds without the `pjrt` feature.
+//! Stub kernel runtime for builds without the `pjrt-xla` feature.
 //!
 //! The type exists so `BlockBackend::Pjrt` and every call site compile
 //! unchanged, but it can never be constructed: `load*` report the missing
@@ -21,8 +21,8 @@ pub struct KernelRuntime {
 impl KernelRuntime {
     fn unavailable<T>(dir: &Path) -> Result<T> {
         Err(format_err!(
-            "artifacts found at {} but this binary was built without the `pjrt` feature \
-             (rebuild with --features pjrt and the xla dependency); the native backend \
+            "artifacts found at {} but this binary was built without the `pjrt-xla` feature \
+             (rebuild with --features pjrt-xla and the xla dependency); the native backend \
              remains available",
             dir.display()
         ))

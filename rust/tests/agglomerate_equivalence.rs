@@ -9,7 +9,7 @@
 //! (partition-invariant), and the coarsest direct solve assembles the
 //! gathered operator and right-hand side in global order on every rank.
 
-use galerkin_ptap::dist::{DistSpmv, DistVec, World};
+use galerkin_ptap::dist::{CsrOperator, DistSpmv, DistVec, World};
 use galerkin_ptap::gen::{grid_laplacian, Grid3};
 use galerkin_ptap::mat::Csr;
 use galerkin_ptap::mem::MemTracker;
@@ -52,7 +52,7 @@ fn run_case(
                 .filter_map(|l| l.telescope.as_ref())
                 .fold(None, |acc, tel| tel.subcomm.clone().or(acc))
                 .unwrap_or_else(|| comm.clone());
-            Some(h.levels.last().unwrap().a.gather_global(&ccomm))
+            Some(h.levels.last().unwrap().a.csr().gather_global(&ccomm))
         } else {
             None
         };
@@ -61,7 +61,8 @@ fn run_case(
         let layout = a0.row_layout.clone();
         let b = DistVec::from_fn(layout.clone(), comm.rank(), |g| ((g % 13) as f64) - 6.0);
         let mut x = DistVec::zeros(layout, comm.rank());
-        let res = pcg(&comm, &a0, &spmv, &b, &mut x, Some(&mut pc), 1e-10, 40);
+        let op = CsrOperator::new(&a0, &spmv);
+        let res = pcg(&comm, &op, &b, &mut x, Some(&mut pc), 1e-10, 40);
         let bits: Vec<u64> = res.residuals.iter().map(|r| r.to_bits()).collect();
         (bits, coarsest, active, level_msgs)
     });

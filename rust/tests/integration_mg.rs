@@ -3,7 +3,7 @@
 //! neutron-analog experiment plumbing.
 
 use galerkin_ptap::coordinator::{run_neutron, NeutronConfigExp};
-use galerkin_ptap::dist::{DistSpmv, DistVec, World};
+use galerkin_ptap::dist::{CsrOperator, DistSpmv, DistVec, World};
 use galerkin_ptap::gen::{grid_laplacian, Grid3};
 use galerkin_ptap::mem::MemTracker;
 use galerkin_ptap::mg::{
@@ -34,7 +34,7 @@ fn mg_pcg_converges_for_all_algos_and_ranks() {
             world.run(|comm| {
                 let grids = geometric_chain(Grid3::cube(4), 3);
                 let h = build_geo(&comm, &grids, algo);
-                let a = h.levels[0].a.clone();
+                let a = h.levels[0].a.csr().clone();
                 let spmv = DistSpmv::new(&comm, &a);
                 let mut pc = MgPreconditioner::new(&comm, h, MgOpts::default());
                 let layout = a.row_layout.clone();
@@ -42,7 +42,8 @@ fn mg_pcg_converges_for_all_algos_and_ranks() {
                     ((g * 31 % 11) as f64) - 5.0
                 });
                 let mut x = DistVec::zeros(layout, comm.rank());
-                let res = pcg(&comm, &a, &spmv, &b, &mut x, Some(&mut pc), 1e-8, 40);
+                let op = CsrOperator::new(&a, &spmv);
+                let res = pcg(&comm, &op, &b, &mut x, Some(&mut pc), 1e-8, 40);
                 assert!(res.converged, "np={np} {}", algo.name());
                 assert!(
                     res.iterations <= 16,
@@ -65,13 +66,14 @@ fn iteration_count_stays_bounded_with_depth() {
         for levels in [2usize, 3, 4] {
             let grids = geometric_chain(Grid3::cube(3), levels);
             let h = build_geo(&comm, &grids, Algo::AllAtOnce);
-            let a = h.levels[0].a.clone();
+            let a = h.levels[0].a.csr().clone();
             let spmv = DistSpmv::new(&comm, &a);
             let mut pc = MgPreconditioner::new(&comm, h, MgOpts::default());
             let layout = a.row_layout.clone();
             let b = DistVec::from_fn(layout.clone(), comm.rank(), |_| 1.0);
             let mut x = DistVec::zeros(layout, comm.rank());
-            let res = pcg(&comm, &a, &spmv, &b, &mut x, Some(&mut pc), 1e-8, 60);
+            let op = CsrOperator::new(&a, &spmv);
+            let res = pcg(&comm, &op, &b, &mut x, Some(&mut pc), 1e-8, 60);
             assert!(res.converged, "levels={levels}");
             iters.push(res.iterations);
         }
@@ -105,11 +107,12 @@ fn amg_hierarchy_preconditions() {
         let layout = a.row_layout.clone();
         let b = DistVec::from_fn(layout.clone(), comm.rank(), |_| 1.0);
         let mut x = DistVec::zeros(layout, comm.rank());
-        let res = pcg(&comm, &a, &spmv, &b, &mut x, Some(&mut pc), 1e-8, 60);
+        let op = CsrOperator::new(&a, &spmv);
+        let res = pcg(&comm, &op, &b, &mut x, Some(&mut pc), 1e-8, 60);
         assert!(res.converged);
         // must beat unpreconditioned CG on iteration count
         let mut x2 = DistVec::zeros(a.row_layout.clone(), comm.rank());
-        let plain = pcg(&comm, &a, &spmv, &b, &mut x2, None, 1e-8, 200);
+        let plain = pcg(&comm, &op, &b, &mut x2, None, 1e-8, 200);
         // on a 12³ grid plain CG needs noticeably more iterations
         assert!(
             res.iterations < plain.iterations,
@@ -182,14 +185,15 @@ fn w_cycle_converges_no_slower_than_v() {
         let mut iters = Vec::new();
         for cycle in [CycleType::V, CycleType::W] {
             let h = build_geo(&comm, &grids, Algo::AllAtOnce);
-            let a = h.levels[0].a.clone();
+            let a = h.levels[0].a.csr().clone();
             let spmv = DistSpmv::new(&comm, &a);
             let mut pc =
                 MgPreconditioner::new(&comm, h, MgOpts { cycle, ..Default::default() });
             let layout = a.row_layout.clone();
             let b = DistVec::from_fn(layout.clone(), comm.rank(), |g| (g as f64).sin());
             let mut x = DistVec::zeros(layout, comm.rank());
-            let res = pcg(&comm, &a, &spmv, &b, &mut x, Some(&mut pc), 1e-8, 60);
+            let op = CsrOperator::new(&a, &spmv);
+            let res = pcg(&comm, &op, &b, &mut x, Some(&mut pc), 1e-8, 60);
             assert!(res.converged, "{cycle:?}");
             iters.push(res.iterations);
         }
@@ -224,7 +228,8 @@ fn mg_gmres_on_neutron_operator() {
         let layout = a.row_layout.clone();
         let b = DistVec::from_fn(layout.clone(), comm.rank(), |_| 1.0);
         let mut x = DistVec::zeros(layout, comm.rank());
-        let res = gmres(&comm, &a, &spmv, &b, &mut x, Some(&mut pc), 30, 1e-8, 100);
+        let op = CsrOperator::new(&a, &spmv);
+        let res = gmres(&comm, &op, &b, &mut x, Some(&mut pc), 30, 1e-8, 100);
         assert!(res.converged, "MG-GMRES stalled on the transport operator");
     });
 }
@@ -244,7 +249,7 @@ fn all_smoothers_drive_mg() {
             SmootherKind::HybridSor,
         ] {
             let h = build_geo(&comm, &grids, Algo::AllAtOnce);
-            let a = h.levels[0].a.clone();
+            let a = h.levels[0].a.csr().clone();
             let spmv = DistSpmv::new(&comm, &a);
             let mut pc = MgPreconditioner::new(
                 &comm,
@@ -254,7 +259,8 @@ fn all_smoothers_drive_mg() {
             let layout = a.row_layout.clone();
             let b = DistVec::from_fn(layout.clone(), comm.rank(), |g| ((g % 13) as f64) - 6.0);
             let mut x = DistVec::zeros(layout, comm.rank());
-            let res = pcg(&comm, &a, &spmv, &b, &mut x, Some(&mut pc), 1e-8, 40);
+            let op = CsrOperator::new(&a, &spmv);
+            let res = pcg(&comm, &op, &b, &mut x, Some(&mut pc), 1e-8, 40);
             assert!(res.converged, "{sm:?}");
             iters.push((sm, res.iterations));
         }

@@ -1,0 +1,192 @@
+//! Matrix-free fine level ≡ assembled fine level (DESIGN.md §10).
+//!
+//! The stencil operator stores its entries in ascending linearized-delta
+//! order, which coincides with ascending global column order — the same
+//! fold order `DistSpmv` uses — so an MG-PCG solve whose level 0 is a
+//! [`StencilOperator`] must produce a *bitwise* identical residual
+//! history to one whose level 0 is the assembled `DistCsr`.  These tests
+//! pin that equivalence for the 7-point grid Laplacian and the
+//! backward-Euler heat operator, with and without coarse-level
+//! telescoping, and check the matrix-free build actually shrinks level-0
+//! operator storage to the stencil footprint.
+
+use galerkin_ptap::dist::{CsrOperator, DistOperator, DistSpmv, DistVec, World};
+use galerkin_ptap::gen::{grid_laplacian, heat_operator, Grid3, StencilOperator};
+use galerkin_ptap::mem::{Cat, MemTracker};
+use galerkin_ptap::mg::{
+    build_hierarchy, build_hierarchy_matrix_free, geometric_chain, pcg, Coarsening,
+    HierarchyConfig, MgOpts, MgPreconditioner, OpHandle,
+};
+
+struct SolveOutcome {
+    residuals: Vec<f64>,
+    iterations: usize,
+    converged: bool,
+    /// Global fine-operator storage (CSR tables + SpMV plan, or stencil
+    /// coefficients + footprint halo plan).
+    op_bytes: u64,
+    /// Tracked bytes alive after the hierarchy build (max rank) — the
+    /// scratch `A₀` assembly must already be freed here.
+    cur_bytes: u64,
+    halo_reuses: u64,
+}
+
+/// Build the geometric hierarchy (assembled or matrix-free fine level),
+/// run MG-PCG against the matching external fine operator, and report
+/// the residual history plus the storage evidence.
+fn mg_solve(
+    scenario: &str,
+    mf: bool,
+    coarse: Grid3,
+    levels: usize,
+    np: usize,
+    eq_limit: Option<usize>,
+) -> SolveOutcome {
+    let dt = 0.05;
+    let world = World::new(np);
+    let grids = geometric_chain(coarse, levels);
+    let mut per_rank = world.run(|comm| {
+        let (rank, size) = (comm.rank(), comm.size());
+        let fine = grids[0];
+        let tracker = MemTracker::new();
+        let coarsening = Coarsening::Geometric { grids: grids.clone() };
+        let cfg = HierarchyConfig { eq_limit, ..HierarchyConfig::default() };
+        // external fine operator for pcg (the hierarchy holds its own
+        // level-0 copy either way)
+        let mut sten = None;
+        let mut assembled = None;
+        let h = if mf {
+            let s0 = match scenario {
+                "grid" => StencilOperator::laplacian(&comm, fine),
+                _ => StencilOperator::heat(&comm, fine, dt),
+            };
+            tracker.alloc(Cat::MatA, DistOperator::bytes(&s0));
+            sten = Some(match scenario {
+                "grid" => StencilOperator::laplacian(&comm, fine),
+                _ => StencilOperator::heat(&comm, fine, dt),
+            });
+            build_hierarchy_matrix_free(&comm, s0, &coarsening, cfg, &tracker)
+        } else {
+            let a0 = match scenario {
+                "grid" => grid_laplacian(fine, rank, size),
+                _ => heat_operator(fine, rank, size, dt),
+            };
+            tracker.alloc(Cat::MatA, a0.bytes());
+            let h = build_hierarchy(&comm, a0.clone(), &coarsening, cfg, &tracker);
+            let spmv = DistSpmv::new(&comm, &a0);
+            assembled = Some((a0, spmv));
+            h
+        };
+        let op: OpHandle<'_> = match (&sten, &assembled) {
+            (Some(s), _) => OpHandle::Stencil(s),
+            (_, Some((a, spmv))) => OpHandle::Csr(CsrOperator::new(a, spmv)),
+            _ => unreachable!(),
+        };
+        let layout = op.row_layout().clone();
+        let local_op_bytes = match &assembled {
+            Some((a, spmv)) => a.bytes() + spmv.bytes(),
+            None => DistOperator::bytes(sten.as_ref().unwrap()),
+        };
+        let op_bytes = comm.allreduce_sum_u64(local_op_bytes);
+        let mut pc = MgPreconditioner::new(&comm, h, MgOpts::default());
+        let b = DistVec::from_fn(layout.clone(), rank, |g| ((g % 23) as f64 - 11.0) / 11.0);
+        let mut x = DistVec::zeros(layout, rank);
+        let res = pcg(&comm, &op, &b, &mut x, Some(&mut pc), 1e-10, 80);
+        let halo_reuses = comm.allreduce_sum_u64(op.halo_reuses() + pc.halo_reuses());
+        (
+            res.residuals,
+            res.iterations,
+            res.converged,
+            op_bytes,
+            tracker.current_total(),
+            halo_reuses,
+        )
+    });
+    let cur_bytes = per_rank.iter().map(|r| r.4).max().unwrap();
+    let (residuals, iterations, converged, op_bytes, _, halo_reuses) = per_rank.remove(0);
+    SolveOutcome { residuals, iterations, converged, op_bytes, cur_bytes, halo_reuses }
+}
+
+fn assert_bitwise(tag: &str, csr: &SolveOutcome, mf: &SolveOutcome) {
+    assert_eq!(
+        csr.residuals.len(),
+        mf.residuals.len(),
+        "{tag}: residual history length diverged (csr {} vs mf {})",
+        csr.residuals.len(),
+        mf.residuals.len()
+    );
+    for (k, (u, v)) in csr.residuals.iter().zip(mf.residuals.iter()).enumerate() {
+        assert_eq!(
+            u.to_bits(),
+            v.to_bits(),
+            "{tag}: residual {k} differs between csr ({u:e}) and mf ({v:e})"
+        );
+    }
+    assert_eq!(csr.iterations, mf.iterations, "{tag}: iteration counts diverged");
+    assert_eq!(csr.converged, mf.converged, "{tag}: convergence flags diverged");
+}
+
+fn assert_memory_savings(tag: &str, csr: &SolveOutcome, mf: &SolveOutcome) {
+    // stencil storage is O(coefficients + halo plan), not O(nnz): demand
+    // a wide margin, not a few stray bytes
+    assert!(
+        mf.op_bytes * 4 < csr.op_bytes,
+        "{tag}: matrix-free fine operator should be >4x smaller \
+         (mf {} bytes vs csr {} bytes)",
+        mf.op_bytes,
+        csr.op_bytes
+    );
+    assert!(
+        mf.cur_bytes < csr.cur_bytes,
+        "{tag}: tracked bytes after build should drop without a level-0 CSR \
+         (mf {} vs csr {})",
+        mf.cur_bytes,
+        csr.cur_bytes
+    );
+    assert!(mf.halo_reuses > 0, "{tag}: persistent halo buffers never reused");
+}
+
+#[test]
+fn grid_matrix_free_solve_is_bit_identical() {
+    let coarse = Grid3::cube(3);
+    let csr = mg_solve("grid", false, coarse, 3, 4, None);
+    let mf = mg_solve("grid", true, coarse, 3, 4, None);
+    assert!(csr.converged, "grid: baseline solve must converge");
+    assert_bitwise("grid", &csr, &mf);
+    assert_memory_savings("grid", &csr, &mf);
+}
+
+#[test]
+fn heat_matrix_free_solve_is_bit_identical() {
+    let coarse = Grid3::cube(3);
+    let csr = mg_solve("heat", false, coarse, 3, 4, None);
+    let mf = mg_solve("heat", true, coarse, 3, 4, None);
+    assert!(csr.converged, "heat: baseline solve must converge");
+    assert_bitwise("heat", &csr, &mf);
+    assert_memory_savings("heat", &csr, &mf);
+}
+
+#[test]
+fn matrix_free_solve_is_bit_identical_under_telescoping() {
+    // coarsest 3³ = 27 rows < 16 × 4 ranks → telescopes onto 2 ranks;
+    // the matrix-free fine level must not perturb the agglomerated path
+    let coarse = Grid3::cube(3);
+    for scenario in ["grid", "heat"] {
+        let csr = mg_solve(scenario, false, coarse, 3, 4, Some(16));
+        let mf = mg_solve(scenario, true, coarse, 3, 4, Some(16));
+        assert_bitwise(&format!("{scenario}+eq16"), &csr, &mf);
+        assert_memory_savings(&format!("{scenario}+eq16"), &csr, &mf);
+    }
+}
+
+#[test]
+fn matrix_free_matches_across_rank_counts() {
+    // the mf/csr equivalence must hold on every np, and each np's own
+    // history is deterministic — but histories may differ *across* np
+    let coarse = Grid3::cube(3);
+    for np in [1, 2, 4] {
+        let csr = mg_solve("grid", false, coarse, 2, np, None);
+        let mf = mg_solve("grid", true, coarse, 2, np, None);
+        assert_bitwise(&format!("grid np={np}"), &csr, &mf);
+    }
+}

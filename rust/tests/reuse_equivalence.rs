@@ -12,7 +12,7 @@
 //! history-invariant, so the refreshed numeric pass reproduces the
 //! rebuilt one to the last bit.
 
-use galerkin_ptap::dist::{Comm, DistSpmv, DistVec, World};
+use galerkin_ptap::dist::{Comm, CsrOperator, DistSpmv, DistVec, World};
 use galerkin_ptap::gen::{heat_operator, Grid3};
 use galerkin_ptap::mat::Csr;
 use galerkin_ptap::mem::MemTracker;
@@ -29,7 +29,7 @@ fn gather_levels(h: &Hierarchy, comm: &Comm) -> Vec<Csr> {
     let mut out = Vec::new();
     let mut cur = comm.clone();
     for lvl in &h.levels {
-        out.push(lvl.a.gather_global(&cur));
+        out.push(lvl.a.csr().gather_global(&cur));
         if let Some(tel) = &lvl.telescope {
             match &tel.subcomm {
                 Some(sc) => cur = sc.clone(),
@@ -50,7 +50,8 @@ fn solve_bits(
     let layout = a.row_layout.clone();
     let b = DistVec::from_fn(layout.clone(), comm.rank(), |g| ((g % 13) as f64) - 6.0);
     let mut x = DistVec::zeros(layout, comm.rank());
-    let res = pcg(comm, a, &spmv, &b, &mut x, Some(pc), 1e-10, 40);
+    let op = CsrOperator::new(a, &spmv);
+    let res = pcg(comm, &op, &b, &mut x, Some(pc), 1e-10, 40);
     res.residuals.iter().map(|r| r.to_bits()).collect()
 }
 
