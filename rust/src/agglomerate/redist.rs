@@ -11,7 +11,7 @@
 
 use std::ops::Range;
 
-use crate::dist::{tag, Comm, DistCsr, DistCsrBuilder, DistVec, Layout};
+use crate::dist::{tag, Comm, DistCsr, DistCsrBuilder, DistMultiVec, DistVec, Layout};
 use crate::util::bytebuf::{ByteReader, ByteWriter};
 
 /// Active rank count for `n` global rows under an `eq_limit` rows-per-rank
@@ -226,6 +226,84 @@ impl RedistPlan {
             debug_assert_eq!(src, psrc, "recv run misalignment");
             let mut r = ByteReader::new(payload);
             for slot in &mut out.vals[range.start - new_start..range.end - new_start] {
+                *slot = r.f64();
+            }
+            debug_assert!(r.done());
+        }
+    }
+
+    /// K-wide [`RedistPlan::scatter_vec_into`]: scatter a row-major
+    /// multivector across the telescope boundary in one epoch on the same
+    /// interval schedule — each global range ships `len×k` values, so K
+    /// blocked right-hand sides pay the boundary's α once.  Column `j` of
+    /// the result is bitwise the scalar scatter of column `j`.
+    pub fn scatter_multi_into(
+        &self,
+        comm: &Comm,
+        v: &DistMultiVec,
+        out: Option<&mut DistMultiVec>,
+    ) {
+        debug_assert_eq!(v.layout, self.old, "multivector layout does not match the plan");
+        let rank = comm.rank();
+        let k = v.k;
+        let my_start = self.old.start(rank);
+        let mut sends = Vec::with_capacity(self.sends.len());
+        for (dest, range) in &self.sends {
+            let mut w = ByteWriter::with_capacity(8 * range.len() * k);
+            w.f64_slice(&v.vals[(range.start - my_start) * k..(range.end - my_start) * k]);
+            sends.push((*dest, w.into_bytes()));
+        }
+        let recvd = comm.exchange_on(tag::REDIST, sends);
+        let Some(out) = out else {
+            debug_assert!(rank >= self.k && recvd.is_empty(), "active rank must pass a buffer");
+            return;
+        };
+        debug_assert_eq!(out.layout, self.new, "out buffer layout does not match the plan");
+        debug_assert_eq!(out.k, k, "column width changed across the boundary");
+        let new_start = self.new.start(rank);
+        for ((src, range), (psrc, payload)) in self.recvs.iter().zip(&recvd) {
+            debug_assert_eq!(src, psrc, "recv run misalignment");
+            let mut r = ByteReader::new(payload);
+            for slot in &mut out.vals[(range.start - new_start) * k..(range.end - new_start) * k]
+            {
+                *slot = r.f64();
+            }
+            debug_assert!(r.done());
+        }
+    }
+
+    /// K-wide [`RedistPlan::gather_vec_into`]: the reverse boundary
+    /// crossing for a multivector, one epoch for all K columns.
+    pub fn gather_multi_into(
+        &self,
+        comm: &Comm,
+        v: Option<&DistMultiVec>,
+        out: &mut DistMultiVec,
+    ) {
+        let rank = comm.rank();
+        let k = out.k;
+        let mut sends = Vec::with_capacity(self.recvs.len());
+        if let Some(v) = v {
+            debug_assert_eq!(v.layout, self.new, "multivector layout does not match the plan");
+            debug_assert_eq!(v.k, k, "column width changed across the boundary");
+            let new_start = self.new.start(rank);
+            for (dest, range) in &self.recvs {
+                let mut w = ByteWriter::with_capacity(8 * range.len() * k);
+                w.f64_slice(&v.vals[(range.start - new_start) * k..(range.end - new_start) * k]);
+                sends.push((*dest, w.into_bytes()));
+            }
+        } else {
+            debug_assert!(rank >= self.k, "active rank must pass its slice");
+        }
+        let recvd = comm.exchange_on(tag::REDIST, sends);
+        debug_assert_eq!(out.layout, self.old, "out buffer layout does not match the plan");
+        let my_start = self.old.start(rank);
+        out.fill(0.0);
+        debug_assert_eq!(recvd.len(), self.sends.len(), "gather runs out of step");
+        for ((src, range), (psrc, payload)) in self.sends.iter().zip(&recvd) {
+            debug_assert_eq!(src, psrc, "gather run misalignment");
+            let mut r = ByteReader::new(payload);
+            for slot in &mut out.vals[(range.start - my_start) * k..(range.end - my_start) * k] {
                 *slot = r.f64();
             }
             debug_assert!(r.done());

@@ -21,6 +21,9 @@ use crate::mg::{
 use crate::ptap::{Algo, Ptap, PtapStats};
 use crate::reuse::HierarchyRefresher;
 use crate::runtime::{BlockBackend, SpmvBatcher};
+use crate::session::RequestQueue;
+
+use std::time::Duration;
 
 /// Model-problem experiment parameters (one (np, algo) cell of Table 1/3).
 #[derive(Debug, Clone, Copy)]
@@ -584,6 +587,16 @@ pub fn run_block_kernel_bench(grid: Grid3, groups: usize, np: usize) -> BlockKer
             bspmv.apply(&comm, &a, &mut batcher, &x, &mut y);
         }
         t.stop();
+        // local invariant before the reductions: every queued multiply
+        // drained through a bounded launch — at least ⌈mults/cap⌉ flushes
+        // (full chunks), at most one flush per multiply
+        let cap = batcher.capacity() as u64;
+        assert!(
+            batcher.flushes >= batcher.mults.div_ceil(cap) && batcher.flushes <= batcher.mults,
+            "launch count {} out of range for {} multiplies (cap {cap})",
+            batcher.flushes,
+            batcher.mults
+        );
         let mults = comm.allreduce_sum_u64(batcher.mults);
         let flushes = comm.allreduce_sum_u64(batcher.flushes);
         (t.total(), mults, flushes, a.b)
@@ -598,6 +611,98 @@ pub fn run_block_kernel_bench(grid: Grid3, groups: usize, np: usize) -> BlockKer
         flushes,
         apply_secs,
         gflops: if apply_secs > 0.0 { flops / apply_secs / 1e9 } else { 0.0 },
+    }
+}
+
+/// One multi-RHS throughput cell: K simultaneous requests batched by a
+/// [`RequestQueue`] into ONE blocked MG-PCG dispatch — the per-request
+/// share of every α term (halo rounds, reductions, coarse gathers) drops
+/// by K, which is what `msgs_per_solve` measures.
+#[derive(Debug, Clone)]
+pub struct ThroughputCell {
+    pub scenario: &'static str,
+    pub np: usize,
+    /// Requests batched into the dispatch.
+    pub k: usize,
+    /// Completed solves per modeled second (max busy rank + α-β model).
+    pub solves_per_sec: f64,
+    /// Rank-wide messages per completed solve — the α amortization.
+    pub msgs_per_solve: f64,
+    pub bytes_per_solve: f64,
+    /// Worst column's Krylov iterations in the batch.
+    pub iters: usize,
+    /// Coarsest-level batched block multiplies / kernel launches during
+    /// the dispatch (summed over ranks) — the blocked back-substitution's
+    /// launch shape at the `pjrt` seam.
+    pub coarse_mults: u64,
+    pub coarse_flushes: u64,
+}
+
+/// Run the multi-RHS throughput bench: for each K in `ks`, queue K
+/// requests against the same geometric MG hierarchy and flush them as
+/// one blocked solve.
+pub fn run_throughput_bench(
+    coarse: Grid3,
+    levels: usize,
+    np: usize,
+    ks: &[usize],
+) -> Vec<ThroughputCell> {
+    ks.iter().map(|&k| throughput_cell(coarse, levels, np, k)).collect()
+}
+
+fn throughput_cell(coarse: Grid3, levels: usize, np: usize, kk: usize) -> ThroughputCell {
+    use crate::util::timer::BusyTimer;
+    let world = World::new(np);
+    let grids = geometric_chain(coarse, levels);
+    let per_rank = world.run(|comm| {
+        let tracker = MemTracker::new();
+        let a0 = grid_laplacian(grids[0], comm.rank(), comm.size());
+        let layout = a0.row_layout.clone();
+        let h = build_hierarchy(
+            &comm,
+            a0.clone(),
+            &Coarsening::Geometric { grids: grids.clone() },
+            HierarchyConfig::default(),
+            &tracker,
+        );
+        let spmv = DistSpmv::new(&comm, &a0);
+        let op = CsrOperator::new(&a0, &spmv);
+        let mut pc = MgPreconditioner::new(&comm, h, MgOpts::default());
+        pc.track_multi_scratch(&tracker);
+        let mut queue = RequestQueue::new(kk, Duration::from_secs(3600));
+        for s in 0..kk {
+            queue.submit(DistVec::from_fn(layout.clone(), comm.rank(), move |g| {
+                (((g * 7 + s * 13) % 23) as f64 - 11.0) / 11.0
+            }));
+        }
+        assert!(queue.should_flush(), "a full batch must be flushable");
+        let before = comm.stats_global();
+        let mut timer = BusyTimer::new();
+        timer.start();
+        let done = queue.flush(&comm, &op, Some(&mut pc), 1e-8, 60, &tracker);
+        timer.stop();
+        let delta = comm.stats_global().since(before);
+        assert_eq!(done.len(), kk);
+        for d in &done {
+            assert!(d.result.converged, "throughput request failed to converge");
+        }
+        let iters = done.iter().map(|d| d.result.iterations).max().unwrap();
+        let (cm, cf) = pc.coarse_batch_stats();
+        (timer.total(), delta, iters, comm.allreduce_sum_u64(cm), comm.allreduce_sum_u64(cf))
+    });
+    let busy = per_rank.iter().map(|r| r.0).fold(0.0f64, f64::max);
+    let (_, delta, iters, coarse_mults, coarse_flushes) = per_rank.into_iter().next().unwrap();
+    let modeled = busy + delta.modeled_secs();
+    ThroughputCell {
+        scenario: "mgpcg",
+        np,
+        k: kk,
+        solves_per_sec: if modeled > 0.0 { kk as f64 / modeled } else { 0.0 },
+        msgs_per_solve: delta.msgs as f64 / kk as f64,
+        bytes_per_solve: delta.bytes as f64 / kk as f64,
+        iters,
+        coarse_mults,
+        coarse_flushes,
     }
 }
 
@@ -973,6 +1078,30 @@ mod tests {
             "batching must fold multiplies into fewer launches: {} vs {}",
             cell.flushes,
             cell.mults
+        );
+    }
+
+    #[test]
+    fn throughput_bench_amortizes_messages() {
+        let cells = run_throughput_bench(Grid3::cube(3), 2, 2, &[1, 4]);
+        assert_eq!(cells.len(), 2);
+        assert_eq!((cells[0].k, cells[1].k), (1, 4));
+        assert!(
+            cells[1].msgs_per_solve < cells[0].msgs_per_solve,
+            "batching 4 requests must cut per-solve messages: {} vs {}",
+            cells[1].msgs_per_solve,
+            cells[0].msgs_per_solve
+        );
+        for c in &cells {
+            assert!(c.solves_per_sec > 0.0);
+            assert!(
+                c.coarse_flushes >= 1,
+                "blocked coarse back-substitution must launch batched kernels"
+            );
+        }
+        assert!(
+            cells[1].coarse_mults > cells[0].coarse_mults,
+            "K-wide back-substitution must push more block multiplies"
         );
     }
 

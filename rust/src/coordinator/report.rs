@@ -8,7 +8,7 @@ use crate::util::{fmt_secs, mb};
 
 use super::experiment::{
     BlockKernelCell, HierarchyBenchResult, Level0Cell, ModelProblemResult, NeutronResult,
-    TimedepResult,
+    ThroughputCell, TimedepResult,
 };
 
 /// Speedups relative to the smallest rank count *within one algorithm*
@@ -169,15 +169,18 @@ pub fn timedep_table(r: &TimedepResult) -> Table {
 /// ranks, solve-phase traffic, the modeled α term); one record per
 /// timedep refresh cell (symbolic build time vs per-refresh numeric time
 /// and bytes); one record per level-0 operator cell (apply seconds,
-/// operator bytes, flops/byte, matrix-free memory delta); and one record
-/// per batched block-kernel cell — the numbers [`diff_bench`] compares
-/// across PRs.  Hand-rolled JSON (no serde offline).
+/// operator bytes, flops/byte, matrix-free memory delta); one record
+/// per batched block-kernel cell; and one record per multi-RHS
+/// throughput cell (per-solve message/byte share and solves/sec vs the
+/// batch width K) — the numbers [`diff_bench`] compares across PRs.
+/// Hand-rolled JSON (no serde offline).
 pub fn write_bench_json(
     rows: &[ModelProblemResult],
     hier: &[HierarchyBenchResult],
     refresh: &[TimedepResult],
     level0: &[Level0Cell],
     block: &[BlockKernelCell],
+    throughput: &[ThroughputCell],
     path: &Path,
 ) -> std::io::Result<()> {
     let fmt_list = |v: &[u64]| -> String {
@@ -284,6 +287,25 @@ pub fn write_bench_json(
             if k + 1 < block.len() { "," } else { "" }
         ));
     }
+    s.push_str("  ],\n  \"throughput\": [\n");
+    for (i, c) in throughput.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"kind\": \"throughput\", \"scenario\": \"{}\", \"np\": {}, \"k\": {}, \
+             \"solves_per_sec\": {:.6e}, \"msgs_per_solve\": {:.6e}, \
+             \"bytes_per_solve\": {:.6e}, \"iters\": {}, \
+             \"coarse_mults\": {}, \"coarse_flushes\": {}}}{}\n",
+            c.scenario,
+            c.np,
+            c.k,
+            c.solves_per_sec,
+            c.msgs_per_solve,
+            c.bytes_per_solve,
+            c.iters,
+            c.coarse_mults,
+            c.coarse_flushes,
+            if i + 1 < throughput.len() { "," } else { "" }
+        ));
+    }
     s.push_str("  ]\n}\n");
     std::fs::write(path, s)
 }
@@ -364,13 +386,14 @@ fn cell_key(cell: &BenchCell) -> String {
     let scenario = cell_field(cell, "scenario").unwrap_or("-");
     let mode = cell_field(cell, "mode").unwrap_or("-");
     let b = cell_field(cell, "b").unwrap_or("-");
-    format!("algo={algo} np={np} eq={eq} kind={kind} sc={scenario} mode={mode} b={b}")
+    let k = cell_field(cell, "k").unwrap_or("-");
+    format!("algo={algo} np={np} eq={eq} kind={kind} sc={scenario} mode={mode} b={b} k={k}")
 }
 
 /// Metrics the regression gate watches, with per-metric absolute floors
 /// (modeled times at smoke scale sit in the microsecond range where
 /// scheduler noise dominates; counters and bytes are deterministic).
-const DIFF_METRICS: [(&str, f64); 20] = [
+const DIFF_METRICS: [(&str, f64); 22] = [
     ("time_sym_modeled", 1e-3),
     ("time_num_modeled", 1e-3),
     ("time_cal_modeled", 1e-3),
@@ -399,7 +422,18 @@ const DIFF_METRICS: [(&str, f64); 20] = [
     // means the batching got weaker
     ("mults", 0.0),
     ("flushes", 0.0),
+    // throughput cells: the per-solve α share is the blocked dispatch's
+    // whole point — growth means the K-wide amortization eroded
+    ("msgs_per_solve", 0.0),
+    ("bytes_per_solve", 0.0),
 ];
+
+/// Higher-is-better metrics: a DROP is the regression.  The second field
+/// is extra relative slack on top of `tol` — throughput rates divide a
+/// busy-time component that carries scheduler noise at smoke scale, so
+/// they get more headroom than the deterministic counters (a lost
+/// amortization halves the rate and still trips the gate).
+const DIFF_FLOOR_METRICS: [(&str, f64); 1] = [("solves_per_sec", 0.25)];
 
 /// Per-level array metrics: compared *elementwise*, so a single level's
 /// regression fails the gate even when the totals stay flat (more active
@@ -440,6 +474,20 @@ pub fn diff_bench(old: &str, new: &str, tol: f64) -> Vec<String> {
                 regressions.push(format!(
                     "{key}: {metric} regressed {ov:.6e} -> {nv:.6e} (+{:.1}%)",
                     100.0 * (nv - ov) / ov.max(f64::MIN_POSITIVE)
+                ));
+            }
+        }
+        for (metric, slack) in DIFF_FLOOR_METRICS {
+            let (Some(ov), Some(nv)) = (cell_field(oc, metric), cell_field(nc, metric)) else {
+                continue;
+            };
+            let (Ok(ov), Ok(nv)) = (ov.parse::<f64>(), nv.parse::<f64>()) else {
+                continue;
+            };
+            if nv < ov * (1.0 - tol - slack) {
+                regressions.push(format!(
+                    "{key}: {metric} dropped {ov:.6e} -> {nv:.6e} (-{:.1}%)",
+                    100.0 * (ov - nv) / ov.max(f64::MIN_POSITIVE)
                 ));
             }
         }
@@ -582,6 +630,20 @@ mod tests {
         }]
     }
 
+    fn sample_throughput() -> Vec<ThroughputCell> {
+        vec![ThroughputCell {
+            scenario: "mgpcg",
+            np: 2,
+            k: 4,
+            solves_per_sec: 1000.0,
+            msgs_per_solve: 50.0,
+            bytes_per_solve: 4000.0,
+            iters: 9,
+            coarse_mults: 640,
+            coarse_flushes: 40,
+        }]
+    }
+
     #[test]
     fn bench_json_round_trips_fields() {
         let path = std::env::temp_dir().join("gptap_bench_smoke_test.json");
@@ -591,6 +653,7 @@ mod tests {
             &sample_refresh(),
             &sample_level0(),
             &sample_block(),
+            &sample_throughput(),
             &path,
         )
         .unwrap();
@@ -608,6 +671,9 @@ mod tests {
         assert!(s.contains("\"op_bytes\": 2000"), "{s}");
         assert!(s.contains("\"kind\": \"block_kernel\""), "{s}");
         assert!(s.contains("\"flushes\": 24"), "{s}");
+        assert!(s.contains("\"kind\": \"throughput\""), "{s}");
+        assert!(s.contains("\"k\": 4"), "{s}");
+        assert!(s.contains("\"msgs_per_solve\""), "{s}");
         let _ = std::fs::remove_file(&path);
     }
 
@@ -620,13 +686,18 @@ mod tests {
             &sample_refresh(),
             &sample_level0(),
             &sample_block(),
+            &sample_throughput(),
             &path,
         )
         .unwrap();
         let s = std::fs::read_to_string(&path).unwrap();
         let _ = std::fs::remove_file(&path);
         let cells = parse_bench_cells(&s);
-        assert_eq!(cells.len(), 6, "model + hierarchy + refresh + 2 level0 + block");
+        assert_eq!(
+            cells.len(),
+            7,
+            "model + hierarchy + refresh + 2 level0 + block + throughput"
+        );
         assert_eq!(cell_field(&cells[0], "algo"), Some("\"allatonce\""));
         assert_eq!(cell_field(&cells[0], "num_msgs"), Some("4"));
         assert_eq!(cell_field(&cells[1], "eq_limit"), Some("64"));
@@ -636,10 +707,20 @@ mod tests {
         assert_eq!(cell_field(&cells[3], "mode"), Some("\"csr\""));
         assert_eq!(cell_field(&cells[4], "mode"), Some("\"mf\""));
         assert_eq!(cell_field(&cells[5], "kind"), Some("\"block_kernel\""));
+        assert_eq!(cell_field(&cells[6], "kind"), Some("\"throughput\""));
+        assert_eq!(cell_field(&cells[6], "k"), Some("4"));
         // model vs refresh cells share algo/np but must not collide
         assert_ne!(cell_key(&cells[0]), cell_key(&cells[2]));
         // the two level0 modes must key apart
         assert_ne!(cell_key(&cells[3]), cell_key(&cells[4]));
+        // throughput cells with different K must key apart
+        let mut other_k = cells[6].clone();
+        for (key, v) in other_k.iter_mut() {
+            if key == "k" {
+                *v = "16".to_string();
+            }
+        }
+        assert_ne!(cell_key(&cells[6]), cell_key(&other_k));
     }
 
     #[test]
@@ -656,6 +737,7 @@ mod tests {
                 &sample_refresh(),
                 &sample_level0(),
                 &sample_block(),
+                &sample_throughput(),
                 &path,
             )
             .unwrap();
@@ -697,6 +779,7 @@ mod tests {
                 &refresh,
                 &sample_level0(),
                 &sample_block(),
+                &sample_throughput(),
                 &path,
             )
             .unwrap();
@@ -743,6 +826,7 @@ mod tests {
                 &sample_refresh(),
                 &level0,
                 &block,
+                &sample_throughput(),
                 &path,
             )
             .unwrap();
@@ -765,6 +849,48 @@ mod tests {
             "flush regression missed: {regs:?}"
         );
         assert!(diff_bench(&base, &mk(2_000, 24), 0.10).is_empty());
+    }
+
+    #[test]
+    fn diff_bench_gates_throughput_cells() {
+        let mk = |msgs_per_solve: f64, solves_per_sec: f64| {
+            let mut thr = sample_throughput();
+            thr[0].msgs_per_solve = msgs_per_solve;
+            thr[0].solves_per_sec = solves_per_sec;
+            let path = std::env::temp_dir().join(format!(
+                "gptap_bench_thr_{}_{}.json",
+                msgs_per_solve as u64, solves_per_sec as u64
+            ));
+            write_bench_json(
+                &sample_rows(),
+                &sample_hier(),
+                &sample_refresh(),
+                &sample_level0(),
+                &sample_block(),
+                &thr,
+                &path,
+            )
+            .unwrap();
+            let s = std::fs::read_to_string(&path).unwrap();
+            let _ = std::fs::remove_file(&path);
+            s
+        };
+        let base = mk(50.0, 1000.0);
+        // per-solve message growth past tolerance trips the ceiling gate
+        let regs = diff_bench(&base, &mk(60.0, 1000.0), 0.10);
+        assert!(
+            regs.iter().any(|r| r.contains("msgs_per_solve")),
+            "msgs_per_solve regression missed: {regs:?}"
+        );
+        // a rate collapse trips the higher-is-better gate
+        let regs = diff_bench(&base, &mk(50.0, 500.0), 0.10);
+        assert!(
+            regs.iter().any(|r| r.contains("solves_per_sec")),
+            "solves_per_sec regression missed: {regs:?}"
+        );
+        // mild rate wobble inside the timing slack stays clean
+        assert!(diff_bench(&base, &mk(50.0, 800.0), 0.10).is_empty());
+        assert!(diff_bench(&base, &mk(50.0, 1000.0), 0.10).is_empty());
     }
 
     #[test]

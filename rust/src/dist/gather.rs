@@ -440,6 +440,37 @@ impl VecGatherPlan {
             debug_assert!(r.done());
         }
     }
+
+    /// Collective: blocked halo exchange — gather `k` values per planned
+    /// id out of a row-major K-wide multivector (`local[li*k..(li+1)*k]`
+    /// per owned index) in **one** epoch on the same wire format, so K
+    /// simultaneous right-hand sides pay the per-message α once.  The
+    /// output is indexed like the driving `garray`, `k` values per slot
+    /// (`out[slot*k + j]` is column `j`); column `j`'s values are exactly
+    /// what a scalar [`VecGatherPlan::gather_into`] of that column would
+    /// deliver.
+    pub fn gather_multi_into(&self, comm: &Comm, local: &[f64], k: usize, out: &mut Vec<f64>) {
+        debug_assert!(k >= 1);
+        let mut sends = Vec::with_capacity(self.map.serve.len());
+        for (dest, ids) in &self.map.serve {
+            let mut w = ByteWriter::with_capacity(ids.len() * k * 8);
+            for &li in ids {
+                let li = li as usize;
+                w.f64_slice(&local[li * k..(li + 1) * k]);
+            }
+            sends.push((*dest, w.into_bytes()));
+        }
+        let recvd = sendrecv(comm, sends);
+        out.clear();
+        out.resize(self.map.n_needed * k, 0.0);
+        for ((_, range), payload) in self.map.zip_runs(&recvd) {
+            let mut r = ByteReader::new(payload);
+            for slot in &mut out[range.start * k..range.end * k] {
+                *slot = r.f64();
+            }
+            debug_assert!(r.done());
+        }
+    }
 }
 
 #[cfg(test)]

@@ -30,7 +30,7 @@ pub use gather::{GatherWindow, PrBlocks, PrMat, RowGatherPlan, VecGatherPlan};
 pub use layout::Layout;
 pub use operator::{CsrOperator, DistOperator};
 pub use transpose::transpose_dist;
-pub use vec::{DistSpmv, DistVec};
+pub use vec::{DistMultiVec, DistSpmv, DistVec};
 pub use world::{
     pipeline_chunk_rows, tag, Comm, CommStats, World, COMM_ALPHA_SECS, COMM_BETA_SECS_PER_BYTE,
     DEFAULT_PIPELINE_CHUNK, SIZE_BUCKETS, SIZE_BUCKET_EDGES,

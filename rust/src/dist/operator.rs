@@ -8,7 +8,7 @@
 //! solve.
 
 use super::csr::DistCsr;
-use super::vec::{DistSpmv, DistVec};
+use super::vec::{DistMultiVec, DistSpmv, DistVec};
 use super::world::Comm;
 use crate::dist::Layout;
 
@@ -65,6 +65,42 @@ pub trait DistOperator {
     );
     /// Halo gathers served from a warm persistent buffer since build.
     fn halo_reuses(&self) -> u64;
+
+    /// `Y = A X` for K stacked right-hand sides (collective).  Column `j`
+    /// of `Y` must be bitwise the scalar `apply` of column `j`.  The
+    /// default loops columns (K separate halo epochs); implementations
+    /// override it with a blocked kernel that pays one epoch for all K.
+    fn apply_multi(&self, comm: &Comm, x: &DistMultiVec, y: &mut DistMultiVec) {
+        debug_assert_eq!(x.k, y.k);
+        for j in 0..x.k {
+            let xj = x.column(j);
+            let mut yj = y.column(j);
+            self.apply(comm, &xj, &mut yj);
+            y.set_column(j, &yj);
+        }
+    }
+
+    /// Blocked hybrid SOR: relax all K columns against one frozen K-wide
+    /// halo.  Column `j` must be bitwise the scalar `sor_sweep` of column
+    /// `j`.  Default loops columns; overrides pay one halo epoch.
+    #[allow(clippy::too_many_arguments)]
+    fn sor_sweep_multi(
+        &self,
+        comm: &Comm,
+        dinv: &[f64],
+        omega: f64,
+        b: &DistMultiVec,
+        x: &mut DistMultiVec,
+        symmetric: bool,
+    ) {
+        debug_assert_eq!(x.k, b.k);
+        for j in 0..x.k {
+            let bj = b.column(j);
+            let mut xj = x.column(j);
+            self.sor_sweep(comm, dinv, omega, &bj, &mut xj, symmetric);
+            x.set_column(j, &xj);
+        }
+    }
 }
 
 /// [`DistOperator`] view over an assembled matrix: borrows the
@@ -94,6 +130,46 @@ impl<'a> CsrOperator<'a> {
             acc -= v * halo[c as usize];
         }
         x.vals[i] += omega * (dinv[i] * acc - x.vals[i]);
+    }
+
+    /// K-wide relaxation of row `i`: each column runs the exact
+    /// [`CsrOperator::relax_row`] subtraction order against the K-wide
+    /// frozen halo, so column bits match the scalar sweep.
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    fn relax_row_multi(
+        &self,
+        halo: &[f64],
+        dinv: &[f64],
+        omega: f64,
+        b: &DistMultiVec,
+        x: &mut DistMultiVec,
+        acc: &mut [f64],
+        i: usize,
+    ) {
+        let a = self.a;
+        let k = x.k;
+        acc.copy_from_slice(&b.vals[i * k..(i + 1) * k]);
+        let (dc, dv) = a.diag.row(i);
+        for (&c, &v) in dc.iter().zip(dv) {
+            let c = c as usize;
+            if c != i {
+                for (j, aj) in acc.iter_mut().enumerate() {
+                    *aj -= v * x.vals[c * k + j];
+                }
+            }
+        }
+        let (oc, ov) = a.offd.row(i);
+        for (&c, &v) in oc.iter().zip(ov) {
+            let c = c as usize;
+            for (j, aj) in acc.iter_mut().enumerate() {
+                *aj -= v * halo[c * k + j];
+            }
+        }
+        for (j, &aj) in acc.iter().enumerate() {
+            let xi = &mut x.vals[i * k + j];
+            *xi += omega * (dinv[i] * aj - *xi);
+        }
     }
 }
 
@@ -167,5 +243,30 @@ impl DistOperator for CsrOperator<'_> {
 
     fn halo_reuses(&self) -> u64 {
         self.spmv.halo_reuses()
+    }
+
+    fn apply_multi(&self, comm: &Comm, x: &DistMultiVec, y: &mut DistMultiVec) {
+        self.spmv.apply_multi(comm, self.a, x, y);
+    }
+
+    fn sor_sweep_multi(
+        &self,
+        comm: &Comm,
+        dinv: &[f64],
+        omega: f64,
+        b: &DistMultiVec,
+        x: &mut DistMultiVec,
+        symmetric: bool,
+    ) {
+        let halo = self.spmv.gather_halo_multi(comm, x);
+        let mut acc = vec![0.0; x.k];
+        for i in 0..self.a.local_nrows() {
+            self.relax_row_multi(&halo, dinv, omega, b, x, &mut acc, i);
+        }
+        if symmetric {
+            for i in (0..self.a.local_nrows()).rev() {
+                self.relax_row_multi(&halo, dinv, omega, b, x, &mut acc, i);
+            }
+        }
     }
 }

@@ -80,6 +80,132 @@ impl DistVec {
     }
 }
 
+/// One rank's contiguous slice of K global vectors, stored row-major:
+/// `vals[i*k + j]` is column `j` of local row `i`.  The K-wide layout is
+/// what the blocked halo exchange ships per index, so K simultaneous
+/// right-hand sides share every per-message α across the solve.
+///
+/// Every column-wise operation folds rows in the exact order the scalar
+/// [`DistVec`] path does, so column `j` of any blocked kernel is
+/// *bitwise* the scalar result.
+#[derive(Debug, Clone)]
+pub struct DistMultiVec {
+    pub layout: Layout,
+    pub rank: usize,
+    /// Number of columns (simultaneous right-hand sides).
+    pub k: usize,
+    /// Row-major local entries, `local_len() * k` long.
+    pub vals: Vec<f64>,
+}
+
+impl DistMultiVec {
+    pub fn zeros(layout: Layout, rank: usize, k: usize) -> DistMultiVec {
+        assert!(k >= 1, "multivector needs at least one column");
+        let n = layout.local_size(rank);
+        DistMultiVec { layout, rank, k, vals: vec![0.0; n * k] }
+    }
+
+    /// Stack K single vectors (identical layouts) into one multivector.
+    pub fn from_columns(cols: &[&DistVec]) -> DistMultiVec {
+        assert!(!cols.is_empty(), "multivector needs at least one column");
+        let k = cols.len();
+        let layout = cols[0].layout.clone();
+        let rank = cols[0].rank;
+        let n = cols[0].vals.len();
+        let mut vals = vec![0.0; n * k];
+        for (j, c) in cols.iter().enumerate() {
+            debug_assert_eq!(c.vals.len(), n, "columns must share the layout");
+            for i in 0..n {
+                vals[i * k + j] = c.vals[i];
+            }
+        }
+        DistMultiVec { layout, rank, k, vals }
+    }
+
+    /// Extract column `j` as a standalone vector.
+    pub fn column(&self, j: usize) -> DistVec {
+        debug_assert!(j < self.k);
+        let n = self.local_len();
+        let vals = (0..n).map(|i| self.vals[i * self.k + j]).collect();
+        DistVec { layout: self.layout.clone(), rank: self.rank, vals }
+    }
+
+    /// Overwrite column `j` from a single vector (same layout).
+    pub fn set_column(&mut self, j: usize, x: &DistVec) {
+        debug_assert!(j < self.k);
+        debug_assert_eq!(x.vals.len(), self.local_len());
+        for (i, &v) in x.vals.iter().enumerate() {
+            self.vals[i * self.k + j] = v;
+        }
+    }
+
+    pub fn local_len(&self) -> usize {
+        self.layout.local_size(self.rank)
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.vals.len() * 8) as u64
+    }
+
+    pub fn fill(&mut self, v: f64) {
+        self.vals.fill(v);
+    }
+
+    /// `self[:, j] += alpha[j] * x[:, j]` for every column with
+    /// `active[j]` — frozen (converged) columns keep their bits.
+    pub fn axpy_cols(&mut self, alpha: &[f64], x: &DistMultiVec, active: &[bool]) {
+        let k = self.k;
+        debug_assert_eq!(alpha.len(), k);
+        debug_assert_eq!(active.len(), k);
+        debug_assert_eq!(self.vals.len(), x.vals.len());
+        for i in 0..self.local_len() {
+            for j in 0..k {
+                if active[j] {
+                    self.vals[i * k + j] += alpha[j] * x.vals[i * k + j];
+                }
+            }
+        }
+    }
+
+    /// `self[:, j] = beta[j] * self[:, j] + x[:, j]` for active columns.
+    pub fn aypx_cols(&mut self, beta: &[f64], x: &DistMultiVec, active: &[bool]) {
+        let k = self.k;
+        debug_assert_eq!(beta.len(), k);
+        debug_assert_eq!(active.len(), k);
+        debug_assert_eq!(self.vals.len(), x.vals.len());
+        for i in 0..self.local_len() {
+            for j in 0..k {
+                if active[j] {
+                    let s = &mut self.vals[i * k + j];
+                    *s = beta[j] * *s + x.vals[i * k + j];
+                }
+            }
+        }
+    }
+
+    /// Per-column global dot products in **one** allreduce (collective).
+    /// Each column's local sum folds rows in the scalar [`DistVec::dot`]
+    /// order and the reduction combines in rank order, so element `j` is
+    /// bit-identical to `self.column(j).dot(comm, &other.column(j))`.
+    pub fn dot_multi(&self, comm: &Comm, other: &DistMultiVec) -> Vec<f64> {
+        let k = self.k;
+        debug_assert_eq!(other.k, k);
+        debug_assert_eq!(self.vals.len(), other.vals.len());
+        let mut local = vec![0.0f64; k];
+        for i in 0..self.local_len() {
+            for (j, acc) in local.iter_mut().enumerate() {
+                *acc += self.vals[i * k + j] * other.vals[i * k + j];
+            }
+        }
+        comm.allreduce_sum_f64_multi(&local)
+    }
+
+    /// Per-column global 2-norms in one allreduce (collective).
+    pub fn norm2_multi(&self, comm: &Comm) -> Vec<f64> {
+        self.dot_multi(comm, self).into_iter().map(f64::sqrt).collect()
+    }
+}
+
 /// Halo-exchange sparse matrix-vector product: the plan for `A.garray` is
 /// built once and reused every application (PETSc `MatMult` scatter).
 #[derive(Debug)]
@@ -92,6 +218,8 @@ pub struct DistSpmv {
     /// Persistent halo buffer: sized on first gather, reused (no
     /// allocation) on every later application.
     buf: RefCell<Vec<f64>>,
+    /// Persistent K-wide halo buffer for blocked applications.
+    buf_multi: RefCell<Vec<f64>>,
     /// How many gathers hit the warm buffer instead of allocating.
     reuses: Cell<u64>,
 }
@@ -103,6 +231,7 @@ impl DistSpmv {
             halo: VecGatherPlan::build(comm, &a.col_layout, &a.garray),
             splits: (0..a.local_nrows()).map(|i| a.offd_split(i) as u32).collect(),
             buf: RefCell::new(Vec::new()),
+            buf_multi: RefCell::new(Vec::new()),
             reuses: Cell::new(0),
         }
     }
@@ -125,6 +254,21 @@ impl DistSpmv {
     /// allocations since construction).
     pub fn halo_reuses(&self) -> u64 {
         self.reuses.get()
+    }
+
+    /// Blocked halo fetch: the K-wide halo of `x` in one epoch
+    /// (collective; warm persistent K-wide buffer).  Slot `c` of the
+    /// scalar halo becomes `halo[c*k..(c+1)*k]`.
+    pub fn gather_halo_multi(&self, comm: &Comm, x: &DistMultiVec) -> Ref<'_, [f64]> {
+        let k = x.k;
+        {
+            let mut buf = self.buf_multi.borrow_mut();
+            if buf.capacity() >= self.halo.n_needed() * k && self.halo.n_needed() > 0 {
+                self.reuses.set(self.reuses.get() + 1);
+            }
+            self.halo.gather_multi_into(comm, &x.vals, k, &mut buf);
+        }
+        Ref::map(self.buf_multi.borrow(), |v| v.as_slice())
     }
 
     /// `y = A x` (collective).  Each row folds in ascending *global*
@@ -156,10 +300,48 @@ impl DistSpmv {
         }
     }
 
+    /// `Y = A X` for a K-wide multivector (collective): **one** blocked
+    /// halo epoch serves all K columns, and each column folds rows in the
+    /// exact ascending-global-column order of [`DistSpmv::apply`], so
+    /// column `j` of `Y` is bitwise the scalar product of column `j`.
+    pub fn apply_multi(&self, comm: &Comm, a: &DistCsr, x: &DistMultiVec, y: &mut DistMultiVec) {
+        let k = x.k;
+        debug_assert_eq!(y.k, k);
+        debug_assert_eq!(x.vals.len(), a.diag.ncols * k);
+        debug_assert_eq!(y.vals.len(), a.local_nrows() * k);
+        let halo = self.gather_halo_multi(comm, x);
+        debug_assert_eq!(self.splits.len(), a.local_nrows());
+        for i in 0..a.local_nrows() {
+            let (dc, dv) = a.diag.row(i);
+            let (oc, ov) = a.offd.row(i);
+            let split = self.splits[i] as usize;
+            let yi = &mut y.vals[i * k..(i + 1) * k];
+            yi.fill(0.0);
+            for t in 0..split {
+                let c = oc[t] as usize;
+                for (j, acc) in yi.iter_mut().enumerate() {
+                    *acc += ov[t] * halo[c * k + j];
+                }
+            }
+            for (&c, &v) in dc.iter().zip(dv) {
+                let c = c as usize;
+                for (j, acc) in yi.iter_mut().enumerate() {
+                    *acc += v * x.vals[c * k + j];
+                }
+            }
+            for t in split..oc.len() {
+                let c = oc[t] as usize;
+                for (j, acc) in yi.iter_mut().enumerate() {
+                    *acc += ov[t] * halo[c * k + j];
+                }
+            }
+        }
+    }
+
     pub fn bytes(&self) -> u64 {
         self.halo.bytes()
             + (self.splits.len() * 4) as u64
-            + (self.buf.borrow().capacity() * 8) as u64
+            + ((self.buf.borrow().capacity() + self.buf_multi.borrow().capacity()) * 8) as u64
     }
 }
 

@@ -591,6 +591,29 @@ impl Comm {
             .map(|f| f64::from_le_bytes(f[0..8].try_into().unwrap()))
             .sum()
     }
+
+    /// Global element-wise sum of `v.len()` `f64`s per rank (collective)
+    /// in **one** message round: K partial sums ride a single payload, so
+    /// a blocked solve pays one α per reduction instead of K.  Each
+    /// element combines in rank order, so element `j` is bit-identical to
+    /// a scalar [`Comm::allreduce_sum_f64`] of the ranks' `v[j]`s.
+    pub fn allreduce_sum_f64_multi(&self, v: &[f64]) -> Vec<f64> {
+        let others = self.size() as u64 - 1;
+        self.count_send(others, (v.len() * 8) as u64);
+        let mut payload = Vec::with_capacity(v.len() * 8);
+        for x in v {
+            payload.extend_from_slice(&x.to_le_bytes());
+        }
+        let frames: Vec<Vec<u8>> = (0..self.size()).map(|_| payload.clone()).collect();
+        let mut out = vec![0.0f64; v.len()];
+        for f in self.round(frames) {
+            debug_assert_eq!(f.len(), v.len() * 8);
+            for (j, slot) in out.iter_mut().enumerate() {
+                *slot += f64::from_le_bytes(f[j * 8..j * 8 + 8].try_into().unwrap());
+            }
+        }
+        out
+    }
 }
 
 /// A set of `np` simulated ranks.

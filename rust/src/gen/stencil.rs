@@ -15,8 +15,8 @@
 use std::cell::{Cell, Ref, RefCell};
 
 use crate::dist::{
-    Comm, CsrOperator, DistCsr, DistCsrBuilder, DistOperator, DistSpmv, DistVec, Layout,
-    VecGatherPlan,
+    Comm, CsrOperator, DistCsr, DistCsrBuilder, DistMultiVec, DistOperator, DistSpmv, DistVec,
+    Layout, VecGatherPlan,
 };
 
 use super::grid::Grid3;
@@ -144,6 +144,8 @@ pub struct StencilOperator {
     halo_ids: Vec<u64>,
     halo: VecGatherPlan,
     buf: RefCell<Vec<f64>>,
+    /// Persistent K-wide halo buffer for blocked applications.
+    buf_multi: RefCell<Vec<f64>>,
     reuses: Cell<u64>,
 }
 
@@ -187,6 +189,7 @@ impl StencilOperator {
             halo_ids,
             halo,
             buf: RefCell::new(Vec::new()),
+            buf_multi: RefCell::new(Vec::new()),
             reuses: Cell::new(0),
         }
     }
@@ -253,6 +256,19 @@ impl StencilOperator {
         Ref::map(self.buf.borrow(), |v| v.as_slice())
     }
 
+    /// K-wide stencil halo of `x` in one epoch (collective; warm buffer).
+    fn gather_halo_multi(&self, comm: &Comm, x: &DistMultiVec) -> Ref<'_, [f64]> {
+        let k = x.k;
+        {
+            let mut buf = self.buf_multi.borrow_mut();
+            if buf.capacity() >= self.halo.n_needed() * k && self.halo.n_needed() > 0 {
+                self.reuses.set(self.reuses.get() + 1);
+            }
+            self.halo.gather_multi_into(comm, &x.vals, k, &mut buf);
+        }
+        Ref::map(self.buf_multi.borrow(), |v| v.as_slice())
+    }
+
     #[inline]
     fn relax_row(
         &self,
@@ -295,6 +311,64 @@ impl StencilOperator {
             acc -= e.coef * halo[slot];
         }
         x.vals[i] += omega * (dinv[i] * acc - x.vals[i]);
+    }
+
+    /// K-wide relaxation of row `i`: each column runs the exact
+    /// [`StencilOperator::relax_row`] subtraction order against the
+    /// K-wide frozen halo, so column bits match the scalar sweep.
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    fn relax_row_multi(
+        &self,
+        i: usize,
+        halo: &[f64],
+        dinv: &[f64],
+        omega: f64,
+        b: &DistMultiVec,
+        x: &mut DistMultiVec,
+        acc: &mut [f64],
+    ) {
+        let k = x.k;
+        let rbeg = self.layout.start(self.rank);
+        let rend = self.layout.end(self.rank);
+        let gid = rbeg + i;
+        let (gx, gy, gz) = self.grid.coords(gid);
+        acc.copy_from_slice(&b.vals[i * k..(i + 1) * k]);
+        // owned columns ascending (skip the center) — the diag pass
+        for e in &self.entries {
+            if e.delta == 0 {
+                continue;
+            }
+            let g2 = gid as i64 + e.delta;
+            if g2 < rbeg as i64 || g2 >= rend as i64 {
+                continue;
+            }
+            if !self.in_grid(gx as i64 + e.dx, gy as i64 + e.dy, gz as i64 + e.dz) {
+                continue;
+            }
+            let c = (g2 as usize) - rbeg;
+            for (j, aj) in acc.iter_mut().enumerate() {
+                *aj -= e.coef * x.vals[c * k + j];
+            }
+        }
+        // off-rank columns ascending against the frozen halo — the offd pass
+        for e in &self.entries {
+            let g2 = gid as i64 + e.delta;
+            if g2 >= rbeg as i64 && g2 < rend as i64 {
+                continue;
+            }
+            if !self.in_grid(gx as i64 + e.dx, gy as i64 + e.dy, gz as i64 + e.dz) {
+                continue;
+            }
+            let slot = self.halo_ids.binary_search(&(g2 as u64)).expect("halo id in plan");
+            for (j, aj) in acc.iter_mut().enumerate() {
+                *aj -= e.coef * halo[slot * k + j];
+            }
+        }
+        for (j, &aj) in acc.iter().enumerate() {
+            let xi = &mut x.vals[i * k + j];
+            *xi += omega * (dinv[i] * aj - *xi);
+        }
     }
 }
 
@@ -404,7 +478,7 @@ impl DistOperator for StencilOperator {
         (self.entries.len() * std::mem::size_of::<StencilEntry>()) as u64
             + (self.halo_ids.len() * 8) as u64
             + self.halo.bytes()
-            + (self.buf.borrow().capacity() * 8) as u64
+            + ((self.buf.borrow().capacity() + self.buf_multi.borrow().capacity()) * 8) as u64
     }
 
     fn sor_sweep(
@@ -429,6 +503,61 @@ impl DistOperator for StencilOperator {
 
     fn halo_reuses(&self) -> u64 {
         self.reuses.get()
+    }
+
+    fn apply_multi(&self, comm: &Comm, x: &DistMultiVec, y: &mut DistMultiVec) {
+        let k = x.k;
+        debug_assert_eq!(y.k, k);
+        debug_assert_eq!(x.vals.len(), self.local_nrows() * k);
+        let halo = self.gather_halo_multi(comm, x);
+        let rbeg = self.layout.start(self.rank);
+        let rend = self.layout.end(self.rank);
+        for i in 0..self.local_nrows() {
+            let gid = rbeg + i;
+            let (gx, gy, gz) = self.grid.coords(gid);
+            let yi = &mut y.vals[i * k..(i + 1) * k];
+            yi.fill(0.0);
+            // ascending delta == ascending global column: the DistSpmv fold
+            for e in &self.entries {
+                if !self.in_grid(gx as i64 + e.dx, gy as i64 + e.dy, gz as i64 + e.dz) {
+                    continue;
+                }
+                let g2 = gid as i64 + e.delta;
+                if g2 >= rbeg as i64 && g2 < rend as i64 {
+                    let c = (g2 as usize) - rbeg;
+                    for (j, acc) in yi.iter_mut().enumerate() {
+                        *acc += e.coef * x.vals[c * k + j];
+                    }
+                } else {
+                    let slot =
+                        self.halo_ids.binary_search(&(g2 as u64)).expect("halo id in plan");
+                    for (j, acc) in yi.iter_mut().enumerate() {
+                        *acc += e.coef * halo[slot * k + j];
+                    }
+                }
+            }
+        }
+    }
+
+    fn sor_sweep_multi(
+        &self,
+        comm: &Comm,
+        dinv: &[f64],
+        omega: f64,
+        b: &DistMultiVec,
+        x: &mut DistMultiVec,
+        symmetric: bool,
+    ) {
+        let halo = self.gather_halo_multi(comm, x);
+        let mut acc = vec![0.0; x.k];
+        for i in 0..self.local_nrows() {
+            self.relax_row_multi(i, &halo, dinv, omega, b, x, &mut acc);
+        }
+        if symmetric {
+            for i in (0..self.local_nrows()).rev() {
+                self.relax_row_multi(i, &halo, dinv, omega, b, x, &mut acc);
+            }
+        }
     }
 }
 

@@ -34,5 +34,6 @@ pub mod mg;
 pub mod ptap;
 pub mod reuse;
 pub mod runtime;
+pub mod session;
 pub mod spgemm;
 pub mod util;

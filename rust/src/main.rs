@@ -12,9 +12,9 @@
 
 use galerkin_ptap::coordinator::{
     diff_bench, level_tables, model_problem_tables, neutron_tables, run_block_kernel_bench,
-    run_hierarchy_bench, run_level0_bench, run_model_problem, run_neutron, run_timedep,
-    timedep_table, write_bench_json, write_results, ModelProblemConfig, NeutronConfigExp,
-    TimedepConfig, TimedepResult, TimedepWorkload,
+    run_hierarchy_bench, run_level0_bench, run_model_problem, run_neutron, run_throughput_bench,
+    run_timedep, timedep_table, write_bench_json, write_results, ModelProblemConfig,
+    NeutronConfigExp, TimedepConfig, TimedepResult, TimedepWorkload,
 };
 use galerkin_ptap::dist::{CsrOperator, DistSpmv, DistVec, World};
 use galerkin_ptap::gen::{
@@ -27,6 +27,7 @@ use galerkin_ptap::mg::{
 use galerkin_ptap::ptap::block::block_ptap;
 use galerkin_ptap::ptap::{Algo, ALL_ALGOS};
 use galerkin_ptap::runtime::{BlockBackend, KernelRuntime};
+use galerkin_ptap::session::{RequestQueue, SessionCache};
 
 use std::collections::HashMap;
 
@@ -97,6 +98,7 @@ fn main() {
         "neutron" => cmd_neutron(&args),
         "levels" => cmd_levels(&args),
         "solve" => cmd_solve(&args),
+        "serve" => cmd_serve(&args),
         "timedep" => cmd_timedep(&args),
         "selfcheck" => cmd_selfcheck(&args),
         "external" => cmd_external(&args),
@@ -120,6 +122,8 @@ fn print_help() {
            neutron        --grid N --groups G --np a,b,c [--cache] [--eq-limit N]  (Tables 7-8)\n\
            levels         --grid N --groups G                              (Tables 5-6)\n\
            solve          --coarse N --levels L --algo NAME --np P [--eq-limit N]  (MG-CG)\n\
+           serve          --coarse N --levels L --np P --k K --requests R\n\
+                          (session layer: cached hierarchy + K-wide batched dispatch)\n\
            timedep        --scenario heat|neutron --steps N [--refresh|--rebuild]\n\
                           --coarse N --levels L --np P --algo NAME [--eq-limit N]\n\
                           [--dt0 X --ramp X]   (implicit stepping: 1 symbolic build, N-1 refreshes)\n\
@@ -175,7 +179,7 @@ fn cmd_bench_smoke(args: &Args) {
     let coarse = Grid3::cube(args.usize_or("coarse", 8));
     let np = args.usize_or("np", 4);
     let repeats = args.usize_or("repeats", 3);
-    let out = args.kv.get("out").cloned().unwrap_or_else(|| "BENCH_pr6.json".to_string());
+    let out = args.kv.get("out").cloned().unwrap_or_else(|| "BENCH_pr7.json".to_string());
     println!(
         "bench smoke: coarse {}³ (fine {}³), np={np}, repeats={repeats}",
         coarse.nx,
@@ -274,7 +278,41 @@ fn cmd_bench_smoke(args: &Args) {
         "  block_kernel b={} mults {} flushes {} ({:.2} Gflop/s)",
         block[0].b, block[0].mults, block[0].flushes, block[0].gflops
     );
-    match write_bench_json(&rows, &hier, &refresh, &level0, &block, std::path::Path::new(&out)) {
+    // throughput cells: K simultaneous requests batched into one blocked
+    // MG-PCG dispatch — msgs_per_solve must fall as K grows (the α
+    // amortization the gate watches), solves/sec must not collapse
+    let ks = args.usize_list_or("ks", &[1, 4, 16]);
+    let throughput = run_throughput_bench(
+        Grid3::cube(args.usize_or("hier-coarse", 3)),
+        args.usize_or("hier-levels", 3),
+        np,
+        &ks,
+    );
+    for c in &throughput {
+        println!(
+            "  throughput k={:<3} solves/s {:>10.1} msgs/solve {:>8.1} bytes/solve {:>10.0} iters {}",
+            c.k, c.solves_per_sec, c.msgs_per_solve, c.bytes_per_solve, c.iters
+        );
+    }
+    for pair in throughput.windows(2) {
+        assert!(
+            pair[1].msgs_per_solve < pair[0].msgs_per_solve,
+            "per-solve messages must fall with K: k={} {:.1} vs k={} {:.1}",
+            pair[0].k,
+            pair[0].msgs_per_solve,
+            pair[1].k,
+            pair[1].msgs_per_solve
+        );
+    }
+    match write_bench_json(
+        &rows,
+        &hier,
+        &refresh,
+        &level0,
+        &block,
+        &throughput,
+        std::path::Path::new(&out),
+    ) {
         Ok(()) => println!("wrote {out}"),
         Err(e) => {
             eprintln!("FAIL: could not write {out}: {e}");
@@ -420,6 +458,75 @@ fn cmd_solve(args: &Args) {
     for (k, r) in res.residuals.iter().enumerate() {
         println!("  iter {k:>3}  ||r|| = {r:.3e}");
     }
+}
+
+/// Concurrent solve sessions: a hierarchy cache shared by two simulated
+/// clients (same sparsity pattern, rescaled values — the second checkout
+/// must hit and pay only a numeric refresh) plus a K-wide request queue
+/// that batches pending right-hand sides into one blocked MG-PCG dispatch.
+fn cmd_serve(args: &Args) {
+    let coarse = Grid3::cube(args.usize_or("coarse", 8));
+    let levels = args.usize_or("levels", 3);
+    let np = args.usize_or("np", 4);
+    let kk = args.usize_or("k", 4);
+    let requests = args.usize_or("requests", 2 * kk + 1);
+    let grids = geometric_chain(coarse, levels);
+    println!(
+        "serve: fine {}³ = {} unknowns, {} levels, {} ranks, batch K={}, {} requests",
+        grids[0].nx,
+        grids[0].len(),
+        levels,
+        np,
+        kk,
+        requests
+    );
+    let world = World::new(np);
+    let grids2 = grids.clone();
+    let results = world.run(move |comm| {
+        let tracker = MemTracker::new();
+        let coarsening = Coarsening::Geometric { grids: grids2.clone() };
+        let cfg = HierarchyConfig::default();
+        let a0 = grid_laplacian(grids2[0], comm.rank(), comm.size());
+        let layout = a0.row_layout.clone();
+        let mut cache = SessionCache::new();
+        // client 1 builds the hierarchy; client 2 presents the same
+        // pattern with rescaled values and must only refresh
+        cache.checkout(&comm, &a0, &coarsening, cfg, MgOpts::default(), &tracker);
+        let mut a1 = a0.clone();
+        for v in a1.diag.vals.iter_mut().chain(a1.offd.vals.iter_mut()) {
+            *v *= 1.5;
+        }
+        let (refresher, hit) =
+            cache.checkout(&comm, &a1, &coarsening, cfg, MgOpts::default(), &tracker);
+        assert!(hit, "second client with an identical pattern must hit the cache");
+        let spmv = DistSpmv::new(&comm, &a1);
+        let op = CsrOperator::new(&a1, &spmv);
+        let mut queue = RequestQueue::new(kk, std::time::Duration::from_millis(50));
+        let mut batches = Vec::new();
+        for s in 0..requests {
+            queue.submit(DistVec::from_fn(layout.clone(), comm.rank(), move |g| {
+                (((g * 11 + s * 3) % 19) as f64 - 9.0) / 9.0
+            }));
+            if queue.should_flush() {
+                let done = queue.flush(&comm, &op, Some(refresher.pc()), 1e-8, 100, &tracker);
+                assert!(done.iter().all(|d| d.result.converged), "batched request diverged");
+                batches.push(done.len());
+            }
+        }
+        if !queue.is_empty() {
+            // leftover sub-batch: what the flush deadline would drain
+            let done = queue.flush(&comm, &op, Some(refresher.pc()), 1e-8, 100, &tracker);
+            assert!(done.iter().all(|d| d.result.converged), "batched request diverged");
+            batches.push(done.len());
+        }
+        let served: usize = batches.iter().sum();
+        (served, batches, cache.hits, cache.misses, queue.flushes, queue.partial_flushes)
+    });
+    let (served, batches, hits, misses, flushes, partial) = &results[0];
+    println!(
+        "served {served} requests in {flushes} batched dispatch(es) of widths {batches:?} \
+         ({partial} partial); hierarchy cache: {hits} hit(s), {misses} miss(es)"
+    );
 }
 
 /// Time-dependent workload: N implicit steps with one symbolic hierarchy

@@ -25,12 +25,23 @@ pub enum Cat {
     Hash,
     /// Communication staging buffers (sends, receives, gathered P̃_r).
     Comm,
+    /// K-wide multivector state: `DistMultiVec` RHS/solution blocks and
+    /// the blocked cycle's K-wide scratch twins.
+    MultiVec,
     /// Everything else (vectors, solver state, hierarchy bookkeeping).
     Other,
 }
 
-pub const ALL_CATS: [Cat; 7] =
-    [Cat::MatA, Cat::MatP, Cat::MatC, Cat::Aux, Cat::Hash, Cat::Comm, Cat::Other];
+pub const ALL_CATS: [Cat; 8] = [
+    Cat::MatA,
+    Cat::MatP,
+    Cat::MatC,
+    Cat::Aux,
+    Cat::Hash,
+    Cat::Comm,
+    Cat::MultiVec,
+    Cat::Other,
+];
 
 impl Cat {
     pub fn name(self) -> &'static str {
@@ -41,6 +52,7 @@ impl Cat {
             Cat::Aux => "aux",
             Cat::Hash => "hash",
             Cat::Comm => "comm",
+            Cat::MultiVec => "multivec",
             Cat::Other => "other",
         }
     }
@@ -53,15 +65,16 @@ impl Cat {
             Cat::Aux => 3,
             Cat::Hash => 4,
             Cat::Comm => 5,
-            Cat::Other => 6,
+            Cat::MultiVec => 6,
+            Cat::Other => 7,
         }
     }
 }
 
 #[derive(Default, Debug, Clone)]
 struct Inner {
-    cur: [u64; 7],
-    peak: [u64; 7],
+    cur: [u64; 8],
+    peak: [u64; 8],
     cur_total: u64,
     peak_total: u64,
 }

@@ -16,8 +16,10 @@
 use std::rc::Rc;
 
 use crate::agglomerate::Telescope;
-use crate::dist::{Comm, DistOperator, DistSpmv, DistVec};
+use crate::dist::{Comm, DistMultiVec, DistOperator, DistSpmv, DistVec};
 use crate::mat::block_invert;
+use crate::mem::{Cat, Charge, MemTracker};
+use crate::runtime::{BlockBackend, SpmvBatcher};
 use crate::util::bytebuf::{ByteReader, ByteWriter};
 
 use super::hierarchy::{Hierarchy, LevelOp};
@@ -83,6 +85,21 @@ impl Relax {
         }
     }
 
+    fn sweep_multi(
+        &self,
+        comm: &Comm,
+        a: &dyn DistOperator,
+        b: &DistMultiVec,
+        x: &mut DistMultiVec,
+        work: &mut DistMultiVec,
+    ) {
+        match self {
+            Relax::Jacobi(s) => s.sweep_multi(comm, a, b, x, work),
+            Relax::Chebyshev(s) => s.sweep_multi(comm, a, b, x, work),
+            Relax::Sor(s) => s.sweep_multi(comm, a, b, x),
+        }
+    }
+
     fn bytes(&self) -> u64 {
         match self {
             Relax::Jacobi(s) => s.bytes(),
@@ -90,6 +107,69 @@ impl Relax {
             Relax::Sor(s) => s.bytes(),
         }
     }
+}
+
+/// Coarse direct-solve back-substitution tile (rows × cols per batched
+/// block multiply).  Fixed so the tiled fold — and therefore the solve's
+/// bits — never depends on K, the partition, or the backend chunk size.
+const COARSE_TILE: usize = 16;
+
+/// `out[0..len][0..kk] = inv[start..start+len, :] · full` — the dense
+/// redundant coarse solve's back-substitution, K columns at once, tiled
+/// [`COARSE_TILE`]² through the [`SpmvBatcher`] so the blocked-kernel
+/// seam ([`crate::runtime`]) sees batched launches.  Per row and column
+/// the fold adds tile partials in ascending column-tile order, each tile
+/// partial folded flat ascending — the same structure for every `kk`, so
+/// column `j` of a K-wide call is bitwise the `kk = 1` call on column
+/// `j`.
+#[allow(clippy::too_many_arguments)]
+fn coarse_backsub(
+    batcher: &mut SpmvBatcher<'_>,
+    inv: &[f64],
+    n: usize,
+    full: &[f64],
+    kk: usize,
+    start: usize,
+    len: usize,
+    out: &mut [f64],
+) {
+    let bsz = batcher.block_size();
+    debug_assert_eq!(full.len(), n * kk);
+    debug_assert_eq!(out.len(), len * kk);
+    out.fill(0.0);
+    let mut a_blk = vec![0.0f64; bsz * bsz];
+    let mut x_blk = vec![0.0f64; bsz];
+    let mut sink = |tag: u64, y: &[f64]| {
+        let j = (tag >> 32) as usize;
+        let i0 = (tag & 0xffff_ffff) as usize;
+        for (r, &yr) in y.iter().enumerate() {
+            let li = i0 + r;
+            if li < len {
+                out[li * kk + j] += yr;
+            }
+        }
+    };
+    for j in 0..kk {
+        for i0 in (0..len).step_by(bsz) {
+            let rows = bsz.min(len - i0);
+            for j0 in (0..n).step_by(bsz) {
+                let cols = bsz.min(n - j0);
+                a_blk.fill(0.0);
+                for r in 0..rows {
+                    let gi = start + i0 + r;
+                    a_blk[r * bsz..r * bsz + cols]
+                        .copy_from_slice(&inv[gi * n + j0..gi * n + j0 + cols]);
+                }
+                x_blk.fill(0.0);
+                for c in 0..cols {
+                    x_blk[c] = full[(j0 + c) * kk + j];
+                }
+                let tag = ((j as u64) << 32) | i0 as u64;
+                batcher.push(&a_blk, &x_blk, tag, &mut sink);
+            }
+        }
+    }
+    batcher.flush(&mut sink);
 }
 
 struct LevelCtx {
@@ -121,6 +201,35 @@ struct LevelCtx {
     /// W-cycle second-visit scratch in *this* level's row layout.
     rc2: Option<DistVec>,
     ec2: Option<DistVec>,
+    /// K-wide twins of every scratch vector above, lazily allocated by
+    /// [`MgPreconditioner::ensure_multi_scratch`] the first time a
+    /// blocked cycle runs (and reallocated when K changes).  `mk` is the
+    /// K they were sized for (0 = unallocated).
+    mk: usize,
+    r_m: Option<DistMultiVec>,
+    e_m: Option<DistMultiVec>,
+    work_m: Option<DistMultiVec>,
+    bc_m: Option<DistMultiVec>,
+    ec_m: Option<DistMultiVec>,
+    bc_sub_m: Option<DistMultiVec>,
+    ec_sub_m: Option<DistMultiVec>,
+    rc2_m: Option<DistMultiVec>,
+    ec2_m: Option<DistMultiVec>,
+}
+
+impl LevelCtx {
+    fn multi_bytes(&self) -> u64 {
+        let opt = |v: &Option<DistMultiVec>| v.as_ref().map_or(0, |x| x.bytes());
+        opt(&self.r_m)
+            + opt(&self.e_m)
+            + opt(&self.work_m)
+            + opt(&self.bc_m)
+            + opt(&self.ec_m)
+            + opt(&self.bc_sub_m)
+            + opt(&self.ec_sub_m)
+            + opt(&self.rc2_m)
+            + opt(&self.ec2_m)
+    }
 }
 
 /// A ready-to-apply V-cycle preconditioner.
@@ -130,6 +239,13 @@ pub struct MgPreconditioner {
     /// Dense inverse of the gathered coarsest operator (redundant solve).
     coarse_inv: Option<Vec<f64>>,
     coarse_n: usize,
+    /// Batcher for the coarse back-substitution (scalar and blocked paths
+    /// share it, so its `mults`/`flushes` count every direct solve).
+    coarse_batcher: Option<SpmvBatcher<'static>>,
+    /// Charges the K-wide scratch twins to [`Cat::MultiVec`] when a
+    /// tracker was attached via [`MgPreconditioner::track_multi_scratch`].
+    tracker: Option<MemTracker>,
+    multi_charge: Option<Charge>,
     pub opts: MgOpts,
 }
 
@@ -202,6 +318,16 @@ impl MgPreconditioner {
                 ec_sub,
                 rc2,
                 ec2,
+                mk: 0,
+                r_m: None,
+                e_m: None,
+                work_m: None,
+                bc_m: None,
+                ec_m: None,
+                bc_sub_m: None,
+                ec_sub_m: None,
+                rc2_m: None,
+                ec2_m: None,
             });
             if let Some(tel) = &lvl.telescope {
                 match &tel.subcomm {
@@ -213,7 +339,29 @@ impl MgPreconditioner {
         }
         let (coarse_inv, coarse_n) =
             Self::build_coarse_inv(&levels, &hierarchy, opts.max_direct);
-        MgPreconditioner { hierarchy, levels, coarse_inv, coarse_n, opts }
+        MgPreconditioner {
+            hierarchy,
+            levels,
+            coarse_inv,
+            coarse_n,
+            coarse_batcher: None,
+            tracker: None,
+            multi_charge: None,
+            opts,
+        }
+    }
+
+    /// Attach a memory tracker: the blocked cycle's K-wide scratch twins
+    /// are charged to [`Cat::MultiVec`] from now on (and re-charged when
+    /// K changes).
+    pub fn track_multi_scratch(&mut self, tracker: &MemTracker) {
+        self.tracker = Some(tracker.clone());
+    }
+
+    /// Cumulative (block multiplies, kernel launches) of the batched
+    /// coarse back-substitution since construction.
+    pub fn coarse_batch_stats(&self) -> (u64, u64) {
+        self.coarse_batcher.as_ref().map_or((0, 0), |b| (b.mults, b.flushes))
     }
 
     /// One level's relaxation, built from the operator's current values.
@@ -309,9 +457,12 @@ impl MgPreconditioner {
                     + opt(&l.ec_sub)
                     + opt(&l.rc2)
                     + opt(&l.ec2)
+                    + l.multi_bytes()
             })
             .sum();
-        per_level + self.coarse_inv.as_ref().map_or(0, |m| (m.len() * 8) as u64)
+        per_level
+            + self.coarse_inv.as_ref().map_or(0, |m| (m.len() * 8) as u64)
+            + self.coarse_batcher.as_ref().map_or(0, |b| b.bytes())
     }
 
     /// Total halo gathers that hit a warm persistent buffer instead of
@@ -341,6 +492,218 @@ impl MgPreconditioner {
         debug_assert_eq!(comm.size(), self.levels[0].comm.size());
         x.fill(0.0);
         self.cycle(0, b, x);
+    }
+
+    /// Apply one V-cycle to K stacked right-hand sides: `X = M⁻¹ B` with
+    /// zero initial guess.  Every level pays one K-wide halo/transfer/
+    /// telescope epoch instead of K scalar ones, and column `j` of the
+    /// result is bitwise [`MgPreconditioner::apply`] of column `j`.
+    pub fn apply_multi(&mut self, comm: &Comm, b: &DistMultiVec, x: &mut DistMultiVec) {
+        debug_assert_eq!(comm.size(), self.levels[0].comm.size());
+        debug_assert_eq!(b.k, x.k);
+        self.ensure_multi_scratch(b.k);
+        x.fill(0.0);
+        self.cycle_multi(0, b, x);
+    }
+
+    /// Allocate (or re-size) the K-wide scratch twins on every level the
+    /// rank participates in.  Idempotent per K; charged to
+    /// [`Cat::MultiVec`] when a tracker is attached.
+    fn ensure_multi_scratch(&mut self, kk: usize) {
+        debug_assert!(kk > 0);
+        if self.levels.first().is_some_and(|l| l.mk == kk) {
+            return;
+        }
+        for ctx in &mut self.levels {
+            let mz = |v: &DistVec| DistMultiVec::zeros(v.layout.clone(), v.rank, kk);
+            ctx.r_m = Some(mz(&ctx.r));
+            ctx.e_m = Some(mz(&ctx.e));
+            ctx.work_m = Some(mz(&ctx.work));
+            ctx.bc_m = ctx.bc.as_ref().map(&mz);
+            ctx.ec_m = ctx.ec.as_ref().map(&mz);
+            ctx.bc_sub_m = ctx.bc_sub.as_ref().map(&mz);
+            ctx.ec_sub_m = ctx.ec_sub.as_ref().map(&mz);
+            ctx.rc2_m = ctx.rc2.as_ref().map(&mz);
+            ctx.ec2_m = ctx.ec2.as_ref().map(&mz);
+            ctx.mk = kk;
+        }
+        if let Some(t) = &self.tracker {
+            let total: u64 = self.levels.iter().map(|l| l.multi_bytes()).sum();
+            match &mut self.multi_charge {
+                Some(c) => c.resize(total),
+                None => self.multi_charge = Some(Charge::new(t, Cat::MultiVec, total)),
+            }
+        }
+    }
+
+    /// The K-wide twin of [`MgPreconditioner::cycle`]: the same smoothing
+    /// / residual / restrict / recurse / prolongate sequence with every
+    /// collective replaced by its blocked counterpart.
+    fn cycle_multi(&mut self, k: usize, b: &DistMultiVec, x: &mut DistMultiVec) {
+        let comm = self.levels[k].comm.clone();
+        let comm = &comm;
+        let nlev = self.levels.len();
+        if k + 1 == nlev && self.hierarchy.levels[k].p.is_none() {
+            self.coarse_solve_multi(comm, k, b, x);
+            return;
+        }
+        for _ in 0..self.opts.pre_smooth {
+            let lvl = &mut self.levels[k];
+            let a = &self.hierarchy.levels[k].a;
+            let op = a.operator(lvl.spmv.as_ref());
+            lvl.smoother.sweep_multi(comm, &op, b, x, lvl.work_m.as_mut().unwrap());
+        }
+        // residual R = B - A X
+        {
+            let lvl = &mut self.levels[k];
+            let a = &self.hierarchy.levels[k].a;
+            let op = a.operator(lvl.spmv.as_ref());
+            op.apply_multi(comm, x, lvl.work_m.as_mut().unwrap());
+        }
+        {
+            let lvl = &mut self.levels[k];
+            let work = lvl.work_m.take().unwrap();
+            let r = lvl.r_m.as_mut().unwrap();
+            r.vals.clone_from(&b.vals);
+            for (rv, wv) in r.vals.iter_mut().zip(&work.vals) {
+                *rv -= wv;
+            }
+            lvl.work_m = Some(work);
+        }
+        let mut bc = self.levels[k].bc_m.take().expect("coarse rhs scratch in use");
+        {
+            let p = self.hierarchy.levels[k].p.as_ref().unwrap();
+            let lvl = &self.levels[k];
+            lvl.transfer.as_ref().unwrap().restrict_multi(
+                comm,
+                p,
+                lvl.r_m.as_ref().unwrap(),
+                &mut bc,
+            );
+        }
+        let w_revisit = self.opts.cycle == CycleType::W
+            && self.hierarchy.levels.get(k + 1).is_some_and(|l| l.p.is_some());
+        let mut ec = self.levels[k].ec_m.take().expect("coarse correction scratch in use");
+        if let Some(tel) = self.levels[k].telescope.clone() {
+            let mut bc_sub = self.levels[k].bc_sub_m.take();
+            tel.coarse.scatter_multi_into(comm, &bc, bc_sub.as_mut());
+            let ec_sub = match (&tel.subcomm, bc_sub.as_ref()) {
+                (Some(_), Some(bc_s)) => {
+                    let mut ec_sub =
+                        self.levels[k].ec_sub_m.take().expect("subcomm scratch in use");
+                    ec_sub.fill(0.0);
+                    self.cycle_multi(k + 1, bc_s, &mut ec_sub);
+                    if w_revisit {
+                        self.w_revisit_multi(k, bc_s, &mut ec_sub);
+                    }
+                    Some(ec_sub)
+                }
+                _ => None,
+            };
+            tel.coarse.gather_multi_into(comm, ec_sub.as_ref(), &mut ec);
+            self.levels[k].ec_sub_m = ec_sub;
+            self.levels[k].bc_sub_m = bc_sub;
+        } else {
+            ec.fill(0.0);
+            self.cycle_multi(k + 1, &bc, &mut ec);
+            if w_revisit {
+                self.w_revisit_multi(k, &bc, &mut ec);
+            }
+        }
+        {
+            let p = self.hierarchy.levels[k].p.as_ref().unwrap();
+            let lvl = &mut self.levels[k];
+            let e = lvl.e_m.as_mut().unwrap();
+            e.fill(0.0);
+            lvl.transfer.as_ref().unwrap().prolong_add_multi(comm, p, &ec, e);
+        }
+        self.levels[k].bc_m = Some(bc);
+        self.levels[k].ec_m = Some(ec);
+        {
+            let e = self.levels[k].e_m.as_ref().unwrap();
+            for (xv, ev) in x.vals.iter_mut().zip(&e.vals) {
+                *xv += ev;
+            }
+        }
+        for _ in 0..self.opts.post_smooth {
+            let lvl = &mut self.levels[k];
+            let a = &self.hierarchy.levels[k].a;
+            let op = a.operator(lvl.spmv.as_ref());
+            lvl.smoother.sweep_multi(comm, &op, b, x, lvl.work_m.as_mut().unwrap());
+        }
+    }
+
+    /// K-wide W-cycle second visit (twin of
+    /// [`MgPreconditioner::w_revisit`]).
+    fn w_revisit_multi(&mut self, k: usize, bc: &DistMultiVec, ec: &mut DistMultiVec) {
+        let comm = self.levels[k + 1].comm.clone();
+        let mut rc2 = self.levels[k + 1].rc2_m.take().expect("W-cycle rhs scratch in use");
+        {
+            let ac = &self.hierarchy.levels[k + 1].a;
+            let lvl = &mut self.levels[k + 1];
+            let op = ac.operator(lvl.spmv.as_ref());
+            op.apply_multi(&comm, ec, lvl.work_m.as_mut().unwrap());
+        }
+        {
+            let work = self.levels[k + 1].work_m.as_ref().unwrap();
+            rc2.vals.clone_from(&bc.vals);
+            for (rv, wv) in rc2.vals.iter_mut().zip(&work.vals) {
+                *rv -= wv;
+            }
+        }
+        let mut ec2 =
+            self.levels[k + 1].ec2_m.take().expect("W-cycle correction scratch in use");
+        ec2.fill(0.0);
+        self.cycle_multi(k + 1, &rc2, &mut ec2);
+        for (ev, e2) in ec.vals.iter_mut().zip(&ec2.vals) {
+            *ev += 1.0 * e2;
+        }
+        self.levels[k + 1].rc2_m = Some(rc2);
+        self.levels[k + 1].ec2_m = Some(ec2);
+    }
+
+    /// Blocked coarsest solve: one allgather ships all K local slices,
+    /// one retained factorization back-substitutes K columns through the
+    /// batched block kernel.
+    fn coarse_solve_multi(
+        &mut self,
+        comm: &Comm,
+        k: usize,
+        b: &DistMultiVec,
+        x: &mut DistMultiVec,
+    ) {
+        let kk = b.k;
+        match &self.coarse_inv {
+            Some(inv) => {
+                let n = self.coarse_n;
+                let mut w = ByteWriter::with_capacity(8 * b.vals.len());
+                w.f64_slice(&b.vals);
+                let all = comm.allgather_bytes(w.into_bytes());
+                let mut full = Vec::with_capacity(n * kk);
+                for payload in &all {
+                    let mut r = ByteReader::new(payload);
+                    while !r.done() {
+                        full.push(r.f64());
+                    }
+                }
+                debug_assert_eq!(full.len(), n * kk);
+                let start = b.layout.start(comm.rank());
+                let len = b.local_len();
+                let batcher = self
+                    .coarse_batcher
+                    .get_or_insert_with(|| SpmvBatcher::new(BlockBackend::Native, COARSE_TILE));
+                coarse_backsub(batcher, inv, n, &full, kk, start, len, &mut x.vals);
+            }
+            None => {
+                // fall back to heavy smoothing
+                for _ in 0..20 {
+                    let lvl = &mut self.levels[k];
+                    let a = &self.hierarchy.levels[k].a;
+                    let op = a.operator(lvl.spmv.as_ref());
+                    lvl.smoother.sweep_multi(comm, &op, b, x, lvl.work_m.as_mut().unwrap());
+                }
+            }
+        }
     }
 
     fn cycle(&mut self, k: usize, b: &DistVec, x: &mut DistVec) {
@@ -463,7 +826,10 @@ impl MgPreconditioner {
         match &self.coarse_inv {
             Some(inv) => {
                 // gather full rhs on every rank, apply the dense inverse,
-                // keep the local slice (PETSc "redundant" analog)
+                // keep the local slice (PETSc "redundant" analog); the
+                // back-substitution is tiled through the block-kernel
+                // batcher — the same fold the K-wide solve uses, so the
+                // scalar and blocked coarse solves agree bit for bit
                 let n = self.coarse_n;
                 let mut w = ByteWriter::with_capacity(8 * b.vals.len());
                 w.f64_slice(&b.vals);
@@ -477,14 +843,11 @@ impl MgPreconditioner {
                 }
                 debug_assert_eq!(full.len(), n);
                 let start = b.layout.start(comm.rank());
-                for (li, xi) in x.vals.iter_mut().enumerate() {
-                    let i = start + li;
-                    let mut acc = 0.0;
-                    for j in 0..n {
-                        acc += inv[i * n + j] * full[j];
-                    }
-                    *xi = acc;
-                }
+                let len = x.vals.len();
+                let batcher = self
+                    .coarse_batcher
+                    .get_or_insert_with(|| SpmvBatcher::new(BlockBackend::Native, COARSE_TILE));
+                coarse_backsub(batcher, inv, n, &full, 1, start, len, &mut x.vals);
             }
             None => {
                 // fall back to heavy smoothing

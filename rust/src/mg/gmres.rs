@@ -5,7 +5,7 @@
 //! CG's assumptions do not hold; GMRES(m) is the appropriate Krylov
 //! method and what RattleSnake/PETSc run.
 
-use crate::dist::{Comm, DistOperator, DistVec};
+use crate::dist::{Comm, DistMultiVec, DistOperator, DistVec};
 
 use super::cycle::MgPreconditioner;
 use super::solver::SolveResult;
@@ -156,6 +156,216 @@ pub fn gmres(
         }
     }
     SolveResult { iterations: total_iters, converged: false, residuals }
+}
+
+/// Blocked restarted GMRES(m) over K stacked right-hand sides
+/// (collective).  All K columns march through one shared Arnoldi
+/// schedule: each step pays one K-wide preconditioner cycle, one K-wide
+/// matvec, and K-element reductions for the Gram-Schmidt dots, so every
+/// α term is amortized across the block.  Each column keeps its own
+/// Hessenberg/Givens state and freezes independently (breakdown,
+/// convergence, or iteration cap) — column `j`'s solution and residual
+/// history are bitwise the scalar [`gmres`] on column `j`.
+#[allow(clippy::too_many_arguments)]
+pub fn gmres_multi(
+    comm: &Comm,
+    a: &dyn DistOperator,
+    b: &DistMultiVec,
+    x: &mut DistMultiVec,
+    mut pc: Option<&mut MgPreconditioner>,
+    restart: usize,
+    rtol: f64,
+    max_iters: usize,
+) -> Vec<SolveResult> {
+    let kk = b.k;
+    let layout = a.row_layout().clone();
+    let rank = comm.rank();
+    let m = restart.max(1);
+
+    let mut r = DistMultiVec::zeros(layout.clone(), rank, kk);
+    let mut w = DistMultiVec::zeros(layout.clone(), rank, kk);
+    let mut z = DistMultiVec::zeros(layout.clone(), rank, kk);
+
+    // R = B - A X
+    a.apply_multi(comm, x, &mut w);
+    r.vals.clone_from(&b.vals);
+    for (rv, wv) in r.vals.iter_mut().zip(&w.vals) {
+        *rv -= wv;
+    }
+    let r0 = r.norm2_multi(comm);
+    let mut hist: Vec<Vec<f64>> = r0.iter().map(|&v| vec![v]).collect();
+    let mut done: Vec<bool> = r0.iter().map(|&v| v == 0.0).collect();
+    let mut conv = done.clone();
+    let mut iters = vec![0usize; kk];
+    let target: Vec<f64> = r0.iter().map(|&v| rtol * v).collect();
+    let n_local = r.local_len();
+
+    while !done.iter().all(|&d| d) {
+        // columns participating in this restart cycle
+        let cycle_cols: Vec<bool> = done.iter().map(|&d| !d).collect();
+        let beta = r.norm2_multi(comm);
+        let mut any = false;
+        for j in 0..kk {
+            if cycle_cols[j] && beta[j] <= target[j] {
+                done[j] = true;
+                conv[j] = true;
+            }
+            any |= cycle_cols[j] && !done[j];
+        }
+        if !any {
+            break;
+        }
+        // per-column Arnoldi state: arn[j] = still extending the basis
+        let mut arn: Vec<bool> =
+            (0..kk).map(|j| cycle_cols[j] && !done[j]).collect();
+        let mut v: Vec<DistMultiVec> = Vec::with_capacity(m + 1);
+        let mut v0 = DistMultiVec::zeros(layout.clone(), rank, kk);
+        for j in 0..kk {
+            if arn[j] {
+                let s = 1.0 / beta[j];
+                for i in 0..n_local {
+                    v0.vals[i * kk + j] = r.vals[i * kk + j] * s;
+                }
+            }
+        }
+        v.push(v0);
+        let mut h = vec![vec![0.0f64; (m + 1) * m]; kk];
+        let mut cs = vec![vec![0.0f64; m]; kk];
+        let mut sn = vec![vec![0.0f64; m]; kk];
+        let mut g = vec![vec![0.0f64; m + 1]; kk];
+        for j in 0..kk {
+            g[j][0] = beta[j];
+        }
+        let mut kdim = vec![0usize; kk];
+
+        for k in 0..m {
+            if !arn.iter().any(|&f| f) {
+                break;
+            }
+            // W = A M⁻¹ v_k
+            match pc.as_deref_mut() {
+                Some(p) => {
+                    p.apply_multi(comm, &v[k], &mut z);
+                    a.apply_multi(comm, &z, &mut w);
+                }
+                None => a.apply_multi(comm, &v[k], &mut w),
+            }
+            // modified Gram-Schmidt, one K-element reduction per basis
+            // vector
+            for i in 0..=k {
+                let hjk = w.dot_multi(comm, &v[i]);
+                let neg: Vec<f64> = hjk.iter().map(|&v_| -v_).collect();
+                for j in 0..kk {
+                    if arn[j] {
+                        h[j][i * m + k] = hjk[j];
+                    }
+                }
+                w.axpy_cols(&neg, &v[i], &arn);
+            }
+            let hk1 = w.norm2_multi(comm);
+            for j in 0..kk {
+                if !arn[j] {
+                    continue;
+                }
+                let hj = &mut h[j];
+                hj[(k + 1) * m + k] = hk1[j];
+                for i in 0..k {
+                    let t = cs[j][i] * hj[i * m + k] + sn[j][i] * hj[(i + 1) * m + k];
+                    hj[(i + 1) * m + k] = -sn[j][i] * hj[i * m + k] + cs[j][i] * hj[(i + 1) * m + k];
+                    hj[i * m + k] = t;
+                }
+                let denom = (hj[k * m + k] * hj[k * m + k] + hk1[j] * hk1[j]).sqrt();
+                if denom == 0.0 {
+                    kdim[j] = k;
+                    arn[j] = false;
+                    continue;
+                }
+                cs[j][k] = hj[k * m + k] / denom;
+                sn[j][k] = hk1[j] / denom;
+                hj[k * m + k] = denom;
+                g[j][k + 1] = -sn[j][k] * g[j][k];
+                g[j][k] *= cs[j][k];
+                iters[j] += 1;
+                kdim[j] = k + 1;
+                let res = g[j][k + 1].abs();
+                hist[j].push(res);
+                if res <= target[j] || iters[j] >= max_iters || hk1[j] == 0.0 {
+                    arn[j] = false;
+                }
+            }
+            if arn.iter().any(|&f| f) {
+                let mut vk1 = DistMultiVec::zeros(layout.clone(), rank, kk);
+                for j in 0..kk {
+                    if arn[j] {
+                        let s = 1.0 / hk1[j];
+                        for i in 0..n_local {
+                            vk1.vals[i * kk + j] = w.vals[i * kk + j] * s;
+                        }
+                    }
+                }
+                v.push(vk1);
+            }
+        }
+
+        // per-column back-substitution and update assembly (local)
+        let mut update = DistMultiVec::zeros(layout.clone(), rank, kk);
+        for j in 0..kk {
+            if !cycle_cols[j] || done[j] {
+                continue;
+            }
+            let kd = kdim[j];
+            let mut y = vec![0.0f64; kd];
+            for i in (0..kd).rev() {
+                let mut s = g[j][i];
+                for t in i + 1..kd {
+                    s -= h[j][i * m + t] * y[t];
+                }
+                y[i] = s / h[j][i * m + i];
+            }
+            for (t, &yt) in y.iter().enumerate() {
+                let vt = &v[t];
+                for i in 0..n_local {
+                    update.vals[i * kk + j] += yt * vt.vals[i * kk + j];
+                }
+            }
+        }
+        // X += M⁻¹ (V y), frozen columns untouched
+        let ones = vec![1.0f64; kk];
+        let mask: Vec<bool> = (0..kk).map(|j| cycle_cols[j] && !done[j]).collect();
+        match pc.as_deref_mut() {
+            Some(p) => {
+                p.apply_multi(comm, &update, &mut z);
+                x.axpy_cols(&ones, &z, &mask);
+            }
+            None => x.axpy_cols(&ones, &update, &mask),
+        }
+        // true residual for the restart
+        a.apply_multi(comm, x, &mut w);
+        r.vals.clone_from(&b.vals);
+        for (rv, wv) in r.vals.iter_mut().zip(&w.vals) {
+            *rv -= wv;
+        }
+        let rn = r.norm2_multi(comm);
+        for j in 0..kk {
+            if !mask[j] {
+                continue;
+            }
+            *hist[j].last_mut().unwrap() = rn[j];
+            if rn[j] <= target[j] {
+                done[j] = true;
+                conv[j] = true;
+            } else if iters[j] >= max_iters {
+                done[j] = true;
+            }
+        }
+    }
+    (0..kk)
+        .map(|j| SolveResult {
+            iterations: iters[j],
+            converged: conv[j],
+            residuals: std::mem::take(&mut hist[j]),
+        })
+        .collect()
 }
 
 #[cfg(test)]

@@ -20,9 +20,9 @@ pub use hierarchy::{
     build_hierarchy, build_hierarchy_matrix_free, geometric_chain, Coarsening, Hierarchy,
     HierarchyConfig, InterpStats, Level, LevelOp, LevelStats, OpHandle,
 };
-pub use gmres::gmres;
+pub use gmres::{gmres, gmres_multi};
 pub use smoother::{
     chebyshev_bounds, ChebyshevSmoother, HybridSorSmoother, JacobiSmoother, SmootherKind,
 };
-pub use solver::{pcg, richardson, SolveResult};
+pub use solver::{pcg, pcg_multi, richardson, SolveResult};
 pub use transfer::Transfer;

@@ -19,7 +19,7 @@
 //! [`HybridSorSmoother`] is local-block Gauss-Seidel by construction —
 //! its sweep changes with the partition on purpose.
 
-use crate::dist::{Comm, DistOperator, DistVec};
+use crate::dist::{Comm, DistMultiVec, DistOperator, DistVec};
 
 /// Which relaxation the V-cycle uses per level.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -67,6 +67,28 @@ impl JacobiSmoother {
         a.apply(comm, x, work); // work = A x
         for i in 0..x.vals.len() {
             x.vals[i] += self.omega * self.dinv[i] * (b.vals[i] - work.vals[i]);
+        }
+    }
+
+    /// Blocked sweep over K stacked systems: one K-wide matvec (a single
+    /// halo epoch), then the same elementwise update per column — column
+    /// `j` is bitwise the scalar [`JacobiSmoother::sweep`] of column `j`.
+    pub fn sweep_multi(
+        &self,
+        comm: &Comm,
+        a: &dyn DistOperator,
+        b: &DistMultiVec,
+        x: &mut DistMultiVec,
+        work: &mut DistMultiVec,
+    ) {
+        let k = x.k;
+        a.apply_multi(comm, x, work); // work = A X
+        for i in 0..self.dinv.len() {
+            let wd = self.omega * self.dinv[i];
+            for j in 0..k {
+                let t = i * k + j;
+                x.vals[t] += wd * (b.vals[t] - work.vals[t]);
+            }
         }
     }
 }
@@ -165,6 +187,57 @@ impl ChebyshevSmoother {
             rho = rho_new;
         }
     }
+
+    /// Blocked Chebyshev over K stacked systems: each of the `degree`
+    /// matvecs is one K-wide halo epoch; the 3-term recurrence runs per
+    /// column with the exact scalar coefficient arithmetic, so column `j`
+    /// is bitwise the scalar [`ChebyshevSmoother::sweep`] of column `j`.
+    pub fn sweep_multi(
+        &self,
+        comm: &Comm,
+        a: &dyn DistOperator,
+        b: &DistMultiVec,
+        x: &mut DistMultiVec,
+        work: &mut DistMultiVec,
+    ) {
+        let theta = 0.5 * (self.lmax + self.lmin);
+        let delta = 0.5 * (self.lmax - self.lmin);
+        let k = x.k;
+        let n = self.dinv.len();
+        let mut r = DistMultiVec::zeros(x.layout.clone(), x.rank, k);
+        a.apply_multi(comm, x, work);
+        for i in 0..n {
+            for j in 0..k {
+                let t = i * k + j;
+                r.vals[t] = self.dinv[i] * (b.vals[t] - work.vals[t]);
+            }
+        }
+        // d = r / theta ; x += d  (same scale-then-add bits as scalar)
+        let mut d = r.clone();
+        let inv_theta = 1.0 / theta;
+        for t in 0..n * k {
+            d.vals[t] *= inv_theta;
+            x.vals[t] += d.vals[t];
+        }
+        let mut rho = delta / theta;
+        for _ in 1..self.degree {
+            a.apply_multi(comm, x, work);
+            for i in 0..n {
+                for j in 0..k {
+                    let t = i * k + j;
+                    r.vals[t] = self.dinv[i] * (b.vals[t] - work.vals[t]);
+                }
+            }
+            let rho_new = 1.0 / (2.0 * theta / delta - rho);
+            let c1 = rho_new * rho;
+            let c2 = 2.0 * rho_new / delta;
+            for t in 0..n * k {
+                d.vals[t] = c1 * d.vals[t] + c2 * r.vals[t];
+                x.vals[t] += d.vals[t];
+            }
+            rho = rho_new;
+        }
+    }
 }
 
 /// Hybrid SSOR: symmetric (forward + backward) Gauss-Seidel within the
@@ -192,6 +265,18 @@ impl HybridSorSmoother {
     /// One symmetric local sweep (collective: gathers the halo once).
     pub fn sweep(&self, comm: &Comm, a: &dyn DistOperator, b: &DistVec, x: &mut DistVec) {
         a.sor_sweep(comm, &self.dinv, self.omega, b, x, true);
+    }
+
+    /// Blocked symmetric sweep over K stacked systems: one K-wide frozen
+    /// halo for all columns ([`DistOperator::sor_sweep_multi`]).
+    pub fn sweep_multi(
+        &self,
+        comm: &Comm,
+        a: &dyn DistOperator,
+        b: &DistMultiVec,
+        x: &mut DistMultiVec,
+    ) {
+        a.sor_sweep_multi(comm, &self.dinv, self.omega, b, x, true);
     }
 
     /// Forward-only sweep (exposed for the sequential-GS equivalence test

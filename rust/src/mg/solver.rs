@@ -2,7 +2,7 @@
 //! Both are written against [`DistOperator`], so a matrix-free fine
 //! level drops in without touching the Krylov loop.
 
-use crate::dist::{Comm, DistOperator, DistVec};
+use crate::dist::{Comm, DistMultiVec, DistOperator, DistVec};
 
 use super::cycle::MgPreconditioner;
 
@@ -73,6 +73,95 @@ pub fn pcg(
         p.aypx(beta, &z);
     }
     SolveResult { iterations: max_iters, converged: false, residuals }
+}
+
+/// Blocked preconditioned CG over K stacked right-hand sides
+/// (collective).  One iteration pays one K-wide matvec, one K-wide
+/// preconditioner cycle, and one K-element reduction per dot product —
+/// every α term amortized across the block.  Columns converge
+/// independently: a column whose residual passes the tolerance is frozen
+/// (its `x`, `r`, and residual history stop updating) while the blocked
+/// iteration continues for the rest, so column `j`'s solution and
+/// residual history are bitwise the scalar [`pcg`] on column `j`.
+pub fn pcg_multi(
+    comm: &Comm,
+    a: &dyn DistOperator,
+    b: &DistMultiVec,
+    x: &mut DistMultiVec,
+    mut pc: Option<&mut MgPreconditioner>,
+    rtol: f64,
+    max_iters: usize,
+) -> Vec<SolveResult> {
+    let kk = b.k;
+    let layout = a.row_layout().clone();
+    let rank = comm.rank();
+    let mut r = DistMultiVec::zeros(layout.clone(), rank, kk);
+    let mut z = DistMultiVec::zeros(layout.clone(), rank, kk);
+    let mut q = DistMultiVec::zeros(layout.clone(), rank, kk);
+
+    // R = B - A X
+    a.apply_multi(comm, x, &mut q);
+    r.vals.clone_from(&b.vals);
+    for (rv, qv) in r.vals.iter_mut().zip(&q.vals) {
+        *rv -= qv;
+    }
+    let r0 = r.norm2_multi(comm);
+    let mut residuals: Vec<Vec<f64>> = r0.iter().map(|&v| vec![v]).collect();
+    // a column with a zero rhs is converged before the first iteration,
+    // exactly like the scalar early return
+    let mut active: Vec<bool> = r0.iter().map(|&v| v != 0.0).collect();
+    let mut iterations = vec![0usize; kk];
+    let mut converged: Vec<bool> = r0.iter().map(|&v| v == 0.0).collect();
+
+    let apply_pc = |pc: &mut Option<&mut MgPreconditioner>,
+                    comm: &Comm,
+                    r: &DistMultiVec,
+                    z: &mut DistMultiVec| match pc {
+        Some(m) => m.apply_multi(comm, r, z),
+        None => z.vals.clone_from(&r.vals),
+    };
+
+    if active.iter().any(|&f| f) {
+        apply_pc(&mut pc, comm, &r, &mut z);
+        let mut p = z.clone();
+        let mut rz = r.dot_multi(comm, &z);
+        for it in 1..=max_iters {
+            a.apply_multi(comm, &p, &mut q);
+            let pq = p.dot_multi(comm, &q);
+            let alpha: Vec<f64> =
+                rz.iter().zip(&pq).map(|(&rzj, &pqj)| rzj / pqj).collect();
+            x.axpy_cols(&alpha, &p, &active);
+            let neg_alpha: Vec<f64> = alpha.iter().map(|&v| -v).collect();
+            r.axpy_cols(&neg_alpha, &q, &active);
+            let rn = r.norm2_multi(comm);
+            for j in 0..kk {
+                if active[j] {
+                    residuals[j].push(rn[j]);
+                    iterations[j] = it;
+                    if rn[j] <= rtol * r0[j] {
+                        active[j] = false;
+                        converged[j] = true;
+                    }
+                }
+            }
+            if !active.iter().any(|&f| f) {
+                break;
+            }
+            apply_pc(&mut pc, comm, &r, &mut z);
+            let rz_new = r.dot_multi(comm, &z);
+            let beta: Vec<f64> =
+                rz_new.iter().zip(&rz).map(|(&n, &o)| n / o).collect();
+            rz = rz_new;
+            p.aypx_cols(&beta, &z, &active);
+        }
+    }
+    (0..kk)
+        .map(|j| SolveResult {
+            iterations: iterations[j],
+            converged: converged[j],
+            residuals: std::mem::take(&mut residuals[j]),
+        })
+        .collect()
 }
 
 /// Richardson iteration `x += M⁻¹ (b − A x)` (stationary MG solve).

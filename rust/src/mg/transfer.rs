@@ -14,7 +14,7 @@
 
 use std::cell::{Cell, RefCell};
 
-use crate::dist::{Comm, DistCsr, DistVec, VecGatherPlan};
+use crate::dist::{Comm, DistCsr, DistMultiVec, DistVec, VecGatherPlan};
 use crate::util::bytebuf::{ByteReader, ByteWriter};
 
 /// Cached communication plans for one interpolation operator.
@@ -29,6 +29,8 @@ pub struct Transfer {
     splits: Vec<u32>,
     /// Persistent prolongation halo buffer (warm after the first cycle).
     buf: RefCell<Vec<f64>>,
+    /// K-wide twin of `buf` for blocked prolongation.
+    buf_multi: RefCell<Vec<f64>>,
     reuses: Cell<u64>,
 }
 
@@ -39,7 +41,14 @@ impl Transfer {
         let garray_owner =
             p.garray.iter().map(|&g| p.col_layout.owner(g as usize)).collect();
         let splits = (0..p.local_nrows()).map(|i| p.offd_split(i) as u32).collect();
-        Transfer { halo, garray_owner, splits, buf: RefCell::new(Vec::new()), reuses: Cell::new(0) }
+        Transfer {
+            halo,
+            garray_owner,
+            splits,
+            buf: RefCell::new(Vec::new()),
+            buf_multi: RefCell::new(Vec::new()),
+            reuses: Cell::new(0),
+        }
     }
 
     /// Prolongation halo gathers served from the warm persistent buffer.
@@ -71,6 +80,57 @@ impl Transfer {
                 acc += ov[k] * halo[oc[k] as usize];
             }
             xf.vals[i] += acc;
+        }
+    }
+
+    /// `X_f += P X_c` for K stacked columns (collective): one K-wide halo
+    /// epoch, each column folded in the exact [`Transfer::prolong_add`]
+    /// order so column `j` is bitwise the scalar prolongation of column
+    /// `j`.
+    pub fn prolong_add_multi(
+        &self,
+        comm: &Comm,
+        p: &DistCsr,
+        xc: &DistMultiVec,
+        xf: &mut DistMultiVec,
+    ) {
+        let kk = xc.k;
+        debug_assert_eq!(kk, xf.k);
+        let mut halo = self.buf_multi.borrow_mut();
+        if halo.capacity() >= self.halo.n_needed() * kk && self.halo.n_needed() > 0 {
+            self.reuses.set(self.reuses.get() + 1);
+        }
+        self.halo.gather_multi_into(comm, &xc.vals, kk, &mut halo);
+        debug_assert_eq!(self.splits.len(), p.local_nrows());
+        let mut acc = vec![0.0f64; kk];
+        for i in 0..p.local_nrows() {
+            let (dc, dv) = p.diag.row(i);
+            let (oc, ov) = p.offd.row(i);
+            let split = self.splits[i] as usize;
+            acc.fill(0.0);
+            for t in 0..split {
+                let base = oc[t] as usize * kk;
+                let v = ov[t];
+                for (j, aj) in acc.iter_mut().enumerate() {
+                    *aj += v * halo[base + j];
+                }
+            }
+            for (&c, &v) in dc.iter().zip(dv) {
+                let base = c as usize * kk;
+                for (j, aj) in acc.iter_mut().enumerate() {
+                    *aj += v * xc.vals[base + j];
+                }
+            }
+            for t in split..oc.len() {
+                let base = oc[t] as usize * kk;
+                let v = ov[t];
+                for (j, aj) in acc.iter_mut().enumerate() {
+                    *aj += v * halo[base + j];
+                }
+            }
+            for (j, &aj) in acc.iter().enumerate() {
+                xf.vals[i * kk + j] += aj;
+            }
         }
     }
 
@@ -125,6 +185,92 @@ impl Transfer {
                 let gid = r.u64();
                 let val = r.f64();
                 rc.vals[(gid - cbeg) as usize] += val;
+            }
+        }
+    }
+
+    /// `R_c = Pᵀ R_f` for K stacked columns (collective): one exchange
+    /// round shipping `(gid, K×f64)` tuples.  Per-column zero skips match
+    /// the scalar [`Transfer::restrict`] exactly (contributions are added
+    /// only where the scalar path would add them), so column `j` is
+    /// bitwise the scalar restriction of column `j`.
+    pub fn restrict_multi(
+        &self,
+        comm: &Comm,
+        p: &DistCsr,
+        rf: &DistMultiVec,
+        rc: &mut DistMultiVec,
+    ) {
+        let kk = rf.k;
+        debug_assert_eq!(kk, rc.k);
+        rc.fill(0.0);
+        // local scatter
+        for i in 0..p.local_nrows() {
+            let ri = &rf.vals[i * kk..(i + 1) * kk];
+            if ri.iter().all(|&v| v == 0.0) {
+                continue;
+            }
+            let (dc, dv) = p.diag.row(i);
+            for (&c, &v) in dc.iter().zip(dv) {
+                let base = c as usize * kk;
+                for (j, &rij) in ri.iter().enumerate() {
+                    if rij != 0.0 {
+                        rc.vals[base + j] += v * rij;
+                    }
+                }
+            }
+        }
+        // off-rank contributions accumulated per garray slot
+        let mut acc = vec![0.0f64; p.garray.len() * kk];
+        for i in 0..p.local_nrows() {
+            let ri = &rf.vals[i * kk..(i + 1) * kk];
+            if ri.iter().all(|&v| v == 0.0) {
+                continue;
+            }
+            let (oc, ov) = p.offd.row(i);
+            for (&c, &v) in oc.iter().zip(ov) {
+                let base = c as usize * kk;
+                for (j, &rij) in ri.iter().enumerate() {
+                    if rij != 0.0 {
+                        acc[base + j] += v * rij;
+                    }
+                }
+            }
+        }
+        // ship (gid, K values) tuples to owners; slots all-zero across
+        // every column are dropped like the scalar path drops zero slots
+        let np = comm.size();
+        let mut writers: Vec<Option<ByteWriter>> = (0..np).map(|_| None).collect();
+        for t in 0..p.garray.len() {
+            let row = &acc[t * kk..(t + 1) * kk];
+            if row.iter().all(|&v| v == 0.0) {
+                continue;
+            }
+            let owner = self.garray_owner[t];
+            let w = writers[owner].get_or_insert_with(ByteWriter::new);
+            w.u64(p.garray[t]);
+            w.f64_slice(row);
+        }
+        let sends: Vec<(usize, Vec<u8>)> = writers
+            .into_iter()
+            .enumerate()
+            .filter_map(|(d, w)| w.map(|w| (d, w.into_bytes())))
+            .collect();
+        let recvd = comm.exchange(sends);
+        let cbeg = p.col_layout.start(p.rank) as u64;
+        for (_src, payload) in &recvd {
+            let mut r = ByteReader::new(payload);
+            while !r.done() {
+                let gid = r.u64();
+                let base = (gid - cbeg) as usize * kk;
+                for j in 0..kk {
+                    let val = r.f64();
+                    // a column the scalar path would have skipped (its
+                    // slot accumulated to zero) must stay untouched
+                    if val != 0.0 {
+                        rc.vals[base + j] += val;
+                    }
+                }
             }
         }
     }

@@ -34,7 +34,7 @@ use crate::spgemm::RowScratch;
 use crate::util::timer::BusyTimer;
 
 /// Which triple-product algorithm to run.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Algo {
     TwoStep,
     AllAtOnce,

@@ -210,6 +210,11 @@ impl<'rt> SpmvBatcher<'rt> {
         self.b
     }
 
+    /// Chunk capacity: block multiplies folded into one kernel launch.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
     pub fn bytes(&self) -> u64 {
         ((self.a.capacity() + self.x.capacity()) * 4
             + (self.a64.capacity() + self.x64.capacity()) * 8

@@ -1,0 +1,445 @@
+//! Concurrent solve sessions: amortize every α term across K clients.
+//!
+//! A solver service sees many requests against operators that share one
+//! sparsity pattern (time steps, parameter sweeps, concurrent users of
+//! the same mesh).  Two pieces turn that sharing into saved latency:
+//!
+//! - [`SessionCache`] keys retained hierarchies by
+//!   `(pattern hash, eq_limit, algorithm)`.  A client whose operator
+//!   matches a cached pattern skips the whole symbolic phase — the cache
+//!   hands back the [`HierarchyRefresher`] and replays only the numeric
+//!   halves for the client's values ([`HierarchyRefresher::refresh`]),
+//!   so concurrent clients share one set of plans, gathered patterns and
+//!   preallocated coarse operators.
+//! - [`RequestQueue`] accumulates up to K pending right-hand sides (with
+//!   a flush deadline so a lone request is never starved) and dispatches
+//!   them as ONE blocked solve ([`crate::mg::pcg_multi`]): one K-wide
+//!   matvec, one K-wide V-cycle and one K-element reduction per dot
+//!   product, instead of K of each.  Column `j` of the batch is bitwise
+//!   the solve the client would have gotten alone.
+//!
+//! The pattern hash is collective: each rank hashes its local structure
+//! (diag/offd `rowptr`+`cols`, `garray`, row/col ranges) with FNV-1a,
+//! then the per-rank digests are allgathered and folded in rank order,
+//! so every rank derives the same key and cache decisions never diverge
+//! across the communicator.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::dist::{Comm, DistCsr, DistMultiVec, DistOperator, DistVec};
+use crate::mem::{Cat, Charge, MemTracker};
+use crate::mg::{
+    build_hierarchy, pcg_multi, Coarsening, HierarchyConfig, MgOpts, MgPreconditioner, SolveResult,
+};
+use crate::ptap::Algo;
+use crate::reuse::HierarchyRefresher;
+
+/// FNV-1a 64-bit, streamed a word at a time.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    fn u32s(&mut self, vs: &[u32]) {
+        for &v in vs {
+            self.u64(v as u64);
+        }
+    }
+}
+
+/// Collective structural digest of a distributed operator: hashes the
+/// sparsity pattern and partitioning, NOT the values, so refreshing an
+/// operator's coefficients keeps its key.  Every rank returns the same
+/// digest (one 8-byte allgather).
+pub fn pattern_hash(comm: &Comm, a: &DistCsr) -> u64 {
+    let mut h = Fnv::new();
+    h.u64(a.row_layout.global_size() as u64);
+    h.u64(a.col_layout.global_size() as u64);
+    h.u64(a.row_begin() as u64);
+    h.u64(a.col_begin() as u64);
+    h.u32s(&a.diag.rowptr);
+    h.u32s(&a.diag.cols);
+    h.u32s(&a.offd.rowptr);
+    h.u32s(&a.offd.cols);
+    for &g in &a.garray {
+        h.u64(g);
+    }
+    let mut g = Fnv::new();
+    for v in comm.all_u64(h.0) {
+        g.u64(v);
+    }
+    g.0
+}
+
+/// What a cached hierarchy is keyed by: the operator's structural digest
+/// plus the two build knobs that change the retained symbolic state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SessionKey {
+    pub pattern_hash: u64,
+    pub eq_limit: Option<usize>,
+    pub algo: Algo,
+}
+
+/// Hierarchy cache for concurrent solve sessions.  `checkout` is
+/// collective; every rank takes the same hit/miss/evict path because the
+/// key is derived from the collective [`pattern_hash`].
+#[derive(Default)]
+pub struct SessionCache {
+    entries: HashMap<SessionKey, HierarchyRefresher>,
+    /// Checkouts served from a retained hierarchy (symbolic phase skipped).
+    pub hits: u64,
+    /// Checkouts that had to build from scratch.
+    pub misses: u64,
+    /// Entries dropped because a client re-presented the same
+    /// `(eq_limit, algo)` configuration with a different pattern — the
+    /// stale pattern's plans can never be refreshed into the new one.
+    pub evictions: u64,
+}
+
+impl SessionCache {
+    pub fn new() -> SessionCache {
+        SessionCache::default()
+    }
+
+    /// Retained hierarchies currently cached.
+    pub fn entry_count(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Hand back a ready-to-apply refresher for `a0` (collective).  On a
+    /// hit the cached hierarchy absorbs `a0`'s values through the
+    /// numeric-only refresh walk; on a miss a `retain`-mode hierarchy is
+    /// built (evicting any entry with the same configuration but a stale
+    /// pattern).  Either way the returned preconditioner is bit-identical
+    /// to one freshly built on `a0`.  Returns `(refresher, was_hit)`.
+    pub fn checkout(
+        &mut self,
+        comm: &Comm,
+        a0: &DistCsr,
+        coarsening: &Coarsening,
+        cfg: HierarchyConfig,
+        opts: MgOpts,
+        tracker: &MemTracker,
+    ) -> (&mut HierarchyRefresher, bool) {
+        let key = SessionKey {
+            pattern_hash: pattern_hash(comm, a0),
+            eq_limit: cfg.eq_limit,
+            algo: cfg.algo,
+        };
+        let hit = self.entries.contains_key(&key);
+        if hit {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+            let stale: Vec<SessionKey> = self
+                .entries
+                .keys()
+                .filter(|k| k.algo == key.algo && k.eq_limit == key.eq_limit)
+                .copied()
+                .collect();
+            for s in stale {
+                self.entries.remove(&s);
+                self.evictions += 1;
+            }
+            let mut cfg = cfg;
+            cfg.retain = true;
+            let h = build_hierarchy(comm, a0.clone(), coarsening, cfg, tracker);
+            self.entries.insert(key, HierarchyRefresher::new(comm, h, opts, tracker));
+        }
+        let r = self.entries.get_mut(&key).unwrap();
+        if hit {
+            r.refresh(comm, a0);
+        }
+        (r, hit)
+    }
+}
+
+/// One completed request out of a flushed batch.
+#[derive(Debug, Clone)]
+pub struct QueuedSolve {
+    /// The ticket `submit` returned for this right-hand side.
+    pub ticket: u64,
+    pub x: DistVec,
+    pub result: SolveResult,
+}
+
+/// Accumulates pending right-hand sides and dispatches them as one
+/// blocked solve.  A flush fires when the batch is full (`capacity`
+/// requests) or when the oldest pending request has waited past the
+/// deadline — whichever comes first — so latency stays bounded while
+/// every α term in the solve is amortized across the batch.
+pub struct RequestQueue {
+    capacity: usize,
+    deadline: Duration,
+    pending: Vec<(u64, DistVec)>,
+    next_ticket: u64,
+    oldest: Option<Instant>,
+    /// Batches dispatched.
+    pub flushes: u64,
+    /// Batches dispatched below capacity (deadline or forced flush).
+    pub partial_flushes: u64,
+}
+
+impl RequestQueue {
+    pub fn new(capacity: usize, deadline: Duration) -> RequestQueue {
+        assert!(capacity >= 1, "batch capacity must be at least 1");
+        RequestQueue {
+            capacity,
+            deadline,
+            pending: Vec::new(),
+            next_ticket: 0,
+            oldest: None,
+            flushes: 0,
+            partial_flushes: 0,
+        }
+    }
+
+    /// Enqueue one right-hand side; returns the ticket that identifies
+    /// it in the flushed batch.
+    pub fn submit(&mut self, b: DistVec) -> u64 {
+        let ticket = self.next_ticket;
+        self.next_ticket += 1;
+        if self.pending.is_empty() {
+            self.oldest = Some(Instant::now());
+        }
+        self.pending.push((ticket, b));
+        ticket
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// True when the batch is full or the oldest request has waited past
+    /// the flush deadline.
+    pub fn should_flush(&self) -> bool {
+        !self.pending.is_empty()
+            && (self.pending.len() >= self.capacity
+                || self.oldest.is_some_and(|t| t.elapsed() >= self.deadline))
+    }
+
+    /// Dispatch every pending request as ONE blocked PCG solve
+    /// (collective).  The K stacked right-hand sides pay one K-wide
+    /// matvec, one K-wide preconditioner cycle and one K-element
+    /// reduction per dot product; each returned column is bitwise the
+    /// solve its client would have gotten alone.  The transient K-wide
+    /// block is charged to [`Cat::MultiVec`] for the duration of the
+    /// solve.
+    pub fn flush(
+        &mut self,
+        comm: &Comm,
+        a: &dyn DistOperator,
+        pc: Option<&mut MgPreconditioner>,
+        rtol: f64,
+        max_iters: usize,
+        tracker: &MemTracker,
+    ) -> Vec<QueuedSolve> {
+        if self.pending.is_empty() {
+            return Vec::new();
+        }
+        self.flushes += 1;
+        if self.pending.len() < self.capacity {
+            self.partial_flushes += 1;
+        }
+        let pending = std::mem::take(&mut self.pending);
+        self.oldest = None;
+
+        let cols: Vec<&DistVec> = pending.iter().map(|(_, b)| b).collect();
+        let b = DistMultiVec::from_columns(&cols);
+        let mut x = DistMultiVec::zeros(b.layout.clone(), b.rank, b.k);
+        let _scratch = Charge::new(tracker, Cat::MultiVec, b.bytes() + x.bytes());
+        let results = pcg_multi(comm, a, &b, &mut x, pc, rtol, max_iters);
+        pending
+            .into_iter()
+            .zip(results)
+            .enumerate()
+            .map(|(j, ((ticket, _), result))| QueuedSolve { ticket, x: x.column(j), result })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{CsrOperator, DistSpmv, World};
+    use crate::gen::{grid_laplacian, Grid3};
+    use crate::mg::{geometric_chain, pcg};
+
+    fn scaled_values(a: &DistCsr, factor: f64) -> DistCsr {
+        let mut m = a.clone();
+        for v in m.diag.vals.iter_mut().chain(m.offd.vals.iter_mut()) {
+            *v *= factor;
+        }
+        m
+    }
+
+    #[test]
+    fn identical_pattern_shares_hierarchy() {
+        let w = World::new(2);
+        w.run(|c| {
+            let grids = geometric_chain(Grid3::cube(3), 3);
+            let coarsening = Coarsening::Geometric { grids: grids.clone() };
+            let a = grid_laplacian(grids[0], c.rank(), c.size());
+            let tracker = MemTracker::new();
+            let cfg = HierarchyConfig::default();
+            let mut cache = SessionCache::new();
+
+            let (_, hit1) =
+                cache.checkout(&c, &a, &coarsening, cfg, MgOpts::default(), &tracker);
+            assert!(!hit1, "first client must build");
+            // second client: same pattern, different coefficient values
+            let a2 = scaled_values(&a, 2.0);
+            let (_, hit2) =
+                cache.checkout(&c, &a2, &coarsening, cfg, MgOpts::default(), &tracker);
+            assert!(hit2, "same pattern must reuse the retained hierarchy");
+            assert_eq!(cache.entry_count(), 1);
+            assert_eq!((cache.hits, cache.misses, cache.evictions), (1, 1, 0));
+        });
+    }
+
+    #[test]
+    fn pattern_change_evicts_stale_entry() {
+        let w = World::new(2);
+        w.run(|c| {
+            let tracker = MemTracker::new();
+            let cfg = HierarchyConfig::default();
+            let mut cache = SessionCache::new();
+
+            let grids3 = geometric_chain(Grid3::cube(3), 2);
+            let c3 = Coarsening::Geometric { grids: grids3.clone() };
+            let a3 = grid_laplacian(grids3[0], c.rank(), c.size());
+            cache.checkout(&c, &a3, &c3, cfg, MgOpts::default(), &tracker);
+
+            // same (algo, eq_limit) but a different mesh: the old plans
+            // can never be refreshed into this pattern, so it is evicted
+            let grids4 = geometric_chain(Grid3::cube(4), 2);
+            let c4 = Coarsening::Geometric { grids: grids4.clone() };
+            let a4 = grid_laplacian(grids4[0], c.rank(), c.size());
+            let (_, hit) = cache.checkout(&c, &a4, &c4, cfg, MgOpts::default(), &tracker);
+            assert!(!hit);
+            assert_eq!(cache.entry_count(), 1, "stale pattern must be evicted");
+            assert_eq!((cache.hits, cache.misses, cache.evictions), (0, 2, 1));
+        });
+    }
+
+    #[test]
+    fn refresh_then_solve_matches_fresh_build() {
+        let w = World::new(2);
+        w.run(|c| {
+            let grids = geometric_chain(Grid3::cube(3), 3);
+            let coarsening = Coarsening::Geometric { grids: grids.clone() };
+            let a = grid_laplacian(grids[0], c.rank(), c.size());
+            let a2 = scaled_values(&a, 1.5);
+            let layout = a.row_layout.clone();
+            let tracker = MemTracker::new();
+            let cfg = HierarchyConfig::default();
+            let b = DistVec::from_fn(layout.clone(), c.rank(), |g| ((g * 7 % 5) as f64) - 2.0);
+
+            // cached path: build on a, then hit with a2's values
+            let mut cache = SessionCache::new();
+            cache.checkout(&c, &a, &coarsening, cfg, MgOpts::default(), &tracker);
+            let (r, hit) =
+                cache.checkout(&c, &a2, &coarsening, cfg, MgOpts::default(), &tracker);
+            assert!(hit);
+            let spmv = DistSpmv::new(&c, &a2);
+            let op = CsrOperator::new(&a2, &spmv);
+            let mut x_cached = DistVec::zeros(layout.clone(), c.rank());
+            let res_cached = pcg(&c, &op, &b, &mut x_cached, Some(r.pc()), 1e-8, 60);
+
+            // fresh path: build directly on a2
+            let mut cfg_fresh = cfg;
+            cfg_fresh.retain = true;
+            let h = build_hierarchy(&c, a2.clone(), &coarsening, cfg_fresh, &tracker);
+            let mut fresh = HierarchyRefresher::new(&c, h, MgOpts::default(), &tracker);
+            let mut x_fresh = DistVec::zeros(layout, c.rank());
+            let res_fresh = pcg(&c, &op, &b, &mut x_fresh, Some(fresh.pc()), 1e-8, 60);
+
+            assert!(res_cached.converged && res_fresh.converged);
+            assert_eq!(
+                res_cached.residuals, res_fresh.residuals,
+                "refreshed hierarchy must solve bit-identically to a fresh build"
+            );
+            assert_eq!(x_cached.vals, x_fresh.vals);
+        });
+    }
+
+    #[test]
+    fn queue_flushes_at_capacity_and_matches_scalar_solves() {
+        let w = World::new(2);
+        w.run(|c| {
+            let a = grid_laplacian(Grid3::cube(4), c.rank(), c.size());
+            let spmv = DistSpmv::new(&c, &a);
+            let op = CsrOperator::new(&a, &spmv);
+            let layout = a.row_layout.clone();
+            let tracker = MemTracker::new();
+            let rhs = |s: usize| {
+                DistVec::from_fn(layout.clone(), c.rank(), |g| {
+                    ((g as f64) * 0.1 + s as f64).cos()
+                })
+            };
+
+            let mut q = RequestQueue::new(3, Duration::from_secs(3600));
+            for s in 0..3 {
+                assert!(!q.should_flush());
+                let t = q.submit(rhs(s));
+                assert_eq!(t, s as u64);
+            }
+            assert!(q.should_flush(), "full batch must flush");
+            let done = q.flush(&c, &op, None, 1e-10, 400, &tracker);
+            assert_eq!(done.len(), 3);
+            assert!(q.is_empty());
+            assert_eq!((q.flushes, q.partial_flushes), (1, 0));
+            assert_eq!(tracker.current(Cat::MultiVec), 0, "block scratch released");
+            assert!(tracker.peak(Cat::MultiVec) > 0, "block scratch was charged");
+
+            // each batched column is bitwise the solo solve
+            for (s, d) in done.iter().enumerate() {
+                assert_eq!(d.ticket, s as u64);
+                let mut x = DistVec::zeros(layout.clone(), c.rank());
+                let res = pcg(&c, &op, &rhs(s), &mut x, None, 1e-10, 400);
+                assert_eq!(d.x.vals, x.vals, "column {s} diverged from solo solve");
+                assert_eq!(d.result.residuals, res.residuals);
+                assert_eq!(d.result.iterations, res.iterations);
+            }
+        });
+    }
+
+    #[test]
+    fn queue_deadline_flushes_single_request() {
+        let w = World::new(1);
+        w.run(|c| {
+            let a = grid_laplacian(Grid3::cube(3), c.rank(), c.size());
+            let spmv = DistSpmv::new(&c, &a);
+            let op = CsrOperator::new(&a, &spmv);
+            let layout = a.row_layout.clone();
+            let tracker = MemTracker::new();
+            let b = DistVec::from_fn(layout.clone(), c.rank(), |g| (g as f64 * 0.37).sin());
+
+            let mut q = RequestQueue::new(8, Duration::ZERO);
+            q.submit(b.clone());
+            assert!(q.should_flush(), "expired deadline must flush a lone request");
+            let done = q.flush(&c, &op, None, 1e-10, 400, &tracker);
+            assert_eq!(done.len(), 1);
+            assert_eq!((q.flushes, q.partial_flushes), (1, 1));
+
+            let mut x = DistVec::zeros(layout, c.rank());
+            let res = pcg(&c, &op, &b, &mut x, None, 1e-10, 400);
+            assert_eq!(done[0].x.vals, x.vals, "K=1 batch must equal the scalar path");
+            assert_eq!(done[0].result.residuals, res.residuals);
+        });
+    }
+}

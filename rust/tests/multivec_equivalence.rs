@@ -1,0 +1,185 @@
+//! Blocked K-wide MG-PCG ≡ K sequential scalar solves (DESIGN.md §11).
+//!
+//! Every K-wide kernel accumulates each column independently in the same
+//! ascending-global-column fold order the scalar path uses, and the
+//! coarsest direct solve routes both widths through the shared batched
+//! back-substitution — so column `j` of a blocked solve must be *bitwise*
+//! identical to the `j`-th single-RHS solve: same solution bits, same
+//! residual history, same iteration count.  These tests pin that
+//! equivalence for all three triple-product algorithms, with and without
+//! coarse-level telescoping, across rank counts, on a partition with an
+//! empty rank, and for the degenerate K = 1 batch.
+
+use galerkin_ptap::dist::{
+    CsrOperator, DistCsr, DistCsrBuilder, DistMultiVec, DistSpmv, DistVec, Layout, World,
+};
+use galerkin_ptap::gen::{grid_laplacian, Grid3};
+use galerkin_ptap::mem::MemTracker;
+use galerkin_ptap::mg::{
+    build_hierarchy, geometric_chain, pcg, pcg_multi, AggregateOpts, Coarsening, HierarchyConfig,
+    MgOpts, MgPreconditioner, SolveResult,
+};
+use galerkin_ptap::ptap::{Algo, ALL_ALGOS};
+
+/// Distinct deterministic right-hand side per request slot `s`.
+fn rhs(layout: &Layout, rank: usize, s: usize) -> DistVec {
+    DistVec::from_fn(layout.clone(), rank, move |g| {
+        (((g * 13 + s * 29 + 7) % 41) as f64 - 20.0) / 20.0
+    })
+}
+
+struct Outcome {
+    xs: Vec<Vec<u64>>,
+    results: Vec<SolveResult>,
+}
+
+/// Solve the K slot right-hand sides one at a time (scalar path) and as
+/// one blocked dispatch, against the same operator and preconditioner.
+fn solve_both(
+    comm: &galerkin_ptap::dist::Comm,
+    op: &CsrOperator<'_>,
+    pc: &mut MgPreconditioner,
+    layout: &Layout,
+    kk: usize,
+) -> (Outcome, Outcome) {
+    let mut seq = Outcome { xs: Vec::new(), results: Vec::new() };
+    for s in 0..kk {
+        let b = rhs(layout, comm.rank(), s);
+        let mut x = DistVec::zeros(layout.clone(), comm.rank());
+        let res = pcg(comm, op, &b, &mut x, Some(&mut *pc), 1e-10, 120);
+        seq.xs.push(x.vals.iter().map(|v| v.to_bits()).collect());
+        seq.results.push(res);
+    }
+    let cols: Vec<DistVec> = (0..kk).map(|s| rhs(layout, comm.rank(), s)).collect();
+    let refs: Vec<&DistVec> = cols.iter().collect();
+    let b = DistMultiVec::from_columns(&refs);
+    let mut x = DistMultiVec::zeros(layout.clone(), comm.rank(), kk);
+    let results = pcg_multi(comm, op, &b, &mut x, Some(pc), 1e-10, 120);
+    let xs = (0..kk)
+        .map(|j| x.column(j).vals.iter().map(|v| v.to_bits()).collect())
+        .collect();
+    (seq, Outcome { xs, results })
+}
+
+fn assert_column_bitwise(tag: &str, seq: &Outcome, blocked: &Outcome) {
+    assert_eq!(seq.xs.len(), blocked.xs.len(), "{tag}: batch width diverged");
+    for (s, (u, v)) in seq.xs.iter().zip(blocked.xs.iter()).enumerate() {
+        assert_eq!(u, v, "{tag}: column {s} solution bits diverged from the scalar solve");
+    }
+    for (s, (u, v)) in seq.results.iter().zip(blocked.results.iter()).enumerate() {
+        assert_eq!(
+            u.residuals.len(),
+            v.residuals.len(),
+            "{tag}: column {s} residual history length diverged"
+        );
+        for (k, (a, b)) in u.residuals.iter().zip(v.residuals.iter()).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{tag}: column {s} residual {k} differs (scalar {a:e} vs blocked {b:e})"
+            );
+        }
+        assert_eq!(u.iterations, v.iterations, "{tag}: column {s} iteration counts diverged");
+        assert_eq!(u.converged, v.converged, "{tag}: column {s} convergence flags diverged");
+        assert!(u.converged, "{tag}: column {s} scalar baseline must converge");
+    }
+}
+
+/// Geometric-chain scenario: build, solve both ways, compare bitwise.
+fn run_geometric(algo: Algo, eq_limit: Option<usize>, np: usize, levels: usize, kk: usize) {
+    let tag = format!("{}/eq={eq_limit:?}/np={np}/k={kk}", algo.name());
+    let grids = geometric_chain(Grid3::cube(3), levels);
+    let world = World::new(np);
+    world.run(|comm| {
+        let tracker = MemTracker::new();
+        let a0 = grid_laplacian(grids[0], comm.rank(), comm.size());
+        let cfg = HierarchyConfig { algo, eq_limit, ..HierarchyConfig::default() };
+        let h = build_hierarchy(
+            &comm,
+            a0.clone(),
+            &Coarsening::Geometric { grids: grids.clone() },
+            cfg,
+            &tracker,
+        );
+        let spmv = DistSpmv::new(&comm, &a0);
+        let op = CsrOperator::new(&a0, &spmv);
+        let mut pc = MgPreconditioner::new(&comm, h, MgOpts::default());
+        let layout = a0.row_layout.clone();
+        let (seq, blocked) = solve_both(&comm, &op, &mut pc, &layout, kk);
+        assert_column_bitwise(&tag, &seq, &blocked);
+    });
+}
+
+#[test]
+fn blocked_solve_matches_sequential_for_all_algorithms_and_telescoping() {
+    // 3³→9³ chain on 4 ranks; eq_limit 16 telescopes the 27-row coarsest
+    // level onto fewer ranks, so both coarse-solve paths are covered
+    for algo in ALL_ALGOS {
+        for eq_limit in [None, Some(16)] {
+            run_geometric(algo, eq_limit, 4, 3, 3);
+        }
+    }
+}
+
+#[test]
+fn blocked_solve_matches_across_rank_counts() {
+    for np in [1, 2, 4] {
+        run_geometric(Algo::AllAtOnce, None, np, 2, 3);
+    }
+}
+
+#[test]
+fn k1_blocked_solve_degenerates_to_scalar() {
+    run_geometric(Algo::AllAtOnce, None, 2, 3, 1);
+}
+
+/// 1D Laplacian stiffened to strict diagonal dominance, assembled on an
+/// arbitrary `Layout::from_counts` partition (SPD for any layout).
+fn line_laplacian(rank: usize, rl: &Layout) -> DistCsr {
+    let n = rl.global_size();
+    let mut b = DistCsrBuilder::new(rank, rl.clone(), rl.clone());
+    for gi in rl.range(rank) {
+        let mut entries: Vec<(u64, f64)> = Vec::new();
+        if gi > 0 {
+            entries.push((gi as u64 - 1, -1.0));
+        }
+        entries.push((gi as u64, 2.25));
+        if gi + 1 < n {
+            entries.push((gi as u64 + 1, -1.0));
+        }
+        b.push_row(&entries);
+    }
+    b.finish()
+}
+
+#[test]
+fn blocked_solve_matches_on_empty_rank_layout() {
+    // rank 0 owns no rows at all: the K-wide halo exchange, smoothers and
+    // telescope gather must all tolerate zero-length local blocks
+    let rl = Layout::from_counts(&[0, 40, 24]);
+    let world = World::new(3);
+    world.run(|comm| {
+        let tracker = MemTracker::new();
+        let a0 = line_laplacian(comm.rank(), &rl);
+        if comm.rank() == 0 {
+            assert_eq!(a0.diag.nrows(), 0, "rank 0 must be the empty rank");
+        }
+        let h = build_hierarchy(
+            &comm,
+            a0.clone(),
+            &Coarsening::Aggregation {
+                opts: AggregateOpts::default(),
+                min_rows: 8,
+                max_levels: 4,
+            },
+            HierarchyConfig { eq_limit: Some(16), ..HierarchyConfig::default() },
+            &tracker,
+        );
+        assert!(h.n_levels() >= 2, "aggregation must coarsen the line");
+        let spmv = DistSpmv::new(&comm, &a0);
+        let op = CsrOperator::new(&a0, &spmv);
+        let mut pc = MgPreconditioner::new(&comm, h, MgOpts::default());
+        let (seq, blocked) = solve_both(&comm, &op, &mut pc, &rl, 3);
+        assert_column_bitwise("empty-rank", &seq, &blocked);
+    });
+}
