@@ -636,6 +636,28 @@ pub struct ThroughputCell {
     /// launch shape at the `pjrt` seam.
     pub coarse_mults: u64,
     pub coarse_flushes: u64,
+    /// Queue-wait latency percentiles across the K requests (seconds,
+    /// rank 0): time from `submit` to batch dispatch.
+    pub queue_wait_p50: f64,
+    pub queue_wait_p95: f64,
+    pub queue_wait_p99: f64,
+    /// End-to-end solve latency percentiles (seconds, rank 0): time from
+    /// `submit` to batch completion — the ceiling metric next to the
+    /// `solves_per_sec` floor.
+    pub solve_p50: f64,
+    pub solve_p95: f64,
+    pub solve_p99: f64,
+}
+
+/// Nearest-rank percentile of an unsorted sample (p in [0, 100]).
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+    s[idx.min(s.len() - 1)]
 }
 
 /// Run the multi-RHS throughput bench: for each K in `ks`, queue K
@@ -688,10 +710,21 @@ fn throughput_cell(coarse: Grid3, levels: usize, np: usize, kk: usize) -> Throug
         }
         let iters = done.iter().map(|d| d.result.iterations).max().unwrap();
         let (cm, cf) = pc.coarse_batch_stats();
-        (timer.total(), delta, iters, comm.allreduce_sum_u64(cm), comm.allreduce_sum_u64(cf))
+        let qw: Vec<f64> = done.iter().map(|d| d.queue_wait).collect();
+        let e2e: Vec<f64> = done.iter().map(|d| d.e2e).collect();
+        (
+            timer.total(),
+            delta,
+            iters,
+            comm.allreduce_sum_u64(cm),
+            comm.allreduce_sum_u64(cf),
+            qw,
+            e2e,
+        )
     });
     let busy = per_rank.iter().map(|r| r.0).fold(0.0f64, f64::max);
-    let (_, delta, iters, coarse_mults, coarse_flushes) = per_rank.into_iter().next().unwrap();
+    let (_, delta, iters, coarse_mults, coarse_flushes, qw, e2e) =
+        per_rank.into_iter().next().unwrap();
     let modeled = busy + delta.modeled_secs();
     ThroughputCell {
         scenario: "mgpcg",
@@ -703,6 +736,12 @@ fn throughput_cell(coarse: Grid3, levels: usize, np: usize, kk: usize) -> Throug
         iters,
         coarse_mults,
         coarse_flushes,
+        queue_wait_p50: percentile(&qw, 50.0),
+        queue_wait_p95: percentile(&qw, 95.0),
+        queue_wait_p99: percentile(&qw, 99.0),
+        solve_p50: percentile(&e2e, 50.0),
+        solve_p95: percentile(&e2e, 95.0),
+        solve_p99: percentile(&e2e, 99.0),
     }
 }
 

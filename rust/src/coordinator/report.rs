@@ -293,7 +293,10 @@ pub fn write_bench_json(
             "    {{\"kind\": \"throughput\", \"scenario\": \"{}\", \"np\": {}, \"k\": {}, \
              \"solves_per_sec\": {:.6e}, \"msgs_per_solve\": {:.6e}, \
              \"bytes_per_solve\": {:.6e}, \"iters\": {}, \
-             \"coarse_mults\": {}, \"coarse_flushes\": {}}}{}\n",
+             \"coarse_mults\": {}, \"coarse_flushes\": {}, \
+             \"queue_wait_p50\": {:.6e}, \"queue_wait_p95\": {:.6e}, \
+             \"queue_wait_p99\": {:.6e}, \"solve_p50\": {:.6e}, \
+             \"solve_p95\": {:.6e}, \"solve_p99\": {:.6e}}}{}\n",
             c.scenario,
             c.np,
             c.k,
@@ -303,6 +306,12 @@ pub fn write_bench_json(
             c.iters,
             c.coarse_mults,
             c.coarse_flushes,
+            c.queue_wait_p50,
+            c.queue_wait_p95,
+            c.queue_wait_p99,
+            c.solve_p50,
+            c.solve_p95,
+            c.solve_p99,
             if i + 1 < throughput.len() { "," } else { "" }
         ));
     }
@@ -393,7 +402,7 @@ fn cell_key(cell: &BenchCell) -> String {
 /// Metrics the regression gate watches, with per-metric absolute floors
 /// (modeled times at smoke scale sit in the microsecond range where
 /// scheduler noise dominates; counters and bytes are deterministic).
-const DIFF_METRICS: [(&str, f64); 22] = [
+const DIFF_METRICS: [(&str, f64); 24] = [
     ("time_sym_modeled", 1e-3),
     ("time_num_modeled", 1e-3),
     ("time_cal_modeled", 1e-3),
@@ -426,6 +435,10 @@ const DIFF_METRICS: [(&str, f64); 22] = [
     // whole point — growth means the K-wide amortization eroded
     ("msgs_per_solve", 0.0),
     ("bytes_per_solve", 0.0),
+    // latency ceilings next to the solves_per_sec floor: tail wall-clock
+    // latency per request must not grow (floored — scheduler noise)
+    ("queue_wait_p99", 1e-3),
+    ("solve_p99", 1e-3),
 ];
 
 /// Higher-is-better metrics: a DROP is the regression.  The second field
@@ -641,6 +654,12 @@ mod tests {
             iters: 9,
             coarse_mults: 640,
             coarse_flushes: 40,
+            queue_wait_p50: 1.0e-5,
+            queue_wait_p95: 2.0e-5,
+            queue_wait_p99: 2.0e-5,
+            solve_p50: 2.0e-3,
+            solve_p95: 3.0e-3,
+            solve_p99: 3.0e-3,
         }]
     }
 
@@ -674,6 +693,8 @@ mod tests {
         assert!(s.contains("\"kind\": \"throughput\""), "{s}");
         assert!(s.contains("\"k\": 4"), "{s}");
         assert!(s.contains("\"msgs_per_solve\""), "{s}");
+        assert!(s.contains("\"queue_wait_p99\""), "{s}");
+        assert!(s.contains("\"solve_p99\""), "{s}");
         let _ = std::fs::remove_file(&path);
     }
 

@@ -183,6 +183,7 @@ impl DistOperator for CsrOperator<'_> {
     }
 
     fn apply(&self, comm: &Comm, x: &DistVec, y: &mut DistVec) {
+        let _sp = crate::obs::span(crate::obs::Subsys::Solve, "spmv", self.a.local_nrows() as u64);
         self.spmv.apply(comm, self.a, x, y);
     }
 
@@ -246,6 +247,7 @@ impl DistOperator for CsrOperator<'_> {
     }
 
     fn apply_multi(&self, comm: &Comm, x: &DistMultiVec, y: &mut DistMultiVec) {
+        let _sp = crate::obs::span(crate::obs::Subsys::Solve, "spmv.multi", x.k as u64);
         self.spmv.apply_multi(comm, self.a, x, y);
     }
 

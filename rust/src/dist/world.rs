@@ -11,7 +11,9 @@
 //!   (`allgather_bytes`, `all_u64`, `allreduce_sum_*`), which still move
 //!   exactly one frame per pair per call;
 //! - **data** frames carry an epoch's point-to-point payloads for one
-//!   `tag` ([`Comm::isend`] posts them immediately and returns);
+//!   `tag` ([`Comm::isend`] posts them immediately and returns), plus a
+//!   sender-side microsecond stamp (zero when tracing is off) that lets
+//!   the receiver measure true in-flight time per message;
 //! - **close** frames are the epoch sentinels: a rank's promise that it
 //!   will send no more data for that tag this epoch ([`Comm::drain`]
 //!   posts one to every rank, then blocks until it has one from every
@@ -57,6 +59,7 @@
 //!   this communicator (shared by its clones); [`Comm::stats_global`]
 //!   keeps the rank-wide total across all communicators.
 
+use crate::obs;
 use std::cell::{Cell, RefCell};
 use std::collections::{HashMap, VecDeque};
 use std::rc::Rc;
@@ -129,6 +132,18 @@ fn bucket_rep_bytes(b: usize) -> f64 {
     ((lo * hi) as f64).sqrt()
 }
 
+/// Number of logarithmic in-flight latency buckets in
+/// [`CommStats::flight_hist`].
+pub const LAT_BUCKETS: usize = 8;
+
+/// Upper edge (exclusive, microseconds) of each latency bucket; the last
+/// bucket is unbounded.
+pub const LAT_BUCKET_EDGES_US: [u64; LAT_BUCKETS - 1] = [1, 5, 10, 50, 100, 500, 1000];
+
+fn lat_bucket(us: u64) -> usize {
+    LAT_BUCKET_EDGES_US.iter().position(|&e| us < e).unwrap_or(LAT_BUCKETS - 1)
+}
+
 /// Snapshot of one rank's cumulative send-side traffic.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct CommStats {
@@ -139,6 +154,21 @@ pub struct CommStats {
     /// Message counts by payload-size bucket ([`SIZE_BUCKET_EDGES`]) —
     /// the measured chunk-size distribution the calibrated α model reads.
     pub hist: [u64; SIZE_BUCKETS],
+    /// Messages whose in-flight time was observed (the sender stamped a
+    /// send time into the frame — i.e. the sender was tracing).  Recorded
+    /// receiver-side, rank-wide only: scoped [`Comm::stats`] snapshots
+    /// report zero here; read them from [`Comm::stats_global`].
+    pub flight_msgs: u64,
+    /// Total observed in-flight microseconds (send stamp → delivery).
+    pub flight_us: u64,
+    /// Observed in-flight times by latency bucket
+    /// ([`LAT_BUCKET_EDGES_US`]).
+    pub flight_hist: [u64; LAT_BUCKETS],
+    /// Epoch close barriers this rank has completed ([`Comm::drain`]).
+    pub close_waits: u64,
+    /// Microseconds spent blocked in those close barriers — idle wait
+    /// that would otherwise masquerade as communication time.
+    pub close_wait_us: u64,
 }
 
 impl CommStats {
@@ -168,13 +198,43 @@ impl CommStats {
         self.alpha_secs_calibrated() + self.bytes as f64 * COMM_BETA_SECS_PER_BYTE
     }
 
+    /// Mean observed in-flight seconds per stamped message (0 when no
+    /// message carried a stamp, i.e. the run was untraced).
+    pub fn mean_flight_secs(&self) -> f64 {
+        if self.flight_msgs == 0 {
+            0.0
+        } else {
+            self.flight_us as f64 / self.flight_msgs as f64 * 1e-6
+        }
+    }
+
+    /// Seconds spent blocked in epoch close barriers.
+    pub fn close_wait_secs(&self) -> f64 {
+        self.close_wait_us as f64 * 1e-6
+    }
+
     /// Traffic since `earlier` (same counters, monotone).
     pub fn since(&self, earlier: CommStats) -> CommStats {
         let mut hist = [0u64; SIZE_BUCKETS];
         for (h, (a, b)) in hist.iter_mut().zip(self.hist.iter().zip(earlier.hist)) {
             *h = a - b;
         }
-        CommStats { msgs: self.msgs - earlier.msgs, bytes: self.bytes - earlier.bytes, hist }
+        let mut flight_hist = [0u64; LAT_BUCKETS];
+        for (h, (a, b)) in
+            flight_hist.iter_mut().zip(self.flight_hist.iter().zip(earlier.flight_hist))
+        {
+            *h = a - b;
+        }
+        CommStats {
+            msgs: self.msgs - earlier.msgs,
+            bytes: self.bytes - earlier.bytes,
+            hist,
+            flight_msgs: self.flight_msgs - earlier.flight_msgs,
+            flight_us: self.flight_us - earlier.flight_us,
+            flight_hist,
+            close_waits: self.close_waits - earlier.close_waits,
+            close_wait_us: self.close_wait_us - earlier.close_wait_us,
+        }
     }
 
     /// Accumulate another snapshot's counters into this one.
@@ -184,6 +244,13 @@ impl CommStats {
         for (h, o) in self.hist.iter_mut().zip(other.hist) {
             *h += o;
         }
+        self.flight_msgs += other.flight_msgs;
+        self.flight_us += other.flight_us;
+        for (h, o) in self.flight_hist.iter_mut().zip(other.flight_hist) {
+            *h += o;
+        }
+        self.close_waits += other.close_waits;
+        self.close_wait_us += other.close_wait_us;
     }
 }
 
@@ -217,6 +284,13 @@ struct Endpoint {
     total_msgs: Cell<u64>,
     total_bytes: Cell<u64>,
     total_hist: Cell<[u64; SIZE_BUCKETS]>,
+    /// Rank-wide receive-side in-flight accounting (stamped frames only).
+    total_flight_msgs: Cell<u64>,
+    total_flight_us: Cell<u64>,
+    total_flight_hist: Cell<[u64; LAT_BUCKETS]>,
+    /// Rank-wide epoch close-barrier accounting.
+    total_close_waits: Cell<u64>,
+    total_close_wait_us: Cell<u64>,
     /// Next free wire-tag base for communicators created through this
     /// rank (monotonic; every split involving this rank bumps it).
     next_tag_base: Cell<u32>,
@@ -229,7 +303,10 @@ struct Endpoint {
 }
 
 impl Endpoint {
-    /// Route an arrived frame into the per-source inbox.
+    /// Route an arrived frame into the per-source inbox.  Data frames
+    /// carry the sender's microsecond stamp after the tag (zero when the
+    /// sender was not tracing); delivery is the receive end of the
+    /// in-flight span, so the stamp is consumed here.
     fn deliver(&self, src: usize, frame: Vec<u8>) {
         let mut inbox = self.inbox.borrow_mut();
         let slot = &mut inbox[src];
@@ -237,7 +314,20 @@ impl Endpoint {
             FRAME_COLL => slot.coll.push_back(frame[1..].to_vec()),
             FRAME_DATA => {
                 let t = u32::from_le_bytes(frame[1..5].try_into().unwrap());
-                slot.tags.entry(t).or_default().push_back(EngineFrame::Data(frame[5..].to_vec()));
+                let send_us = u64::from_le_bytes(frame[5..13].try_into().unwrap());
+                // Self-loopback frames are uncounted in CommStats, so
+                // their flights are skipped here too.
+                if send_us != 0 && src != self.world_rank {
+                    let recv_us = obs::now_us();
+                    let us = recv_us.saturating_sub(send_us);
+                    self.total_flight_msgs.set(self.total_flight_msgs.get() + 1);
+                    self.total_flight_us.set(self.total_flight_us.get() + us);
+                    let mut fh = self.total_flight_hist.get();
+                    fh[lat_bucket(us)] += 1;
+                    self.total_flight_hist.set(fh);
+                    obs::flight(src as u32, t, (frame.len() - 13) as u64, send_us, recv_us);
+                }
+                slot.tags.entry(t).or_default().push_back(EngineFrame::Data(frame[13..].to_vec()));
             }
             FRAME_CLOSE => {
                 let t = u32::from_le_bytes(frame[1..5].try_into().unwrap());
@@ -302,6 +392,11 @@ impl Comm {
                 total_msgs: Cell::new(0),
                 total_bytes: Cell::new(0),
                 total_hist: Cell::new([0; SIZE_BUCKETS]),
+                total_flight_msgs: Cell::new(0),
+                total_flight_us: Cell::new(0),
+                total_flight_hist: Cell::new([0; LAT_BUCKETS]),
+                total_close_waits: Cell::new(0),
+                total_close_wait_us: Cell::new(0),
                 next_tag_base: Cell::new(TAG_STRIDE),
                 inbox: RefCell::new((0..world_np).map(|_| SourceInbox::default()).collect()),
                 cursor: RefCell::new(HashMap::new()),
@@ -338,20 +433,30 @@ impl Comm {
     /// Scoped: a sub-communicator counts only its own epochs and
     /// collectives — see [`Comm::stats_global`] for the rank-wide total.
     pub fn stats(&self) -> CommStats {
+        // In-flight and close-barrier accounting is rank-wide (receiver
+        // side cannot cheaply attribute a wire tag to a communicator), so
+        // scoped snapshots carry zeros there — see [`Comm::stats_global`].
         CommStats {
             msgs: self.group.msgs.get(),
             bytes: self.group.bytes.get(),
             hist: self.group.hist.get(),
+            ..CommStats::default()
         }
     }
 
     /// Rank-wide send-side totals across every communicator this rank
-    /// holds (world + all sub-communicators).
+    /// holds (world + all sub-communicators), plus the receive-side
+    /// in-flight and close-barrier accounting.
     pub fn stats_global(&self) -> CommStats {
         CommStats {
             msgs: self.ep.total_msgs.get(),
             bytes: self.ep.total_bytes.get(),
             hist: self.ep.total_hist.get(),
+            flight_msgs: self.ep.total_flight_msgs.get(),
+            flight_us: self.ep.total_flight_us.get(),
+            flight_hist: self.ep.total_flight_hist.get(),
+            close_waits: self.ep.total_close_waits.get(),
+            close_wait_us: self.ep.total_close_wait_us.get(),
         }
     }
 
@@ -435,15 +540,23 @@ impl Comm {
     /// Post `payload` to member `dest` under `tag` and return immediately
     /// (the nonblocking send).  Payloads are delivered in send order per
     /// (source, tag) pair; `dest == rank()` loops back.
+    ///
+    /// The frame reserves 8 bytes for a send stamp (microseconds since
+    /// the shared trace origin) after the tag; it is zero when tracing is
+    /// off, so both ends agree on the layout unconditionally.  Framing
+    /// bytes — kind, tag, and stamp — remain protocol overhead and are
+    /// never counted in [`CommStats`].
     pub fn isend(&self, dest: usize, tag: u32, payload: Vec<u8>) {
         let wdest = self.group.members[dest];
         if wdest != self.ep.world_rank {
             self.count_send(1, payload.len() as u64);
         }
         let wire = self.wire_tag(tag);
-        let mut f = Vec::with_capacity(5 + payload.len());
+        let send_us = if obs::enabled() { obs::now_us() } else { 0 };
+        let mut f = Vec::with_capacity(13 + payload.len());
         f.push(FRAME_DATA);
         f.extend_from_slice(&wire.to_le_bytes());
+        f.extend_from_slice(&send_us.to_le_bytes());
         f.extend_from_slice(&payload);
         self.ep.tx[wdest].send(f).expect("peer rank terminated early");
     }
@@ -525,8 +638,22 @@ impl Comm {
         for d in 0..self.size() {
             self.send_close(d, tag);
         }
+        // The blocking release below is the epoch close barrier: time it
+        // so barrier idle stops masquerading as communication time.  Two
+        // clock reads per *epoch* (not per message), so it stays on even
+        // when tracing is off.
+        let sp = if obs::enabled() {
+            Some(obs::span(obs::Subsys::Comm, "close_barrier", tag as u64))
+        } else {
+            None
+        };
+        let t0 = std::time::Instant::now();
         let mut out = Vec::new();
         let closed = self.release_into(tag, true, &mut out);
+        let us = t0.elapsed().as_micros() as u64;
+        drop(sp);
+        self.ep.total_close_waits.set(self.ep.total_close_waits.get() + 1);
+        self.ep.total_close_wait_us.set(self.ep.total_close_wait_us.get() + us);
         debug_assert!(closed, "blocking release must close the epoch");
         out
     }
@@ -924,6 +1051,56 @@ mod tests {
             let cal = s.alpha_secs_calibrated();
             assert!(cal < fixed_alpha, "calibrated {cal} !< fixed {fixed_alpha}");
             assert!(cal > 0.9 * COMM_ALPHA_SECS, "bulk message must keep its α: {cal}");
+        }
+    }
+
+    #[test]
+    fn close_barrier_waits_are_accounted() {
+        let w = World::new(2);
+        let stats = w.run(|c| {
+            let _ = c.drain(tag::PTAP_NUM);
+            let _ = c.drain(tag::PTAP_SYM);
+            c.stats_global()
+        });
+        for s in stats {
+            assert_eq!(s.close_waits, 2, "one close barrier per drained epoch");
+            // untraced frames carry no stamp: no flights observed
+            assert_eq!(s.flight_msgs, 0);
+            assert_eq!(s.flight_us, 0);
+        }
+    }
+
+    #[test]
+    fn stamped_frames_record_in_flight_time() {
+        let w = World::new(2);
+        let out = w.run(|c| {
+            crate::obs::rank_begin(c.rank());
+            let peer = 1 - c.rank();
+            c.isend(peer, tag::PTAP_NUM, vec![5; 32]);
+            c.isend(c.rank(), tag::PTAP_NUM, vec![6; 32]); // self: no flight
+            let got = c.drain(tag::PTAP_NUM);
+            let stats = c.stats_global();
+            let buf = crate::obs::rank_take();
+            (got.len(), stats, buf)
+        });
+        for (ngot, s, buf) in out {
+            assert_eq!(ngot, 2);
+            assert_eq!(s.flight_msgs, 1, "only the stamped remote frame counts");
+            assert_eq!(s.flight_hist.iter().sum::<u64>(), 1);
+            let flights = buf
+                .events
+                .iter()
+                .filter(|e| matches!(e, crate::obs::Ev::Flight { .. }))
+                .count();
+            assert_eq!(flights, 1, "receiver records one flight event");
+            let barriers = buf
+                .events
+                .iter()
+                .filter(|e| {
+                    matches!(e, crate::obs::Ev::Begin { name: "close_barrier", .. })
+                })
+                .count();
+            assert_eq!(barriers, 1, "the drain records its close-barrier span");
         }
     }
 

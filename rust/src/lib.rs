@@ -31,6 +31,7 @@ pub mod hash;
 pub mod mat;
 pub mod mem;
 pub mod mg;
+pub mod obs;
 pub mod ptap;
 pub mod reuse;
 pub mod runtime;

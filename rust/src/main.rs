@@ -24,6 +24,7 @@ use galerkin_ptap::mem::{Cat, MemTracker};
 use galerkin_ptap::mg::{
     build_hierarchy, geometric_chain, pcg, Coarsening, HierarchyConfig, MgOpts, MgPreconditioner,
 };
+use galerkin_ptap::obs;
 use galerkin_ptap::ptap::block::block_ptap;
 use galerkin_ptap::ptap::{Algo, ALL_ALGOS};
 use galerkin_ptap::runtime::{BlockBackend, KernelRuntime};
@@ -99,6 +100,7 @@ fn main() {
         "levels" => cmd_levels(&args),
         "solve" => cmd_solve(&args),
         "serve" => cmd_serve(&args),
+        "trace-check" => cmd_trace_check(&args),
         "timedep" => cmd_timedep(&args),
         "selfcheck" => cmd_selfcheck(&args),
         "external" => cmd_external(&args),
@@ -121,9 +123,11 @@ fn print_help() {
            bench-diff     --old F.json --new F.json [--tol 0.10]           (CI perf gate)\n\
            neutron        --grid N --groups G --np a,b,c [--cache] [--eq-limit N]  (Tables 7-8)\n\
            levels         --grid N --groups G                              (Tables 5-6)\n\
-           solve          --coarse N --levels L --algo NAME --np P [--eq-limit N]  (MG-CG)\n\
-           serve          --coarse N --levels L --np P --k K --requests R\n\
+           solve          --coarse N --levels L --algo NAME --np P [--eq-limit N]\n\
+                          [--trace out.json]   (MG-CG; --trace writes a Chrome trace)\n\
+           serve          --coarse N --levels L --np P --k K --requests R [--trace out.json]\n\
                           (session layer: cached hierarchy + K-wide batched dispatch)\n\
+           trace-check    --file TRACE.json     (validate a --trace artifact, print summary)\n\
            timedep        --scenario heat|neutron --steps N [--refresh|--rebuild]\n\
                           --coarse N --levels L --np P --algo NAME [--eq-limit N]\n\
                           [--dt0 X --ramp X]   (implicit stepping: 1 symbolic build, N-1 refreshes)\n\
@@ -131,6 +135,8 @@ fn print_help() {
            external       --matrix F.mtx --np P [--algos LIST]            (PtAP on a MatrixMarket file)\n\n\
          ALGOS: allatonce | merged | two-step | all\n\
          --eq-limit telescopes coarse levels onto ceil(rows/eq_limit) ranks (PCTelescope analog)\n\
+         --trace OUT.json records per-rank spans, message flights and memory timelines and\n\
+           merges them into one Chrome trace (pid = rank, tid = subsystem; DESIGN.md sec 12)\n\
          timedep --rebuild pays the full symbolic build every step (the baseline --refresh beats)"
     );
 }
@@ -179,7 +185,7 @@ fn cmd_bench_smoke(args: &Args) {
     let coarse = Grid3::cube(args.usize_or("coarse", 8));
     let np = args.usize_or("np", 4);
     let repeats = args.usize_or("repeats", 3);
-    let out = args.kv.get("out").cloned().unwrap_or_else(|| "BENCH_pr7.json".to_string());
+    let out = args.kv.get("out").cloned().unwrap_or_else(|| "BENCH_pr8.json".to_string());
     println!(
         "bench smoke: coarse {}³ (fine {}³), np={np}, repeats={repeats}",
         coarse.nx,
@@ -290,8 +296,15 @@ fn cmd_bench_smoke(args: &Args) {
     );
     for c in &throughput {
         println!(
-            "  throughput k={:<3} solves/s {:>10.1} msgs/solve {:>8.1} bytes/solve {:>10.0} iters {}",
-            c.k, c.solves_per_sec, c.msgs_per_solve, c.bytes_per_solve, c.iters
+            "  throughput k={:<3} solves/s {:>10.1} msgs/solve {:>8.1} bytes/solve {:>10.0} \
+             iters {} wait_p99 {:>8} e2e_p99 {:>8}",
+            c.k,
+            c.solves_per_sec,
+            c.msgs_per_solve,
+            c.bytes_per_solve,
+            c.iters,
+            galerkin_ptap::util::fmt_secs(c.queue_wait_p99),
+            galerkin_ptap::util::fmt_secs(c.solve_p99)
         );
     }
     for pair in throughput.windows(2) {
@@ -404,6 +417,8 @@ fn cmd_solve(args: &Args) {
     let levels = args.usize_or("levels", 3);
     let np = args.usize_or("np", 4);
     let eq_limit = args.opt_usize("eq-limit");
+    let trace_out = args.kv.get("trace").cloned();
+    let tracing = trace_out.is_some();
     let algo = args
         .kv
         .get("algo")
@@ -425,9 +440,14 @@ fn cmd_solve(args: &Args) {
     let world = World::new(np);
     let grids2 = grids.clone();
     let results = world.run(move |comm| {
+        if tracing {
+            obs::rank_begin(comm.rank());
+        }
         let tracker = MemTracker::new();
         let a0 = grid_laplacian(grids2[0], comm.rank(), comm.size());
         tracker.alloc(Cat::MatA, a0.bytes());
+        let before_build = comm.stats_global();
+        let t_build = std::time::Instant::now();
         let h = build_hierarchy(
             &comm,
             a0.clone(),
@@ -438,25 +458,81 @@ fn cmd_solve(args: &Args) {
         let active = h.active_ranks.clone();
         let spmv = DistSpmv::new(&comm, &a0);
         let mut pc = MgPreconditioner::new(&comm, h, MgOpts::default());
+        let build_secs = t_build.elapsed().as_secs_f64();
+        let d_build = comm.stats_global().since(before_build);
         let layout = a0.row_layout.clone();
         let b = DistVec::from_fn(layout.clone(), comm.rank(), |_| 1.0);
         let mut x = DistVec::zeros(layout, comm.rank());
+        let before_solve = comm.stats_global();
         let t = std::time::Instant::now();
         let op = CsrOperator::new(&a0, &spmv);
-        let res = pcg(&comm, &op, &b, &mut x, Some(&mut pc), 1e-8, 100);
-        (res, t.elapsed().as_secs_f64(), tracker.peak_total(), active)
+        let res = {
+            let _sp = obs::span(obs::Subsys::Solve, "pcg", 0);
+            pcg(&comm, &op, &b, &mut x, Some(&mut pc), 1e-8, 100)
+        };
+        let secs = t.elapsed().as_secs_f64();
+        let d_solve = comm.stats_global().since(before_solve);
+        let buf = if tracing { Some(obs::rank_take()) } else { None };
+        (res, secs, tracker.peak_total(), active, build_secs, d_build, d_solve, buf)
     });
-    let (res, secs, peak, active) = &results[0];
-    println!(
-        "converged={} iters={} wall={:.2}s peak_mem/rank={:.1} MB active_ranks/level={:?}",
-        res.converged,
-        res.iterations,
-        secs,
-        *peak as f64 / 1048576.0,
-        active
-    );
-    for (k, r) in res.residuals.iter().enumerate() {
-        println!("  iter {k:>3}  ||r|| = {r:.3e}");
+    {
+        let (res, secs, peak, active, ..) = &results[0];
+        println!(
+            "converged={} iters={} wall={:.2}s peak_mem/rank={:.1} MB active_ranks/level={:?}",
+            res.converged,
+            res.iterations,
+            secs,
+            *peak as f64 / 1048576.0,
+            active
+        );
+        for (k, r) in res.residuals.iter().enumerate() {
+            println!("  iter {k:>3}  ||r|| = {r:.3e}");
+        }
+    }
+    if let Some(out) = trace_out {
+        let build_wall = results.iter().map(|r| r.4).fold(0.0f64, f64::max);
+        let solve_wall = results.iter().map(|r| r.1).fold(0.0f64, f64::max);
+        let d_build = results[0].5;
+        let d_solve = results[0].6;
+        print_phase_table(&[("build", build_wall, d_build), ("solve", solve_wall, d_solve)]);
+        let bufs: Vec<obs::TraceBuffer> = results.into_iter().filter_map(|r| r.7).collect();
+        write_trace(&bufs, &out);
+    }
+}
+
+/// Per-phase summary: the α-β model (fixed and calibrated α) next to the
+/// measured wall time, one row per phase, from rank 0's traffic deltas.
+fn print_phase_table(phases: &[(&'static str, f64, galerkin_ptap::dist::CommStats)]) {
+    let rows: Vec<obs::summary::PhaseRow> = phases
+        .iter()
+        .map(|&(phase, wall, d)| obs::summary::PhaseRow {
+            phase,
+            modeled: wall + d.modeled_secs(),
+            calibrated: wall + d.modeled_secs_calibrated(),
+            measured: wall,
+            msgs: d.msgs,
+            bytes: d.bytes,
+        })
+        .collect();
+    println!("\nper-phase model vs measurement:\n{}", obs::summary::phase_table(&rows).render());
+}
+
+/// Merge per-rank buffers, validate the rendered trace, and write it.
+fn write_trace(bufs: &[obs::TraceBuffer], out: &str) {
+    let text = obs::chrome::render_chrome_trace(bufs);
+    match obs::chrome::validate_chrome_trace(&text) {
+        Ok(summary) => println!("trace: {}", summary.render()),
+        Err(e) => {
+            eprintln!("FAIL: generated trace is invalid: {e}");
+            std::process::exit(1);
+        }
+    }
+    match std::fs::write(out, &text) {
+        Ok(()) => println!("wrote {out} (load in chrome://tracing or Perfetto)"),
+        Err(e) => {
+            eprintln!("FAIL: could not write {out}: {e}");
+            std::process::exit(1);
+        }
     }
 }
 
@@ -470,6 +546,8 @@ fn cmd_serve(args: &Args) {
     let np = args.usize_or("np", 4);
     let kk = args.usize_or("k", 4);
     let requests = args.usize_or("requests", 2 * kk + 1);
+    let trace_out = args.kv.get("trace").cloned();
+    let tracing = trace_out.is_some();
     let grids = geometric_chain(coarse, levels);
     println!(
         "serve: fine {}³ = {} unknowns, {} levels, {} ranks, batch K={}, {} requests",
@@ -483,6 +561,9 @@ fn cmd_serve(args: &Args) {
     let world = World::new(np);
     let grids2 = grids.clone();
     let results = world.run(move |comm| {
+        if tracing {
+            obs::rank_begin(comm.rank());
+        }
         let tracker = MemTracker::new();
         let coarsening = Coarsening::Geometric { grids: grids2.clone() };
         let cfg = HierarchyConfig::default();
@@ -520,13 +601,35 @@ fn cmd_serve(args: &Args) {
             batches.push(done.len());
         }
         let served: usize = batches.iter().sum();
-        (served, batches, cache.hits, cache.misses, queue.flushes, queue.partial_flushes)
+        let buf = if tracing { Some(obs::rank_take()) } else { None };
+        (served, batches, cache.hits, cache.misses, queue.flushes, queue.partial_flushes, buf)
     });
-    let (served, batches, hits, misses, flushes, partial) = &results[0];
-    println!(
-        "served {served} requests in {flushes} batched dispatch(es) of widths {batches:?} \
-         ({partial} partial); hierarchy cache: {hits} hit(s), {misses} miss(es)"
-    );
+    {
+        let (served, batches, hits, misses, flushes, partial, _) = &results[0];
+        println!(
+            "served {served} requests in {flushes} batched dispatch(es) of widths {batches:?} \
+             ({partial} partial); hierarchy cache: {hits} hit(s), {misses} miss(es)"
+        );
+    }
+    if let Some(out) = trace_out {
+        let bufs: Vec<obs::TraceBuffer> = results.into_iter().filter_map(|r| r.6).collect();
+        write_trace(&bufs, &out);
+    }
+}
+
+/// Validate a merged Chrome trace JSON produced by `--trace` (schema +
+/// balanced spans per rank/subsystem) and print its event summary.
+fn cmd_trace_check(args: &Args) {
+    let file = args.kv.get("file").expect("--file TRACE.json required").clone();
+    let text = std::fs::read_to_string(&file)
+        .unwrap_or_else(|e| panic!("cannot read {file}: {e}"));
+    match obs::chrome::validate_chrome_trace(&text) {
+        Ok(summary) => println!("trace OK: {file}: {}", summary.render()),
+        Err(e) => {
+            eprintln!("FAIL: {file}: {e}");
+            std::process::exit(1);
+        }
+    }
 }
 
 /// Time-dependent workload: N implicit steps with one symbolic hierarchy

@@ -7,6 +7,7 @@
 //! its buffer bytes to a category when built and releases them when
 //! dropped; the tracker keeps current and peak per category and overall.
 
+use crate::obs;
 use std::cell::RefCell;
 use std::rc::Rc;
 
@@ -102,6 +103,10 @@ impl MemTracker {
         if m.cur_total > m.peak_total {
             m.peak_total = m.cur_total;
         }
+        // Trace the memory timeline: one counter sample per change turns
+        // the per-Cat peaks into a visible bytes-over-time waterfall.
+        // A single flag test when tracing is off.
+        obs::counter(obs::Subsys::Mem, cat.name(), m.cur[i]);
     }
 
     pub fn free(&self, cat: Cat, bytes: u64) {
@@ -110,6 +115,7 @@ impl MemTracker {
         debug_assert!(m.cur[i] >= bytes, "free underflow in {:?}", cat);
         m.cur[i] = m.cur[i].saturating_sub(bytes);
         m.cur_total = m.cur_total.saturating_sub(bytes);
+        obs::counter(obs::Subsys::Mem, cat.name(), m.cur[i]);
     }
 
     /// Re-charge already-allocated bytes from one category to another
@@ -245,6 +251,27 @@ mod tests {
         t.transfer(Cat::Hash, Cat::MatC, 80);
         assert_eq!(t.current(Cat::Hash), 0);
         assert_eq!(t.current(Cat::MatC), 80);
+    }
+
+    #[test]
+    fn tracing_samples_the_timeline_without_perturbing_accounting() {
+        let t = MemTracker::new();
+        obs::rank_begin(0);
+        t.alloc(Cat::Aux, 100);
+        t.free(Cat::Aux, 40);
+        let buf = obs::rank_take();
+        // accounting is identical traced or not — hooks only observe
+        assert_eq!(t.current(Cat::Aux), 60);
+        assert_eq!(t.peak(Cat::Aux), 100);
+        let samples: Vec<u64> = buf
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                obs::Ev::Counter { name: "aux", val, .. } => Some(*val),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(samples, vec![100, 60], "one sample per change, current bytes");
     }
 
     #[test]

@@ -540,6 +540,7 @@ impl MgPreconditioner {
     /// / residual / restrict / recurse / prolongate sequence with every
     /// collective replaced by its blocked counterpart.
     fn cycle_multi(&mut self, k: usize, b: &DistMultiVec, x: &mut DistMultiVec) {
+        let _lvl_sp = crate::obs::span(crate::obs::Subsys::Mg, "level", k as u64);
         let comm = self.levels[k].comm.clone();
         let comm = &comm;
         let nlev = self.levels.len();
@@ -547,14 +548,18 @@ impl MgPreconditioner {
             self.coarse_solve_multi(comm, k, b, x);
             return;
         }
-        for _ in 0..self.opts.pre_smooth {
-            let lvl = &mut self.levels[k];
-            let a = &self.hierarchy.levels[k].a;
-            let op = a.operator(lvl.spmv.as_ref());
-            lvl.smoother.sweep_multi(comm, &op, b, x, lvl.work_m.as_mut().unwrap());
+        {
+            let _sp = crate::obs::span(crate::obs::Subsys::Mg, "smooth.pre", k as u64);
+            for _ in 0..self.opts.pre_smooth {
+                let lvl = &mut self.levels[k];
+                let a = &self.hierarchy.levels[k].a;
+                let op = a.operator(lvl.spmv.as_ref());
+                lvl.smoother.sweep_multi(comm, &op, b, x, lvl.work_m.as_mut().unwrap());
+            }
         }
         // residual R = B - A X
         {
+            let _sp = crate::obs::span(crate::obs::Subsys::Mg, "residual", k as u64);
             let lvl = &mut self.levels[k];
             let a = &self.hierarchy.levels[k].a;
             let op = a.operator(lvl.spmv.as_ref());
@@ -572,6 +577,7 @@ impl MgPreconditioner {
         }
         let mut bc = self.levels[k].bc_m.take().expect("coarse rhs scratch in use");
         {
+            let _sp = crate::obs::span(crate::obs::Subsys::Mg, "restrict", k as u64);
             let p = self.hierarchy.levels[k].p.as_ref().unwrap();
             let lvl = &self.levels[k];
             lvl.transfer.as_ref().unwrap().restrict_multi(
@@ -586,7 +592,10 @@ impl MgPreconditioner {
         let mut ec = self.levels[k].ec_m.take().expect("coarse correction scratch in use");
         if let Some(tel) = self.levels[k].telescope.clone() {
             let mut bc_sub = self.levels[k].bc_sub_m.take();
-            tel.coarse.scatter_multi_into(comm, &bc, bc_sub.as_mut());
+            {
+                let _sp = crate::obs::span(crate::obs::Subsys::Mg, "redist.scatter", k as u64);
+                tel.coarse.scatter_multi_into(comm, &bc, bc_sub.as_mut());
+            }
             let ec_sub = match (&tel.subcomm, bc_sub.as_ref()) {
                 (Some(_), Some(bc_s)) => {
                     let mut ec_sub =
@@ -600,7 +609,10 @@ impl MgPreconditioner {
                 }
                 _ => None,
             };
-            tel.coarse.gather_multi_into(comm, ec_sub.as_ref(), &mut ec);
+            {
+                let _sp = crate::obs::span(crate::obs::Subsys::Mg, "redist.gather", k as u64);
+                tel.coarse.gather_multi_into(comm, ec_sub.as_ref(), &mut ec);
+            }
             self.levels[k].ec_sub_m = ec_sub;
             self.levels[k].bc_sub_m = bc_sub;
         } else {
@@ -611,6 +623,7 @@ impl MgPreconditioner {
             }
         }
         {
+            let _sp = crate::obs::span(crate::obs::Subsys::Mg, "prolong", k as u64);
             let p = self.hierarchy.levels[k].p.as_ref().unwrap();
             let lvl = &mut self.levels[k];
             let e = lvl.e_m.as_mut().unwrap();
@@ -625,11 +638,14 @@ impl MgPreconditioner {
                 *xv += ev;
             }
         }
-        for _ in 0..self.opts.post_smooth {
-            let lvl = &mut self.levels[k];
-            let a = &self.hierarchy.levels[k].a;
-            let op = a.operator(lvl.spmv.as_ref());
-            lvl.smoother.sweep_multi(comm, &op, b, x, lvl.work_m.as_mut().unwrap());
+        {
+            let _sp = crate::obs::span(crate::obs::Subsys::Mg, "smooth.post", k as u64);
+            for _ in 0..self.opts.post_smooth {
+                let lvl = &mut self.levels[k];
+                let a = &self.hierarchy.levels[k].a;
+                let op = a.operator(lvl.spmv.as_ref());
+                lvl.smoother.sweep_multi(comm, &op, b, x, lvl.work_m.as_mut().unwrap());
+            }
         }
     }
 
@@ -672,6 +688,7 @@ impl MgPreconditioner {
         b: &DistMultiVec,
         x: &mut DistMultiVec,
     ) {
+        let _sp = crate::obs::span(crate::obs::Subsys::Mg, "coarse_solve", k as u64);
         let kk = b.k;
         match &self.coarse_inv {
             Some(inv) => {
@@ -707,6 +724,7 @@ impl MgPreconditioner {
     }
 
     fn cycle(&mut self, k: usize, b: &DistVec, x: &mut DistVec) {
+        let _lvl_sp = crate::obs::span(crate::obs::Subsys::Mg, "level", k as u64);
         let comm = self.levels[k].comm.clone();
         let comm = &comm;
         let nlev = self.levels.len();
@@ -715,14 +733,18 @@ impl MgPreconditioner {
             return;
         }
         // borrow juggling: split level k from level k+1 state
-        for _ in 0..self.opts.pre_smooth {
-            let lvl = &mut self.levels[k];
-            let a = &self.hierarchy.levels[k].a;
-            let op = a.operator(lvl.spmv.as_ref());
-            lvl.smoother.sweep(comm, &op, b, x, &mut lvl.work);
+        {
+            let _sp = crate::obs::span(crate::obs::Subsys::Mg, "smooth.pre", k as u64);
+            for _ in 0..self.opts.pre_smooth {
+                let lvl = &mut self.levels[k];
+                let a = &self.hierarchy.levels[k].a;
+                let op = a.operator(lvl.spmv.as_ref());
+                lvl.smoother.sweep(comm, &op, b, x, &mut lvl.work);
+            }
         }
         // residual r = b - A x
         {
+            let _sp = crate::obs::span(crate::obs::Subsys::Mg, "residual", k as u64);
             let lvl = &mut self.levels[k];
             let a = &self.hierarchy.levels[k].a;
             let op = a.operator(lvl.spmv.as_ref());
@@ -736,6 +758,7 @@ impl MgPreconditioner {
         // out for the crossing, put back after prolongation)
         let mut bc = self.levels[k].bc.take().expect("coarse rhs scratch in use");
         {
+            let _sp = crate::obs::span(crate::obs::Subsys::Mg, "restrict", k as u64);
             let p = self.hierarchy.levels[k].p.as_ref().unwrap();
             let lvl = &self.levels[k];
             lvl.transfer.as_ref().unwrap().restrict(comm, p, &lvl.r, &mut bc);
@@ -754,7 +777,10 @@ impl MgPreconditioner {
             // scatter the rhs into the subcomm; idle ranks skip straight
             // to the gather below
             let mut bc_sub = self.levels[k].bc_sub.take();
-            tel.coarse.scatter_vec_into(comm, &bc, bc_sub.as_mut());
+            {
+                let _sp = crate::obs::span(crate::obs::Subsys::Mg, "redist.scatter", k as u64);
+                tel.coarse.scatter_vec_into(comm, &bc, bc_sub.as_mut());
+            }
             let ec_sub = match (&tel.subcomm, bc_sub.as_ref()) {
                 (Some(_), Some(bc_s)) => {
                     let mut ec_sub =
@@ -768,7 +794,10 @@ impl MgPreconditioner {
                 }
                 _ => None,
             };
-            tel.coarse.gather_vec_into(comm, ec_sub.as_ref(), &mut ec);
+            {
+                let _sp = crate::obs::span(crate::obs::Subsys::Mg, "redist.gather", k as u64);
+                tel.coarse.gather_vec_into(comm, ec_sub.as_ref(), &mut ec);
+            }
             self.levels[k].ec_sub = ec_sub;
             self.levels[k].bc_sub = bc_sub;
         } else {
@@ -780,6 +809,7 @@ impl MgPreconditioner {
         }
         // prolongate and correct
         {
+            let _sp = crate::obs::span(crate::obs::Subsys::Mg, "prolong", k as u64);
             let p = self.hierarchy.levels[k].p.as_ref().unwrap();
             let lvl = &mut self.levels[k];
             lvl.e.fill(0.0);
@@ -790,11 +820,14 @@ impl MgPreconditioner {
         for i in 0..x.vals.len() {
             x.vals[i] += self.levels[k].e.vals[i];
         }
-        for _ in 0..self.opts.post_smooth {
-            let lvl = &mut self.levels[k];
-            let a = &self.hierarchy.levels[k].a;
-            let op = a.operator(lvl.spmv.as_ref());
-            lvl.smoother.sweep(comm, &op, b, x, &mut lvl.work);
+        {
+            let _sp = crate::obs::span(crate::obs::Subsys::Mg, "smooth.post", k as u64);
+            for _ in 0..self.opts.post_smooth {
+                let lvl = &mut self.levels[k];
+                let a = &self.hierarchy.levels[k].a;
+                let op = a.operator(lvl.spmv.as_ref());
+                lvl.smoother.sweep(comm, &op, b, x, &mut lvl.work);
+            }
         }
     }
 
@@ -823,6 +856,7 @@ impl MgPreconditioner {
     }
 
     fn coarse_solve(&mut self, comm: &Comm, k: usize, b: &DistVec, x: &mut DistVec) {
+        let _sp = crate::obs::span(crate::obs::Subsys::Mg, "coarse_solve", k as u64);
         match &self.coarse_inv {
             Some(inv) => {
                 // gather full rhs on every rank, apply the dense inverse,

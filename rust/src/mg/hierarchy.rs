@@ -379,6 +379,7 @@ fn build_hierarchy_op(
     cfg: HierarchyConfig,
     tracker: &MemTracker,
 ) -> Hierarchy {
+    let _sp = crate::obs::span(crate::obs::Subsys::Mg, "build_hierarchy", 0);
     let mut cur = comm.clone();
     let mut levels: Vec<Level> = Vec::new();
     let mut op_stats_v = vec![op_stats_level(&cur, &a0)];

@@ -1,0 +1,535 @@
+//! Chrome trace-event JSON exporter and schema validator.
+//!
+//! Export maps the merged per-rank [`TraceBuffer`]s onto the Chrome
+//! trace-event format (loadable in chrome://tracing and Perfetto):
+//!
+//! * `pid`  = rank (with a `process_name` metadata record per rank),
+//! * `tid`  = subsystem lane ([`Subsys::tid`], named via `thread_name`
+//!   metadata) — comm, ptap, mg, refresh, batch, session, mem, solve,
+//! * `ph`   = `B`/`E` for spans, `i` for instants, `C` for counters,
+//!   `X` for message flights and after-the-fact complete spans,
+//! * `ts`   = microseconds since the shared process origin.
+//!
+//! The validator re-parses the emitted JSON with a small self-contained
+//! parser (the bench-report scanner in `coordinator::report` cannot split
+//! fields containing nested `args` objects) and checks the structural
+//! schema CI relies on: a `traceEvents` array, required keys per phase
+//! type, and B/E balance per `(pid, tid)` lane.
+
+use super::{Ev, Subsys, TraceBuffer};
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+const ALL_SUBSYS: [Subsys; 8] = [
+    Subsys::Comm,
+    Subsys::Ptap,
+    Subsys::Mg,
+    Subsys::Refresh,
+    Subsys::Batch,
+    Subsys::Session,
+    Subsys::Mem,
+    Subsys::Solve,
+];
+
+/// Render the merged buffers as a Chrome trace-event JSON string.
+pub fn render_chrome_trace(bufs: &[TraceBuffer]) -> String {
+    let mut out = String::from("{\"traceEvents\": [\n");
+    let mut first = true;
+    let push = |out: &mut String, first: &mut bool, line: String| {
+        if !*first {
+            out.push_str(",\n");
+        }
+        *first = false;
+        out.push_str("  ");
+        out.push_str(&line);
+    };
+    for buf in bufs {
+        let pid = buf.rank;
+        push(
+            &mut out,
+            &mut first,
+            format!(
+                "{{\"ph\": \"M\", \"pid\": {pid}, \"tid\": 0, \"name\": \"process_name\", \
+                 \"args\": {{\"name\": \"rank {pid}\"}}}}"
+            ),
+        );
+        for sub in ALL_SUBSYS {
+            push(
+                &mut out,
+                &mut first,
+                format!(
+                    "{{\"ph\": \"M\", \"pid\": {pid}, \"tid\": {}, \"name\": \"thread_name\", \
+                     \"args\": {{\"name\": \"{}\"}}}}",
+                    sub.tid(),
+                    sub.name()
+                ),
+            );
+        }
+        for ev in &buf.events {
+            let line = match *ev {
+                Ev::Begin { ts_us, sub, name, arg } => format!(
+                    "{{\"ph\": \"B\", \"pid\": {pid}, \"tid\": {}, \"ts\": {ts_us}, \
+                     \"name\": \"{name}\", \"cat\": \"{}\", \"args\": {{\"arg\": {arg}}}}}",
+                    sub.tid(),
+                    sub.name()
+                ),
+                Ev::End { ts_us, sub, name } => format!(
+                    "{{\"ph\": \"E\", \"pid\": {pid}, \"tid\": {}, \"ts\": {ts_us}, \
+                     \"name\": \"{name}\", \"cat\": \"{}\"}}",
+                    sub.tid(),
+                    sub.name()
+                ),
+                Ev::Instant { ts_us, sub, name, arg } => format!(
+                    "{{\"ph\": \"i\", \"s\": \"t\", \"pid\": {pid}, \"tid\": {}, \
+                     \"ts\": {ts_us}, \"name\": \"{name}\", \"cat\": \"{}\", \
+                     \"args\": {{\"arg\": {arg}}}}}",
+                    sub.tid(),
+                    sub.name()
+                ),
+                Ev::Counter { ts_us, sub, name, val } => format!(
+                    "{{\"ph\": \"C\", \"pid\": {pid}, \"tid\": {}, \"ts\": {ts_us}, \
+                     \"name\": \"mem.{name}\", \"cat\": \"{}\", \"args\": {{\"bytes\": {val}}}}}",
+                    sub.tid(),
+                    sub.name()
+                ),
+                Ev::Flight { send_us, recv_us, src, tag, bytes } => format!(
+                    "{{\"ph\": \"X\", \"pid\": {pid}, \"tid\": {}, \"ts\": {send_us}, \
+                     \"dur\": {}, \"name\": \"msg\", \"cat\": \"comm\", \
+                     \"args\": {{\"src\": {src}, \"tag\": {tag}, \"bytes\": {bytes}}}}}",
+                    Subsys::Comm.tid(),
+                    recv_us.saturating_sub(send_us)
+                ),
+                Ev::Complete { start_us, end_us, sub, name, arg } => format!(
+                    "{{\"ph\": \"X\", \"pid\": {pid}, \"tid\": {}, \"ts\": {start_us}, \
+                     \"dur\": {}, \"name\": \"{name}\", \"cat\": \"{}\", \
+                     \"args\": {{\"arg\": {arg}}}}}",
+                    sub.tid(),
+                    end_us.saturating_sub(start_us),
+                    sub.name()
+                ),
+            };
+            push(&mut out, &mut first, line);
+        }
+        if buf.dropped > 0 {
+            push(
+                &mut out,
+                &mut first,
+                format!(
+                    "{{\"ph\": \"i\", \"s\": \"p\", \"pid\": {pid}, \"tid\": 0, \"ts\": 0, \
+                     \"name\": \"ring_dropped\", \"cat\": \"meta\", \
+                     \"args\": {{\"arg\": {}}}}}",
+                    buf.dropped
+                ),
+            );
+        }
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+/// Merge the per-rank buffers and write the Chrome trace JSON to `path`.
+pub fn write_chrome_trace(bufs: &[TraceBuffer], path: &Path) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(render_chrome_trace(bufs).as_bytes())
+}
+
+/// What [`validate_chrome_trace`] found in a structurally valid trace.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceSummary {
+    pub ranks: usize,
+    pub spans: usize,
+    pub instants: usize,
+    pub counters: usize,
+    pub flights: usize,
+    pub completes: usize,
+}
+
+impl TraceSummary {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = write!(
+            s,
+            "{} rank(s): {} span pair(s), {} flight(s), {} counter sample(s), \
+             {} instant(s), {} complete span(s)",
+            self.ranks, self.spans, self.flights, self.counters, self.instants, self.completes
+        );
+        s
+    }
+}
+
+/// Validate a Chrome trace-event JSON document: it must parse, carry a
+/// `traceEvents` array of objects, every event must have the keys its
+/// phase requires, and every `B` must close with an `E` on the same
+/// `(pid, tid)` lane in LIFO order.
+pub fn validate_chrome_trace(text: &str) -> Result<TraceSummary, String> {
+    let doc = json::parse(text)?;
+    let root = doc.as_object().ok_or("top level must be an object")?;
+    let events = root
+        .iter()
+        .find(|(k, _)| k == "traceEvents")
+        .map(|(_, v)| v)
+        .ok_or("missing \"traceEvents\"")?
+        .as_array()
+        .ok_or("\"traceEvents\" must be an array")?;
+    let mut sum = TraceSummary::default();
+    let mut ranks = std::collections::BTreeSet::new();
+    // (pid, tid) → stack of open span names
+    let mut stacks: std::collections::HashMap<(i64, i64), Vec<String>> =
+        std::collections::HashMap::new();
+    for (i, ev) in events.iter().enumerate() {
+        let obj = ev.as_object().ok_or_else(|| format!("event {i}: not an object"))?;
+        let field = |k: &str| obj.iter().find(|(n, _)| n == k).map(|(_, v)| v);
+        let ph = field("ph")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("event {i}: missing \"ph\""))?
+            .to_string();
+        let pid = field("pid")
+            .and_then(|v| v.as_i64())
+            .ok_or_else(|| format!("event {i}: missing integer \"pid\""))?;
+        if ph != "M" {
+            ranks.insert(pid);
+            field("ts")
+                .and_then(|v| v.as_i64())
+                .ok_or_else(|| format!("event {i}: missing integer \"ts\""))?;
+        }
+        let tid = field("tid")
+            .and_then(|v| v.as_i64())
+            .ok_or_else(|| format!("event {i}: missing integer \"tid\""))?;
+        let name = field("name").and_then(|v| v.as_str()).map(str::to_string);
+        match ph.as_str() {
+            "B" => {
+                let n = name.ok_or_else(|| format!("event {i}: B without \"name\""))?;
+                stacks.entry((pid, tid)).or_default().push(n);
+            }
+            "E" => {
+                let open = stacks.entry((pid, tid)).or_default().pop().ok_or_else(|| {
+                    format!("event {i}: E on pid {pid} tid {tid} without open span")
+                })?;
+                if let Some(n) = name {
+                    if n != open {
+                        return Err(format!(
+                            "event {i}: E \"{n}\" closes span \"{open}\" (pid {pid} tid {tid})"
+                        ));
+                    }
+                }
+                sum.spans += 1;
+            }
+            "X" => {
+                field("dur")
+                    .and_then(|v| v.as_i64())
+                    .ok_or_else(|| format!("event {i}: X without integer \"dur\""))?;
+                if name.as_deref() == Some("msg") {
+                    sum.flights += 1;
+                } else {
+                    sum.completes += 1;
+                }
+            }
+            "i" => sum.instants += 1,
+            "C" => {
+                name.ok_or_else(|| format!("event {i}: C without \"name\""))?;
+                sum.counters += 1;
+            }
+            "M" => {}
+            other => return Err(format!("event {i}: unknown phase {other:?}")),
+        }
+    }
+    for ((pid, tid), stack) in &stacks {
+        if !stack.is_empty() {
+            return Err(format!(
+                "unbalanced spans on pid {pid} tid {tid}: {:?} never closed",
+                stack
+            ));
+        }
+    }
+    sum.ranks = ranks.len();
+    Ok(sum)
+}
+
+/// Minimal recursive-descent JSON parser — just enough structure for the
+/// trace validator, with proper handling of nested objects/arrays and
+/// string escapes (which the flat bench-cell scanner cannot do).
+mod json {
+    #[derive(Debug, Clone, PartialEq)]
+    pub enum Value {
+        Null,
+        Bool(bool),
+        Num(f64),
+        Str(String),
+        Arr(Vec<Value>),
+        Obj(Vec<(String, Value)>),
+    }
+
+    impl Value {
+        pub fn as_object(&self) -> Option<&[(String, Value)]> {
+            match self {
+                Value::Obj(f) => Some(f),
+                _ => None,
+            }
+        }
+        pub fn as_array(&self) -> Option<&[Value]> {
+            match self {
+                Value::Arr(v) => Some(v),
+                _ => None,
+            }
+        }
+        pub fn as_str(&self) -> Option<&str> {
+            match self {
+                Value::Str(s) => Some(s),
+                _ => None,
+            }
+        }
+        pub fn as_i64(&self) -> Option<i64> {
+            match self {
+                Value::Num(n) => Some(*n as i64),
+                _ => None,
+            }
+        }
+    }
+
+    pub fn parse(text: &str) -> Result<Value, String> {
+        let b = text.as_bytes();
+        let mut pos = 0;
+        let v = value(b, &mut pos)?;
+        skip_ws(b, &mut pos);
+        if pos != b.len() {
+            return Err(format!("trailing bytes at offset {pos}"));
+        }
+        Ok(v)
+    }
+
+    fn skip_ws(b: &[u8], pos: &mut usize) {
+        while *pos < b.len() && b[*pos].is_ascii_whitespace() {
+            *pos += 1;
+        }
+    }
+
+    fn expect(b: &[u8], pos: &mut usize, ch: u8) -> Result<(), String> {
+        skip_ws(b, pos);
+        if *pos < b.len() && b[*pos] == ch {
+            *pos += 1;
+            Ok(())
+        } else {
+            Err(format!("expected {:?} at offset {}", ch as char, pos))
+        }
+    }
+
+    fn value(b: &[u8], pos: &mut usize) -> Result<Value, String> {
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b'{') => object(b, pos),
+            Some(b'[') => array(b, pos),
+            Some(b'"') => Ok(Value::Str(string(b, pos)?)),
+            Some(b't') => literal(b, pos, "true", Value::Bool(true)),
+            Some(b'f') => literal(b, pos, "false", Value::Bool(false)),
+            Some(b'n') => literal(b, pos, "null", Value::Null),
+            Some(_) => number(b, pos),
+            None => Err("unexpected end of input".into()),
+        }
+    }
+
+    fn literal(b: &[u8], pos: &mut usize, lit: &str, v: Value) -> Result<Value, String> {
+        if b[*pos..].starts_with(lit.as_bytes()) {
+            *pos += lit.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at offset {pos}"))
+        }
+    }
+
+    fn number(b: &[u8], pos: &mut usize) -> Result<Value, String> {
+        let start = *pos;
+        while *pos < b.len()
+            && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            *pos += 1;
+        }
+        std::str::from_utf8(&b[start..*pos])
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .map(Value::Num)
+            .ok_or_else(|| format!("bad number at offset {start}"))
+    }
+
+    fn string(b: &[u8], pos: &mut usize) -> Result<String, String> {
+        expect(b, pos, b'"')?;
+        let mut s = String::new();
+        while *pos < b.len() {
+            match b[*pos] {
+                b'"' => {
+                    *pos += 1;
+                    return Ok(s);
+                }
+                b'\\' => {
+                    *pos += 1;
+                    let esc = *b.get(*pos).ok_or("unterminated escape")?;
+                    s.push(match esc {
+                        b'"' => '"',
+                        b'\\' => '\\',
+                        b'/' => '/',
+                        b'n' => '\n',
+                        b't' => '\t',
+                        b'r' => '\r',
+                        b'b' => '\u{8}',
+                        b'f' => '\u{c}',
+                        b'u' => {
+                            let hex = b
+                                .get(*pos + 1..*pos + 5)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .and_then(|h| u32::from_str_radix(h, 16).ok())
+                                .ok_or("bad \\u escape")?;
+                            *pos += 4;
+                            char::from_u32(hex).unwrap_or('\u{fffd}')
+                        }
+                        other => return Err(format!("bad escape \\{}", other as char)),
+                    });
+                    *pos += 1;
+                }
+                c => {
+                    // Multi-byte UTF-8 sequences pass through unmodified.
+                    let len = match c {
+                        0x00..=0x7f => 1,
+                        0xc0..=0xdf => 2,
+                        0xe0..=0xef => 3,
+                        _ => 4,
+                    };
+                    let chunk = b.get(*pos..*pos + len).ok_or("truncated utf-8")?;
+                    s.push_str(std::str::from_utf8(chunk).map_err(|e| e.to_string())?);
+                    *pos += len;
+                }
+            }
+        }
+        Err("unterminated string".into())
+    }
+
+    fn array(b: &[u8], pos: &mut usize) -> Result<Value, String> {
+        expect(b, pos, b'[')?;
+        let mut items = Vec::new();
+        skip_ws(b, pos);
+        if b.get(*pos) == Some(&b']') {
+            *pos += 1;
+            return Ok(Value::Arr(items));
+        }
+        loop {
+            items.push(value(b, pos)?);
+            skip_ws(b, pos);
+            match b.get(*pos) {
+                Some(b',') => *pos += 1,
+                Some(b']') => {
+                    *pos += 1;
+                    return Ok(Value::Arr(items));
+                }
+                _ => return Err(format!("expected ',' or ']' at offset {pos}")),
+            }
+        }
+    }
+
+    fn object(b: &[u8], pos: &mut usize) -> Result<Value, String> {
+        expect(b, pos, b'{')?;
+        let mut fields = Vec::new();
+        skip_ws(b, pos);
+        if b.get(*pos) == Some(&b'}') {
+            *pos += 1;
+            return Ok(Value::Obj(fields));
+        }
+        loop {
+            skip_ws(b, pos);
+            let key = string(b, pos)?;
+            expect(b, pos, b':')?;
+            fields.push((key, value(b, pos)?));
+            skip_ws(b, pos);
+            match b.get(*pos) {
+                Some(b',') => *pos += 1,
+                Some(b'}') => {
+                    *pos += 1;
+                    return Ok(Value::Obj(fields));
+                }
+                _ => return Err(format!("expected ',' or '}}' at offset {pos}")),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_buffer() -> TraceBuffer {
+        TraceBuffer {
+            rank: 0,
+            events: vec![
+                Ev::Begin { ts_us: 10, sub: Subsys::Mg, name: "cycle", arg: 0 },
+                Ev::Counter { ts_us: 11, sub: Subsys::Mem, name: "A", val: 4096 },
+                Ev::Flight { send_us: 12, recv_us: 19, src: 1, tag: 7, bytes: 80 },
+                Ev::Instant { ts_us: 14, sub: Subsys::Session, name: "enqueue", arg: 3 },
+                Ev::Complete {
+                    start_us: 5,
+                    end_us: 25,
+                    sub: Subsys::Session,
+                    name: "request",
+                    arg: 3,
+                },
+                Ev::End { ts_us: 20, sub: Subsys::Mg, name: "cycle" },
+            ],
+            dropped: 0,
+        }
+    }
+
+    #[test]
+    fn rendered_trace_validates() {
+        let text = render_chrome_trace(&[sample_buffer()]);
+        let sum = validate_chrome_trace(&text).expect("valid trace");
+        assert_eq!(
+            sum,
+            TraceSummary {
+                ranks: 1,
+                spans: 1,
+                instants: 1,
+                counters: 1,
+                flights: 1,
+                completes: 1
+            }
+        );
+    }
+
+    #[test]
+    fn validator_rejects_unbalanced_spans() {
+        let mut buf = sample_buffer();
+        buf.events.pop(); // drop the End
+        let text = render_chrome_trace(&[buf]);
+        let err = validate_chrome_trace(&text).unwrap_err();
+        assert!(err.contains("unbalanced"), "got: {err}");
+    }
+
+    #[test]
+    fn validator_rejects_mismatched_close() {
+        let mut buf = sample_buffer();
+        buf.events[5] = Ev::End { ts_us: 20, sub: Subsys::Mg, name: "other" };
+        let text = render_chrome_trace(&[buf]);
+        let err = validate_chrome_trace(&text).unwrap_err();
+        assert!(err.contains("closes span"), "got: {err}");
+    }
+
+    #[test]
+    fn validator_rejects_non_json() {
+        assert!(validate_chrome_trace("not json").is_err());
+        assert!(validate_chrome_trace("{\"other\": []}").is_err());
+    }
+
+    #[test]
+    fn json_parser_handles_nesting_and_escapes() {
+        let text = "{\"a\": [1, {\"b\": \"x\\\"y\"}, [2, 3]], \"c\": -4.5e2}";
+        let v = super::json::parse(text).expect("parse");
+        let obj = v.as_object().unwrap();
+        assert_eq!(obj.len(), 2);
+        let arr = obj[0].1.as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[1].as_object().unwrap()[0].1.as_str(), Some("x\"y"));
+        assert_eq!(obj[1].1.as_i64(), Some(-450));
+    }
+}

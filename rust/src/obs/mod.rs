@@ -1,0 +1,362 @@
+//! Rank-resolved tracing: spans, instants, counters, and message
+//! in-flight timelines, exported as Chrome trace-event JSON.
+//!
+//! The recorder is **per rank**: every simulated rank is one OS thread
+//! (see `dist::World`), so a thread-local ring buffer gives each rank its
+//! own event stream with no locking and no signature changes anywhere in
+//! the solver stack.  A run that wants a trace calls [`rank_begin`] at the
+//! top of its rank closure and [`rank_take`] at the end; the leader merges
+//! the returned [`TraceBuffer`]s with [`chrome::write_chrome_trace`].
+//!
+//! Cost model: when tracing is disabled (the default), every hook in the
+//! hot paths is a single thread-local `Cell<bool>` read — no clock reads,
+//! no allocation, no branches beyond the flag test.  When enabled, events
+//! are fixed-size (`&'static str` names, integer args) and land in a
+//! pre-allocated ring; overflow drops the *oldest* events and counts them
+//! in [`TraceBuffer::dropped`] rather than reallocating.
+//!
+//! Timestamps are microseconds since a process-wide origin (a
+//! `OnceLock<Instant>` shared by every rank thread), so merged timelines
+//! from different ranks line up and a sender's stamp can be compared
+//! against the receiver's clock to measure true in-flight time.
+
+pub mod chrome;
+pub mod summary;
+
+use std::cell::{Cell, RefCell};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Subsystem lane: becomes the Chrome trace `tid` (one row per subsystem
+/// under each rank's `pid`) and the event `cat`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Subsys {
+    /// Comm engine: epochs, close barriers, message flights.
+    Comm,
+    /// PtAP triple products: symbolic / numeric / overlap windows.
+    Ptap,
+    /// Multigrid cycle: per-level smooth / restrict / redist / coarse.
+    Mg,
+    /// Hierarchy refresh passes (`reuse::HierarchyRefresher`).
+    Refresh,
+    /// Batched block kernels (`runtime::SpmvBatcher` and friends).
+    Batch,
+    /// Session layer: request enqueue → flush → dispatch → completion.
+    Session,
+    /// Memory tracker per-`Cat` byte counters.
+    Mem,
+    /// Outer Krylov solve phases.
+    Solve,
+}
+
+impl Subsys {
+    pub fn name(self) -> &'static str {
+        match self {
+            Subsys::Comm => "comm",
+            Subsys::Ptap => "ptap",
+            Subsys::Mg => "mg",
+            Subsys::Refresh => "refresh",
+            Subsys::Batch => "batch",
+            Subsys::Session => "session",
+            Subsys::Mem => "mem",
+            Subsys::Solve => "solve",
+        }
+    }
+
+    /// Stable Chrome `tid` for this lane.
+    pub fn tid(self) -> u32 {
+        match self {
+            Subsys::Comm => 1,
+            Subsys::Ptap => 2,
+            Subsys::Mg => 3,
+            Subsys::Refresh => 4,
+            Subsys::Batch => 5,
+            Subsys::Session => 6,
+            Subsys::Mem => 7,
+            Subsys::Solve => 8,
+        }
+    }
+}
+
+/// One recorded event.  Fixed-size: names are `&'static str`, args are
+/// integers (a level index, a ticket, a byte count) — nothing here
+/// allocates after the ring itself.
+#[derive(Debug, Clone, Copy)]
+pub enum Ev {
+    /// Span open (Chrome `ph:"B"`).
+    Begin { ts_us: u64, sub: Subsys, name: &'static str, arg: u64 },
+    /// Span close (Chrome `ph:"E"`); carries the lane so B/E pair up.
+    End { ts_us: u64, sub: Subsys, name: &'static str },
+    /// Point event (Chrome `ph:"i"`).
+    Instant { ts_us: u64, sub: Subsys, name: &'static str, arg: u64 },
+    /// Counter sample (Chrome `ph:"C"`), e.g. per-`Cat` bytes.
+    Counter { ts_us: u64, sub: Subsys, name: &'static str, val: u64 },
+    /// A message in flight: stamped by the sender, recorded by the
+    /// receiver (Chrome `ph:"X"` on the receiver's comm lane).
+    Flight { send_us: u64, recv_us: u64, src: u32, tag: u32, bytes: u64 },
+    /// A complete span recorded after the fact (Chrome `ph:"X"`), e.g. a
+    /// request's enqueue→completion lifetime.
+    Complete { start_us: u64, end_us: u64, sub: Subsys, name: &'static str, arg: u64 },
+}
+
+/// One rank's finished event stream.
+#[derive(Debug, Clone, Default)]
+pub struct TraceBuffer {
+    pub rank: usize,
+    pub events: Vec<Ev>,
+    /// Oldest events overwritten because the ring filled.
+    pub dropped: u64,
+}
+
+struct Recorder {
+    rank: usize,
+    ring: Vec<Ev>,
+    cap: usize,
+    /// Next slot to overwrite once the ring has wrapped.
+    head: usize,
+    wrapped: bool,
+    dropped: u64,
+}
+
+impl Recorder {
+    fn push(&mut self, ev: Ev) {
+        if self.ring.len() < self.cap {
+            self.ring.push(ev);
+        } else {
+            self.ring[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.wrapped = true;
+            self.dropped += 1;
+        }
+    }
+
+    fn into_buffer(self) -> TraceBuffer {
+        let mut events = self.ring;
+        if self.wrapped {
+            // Restore chronological order: oldest surviving event first.
+            events.rotate_left(self.head);
+        }
+        TraceBuffer { rank: self.rank, events, dropped: self.dropped }
+    }
+}
+
+thread_local! {
+    static ACTIVE: Cell<bool> = const { Cell::new(false) };
+    static RECORDER: RefCell<Option<Recorder>> = const { RefCell::new(None) };
+}
+
+/// Process-wide time origin, initialised by the first rank that starts
+/// tracing — shared across rank threads so merged timelines align.
+static ORIGIN: OnceLock<Instant> = OnceLock::new();
+
+/// Default ring capacity (events per rank); override with
+/// `GPTAP_TRACE_CAP` when a run is long enough to wrap.
+const DEFAULT_CAP: usize = 1 << 18;
+
+fn ring_cap() -> usize {
+    std::env::var("GPTAP_TRACE_CAP")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&c| c > 0)
+        .unwrap_or(DEFAULT_CAP)
+}
+
+/// Is tracing active on this rank thread?  One TLS read — this is the
+/// entire disabled-path cost of every hook.
+#[inline]
+pub fn enabled() -> bool {
+    ACTIVE.with(|a| a.get())
+}
+
+/// Microseconds since the shared origin.  Returns at least 1 so a zero
+/// wire stamp can keep meaning "sender was not tracing".
+pub fn now_us() -> u64 {
+    let origin = *ORIGIN.get_or_init(Instant::now);
+    (origin.elapsed().as_micros() as u64).max(1)
+}
+
+/// Start recording on the calling rank thread.  Call at the top of the
+/// rank closure; pair with [`rank_take`] before the closure returns.
+pub fn rank_begin(rank: usize) {
+    rank_begin_with_cap(rank, ring_cap());
+}
+
+/// [`rank_begin`] with an explicit ring capacity (tests sweep small
+/// rings without racing on the process environment).
+pub fn rank_begin_with_cap(rank: usize, cap: usize) {
+    ORIGIN.get_or_init(Instant::now);
+    let cap = cap.max(1);
+    RECORDER.with(|r| {
+        *r.borrow_mut() = Some(Recorder {
+            rank,
+            ring: Vec::with_capacity(cap.min(4096)),
+            cap,
+            head: 0,
+            wrapped: false,
+            dropped: 0,
+        });
+    });
+    ACTIVE.with(|a| a.set(true));
+}
+
+/// Stop recording and hand back this rank's events.  Returns an empty
+/// buffer if [`rank_begin`] was never called on this thread.
+pub fn rank_take() -> TraceBuffer {
+    ACTIVE.with(|a| a.set(false));
+    RECORDER
+        .with(|r| r.borrow_mut().take())
+        .map(Recorder::into_buffer)
+        .unwrap_or_default()
+}
+
+fn record(ev: Ev) {
+    RECORDER.with(|r| {
+        if let Some(rec) = r.borrow_mut().as_mut() {
+            rec.push(ev);
+        }
+    });
+}
+
+/// RAII span guard: records `Begin` on creation and `End` on drop.  Bind
+/// it (`let _sp = obs::span(...)`) so the span covers the scope.
+#[must_use = "bind the span guard or the span closes immediately"]
+pub struct Span {
+    live: bool,
+    sub: Subsys,
+    name: &'static str,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if self.live {
+            record(Ev::End { ts_us: now_us(), sub: self.sub, name: self.name });
+        }
+    }
+}
+
+/// Open a span on `sub` named `name` with one integer argument (level,
+/// ticket, byte count, ... — whatever identifies the instance).
+#[inline]
+pub fn span(sub: Subsys, name: &'static str, arg: u64) -> Span {
+    if !enabled() {
+        return Span { live: false, sub, name };
+    }
+    record(Ev::Begin { ts_us: now_us(), sub, name, arg });
+    Span { live: true, sub, name }
+}
+
+/// Record a point event.
+#[inline]
+pub fn instant(sub: Subsys, name: &'static str, arg: u64) {
+    if enabled() {
+        record(Ev::Instant { ts_us: now_us(), sub, name, arg });
+    }
+}
+
+/// Sample a counter (rendered as a stacked chart in Perfetto).
+#[inline]
+pub fn counter(sub: Subsys, name: &'static str, val: u64) {
+    if enabled() {
+        record(Ev::Counter { ts_us: now_us(), sub, name, val });
+    }
+}
+
+/// Record a message flight observed by the *receiver*: `send_us` is the
+/// sender's wire stamp, `recv_us` the receiver's delivery time.
+#[inline]
+pub fn flight(src: u32, tag: u32, bytes: u64, send_us: u64, recv_us: u64) {
+    if enabled() {
+        record(Ev::Flight { send_us, recv_us, src, tag, bytes });
+    }
+}
+
+/// Record a complete span after the fact (start and end already known).
+#[inline]
+pub fn complete(sub: Subsys, name: &'static str, arg: u64, start_us: u64, end_us: u64) {
+    if enabled() {
+        record(Ev::Complete { start_us, end_us, sub, name, arg });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Spans recorded through the RAII guard balance and nest per rank:
+    /// every `Begin` has a matching `End` on the same lane, LIFO order.
+    #[test]
+    fn spans_nest_and_balance() {
+        rank_begin(0);
+        {
+            let _outer = span(Subsys::Mg, "cycle", 0);
+            {
+                let _inner = span(Subsys::Mg, "smooth.pre", 1);
+                instant(Subsys::Comm, "halo", 42);
+            }
+            let _sibling = span(Subsys::Ptap, "numeric", 2);
+        }
+        let buf = rank_take();
+        assert_eq!(buf.dropped, 0);
+        let mut stack: Vec<(&str, u32)> = Vec::new();
+        let mut begins = 0;
+        let mut ends = 0;
+        for ev in &buf.events {
+            match *ev {
+                Ev::Begin { sub, name, .. } => {
+                    begins += 1;
+                    stack.push((name, sub.tid()));
+                }
+                Ev::End { sub, name, .. } => {
+                    ends += 1;
+                    let (top, tid) = stack.pop().expect("End without Begin");
+                    assert_eq!((top, tid), (name, sub.tid()), "spans must close LIFO");
+                }
+                _ => {}
+            }
+        }
+        assert_eq!(begins, 3);
+        assert_eq!(ends, 3);
+        assert!(stack.is_empty(), "unbalanced spans: {stack:?}");
+    }
+
+    /// With no recorder armed, hooks record nothing and allocate nothing.
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        assert!(!enabled());
+        {
+            let _sp = span(Subsys::Session, "dispatch", 7);
+            instant(Subsys::Session, "enqueue", 1);
+            counter(Subsys::Mem, "A", 1024);
+            flight(0, 5, 100, 10, 20);
+            complete(Subsys::Session, "request", 1, 10, 20);
+        }
+        // Arming afterwards must start from an empty ring: nothing leaked
+        // from the disabled period.
+        rank_begin(3);
+        let buf = rank_take();
+        assert_eq!(buf.rank, 3);
+        assert!(buf.events.is_empty());
+        assert_eq!(buf.dropped, 0);
+    }
+
+    /// The ring drops the *oldest* events and reports the count.
+    #[test]
+    fn ring_overflow_drops_oldest() {
+        rank_begin_with_cap(1, 4);
+        for i in 0..6 {
+            instant(Subsys::Solve, "tick", i);
+        }
+        let buf = rank_take();
+        assert_eq!(buf.events.len(), 4);
+        assert_eq!(buf.dropped, 2);
+        let args: Vec<u64> = buf
+            .events
+            .iter()
+            .map(|e| match e {
+                Ev::Instant { arg, .. } => *arg,
+                _ => panic!("unexpected event"),
+            })
+            .collect();
+        assert_eq!(args, vec![2, 3, 4, 5], "oldest events drop first");
+    }
+}

@@ -1,0 +1,73 @@
+//! Per-phase summary: modeled vs calibrated vs measured wall time.
+//!
+//! The α-β model (`CommStats::modeled_secs`) and its calibrated variant
+//! (`Time_cal`, DESIGN.md §7) predict communication cost from message
+//! counts and sizes; the measured column is real wall time (max over
+//! ranks).  Printing the three side by side per phase is ROADMAP item
+//! 6's convergence check: where the columns diverge is where the model
+//! is missing a term (e.g. the close-barrier idle time the comm stats
+//! now attribute separately).
+
+use crate::util::fmt_secs;
+use crate::util::table::Table;
+
+/// One phase's worth of evidence.
+#[derive(Debug, Clone)]
+pub struct PhaseRow {
+    pub phase: &'static str,
+    /// α-β modeled communication seconds plus measured busy compute.
+    pub modeled: f64,
+    /// Same, with the calibrated per-message α (`Time_cal`).
+    pub calibrated: f64,
+    /// Real wall seconds, max over ranks.
+    pub measured: f64,
+    pub msgs: u64,
+    pub bytes: u64,
+}
+
+/// Render the modeled/calibrated/measured table for a set of phases.
+pub fn phase_table(rows: &[PhaseRow]) -> Table {
+    let mut t = Table::new(vec!["Phase", "Modeled", "Calibrated", "Measured", "Msgs", "Bytes"]);
+    for r in rows {
+        t.row(vec![
+            r.phase.to_string(),
+            fmt_secs(r.modeled),
+            fmt_secs(r.calibrated),
+            fmt_secs(r.measured),
+            r.msgs.to_string(),
+            r.bytes.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_has_one_row_per_phase() {
+        let rows = vec![
+            PhaseRow {
+                phase: "build",
+                modeled: 1.5e-3,
+                calibrated: 1.2e-3,
+                measured: 2.0e-3,
+                msgs: 10,
+                bytes: 1024,
+            },
+            PhaseRow {
+                phase: "solve",
+                modeled: 4.0e-3,
+                calibrated: 3.5e-3,
+                measured: 5.0e-3,
+                msgs: 40,
+                bytes: 8192,
+            },
+        ];
+        let t = phase_table(&rows);
+        assert_eq!(t.n_rows(), 2);
+        let s = t.render();
+        assert!(s.contains("build") && s.contains("Calibrated"));
+    }
+}

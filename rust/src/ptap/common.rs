@@ -346,6 +346,9 @@ pub struct ScatterPipeline {
     writers: Vec<Option<ByteWriter>>,
     rows_staged: Vec<usize>,
     first_isend_busy: Option<f64>,
+    /// Trace timestamp of the first posted chunk (tracing runs only) —
+    /// the overlap window becomes a visible span in the merged trace.
+    first_isend_us: Option<u64>,
     /// Messages/payload bytes posted (chunks count as messages).
     pub msgs: u64,
     pub bytes: u64,
@@ -362,6 +365,7 @@ impl ScatterPipeline {
             writers: (0..np).map(|_| None).collect(),
             rows_staged: vec![0; np],
             first_isend_busy: None,
+            first_isend_us: None,
             msgs: 0,
             bytes: 0,
             overlap: 0.0,
@@ -396,6 +400,9 @@ impl ScatterPipeline {
                 self.bytes += payload.len() as u64;
                 if self.first_isend_busy.is_none() {
                     self.first_isend_busy = Some(thread_cpu_time());
+                    if crate::obs::enabled() {
+                        self.first_isend_us = Some(crate::obs::now_us());
+                    }
                 }
                 comm.isend(dest, self.tag, payload);
             }
@@ -418,6 +425,10 @@ impl ScatterPipeline {
         let recvd = comm.drain(self.tag);
         if let Some(t0) = self.first_isend_busy.take() {
             self.overlap = thread_cpu_time() - t0;
+        }
+        if let Some(us0) = self.first_isend_us.take() {
+            let end = crate::obs::now_us();
+            crate::obs::complete(crate::obs::Subsys::Ptap, "overlap", self.bytes, us0, end);
         }
         recvd
     }

@@ -93,6 +93,7 @@ impl Ptap {
         p: &DistCsr,
         tracker: &MemTracker,
     ) -> Ptap {
+        let _sp = crate::obs::span(crate::obs::Subsys::Ptap, "symbolic", algo as u64);
         let mut stats = PtapStats::default();
         let mut timer = BusyTimer::new();
         timer.start();
@@ -138,12 +139,16 @@ impl Ptap {
     /// Numeric phase (collective, re-runnable): refresh P̃_r values and
     /// fill C's values.
     pub fn numeric(&mut self, comm: &Comm, a: &DistCsr, p: &DistCsr) {
+        let _sp = crate::obs::span(crate::obs::Subsys::Ptap, "numeric", self.algo as u64);
         let mut timer = BusyTimer::new();
         timer.start();
         // Alg. 4 line 3: update P̃_r with a sparse communication — served
         // in pipelined chunks, so the refresh's traffic and its overlap
         // window are measured and credited like the scatter phases'.
-        let gw = self.plan.update_values_csr(comm, p, &mut self.pr);
+        let gw = {
+            let _gw_sp = crate::obs::span(crate::obs::Subsys::Ptap, "gather_values", 0);
+            self.plan.update_values_csr(comm, p, &mut self.pr)
+        };
         self.stats.num_msgs += gw.msgs;
         self.stats.num_bytes += gw.bytes;
         self.stats.num_overlap += gw.overlap;

@@ -122,6 +122,11 @@ impl HierarchyRefresher {
     }
 
     fn refresh_walk(&mut self, comm: &Comm) -> &RefreshStats {
+        let _sp = crate::obs::span(
+            crate::obs::Subsys::Refresh,
+            "refresh",
+            self.refreshes.len() as u64,
+        );
         let before_global = comm.stats_global();
         let before_ptap = ptap_sum(&self.retained);
         let before_reuses = self.pc.halo_reuses();
@@ -133,6 +138,7 @@ impl HierarchyRefresher {
         let mut cur = comm.clone();
         let nlev = h.levels.len();
         for k in 0..nlev {
+            crate::obs::instant(crate::obs::Subsys::Refresh, "refresh.level", k as u64);
             let (head, tail) = h.levels.split_at_mut(k + 1);
             let lvl = &mut head[k];
             let Some(p) = &mut lvl.p else {

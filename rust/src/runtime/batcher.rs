@@ -120,6 +120,7 @@ impl<'rt> TripleBatcher<'rt> {
         let bb = self.b * self.b;
         let n = self.tags.len();
         self.flushes += 1;
+        let _sp = crate::obs::span(crate::obs::Subsys::Batch, "triple.flush", n as u64);
         match self.backend {
             BlockBackend::Native => {
                 let mut out = vec![0.0f64; bb];
@@ -259,6 +260,7 @@ impl<'rt> SpmvBatcher<'rt> {
         let bb = b * b;
         let n = self.tags.len();
         self.flushes += 1;
+        let _sp = crate::obs::span(crate::obs::Subsys::Batch, "spmv.flush", n as u64);
         match self.backend {
             BlockBackend::Native => {
                 let mut out = vec![0.0f64; b];

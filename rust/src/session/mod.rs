@@ -171,6 +171,19 @@ pub struct QueuedSolve {
     pub ticket: u64,
     pub x: DistVec,
     pub result: SolveResult,
+    /// Seconds this request sat in the queue before its batch dispatched.
+    pub queue_wait: f64,
+    /// Seconds from `submit` to batch completion (queue wait + solve).
+    pub e2e: f64,
+}
+
+/// One pending right-hand side with its latency bookkeeping.
+struct Pending {
+    ticket: u64,
+    b: DistVec,
+    submitted: Instant,
+    /// Trace timestamp at submit (0 when tracing was off at submit).
+    submit_us: u64,
 }
 
 /// Accumulates pending right-hand sides and dispatches them as one
@@ -181,7 +194,7 @@ pub struct QueuedSolve {
 pub struct RequestQueue {
     capacity: usize,
     deadline: Duration,
-    pending: Vec<(u64, DistVec)>,
+    pending: Vec<Pending>,
     next_ticket: u64,
     oldest: Option<Instant>,
     /// Batches dispatched.
@@ -212,7 +225,13 @@ impl RequestQueue {
         if self.pending.is_empty() {
             self.oldest = Some(Instant::now());
         }
-        self.pending.push((ticket, b));
+        let submit_us = if crate::obs::enabled() {
+            crate::obs::instant(crate::obs::Subsys::Session, "enqueue", ticket);
+            crate::obs::now_us()
+        } else {
+            0
+        };
+        self.pending.push(Pending { ticket, b, submitted: Instant::now(), submit_us });
         ticket
     }
 
@@ -257,17 +276,44 @@ impl RequestQueue {
         }
         let pending = std::mem::take(&mut self.pending);
         self.oldest = None;
+        crate::obs::instant(
+            crate::obs::Subsys::Session,
+            "flush.decide",
+            pending.len() as u64,
+        );
 
-        let cols: Vec<&DistVec> = pending.iter().map(|(_, b)| b).collect();
+        let dispatch_start = Instant::now();
+        let cols: Vec<&DistVec> = pending.iter().map(|p| &p.b).collect();
         let b = DistMultiVec::from_columns(&cols);
         let mut x = DistMultiVec::zeros(b.layout.clone(), b.rank, b.k);
         let _scratch = Charge::new(tracker, Cat::MultiVec, b.bytes() + x.bytes());
-        let results = pcg_multi(comm, a, &b, &mut x, pc, rtol, max_iters);
+        let results = {
+            let _sp = crate::obs::span(crate::obs::Subsys::Session, "dispatch", b.k as u64);
+            pcg_multi(comm, a, &b, &mut x, pc, rtol, max_iters)
+        };
+        let dispatch_end = Instant::now();
         pending
             .into_iter()
             .zip(results)
             .enumerate()
-            .map(|(j, ((ticket, _), result))| QueuedSolve { ticket, x: x.column(j), result })
+            .map(|(j, (p, result))| {
+                if crate::obs::enabled() && p.submit_us != 0 {
+                    crate::obs::complete(
+                        crate::obs::Subsys::Session,
+                        "request",
+                        p.ticket,
+                        p.submit_us,
+                        crate::obs::now_us(),
+                    );
+                }
+                QueuedSolve {
+                    ticket: p.ticket,
+                    x: x.column(j),
+                    result,
+                    queue_wait: (dispatch_start - p.submitted).as_secs_f64(),
+                    e2e: (dispatch_end - p.submitted).as_secs_f64(),
+                }
+            })
             .collect()
     }
 }
@@ -409,6 +455,7 @@ mod tests {
             // each batched column is bitwise the solo solve
             for (s, d) in done.iter().enumerate() {
                 assert_eq!(d.ticket, s as u64);
+                assert!(d.queue_wait >= 0.0 && d.e2e >= d.queue_wait, "latency ordering");
                 let mut x = DistVec::zeros(layout.clone(), c.rank());
                 let res = pcg(&c, &op, &rhs(s), &mut x, None, 1e-10, 400);
                 assert_eq!(d.x.vals, x.vals, "column {s} diverged from solo solve");

@@ -110,3 +110,73 @@ fn random_chunked_pipeline_matches_bulk_exchange() {
         }
     }
 }
+
+/// Tracing is observation only: the same chunked engine schedule with a
+/// per-rank recorder armed must fold bit-identically to the untraced run
+/// (the send-stamp frame extension and flight recording change no
+/// delivery order and no payload bytes).
+#[test]
+fn traced_schedule_folds_bitwise_identical_to_untraced() {
+    let run = |traced: bool| {
+        World::new(NP).run(move |c| {
+            if traced {
+                galerkin_ptap::obs::rank_begin(c.rank());
+            }
+            let mut rng = Rng::new(42 + c.rank() as u64);
+            let mut acc = vec![0.0f64; ROWS];
+            let mut writers: Vec<ByteWriter> = (0..NP).map(|_| ByteWriter::new()).collect();
+            let mut staged = [0usize; NP];
+            let mut chunk = 1 + rng.below(7);
+            for (dest, row, val) in contributions(c.rank()) {
+                writers[dest].u32(row);
+                writers[dest].f64(val);
+                staged[dest] += 1;
+                if staged[dest] >= chunk {
+                    let w = std::mem::take(&mut writers[dest]);
+                    c.isend(dest, tag::PTAP_NUM, w.into_bytes());
+                    staged[dest] = 0;
+                    chunk = 1 + rng.below(7);
+                }
+                if rng.below(5) == 0 {
+                    for (_src, payload) in c.try_recv_any(tag::PTAP_NUM) {
+                        fold(&mut acc, &payload);
+                    }
+                }
+            }
+            for (dest, w) in writers.into_iter().enumerate() {
+                if !w.is_empty() {
+                    c.isend(dest, tag::PTAP_NUM, w.into_bytes());
+                }
+            }
+            for (_src, payload) in c.drain(tag::PTAP_NUM) {
+                fold(&mut acc, &payload);
+            }
+            let stats = c.stats_global();
+            let buf = if traced {
+                Some(galerkin_ptap::obs::rank_take())
+            } else {
+                None
+            };
+            (acc, stats, buf)
+        })
+    };
+    let untraced = run(false);
+    let traced = run(true);
+    for (rank, ((got, ts, buf), (want, us, _))) in traced.iter().zip(&untraced).enumerate() {
+        for (row, (g, w)) in got.iter().zip(want).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "rank {rank} row {row}: {g} vs {w}");
+        }
+        assert_eq!(
+            (ts.msgs, ts.bytes),
+            (us.msgs, us.bytes),
+            "rank {rank}: tracing must not change message accounting"
+        );
+        let buf = buf.as_ref().unwrap();
+        assert!(
+            buf.events.iter().any(|e| matches!(e, galerkin_ptap::obs::Ev::Flight { .. })),
+            "rank {rank}: traced run must record message flights"
+        );
+        assert!(ts.flight_msgs > 0, "rank {rank}: stamped frames must be observed");
+        assert_eq!(us.flight_msgs, 0, "untraced senders must leave a zero stamp");
+    }
+}

@@ -1,0 +1,120 @@
+//! End-to-end tracing integration: a 2-rank MG-PCG solve with per-rank
+//! recorders armed must merge into a schema-valid Chrome trace (balanced
+//! spans per rank/subsystem, message flights, memory counter samples),
+//! and tracing must be observation-only — the traced solve's residual
+//! history, message accounting, and tracker bytes are identical to the
+//! untraced run's.
+
+use galerkin_ptap::dist::{CommStats, CsrOperator, DistSpmv, DistVec, World};
+use galerkin_ptap::gen::{grid_laplacian, Grid3};
+use galerkin_ptap::mem::MemTracker;
+use galerkin_ptap::mg::{
+    build_hierarchy, geometric_chain, pcg, Coarsening, HierarchyConfig, MgOpts, MgPreconditioner,
+};
+use galerkin_ptap::obs;
+
+const NP: usize = 2;
+
+/// Per-rank outcome: residual history, rank-global comm stats, peak
+/// tracker bytes, and (when traced) the rank's event buffer.
+type RankOutcome = (Vec<f64>, CommStats, u64, Option<obs::TraceBuffer>);
+
+/// One MG-PCG solve on a 3-level geometric chain, on every rank.
+fn solve_once(traced: bool) -> Vec<RankOutcome> {
+    World::new(NP).run(move |c| {
+        if traced {
+            obs::rank_begin(c.rank());
+        }
+        let tracker = MemTracker::new();
+        let grids = geometric_chain(Grid3::cube(3), 3);
+        let a0 = grid_laplacian(grids[0], c.rank(), c.size());
+        let layout = a0.row_layout.clone();
+        let h = build_hierarchy(
+            &c,
+            a0.clone(),
+            &Coarsening::Geometric { grids },
+            HierarchyConfig::default(),
+            &tracker,
+        );
+        let spmv = DistSpmv::new(&c, &a0);
+        let op = CsrOperator::new(&a0, &spmv);
+        let mut pc = MgPreconditioner::new(&c, h, MgOpts::default());
+        let b = DistVec::from_fn(layout.clone(), c.rank(), |g| ((g % 11) as f64) - 5.0);
+        let mut x = DistVec::zeros(layout, c.rank());
+        let res = pcg(&c, &op, &b, &mut x, Some(&mut pc), 1e-8, 60);
+        assert!(res.converged, "trace-test solve must converge");
+        let buf = if traced { Some(obs::rank_take()) } else { None };
+        (res.residuals, c.stats_global(), tracker.peak_total(), buf)
+    })
+}
+
+#[test]
+fn traced_solve_produces_valid_chrome_trace() {
+    let ranks = solve_once(true);
+    let bufs: Vec<obs::TraceBuffer> =
+        ranks.iter().map(|r| r.3.clone().expect("traced rank must yield a buffer")).collect();
+    assert_eq!(bufs.len(), NP);
+    for (rank, buf) in bufs.iter().enumerate() {
+        assert_eq!(buf.rank, rank);
+        assert_eq!(buf.dropped, 0, "smoke-scale solve must fit the ring");
+        // every SpanBegin has a matching SpanEnd, LIFO per subsystem
+        let mut stacks: std::collections::HashMap<u32, Vec<&'static str>> =
+            std::collections::HashMap::new();
+        for ev in &buf.events {
+            match *ev {
+                obs::Ev::Begin { sub, name, .. } => stacks.entry(sub.tid()).or_default().push(name),
+                obs::Ev::End { sub, name, .. } => {
+                    let open = stacks.get_mut(&sub.tid()).and_then(Vec::pop);
+                    assert_eq!(open, Some(name), "rank {rank}: unbalanced span {name}");
+                }
+                _ => {}
+            }
+        }
+        for (tid, stack) in &stacks {
+            assert!(stack.is_empty(), "rank {rank} tid {tid}: spans left open: {stack:?}");
+        }
+        // the solve must have produced per-level cycle spans, flights,
+        // and memory counter samples on every rank
+        let evs = &buf.events;
+        assert!(
+            evs.iter().any(|e| matches!(e, obs::Ev::Begin { name: "level", .. })),
+            "rank {rank}: no V-cycle level spans"
+        );
+        assert!(
+            evs.iter().any(|e| matches!(e, obs::Ev::Begin { name: "symbolic", .. })),
+            "rank {rank}: no PtAP symbolic span"
+        );
+        assert!(
+            evs.iter().any(|e| matches!(e, obs::Ev::Flight { .. })),
+            "rank {rank}: no message flights"
+        );
+        assert!(
+            evs.iter().any(|e| matches!(e, obs::Ev::Counter { .. })),
+            "rank {rank}: no memory counter samples"
+        );
+    }
+    // the merged artifact must validate as a Chrome trace
+    let text = obs::chrome::render_chrome_trace(&bufs);
+    let summary = obs::chrome::validate_chrome_trace(&text).expect("merged trace must validate");
+    assert_eq!(summary.ranks, NP);
+    assert!(summary.spans > 0 && summary.flights > 0 && summary.counters > 0, "{summary:?}");
+}
+
+#[test]
+fn tracing_is_observation_only() {
+    let untraced = solve_once(false);
+    let traced = solve_once(true);
+    for (rank, (t, u)) in traced.iter().zip(&untraced).enumerate() {
+        assert_eq!(
+            t.0, u.0,
+            "rank {rank}: residual history must be bitwise identical with tracing on"
+        );
+        assert_eq!(
+            (t.1.msgs, t.1.bytes),
+            (u.1.msgs, u.1.bytes),
+            "rank {rank}: tracing must not change message accounting"
+        );
+        assert_eq!(t.2, u.2, "rank {rank}: tracing must not change tracker bytes");
+        assert!(u.3.is_none(), "untraced run must not allocate a buffer");
+    }
+}
