@@ -649,16 +649,7 @@ pub struct ThroughputCell {
     pub solve_p99: f64,
 }
 
-/// Nearest-rank percentile of an unsorted sample (p in [0, 100]).
-pub fn percentile(samples: &[f64], p: f64) -> f64 {
-    if samples.is_empty() {
-        return 0.0;
-    }
-    let mut s = samples.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let idx = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
-    s[idx.min(s.len() - 1)]
-}
+pub use crate::util::stats::percentile;
 
 /// Run the multi-RHS throughput bench: for each K in `ks`, queue K
 /// requests against the same geometric MG hierarchy and flush them as
@@ -742,6 +733,103 @@ fn throughput_cell(coarse: Grid3, levels: usize, np: usize, kk: usize) -> Throug
         solve_p50: percentile(&e2e, 50.0),
         solve_p95: percentile(&e2e, 95.0),
         solve_p99: percentile(&e2e, 99.0),
+    }
+}
+
+/// Telemetry-overhead cell: the same MG-PCG solve timed with the metrics
+/// registry disarmed and armed.  The numerics must be bitwise identical
+/// between the modes (asserted per rank inside the bench); the reported
+/// fraction is the gated `telemetry_overhead_frac` bench cell.
+#[derive(Debug, Clone)]
+pub struct TelemetryCell {
+    pub np: usize,
+    /// Max-busy-rank seconds with telemetry disarmed (min over repeats).
+    pub solve_secs_off: f64,
+    /// Same solve with the metrics registry armed (min over repeats).
+    pub solve_secs_on: f64,
+    /// `max(0, (on - off) / off)` — the enabled-path overhead fraction.
+    pub overhead_frac: f64,
+    /// Distinct metric series the armed solve registered (merged across
+    /// ranks) — guards against the cell passing because nothing recorded.
+    pub metrics_registered: usize,
+}
+
+/// Run the telemetry-overhead bench: warm up once, then time `repeats`
+/// identical MG-PCG solves disarmed and `repeats` armed, reporting the
+/// min-over-repeats of the max-busy rank for each mode.  Every repeat's
+/// residual history is asserted bitwise equal to the warmup's, so the
+/// cell doubles as an observation-only check.
+pub fn run_telemetry_overhead_bench(
+    coarse: Grid3,
+    levels: usize,
+    np: usize,
+    repeats: usize,
+) -> TelemetryCell {
+    use crate::util::timer::BusyTimer;
+    assert!(repeats >= 1, "telemetry bench needs at least one repeat");
+    let world = World::new(np);
+    let grids = geometric_chain(coarse, levels);
+    let per_rank = world.run(|comm| {
+        let tracker = MemTracker::new();
+        let a0 = grid_laplacian(grids[0], comm.rank(), comm.size());
+        let layout = a0.row_layout.clone();
+        let h = build_hierarchy(
+            &comm,
+            a0.clone(),
+            &Coarsening::Geometric { grids: grids.clone() },
+            HierarchyConfig::default(),
+            &tracker,
+        );
+        let spmv = DistSpmv::new(&comm, &a0);
+        let op = CsrOperator::new(&a0, &spmv);
+        let mut pc = MgPreconditioner::new(&comm, h, MgOpts::default());
+        let b = DistVec::from_fn(layout.clone(), comm.rank(), |g| {
+            (((g * 7) % 23) as f64 - 11.0) / 11.0
+        });
+        let mut solve = |pc: &mut MgPreconditioner| {
+            let mut x = DistVec::zeros(layout.clone(), comm.rank());
+            let mut t = BusyTimer::new();
+            t.start();
+            let res = pcg(&comm, &op, &b, &mut x, Some(pc), 1e-8, 60);
+            t.stop();
+            (t.total(), res.residuals)
+        };
+        let (_, base) = solve(&mut pc); // warmup
+        let mut off = Vec::with_capacity(repeats);
+        for _ in 0..repeats {
+            let (secs, r) = solve(&mut pc);
+            assert_eq!(r, base, "disarmed repeat drifted from warmup");
+            off.push(secs);
+        }
+        crate::obs::metrics::rank_begin(comm.rank());
+        let mut on = Vec::with_capacity(repeats);
+        for _ in 0..repeats {
+            let (secs, r) = solve(&mut pc);
+            assert_eq!(r, base, "telemetry perturbed the numerics");
+            on.push(secs);
+        }
+        let snap = crate::obs::metrics::rank_take();
+        let merged = crate::obs::metrics::merge_global(&comm, &snap);
+        (off, on, merged.entries.len())
+    });
+    let mut best_off = f64::INFINITY;
+    let mut best_on = f64::INFINITY;
+    for rep in 0..repeats {
+        let off = per_rank.iter().map(|r| r.0[rep]).fold(0.0f64, f64::max);
+        let on = per_rank.iter().map(|r| r.1[rep]).fold(0.0f64, f64::max);
+        best_off = best_off.min(off);
+        best_on = best_on.min(on);
+    }
+    TelemetryCell {
+        np,
+        solve_secs_off: best_off,
+        solve_secs_on: best_on,
+        overhead_frac: if best_off > 0.0 {
+            ((best_on - best_off) / best_off).max(0.0)
+        } else {
+            0.0
+        },
+        metrics_registered: per_rank[0].2,
     }
 }
 

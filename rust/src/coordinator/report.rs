@@ -8,7 +8,7 @@ use crate::util::{fmt_secs, mb};
 
 use super::experiment::{
     BlockKernelCell, HierarchyBenchResult, Level0Cell, ModelProblemResult, NeutronResult,
-    ThroughputCell, TimedepResult,
+    TelemetryCell, ThroughputCell, TimedepResult,
 };
 
 /// Speedups relative to the smallest rank count *within one algorithm*
@@ -170,10 +170,11 @@ pub fn timedep_table(r: &TimedepResult) -> Table {
 /// timedep refresh cell (symbolic build time vs per-refresh numeric time
 /// and bytes); one record per level-0 operator cell (apply seconds,
 /// operator bytes, flops/byte, matrix-free memory delta); one record
-/// per batched block-kernel cell; and one record per multi-RHS
+/// per batched block-kernel cell; one record per multi-RHS
 /// throughput cell (per-solve message/byte share and solves/sec vs the
-/// batch width K) — the numbers [`diff_bench`] compares across PRs.
-/// Hand-rolled JSON (no serde offline).
+/// batch width K); and one record per telemetry-overhead cell (armed vs
+/// disarmed busy seconds and their ratio) — the numbers [`diff_bench`]
+/// compares across PRs.  Hand-rolled JSON (no serde offline).
 pub fn write_bench_json(
     rows: &[ModelProblemResult],
     hier: &[HierarchyBenchResult],
@@ -181,6 +182,7 @@ pub fn write_bench_json(
     level0: &[Level0Cell],
     block: &[BlockKernelCell],
     throughput: &[ThroughputCell],
+    telemetry: &[TelemetryCell],
     path: &Path,
 ) -> std::io::Result<()> {
     let fmt_list = |v: &[u64]| -> String {
@@ -315,6 +317,20 @@ pub fn write_bench_json(
             if i + 1 < throughput.len() { "," } else { "" }
         ));
     }
+    s.push_str("  ],\n  \"telemetry\": [\n");
+    for (i, c) in telemetry.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"kind\": \"telemetry\", \"np\": {}, \
+             \"solve_secs_off\": {:.6e}, \"solve_secs_on\": {:.6e}, \
+             \"telemetry_overhead_frac\": {:.6e}, \"metrics_registered\": {}}}{}\n",
+            c.np,
+            c.solve_secs_off,
+            c.solve_secs_on,
+            c.overhead_frac,
+            c.metrics_registered,
+            if i + 1 < telemetry.len() { "," } else { "" }
+        ));
+    }
     s.push_str("  ]\n}\n");
     std::fs::write(path, s)
 }
@@ -402,7 +418,7 @@ fn cell_key(cell: &BenchCell) -> String {
 /// Metrics the regression gate watches, with per-metric absolute floors
 /// (modeled times at smoke scale sit in the microsecond range where
 /// scheduler noise dominates; counters and bytes are deterministic).
-const DIFF_METRICS: [(&str, f64); 24] = [
+const DIFF_METRICS: [(&str, f64); 25] = [
     ("time_sym_modeled", 1e-3),
     ("time_num_modeled", 1e-3),
     ("time_cal_modeled", 1e-3),
@@ -439,6 +455,10 @@ const DIFF_METRICS: [(&str, f64); 24] = [
     // latency per request must not grow (floored — scheduler noise)
     ("queue_wait_p99", 1e-3),
     ("solve_p99", 1e-3),
+    // telemetry cells: the armed metrics path must stay within its
+    // budget — an absolute floor of 5 points keeps busy-time noise at
+    // smoke scale from tripping the gate while real hook bloat does
+    ("telemetry_overhead_frac", 0.05),
 ];
 
 /// Higher-is-better metrics: a DROP is the regression.  The second field
@@ -537,9 +557,9 @@ pub fn diff_bench(old: &str, new: &str, tol: f64) -> Vec<String> {
 pub fn write_results(table: &Table, name: &str) {
     let path = Path::new("results").join(format!("{name}.tsv"));
     if let Err(e) = table.write_tsv(&path) {
-        eprintln!("warning: could not write {}: {e}", path.display());
+        crate::log_warn!("could not write {}: {e}", path.display());
     } else {
-        println!("  -> {}", path.display());
+        crate::log_info!("  -> {}", path.display());
     }
 }
 
@@ -643,6 +663,16 @@ mod tests {
         }]
     }
 
+    fn sample_telemetry() -> Vec<TelemetryCell> {
+        vec![TelemetryCell {
+            np: 2,
+            solve_secs_off: 1.00e-3,
+            solve_secs_on: 1.02e-3,
+            overhead_frac: 0.02,
+            metrics_registered: 30,
+        }]
+    }
+
     fn sample_throughput() -> Vec<ThroughputCell> {
         vec![ThroughputCell {
             scenario: "mgpcg",
@@ -673,6 +703,7 @@ mod tests {
             &sample_level0(),
             &sample_block(),
             &sample_throughput(),
+            &sample_telemetry(),
             &path,
         )
         .unwrap();
@@ -695,6 +726,9 @@ mod tests {
         assert!(s.contains("\"msgs_per_solve\""), "{s}");
         assert!(s.contains("\"queue_wait_p99\""), "{s}");
         assert!(s.contains("\"solve_p99\""), "{s}");
+        assert!(s.contains("\"kind\": \"telemetry\""), "{s}");
+        assert!(s.contains("\"telemetry_overhead_frac\""), "{s}");
+        assert!(s.contains("\"metrics_registered\": 30"), "{s}");
         let _ = std::fs::remove_file(&path);
     }
 
@@ -708,6 +742,7 @@ mod tests {
             &sample_level0(),
             &sample_block(),
             &sample_throughput(),
+            &sample_telemetry(),
             &path,
         )
         .unwrap();
@@ -716,8 +751,8 @@ mod tests {
         let cells = parse_bench_cells(&s);
         assert_eq!(
             cells.len(),
-            7,
-            "model + hierarchy + refresh + 2 level0 + block + throughput"
+            8,
+            "model + hierarchy + refresh + 2 level0 + block + throughput + telemetry"
         );
         assert_eq!(cell_field(&cells[0], "algo"), Some("\"allatonce\""));
         assert_eq!(cell_field(&cells[0], "num_msgs"), Some("4"));
@@ -730,6 +765,8 @@ mod tests {
         assert_eq!(cell_field(&cells[5], "kind"), Some("\"block_kernel\""));
         assert_eq!(cell_field(&cells[6], "kind"), Some("\"throughput\""));
         assert_eq!(cell_field(&cells[6], "k"), Some("4"));
+        assert_eq!(cell_field(&cells[7], "kind"), Some("\"telemetry\""));
+        assert_eq!(cell_field(&cells[7], "metrics_registered"), Some("30"));
         // model vs refresh cells share algo/np but must not collide
         assert_ne!(cell_key(&cells[0]), cell_key(&cells[2]));
         // the two level0 modes must key apart
@@ -759,6 +796,7 @@ mod tests {
                 &sample_level0(),
                 &sample_block(),
                 &sample_throughput(),
+                &sample_telemetry(),
                 &path,
             )
             .unwrap();
@@ -801,6 +839,7 @@ mod tests {
                 &sample_level0(),
                 &sample_block(),
                 &sample_throughput(),
+                &sample_telemetry(),
                 &path,
             )
             .unwrap();
@@ -848,6 +887,7 @@ mod tests {
                 &level0,
                 &block,
                 &sample_throughput(),
+                &sample_telemetry(),
                 &path,
             )
             .unwrap();
@@ -889,6 +929,7 @@ mod tests {
                 &sample_level0(),
                 &sample_block(),
                 &thr,
+                &sample_telemetry(),
                 &path,
             )
             .unwrap();
@@ -912,6 +953,41 @@ mod tests {
         // mild rate wobble inside the timing slack stays clean
         assert!(diff_bench(&base, &mk(50.0, 800.0), 0.10).is_empty());
         assert!(diff_bench(&base, &mk(50.0, 1000.0), 0.10).is_empty());
+    }
+
+    #[test]
+    fn diff_bench_gates_telemetry_overhead() {
+        let mk = |frac: f64| {
+            let mut tel = sample_telemetry();
+            tel[0].overhead_frac = frac;
+            tel[0].solve_secs_on = tel[0].solve_secs_off * (1.0 + frac);
+            let path = std::env::temp_dir()
+                .join(format!("gptap_bench_tel_{}.json", (frac * 1e3) as u64));
+            write_bench_json(
+                &sample_rows(),
+                &sample_hier(),
+                &sample_refresh(),
+                &sample_level0(),
+                &sample_block(),
+                &sample_throughput(),
+                &tel,
+                &path,
+            )
+            .unwrap();
+            let s = std::fs::read_to_string(&path).unwrap();
+            let _ = std::fs::remove_file(&path);
+            s
+        };
+        let base = mk(0.02);
+        // overhead ballooning past the 5-point floor trips the gate
+        let regs = diff_bench(&base, &mk(0.20), 0.10);
+        assert!(
+            regs.iter().any(|r| r.contains("telemetry_overhead_frac")),
+            "telemetry regression missed: {regs:?}"
+        );
+        // wobble under the absolute floor stays clean
+        assert!(diff_bench(&base, &mk(0.04), 0.10).is_empty());
+        assert!(diff_bench(&mk(0.20), &base, 0.10).is_empty(), "improvement flagged");
     }
 
     #[test]

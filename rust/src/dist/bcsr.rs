@@ -185,6 +185,7 @@ impl DistBSpmv {
             let n = self.plan.n_needed();
             if buf.capacity() >= n && n > 0 {
                 self.reuses.set(self.reuses.get() + 1);
+                crate::obs::metrics::add(crate::obs::Subsys::Comm, "halo.reuse", 1);
             }
             self.plan.gather_into(comm, &x.vals, &mut buf);
         }

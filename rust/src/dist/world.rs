@@ -87,6 +87,19 @@ pub mod tag {
     pub const PTAP_NUM: u32 = 3;
     /// Layout redistribution traffic (`agglomerate`).
     pub const REDIST: u32 = 4;
+
+    /// Live-metrics counter names (msgs, bytes) for a tag class — static
+    /// so the registry hooks stay allocation-free per update.
+    pub fn metric_names(tag: u32) -> (&'static str, &'static str) {
+        match tag {
+            EXCHANGE => ("msgs.exchange", "bytes.exchange"),
+            GATHER => ("msgs.gather", "bytes.gather"),
+            PTAP_SYM => ("msgs.ptap_sym", "bytes.ptap_sym"),
+            PTAP_NUM => ("msgs.ptap_num", "bytes.ptap_num"),
+            REDIST => ("msgs.redist", "bytes.redist"),
+            _ => ("msgs.other", "bytes.other"),
+        }
+    }
 }
 
 /// Tag-space stride between communicators: user tags must stay below
@@ -169,6 +182,12 @@ pub struct CommStats {
     /// Microseconds spent blocked in those close barriers — idle wait
     /// that would otherwise masquerade as communication time.
     pub close_wait_us: u64,
+    /// Close-barrier waits by latency bucket ([`LAT_BUCKET_EDGES_US`]).
+    /// Rank-wide like the flight histogram: subcommunicator barriers
+    /// (telescoping splits) land here too, so the histogram totals match
+    /// `close_waits` through [`Comm::stats_global`] no matter how many
+    /// nested splits drained epochs.
+    pub close_wait_hist: [u64; LAT_BUCKETS],
 }
 
 impl CommStats {
@@ -225,6 +244,12 @@ impl CommStats {
         {
             *h = a - b;
         }
+        let mut close_wait_hist = [0u64; LAT_BUCKETS];
+        for (h, (a, b)) in
+            close_wait_hist.iter_mut().zip(self.close_wait_hist.iter().zip(earlier.close_wait_hist))
+        {
+            *h = a - b;
+        }
         CommStats {
             msgs: self.msgs - earlier.msgs,
             bytes: self.bytes - earlier.bytes,
@@ -234,6 +259,7 @@ impl CommStats {
             flight_hist,
             close_waits: self.close_waits - earlier.close_waits,
             close_wait_us: self.close_wait_us - earlier.close_wait_us,
+            close_wait_hist,
         }
     }
 
@@ -251,6 +277,9 @@ impl CommStats {
         }
         self.close_waits += other.close_waits;
         self.close_wait_us += other.close_wait_us;
+        for (h, o) in self.close_wait_hist.iter_mut().zip(other.close_wait_hist) {
+            *h += o;
+        }
     }
 }
 
@@ -291,6 +320,7 @@ struct Endpoint {
     /// Rank-wide epoch close-barrier accounting.
     total_close_waits: Cell<u64>,
     total_close_wait_us: Cell<u64>,
+    total_close_wait_hist: Cell<[u64; LAT_BUCKETS]>,
     /// Next free wire-tag base for communicators created through this
     /// rank (monotonic; every split involving this rank bumps it).
     next_tag_base: Cell<u32>,
@@ -326,6 +356,7 @@ impl Endpoint {
                     fh[lat_bucket(us)] += 1;
                     self.total_flight_hist.set(fh);
                     obs::flight(src as u32, t, (frame.len() - 13) as u64, send_us, recv_us);
+                    obs::metrics::observe(obs::Subsys::Comm, "flight_us", us);
                 }
                 slot.tags.entry(t).or_default().push_back(EngineFrame::Data(frame[13..].to_vec()));
             }
@@ -397,6 +428,7 @@ impl Comm {
                 total_flight_hist: Cell::new([0; LAT_BUCKETS]),
                 total_close_waits: Cell::new(0),
                 total_close_wait_us: Cell::new(0),
+                total_close_wait_hist: Cell::new([0; LAT_BUCKETS]),
                 next_tag_base: Cell::new(TAG_STRIDE),
                 inbox: RefCell::new((0..world_np).map(|_| SourceInbox::default()).collect()),
                 cursor: RefCell::new(HashMap::new()),
@@ -457,6 +489,7 @@ impl Comm {
             flight_hist: self.ep.total_flight_hist.get(),
             close_waits: self.ep.total_close_waits.get(),
             close_wait_us: self.ep.total_close_wait_us.get(),
+            close_wait_hist: self.ep.total_close_wait_hist.get(),
         }
     }
 
@@ -550,9 +583,18 @@ impl Comm {
         let wdest = self.group.members[dest];
         if wdest != self.ep.world_rank {
             self.count_send(1, payload.len() as u64);
+            if obs::metrics::enabled() {
+                let (msgs_name, bytes_name) = tag::metric_names(tag);
+                obs::metrics::add(obs::Subsys::Comm, msgs_name, 1);
+                obs::metrics::add(obs::Subsys::Comm, bytes_name, payload.len() as u64);
+            }
         }
         let wire = self.wire_tag(tag);
-        let send_us = if obs::enabled() { obs::now_us() } else { 0 };
+        // Stamp whenever either observer is armed: the tracer records the
+        // flight event, the metrics registry feeds its latency histogram.
+        // The stamp is framing overhead, never counted in [`CommStats`].
+        let send_us =
+            if obs::enabled() || obs::metrics::enabled() { obs::now_us() } else { 0 };
         let mut f = Vec::with_capacity(13 + payload.len());
         f.push(FRAME_DATA);
         f.extend_from_slice(&wire.to_le_bytes());
@@ -641,12 +683,11 @@ impl Comm {
         // The blocking release below is the epoch close barrier: time it
         // so barrier idle stops masquerading as communication time.  Two
         // clock reads per *epoch* (not per message), so it stays on even
-        // when tracing is off.
-        let sp = if obs::enabled() {
-            Some(obs::span(obs::Subsys::Comm, "close_barrier", tag as u64))
-        } else {
-            None
-        };
+        // when tracing is off.  The span guard is inert unless the tracer
+        // or the metrics registry is armed (one TLS read), in which case
+        // it records the barrier and/or feeds the "close_barrier"
+        // histogram.
+        let sp = obs::span(obs::Subsys::Comm, "close_barrier", tag as u64);
         let t0 = std::time::Instant::now();
         let mut out = Vec::new();
         let closed = self.release_into(tag, true, &mut out);
@@ -654,6 +695,9 @@ impl Comm {
         drop(sp);
         self.ep.total_close_waits.set(self.ep.total_close_waits.get() + 1);
         self.ep.total_close_wait_us.set(self.ep.total_close_wait_us.get() + us);
+        let mut ch = self.ep.total_close_wait_hist.get();
+        ch[lat_bucket(us)] += 1;
+        self.ep.total_close_wait_hist.set(ch);
         debug_assert!(closed, "blocking release must close the epoch");
         out
     }
@@ -800,7 +844,10 @@ impl World {
             let handles: Vec<_> = parts
                 .into_iter()
                 .map(|(rank, tx, rx)| {
-                    scope.spawn(move || f_ref(Comm::root(rank, np, tx, rx)))
+                    scope.spawn(move || {
+                        crate::util::log::set_rank(rank);
+                        f_ref(Comm::root(rank, np, tx, rx))
+                    })
                 })
                 .collect();
             handles.into_iter().map(|h| h.join()).collect()
@@ -1204,6 +1251,50 @@ mod tests {
             assert_eq!(*hs, 2);
             assert_eq!(*ss, 1);
             assert_eq!(r, &vec![(0, vec![me as u8])]);
+        }
+    }
+
+    /// Telescoping regression (2 split boundaries): close-wait and flight
+    /// histograms recorded under subcommunicators keep aggregating
+    /// rank-wide through `stats_global()`, with totals matching the
+    /// scalar counters; scoped `stats()` snapshots still carry zeros.
+    #[test]
+    fn telescoped_close_wait_and_flight_hists_aggregate_globally() {
+        let w = World::new(4);
+        let out = w.run(|c| {
+            obs::rank_begin(c.rank()); // stamp frames so flights are observed
+            let _ = c.exchange(vec![((c.rank() + 1) % c.size(), vec![1u8; 64])]);
+            let half = c.split(usize::from(c.rank() >= 2)); // boundary 1: {0,1} {2,3}
+            let _ = half.exchange(vec![(1 - half.rank(), vec![2u8; 256])]);
+            let solo = half.split(half.rank()); // boundary 2: singletons
+            let _ = solo.drain(tag::EXCHANGE);
+            let _ = obs::rank_take();
+            (c.stats(), half.stats(), c.stats_global())
+        });
+        for (scoped, half_scoped, global) in out {
+            // Scoped snapshots carry no rank-wide barrier/flight fields.
+            assert_eq!(scoped.close_waits + half_scoped.close_waits, 0);
+            assert_eq!(scoped.close_wait_hist.iter().sum::<u64>(), 0);
+            assert_eq!(half_scoped.close_wait_hist.iter().sum::<u64>(), 0);
+            // Global totals fold every boundary: world exchange + half
+            // exchange + singleton drain = 3 close barriers.
+            assert_eq!(global.close_waits, 3);
+            assert_eq!(
+                global.close_wait_hist.iter().sum::<u64>(),
+                global.close_waits,
+                "every close barrier lands in exactly one latency bucket"
+            );
+            // One stamped world frame + one stamped subcomm frame arrived
+            // at each rank; both flights land in the global histogram.
+            assert_eq!(global.flight_msgs, 2);
+            assert_eq!(global.flight_hist.iter().sum::<u64>(), global.flight_msgs);
+            // The histograms ride through since() and merge().
+            let delta = global.since(CommStats::default());
+            assert_eq!(delta.close_wait_hist, global.close_wait_hist);
+            let mut acc = CommStats::default();
+            acc.merge(global);
+            acc.merge(global);
+            assert_eq!(acc.close_wait_hist.iter().sum::<u64>(), 2 * global.close_waits);
         }
     }
 }

@@ -250,6 +250,7 @@ impl StencilOperator {
             let mut buf = self.buf.borrow_mut();
             if buf.capacity() >= self.halo.n_needed() && self.halo.n_needed() > 0 {
                 self.reuses.set(self.reuses.get() + 1);
+                crate::obs::metrics::add(crate::obs::Subsys::Comm, "halo.reuse", 1);
             }
             self.halo.gather_into(comm, &x.vals, &mut buf);
         }
@@ -263,6 +264,7 @@ impl StencilOperator {
             let mut buf = self.buf_multi.borrow_mut();
             if buf.capacity() >= self.halo.n_needed() * k && self.halo.n_needed() > 0 {
                 self.reuses.set(self.reuses.get() + 1);
+                crate::obs::metrics::add(crate::obs::Subsys::Comm, "halo.reuse", 1);
             }
             self.halo.gather_multi_into(comm, &x.vals, k, &mut buf);
         }

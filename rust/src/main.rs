@@ -12,9 +12,10 @@
 
 use galerkin_ptap::coordinator::{
     diff_bench, level_tables, model_problem_tables, neutron_tables, run_block_kernel_bench,
-    run_hierarchy_bench, run_level0_bench, run_model_problem, run_neutron, run_throughput_bench,
-    run_timedep, timedep_table, write_bench_json, write_results, ModelProblemConfig,
-    NeutronConfigExp, TimedepConfig, TimedepResult, TimedepWorkload,
+    run_hierarchy_bench, run_level0_bench, run_model_problem, run_neutron,
+    run_telemetry_overhead_bench, run_throughput_bench, run_timedep, timedep_table,
+    write_bench_json, write_results, ModelProblemConfig, NeutronConfigExp, TimedepConfig,
+    TimedepResult, TimedepWorkload,
 };
 use galerkin_ptap::dist::{CsrOperator, DistSpmv, DistVec, World};
 use galerkin_ptap::gen::{
@@ -29,6 +30,7 @@ use galerkin_ptap::ptap::block::block_ptap;
 use galerkin_ptap::ptap::{Algo, ALL_ALGOS};
 use galerkin_ptap::runtime::{BlockBackend, KernelRuntime};
 use galerkin_ptap::session::{RequestQueue, SessionCache};
+use galerkin_ptap::{log_error, log_warn};
 
 use std::collections::HashMap;
 
@@ -92,6 +94,9 @@ impl Args {
 
 fn main() {
     let args = Args::parse();
+    if args.flag("quiet") {
+        galerkin_ptap::util::log::set_max_level(galerkin_ptap::util::log::Level::Error);
+    }
     match args.sub.as_str() {
         "model-problem" => cmd_model_problem(&args),
         "bench-smoke" => cmd_bench_smoke(&args),
@@ -101,6 +106,8 @@ fn main() {
         "solve" => cmd_solve(&args),
         "serve" => cmd_serve(&args),
         "trace-check" => cmd_trace_check(&args),
+        "profile" => cmd_profile(&args),
+        "stats-check" => cmd_stats_check(&args),
         "timedep" => cmd_timedep(&args),
         "selfcheck" => cmd_selfcheck(&args),
         "external" => cmd_external(&args),
@@ -124,10 +131,17 @@ fn print_help() {
            neutron        --grid N --groups G --np a,b,c [--cache] [--eq-limit N]  (Tables 7-8)\n\
            levels         --grid N --groups G                              (Tables 5-6)\n\
            solve          --coarse N --levels L --algo NAME --np P [--eq-limit N]\n\
-                          [--trace out.json]   (MG-CG; --trace writes a Chrome trace)\n\
+                          [--trace out.json] [--profile] [--top K] [--folded OUT.folded]\n\
+                          (MG-CG; --trace writes a Chrome trace, --profile prints a\n\
+                           span-folded call tree without needing Chrome)\n\
            serve          --coarse N --levels L --np P --k K --requests R [--trace out.json]\n\
-                          (session layer: cached hierarchy + K-wide batched dispatch)\n\
+                          [--stats-every N] [--stats-out F.jsonl] [--mem-budget-mb M]\n\
+                          (session layer: cached hierarchy + K-wide batched dispatch;\n\
+                           --stats-every emits a merged metrics snapshot every N batches)\n\
            trace-check    --file TRACE.json     (validate a --trace artifact, print summary)\n\
+           profile        --file TRACE.json [--top K] [--folded OUT.folded]\n\
+                          (fold a --trace artifact into a call tree + flamegraph stacks)\n\
+           stats-check    --file STATS.jsonl    (validate a --stats-out artifact)\n\
            timedep        --scenario heat|neutron --steps N [--refresh|--rebuild]\n\
                           --coarse N --levels L --np P --algo NAME [--eq-limit N]\n\
                           [--dt0 X --ramp X]   (implicit stepping: 1 symbolic build, N-1 refreshes)\n\
@@ -137,7 +151,8 @@ fn print_help() {
          --eq-limit telescopes coarse levels onto ceil(rows/eq_limit) ranks (PCTelescope analog)\n\
          --trace OUT.json records per-rank spans, message flights and memory timelines and\n\
            merges them into one Chrome trace (pid = rank, tid = subsystem; DESIGN.md sec 12)\n\
-         timedep --rebuild pays the full symbolic build every step (the baseline --refresh beats)"
+         timedep --rebuild pays the full symbolic build every step (the baseline --refresh beats)\n\
+         --quiet drops diagnostics to errors only (GPTAP_LOG=error|warn|info|debug sets the level)"
     );
 }
 
@@ -185,7 +200,7 @@ fn cmd_bench_smoke(args: &Args) {
     let coarse = Grid3::cube(args.usize_or("coarse", 8));
     let np = args.usize_or("np", 4);
     let repeats = args.usize_or("repeats", 3);
-    let out = args.kv.get("out").cloned().unwrap_or_else(|| "BENCH_pr8.json".to_string());
+    let out = args.kv.get("out").cloned().unwrap_or_else(|| "BENCH_pr9.json".to_string());
     println!(
         "bench smoke: coarse {}³ (fine {}³), np={np}, repeats={repeats}",
         coarse.nx,
@@ -317,6 +332,31 @@ fn cmd_bench_smoke(args: &Args) {
             pair[1].msgs_per_solve
         );
     }
+    // telemetry cell: the same MG-PCG solve disarmed vs armed — the
+    // enabled metrics path must stay under its overhead budget and must
+    // not perturb the numerics (asserted inside the bench)
+    let telemetry = vec![run_telemetry_overhead_bench(
+        Grid3::cube(args.usize_or("hier-coarse", 3)),
+        args.usize_or("hier-levels", 3),
+        np,
+        args.usize_or("telemetry-repeats", 5),
+    )];
+    println!(
+        "  telemetry off {:>8} on {:>8} overhead {:.1}% ({} metric series)",
+        galerkin_ptap::util::fmt_secs(telemetry[0].solve_secs_off),
+        galerkin_ptap::util::fmt_secs(telemetry[0].solve_secs_on),
+        telemetry[0].overhead_frac * 100.0,
+        telemetry[0].metrics_registered
+    );
+    assert!(
+        telemetry[0].metrics_registered > 0,
+        "armed solve registered no metric series"
+    );
+    assert!(
+        telemetry[0].overhead_frac < 0.05,
+        "telemetry overhead {:.1}% exceeds the 5% budget",
+        telemetry[0].overhead_frac * 100.0
+    );
     match write_bench_json(
         &rows,
         &hier,
@@ -324,6 +364,7 @@ fn cmd_bench_smoke(args: &Args) {
         &level0,
         &block,
         &throughput,
+        &telemetry,
         std::path::Path::new(&out),
     ) {
         Ok(()) => println!("wrote {out}"),
@@ -418,7 +459,8 @@ fn cmd_solve(args: &Args) {
     let np = args.usize_or("np", 4);
     let eq_limit = args.opt_usize("eq-limit");
     let trace_out = args.kv.get("trace").cloned();
-    let tracing = trace_out.is_some();
+    let profile = args.flag("profile");
+    let tracing = trace_out.is_some() || profile;
     let algo = args
         .kv
         .get("algo")
@@ -489,14 +531,36 @@ fn cmd_solve(args: &Args) {
             println!("  iter {k:>3}  ||r|| = {r:.3e}");
         }
     }
-    if let Some(out) = trace_out {
+    if tracing {
         let build_wall = results.iter().map(|r| r.4).fold(0.0f64, f64::max);
         let solve_wall = results.iter().map(|r| r.1).fold(0.0f64, f64::max);
         let d_build = results[0].5;
         let d_solve = results[0].6;
         print_phase_table(&[("build", build_wall, d_build), ("solve", solve_wall, d_solve)]);
         let bufs: Vec<obs::TraceBuffer> = results.into_iter().filter_map(|r| r.7).collect();
-        write_trace(&bufs, &out);
+        if profile {
+            let prof = obs::profile::fold_buffers(&bufs);
+            let top = args.usize_or("top", 12);
+            println!(
+                "\nspan-folded profile (self-time top {top}):\n{}",
+                obs::profile::top_table(&prof, top).render()
+            );
+            if prof.unmatched > 0 {
+                log_warn!("{} span(s) had no matching end (trace ring overflow)", prof.unmatched);
+            }
+            if let Some(f) = args.kv.get("folded") {
+                match std::fs::write(f, obs::profile::folded_stacks(&prof)) {
+                    Ok(()) => println!("wrote {f} (folded stacks; feed to flamegraph.pl)"),
+                    Err(e) => {
+                        eprintln!("FAIL: could not write {f}: {e}");
+                        std::process::exit(1);
+                    }
+                }
+            }
+        }
+        if let Some(out) = trace_out {
+            write_trace(&bufs, &out);
+        }
     }
 }
 
@@ -548,6 +612,10 @@ fn cmd_serve(args: &Args) {
     let requests = args.usize_or("requests", 2 * kk + 1);
     let trace_out = args.kv.get("trace").cloned();
     let tracing = trace_out.is_some();
+    let stats_every = args.opt_usize("stats-every").map(|n| n.max(1));
+    let stats_out = args.kv.get("stats-out").cloned();
+    let metrics_on = stats_every.is_some() || stats_out.is_some();
+    let mem_budget = args.usize_or("mem-budget-mb", 0) as u64 * 1048576;
     let grids = geometric_chain(coarse, levels);
     println!(
         "serve: fine {}³ = {} unknowns, {} levels, {} ranks, batch K={}, {} requests",
@@ -563,6 +631,9 @@ fn cmd_serve(args: &Args) {
     let results = world.run(move |comm| {
         if tracing {
             obs::rank_begin(comm.rank());
+        }
+        if metrics_on {
+            obs::metrics::rank_begin(comm.rank());
         }
         let tracker = MemTracker::new();
         let coarsening = Coarsening::Geometric { grids: grids2.clone() };
@@ -584,36 +655,207 @@ fn cmd_serve(args: &Args) {
         let op = CsrOperator::new(&a1, &spmv);
         let mut queue = RequestQueue::new(kk, std::time::Duration::from_millis(50));
         let mut batches = Vec::new();
+        let mut failed = 0usize;
+        let mut jsonl = String::new();
+        let mut snapshot_no = 0u64;
+        // an unhealthy ticket aborts that ticket, never the server: log
+        // it, count it, keep serving — the batch's other columns are
+        // unaffected (pcg_multi freezes columns independently)
+        let triage = |done: &[galerkin_ptap::session::QueuedSolve], failed: &mut usize| {
+            for d in done {
+                match d.verdict {
+                    obs::health::Verdict::Healthy => {}
+                    obs::health::Verdict::Stagnating => {
+                        log_warn!(
+                            "ticket {}: stagnating after {} iterations (last ||r|| = {:.3e})",
+                            d.ticket,
+                            d.result.iterations,
+                            d.result.residuals.last().copied().unwrap_or(f64::NAN)
+                        );
+                    }
+                    obs::health::Verdict::Diverging => {
+                        *failed += 1;
+                        log_error!(
+                            "ticket {}: diverging after {} iterations (last ||r|| = {:.3e}); \
+                             reporting error to client, server continues",
+                            d.ticket,
+                            d.result.iterations,
+                            d.result.residuals.last().copied().unwrap_or(f64::NAN)
+                        );
+                    }
+                }
+            }
+        };
+        // one merged snapshot per `every` batches, decided from SPMD-
+        // identical state (the batch count) so every rank joins the
+        // collective merge round together
+        let maybe_snapshot = |comm: &galerkin_ptap::dist::Comm,
+                                  batches: &Vec<usize>,
+                                  jsonl: &mut String,
+                                  snapshot_no: &mut u64| {
+            let Some(every) = stats_every else { return };
+            if batches.len() % every != 0 {
+                return;
+            }
+            if let Some(local) = obs::metrics::local_snapshot() {
+                let merged = obs::metrics::merge_global(comm, &local);
+                if comm.rank() == 0 {
+                    *snapshot_no += 1;
+                    jsonl.push_str(&merged.jsonl_line(*snapshot_no, obs::now_us()));
+                    jsonl.push('\n');
+                }
+            }
+        };
         for s in 0..requests {
             queue.submit(DistVec::from_fn(layout.clone(), comm.rank(), move |g| {
                 (((g * 11 + s * 3) % 19) as f64 - 9.0) / 9.0
             }));
             if queue.should_flush() {
                 let done = queue.flush(&comm, &op, Some(refresher.pc()), 1e-8, 100, &tracker);
-                assert!(done.iter().all(|d| d.result.converged), "batched request diverged");
+                triage(&done, &mut failed);
                 batches.push(done.len());
+                maybe_snapshot(&comm, &batches, &mut jsonl, &mut snapshot_no);
+                if mem_budget > 0 {
+                    if let Some(over) =
+                        obs::health::memory_breach(tracker.current_total(), mem_budget)
+                    {
+                        log_warn!(
+                            "memory budget breached: {} bytes over the {} MB budget",
+                            over,
+                            mem_budget / 1048576
+                        );
+                    }
+                }
             }
         }
         if !queue.is_empty() {
             // leftover sub-batch: what the flush deadline would drain
             let done = queue.flush(&comm, &op, Some(refresher.pc()), 1e-8, 100, &tracker);
-            assert!(done.iter().all(|d| d.result.converged), "batched request diverged");
+            triage(&done, &mut failed);
             batches.push(done.len());
         }
         let served: usize = batches.iter().sum();
+        // exit snapshot + human-readable report (one final merge round)
+        let report = if metrics_on {
+            let snap = obs::metrics::rank_take();
+            let merged = obs::metrics::merge_global(&comm, &snap);
+            if comm.rank() == 0 {
+                snapshot_no += 1;
+                jsonl.push_str(&merged.jsonl_line(snapshot_no, obs::now_us()));
+                jsonl.push('\n');
+                Some(merged.render_report())
+            } else {
+                None
+            }
+        } else {
+            None
+        };
         let buf = if tracing { Some(obs::rank_take()) } else { None };
-        (served, batches, cache.hits, cache.misses, queue.flushes, queue.partial_flushes, buf)
+        (
+            served,
+            batches,
+            cache.hits,
+            cache.misses,
+            queue.flushes,
+            queue.partial_flushes,
+            buf,
+            failed,
+            jsonl,
+            report,
+        )
     });
     {
-        let (served, batches, hits, misses, flushes, partial, _) = &results[0];
+        let (served, batches, hits, misses, flushes, partial, _, failed, ..) = &results[0];
         println!(
             "served {served} requests in {flushes} batched dispatch(es) of widths {batches:?} \
              ({partial} partial); hierarchy cache: {hits} hit(s), {misses} miss(es)"
         );
+        if *failed > 0 {
+            println!("{failed} request(s) diverged and were reported to their clients as errors");
+        }
+    }
+    if metrics_on {
+        let jsonl = &results[0].8;
+        match obs::metrics::validate_stats_jsonl(jsonl) {
+            Ok(check) => {
+                if let Some(out) = &stats_out {
+                    match std::fs::write(out, jsonl) {
+                        Ok(()) => println!(
+                            "wrote {out} ({} snapshot line(s), {} metric series)",
+                            check.lines, check.metrics
+                        ),
+                        Err(e) => {
+                            eprintln!("FAIL: could not write {out}: {e}");
+                            std::process::exit(1);
+                        }
+                    }
+                } else {
+                    print!("{jsonl}");
+                }
+            }
+            Err(e) => {
+                eprintln!("FAIL: generated stats snapshot is invalid: {e}");
+                std::process::exit(1);
+            }
+        }
+        if let Some(report) = &results[0].9 {
+            println!("\n{report}");
+        }
     }
     if let Some(out) = trace_out {
         let bufs: Vec<obs::TraceBuffer> = results.into_iter().filter_map(|r| r.6).collect();
         write_trace(&bufs, &out);
+    }
+}
+
+/// Fold a `--trace` Chrome artifact into a hierarchical call tree and
+/// print the top self-time frames — profiling without chrome://tracing.
+fn cmd_profile(args: &Args) {
+    let file = args.kv.get("file").expect("--file TRACE.json required").clone();
+    let top = args.usize_or("top", 20);
+    let text = std::fs::read_to_string(&file)
+        .unwrap_or_else(|e| panic!("cannot read {file}: {e}"));
+    match obs::profile::fold_chrome_text(&text) {
+        Ok(prof) => {
+            println!(
+                "profile of {file} (self-time top {top}):\n{}",
+                obs::profile::top_table(&prof, top).render()
+            );
+            if prof.unmatched > 0 {
+                log_warn!("{} span(s) had no matching end", prof.unmatched);
+            }
+            if let Some(out) = args.kv.get("folded") {
+                match std::fs::write(out, obs::profile::folded_stacks(&prof)) {
+                    Ok(()) => println!("wrote {out} (folded stacks; feed to flamegraph.pl)"),
+                    Err(e) => {
+                        eprintln!("FAIL: could not write {out}: {e}");
+                        std::process::exit(1);
+                    }
+                }
+            }
+        }
+        Err(e) => {
+            eprintln!("FAIL: {file}: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Validate a `--stats-out` JSONL artifact (schema-complete snapshot
+/// lines with the per-kind fields of DESIGN.md sec 13).
+fn cmd_stats_check(args: &Args) {
+    let file = args.kv.get("file").expect("--file STATS.jsonl required").clone();
+    let text = std::fs::read_to_string(&file)
+        .unwrap_or_else(|e| panic!("cannot read {file}: {e}"));
+    match obs::metrics::validate_stats_jsonl(&text) {
+        Ok(check) => println!(
+            "stats OK: {file}: {} snapshot line(s), {} metric series in the final snapshot",
+            check.lines, check.metrics
+        ),
+        Err(e) => {
+            eprintln!("FAIL: {file}: {e}");
+            std::process::exit(1);
+        }
     }
 }
 

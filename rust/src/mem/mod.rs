@@ -70,6 +70,21 @@ impl Cat {
             Cat::Other => 7,
         }
     }
+
+    /// Live-metrics gauge name for this category's peak bytes (the
+    /// current bytes reuse [`Cat::name`]).
+    fn peak_metric(self) -> &'static str {
+        match self {
+            Cat::MatA => "A.peak",
+            Cat::MatP => "P.peak",
+            Cat::MatC => "C.peak",
+            Cat::Aux => "aux.peak",
+            Cat::Hash => "hash.peak",
+            Cat::Comm => "comm.peak",
+            Cat::MultiVec => "multivec.peak",
+            Cat::Other => "other.peak",
+        }
+    }
 }
 
 #[derive(Default, Debug, Clone)]
@@ -105,8 +120,11 @@ impl MemTracker {
         }
         // Trace the memory timeline: one counter sample per change turns
         // the per-Cat peaks into a visible bytes-over-time waterfall.
-        // A single flag test when tracing is off.
+        // A single flag test when tracing is off; same for the live
+        // gauges (current + peak per category).
         obs::counter(obs::Subsys::Mem, cat.name(), m.cur[i]);
+        obs::metrics::gauge(obs::Subsys::Mem, cat.name(), m.cur[i]);
+        obs::metrics::gauge(obs::Subsys::Mem, cat.peak_metric(), m.peak[i]);
     }
 
     pub fn free(&self, cat: Cat, bytes: u64) {
@@ -116,6 +134,7 @@ impl MemTracker {
         m.cur[i] = m.cur[i].saturating_sub(bytes);
         m.cur_total = m.cur_total.saturating_sub(bytes);
         obs::counter(obs::Subsys::Mem, cat.name(), m.cur[i]);
+        obs::metrics::gauge(obs::Subsys::Mem, cat.name(), m.cur[i]);
     }
 
     /// Re-charge already-allocated bytes from one category to another

@@ -490,6 +490,7 @@ impl MgPreconditioner {
     /// active ranks only).
     pub fn apply(&mut self, comm: &Comm, b: &DistVec, x: &mut DistVec) {
         debug_assert_eq!(comm.size(), self.levels[0].comm.size());
+        crate::obs::metrics::add(crate::obs::Subsys::Mg, "cycles", 1);
         x.fill(0.0);
         self.cycle(0, b, x);
     }
@@ -501,6 +502,7 @@ impl MgPreconditioner {
     pub fn apply_multi(&mut self, comm: &Comm, b: &DistMultiVec, x: &mut DistMultiVec) {
         debug_assert_eq!(comm.size(), self.levels[0].comm.size());
         debug_assert_eq!(b.k, x.k);
+        crate::obs::metrics::add(crate::obs::Subsys::Mg, "cycles", 1);
         self.ensure_multi_scratch(b.k);
         x.fill(0.0);
         self.cycle_multi(0, b, x);

@@ -64,6 +64,7 @@ pub fn pcg(
         let rn = r.norm2(comm);
         residuals.push(rn);
         if rn <= rtol * r0 {
+            crate::obs::metrics::observe(crate::obs::Subsys::Solve, "pcg.iters", it as u64);
             return SolveResult { iterations: it, converged: true, residuals };
         }
         apply_pc(&mut pc, comm, &r, &mut z);
@@ -72,6 +73,7 @@ pub fn pcg(
         rz = rz_new;
         p.aypx(beta, &z);
     }
+    crate::obs::metrics::observe(crate::obs::Subsys::Solve, "pcg.iters", max_iters as u64);
     SolveResult { iterations: max_iters, converged: false, residuals }
 }
 
@@ -154,6 +156,9 @@ pub fn pcg_multi(
             rz = rz_new;
             p.aypx_cols(&beta, &z, &active);
         }
+    }
+    for &it in &iterations {
+        crate::obs::metrics::observe(crate::obs::Subsys::Solve, "pcg.iters", it as u64);
     }
     (0..kk)
         .map(|j| SolveResult {

@@ -62,6 +62,7 @@ impl Transfer {
         let mut halo = self.buf.borrow_mut();
         if halo.capacity() >= self.halo.n_needed() && self.halo.n_needed() > 0 {
             self.reuses.set(self.reuses.get() + 1);
+            crate::obs::metrics::add(crate::obs::Subsys::Comm, "halo.reuse", 1);
         }
         self.halo.gather_into(comm, &xc.vals, &mut halo);
         debug_assert_eq!(self.splits.len(), p.local_nrows());
@@ -99,6 +100,7 @@ impl Transfer {
         let mut halo = self.buf_multi.borrow_mut();
         if halo.capacity() >= self.halo.n_needed() * kk && self.halo.n_needed() > 0 {
             self.reuses.set(self.reuses.get() + 1);
+            crate::obs::metrics::add(crate::obs::Subsys::Comm, "halo.reuse", 1);
         }
         self.halo.gather_multi_into(comm, &xc.vals, kk, &mut halo);
         debug_assert_eq!(self.splits.len(), p.local_nrows());

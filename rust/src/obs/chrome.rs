@@ -253,8 +253,10 @@ pub fn validate_chrome_trace(text: &str) -> Result<TraceSummary, String> {
 
 /// Minimal recursive-descent JSON parser — just enough structure for the
 /// trace validator, with proper handling of nested objects/arrays and
-/// string escapes (which the flat bench-cell scanner cannot do).
-mod json {
+/// string escapes (which the flat bench-cell scanner cannot do).  Shared
+/// crate-wide: the metrics JSONL checker and the `profile` subcommand
+/// parse with it too.
+pub(crate) mod json {
     #[derive(Debug, Clone, PartialEq)]
     pub enum Value {
         Null,
@@ -287,6 +289,12 @@ mod json {
         pub fn as_i64(&self) -> Option<i64> {
             match self {
                 Value::Num(n) => Some(*n as i64),
+                _ => None,
+            }
+        }
+        pub fn as_f64(&self) -> Option<f64> {
+            match self {
+                Value::Num(n) => Some(*n),
                 _ => None,
             }
         }

@@ -1,0 +1,138 @@
+//! Health watchdogs over live solver signals: convergence verdicts from
+//! residual histories, memory-budget breach checks, and a cross-rank
+//! imbalance indicator.  Everything here is *observation-only* — verdicts
+//! are computed from data the solve already produced and never feed back
+//! into the numerics.  The serve loop uses them for graceful degradation:
+//! a diverging ticket is reported and dropped, the server keeps running.
+
+/// Convergence verdict for one residual history.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    Healthy,
+    /// Residuals stopped improving over the stagnation window.
+    Stagnating,
+    /// Residuals blew up (non-finite, or grew past the divergence factor).
+    Diverging,
+}
+
+impl Verdict {
+    pub fn name(self) -> &'static str {
+        match self {
+            Verdict::Healthy => "healthy",
+            Verdict::Stagnating => "stagnating",
+            Verdict::Diverging => "diverging",
+        }
+    }
+}
+
+/// Thresholds for [`residual_verdict`].  Defaults match DESIGN §13.
+#[derive(Debug, Clone, Copy)]
+pub struct HealthPolicy {
+    /// Diverging when `r_n > divergence_factor * r_0` (or any non-finite).
+    pub divergence_factor: f64,
+    /// Look-back window (iterations) for stagnation.
+    pub stagnation_window: usize,
+    /// Stagnating when `r_n > stagnation_decay * r_{n-window}` — i.e. less
+    /// than `1 - stagnation_decay` relative progress across the window.
+    pub stagnation_decay: f64,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        HealthPolicy { divergence_factor: 1e4, stagnation_window: 10, stagnation_decay: 0.99 }
+    }
+}
+
+/// Classify a residual history (`residuals[0]` is the initial residual;
+/// the solver appends one entry per iteration).  A converged history is
+/// always healthy; histories too short for the stagnation window are
+/// given the benefit of the doubt.
+pub fn residual_verdict(residuals: &[f64], converged: bool, policy: &HealthPolicy) -> Verdict {
+    if residuals.iter().any(|r| !r.is_finite()) {
+        return Verdict::Diverging;
+    }
+    if converged || residuals.len() < 2 {
+        return Verdict::Healthy;
+    }
+    let r0 = residuals[0];
+    let rn = residuals[residuals.len() - 1];
+    if r0 > 0.0 && rn > policy.divergence_factor * r0 {
+        return Verdict::Diverging;
+    }
+    if residuals.len() > policy.stagnation_window {
+        let back = residuals[residuals.len() - 1 - policy.stagnation_window];
+        if back > 0.0 && rn > policy.stagnation_decay * back {
+            return Verdict::Stagnating;
+        }
+    }
+    Verdict::Healthy
+}
+
+/// Memory-budget breach: `Some(current_bytes)` when current tracked usage
+/// exceeds `budget_bytes`.  The caller decides what to log or shed.
+pub fn memory_breach(current_bytes: u64, budget_bytes: u64) -> Option<u64> {
+    (budget_bytes > 0 && current_bytes > budget_bytes).then_some(current_bytes)
+}
+
+/// Cross-rank imbalance: `max / mean` of a per-rank load vector.  1.0 is
+/// perfectly balanced; 0.0 when the vector is empty or all-zero.
+pub fn imbalance(per_rank: &[f64]) -> f64 {
+    if per_rank.is_empty() {
+        return 0.0;
+    }
+    let max = per_rank.iter().cloned().fold(0.0f64, f64::max);
+    let mean = per_rank.iter().sum::<f64>() / per_rank.len() as f64;
+    if mean <= 0.0 {
+        0.0
+    } else {
+        max / mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converged_histories_are_healthy() {
+        let pol = HealthPolicy::default();
+        assert_eq!(residual_verdict(&[1.0, 0.1, 1e-9], true, &pol), Verdict::Healthy);
+        assert_eq!(residual_verdict(&[1.0], false, &pol), Verdict::Healthy);
+        assert_eq!(residual_verdict(&[], false, &pol), Verdict::Healthy);
+    }
+
+    #[test]
+    fn non_finite_or_growth_diverges() {
+        let pol = HealthPolicy::default();
+        assert_eq!(residual_verdict(&[1.0, f64::NAN], false, &pol), Verdict::Diverging);
+        assert_eq!(residual_verdict(&[1.0, f64::INFINITY], true, &pol), Verdict::Diverging);
+        assert_eq!(residual_verdict(&[1.0, 2.0, 2e4], false, &pol), Verdict::Diverging);
+    }
+
+    #[test]
+    fn flat_tail_stagnates() {
+        let pol = HealthPolicy::default();
+        // 2 decades of progress then flat for > window iterations.
+        let mut hist = vec![1.0, 0.1, 0.01];
+        hist.extend(vec![0.0099; 12]);
+        assert_eq!(residual_verdict(&hist, false, &pol), Verdict::Stagnating);
+        // Still making >1% progress per window: healthy.
+        let improving: Vec<f64> = (0..20).map(|i| 0.8f64.powi(i)).collect();
+        assert_eq!(residual_verdict(&improving, false, &pol), Verdict::Healthy);
+    }
+
+    #[test]
+    fn memory_breach_threshold() {
+        assert_eq!(memory_breach(100, 0), None); // no budget set
+        assert_eq!(memory_breach(100, 200), None);
+        assert_eq!(memory_breach(300, 200), Some(300));
+    }
+
+    #[test]
+    fn imbalance_max_over_mean() {
+        assert_eq!(imbalance(&[]), 0.0);
+        assert_eq!(imbalance(&[0.0, 0.0]), 0.0);
+        assert_eq!(imbalance(&[2.0, 2.0]), 1.0);
+        assert_eq!(imbalance(&[3.0, 1.0]), 1.5);
+    }
+}

@@ -1,0 +1,728 @@
+//! Live telemetry: a per-rank, allocation-free registry of named counters,
+//! gauges, and log₂-bucket rolling-window histograms with streaming
+//! percentiles — the always-on counterpart of the trace recorder.
+//!
+//! Cost model mirrors the tracer exactly: every hook starts with the same
+//! single thread-local activity-bitmask read (see `obs::active_bits`), so
+//! a binary with telemetry compiled in but not armed pays one TLS load per
+//! hook and nothing else.  When armed (`rank_begin`), updates touch a
+//! pre-registered slot found through a `(lane, &'static str)` hash — the
+//! only allocation is the slot itself on first use of a new name.
+//!
+//! Histograms never store samples: each observation lands in a log₂
+//! bucket (lifetime totals) and in a fixed-size rolling window of bucket
+//! indices, so p50/p95/p99 stream from cumulative bucket counts with no
+//! post-hoc sort (`util::stats::bucket_percentile`).  Percentiles are
+//! exact to bucket resolution (a factor of 2), which is what latency
+//! monitoring needs; the bench cells keep their sample-exact percentiles.
+//!
+//! Cross-rank view: [`merge_global`] serialises each rank's snapshot and
+//! runs a **single collective round** (`allgather_bytes`), then every rank
+//! folds the per-rank snapshots deterministically (rank order) into a
+//! [`MergedMetrics`] — per-rank min/max/mean/median for counters and
+//! gauges (the median reuses the shared `util::stats::percentile`),
+//! bucket-wise sums and streaming percentiles for histograms.  Note the
+//! merge round itself sends messages, so observation-only comparisons must
+//! capture comm stats *before* merging.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use super::{METRICS_BIT, Subsys};
+use crate::dist::Comm;
+use crate::util::bytebuf::{ByteReader, ByteWriter};
+use crate::util::stats::{bucket_percentile, percentile};
+use crate::util::table::Table;
+
+/// Log₂ buckets: bucket `i` holds values in `[2^i, 2^{i+1})` (value 0
+/// clamps into bucket 0); bucket 31 is open-ended.  Covers 1 µs .. ~35 min
+/// for durations and 1 B .. 2 GiB for sizes.
+pub const HIST_BUCKETS: usize = 32;
+
+/// Rolling-window length per histogram (recent samples kept as bucket
+/// indices, one byte each).
+pub const WINDOW_CAP: usize = 512;
+
+/// Bucket index for a value: `floor(log2(max(v,1)))`, clamped.
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    (63 - v.max(1).leading_zeros() as usize).min(HIST_BUCKETS - 1)
+}
+
+/// Representative value for bucket `i`: the geometric midpoint of
+/// `[2^i, 2^{i+1})`.
+pub fn bucket_rep(i: usize) -> f64 {
+    2f64.powi(i as i32) * std::f64::consts::SQRT_2
+}
+
+/// Metric kind (wire-stable discriminants).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Counter = 0,
+    Gauge = 1,
+    Hist = 2,
+}
+
+impl Kind {
+    pub fn name(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Hist => "hist",
+        }
+    }
+
+    fn from_u8(v: u8) -> Kind {
+        match v {
+            0 => Kind::Counter,
+            1 => Kind::Gauge,
+            _ => Kind::Hist,
+        }
+    }
+}
+
+struct Metric {
+    sub: Subsys,
+    name: &'static str,
+    kind: Kind,
+    /// Counter: running total.  Gauge: last sampled value.
+    value: u64,
+    /// Histogram lifetime observation count / value sum.
+    count: u64,
+    sum: u64,
+    buckets: [u64; HIST_BUCKETS],
+    /// Rolling window: ring of bucket indices plus per-bucket counts so
+    /// eviction is O(1) and percentiles need no replay.
+    win: Vec<u8>,
+    win_head: usize,
+    win_buckets: [u32; HIST_BUCKETS],
+}
+
+impl Metric {
+    fn new(sub: Subsys, name: &'static str, kind: Kind) -> Metric {
+        Metric {
+            sub,
+            name,
+            kind,
+            value: 0,
+            count: 0,
+            sum: 0,
+            buckets: [0; HIST_BUCKETS],
+            win: Vec::new(),
+            win_head: 0,
+            win_buckets: [0; HIST_BUCKETS],
+        }
+    }
+
+    fn observe(&mut self, v: u64) {
+        let b = bucket_of(v);
+        self.count += 1;
+        self.sum += v;
+        self.buckets[b] += 1;
+        if self.win.len() < WINDOW_CAP {
+            if self.win.capacity() == 0 {
+                self.win.reserve_exact(WINDOW_CAP);
+            }
+            self.win.push(b as u8);
+        } else {
+            let old = self.win[self.win_head] as usize;
+            self.win_buckets[old] -= 1;
+            self.win[self.win_head] = b as u8;
+            self.win_head = (self.win_head + 1) % WINDOW_CAP;
+        }
+        self.win_buckets[b] += 1;
+    }
+}
+
+struct Registry {
+    rank: usize,
+    metrics: Vec<Metric>,
+    index: HashMap<(u32, &'static str), usize>,
+}
+
+impl Registry {
+    fn new(rank: usize) -> Registry {
+        Registry { rank, metrics: Vec::new(), index: HashMap::new() }
+    }
+
+    fn slot(&mut self, sub: Subsys, name: &'static str, kind: Kind) -> &mut Metric {
+        let key = (sub.tid(), name);
+        if let Some(&idx) = self.index.get(&key) {
+            return &mut self.metrics[idx];
+        }
+        let idx = self.metrics.len();
+        self.metrics.push(Metric::new(sub, name, kind));
+        self.index.insert(key, idx);
+        &mut self.metrics[idx]
+    }
+
+    fn snapshot(&self) -> MetricsSnapshot {
+        let mut entries: Vec<EntrySnap> = self
+            .metrics
+            .iter()
+            .map(|m| EntrySnap {
+                sub: m.sub.name().to_string(),
+                name: m.name.to_string(),
+                kind: m.kind,
+                value: m.value,
+                count: m.count,
+                sum: m.sum,
+                buckets: if m.kind == Kind::Hist { m.buckets.to_vec() } else { Vec::new() },
+                win_buckets: if m.kind == Kind::Hist {
+                    m.win_buckets.iter().map(|&c| c as u64).collect()
+                } else {
+                    Vec::new()
+                },
+            })
+            .collect();
+        entries.sort_by(|a, b| (&a.sub, &a.name).cmp(&(&b.sub, &b.name)));
+        MetricsSnapshot { rank: self.rank, entries }
+    }
+}
+
+thread_local! {
+    static REGISTRY: RefCell<Option<Registry>> = const { RefCell::new(None) };
+}
+
+/// Is the metrics registry armed on this rank thread?  Shares the single
+/// activity-bitmask TLS read with the tracer.
+#[inline]
+pub fn enabled() -> bool {
+    super::active_bits() & METRICS_BIT != 0
+}
+
+/// Arm the registry on the calling rank thread.  Pair with [`rank_take`].
+pub fn rank_begin(rank: usize) {
+    REGISTRY.with(|r| *r.borrow_mut() = Some(Registry::new(rank)));
+    super::set_active_bit(METRICS_BIT, true);
+}
+
+/// Disarm and hand back this rank's final snapshot (empty if never armed).
+pub fn rank_take() -> MetricsSnapshot {
+    super::set_active_bit(METRICS_BIT, false);
+    REGISTRY
+        .with(|r| r.borrow_mut().take())
+        .map(|reg| reg.snapshot())
+        .unwrap_or_default()
+}
+
+/// Snapshot the live registry without disarming it (`serve --stats-every`
+/// calls this at each snapshot round).
+pub fn local_snapshot() -> Option<MetricsSnapshot> {
+    REGISTRY.with(|r| r.borrow().as_ref().map(|reg| reg.snapshot()))
+}
+
+#[inline]
+fn with_slot(sub: Subsys, name: &'static str, kind: Kind, f: impl FnOnce(&mut Metric)) {
+    REGISTRY.with(|r| {
+        if let Some(reg) = r.borrow_mut().as_mut() {
+            f(reg.slot(sub, name, kind));
+        }
+    });
+}
+
+/// Increment a counter by `delta`.  One TLS read when disarmed.
+#[inline]
+pub fn add(sub: Subsys, name: &'static str, delta: u64) {
+    if !enabled() {
+        return;
+    }
+    with_slot(sub, name, Kind::Counter, |m| m.value += delta);
+}
+
+/// Sample a gauge (last value wins; merged min/max/mean are per rank).
+#[inline]
+pub fn gauge(sub: Subsys, name: &'static str, val: u64) {
+    if !enabled() {
+        return;
+    }
+    with_slot(sub, name, Kind::Gauge, |m| m.value = val);
+}
+
+/// Observe one sample into a histogram.
+#[inline]
+pub fn observe(sub: Subsys, name: &'static str, val: u64) {
+    if !enabled() {
+        return;
+    }
+    with_slot(sub, name, Kind::Hist, |m| m.observe(val));
+}
+
+/// Span drop hook: the caller (`obs::Span`) already checked the activity
+/// bits, so go straight to the slot.
+pub(crate) fn span_observed(sub: Subsys, name: &'static str, dur_us: u64) {
+    with_slot(sub, name, Kind::Hist, |m| m.observe(dur_us));
+}
+
+/// One rank's serialisable registry snapshot.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    pub rank: usize,
+    pub entries: Vec<EntrySnap>,
+}
+
+#[derive(Debug, Clone)]
+pub struct EntrySnap {
+    pub sub: String,
+    pub name: String,
+    pub kind: Kind,
+    pub value: u64,
+    pub count: u64,
+    pub sum: u64,
+    pub buckets: Vec<u64>,
+    pub win_buckets: Vec<u64>,
+}
+
+impl MetricsSnapshot {
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.u32(self.rank as u32);
+        w.u32(self.entries.len() as u32);
+        for e in &self.entries {
+            w.u32(e.sub.len() as u32);
+            w.bytes(e.sub.as_bytes());
+            w.u32(e.name.len() as u32);
+            w.bytes(e.name.as_bytes());
+            w.u8(e.kind as u8);
+            w.u64(e.value);
+            w.u64(e.count);
+            w.u64(e.sum);
+            w.u32(e.buckets.len() as u32);
+            w.u64_slice(&e.buckets);
+            w.u32(e.win_buckets.len() as u32);
+            w.u64_slice(&e.win_buckets);
+        }
+        w.into_bytes()
+    }
+
+    pub fn deserialize(bytes: &[u8]) -> MetricsSnapshot {
+        let mut r = ByteReader::new(bytes);
+        let rank = r.u32() as usize;
+        let n = r.u32() as usize;
+        let mut entries = Vec::with_capacity(n);
+        for _ in 0..n {
+            let sl = r.u32() as usize;
+            let sub = String::from_utf8(r.bytes(sl).to_vec()).unwrap();
+            let nl = r.u32() as usize;
+            let name = String::from_utf8(r.bytes(nl).to_vec()).unwrap();
+            let kind = Kind::from_u8(r.u8());
+            let value = r.u64();
+            let count = r.u64();
+            let sum = r.u64();
+            let nb = r.u32() as usize;
+            let buckets = (0..nb).map(|_| r.u64()).collect();
+            let nw = r.u32() as usize;
+            let win_buckets = (0..nw).map(|_| r.u64()).collect();
+            entries.push(EntrySnap { sub, name, kind, value, count, sum, buckets, win_buckets });
+        }
+        MetricsSnapshot { rank, entries }
+    }
+}
+
+/// One metric folded across ranks.
+#[derive(Debug, Clone)]
+pub struct MergedEntry {
+    pub sub: String,
+    pub name: String,
+    pub kind: Kind,
+    /// Per-rank primary value: counter/gauge value, histogram count.
+    pub per_rank: Vec<u64>,
+    /// Per-rank sum: equals `per_rank` for counters/gauges, the value sum
+    /// for histograms (feeds the cross-rank imbalance indicator).
+    pub per_rank_sum: Vec<u64>,
+    pub count: u64,
+    pub sum: u64,
+    pub buckets: Vec<u64>,
+    pub win_buckets: Vec<u64>,
+}
+
+impl MergedEntry {
+    pub fn min(&self) -> u64 {
+        self.per_rank.iter().copied().min().unwrap_or(0)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.per_rank.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn total(&self) -> u64 {
+        self.per_rank.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.per_rank.is_empty() {
+            0.0
+        } else {
+            self.total() as f64 / self.per_rank.len() as f64
+        }
+    }
+
+    /// Cross-rank median of the per-rank values — this is where the
+    /// shared nearest-rank `percentile` is reused by the snapshot path.
+    pub fn median(&self) -> f64 {
+        let vals: Vec<f64> = self.per_rank.iter().map(|&v| v as f64).collect();
+        percentile(&vals, 50.0)
+    }
+
+    /// Streaming percentile over the merged rolling windows (histograms).
+    pub fn p(&self, p: f64) -> f64 {
+        bucket_percentile(&self.win_buckets, p, bucket_rep)
+    }
+
+    /// Mean sample value over the lifetime of the histogram.
+    pub fn mean_sample(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// max/mean of the per-rank sums: 1.0 is perfectly balanced, 0 when
+    /// nothing was recorded.
+    pub fn imbalance(&self) -> f64 {
+        let sums: Vec<f64> = self.per_rank_sum.iter().map(|&v| v as f64).collect();
+        crate::obs::health::imbalance(&sums)
+    }
+}
+
+/// All metrics folded across ranks, sorted by (lane, name).
+#[derive(Debug, Clone, Default)]
+pub struct MergedMetrics {
+    pub ranks: usize,
+    pub entries: Vec<MergedEntry>,
+}
+
+/// Deterministic fold of per-rank snapshots (rank order; entries sorted).
+pub fn merge_snapshots(snaps: &[MetricsSnapshot]) -> MergedMetrics {
+    let np = snaps.len();
+    let mut entries: Vec<MergedEntry> = Vec::new();
+    let mut index: HashMap<(String, String), usize> = HashMap::new();
+    for snap in snaps {
+        let r = snap.rank;
+        for e in &snap.entries {
+            let key = (e.sub.clone(), e.name.clone());
+            let idx = *index.entry(key).or_insert_with(|| {
+                entries.push(MergedEntry {
+                    sub: e.sub.clone(),
+                    name: e.name.clone(),
+                    kind: e.kind,
+                    per_rank: vec![0; np],
+                    per_rank_sum: vec![0; np],
+                    count: 0,
+                    sum: 0,
+                    buckets: vec![0; HIST_BUCKETS],
+                    win_buckets: vec![0; HIST_BUCKETS],
+                });
+                entries.len() - 1
+            });
+            let me = &mut entries[idx];
+            let (primary, rank_sum) = match e.kind {
+                Kind::Hist => (e.count, e.sum),
+                _ => (e.value, e.value),
+            };
+            if r < np {
+                me.per_rank[r] = primary;
+                me.per_rank_sum[r] = rank_sum;
+            }
+            me.count += e.count;
+            me.sum += e.sum;
+            for (i, &b) in e.buckets.iter().enumerate().take(HIST_BUCKETS) {
+                me.buckets[i] += b;
+            }
+            for (i, &b) in e.win_buckets.iter().enumerate().take(HIST_BUCKETS) {
+                me.win_buckets[i] += b;
+            }
+        }
+    }
+    entries.sort_by(|a, b| (&a.sub, &a.name).cmp(&(&b.sub, &b.name)));
+    MergedMetrics { ranks: np, entries }
+}
+
+/// Merge every rank's snapshot with **one** collective round.  All ranks
+/// must call this at the same point (SPMD); every rank gets the same
+/// merged view.  The round itself sends messages — capture comm stats
+/// before calling if you are comparing observation-only invariants.
+pub fn merge_global(comm: &Comm, local: &MetricsSnapshot) -> MergedMetrics {
+    let all = comm.allgather_bytes(local.serialize());
+    let snaps: Vec<MetricsSnapshot> = all.iter().map(|b| MetricsSnapshot::deserialize(b)).collect();
+    merge_snapshots(&snaps)
+}
+
+impl MergedMetrics {
+    /// One schema-valid JSONL snapshot line (see DESIGN §13 for the
+    /// schema; `stats-check` validates it).
+    pub fn jsonl_line(&self, snapshot: u64, ts_us: u64) -> String {
+        let mut s = format!(
+            "{{\"snapshot\":{snapshot},\"ts_us\":{ts_us},\"ranks\":{},\"metrics\":[",
+            self.ranks
+        );
+        for (i, e) in self.entries.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"sub\":\"{}\",\"name\":\"{}\",\"kind\":\"{}\"",
+                e.sub,
+                e.name,
+                e.kind.name()
+            ));
+            match e.kind {
+                Kind::Counter | Kind::Gauge => {
+                    s.push_str(&format!(
+                        ",\"sum\":{},\"min\":{},\"max\":{},\"mean\":{:.3}",
+                        e.total(),
+                        e.min(),
+                        e.max(),
+                        e.mean()
+                    ));
+                }
+                Kind::Hist => {
+                    s.push_str(&format!(
+                        ",\"count\":{},\"sum\":{},\"mean\":{:.3},\"p50\":{:.3},\"p95\":{:.3},\"p99\":{:.3},\"imbalance\":{:.3}",
+                        e.count,
+                        e.sum,
+                        e.mean_sample(),
+                        e.p(50.0),
+                        e.p(95.0),
+                        e.p(99.0),
+                        e.imbalance()
+                    ));
+                }
+            }
+            s.push('}');
+        }
+        s.push_str("]}");
+        s
+    }
+
+    /// Human-readable exit report (printed by `serve` on shutdown).
+    pub fn render_report(&self) -> String {
+        let mut t = Table::new(vec![
+            "subsys", "metric", "kind", "total", "mean", "p50", "p95", "p99", "imb",
+        ]);
+        for e in &self.entries {
+            match e.kind {
+                Kind::Counter | Kind::Gauge => t.row(vec![
+                    e.sub.clone(),
+                    e.name.clone(),
+                    e.kind.name().to_string(),
+                    format!("{}", e.total()),
+                    format!("{:.1}", e.mean()),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                ]),
+                Kind::Hist => t.row(vec![
+                    e.sub.clone(),
+                    e.name.clone(),
+                    "hist".to_string(),
+                    format!("{}", e.count),
+                    format!("{:.1}", e.mean_sample()),
+                    format!("{:.1}", e.p(50.0)),
+                    format!("{:.1}", e.p(95.0)),
+                    format!("{:.1}", e.p(99.0)),
+                    format!("{:.2}", e.imbalance()),
+                ]),
+            }
+        }
+        t.render()
+    }
+}
+
+/// Summary returned by the JSONL snapshot validator.
+#[derive(Debug, Clone, Default)]
+pub struct StatsCheck {
+    pub lines: usize,
+    pub metrics: usize,
+}
+
+fn field<'a>(
+    obj: &'a [(String, super::chrome::json::Value)],
+    key: &str,
+) -> Option<&'a super::chrome::json::Value> {
+    obj.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+}
+
+/// Self-contained schema checker for `--stats-out` JSONL files: every
+/// non-empty line must parse as one snapshot object with the envelope
+/// fields and per-kind metric fields from DESIGN §13.
+pub fn validate_stats_jsonl(text: &str) -> Result<StatsCheck, String> {
+    use super::chrome::json;
+    let mut check = StatsCheck::default();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let n = ln + 1;
+        let v = json::parse(line).map_err(|e| format!("line {n}: {e}"))?;
+        let obj = v.as_object().ok_or_else(|| format!("line {n}: not an object"))?;
+        for key in ["snapshot", "ts_us", "ranks"] {
+            field(obj, key)
+                .and_then(|v| v.as_i64())
+                .ok_or_else(|| format!("line {n}: missing numeric \"{key}\""))?;
+        }
+        let metrics = field(obj, "metrics")
+            .and_then(|v| v.as_array())
+            .ok_or_else(|| format!("line {n}: missing \"metrics\" array"))?;
+        for m in metrics {
+            let mo = m.as_object().ok_or_else(|| format!("line {n}: metric not an object"))?;
+            for key in ["sub", "name"] {
+                field(mo, key)
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| format!("line {n}: metric missing \"{key}\""))?;
+            }
+            let kind = field(mo, "kind")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| format!("line {n}: metric missing \"kind\""))?;
+            let required: &[&str] = match kind {
+                "counter" | "gauge" => &["sum", "min", "max", "mean"],
+                "hist" => &["count", "sum", "mean", "p50", "p95", "p99", "imbalance"],
+                other => return Err(format!("line {n}: unknown kind \"{other}\"")),
+            };
+            for key in required {
+                field(mo, key)
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| format!("line {n}: {kind} missing numeric \"{key}\""))?;
+            }
+            check.metrics += 1;
+        }
+        check.lines += 1;
+    }
+    if check.lines == 0 {
+        return Err("no snapshot lines".to_string());
+    }
+    Ok(check)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Disarmed hooks are inert: nothing registers, nothing allocates in
+    /// TLS, and a later arm starts from an empty registry.
+    #[test]
+    fn disabled_hooks_are_inert() {
+        assert!(!enabled());
+        add(Subsys::Comm, "msgs.exchange", 3);
+        gauge(Subsys::Mem, "A", 4096);
+        observe(Subsys::Session, "queue.wait_us", 17);
+        rank_begin(2);
+        let snap = rank_take();
+        assert_eq!(snap.rank, 2);
+        assert!(snap.entries.is_empty());
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn counters_gauges_hists_snapshot() {
+        rank_begin(0);
+        add(Subsys::Comm, "msgs.exchange", 2);
+        add(Subsys::Comm, "msgs.exchange", 3);
+        gauge(Subsys::Mem, "A", 100);
+        gauge(Subsys::Mem, "A", 60);
+        for v in [1u64, 2, 4, 1000] {
+            observe(Subsys::Session, "queue.wait_us", v);
+        }
+        let snap = rank_take();
+        assert_eq!(snap.entries.len(), 3);
+        let ctr = snap.entries.iter().find(|e| e.name == "msgs.exchange").unwrap();
+        assert_eq!((ctr.kind, ctr.value), (Kind::Counter, 5));
+        let g = snap.entries.iter().find(|e| e.name == "A").unwrap();
+        assert_eq!((g.kind, g.value), (Kind::Gauge, 60));
+        let h = snap.entries.iter().find(|e| e.name == "queue.wait_us").unwrap();
+        assert_eq!((h.kind, h.count, h.sum), (Kind::Hist, 4, 1007));
+        assert_eq!(h.buckets.iter().sum::<u64>(), 4);
+        assert_eq!(h.win_buckets.iter().sum::<u64>(), 4);
+    }
+
+    /// The rolling window evicts the oldest bucket index in O(1); the
+    /// lifetime buckets keep everything.
+    #[test]
+    fn window_evicts_oldest() {
+        rank_begin(0);
+        for _ in 0..WINDOW_CAP {
+            observe(Subsys::Solve, "lat", 1); // bucket 0
+        }
+        for _ in 0..10 {
+            observe(Subsys::Solve, "lat", 1 << 20); // bucket 20
+        }
+        let snap = rank_take();
+        let h = &snap.entries[0];
+        assert_eq!(h.count as usize, WINDOW_CAP + 10);
+        assert_eq!(h.win_buckets.iter().sum::<u64>() as usize, WINDOW_CAP);
+        assert_eq!(h.win_buckets[0] as usize, WINDOW_CAP - 10);
+        assert_eq!(h.win_buckets[20], 10);
+        assert_eq!(h.buckets[0] as usize, WINDOW_CAP);
+        assert_eq!(h.buckets[20], 10);
+    }
+
+    /// Span drops feed the metrics histograms even when tracing is off,
+    /// and arming metrics does not arm the tracer.
+    #[test]
+    fn spans_feed_metrics_without_tracing() {
+        rank_begin(0);
+        assert!(!crate::obs::enabled());
+        {
+            let _sp = crate::obs::span(Subsys::Mg, "level", 0);
+        }
+        let snap = rank_take();
+        let h = snap.entries.iter().find(|e| e.name == "level").unwrap();
+        assert_eq!(h.kind, Kind::Hist);
+        assert_eq!(h.count, 1);
+    }
+
+    #[test]
+    fn snapshot_serialization_round_trips() {
+        rank_begin(5);
+        add(Subsys::Comm, "bytes.exchange", 1234);
+        observe(Subsys::Ptap, "numeric", 99);
+        let snap = rank_take();
+        let back = MetricsSnapshot::deserialize(&snap.serialize());
+        assert_eq!(back.rank, 5);
+        assert_eq!(back.entries.len(), snap.entries.len());
+        for (a, b) in snap.entries.iter().zip(&back.entries) {
+            assert_eq!((&a.sub, &a.name, a.kind), (&b.sub, &b.name, b.kind));
+            assert_eq!((a.value, a.count, a.sum), (b.value, b.count, b.sum));
+            assert_eq!(a.buckets, b.buckets);
+            assert_eq!(a.win_buckets, b.win_buckets);
+        }
+    }
+
+    /// Merge two ranks' snapshots and validate the JSONL line against the
+    /// self-contained schema checker.
+    #[test]
+    fn merge_and_jsonl_schema() {
+        rank_begin(0);
+        add(Subsys::Comm, "msgs.exchange", 10);
+        observe(Subsys::Mg, "level", 8);
+        let s0 = rank_take();
+        rank_begin(1);
+        add(Subsys::Comm, "msgs.exchange", 30);
+        observe(Subsys::Mg, "level", 32);
+        observe(Subsys::Mg, "level", 32);
+        let s1 = rank_take();
+
+        let merged = merge_snapshots(&[s0, s1]);
+        assert_eq!(merged.ranks, 2);
+        let ctr = merged.entries.iter().find(|e| e.name == "msgs.exchange").unwrap();
+        assert_eq!(ctr.per_rank, vec![10, 30]);
+        assert_eq!((ctr.total(), ctr.min(), ctr.max()), (40, 10, 30));
+        assert_eq!(ctr.median(), 10.0); // nearest-rank of [10, 30] at p50
+        let h = merged.entries.iter().find(|e| e.name == "level").unwrap();
+        assert_eq!((h.count, h.sum), (3, 72));
+        assert_eq!(h.per_rank, vec![1, 2]);
+        assert!(h.p(50.0) > 0.0);
+
+        let line = merged.jsonl_line(0, 123);
+        let check = validate_stats_jsonl(&line).expect("schema-valid line");
+        assert_eq!(check.lines, 1);
+        assert_eq!(check.metrics, 2);
+
+        // A corrupted line must fail.
+        assert!(validate_stats_jsonl(&line.replace("\"p95\"", "\"oops\"")).is_err());
+        assert!(validate_stats_jsonl("").is_err());
+    }
+}

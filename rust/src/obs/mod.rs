@@ -8,9 +8,11 @@
 //! top of its rank closure and [`rank_take`] at the end; the leader merges
 //! the returned [`TraceBuffer`]s with [`chrome::write_chrome_trace`].
 //!
-//! Cost model: when tracing is disabled (the default), every hook in the
-//! hot paths is a single thread-local `Cell<bool>` read — no clock reads,
-//! no allocation, no branches beyond the flag test.  When enabled, events
+//! Cost model: when observation is disabled (the default), every hook in
+//! the hot paths is a single thread-local activity-bitmask read — no clock
+//! reads, no allocation, no branches beyond the flag test.  The same
+//! bitmask arms the live metrics registry ([`metrics`]), so tracing and
+//! metrics together still cost one TLS load when off.  When enabled, events
 //! are fixed-size (`&'static str` names, integer args) and land in a
 //! pre-allocated ring; overflow drops the *oldest* events and counts them
 //! in [`TraceBuffer::dropped`] rather than reallocating.
@@ -21,6 +23,9 @@
 //! against the receiver's clock to measure true in-flight time.
 
 pub mod chrome;
+pub mod health;
+pub mod metrics;
+pub mod profile;
 pub mod summary;
 
 use std::cell::{Cell, RefCell};
@@ -140,9 +145,30 @@ impl Recorder {
     }
 }
 
+/// Tracing armed on this thread (events land in the ring recorder).
+pub(crate) const TRACE_BIT: u8 = 1;
+/// Live metrics armed on this thread (see [`metrics`]).
+pub(crate) const METRICS_BIT: u8 = 2;
+
 thread_local! {
-    static ACTIVE: Cell<bool> = const { Cell::new(false) };
+    /// Activity bitmask: one TLS read serves both the trace recorder and
+    /// the metrics registry, so the fully-disabled hot path stays a
+    /// single thread-local load even with two observers.
+    static ACTIVE: Cell<u8> = const { Cell::new(0) };
     static RECORDER: RefCell<Option<Recorder>> = const { RefCell::new(None) };
+}
+
+#[inline]
+pub(crate) fn active_bits() -> u8 {
+    ACTIVE.with(|a| a.get())
+}
+
+#[inline]
+pub(crate) fn set_active_bit(mask: u8, on: bool) {
+    ACTIVE.with(|a| {
+        let v = a.get();
+        a.set(if on { v | mask } else { v & !mask });
+    });
 }
 
 /// Process-wide time origin, initialised by the first rank that starts
@@ -165,7 +191,7 @@ fn ring_cap() -> usize {
 /// entire disabled-path cost of every hook.
 #[inline]
 pub fn enabled() -> bool {
-    ACTIVE.with(|a| a.get())
+    active_bits() & TRACE_BIT != 0
 }
 
 /// Microseconds since the shared origin.  Returns at least 1 so a zero
@@ -196,13 +222,13 @@ pub fn rank_begin_with_cap(rank: usize, cap: usize) {
             dropped: 0,
         });
     });
-    ACTIVE.with(|a| a.set(true));
+    set_active_bit(TRACE_BIT, true);
 }
 
 /// Stop recording and hand back this rank's events.  Returns an empty
 /// buffer if [`rank_begin`] was never called on this thread.
 pub fn rank_take() -> TraceBuffer {
-    ACTIVE.with(|a| a.set(false));
+    set_active_bit(TRACE_BIT, false);
     RECORDER
         .with(|r| r.borrow_mut().take())
         .map(Recorder::into_buffer)
@@ -219,17 +245,29 @@ fn record(ev: Ev) {
 
 /// RAII span guard: records `Begin` on creation and `End` on drop.  Bind
 /// it (`let _sp = obs::span(...)`) so the span covers the scope.
+///
+/// Spans serve two observers from the activity bits captured at open:
+/// the trace recorder gets Begin/End events, and the metrics registry
+/// gets the elapsed microseconds folded into a `(sub, name)` histogram.
 #[must_use = "bind the span guard or the span closes immediately"]
 pub struct Span {
-    live: bool,
+    bits: u8,
+    t0: u64,
     sub: Subsys,
     name: &'static str,
 }
 
 impl Drop for Span {
     fn drop(&mut self) {
-        if self.live {
-            record(Ev::End { ts_us: now_us(), sub: self.sub, name: self.name });
+        if self.bits == 0 {
+            return;
+        }
+        let t1 = now_us();
+        if self.bits & TRACE_BIT != 0 {
+            record(Ev::End { ts_us: t1, sub: self.sub, name: self.name });
+        }
+        if self.bits & METRICS_BIT != 0 {
+            metrics::span_observed(self.sub, self.name, t1.saturating_sub(self.t0));
         }
     }
 }
@@ -238,11 +276,15 @@ impl Drop for Span {
 /// ticket, byte count, ... — whatever identifies the instance).
 #[inline]
 pub fn span(sub: Subsys, name: &'static str, arg: u64) -> Span {
-    if !enabled() {
-        return Span { live: false, sub, name };
+    let bits = active_bits();
+    if bits == 0 {
+        return Span { bits, t0: 0, sub, name };
     }
-    record(Ev::Begin { ts_us: now_us(), sub, name, arg });
-    Span { live: true, sub, name }
+    let t0 = now_us();
+    if bits & TRACE_BIT != 0 {
+        record(Ev::Begin { ts_us: t0, sub, name, arg });
+    }
+    Span { bits, t0, sub, name }
 }
 
 /// Record a point event.

@@ -1,0 +1,327 @@
+//! Span-folded profiles: collapse Begin/End span events into a
+//! hierarchical call tree (per-frame counts, total and self microseconds),
+//! exportable as a flamegraph-compatible folded-stacks text and a top-k
+//! table — so `solve --profile` and the `profile` subcommand answer
+//! "where did the time go" without opening a Chrome trace.
+//!
+//! Two sources fold into the same tree: in-memory [`TraceBuffer`]s right
+//! after a traced run, or a Chrome trace JSON written earlier (parsed with
+//! the same minimal JSON parser the validator uses).  Stacks are tracked
+//! per `(rank, lane)` — exactly the granularity at which spans are LIFO —
+//! and every rank's tree hangs under a synthetic `r<rank>` root frame so
+//! per-rank asymmetry stays visible in the flamegraph.
+
+use std::collections::HashMap;
+
+use super::chrome::json;
+use super::{Ev, TraceBuffer};
+use crate::util::table::Table;
+
+/// One frame in the folded call tree.
+#[derive(Debug, Clone)]
+pub struct ProfileNode {
+    /// Frame label: `lane.span` (e.g. `mg.smooth.pre`) or `r<rank>`.
+    pub name: String,
+    /// Completed spans folded into this frame.
+    pub count: u64,
+    /// Total microseconds (including children).
+    pub total_us: u64,
+    /// Microseconds attributed to direct children.
+    pub child_us: u64,
+    pub children: Vec<ProfileNode>,
+}
+
+impl ProfileNode {
+    pub fn self_us(&self) -> u64 {
+        self.total_us.saturating_sub(self.child_us)
+    }
+}
+
+/// A folded profile: one synthetic root per rank.
+#[derive(Debug, Clone, Default)]
+pub struct Profile {
+    pub roots: Vec<ProfileNode>,
+    /// Begin events whose End never arrived (ring overflow, truncation).
+    pub unmatched: u64,
+}
+
+/// Arena node used during folding (children indexed by label).
+struct ArenaNode {
+    name: String,
+    count: u64,
+    total_us: u64,
+    child_us: u64,
+    children: HashMap<String, usize>,
+    order: Vec<usize>,
+}
+
+struct Folder {
+    arena: Vec<ArenaNode>,
+    /// Root arena index per rank (sorted at the end).
+    roots: HashMap<u64, usize>,
+    /// Open-span stack per (rank, lane): (arena index, begin ts).
+    stacks: HashMap<(u64, u64), Vec<(usize, u64)>>,
+    unmatched: u64,
+}
+
+impl Folder {
+    fn new() -> Folder {
+        Folder { arena: Vec::new(), roots: HashMap::new(), stacks: HashMap::new(), unmatched: 0 }
+    }
+
+    fn node(&mut self, name: &str) -> usize {
+        self.arena.push(ArenaNode {
+            name: name.to_string(),
+            count: 0,
+            total_us: 0,
+            child_us: 0,
+            children: HashMap::new(),
+            order: Vec::new(),
+        });
+        self.arena.len() - 1
+    }
+
+    fn root_of(&mut self, rank: u64) -> usize {
+        if let Some(&idx) = self.roots.get(&rank) {
+            return idx;
+        }
+        let idx = self.node(&format!("r{rank}"));
+        self.roots.insert(rank, idx);
+        idx
+    }
+
+    fn child_of(&mut self, parent: usize, name: &str) -> usize {
+        if let Some(&idx) = self.arena[parent].children.get(name) {
+            return idx;
+        }
+        let idx = self.node(name);
+        self.arena[parent].children.insert(name.to_string(), idx);
+        self.arena[parent].order.push(idx);
+        idx
+    }
+
+    fn begin(&mut self, rank: u64, lane: u64, label: &str, ts: u64) {
+        let parent = match self.stacks.get(&(rank, lane)).and_then(|s| s.last()) {
+            Some(&(idx, _)) => idx,
+            None => self.root_of(rank),
+        };
+        let idx = self.child_of(parent, label);
+        self.stacks.entry((rank, lane)).or_default().push((idx, ts));
+    }
+
+    fn end(&mut self, rank: u64, lane: u64, ts: u64) {
+        let Some((idx, t0)) = self.stacks.get_mut(&(rank, lane)).and_then(|s| s.pop()) else {
+            self.unmatched += 1;
+            return;
+        };
+        let dur = ts.saturating_sub(t0);
+        self.arena[idx].count += 1;
+        self.arena[idx].total_us += dur;
+        let parent = match self.stacks.get(&(rank, lane)).and_then(|s| s.last()) {
+            Some(&(p, _)) => p,
+            None => self.root_of(rank),
+        };
+        self.arena[parent].child_us += dur;
+        // The rank root's total is the union of its children's time.
+        if self.roots.get(&rank) == Some(&parent) {
+            self.arena[parent].total_us += dur;
+        }
+    }
+
+    fn finish(mut self) -> Profile {
+        // Spans still open (End lost to ring overflow) count as unmatched.
+        for (_, stack) in self.stacks.iter() {
+            self.unmatched += stack.len() as u64;
+        }
+        let mut ranks: Vec<u64> = self.roots.keys().copied().collect();
+        ranks.sort_unstable();
+        let roots = ranks.iter().map(|r| build(&self.arena, self.roots[r])).collect();
+        Profile { roots, unmatched: self.unmatched }
+    }
+}
+
+fn build(arena: &[ArenaNode], idx: usize) -> ProfileNode {
+    let n = &arena[idx];
+    ProfileNode {
+        name: n.name.clone(),
+        count: n.count,
+        total_us: n.total_us,
+        child_us: n.child_us,
+        children: n.order.iter().map(|&c| build(arena, c)).collect(),
+    }
+}
+
+/// Fold in-memory per-rank trace buffers (the `solve --profile` path).
+pub fn fold_buffers(bufs: &[TraceBuffer]) -> Profile {
+    let mut f = Folder::new();
+    for buf in bufs {
+        let rank = buf.rank as u64;
+        for ev in &buf.events {
+            match *ev {
+                Ev::Begin { ts_us, sub, name, .. } => {
+                    let label = format!("{}.{name}", sub.name());
+                    f.begin(rank, sub.tid() as u64, &label, ts_us);
+                }
+                Ev::End { ts_us, sub, .. } => f.end(rank, sub.tid() as u64, ts_us),
+                _ => {}
+            }
+        }
+    }
+    f.finish()
+}
+
+/// Fold a Chrome trace JSON written by `--trace` (the `profile`
+/// subcommand path).  Only `B`/`E` phases participate; `X`/`i`/`C`/`M`
+/// events pass through untouched.
+pub fn fold_chrome_text(text: &str) -> Result<Profile, String> {
+    let v = json::parse(text)?;
+    let events = v
+        .as_object()
+        .and_then(|o| o.iter().find(|(k, _)| k == "traceEvents"))
+        .map(|(_, v)| v)
+        .and_then(|v| v.as_array())
+        .ok_or("missing \"traceEvents\" array")?;
+    let mut f = Folder::new();
+    for ev in events {
+        let obj = ev.as_object().ok_or("event is not an object")?;
+        let field = |key: &str| obj.iter().find(|(k, _)| k == key).map(|(_, v)| v);
+        let ph = field("ph").and_then(|v| v.as_str()).ok_or("event missing \"ph\"")?;
+        if ph != "B" && ph != "E" {
+            continue;
+        }
+        let pid = field("pid").and_then(|v| v.as_i64()).ok_or("span missing \"pid\"")? as u64;
+        let tid = field("tid").and_then(|v| v.as_i64()).ok_or("span missing \"tid\"")? as u64;
+        let ts = field("ts").and_then(|v| v.as_i64()).ok_or("span missing \"ts\"")? as u64;
+        if ph == "B" {
+            let name = field("name").and_then(|v| v.as_str()).ok_or("span missing \"name\"")?;
+            let cat = field("cat").and_then(|v| v.as_str()).unwrap_or("?");
+            f.begin(pid, tid, &format!("{cat}.{name}"), ts);
+        } else {
+            f.end(pid, tid, ts);
+        }
+    }
+    Ok(f.finish())
+}
+
+fn fold_lines(out: &mut String, node: &ProfileNode, prefix: &str) {
+    let path = if prefix.is_empty() {
+        node.name.clone()
+    } else {
+        format!("{prefix};{}", node.name)
+    };
+    if node.self_us() > 0 {
+        out.push_str(&format!("{path} {}\n", node.self_us()));
+    }
+    for c in &node.children {
+        fold_lines(out, c, &path);
+    }
+}
+
+/// Flamegraph-compatible folded stacks: one `frame;frame;... self_us`
+/// line per tree node with nonzero self time (feed to `flamegraph.pl` or
+/// speedscope).
+pub fn folded_stacks(p: &Profile) -> String {
+    let mut out = String::new();
+    for root in &p.roots {
+        fold_lines(&mut out, root, "");
+    }
+    out
+}
+
+fn collect<'a>(node: &'a ProfileNode, depth: usize, rows: &mut Vec<(&'a ProfileNode, usize)>) {
+    rows.push((node, depth));
+    for c in &node.children {
+        collect(c, depth + 1, rows);
+    }
+}
+
+/// Top-k frames by self time across all ranks, as a rendered table.
+pub fn top_table(p: &Profile, k: usize) -> Table {
+    let mut rows: Vec<(&ProfileNode, usize)> = Vec::new();
+    for root in &p.roots {
+        for c in &root.children {
+            collect(c, 0, &mut rows);
+        }
+    }
+    rows.sort_by(|a, b| b.0.self_us().cmp(&a.0.self_us()));
+    let mut t = Table::new(vec!["frame", "count", "self_ms", "total_ms"]);
+    for (node, _) in rows.iter().take(k) {
+        t.row(vec![
+            node.name.clone(),
+            format!("{}", node.count),
+            format!("{:.3}", node.self_us() as f64 / 1e3),
+            format!("{:.3}", node.total_us as f64 / 1e3),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{self, Subsys};
+
+    fn sample_buffer() -> TraceBuffer {
+        obs::rank_begin(0);
+        {
+            let _cycle = obs::span(Subsys::Mg, "cycle", 0);
+            {
+                let _sm = obs::span(Subsys::Mg, "smooth.pre", 0);
+            }
+            {
+                let _sm = obs::span(Subsys::Mg, "smooth.pre", 0);
+            }
+            let _pt = obs::span(Subsys::Ptap, "numeric", 0);
+        }
+        obs::rank_take()
+    }
+
+    #[test]
+    fn fold_builds_nested_tree_with_self_time() {
+        let buf = sample_buffer();
+        let p = fold_buffers(&[buf]);
+        assert_eq!(p.unmatched, 0);
+        assert_eq!(p.roots.len(), 1);
+        let root = &p.roots[0];
+        assert_eq!(root.name, "r0");
+        // Two lanes: mg.cycle (with nested smooth.pre ×2) and ptap.numeric.
+        let cycle = root.children.iter().find(|c| c.name == "mg.cycle").unwrap();
+        assert_eq!(cycle.count, 1);
+        let sm = cycle.children.iter().find(|c| c.name == "mg.smooth.pre").unwrap();
+        assert_eq!(sm.count, 2);
+        assert!(cycle.total_us >= cycle.child_us);
+        assert!(root.children.iter().any(|c| c.name == "ptap.numeric"));
+        // Root total is the union of its direct children.
+        assert_eq!(root.total_us, root.child_us);
+    }
+
+    #[test]
+    fn chrome_round_trip_matches_buffer_fold() {
+        let buf = sample_buffer();
+        let direct = fold_buffers(&[buf.clone()]);
+        let text = crate::obs::chrome::render_chrome_trace(&[buf]);
+        let via_json = fold_chrome_text(&text).expect("parse rendered trace");
+        fn names(n: &ProfileNode) -> Vec<String> {
+            let mut v = vec![format!("{}:{}", n.name, n.count)];
+            for c in &n.children {
+                v.extend(names(c));
+            }
+            v
+        }
+        assert_eq!(names(&direct.roots[0]), names(&via_json.roots[0]));
+    }
+
+    #[test]
+    fn folded_stacks_and_top_table_render() {
+        let p = fold_buffers(&[sample_buffer()]);
+        let stacks = folded_stacks(&p);
+        for line in stacks.lines() {
+            let (path, n) = line.rsplit_once(' ').expect("folded line has a trailing count");
+            assert!(n.parse::<u64>().is_ok(), "bad sample count in {line:?}");
+            assert!(path.starts_with("r0"), "stack must start at the rank frame");
+        }
+        let table = top_table(&p, 10).render();
+        assert!(table.contains("mg.smooth.pre"));
+        assert!(table.contains("ptap.numeric"));
+    }
+}

@@ -121,6 +121,8 @@ impl<'rt> TripleBatcher<'rt> {
         let n = self.tags.len();
         self.flushes += 1;
         let _sp = crate::obs::span(crate::obs::Subsys::Batch, "triple.flush", n as u64);
+        crate::obs::metrics::add(crate::obs::Subsys::Batch, "triple.flushes", 1);
+        crate::obs::metrics::add(crate::obs::Subsys::Batch, "triple.products", n as u64);
         match self.backend {
             BlockBackend::Native => {
                 let mut out = vec![0.0f64; bb];
@@ -261,6 +263,8 @@ impl<'rt> SpmvBatcher<'rt> {
         let n = self.tags.len();
         self.flushes += 1;
         let _sp = crate::obs::span(crate::obs::Subsys::Batch, "spmv.flush", n as u64);
+        crate::obs::metrics::add(crate::obs::Subsys::Batch, "spmv.flushes", 1);
+        crate::obs::metrics::add(crate::obs::Subsys::Batch, "spmv.mults", n as u64);
         match self.backend {
             BlockBackend::Native => {
                 let mut out = vec![0.0f64; b];

@@ -139,8 +139,10 @@ impl SessionCache {
         let hit = self.entries.contains_key(&key);
         if hit {
             self.hits += 1;
+            crate::obs::metrics::add(crate::obs::Subsys::Session, "cache.hit", 1);
         } else {
             self.misses += 1;
+            crate::obs::metrics::add(crate::obs::Subsys::Session, "cache.miss", 1);
             let stale: Vec<SessionKey> = self
                 .entries
                 .keys()
@@ -175,6 +177,11 @@ pub struct QueuedSolve {
     pub queue_wait: f64,
     /// Seconds from `submit` to batch completion (queue wait + solve).
     pub e2e: f64,
+    /// Health verdict from this column's residual history
+    /// ([`crate::obs::health::residual_verdict`] under the default
+    /// policy).  A `Diverging` ticket should be reported to its client as
+    /// an error; the batch's other columns are unaffected.
+    pub verdict: crate::obs::health::Verdict,
 }
 
 /// One pending right-hand side with its latency bookkeeping.
@@ -232,6 +239,12 @@ impl RequestQueue {
             0
         };
         self.pending.push(Pending { ticket, b, submitted: Instant::now(), submit_us });
+        crate::obs::metrics::add(crate::obs::Subsys::Session, "requests", 1);
+        crate::obs::metrics::gauge(
+            crate::obs::Subsys::Session,
+            "queue.depth",
+            self.pending.len() as u64,
+        );
         ticket
     }
 
@@ -281,6 +294,8 @@ impl RequestQueue {
             "flush.decide",
             pending.len() as u64,
         );
+        crate::obs::metrics::gauge(crate::obs::Subsys::Session, "queue.depth", 0);
+        let deadline_secs = self.deadline.as_secs_f64();
 
         let dispatch_start = Instant::now();
         let cols: Vec<&DistVec> = pending.iter().map(|p| &p.b).collect();
@@ -306,12 +321,46 @@ impl RequestQueue {
                         crate::obs::now_us(),
                     );
                 }
+                let queue_wait = (dispatch_start - p.submitted).as_secs_f64();
+                let e2e = (dispatch_end - p.submitted).as_secs_f64();
+                let verdict = crate::obs::health::residual_verdict(
+                    &result.residuals,
+                    result.converged,
+                    &crate::obs::health::HealthPolicy::default(),
+                );
+                if crate::obs::metrics::enabled() {
+                    crate::obs::metrics::observe(
+                        crate::obs::Subsys::Session,
+                        "queue.wait_us",
+                        (queue_wait * 1e6) as u64,
+                    );
+                    crate::obs::metrics::observe(
+                        crate::obs::Subsys::Session,
+                        "request.e2e_us",
+                        (e2e * 1e6) as u64,
+                    );
+                    if queue_wait >= deadline_secs {
+                        crate::obs::metrics::add(
+                            crate::obs::Subsys::Session,
+                            "deadline.miss",
+                            1,
+                        );
+                    }
+                    if verdict == crate::obs::health::Verdict::Diverging {
+                        crate::obs::metrics::add(
+                            crate::obs::Subsys::Session,
+                            "request.failed",
+                            1,
+                        );
+                    }
+                }
                 QueuedSolve {
                     ticket: p.ticket,
                     x: x.column(j),
                     result,
-                    queue_wait: (dispatch_start - p.submitted).as_secs_f64(),
-                    e2e: (dispatch_end - p.submitted).as_secs_f64(),
+                    queue_wait,
+                    e2e,
+                    verdict,
                 }
             })
             .collect()

@@ -19,6 +19,16 @@ impl ByteWriter {
     }
 
     #[inline]
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    #[inline]
+    pub fn bytes(&mut self, bs: &[u8]) {
+        self.buf.extend_from_slice(bs);
+    }
+
+    #[inline]
     pub fn u32(&mut self, v: u32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
@@ -79,6 +89,20 @@ impl<'a> ByteReader<'a> {
     }
 
     #[inline]
+    pub fn u8(&mut self) -> u8 {
+        let v = self.buf[self.pos];
+        self.pos += 1;
+        v
+    }
+
+    #[inline]
+    pub fn bytes(&mut self, n: usize) -> &'a [u8] {
+        let v = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        v
+    }
+
+    #[inline]
     pub fn u32(&mut self) -> u32 {
         let v = u32::from_le_bytes(self.buf[self.pos..self.pos + 4].try_into().unwrap());
         self.pos += 4;
@@ -119,12 +143,16 @@ mod tests {
         w.u64(1 << 40);
         w.f64(-2.5);
         w.u64_slice(&[1, 2, 3]);
+        w.u8(9);
+        w.bytes(b"metric.name");
         let bytes = w.into_bytes();
         let mut r = ByteReader::new(&bytes);
         assert_eq!(r.u32(), 7);
         assert_eq!(r.u64(), 1 << 40);
         assert_eq!(r.f64(), -2.5);
         assert_eq!([r.u64(), r.u64(), r.u64()], [1, 2, 3]);
+        assert_eq!(r.u8(), 9);
+        assert_eq!(r.bytes(11), b"metric.name");
         assert!(r.done());
     }
 }

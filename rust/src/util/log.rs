@@ -1,0 +1,169 @@
+//! Tiny leveled logger: rank-prefixed diagnostics on stderr/stdout with a
+//! process-wide max level from `GPTAP_LOG` (error/warn/info/debug) or a
+//! programmatic override (`--quiet` maps to [`Level::Error`]).
+//!
+//! Rank threads tag themselves once with [`set_rank`] (done by
+//! `dist::World::run`), after which every line carries `r<rank>` so
+//! interleaved output from simulated ranks stays attributable.  The
+//! coordinator thread logs without a rank prefix.
+
+use std::cell::Cell;
+use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Severity, most severe first.  A message is emitted when its level is
+/// at or above the configured max (`Error` always prints).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" | "e" | "0" => Some(Level::Error),
+            "warn" | "warning" | "w" | "1" => Some(Level::Warn),
+            "info" | "i" | "2" => Some(Level::Info),
+            "debug" | "d" | "3" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+
+    fn from_u8(v: u8) -> Level {
+        match v {
+            0 => Level::Error,
+            1 => Level::Warn,
+            2 => Level::Info,
+            _ => Level::Debug,
+        }
+    }
+}
+
+/// Sentinel: max level not yet resolved from the environment.
+const UNSET: u8 = u8::MAX;
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(UNSET);
+
+thread_local! {
+    static RANK: Cell<i64> = const { Cell::new(-1) };
+}
+
+/// Tag the calling thread as a simulated rank; every subsequent log line
+/// from this thread carries an `r<rank>` prefix.
+pub fn set_rank(rank: usize) {
+    RANK.with(|r| r.set(rank as i64));
+}
+
+/// Current max level: resolved lazily from `GPTAP_LOG`, default `Info`.
+pub fn max_level() -> Level {
+    let v = MAX_LEVEL.load(Ordering::Relaxed);
+    if v != UNSET {
+        return Level::from_u8(v);
+    }
+    let lvl = std::env::var("GPTAP_LOG")
+        .ok()
+        .and_then(|s| Level::parse(&s))
+        .unwrap_or(Level::Info);
+    MAX_LEVEL.store(lvl as u8, Ordering::Relaxed);
+    lvl
+}
+
+/// Programmatic override of the max level (`--quiet` → `Level::Error`).
+/// Wins over `GPTAP_LOG`.
+pub fn set_max_level(lvl: Level) {
+    MAX_LEVEL.store(lvl as u8, Ordering::Relaxed);
+}
+
+/// Would a message at `lvl` be emitted?  Cheap guard for callers that
+/// format expensive diagnostics.
+#[inline]
+pub fn level_enabled(lvl: Level) -> bool {
+    lvl <= max_level()
+}
+
+fn render(lvl: Level, rank: i64, args: fmt::Arguments<'_>) -> String {
+    if rank >= 0 {
+        format!("[{} r{rank}] {args}", lvl.tag())
+    } else {
+        format!("[{}] {args}", lvl.tag())
+    }
+}
+
+/// Emit one line at `lvl`.  Errors and warnings go to stderr, info and
+/// debug to stdout.  Prefer the `log_error!`/`log_warn!`/`log_info!`/
+/// `log_debug!` macros over calling this directly.
+pub fn log(lvl: Level, args: fmt::Arguments<'_>) {
+    if !level_enabled(lvl) {
+        return;
+    }
+    let line = RANK.with(|r| render(lvl, r.get(), args));
+    if lvl <= Level::Warn {
+        eprintln!("{line}");
+    } else {
+        println!("{line}");
+    }
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($t:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Error, format_args!($($t)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($t:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn, format_args!($($t)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($t:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info, format_args!($($t)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($t:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug, format_args!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_parse_and_order() {
+        assert_eq!(Level::parse("error"), Some(Level::Error));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse(" info "), Some(Level::Info));
+        assert_eq!(Level::parse("d"), Some(Level::Debug));
+        assert_eq!(Level::parse("verbose"), None);
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn render_prefixes_rank_when_tagged() {
+        let plain = render(Level::Warn, -1, format_args!("x = {}", 3));
+        assert_eq!(plain, "[WARN] x = 3");
+        let ranked = render(Level::Error, 5, format_args!("boom"));
+        assert_eq!(ranked, "[ERROR r5] boom");
+    }
+}

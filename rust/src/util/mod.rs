@@ -4,8 +4,10 @@
 
 pub mod bytebuf;
 pub mod error;
+pub mod log;
 pub mod plot;
 pub mod prng;
+pub mod stats;
 pub mod table;
 pub mod timer;
 

@@ -1,0 +1,96 @@
+//! Shared order statistics: the nearest-rank percentile used by the bench
+//! latency cells and the streaming bucket percentile used by the live
+//! metrics histograms (`obs::metrics`).
+
+/// Nearest-rank percentile of an unsorted sample (p in [0, 100]).
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+    s[idx.min(s.len() - 1)]
+}
+
+/// Nearest-rank percentile over pre-bucketed counts: walks the cumulative
+/// counts (no sort, no per-sample storage) and returns `rep(i)` — the
+/// caller's representative value — for the bucket holding the p-th sample.
+///
+/// This is the streaming-histogram counterpart of [`percentile`]: the
+/// rolling-window snapshot in `obs::metrics` keeps only log₂ bucket counts,
+/// so percentiles are exact to bucket resolution rather than sample
+/// resolution.
+pub fn bucket_percentile(counts: &[u64], p: f64, rep: impl Fn(usize) -> f64) -> f64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    // Nearest-rank index into the (implicitly sorted) sample sequence.
+    let idx = ((p / 100.0) * (total as f64 - 1.0)).round() as u64;
+    let mut seen = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        seen += c;
+        if c > 0 && seen > idx {
+            return rep(i);
+        }
+    }
+    // p > 100 or rounding pushed past the end: last non-empty bucket.
+    let last = counts.iter().rposition(|&c| c > 0).unwrap();
+    rep(last)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_of_empty_is_zero() {
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[], 0.0), 0.0);
+        assert_eq!(percentile(&[], 100.0), 0.0);
+    }
+
+    #[test]
+    fn percentile_of_singleton_is_the_sample() {
+        for p in [0.0, 37.5, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[4.25], p), 4.25);
+        }
+    }
+
+    #[test]
+    fn percentile_exact_boundaries() {
+        // Five samples: index = round(p/100 * 4).
+        let s = [10.0, 20.0, 30.0, 40.0, 50.0];
+        assert_eq!(percentile(&s, 0.0), 10.0);
+        assert_eq!(percentile(&s, 25.0), 20.0);
+        assert_eq!(percentile(&s, 50.0), 30.0);
+        assert_eq!(percentile(&s, 75.0), 40.0);
+        assert_eq!(percentile(&s, 100.0), 50.0);
+        // Unsorted input sorts first; p past 100 clamps to the max.
+        let shuffled = [40.0, 10.0, 50.0, 30.0, 20.0];
+        assert_eq!(percentile(&shuffled, 50.0), 30.0);
+        assert_eq!(percentile(&shuffled, 200.0), 50.0);
+    }
+
+    #[test]
+    fn bucket_percentile_matches_nearest_rank() {
+        // Buckets [0..4) with representative = index; counts mimic the
+        // sample sequence 0,0,1,2,2,2,3 (seven samples).
+        let counts = [2u64, 1, 3, 1];
+        let rep = |i: usize| i as f64;
+        assert_eq!(bucket_percentile(&counts, 0.0, rep), 0.0);
+        assert_eq!(bucket_percentile(&counts, 50.0, rep), 2.0);
+        assert_eq!(bucket_percentile(&counts, 100.0, rep), 3.0);
+    }
+
+    #[test]
+    fn bucket_percentile_empty_and_singleton() {
+        assert_eq!(bucket_percentile(&[], 50.0, |i| i as f64), 0.0);
+        assert_eq!(bucket_percentile(&[0, 0, 0], 99.0, |i| i as f64), 0.0);
+        let one = [0u64, 0, 1, 0];
+        for p in [0.0, 50.0, 100.0] {
+            assert_eq!(bucket_percentile(&one, p, |i| i as f64), 2.0);
+        }
+    }
+}

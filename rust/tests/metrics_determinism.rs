@@ -1,0 +1,121 @@
+//! The metrics registry is observation only: arming it around a full
+//! MG-PCG solve must leave the residual histories, the comm engine's
+//! message accounting (counts, bytes, size-class histogram) and the
+//! memory tracker's peaks bitwise identical to a disarmed run.  The comm
+//! snapshot is captured BEFORE the collective merge round — the snapshot
+//! allgather itself sends messages and must never leak into the
+//! comparison.
+
+use galerkin_ptap::dist::{CommStats, CsrOperator, DistSpmv, DistVec, World};
+use galerkin_ptap::gen::{grid_laplacian, Grid3};
+use galerkin_ptap::mem::MemTracker;
+use galerkin_ptap::mg::{
+    build_hierarchy, geometric_chain, pcg, Coarsening, HierarchyConfig, MgOpts, MgPreconditioner,
+};
+use galerkin_ptap::obs;
+
+const NP: usize = 4;
+
+fn run(metrics: bool) -> Vec<(Vec<f64>, CommStats, u64, Option<obs::metrics::MetricsSnapshot>)> {
+    World::new(NP).run(move |c| {
+        if metrics {
+            obs::metrics::rank_begin(c.rank());
+        }
+        let grids = geometric_chain(Grid3::cube(3), 3);
+        let tracker = MemTracker::new();
+        let a0 = grid_laplacian(grids[0], c.rank(), c.size());
+        let layout = a0.row_layout.clone();
+        let h = build_hierarchy(
+            &c,
+            a0.clone(),
+            &Coarsening::Geometric { grids: grids.clone() },
+            HierarchyConfig::default(),
+            &tracker,
+        );
+        let spmv = DistSpmv::new(&c, &a0);
+        let op = CsrOperator::new(&a0, &spmv);
+        let mut pc = MgPreconditioner::new(&c, h, MgOpts::default());
+        let b = DistVec::from_fn(layout.clone(), c.rank(), |g| ((g * 13 % 7) as f64) - 3.0);
+        let mut x = DistVec::zeros(layout, c.rank());
+        let res = pcg(&c, &op, &b, &mut x, Some(&mut pc), 1e-8, 60);
+        assert!(res.converged);
+        // capture comm accounting BEFORE disarming: rank_take is local,
+        // but any merge collective after this point would add traffic
+        let stats = c.stats_global();
+        let snap = if metrics { Some(obs::metrics::rank_take()) } else { None };
+        (res.residuals, stats, tracker.peak_total(), snap)
+    })
+}
+
+#[test]
+fn armed_metrics_leave_numerics_and_accounting_bitwise_identical() {
+    let off = run(false);
+    let on = run(true);
+    for (rank, (o, n)) in off.iter().zip(&on).enumerate() {
+        assert_eq!(o.0.len(), n.0.len(), "rank {rank}: iteration counts differ");
+        for (i, (a, b)) in o.0.iter().zip(&n.0).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "rank {rank} residual {i}: {a} vs {b}"
+            );
+        }
+        assert_eq!(
+            (o.1.msgs, o.1.bytes),
+            (n.1.msgs, n.1.bytes),
+            "rank {rank}: metrics must not change message accounting"
+        );
+        assert_eq!(
+            o.1.hist, n.1.hist,
+            "rank {rank}: metrics must not change the size-class histogram"
+        );
+        assert_eq!(
+            o.1.close_waits, n.1.close_waits,
+            "rank {rank}: metrics must not add or drop epoch barriers"
+        );
+        assert_eq!(o.2, n.2, "rank {rank}: metrics must not change tracker peaks");
+        // the armed run did register real series across subsystems
+        let snap = n.3.as_ref().expect("armed run returns a snapshot");
+        assert!(!snap.entries.is_empty(), "rank {rank}: armed run registered nothing");
+        for (sub, name) in
+            [("mg", "cycles"), ("solve", "pcg.iters"), ("comm", "msgs.exchange")]
+        {
+            assert!(
+                snap.entries.iter().any(|e| e.sub == sub && e.name == name),
+                "rank {rank}: expected series {sub}/{name} in {:?}",
+                snap.entries.iter().map(|e| format!("{}/{}", e.sub, e.name)).collect::<Vec<_>>()
+            );
+        }
+        // span-fed stage histograms registered without tracing armed
+        assert!(
+            snap.entries.iter().any(|e| e.sub == "mg" && e.name == "smooth.pre"),
+            "rank {rank}: cycle-stage spans must feed metrics histograms"
+        );
+    }
+    // the disarmed run must hand back nothing
+    assert!(off.iter().all(|r| r.3.is_none()));
+}
+
+/// Every rank folds the allgathered snapshots in rank order, so the
+/// merged JSONL snapshot line is identical on every rank and passes the
+/// self-contained schema checker.
+#[test]
+fn merged_snapshot_renders_identical_valid_jsonl_on_every_rank() {
+    let lines = World::new(NP).run(|c| {
+        obs::metrics::rank_begin(c.rank());
+        obs::metrics::add(obs::Subsys::Session, "requests", (c.rank() + 1) as u64);
+        obs::metrics::observe(obs::Subsys::Mg, "work_us", 10 * (c.rank() as u64 + 1));
+        let snap = obs::metrics::rank_take();
+        let merged = obs::metrics::merge_global(&c, &snap);
+        assert_eq!(merged.ranks, NP);
+        merged.jsonl_line(1, 123)
+    });
+    for w in lines.windows(2) {
+        assert_eq!(w[0], w[1], "merged snapshot must not depend on the rank");
+    }
+    let check = obs::metrics::validate_stats_jsonl(&lines[0]).expect("schema-valid line");
+    assert_eq!(check.lines, 1);
+    assert!(check.metrics >= 2, "both series must survive the merge");
+    assert!(lines[0].contains("\"requests\""));
+    assert!(lines[0].contains("\"work_us\""));
+}

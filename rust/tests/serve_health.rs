@@ -1,0 +1,131 @@
+//! Graceful degradation: a divergent request inside a batch is flagged by
+//! the health watchdog and reported as a per-ticket error, while the
+//! server-side session state (retained hierarchy, request queue) stays
+//! clean — the batch-mate and every subsequent request are bitwise what a
+//! fresh server would have produced.
+//!
+//! The poisoned right-hand side uses finite entries around 1e300: the
+//! norm's sum of squares overflows to +inf, so the initial residual is
+//! non-finite and [`galerkin_ptap::obs::health::residual_verdict`] must
+//! return `Diverging` regardless of what the NaN arithmetic does to the
+//! rest of that column's history.
+
+use std::time::Duration;
+
+use galerkin_ptap::dist::{CsrOperator, DistSpmv, DistVec, World};
+use galerkin_ptap::gen::{grid_laplacian, Grid3};
+use galerkin_ptap::mem::MemTracker;
+use galerkin_ptap::mg::{geometric_chain, pcg, Coarsening, HierarchyConfig, MgOpts};
+use galerkin_ptap::obs;
+use galerkin_ptap::obs::health::Verdict;
+use galerkin_ptap::session::{RequestQueue, SessionCache};
+
+const NP: usize = 2;
+const RTOL: f64 = 1e-8;
+const MAX_ITERS: usize = 40;
+
+#[test]
+fn divergent_ticket_fails_cleanly_and_session_stays_bitwise_fresh() {
+    World::new(NP).run(|c| {
+        obs::metrics::rank_begin(c.rank());
+        let grids = geometric_chain(Grid3::cube(3), 3);
+        let coarsening = Coarsening::Geometric { grids: grids.clone() };
+        let a = grid_laplacian(grids[0], c.rank(), c.size());
+        let layout = a.row_layout.clone();
+        let tracker = MemTracker::new();
+        let spmv = DistSpmv::new(&c, &a);
+        let op = CsrOperator::new(&a, &spmv);
+        let rhs = |s: usize| {
+            DistVec::from_fn(layout.clone(), c.rank(), |g| {
+                ((g as f64) * 0.21 + s as f64).sin()
+            })
+        };
+        // finite entries whose squared sum overflows: a client sent
+        // garbage scaling, not literal NaNs
+        let bad = DistVec::from_fn(layout.clone(), c.rank(), |g| {
+            (((g as f64) * 0.21).sin() + 1.5) * 1e300
+        });
+
+        // the server under test: one retained hierarchy, capacity-2 queue
+        let mut cache = SessionCache::new();
+        let (r, hit) = cache.checkout(
+            &c,
+            &a,
+            &coarsening,
+            HierarchyConfig::default(),
+            MgOpts::default(),
+            &tracker,
+        );
+        assert!(!hit);
+        let mut q = RequestQueue::new(2, Duration::from_secs(3600));
+        let t_good = q.submit(rhs(0));
+        let t_bad = q.submit(bad);
+        let done = q.flush(&c, &op, Some(r.pc()), RTOL, MAX_ITERS, &tracker);
+        assert_eq!(done.len(), 2);
+
+        // the watchdog flags the poisoned ticket; it errors cleanly
+        // (verdict on the QueuedSolve), the server keeps running
+        let d_bad = done.iter().find(|d| d.ticket == t_bad).unwrap();
+        assert_eq!(d_bad.verdict, Verdict::Diverging, "watchdog must flag the bad ticket");
+        assert!(!d_bad.result.converged);
+        assert!(
+            d_bad.result.residuals.iter().any(|v| !v.is_finite()),
+            "poisoned column must show a non-finite residual"
+        );
+
+        // a reference server that never saw the poisoned request
+        let mut fresh_cache = SessionCache::new();
+        let (rf, _) = fresh_cache.checkout(
+            &c,
+            &a,
+            &coarsening,
+            HierarchyConfig::default(),
+            MgOpts::default(),
+            &tracker,
+        );
+
+        // the batch-mate is untouched: bitwise the solve a fresh server
+        // would have produced for it alone
+        let d_good = done.iter().find(|d| d.ticket == t_good).unwrap();
+        assert_eq!(d_good.verdict, Verdict::Healthy);
+        assert!(d_good.result.converged);
+        let mut x_solo = DistVec::zeros(layout.clone(), c.rank());
+        let res_solo = pcg(&c, &op, &rhs(0), &mut x_solo, Some(rf.pc()), RTOL, MAX_ITERS);
+        assert!(res_solo.converged);
+        assert_eq!(
+            d_good.x.vals, x_solo.vals,
+            "good column contaminated by its divergent batch-mate"
+        );
+        assert_eq!(d_good.result.residuals, res_solo.residuals);
+        assert_eq!(d_good.result.iterations, res_solo.iterations);
+
+        // the session keeps serving: the next batch through the SAME
+        // retained hierarchy and queue is bitwise the fresh server's
+        let t2 = [q.submit(rhs(1)), q.submit(rhs(2))];
+        assert!(q.should_flush());
+        let done2 = q.flush(&c, &op, Some(r.pc()), RTOL, MAX_ITERS, &tracker);
+        let mut qf = RequestQueue::new(2, Duration::from_secs(3600));
+        let tf = [qf.submit(rhs(1)), qf.submit(rhs(2))];
+        let fresh2 = qf.flush(&c, &op, Some(rf.pc()), RTOL, MAX_ITERS, &tracker);
+        assert_eq!(done2.len(), 2);
+        for ((d, f), (td, tfk)) in done2.iter().zip(&fresh2).zip(t2.iter().zip(&tf)) {
+            assert_eq!((d.ticket, f.ticket), (*td, *tfk));
+            assert_eq!(d.verdict, Verdict::Healthy);
+            assert!(d.result.converged);
+            assert_eq!(
+                d.x.vals, f.x.vals,
+                "session state poisoned by the earlier divergent ticket"
+            );
+            assert_eq!(d.result.residuals, f.result.residuals);
+        }
+
+        // the failure was counted exactly once in the live metrics
+        let snap = obs::metrics::rank_take();
+        let failed = snap
+            .entries
+            .iter()
+            .find(|e| e.sub == "session" && e.name == "request.failed")
+            .expect("request.failed counter registered");
+        assert_eq!(failed.value, 1, "exactly one ticket diverged");
+    });
+}
