@@ -1,0 +1,308 @@
+//! Chaos soak harness: sweep a deterministic fault-plan matrix over the
+//! paper's workloads and assert that every faulted run is **bitwise
+//! identical** to its fault-free twin — residual histories, solutions,
+//! verdicts and logical message counts all match, with the damage fully
+//! absorbed by the reliable transport (DESIGN.md §14).
+//!
+//! Three scenarios cover the stack top to bottom:
+//! - `solve`   — symbolic hierarchy build + MG-PCG (the gather planning,
+//!   triple products and halo exchanges of one cold solve);
+//! - `refresh` — retained hierarchy with two numeric refreshes and a
+//!   solve after each (the reuse path's redistribution traffic);
+//! - `serve`   — the session layer end to end: cache checkout, queued
+//!   requests, guarded batched dispatch.
+//!
+//! Every cell arms the metrics registry and captures one merged snapshot
+//! line, so the recovery counters (`comm.retransmits`, ...) land in a
+//! `stats-check`-valid JSONL artifact next to the pass/fail verdicts.
+
+use std::time::{Duration, Instant};
+
+use crate::dist::{Comm, CsrOperator, DistSpmv, DistVec, FaultPlan, ReliabilityStats, World};
+use crate::gen::{grid_laplacian, Grid3};
+use crate::mem::MemTracker;
+use crate::mg::{
+    build_hierarchy, geometric_chain, pcg, Coarsening, HierarchyConfig, MgOpts, MgPreconditioner,
+};
+use crate::reuse::HierarchyRefresher;
+use crate::session::{RequestQueue, SessionCache};
+
+/// One cell of the chaos matrix: one scenario run under one fault plan,
+/// compared against its fault-free twin.
+#[derive(Debug, Clone)]
+pub struct ChaosCell {
+    pub scenario: &'static str,
+    /// Short name of the fault plan ("drop", "corrupt", ...).
+    pub plan: &'static str,
+    /// The exact plan spec ([`FaultPlan`] grammar) the cell ran under.
+    pub spec: String,
+    pub np: usize,
+    /// The faulted run's numeric fingerprint (residual bits, solution
+    /// bits, verdicts) equals the clean run's.
+    pub bitwise_ok: bool,
+    /// Logical message/byte counts match the clean run (retransmits and
+    /// protocol frames are not logical traffic and must not leak in).
+    pub msgs_ok: bool,
+    /// Transport recovery counters, summed over ranks.
+    pub rel: ReliabilityStats,
+    /// Wall seconds of the faulted run.
+    pub secs: f64,
+    /// Rank 0's merged metrics snapshot line for this cell.
+    pub jsonl: String,
+}
+
+impl ChaosCell {
+    /// A cell passes when the numerics and traffic are bitwise and
+    /// nothing was lost beyond recovery.
+    pub fn ok(&self) -> bool {
+        self.bitwise_ok && self.msgs_ok && self.rel.timeouts == 0
+    }
+}
+
+/// The fault-plan matrix the soak sweeps: every fault kind the injector
+/// knows at rates high enough to exercise recovery on every scenario,
+/// plus one mixed plan.  Specs round-trip through [`FaultPlan::parse`];
+/// seeds are derived from `seed` so one `--seed` pins the whole matrix.
+pub fn chaos_plans(seed: u64) -> Vec<(&'static str, String)> {
+    vec![
+        ("drop", format!("seed={seed};tag=*,drop=0.05")),
+        ("corrupt", format!("seed={};tag=*,corrupt=0.05", seed.wrapping_add(1))),
+        ("reorder", format!("seed={};tag=*,delay=0.25,hold=3", seed.wrapping_add(2))),
+        ("dup", format!("seed={};tag=*,dup=0.1", seed.wrapping_add(3))),
+        ("stall", format!("seed={};rank=1,tag=*,stall_ms=2,nth=5", seed.wrapping_add(4))),
+        (
+            "mixed",
+            format!(
+                "seed={};tag=*,drop=0.05;tag=*,corrupt=0.05;tag=*,dup=0.1;tag=*,delay=0.2,hold=2",
+                seed.wrapping_add(5)
+            ),
+        ),
+    ]
+}
+
+/// What one scenario run yields: the numeric fingerprint, the logical
+/// traffic, the summed reliability counters and rank 0's snapshot line.
+struct Outcome {
+    fp: Vec<u64>,
+    msgs: u64,
+    bytes: u64,
+    rel: ReliabilityStats,
+    jsonl: String,
+}
+
+fn run_scenario(scenario: &str, np: usize, plan: Option<FaultPlan>, snapshot_no: u64) -> Outcome {
+    let world = World::new(np)
+        .with_fault_plan(plan)
+        .with_comm_timeout(Duration::from_secs(60));
+    let per_rank = world.run(|comm| {
+        crate::obs::metrics::rank_begin(comm.rank());
+        crate::obs::metrics::register_reliability_series();
+        let fp = match scenario {
+            "solve" => solve_fp(&comm),
+            "refresh" => refresh_fp(&comm),
+            "serve" => serve_fp(&comm),
+            other => panic!("unknown chaos scenario {other:?}"),
+        };
+        let stats = comm.stats_global();
+        let rel = comm.reliability();
+        let snap = crate::obs::metrics::rank_take();
+        let merged = crate::obs::metrics::merge_global(&comm, &snap);
+        let ts = crate::obs::now_us();
+        let line = (comm.rank() == 0).then(|| merged.jsonl_line(snapshot_no, ts));
+        (fp, stats, rel, line)
+    });
+    let mut fp = Vec::new();
+    let mut rel = ReliabilityStats::default();
+    for r in &per_rank {
+        fp.extend_from_slice(&r.0);
+        rel.merge(r.2);
+    }
+    Outcome {
+        fp,
+        msgs: per_rank.iter().map(|r| r.1.msgs).sum(),
+        bytes: per_rank.iter().map(|r| r.1.bytes).sum(),
+        rel,
+        jsonl: per_rank[0].3.clone().expect("rank 0 renders the snapshot line"),
+    }
+}
+
+/// Cold build + MG-PCG solve; fingerprints the residual history and the
+/// local solution shard.
+fn solve_fp(comm: &Comm) -> Vec<u64> {
+    let grids = geometric_chain(Grid3::cube(3), 3);
+    let tracker = MemTracker::new();
+    let a0 = grid_laplacian(grids[0], comm.rank(), comm.size());
+    let h = build_hierarchy(
+        comm,
+        a0.clone(),
+        &Coarsening::Geometric { grids: grids.clone() },
+        HierarchyConfig::default(),
+        &tracker,
+    );
+    let spmv = DistSpmv::new(comm, &a0);
+    let op = CsrOperator::new(&a0, &spmv);
+    let mut pc = MgPreconditioner::new(comm, h, MgOpts::default());
+    let layout = a0.row_layout.clone();
+    let b = DistVec::from_fn(layout.clone(), comm.rank(), |g| {
+        (((g * 13) % 17) as f64 - 8.0) / 8.0
+    });
+    let mut x = DistVec::zeros(layout, comm.rank());
+    let res = pcg(comm, &op, &b, &mut x, Some(&mut pc), 1e-8, 50);
+    let mut fp = vec![res.iterations as u64, u64::from(res.converged)];
+    fp.extend(res.residuals.iter().map(|r| r.to_bits()));
+    fp.extend(x.vals.iter().map(|v| v.to_bits()));
+    fp
+}
+
+/// Retained hierarchy + two numeric refreshes with drifting coefficient
+/// values, solving after each; fingerprints every round.
+fn refresh_fp(comm: &Comm) -> Vec<u64> {
+    let grids = geometric_chain(Grid3::cube(3), 3);
+    let tracker = MemTracker::new();
+    let a0 = grid_laplacian(grids[0], comm.rank(), comm.size());
+    let cfg = HierarchyConfig { retain: true, ..HierarchyConfig::default() };
+    let h = build_hierarchy(
+        comm,
+        a0.clone(),
+        &Coarsening::Geometric { grids: grids.clone() },
+        cfg,
+        &tracker,
+    );
+    let mut refresher = HierarchyRefresher::new(comm, h, MgOpts::default(), &tracker);
+    let spmv = DistSpmv::new(comm, &a0);
+    let layout = a0.row_layout.clone();
+    let mut fp = Vec::new();
+    for round in 1..=2usize {
+        let mut a1 = a0.clone();
+        let factor = 1.0 + 0.25 * round as f64;
+        for v in a1.diag.vals.iter_mut().chain(a1.offd.vals.iter_mut()) {
+            *v *= factor;
+        }
+        refresher.refresh(comm, &a1);
+        let op = CsrOperator::new(&a1, &spmv);
+        let b = DistVec::from_fn(layout.clone(), comm.rank(), |g| {
+            (((g * 7 + round) % 11) as f64 - 5.0) / 5.0
+        });
+        let mut x = DistVec::zeros(layout.clone(), comm.rank());
+        let res = pcg(comm, &op, &b, &mut x, Some(refresher.pc()), 1e-8, 50);
+        fp.push(res.iterations as u64);
+        fp.extend(res.residuals.iter().map(|r| r.to_bits()));
+        fp.extend(x.vals.iter().map(|v| v.to_bits()));
+    }
+    fp
+}
+
+/// Session layer end to end: cache checkout, admission-controlled
+/// submits, guarded batched dispatch; fingerprints tickets, verdicts,
+/// histories and solutions.
+fn serve_fp(comm: &Comm) -> Vec<u64> {
+    let grids = geometric_chain(Grid3::cube(3), 2);
+    let tracker = MemTracker::new();
+    let a0 = grid_laplacian(grids[0], comm.rank(), comm.size());
+    let coarsening = Coarsening::Geometric { grids: grids.clone() };
+    let cfg = HierarchyConfig::default();
+    let mut cache = SessionCache::new();
+    let (refresher, _) =
+        cache.checkout(comm, &a0, &coarsening, cfg, MgOpts::default(), &tracker);
+    let spmv = DistSpmv::new(comm, &a0);
+    let op = CsrOperator::new(&a0, &spmv);
+    let layout = a0.row_layout.clone();
+    let mut queue = RequestQueue::new(3, Duration::from_secs(3600));
+    let mut fp = Vec::new();
+    let mut drain = |queue: &mut RequestQueue, fp: &mut Vec<u64>| {
+        for d in queue.flush_guarded(comm, &op, Some(refresher.pc()), 1e-8, 60, &tracker) {
+            fp.push(d.ticket);
+            fp.push(d.verdict as u64);
+            fp.push(d.result.iterations as u64);
+            fp.extend(d.result.residuals.iter().map(|r| r.to_bits()));
+            fp.extend(d.x.vals.iter().map(|v| v.to_bits()));
+        }
+    };
+    for s in 0..7usize {
+        queue
+            .try_submit(
+                comm,
+                DistVec::from_fn(layout.clone(), comm.rank(), move |g| {
+                    (((g * 11 + s * 3) % 19) as f64 - 9.0) / 9.0
+                }),
+                &tracker,
+                0,
+                None,
+            )
+            .expect("budget 0 never sheds");
+        if queue.should_flush() {
+            drain(&mut queue, &mut fp);
+        }
+    }
+    if !queue.is_empty() {
+        drain(&mut queue, &mut fp);
+    }
+    fp
+}
+
+/// Run the full matrix: for each rank count and scenario, one fault-free
+/// baseline, then every plan in [`chaos_plans`] compared against it.
+pub fn run_chaos_matrix(nps: &[usize], seed: u64) -> Vec<ChaosCell> {
+    const SCENARIOS: [&str; 3] = ["solve", "refresh", "serve"];
+    let mut cells = Vec::new();
+    let mut snapshot_no = 0u64;
+    for &np in nps {
+        for scenario in SCENARIOS {
+            let clean = run_scenario(scenario, np, None, 0);
+            assert_eq!(
+                clean.rel.faults_injected, 0,
+                "fault-free baseline must not inject"
+            );
+            for (name, spec) in chaos_plans(seed) {
+                let plan = FaultPlan::parse(&spec)
+                    .unwrap_or_else(|e| panic!("chaos plan {name}: {e}"));
+                snapshot_no += 1;
+                let t = Instant::now();
+                let run = run_scenario(scenario, np, Some(plan), snapshot_no);
+                cells.push(ChaosCell {
+                    scenario,
+                    plan: name,
+                    spec: spec.clone(),
+                    np,
+                    bitwise_ok: run.fp == clean.fp,
+                    msgs_ok: run.msgs == clean.msgs && run.bytes == clean.bytes,
+                    rel: run.rel,
+                    secs: t.elapsed().as_secs_f64(),
+                    jsonl: run.jsonl,
+                });
+            }
+        }
+    }
+    cells
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One small cell of the matrix end to end: a lossy-plan solve must
+    /// be bitwise its clean twin with real recovery traffic behind it.
+    /// (The full matrix is the CI `chaos` subcommand's job.)
+    #[test]
+    fn dropped_frames_recover_bitwise_in_the_solve_scenario() {
+        let clean = run_scenario("solve", 2, None, 0);
+        let plan = FaultPlan::parse("seed=21;tag=*,drop=0.2").unwrap();
+        let run = run_scenario("solve", 2, Some(plan), 1);
+        assert_eq!(run.fp, clean.fp, "faulted solve drifted from the clean run");
+        assert_eq!((run.msgs, run.bytes), (clean.msgs, clean.bytes));
+        assert!(run.rel.faults_injected > 0, "plan injected nothing");
+        assert!(run.rel.retransmits > 0, "drops must force retransmits");
+        assert_eq!(run.rel.timeouts, 0);
+        crate::obs::metrics::validate_stats_jsonl(&run.jsonl).expect("snapshot line schema");
+    }
+
+    #[test]
+    fn chaos_plan_specs_parse_and_cover_every_fault_kind() {
+        let plans = chaos_plans(7);
+        assert_eq!(plans.len(), 6);
+        for (name, spec) in &plans {
+            let p = FaultPlan::parse(spec).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(!p.rules.is_empty(), "{name} has no rules");
+        }
+    }
+}

@@ -833,6 +833,115 @@ pub fn run_telemetry_overhead_bench(
     }
 }
 
+/// Reliability-overhead cell: the same MG-PCG solve with the transport's
+/// reliability machinery disarmed (no fault plan) and armed with an
+/// *empty* plan — checksums computed and verified, retransmit buffers
+/// retained, ACK barriers on every epoch close, but zero injected
+/// faults.  The armed run must be bitwise identical, must produce zero
+/// recovery traffic, and its overhead is the gated
+/// `reliability_overhead_frac` bench cell (DESIGN.md §14).
+#[derive(Debug, Clone)]
+pub struct ReliabilityCell {
+    pub np: usize,
+    /// Max-busy-rank seconds with the transport disarmed (min over repeats).
+    pub solve_secs_off: f64,
+    /// Same solve with the empty fault plan armed (min over repeats).
+    pub solve_secs_on: f64,
+    /// `max(0, (on - off) / off)` — the armed-path overhead fraction.
+    pub overhead_frac: f64,
+    /// Sum of the armed run's recovery counters (retransmits, corrupt
+    /// frames, NACK round trips, duplicate suppressions) across ranks —
+    /// must be zero under an empty plan.
+    pub recovery_events: u64,
+    /// Faults the armed run injected — must be zero under an empty plan.
+    pub faults_injected: u64,
+}
+
+/// Run the reliability-overhead bench: two worlds over the same problem,
+/// one with the reliable transport disarmed and one armed with an empty
+/// fault plan.  Each world warms up once and times `repeats` identical
+/// MG-PCG solves; the reported time per mode is the min-over-repeats of
+/// the max-busy rank.  Residual histories are asserted bitwise equal
+/// across modes, so the cell doubles as a transport-transparency check.
+pub fn run_reliability_overhead_bench(
+    coarse: Grid3,
+    levels: usize,
+    np: usize,
+    repeats: usize,
+) -> ReliabilityCell {
+    use crate::dist::{FaultPlan, ReliabilityStats};
+    use crate::util::timer::BusyTimer;
+    assert!(repeats >= 1, "reliability bench needs at least one repeat");
+    let grids = geometric_chain(coarse, levels);
+    let run_mode = |plan: Option<FaultPlan>| {
+        let world = World::new(np).with_fault_plan(plan);
+        let per_rank = world.run(|comm| {
+            let tracker = MemTracker::new();
+            let a0 = grid_laplacian(grids[0], comm.rank(), comm.size());
+            let layout = a0.row_layout.clone();
+            let h = build_hierarchy(
+                &comm,
+                a0.clone(),
+                &Coarsening::Geometric { grids: grids.clone() },
+                HierarchyConfig::default(),
+                &tracker,
+            );
+            let spmv = DistSpmv::new(&comm, &a0);
+            let op = CsrOperator::new(&a0, &spmv);
+            let mut pc = MgPreconditioner::new(&comm, h, MgOpts::default());
+            let b = DistVec::from_fn(layout.clone(), comm.rank(), |g| {
+                (((g * 7) % 23) as f64 - 11.0) / 11.0
+            });
+            let mut solve = |pc: &mut MgPreconditioner| {
+                let mut x = DistVec::zeros(layout.clone(), comm.rank());
+                let mut t = BusyTimer::new();
+                t.start();
+                let res = pcg(&comm, &op, &b, &mut x, Some(pc), 1e-8, 60);
+                t.stop();
+                (t.total(), res.residuals)
+            };
+            let (_, base) = solve(&mut pc); // warmup
+            let mut secs = Vec::with_capacity(repeats);
+            for _ in 0..repeats {
+                let (s, r) = solve(&mut pc);
+                assert_eq!(r, base, "repeat drifted from warmup");
+                secs.push(s);
+            }
+            let bits: Vec<u64> = base.iter().map(|r| r.to_bits()).collect();
+            (secs, bits, comm.reliability())
+        });
+        let mut rel = ReliabilityStats::default();
+        for r in &per_rank {
+            rel.merge(r.2);
+        }
+        let mut best = f64::INFINITY;
+        for rep in 0..repeats {
+            let m = per_rank.iter().map(|r| r.0[rep]).fold(0.0f64, f64::max);
+            best = best.min(m);
+        }
+        let fps: Vec<Vec<u64>> = per_rank.into_iter().map(|r| r.1).collect();
+        (best, fps, rel)
+    };
+    let (off, off_fp, off_rel) = run_mode(None);
+    let (on, on_fp, on_rel) = run_mode(Some(FaultPlan::empty(0x5eed)));
+    assert_eq!(off_fp, on_fp, "armed transport perturbed the numerics");
+    assert_eq!(
+        off_rel.faults_injected, 0,
+        "disarmed run reported injected faults"
+    );
+    ReliabilityCell {
+        np,
+        solve_secs_off: off,
+        solve_secs_on: on,
+        overhead_frac: if off > 0.0 { ((on - off) / off).max(0.0) } else { 0.0 },
+        recovery_events: on_rel.retransmits
+            + on_rel.corrupt_frames
+            + on_rel.nack_roundtrips
+            + on_rel.dup_suppressed,
+        faults_injected: on_rel.faults_injected,
+    }
+}
+
 /// Which time-dependent workload drives the hierarchy refresh.
 #[derive(Debug, Clone, Copy)]
 pub enum TimedepWorkload {

@@ -2,15 +2,17 @@
 //! experiments, aggregates per-rank measurements into the tables the
 //! paper prints (Tables 1–8, Figures 1–10).
 
+mod chaos;
 mod experiment;
 mod report;
 
+pub use chaos::{chaos_plans, run_chaos_matrix, ChaosCell};
 pub use experiment::{
     run_block_kernel_bench, run_hierarchy_bench, run_level0_bench, run_model_problem,
-    run_neutron, run_telemetry_overhead_bench, run_throughput_bench, run_timedep,
-    BlockKernelCell, HierarchyBenchResult, Level0Cell, ModelProblemConfig, ModelProblemResult,
-    NeutronConfigExp, NeutronResult, TelemetryCell, ThroughputCell, TimedepConfig,
-    TimedepResult, TimedepWorkload,
+    run_neutron, run_reliability_overhead_bench, run_telemetry_overhead_bench,
+    run_throughput_bench, run_timedep, BlockKernelCell, HierarchyBenchResult, Level0Cell,
+    ModelProblemConfig, ModelProblemResult, NeutronConfigExp, NeutronResult, ReliabilityCell,
+    TelemetryCell, ThroughputCell, TimedepConfig, TimedepResult, TimedepWorkload,
 };
 pub use report::{
     diff_bench, eff_column, level_tables, model_problem_tables, neutron_tables,

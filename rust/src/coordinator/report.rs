@@ -8,7 +8,7 @@ use crate::util::{fmt_secs, mb};
 
 use super::experiment::{
     BlockKernelCell, HierarchyBenchResult, Level0Cell, ModelProblemResult, NeutronResult,
-    TelemetryCell, ThroughputCell, TimedepResult,
+    ReliabilityCell, TelemetryCell, ThroughputCell, TimedepResult,
 };
 
 /// Speedups relative to the smallest rank count *within one algorithm*
@@ -172,9 +172,12 @@ pub fn timedep_table(r: &TimedepResult) -> Table {
 /// operator bytes, flops/byte, matrix-free memory delta); one record
 /// per batched block-kernel cell; one record per multi-RHS
 /// throughput cell (per-solve message/byte share and solves/sec vs the
-/// batch width K); and one record per telemetry-overhead cell (armed vs
-/// disarmed busy seconds and their ratio) — the numbers [`diff_bench`]
-/// compares across PRs.  Hand-rolled JSON (no serde offline).
+/// batch width K); one record per telemetry-overhead cell (armed vs
+/// disarmed busy seconds and their ratio); and one record per
+/// reliability-overhead cell (reliable-transport armed vs disarmed busy
+/// seconds plus the recovery counters, which must stay zero under an
+/// empty fault plan) — the numbers [`diff_bench`] compares across PRs.
+/// Hand-rolled JSON (no serde offline).
 pub fn write_bench_json(
     rows: &[ModelProblemResult],
     hier: &[HierarchyBenchResult],
@@ -183,6 +186,7 @@ pub fn write_bench_json(
     block: &[BlockKernelCell],
     throughput: &[ThroughputCell],
     telemetry: &[TelemetryCell],
+    reliability: &[ReliabilityCell],
     path: &Path,
 ) -> std::io::Result<()> {
     let fmt_list = |v: &[u64]| -> String {
@@ -331,6 +335,22 @@ pub fn write_bench_json(
             if i + 1 < telemetry.len() { "," } else { "" }
         ));
     }
+    s.push_str("  ],\n  \"reliability\": [\n");
+    for (i, c) in reliability.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"kind\": \"reliability\", \"np\": {}, \
+             \"solve_secs_off\": {:.6e}, \"solve_secs_on\": {:.6e}, \
+             \"reliability_overhead_frac\": {:.6e}, \
+             \"recovery_events\": {}, \"faults_injected\": {}}}{}\n",
+            c.np,
+            c.solve_secs_off,
+            c.solve_secs_on,
+            c.overhead_frac,
+            c.recovery_events,
+            c.faults_injected,
+            if i + 1 < reliability.len() { "," } else { "" }
+        ));
+    }
     s.push_str("  ]\n}\n");
     std::fs::write(path, s)
 }
@@ -418,7 +438,7 @@ fn cell_key(cell: &BenchCell) -> String {
 /// Metrics the regression gate watches, with per-metric absolute floors
 /// (modeled times at smoke scale sit in the microsecond range where
 /// scheduler noise dominates; counters and bytes are deterministic).
-const DIFF_METRICS: [(&str, f64); 25] = [
+const DIFF_METRICS: [(&str, f64); 27] = [
     ("time_sym_modeled", 1e-3),
     ("time_num_modeled", 1e-3),
     ("time_cal_modeled", 1e-3),
@@ -459,6 +479,11 @@ const DIFF_METRICS: [(&str, f64); 25] = [
     // budget — an absolute floor of 5 points keeps busy-time noise at
     // smoke scale from tripping the gate while real hook bloat does
     ("telemetry_overhead_frac", 0.05),
+    // reliability cells: the armed reliable transport must stay inside
+    // its 3-point budget, and an empty fault plan must never generate
+    // recovery traffic (any growth from zero trips the gate)
+    ("reliability_overhead_frac", 0.03),
+    ("recovery_events", 0.0),
 ];
 
 /// Higher-is-better metrics: a DROP is the regression.  The second field
@@ -673,6 +698,17 @@ mod tests {
         }]
     }
 
+    fn sample_reliability() -> Vec<ReliabilityCell> {
+        vec![ReliabilityCell {
+            np: 2,
+            solve_secs_off: 1.00e-3,
+            solve_secs_on: 1.01e-3,
+            overhead_frac: 0.01,
+            recovery_events: 0,
+            faults_injected: 0,
+        }]
+    }
+
     fn sample_throughput() -> Vec<ThroughputCell> {
         vec![ThroughputCell {
             scenario: "mgpcg",
@@ -704,6 +740,7 @@ mod tests {
             &sample_block(),
             &sample_throughput(),
             &sample_telemetry(),
+            &sample_reliability(),
             &path,
         )
         .unwrap();
@@ -729,6 +766,9 @@ mod tests {
         assert!(s.contains("\"kind\": \"telemetry\""), "{s}");
         assert!(s.contains("\"telemetry_overhead_frac\""), "{s}");
         assert!(s.contains("\"metrics_registered\": 30"), "{s}");
+        assert!(s.contains("\"kind\": \"reliability\""), "{s}");
+        assert!(s.contains("\"reliability_overhead_frac\""), "{s}");
+        assert!(s.contains("\"recovery_events\": 0"), "{s}");
         let _ = std::fs::remove_file(&path);
     }
 
@@ -743,6 +783,7 @@ mod tests {
             &sample_block(),
             &sample_throughput(),
             &sample_telemetry(),
+            &sample_reliability(),
             &path,
         )
         .unwrap();
@@ -751,8 +792,8 @@ mod tests {
         let cells = parse_bench_cells(&s);
         assert_eq!(
             cells.len(),
-            8,
-            "model + hierarchy + refresh + 2 level0 + block + throughput + telemetry"
+            9,
+            "model + hierarchy + refresh + 2 level0 + block + throughput + telemetry + reliability"
         );
         assert_eq!(cell_field(&cells[0], "algo"), Some("\"allatonce\""));
         assert_eq!(cell_field(&cells[0], "num_msgs"), Some("4"));
@@ -767,6 +808,10 @@ mod tests {
         assert_eq!(cell_field(&cells[6], "k"), Some("4"));
         assert_eq!(cell_field(&cells[7], "kind"), Some("\"telemetry\""));
         assert_eq!(cell_field(&cells[7], "metrics_registered"), Some("30"));
+        assert_eq!(cell_field(&cells[8], "kind"), Some("\"reliability\""));
+        assert_eq!(cell_field(&cells[8], "recovery_events"), Some("0"));
+        // telemetry vs reliability cells share np but must key apart
+        assert_ne!(cell_key(&cells[7]), cell_key(&cells[8]));
         // model vs refresh cells share algo/np but must not collide
         assert_ne!(cell_key(&cells[0]), cell_key(&cells[2]));
         // the two level0 modes must key apart
@@ -797,6 +842,7 @@ mod tests {
                 &sample_block(),
                 &sample_throughput(),
                 &sample_telemetry(),
+                &sample_reliability(),
                 &path,
             )
             .unwrap();
@@ -840,6 +886,7 @@ mod tests {
                 &sample_block(),
                 &sample_throughput(),
                 &sample_telemetry(),
+                &sample_reliability(),
                 &path,
             )
             .unwrap();
@@ -888,6 +935,7 @@ mod tests {
                 &block,
                 &sample_throughput(),
                 &sample_telemetry(),
+                &sample_reliability(),
                 &path,
             )
             .unwrap();
@@ -930,6 +978,7 @@ mod tests {
                 &sample_block(),
                 &thr,
                 &sample_telemetry(),
+                &sample_reliability(),
                 &path,
             )
             .unwrap();
@@ -971,6 +1020,7 @@ mod tests {
                 &sample_block(),
                 &sample_throughput(),
                 &tel,
+                &sample_reliability(),
                 &path,
             )
             .unwrap();
@@ -988,6 +1038,49 @@ mod tests {
         // wobble under the absolute floor stays clean
         assert!(diff_bench(&base, &mk(0.04), 0.10).is_empty());
         assert!(diff_bench(&mk(0.20), &base, 0.10).is_empty(), "improvement flagged");
+    }
+
+    #[test]
+    fn diff_bench_gates_reliability_overhead_and_recovery_traffic() {
+        let mk = |frac: f64, recovery: u64| {
+            let mut rel = sample_reliability();
+            rel[0].overhead_frac = frac;
+            rel[0].solve_secs_on = rel[0].solve_secs_off * (1.0 + frac);
+            rel[0].recovery_events = recovery;
+            let path = std::env::temp_dir()
+                .join(format!("gptap_bench_rel_{}_{recovery}.json", (frac * 1e3) as u64));
+            write_bench_json(
+                &sample_rows(),
+                &sample_hier(),
+                &sample_refresh(),
+                &sample_level0(),
+                &sample_block(),
+                &sample_throughput(),
+                &sample_telemetry(),
+                &rel,
+                &path,
+            )
+            .unwrap();
+            let s = std::fs::read_to_string(&path).unwrap();
+            let _ = std::fs::remove_file(&path);
+            s
+        };
+        let base = mk(0.005, 0);
+        // the armed transport blowing through the 3-point budget trips
+        let regs = diff_bench(&base, &mk(0.10, 0), 0.10);
+        assert!(
+            regs.iter().any(|r| r.contains("reliability_overhead_frac")),
+            "reliability overhead regression missed: {regs:?}"
+        );
+        // recovery traffic appearing under an empty plan trips (0 -> n)
+        let regs = diff_bench(&base, &mk(0.005, 3), 0.10);
+        assert!(
+            regs.iter().any(|r| r.contains("recovery_events")),
+            "recovery-event regression missed: {regs:?}"
+        );
+        // wobble under the absolute floor stays clean
+        assert!(diff_bench(&base, &mk(0.02, 0), 0.10).is_empty());
+        assert!(diff_bench(&mk(0.10, 0), &base, 0.10).is_empty(), "improvement flagged");
     }
 
     #[test]

@@ -1,0 +1,579 @@
+//! Deterministic fault injection for the simulated transport.
+//!
+//! A [`FaultPlan`] is a seeded list of per-rank, per-tag-class rules —
+//! drop, blackhole (drop without a retransmit copy), bit-flip
+//! corruption, duplication, delay (reorder), and a transient rank stall.
+//! The plan is installed into the [`super::world::World`] (CLI
+//! `--fault-plan` or the `GPTAP_FAULT` env) and consulted on the send
+//! side of every data frame, behind a zero-cost-when-absent
+//! `Option` check: with no plan the transport takes its original path.
+//!
+//! Decisions are drawn from a per-rank xoshiro stream seeded from
+//! `(plan.seed, world_rank)`, so a given (plan, world size, program)
+//! triple injects the exact same faults on every run — chaos results are
+//! reproducible, and the reliability layer's recovery can be asserted
+//! bitwise against a fault-free run.
+//!
+//! ## Plan grammar
+//!
+//! Semicolon-separated items; each item is `seed=N` or one rule of
+//! comma-separated `key=value` pairs:
+//!
+//! ```text
+//! seed=7;rank=*,tag=*,drop=0.05;rank=1,tag=gather,corrupt=0.02
+//! tag=ptap_num,delay=0.2,hold=3
+//! rank=2,tag=*,stall_ms=5,nth=10
+//! ```
+//!
+//! - `rank=<r|*>` — world rank whose *sends* the rule matches (default `*`);
+//! - `tag=<class|*>` — user tag class (`exchange`, `gather`, `ptap_sym`,
+//!   `ptap_num`, `redist`, or a number; default `*`);
+//! - exactly one action: `drop=p`, `blackhole=p`, `corrupt=p`, `dup=p`,
+//!   `delay=p` (with optional `hold=k` sends, default 3), or
+//!   `stall_ms=m` (with optional `nth=n`, default 1: sleep `m` ms once,
+//!   at the rule's n-th matching send).
+//!
+//! Collective frames are never faulted: the reliability protocol covers
+//! the epoch engine, and faulting barrier frames would only test the
+//! timeout path, which has its own hook.
+
+use crate::util::prng::Rng;
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::fmt;
+
+/// Environment variable holding a fault-plan spec for every [`super::World`].
+pub const ENV_FAULT: &str = "GPTAP_FAULT";
+
+/// What the plan does to one matching data frame.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultAction {
+    /// Don't transmit; the retransmit buffer recovers it on NACK.
+    Drop { p: f64 },
+    /// Don't transmit AND don't keep a retransmit copy: a permanent
+    /// loss, which the receiver's deadline turns into a `CommError`.
+    Blackhole { p: f64 },
+    /// Flip one payload bit in the transmitted copy (the retransmit
+    /// copy stays intact, so the NACK round recovers the true bytes).
+    Corrupt { p: f64 },
+    /// Transmit the frame twice (duplicate suppression eats the echo).
+    Duplicate { p: f64 },
+    /// Park the frame and release it after `hold` later sends to the
+    /// same destination (or at epoch close) — genuine reordering.
+    Delay { p: f64, hold: u32 },
+    /// Sleep `ms` milliseconds once, at this rule's `nth` matching send:
+    /// a transient rank stall.
+    Stall { ms: u64, nth: u64 },
+}
+
+/// One plan rule: scope (sender rank, user tag class) plus an action.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultRule {
+    /// Sender world rank the rule applies to (`None` = every rank).
+    pub rank: Option<usize>,
+    /// User tag class the rule applies to (`None` = every class).
+    pub tag: Option<u32>,
+    pub action: FaultAction,
+}
+
+impl FaultRule {
+    fn matches(&self, rank: usize, tag_class: u32) -> bool {
+        self.rank.is_none_or(|r| r == rank) && self.tag.is_none_or(|t| t == tag_class)
+    }
+}
+
+/// A seeded, deterministic fault schedule for one world.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub rules: Vec<FaultRule>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan { seed: 0x5eed, rules: Vec::new() }
+    }
+}
+
+fn parse_prob(key: &str, v: &str) -> Result<f64, String> {
+    let p: f64 =
+        v.parse().map_err(|_| format!("fault plan: bad probability '{v}' for '{key}'"))?;
+    if !(0.0..=1.0).contains(&p) {
+        return Err(format!("fault plan: probability '{key}={p}' outside [0, 1]"));
+    }
+    Ok(p)
+}
+
+fn parse_tag_class(v: &str) -> Result<u32, String> {
+    use super::world::tag;
+    Ok(match v {
+        "exchange" => tag::EXCHANGE,
+        "gather" => tag::GATHER,
+        "ptap_sym" => tag::PTAP_SYM,
+        "ptap_num" => tag::PTAP_NUM,
+        "redist" => tag::REDIST,
+        _ => v.parse().map_err(|_| format!("fault plan: unknown tag class '{v}'"))?,
+    })
+}
+
+fn tag_class_name(t: u32) -> String {
+    use super::world::tag;
+    match t {
+        tag::EXCHANGE => "exchange".into(),
+        tag::GATHER => "gather".into(),
+        tag::PTAP_SYM => "ptap_sym".into(),
+        tag::PTAP_NUM => "ptap_num".into(),
+        tag::REDIST => "redist".into(),
+        other => other.to_string(),
+    }
+}
+
+impl FaultPlan {
+    /// A plan with a seed and no rules: arms the reliability layer
+    /// (checksums, ACK barriers) without injecting any fault — what the
+    /// overhead bench and the zero-retransmit assertions run under.
+    pub fn empty(seed: u64) -> FaultPlan {
+        FaultPlan { seed, rules: Vec::new() }
+    }
+
+    /// Parse the plan grammar (module docs).  Errors name the offending
+    /// key so a bad `--fault-plan` fails fast and legibly.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for item in spec.split(';').map(str::trim).filter(|s| !s.is_empty()) {
+            if let Some(v) = item.strip_prefix("seed=") {
+                plan.seed = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("fault plan: bad seed '{v}'"))?;
+                continue;
+            }
+            let mut rank = None;
+            let mut tag = None;
+            let mut action: Option<FaultAction> = None;
+            let mut hold: Option<u32> = None;
+            let mut nth: Option<u64> = None;
+            let mut set_action = |a: FaultAction| -> Result<(), String> {
+                if action.is_some() {
+                    return Err(format!("fault plan: rule '{item}' has two actions"));
+                }
+                action = Some(a);
+                Ok(())
+            };
+            for pair in item.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                let (key, v) = pair
+                    .split_once('=')
+                    .ok_or_else(|| format!("fault plan: expected key=value, got '{pair}'"))?;
+                let (key, v) = (key.trim(), v.trim());
+                match key {
+                    "rank" => {
+                        rank = if v == "*" {
+                            None
+                        } else {
+                            Some(
+                                v.parse::<usize>()
+                                    .map_err(|_| format!("fault plan: bad rank '{v}'"))?,
+                            )
+                        }
+                    }
+                    "tag" => {
+                        tag = if v == "*" { None } else { Some(parse_tag_class(v)?) };
+                    }
+                    "drop" => set_action(FaultAction::Drop { p: parse_prob(key, v)? })?,
+                    "blackhole" => {
+                        set_action(FaultAction::Blackhole { p: parse_prob(key, v)? })?
+                    }
+                    "corrupt" => set_action(FaultAction::Corrupt { p: parse_prob(key, v)? })?,
+                    "dup" => set_action(FaultAction::Duplicate { p: parse_prob(key, v)? })?,
+                    "delay" => {
+                        set_action(FaultAction::Delay { p: parse_prob(key, v)?, hold: 3 })?
+                    }
+                    "hold" => {
+                        hold = Some(
+                            v.parse().map_err(|_| format!("fault plan: bad hold '{v}'"))?,
+                        )
+                    }
+                    "stall_ms" => set_action(FaultAction::Stall {
+                        ms: v.parse().map_err(|_| format!("fault plan: bad stall_ms '{v}'"))?,
+                        nth: 1,
+                    })?,
+                    "nth" => {
+                        nth = Some(
+                            v.parse().map_err(|_| format!("fault plan: bad nth '{v}'"))?,
+                        )
+                    }
+                    other => return Err(format!("fault plan: unknown key '{other}'")),
+                }
+            }
+            let mut action =
+                action.ok_or_else(|| format!("fault plan: rule '{item}' has no action"))?;
+            match (&mut action, hold, nth) {
+                (FaultAction::Delay { hold: h, .. }, Some(k), _) => *h = k.max(1),
+                (_, Some(_), _) => {
+                    return Err("fault plan: 'hold' only applies to 'delay' rules".into())
+                }
+                (FaultAction::Stall { nth: n, .. }, _, Some(k)) => *n = k.max(1),
+                (_, _, Some(_)) => {
+                    return Err("fault plan: 'nth' only applies to 'stall_ms' rules".into())
+                }
+                _ => {}
+            }
+            plan.rules.push(FaultRule { rank, tag, action });
+        }
+        Ok(plan)
+    }
+
+    /// Plan from `GPTAP_FAULT`, if set.  An unparsable spec panics:
+    /// silently running fault-free when chaos was requested would
+    /// invalidate whatever the caller was soaking.
+    pub fn from_env() -> Option<FaultPlan> {
+        let spec = std::env::var(ENV_FAULT).ok()?;
+        if spec.trim().is_empty() {
+            return None;
+        }
+        match FaultPlan::parse(&spec) {
+            Ok(p) => Some(p),
+            Err(e) => panic!("{ENV_FAULT}: {e}"),
+        }
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "seed={}", self.seed)?;
+        for r in &self.rules {
+            write!(f, ";rank=")?;
+            match r.rank {
+                Some(k) => write!(f, "{k}")?,
+                None => write!(f, "*")?,
+            }
+            write!(f, ",tag=")?;
+            match r.tag {
+                Some(t) => write!(f, "{}", tag_class_name(t))?,
+                None => write!(f, "*")?,
+            }
+            match r.action {
+                FaultAction::Drop { p } => write!(f, ",drop={p}")?,
+                FaultAction::Blackhole { p } => write!(f, ",blackhole={p}")?,
+                FaultAction::Corrupt { p } => write!(f, ",corrupt={p}")?,
+                FaultAction::Duplicate { p } => write!(f, ",dup={p}")?,
+                FaultAction::Delay { p, hold } => write!(f, ",delay={p},hold={hold}")?,
+                FaultAction::Stall { ms, nth } => write!(f, ",stall_ms={ms},nth={nth}")?,
+            }
+        }
+        Ok(())
+    }
+}
+
+/// What the transport should do with one outgoing data frame.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SendFate {
+    Deliver,
+    Drop,
+    Blackhole,
+    Corrupt,
+    Duplicate,
+    Delay { hold: u32 },
+}
+
+/// One send's verdict: a fate plus an optional stall (the stall applies
+/// on top of whatever the fate is — a stalled rank still sends).
+#[derive(Debug, Clone, Copy)]
+pub struct FaultDecision {
+    pub fate: SendFate,
+    pub stall_ms: u64,
+}
+
+/// Cumulative faults this rank's plan has injected, by kind.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct FaultCounts {
+    pub drops: u64,
+    pub blackholes: u64,
+    pub corruptions: u64,
+    pub duplicates: u64,
+    pub delays: u64,
+    pub stalls: u64,
+}
+
+impl FaultCounts {
+    pub fn total(&self) -> u64 {
+        self.drops + self.blackholes + self.corruptions + self.duplicates + self.delays
+            + self.stalls
+    }
+}
+
+/// A parked (delayed) frame: released after `after` more sends to its
+/// destination, or when an epoch close flushes the destination's limbo.
+struct Parked {
+    frame: Vec<u8>,
+    after: u32,
+}
+
+/// Per-rank runtime of a [`FaultPlan`]: the seeded decision stream, the
+/// per-rule stall counters, the delay limbo, and the injected-fault
+/// counters the chaos harness reports.
+pub struct FaultState {
+    plan: FaultPlan,
+    rank: usize,
+    rng: RefCell<Rng>,
+    /// Matching-send count per rule (drives `stall nth`).
+    rule_hits: Vec<Cell<u64>>,
+    /// Delayed frames per destination world rank.
+    limbo: RefCell<HashMap<usize, Vec<Parked>>>,
+    drops: Cell<u64>,
+    blackholes: Cell<u64>,
+    corruptions: Cell<u64>,
+    duplicates: Cell<u64>,
+    delays: Cell<u64>,
+    stalls: Cell<u64>,
+}
+
+impl FaultState {
+    pub fn new(plan: FaultPlan, world_rank: usize) -> FaultState {
+        // Decorrelate ranks without losing determinism: golden-ratio
+        // stride on the world rank, folded into the plan seed.
+        let seed = plan
+            .seed
+            .wrapping_add((world_rank as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let nrules = plan.rules.len();
+        FaultState {
+            plan,
+            rank: world_rank,
+            rng: RefCell::new(Rng::new(seed)),
+            rule_hits: (0..nrules).map(|_| Cell::new(0)).collect(),
+            limbo: RefCell::new(HashMap::new()),
+            drops: Cell::new(0),
+            blackholes: Cell::new(0),
+            corruptions: Cell::new(0),
+            duplicates: Cell::new(0),
+            delays: Cell::new(0),
+            stalls: Cell::new(0),
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Decide the fate of one outgoing data frame on user tag class
+    /// `tag_class`.  Rules are evaluated in plan order; the first
+    /// probabilistic rule that fires wins the fate (every matching rule
+    /// still draws, so one rule's outcome never shifts another's
+    /// stream).  Stalls stack on top of the fate.
+    pub fn decide(&self, tag_class: u32) -> FaultDecision {
+        let mut rng = self.rng.borrow_mut();
+        let mut fate = SendFate::Deliver;
+        let mut stall_ms = 0u64;
+        for (i, rule) in self.plan.rules.iter().enumerate() {
+            if !rule.matches(self.rank, tag_class) {
+                continue;
+            }
+            let hits = &self.rule_hits[i];
+            hits.set(hits.get() + 1);
+            match rule.action {
+                FaultAction::Stall { ms, nth } => {
+                    if hits.get() == nth {
+                        stall_ms += ms;
+                        self.stalls.set(self.stalls.get() + 1);
+                    }
+                }
+                FaultAction::Drop { p } => {
+                    let hit = rng.chance(p);
+                    if hit && fate == SendFate::Deliver {
+                        fate = SendFate::Drop;
+                        self.drops.set(self.drops.get() + 1);
+                    }
+                }
+                FaultAction::Blackhole { p } => {
+                    let hit = rng.chance(p);
+                    if hit && fate == SendFate::Deliver {
+                        fate = SendFate::Blackhole;
+                        self.blackholes.set(self.blackholes.get() + 1);
+                    }
+                }
+                FaultAction::Corrupt { p } => {
+                    let hit = rng.chance(p);
+                    if hit && fate == SendFate::Deliver {
+                        fate = SendFate::Corrupt;
+                        self.corruptions.set(self.corruptions.get() + 1);
+                    }
+                }
+                FaultAction::Duplicate { p } => {
+                    let hit = rng.chance(p);
+                    if hit && fate == SendFate::Deliver {
+                        fate = SendFate::Duplicate;
+                        self.duplicates.set(self.duplicates.get() + 1);
+                    }
+                }
+                FaultAction::Delay { p, hold } => {
+                    let hit = rng.chance(p);
+                    if hit && fate == SendFate::Deliver {
+                        fate = SendFate::Delay { hold };
+                        self.delays.set(self.delays.get() + 1);
+                    }
+                }
+            }
+        }
+        FaultDecision { fate, stall_ms }
+    }
+
+    /// Park a delayed frame for `dest`.
+    pub fn park(&self, dest: usize, frame: Vec<u8>, hold: u32) {
+        self.limbo.borrow_mut().entry(dest).or_default().push(Parked { frame, after: hold });
+    }
+
+    /// One more send went to `dest`: age its parked frames and return the
+    /// ones due for release, in park order.
+    pub fn tick(&self, dest: usize) -> Vec<Vec<u8>> {
+        let mut limbo = self.limbo.borrow_mut();
+        let Some(q) = limbo.get_mut(&dest) else { return Vec::new() };
+        for p in q.iter_mut() {
+            p.after = p.after.saturating_sub(1);
+        }
+        let mut due = Vec::new();
+        q.retain_mut(|p| {
+            if p.after == 0 {
+                due.push(std::mem::take(&mut p.frame));
+                false
+            } else {
+                true
+            }
+        });
+        due
+    }
+
+    /// Epoch close for `dest`: everything still parked is released now —
+    /// after the close sentinel, which is the genuine reorder the delay
+    /// rule exists to produce (the receiver's sequence numbers put it
+    /// back).
+    pub fn flush_parked(&self, dest: usize) -> Vec<Vec<u8>> {
+        self.limbo
+            .borrow_mut()
+            .remove(&dest)
+            .map(|q| q.into_iter().map(|p| p.frame).collect())
+            .unwrap_or_default()
+    }
+
+    /// Injected-fault counters so far.
+    pub fn counts(&self) -> FaultCounts {
+        FaultCounts {
+            drops: self.drops.get(),
+            blackholes: self.blackholes.get(),
+            corruptions: self.corruptions.get(),
+            duplicates: self.duplicates.get(),
+            delays: self.delays.get(),
+            stalls: self.stalls.get(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::tag;
+
+    #[test]
+    fn grammar_round_trip() {
+        let p = FaultPlan::parse(
+            "seed=7; rank=*,tag=*,drop=0.05; rank=1,tag=gather,corrupt=0.02; \
+             tag=ptap_num,delay=0.2,hold=5; rank=2,stall_ms=4,nth=10; tag=3,dup=0.1",
+        )
+        .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.rules.len(), 5);
+        assert_eq!(p.rules[0], FaultRule {
+            rank: None,
+            tag: None,
+            action: FaultAction::Drop { p: 0.05 }
+        });
+        assert_eq!(p.rules[1], FaultRule {
+            rank: Some(1),
+            tag: Some(tag::GATHER),
+            action: FaultAction::Corrupt { p: 0.02 }
+        });
+        assert_eq!(p.rules[2], FaultRule {
+            rank: None,
+            tag: Some(tag::PTAP_NUM),
+            action: FaultAction::Delay { p: 0.2, hold: 5 }
+        });
+        assert_eq!(p.rules[3], FaultRule {
+            rank: Some(2),
+            tag: None,
+            action: FaultAction::Stall { ms: 4, nth: 10 }
+        });
+        assert_eq!(p.rules[4], FaultRule {
+            rank: None,
+            tag: Some(tag::PTAP_NUM),
+            action: FaultAction::Duplicate { p: 0.1 }
+        });
+        // Display re-parses to the same plan.
+        let again = FaultPlan::parse(&p.to_string()).unwrap();
+        assert_eq!(again, p);
+    }
+
+    #[test]
+    fn grammar_rejects_garbage() {
+        assert!(FaultPlan::parse("drop=2.0").is_err(), "probability above 1");
+        assert!(FaultPlan::parse("rank=0,tag=*").is_err(), "rule without action");
+        assert!(FaultPlan::parse("frobnicate=1").is_err(), "unknown key");
+        assert!(FaultPlan::parse("tag=nonsense,drop=0.1").is_err(), "unknown tag class");
+        assert!(FaultPlan::parse("drop=0.1,corrupt=0.1").is_err(), "two actions in one rule");
+        assert!(FaultPlan::parse("drop=0.1,nth=3").is_err(), "nth without stall");
+        assert!(FaultPlan::parse("corrupt=0.1,hold=3").is_err(), "hold without delay");
+        assert!(FaultPlan::parse("seed=x").is_err(), "bad seed");
+    }
+
+    #[test]
+    fn empty_spec_is_an_empty_plan() {
+        let p = FaultPlan::parse("seed=9").unwrap();
+        assert_eq!(p, FaultPlan::empty(9));
+        assert!(p.rules.is_empty());
+    }
+
+    #[test]
+    fn decisions_are_deterministic_per_rank_and_differ_across_ranks() {
+        let plan = FaultPlan::parse("seed=11;tag=*,drop=0.3").unwrap();
+        let run = |rank: usize| -> Vec<SendFate> {
+            let fs = FaultState::new(plan.clone(), rank);
+            (0..256).map(|_| fs.decide(tag::PTAP_NUM).fate).collect()
+        };
+        assert_eq!(run(0), run(0), "same (seed, rank) must replay identically");
+        assert_ne!(run(0), run(1), "ranks must draw decorrelated streams");
+        let drops = run(0).iter().filter(|f| **f == SendFate::Drop).count();
+        assert!((20..=140).contains(&drops), "p=0.3 of 256 sends, got {drops} drops");
+    }
+
+    #[test]
+    fn rule_scope_filters_rank_and_class() {
+        let plan = FaultPlan::parse("seed=3;rank=1,tag=gather,drop=1.0").unwrap();
+        let on_scope = FaultState::new(plan.clone(), 1);
+        assert_eq!(on_scope.decide(tag::GATHER).fate, SendFate::Drop);
+        assert_eq!(on_scope.decide(tag::PTAP_NUM).fate, SendFate::Deliver);
+        let off_rank = FaultState::new(plan, 0);
+        assert_eq!(off_rank.decide(tag::GATHER).fate, SendFate::Deliver);
+        assert_eq!(off_rank.counts().total(), 0);
+    }
+
+    #[test]
+    fn stall_fires_once_at_nth_matching_send() {
+        let plan = FaultPlan::parse("seed=1;tag=*,stall_ms=7,nth=3").unwrap();
+        let fs = FaultState::new(plan, 0);
+        let stalls: Vec<u64> = (0..5).map(|_| fs.decide(tag::EXCHANGE).stall_ms).collect();
+        assert_eq!(stalls, vec![0, 0, 7, 0, 0]);
+        assert_eq!(fs.counts().stalls, 1);
+    }
+
+    #[test]
+    fn limbo_ages_and_flushes() {
+        let plan = FaultPlan::empty(1);
+        let fs = FaultState::new(plan, 0);
+        fs.park(2, vec![1], 2);
+        fs.park(2, vec![2], 1);
+        assert_eq!(fs.tick(2), vec![vec![2]], "hold=1 frame due after one send");
+        assert_eq!(fs.tick(3), Vec::<Vec<u8>>::new(), "other destinations unaffected");
+        assert_eq!(fs.tick(2), vec![vec![1]]);
+        fs.park(2, vec![3], 10);
+        assert_eq!(fs.flush_parked(2), vec![vec![3]], "close flushes regardless of hold");
+        assert!(fs.flush_parked(2).is_empty());
+    }
+}

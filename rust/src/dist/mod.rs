@@ -17,6 +17,7 @@
 
 mod bcsr;
 mod csr;
+pub mod fault;
 mod gather;
 mod layout;
 mod operator;
@@ -26,12 +27,14 @@ mod world;
 
 pub use bcsr::{DistBSpmv, DistBcsr, DistBcsrBuilder};
 pub use csr::{DistCsr, DistCsrBuilder};
+pub use fault::{FaultAction, FaultCounts, FaultPlan, FaultRule, ENV_FAULT};
 pub use gather::{GatherWindow, PrBlocks, PrMat, RowGatherPlan, VecGatherPlan};
 pub use layout::Layout;
 pub use operator::{CsrOperator, DistOperator};
 pub use transpose::transpose_dist;
 pub use vec::{DistMultiVec, DistSpmv, DistVec};
 pub use world::{
-    pipeline_chunk_rows, tag, Comm, CommStats, World, COMM_ALPHA_SECS, COMM_BETA_SECS_PER_BYTE,
-    DEFAULT_PIPELINE_CHUNK, SIZE_BUCKETS, SIZE_BUCKET_EDGES,
+    pipeline_chunk_rows, tag, Comm, CommError, CommStats, MissingFrame, ReliabilityStats, World,
+    COMM_ALPHA_SECS, COMM_BETA_SECS_PER_BYTE, DEFAULT_COMM_TIMEOUT, DEFAULT_PIPELINE_CHUNK,
+    ENV_COMM_TIMEOUT_MS, SIZE_BUCKETS, SIZE_BUCKET_EDGES,
 };

@@ -106,6 +106,12 @@ impl DistMultiVec {
     }
 
     /// Stack K single vectors (identical layouts) into one multivector.
+    ///
+    /// Hard-asserts (release builds included) that every column shares
+    /// the first column's layout: a mismatched column would silently
+    /// corrupt the interleaved block, and panicking *here* — before any
+    /// communication — lets the session layer catch the unwind without
+    /// desynchronizing the SPMD collective schedule.
     pub fn from_columns(cols: &[&DistVec]) -> DistMultiVec {
         assert!(!cols.is_empty(), "multivector needs at least one column");
         let k = cols.len();
@@ -114,7 +120,11 @@ impl DistMultiVec {
         let n = cols[0].vals.len();
         let mut vals = vec![0.0; n * k];
         for (j, c) in cols.iter().enumerate() {
-            debug_assert_eq!(c.vals.len(), n, "columns must share the layout");
+            assert_eq!(c.vals.len(), n, "column {j} does not share the batch layout");
+            assert!(
+                c.layout == layout,
+                "column {j} does not share the batch layout"
+            );
             for i in 0..n {
                 vals[i * k + j] = c.vals[i];
             }

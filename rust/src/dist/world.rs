@@ -58,12 +58,34 @@
 //! - **scopes stats**: [`Comm::stats`] counts only traffic sent through
 //!   this communicator (shared by its clones); [`Comm::stats_global`]
 //!   keeps the rank-wide total across all communicators.
+//!
+//! ## Reliability (wire format v3)
+//!
+//! Every data frame carries a per-(destination, wire-tag) sequence
+//! number and an FNV-1a checksum (zero = unchecked), and every close
+//! sentinel carries the epoch's exclusive end sequence.  The receiver
+//! reassembles each (source, wire-tag) stream strictly in sequence
+//! order — out-of-order arrivals wait in a side buffer, duplicates are
+//! suppressed by their sequence number — so the canonical release order
+//! (and therefore every consumer's bits) survives loss, reordering and
+//! duplication.  When a [`super::fault::FaultPlan`] is armed, senders
+//! keep retransmit copies of unacknowledged frames, receivers NACK
+//! gaps and corrupt frames ([`FRAME_NACK`]), and the epoch close
+//! barrier completes only once every member has acknowledged the
+//! epoch ([`FRAME_ACK`]) — with the plan absent none of that machinery
+//! runs and the transport keeps its original blocking path.  All
+//! blocking waits carry a deadline (`GPTAP_COMM_TIMEOUT_MS`,
+//! [`World::with_comm_timeout`]) that turns a permanent loss into a
+//! diagnostic [`CommError`] naming the missing (src, tag, seq) instead
+//! of a hung process.
 
+use super::fault::{FaultPlan, FaultState, SendFate};
 use crate::obs;
 use std::cell::{Cell, RefCell};
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 use std::rc::Rc;
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::time::{Duration, Instant};
 
 /// α (per-message latency) of the α-β communication model, seconds.
 /// Tuned to a commodity cluster interconnect (DESIGN.md §7).
@@ -124,6 +146,133 @@ pub fn pipeline_chunk_rows() -> usize {
 const FRAME_COLL: u8 = 0;
 const FRAME_DATA: u8 = 1;
 const FRAME_CLOSE: u8 = 2;
+/// Receiver → sender: retransmit (wire_tag, seq).  Sent for checksum
+/// failures and for gaps revealed by a close sentinel.
+const FRAME_NACK: u8 = 3;
+/// Receiver → sender: the epoch ending at `end_seq` on `wire_tag` is
+/// fully received and released — the sender may drop retransmit copies
+/// and complete its close barrier.  Only sent when a fault plan is
+/// armed; the fault-free path completes on close sentinels alone.
+const FRAME_ACK: u8 = 4;
+
+/// v3 data-frame header: kind, wire tag, sequence number, checksum,
+/// send stamp.  Payload follows.
+const DATA_HDR: usize = 1 + 4 + 4 + 8 + 8;
+
+/// Environment override (milliseconds) for every blocking transport
+/// wait — drains, close barriers, collectives.
+pub const ENV_COMM_TIMEOUT_MS: &str = "GPTAP_COMM_TIMEOUT_MS";
+
+/// Default blocking-wait deadline.  Generous: it exists to convert a
+/// permanently lost frame into a diagnostic, not to police slow ranks.
+pub const DEFAULT_COMM_TIMEOUT: Duration = Duration::from_secs(60);
+
+fn comm_timeout_from_env() -> Duration {
+    std::env::var(ENV_COMM_TIMEOUT_MS)
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .filter(|&ms| ms > 0)
+        .map(Duration::from_millis)
+        .unwrap_or(DEFAULT_COMM_TIMEOUT)
+}
+
+/// FNV-1a 64 over a payload, mapped away from the zero sentinel
+/// (`cksum == 0` on the wire means "unchecked" — the fault-free path
+/// skips hashing entirely, mirroring the zero send stamp).
+fn checksum(payload: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in payload {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    if h == 0 {
+        1
+    } else {
+        h
+    }
+}
+
+/// One frame the receiver is still waiting for when a deadline fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MissingFrame {
+    /// Sender's world rank.
+    pub src: usize,
+    /// User tag (class) of the epoch.
+    pub tag: u32,
+    /// Sequence number of the missing frame.
+    pub seq: u32,
+}
+
+/// A blocking transport wait ran past its deadline.  Carries everything
+/// needed to diagnose the hang: which frames never arrived (by source,
+/// tag and sequence number), which members never closed the epoch, and
+/// — under an armed fault plan — which members never acknowledged it.
+#[derive(Debug, Clone)]
+pub struct CommError {
+    /// User tag of the epoch that timed out.
+    pub tag: u32,
+    /// The deadline that fired, in milliseconds.
+    pub timeout_ms: u64,
+    /// Data frames known missing (a close sentinel revealed the gap).
+    pub missing: Vec<MissingFrame>,
+    /// Members (world ranks) whose close sentinel never arrived.
+    pub missing_closes: Vec<usize>,
+    /// Members (world ranks) whose epoch ACK never arrived (armed only).
+    pub missing_acks: Vec<usize>,
+}
+
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "comm timeout after {}ms on tag {}:", self.timeout_ms, self.tag)?;
+        if self.missing.is_empty() && self.missing_closes.is_empty() && self.missing_acks.is_empty()
+        {
+            write!(f, " no missing frame identified (peer stalled?)")?;
+        }
+        for m in &self.missing {
+            write!(f, " [missing src={} tag={} seq={}]", m.src, m.tag, m.seq)?;
+        }
+        if !self.missing_closes.is_empty() {
+            write!(f, " [no close from world ranks {:?}]", self.missing_closes)?;
+        }
+        if !self.missing_acks.is_empty() {
+            write!(f, " [no ack from world ranks {:?}]", self.missing_acks)?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for CommError {}
+
+/// Rank-wide reliability-layer counters: what the transport detected
+/// and recovered (receiver side) plus what the local fault plan
+/// injected (sender side).  All zero on a clean, fault-free run.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ReliabilityStats {
+    /// Frames re-sent from the retransmit buffer on a peer's NACK.
+    pub retransmits: u64,
+    /// Frames rejected by the checksum (each one also sent a NACK).
+    pub corrupt_frames: u64,
+    /// NACKs this rank sent (checksum failures + gap requests).
+    pub nack_roundtrips: u64,
+    /// Duplicate frames suppressed by sequence number.
+    pub dup_suppressed: u64,
+    /// Blocking waits that hit their deadline.
+    pub timeouts: u64,
+    /// Faults the local plan injected into this rank's sends.
+    pub faults_injected: u64,
+}
+
+impl ReliabilityStats {
+    /// Accumulate another rank's counters (chaos-harness reduction).
+    pub fn merge(&mut self, o: ReliabilityStats) {
+        self.retransmits += o.retransmits;
+        self.corrupt_frames += o.corrupt_frames;
+        self.nack_roundtrips += o.nack_roundtrips;
+        self.dup_suppressed += o.dup_suppressed;
+        self.timeouts += o.timeouts;
+        self.faults_injected += o.faults_injected;
+    }
+}
 
 /// Number of logarithmic message-size buckets in [`CommStats::hist`].
 pub const SIZE_BUCKETS: usize = 8;
@@ -289,14 +438,62 @@ enum EngineFrame {
     Close,
 }
 
+/// One (source, wire-tag) receive stream: the in-order release queue the
+/// consumer pops, plus the sequence-reassembly state that feeds it.
+#[derive(Default)]
+struct TagStream {
+    /// Frames released to the consumer, in canonical order; `Close`
+    /// entries delimit epochs.
+    queue: VecDeque<EngineFrame>,
+    /// Next sequence number the release queue needs (monotonic across
+    /// epochs — sequence numbers never reset).
+    next_seq: u32,
+    /// Out-of-order arrivals parked until the gap before them fills.
+    ooo: BTreeMap<u32, Vec<u8>>,
+    /// Close sentinels (exclusive end sequence) whose epochs are not
+    /// complete yet, in arrival order.
+    pending_end: VecDeque<u32>,
+}
+
+impl TagStream {
+    /// Release every frame (and close) that is now in sequence.  Returns
+    /// the end sequences of epochs completed by this advance — each one
+    /// owes the sender an ACK when the reliability protocol is armed.
+    fn advance(&mut self) -> Vec<u32> {
+        let mut completed = Vec::new();
+        loop {
+            if let Some(&end) = self.pending_end.front() {
+                if self.next_seq >= end {
+                    self.pending_end.pop_front();
+                    self.queue.push_back(EngineFrame::Close);
+                    completed.push(end);
+                    continue;
+                }
+            }
+            if let Some(p) = self.ooo.remove(&self.next_seq) {
+                self.queue.push_back(EngineFrame::Data(p));
+                self.next_seq += 1;
+                continue;
+            }
+            break;
+        }
+        completed
+    }
+
+    /// Sequence numbers the oldest pending epoch is still missing.
+    fn gaps(&self) -> Vec<u32> {
+        let Some(&end) = self.pending_end.front() else { return Vec::new() };
+        (self.next_seq..end).filter(|s| !self.ooo.contains_key(s)).collect()
+    }
+}
+
 /// Demultiplexed arrivals from one source rank.
 #[derive(Default)]
 struct SourceInbox {
     /// Collective frames, in arrival (= send) order.
     coll: VecDeque<Vec<u8>>,
-    /// Engine frames per wire tag, in arrival order; `Close` entries
-    /// delimit epochs.
-    tags: HashMap<u32, VecDeque<EngineFrame>>,
+    /// Engine streams per wire tag.
+    tags: HashMap<u32, TagStream>,
 }
 
 /// One rank's physical end of the channel mesh, shared by every
@@ -330,54 +527,254 @@ struct Endpoint {
     /// communicator owning that tag) whose current-epoch payloads have
     /// not been fully released yet (absent = 0).
     cursor: RefCell<HashMap<u32, usize>>,
+    /// Next data sequence number per wire tag, indexed by destination
+    /// world rank (monotonic across epochs).
+    send_seq: RefCell<HashMap<u32, Vec<u32>>>,
+    /// Retransmit copies of in-flight frames per wire tag, indexed by
+    /// destination world rank (armed fault plan only; cleared when the
+    /// destination ACKs the epoch).
+    unacked: RefCell<HashMap<u32, Vec<BTreeMap<u32, Vec<u8>>>>>,
+    /// Epoch ACKs received per wire tag: the world ranks whose current
+    /// epoch acknowledgment has arrived (armed only).
+    acks: RefCell<HashMap<u32, HashSet<usize>>>,
+    /// Installed fault plan runtime (`None` = fault-free fast path).
+    fault: Option<FaultState>,
+    /// Deadline applied to every blocking transport wait.
+    timeout: Duration,
+    // Reliability counters (rank-wide, see [`ReliabilityStats`]).
+    n_retransmits: Cell<u64>,
+    n_corrupt: Cell<u64>,
+    n_nacks: Cell<u64>,
+    n_dup_suppressed: Cell<u64>,
+    n_timeouts: Cell<u64>,
 }
 
 impl Endpoint {
-    /// Route an arrived frame into the per-source inbox.  Data frames
-    /// carry the sender's microsecond stamp after the tag (zero when the
-    /// sender was not tracing); delivery is the receive end of the
-    /// in-flight span, so the stamp is consumed here.
-    fn deliver(&self, src: usize, frame: Vec<u8>) {
-        let mut inbox = self.inbox.borrow_mut();
-        let slot = &mut inbox[src];
-        match frame[0] {
-            FRAME_COLL => slot.coll.push_back(frame[1..].to_vec()),
-            FRAME_DATA => {
-                let t = u32::from_le_bytes(frame[1..5].try_into().unwrap());
-                let send_us = u64::from_le_bytes(frame[5..13].try_into().unwrap());
-                // Self-loopback frames are uncounted in CommStats, so
-                // their flights are skipped here too.
-                if send_us != 0 && src != self.world_rank {
-                    let recv_us = obs::now_us();
-                    let us = recv_us.saturating_sub(send_us);
-                    self.total_flight_msgs.set(self.total_flight_msgs.get() + 1);
-                    self.total_flight_us.set(self.total_flight_us.get() + us);
-                    let mut fh = self.total_flight_hist.get();
-                    fh[lat_bucket(us)] += 1;
-                    self.total_flight_hist.set(fh);
-                    obs::flight(src as u32, t, (frame.len() - 13) as u64, send_us, recv_us);
-                    obs::metrics::observe(obs::Subsys::Comm, "flight_us", us);
-                }
-                slot.tags.entry(t).or_default().push_back(EngineFrame::Data(frame[13..].to_vec()));
+    fn send_raw(&self, wdest: usize, f: Vec<u8>) {
+        self.tx[wdest].send(f).expect("peer rank terminated early");
+    }
+
+    /// Ask `src` to retransmit (wire, seq).
+    fn send_nack(&self, src: usize, wire: u32, seq: u32) {
+        self.n_nacks.set(self.n_nacks.get() + 1);
+        if obs::metrics::enabled() {
+            obs::metrics::add(obs::Subsys::Comm, "nack_roundtrips", 1);
+        }
+        let mut f = Vec::with_capacity(9);
+        f.push(FRAME_NACK);
+        f.extend_from_slice(&wire.to_le_bytes());
+        f.extend_from_slice(&seq.to_le_bytes());
+        self.send_raw(src, f);
+    }
+
+    /// Confirm to `src` that its epoch ending at `end_seq` is complete.
+    fn send_ack(&self, src: usize, wire: u32, end_seq: u32) {
+        let mut f = Vec::with_capacity(9);
+        f.push(FRAME_ACK);
+        f.extend_from_slice(&wire.to_le_bytes());
+        f.extend_from_slice(&end_seq.to_le_bytes());
+        self.send_raw(src, f);
+    }
+
+    /// Transmit one built data frame to `wdest`, applying the armed
+    /// fault plan's verdict (and keeping a retransmit copy) when one is
+    /// installed.  `tag_class` is the user tag the plan rules match on.
+    fn post_data(&self, wdest: usize, wire: u32, seq: u32, frame: Vec<u8>, tag_class: u32) {
+        let Some(fs) = &self.fault else {
+            self.send_raw(wdest, frame);
+            return;
+        };
+        // Age the destination's delay limbo first so a parked frame's
+        // hold counts *other* sends, then decide this frame's fate.
+        for parked in fs.tick(wdest) {
+            self.send_raw(wdest, parked);
+        }
+        let d = fs.decide(tag_class);
+        if d.stall_ms > 0 {
+            std::thread::sleep(Duration::from_millis(d.stall_ms));
+        }
+        if d.fate != SendFate::Blackhole {
+            let mut un = self.unacked.borrow_mut();
+            un.entry(wire).or_insert_with(|| vec![BTreeMap::new(); self.world_np])[wdest]
+                .insert(seq, frame.clone());
+        }
+        match d.fate {
+            SendFate::Deliver => self.send_raw(wdest, frame),
+            SendFate::Duplicate => {
+                self.send_raw(wdest, frame.clone());
+                self.send_raw(wdest, frame);
             }
+            SendFate::Corrupt => {
+                let mut f = frame;
+                if f.len() > DATA_HDR {
+                    // flip one payload bit, deterministically by seq
+                    let i = DATA_HDR + seq as usize % (f.len() - DATA_HDR);
+                    f[i] ^= 1 << (seq % 8);
+                } else {
+                    // empty payload: corrupt the checksum field instead
+                    f[9] ^= 1;
+                }
+                self.send_raw(wdest, f);
+            }
+            SendFate::Drop | SendFate::Blackhole => {}
+            SendFate::Delay { hold } => fs.park(wdest, frame, hold),
+        }
+    }
+
+    /// Route an arrived frame into the per-source inbox.  Data frames
+    /// are verified (checksum), deduplicated and reassembled in
+    /// sequence order before anything reaches a release queue, so the
+    /// canonical order — and every consumer's bits — survives loss,
+    /// reordering, duplication and corruption.
+    fn deliver(&self, src: usize, frame: Vec<u8>) {
+        match frame[0] {
+            FRAME_COLL => {
+                self.inbox.borrow_mut()[src].coll.push_back(frame[1..].to_vec());
+            }
+            FRAME_DATA => self.deliver_data(src, frame),
             FRAME_CLOSE => {
                 let t = u32::from_le_bytes(frame[1..5].try_into().unwrap());
-                slot.tags.entry(t).or_default().push_back(EngineFrame::Close);
+                let end = u32::from_le_bytes(frame[5..9].try_into().unwrap());
+                let armed = self.fault.is_some();
+                let (gaps, completed) = {
+                    let mut inbox = self.inbox.borrow_mut();
+                    let st = inbox[src].tags.entry(t).or_default();
+                    st.pending_end.push_back(end);
+                    let gaps = if armed { st.gaps() } else { Vec::new() };
+                    (gaps, st.advance())
+                };
+                // NACK the gaps the sentinel just revealed; ACK epochs
+                // this close completed (usually the one it announced).
+                for seq in gaps {
+                    self.send_nack(src, t, seq);
+                }
+                if armed {
+                    for end in completed {
+                        self.send_ack(src, t, end);
+                    }
+                }
+            }
+            FRAME_NACK => {
+                let t = u32::from_le_bytes(frame[1..5].try_into().unwrap());
+                let seq = u32::from_le_bytes(frame[5..9].try_into().unwrap());
+                let copy = self
+                    .unacked
+                    .borrow()
+                    .get(&t)
+                    .and_then(|per_dest| per_dest[src].get(&seq))
+                    .cloned();
+                match copy {
+                    Some(f) => {
+                        self.n_retransmits.set(self.n_retransmits.get() + 1);
+                        if obs::metrics::enabled() {
+                            obs::metrics::add(obs::Subsys::Comm, "retransmits", 1);
+                        }
+                        self.send_raw(src, f);
+                    }
+                    None => {
+                        // Blackholed (no retransmit copy) or already
+                        // ACK-cleared.  The former is unrecoverable and
+                        // will surface as the peer's CommError.
+                        crate::log_warn!(
+                            "unserviceable NACK from world rank {src}: wire tag {t} seq {seq}"
+                        );
+                    }
+                }
+            }
+            FRAME_ACK => {
+                let t = u32::from_le_bytes(frame[1..5].try_into().unwrap());
+                let end = u32::from_le_bytes(frame[5..9].try_into().unwrap());
+                self.acks.borrow_mut().entry(t).or_default().insert(src);
+                if let Some(per_dest) = self.unacked.borrow_mut().get_mut(&t) {
+                    per_dest[src].retain(|&s, _| s >= end);
+                }
             }
             k => unreachable!("bad frame kind {k}"),
         }
     }
 
+    fn deliver_data(&self, src: usize, frame: Vec<u8>) {
+        let t = u32::from_le_bytes(frame[1..5].try_into().unwrap());
+        let seq = u32::from_le_bytes(frame[5..9].try_into().unwrap());
+        let cksum = u64::from_le_bytes(frame[9..17].try_into().unwrap());
+        let send_us = u64::from_le_bytes(frame[17..25].try_into().unwrap());
+        let completed = {
+            let mut inbox = self.inbox.borrow_mut();
+            let st = inbox[src].tags.entry(t).or_default();
+            // Duplicate suppression: already released or already parked.
+            if seq < st.next_seq || st.ooo.contains_key(&seq) {
+                self.n_dup_suppressed.set(self.n_dup_suppressed.get() + 1);
+                if obs::metrics::enabled() {
+                    obs::metrics::add(obs::Subsys::Comm, "dup_suppressed", 1);
+                }
+                return;
+            }
+            // Verify before accepting; a corrupt frame is discarded and
+            // NACKed so the sender's intact copy replaces it.  cksum 0
+            // means the sender ran unchecked (fault-free fast path).
+            if cksum != 0 && checksum(&frame[DATA_HDR..]) != cksum {
+                self.n_corrupt.set(self.n_corrupt.get() + 1);
+                if obs::metrics::enabled() {
+                    obs::metrics::add(obs::Subsys::Comm, "corrupt_frames", 1);
+                }
+                drop(inbox);
+                self.send_nack(src, t, seq);
+                return;
+            }
+            // Self-loopback frames are uncounted in CommStats, so their
+            // flights are skipped here too.  Only accepted frames count.
+            if send_us != 0 && src != self.world_rank {
+                let recv_us = obs::now_us();
+                let us = recv_us.saturating_sub(send_us);
+                self.total_flight_msgs.set(self.total_flight_msgs.get() + 1);
+                self.total_flight_us.set(self.total_flight_us.get() + us);
+                let mut fh = self.total_flight_hist.get();
+                fh[lat_bucket(us)] += 1;
+                self.total_flight_hist.set(fh);
+                obs::flight(src as u32, t, (frame.len() - DATA_HDR) as u64, send_us, recv_us);
+                obs::metrics::observe(obs::Subsys::Comm, "flight_us", us);
+            }
+            let payload = frame[DATA_HDR..].to_vec();
+            if seq == st.next_seq && st.ooo.is_empty() && st.pending_end.is_empty() {
+                // in-order fast path: the fault-free transport lives here
+                st.queue.push_back(EngineFrame::Data(payload));
+                st.next_seq += 1;
+                return;
+            }
+            st.ooo.insert(seq, payload);
+            st.advance()
+        };
+        if self.fault.is_some() {
+            for end in completed {
+                self.send_ack(src, t, end);
+            }
+        }
+    }
+
     /// Next collective frame from world rank `src`, demuxing engine
-    /// frames aside.
+    /// frames aside.  The blocking wait carries the transport deadline:
+    /// a peer that never sends (lost to a fault, or wedged) surfaces as
+    /// a diagnostic panic instead of a hung process.
     fn recv_collective(&self, src: usize) -> Vec<u8> {
+        let deadline = Instant::now() + self.timeout;
         loop {
             let buffered = self.inbox.borrow_mut()[src].coll.pop_front();
             if let Some(f) = buffered {
                 return f;
             }
-            let frame = self.rx[src].recv().expect("peer rank panicked");
-            self.deliver(src, frame);
+            let wait = deadline.saturating_duration_since(Instant::now());
+            match self.rx[src].recv_timeout(wait) {
+                Ok(frame) => self.deliver(src, frame),
+                Err(RecvTimeoutError::Timeout) => {
+                    self.n_timeouts.set(self.n_timeouts.get() + 1);
+                    obs::metrics::add(obs::Subsys::Comm, "timeouts", 1);
+                    panic!(
+                        "comm timeout after {}ms: no collective frame from world rank {src}",
+                        self.timeout.as_millis()
+                    );
+                }
+                Err(RecvTimeoutError::Disconnected) => panic!("peer rank panicked"),
+            }
         }
     }
 }
@@ -413,6 +810,8 @@ impl Comm {
         world_np: usize,
         tx: Vec<Sender<Vec<u8>>>,
         rx: Vec<Receiver<Vec<u8>>>,
+        fault_plan: Option<FaultPlan>,
+        timeout: Duration,
     ) -> Comm {
         Comm {
             ep: Rc::new(Endpoint {
@@ -432,6 +831,16 @@ impl Comm {
                 next_tag_base: Cell::new(TAG_STRIDE),
                 inbox: RefCell::new((0..world_np).map(|_| SourceInbox::default()).collect()),
                 cursor: RefCell::new(HashMap::new()),
+                send_seq: RefCell::new(HashMap::new()),
+                unacked: RefCell::new(HashMap::new()),
+                acks: RefCell::new(HashMap::new()),
+                fault: fault_plan.map(|p| FaultState::new(p, world_rank)),
+                timeout,
+                n_retransmits: Cell::new(0),
+                n_corrupt: Cell::new(0),
+                n_nacks: Cell::new(0),
+                n_dup_suppressed: Cell::new(0),
+                n_timeouts: Cell::new(0),
             }),
             group: Rc::new(Group {
                 members: (0..world_np).collect(),
@@ -574,11 +983,14 @@ impl Comm {
     /// (the nonblocking send).  Payloads are delivered in send order per
     /// (source, tag) pair; `dest == rank()` loops back.
     ///
-    /// The frame reserves 8 bytes for a send stamp (microseconds since
-    /// the shared trace origin) after the tag; it is zero when tracing is
-    /// off, so both ends agree on the layout unconditionally.  Framing
-    /// bytes — kind, tag, and stamp — remain protocol overhead and are
-    /// never counted in [`CommStats`].
+    /// Wire format v3: after the tag the frame carries a per-(dest,
+    /// wire-tag) sequence number, an FNV-1a checksum of the payload
+    /// (zero when no fault plan is armed — hashing is skipped), and the
+    /// 8-byte send stamp (zero when tracing is off).  Framing bytes are
+    /// protocol overhead and never counted in [`CommStats`]; neither
+    /// are retransmits, duplicates, NACKs or ACKs — the stats count
+    /// *logical* sends, so a faulted run's traffic accounting is
+    /// bitwise a clean run's.
     pub fn isend(&self, dest: usize, tag: u32, payload: Vec<u8>) {
         let wdest = self.group.members[dest];
         if wdest != self.ep.world_rank {
@@ -590,25 +1002,52 @@ impl Comm {
             }
         }
         let wire = self.wire_tag(tag);
+        let seq = {
+            let mut m = self.ep.send_seq.borrow_mut();
+            let per_dest = m.entry(wire).or_insert_with(|| vec![0u32; self.ep.world_np]);
+            let s = per_dest[wdest];
+            per_dest[wdest] += 1;
+            s
+        };
+        let cksum = if self.ep.fault.is_some() { checksum(&payload) } else { 0 };
         // Stamp whenever either observer is armed: the tracer records the
         // flight event, the metrics registry feeds its latency histogram.
-        // The stamp is framing overhead, never counted in [`CommStats`].
         let send_us =
             if obs::enabled() || obs::metrics::enabled() { obs::now_us() } else { 0 };
-        let mut f = Vec::with_capacity(13 + payload.len());
+        let mut f = Vec::with_capacity(DATA_HDR + payload.len());
         f.push(FRAME_DATA);
         f.extend_from_slice(&wire.to_le_bytes());
+        f.extend_from_slice(&seq.to_le_bytes());
+        f.extend_from_slice(&cksum.to_le_bytes());
         f.extend_from_slice(&send_us.to_le_bytes());
         f.extend_from_slice(&payload);
-        self.ep.tx[wdest].send(f).expect("peer rank terminated early");
+        self.ep.post_data(wdest, wire, seq, f, tag);
     }
 
     fn send_close(&self, dest: usize, tag: u32) {
         let wire = self.wire_tag(tag);
-        let mut f = Vec::with_capacity(5);
+        let wdest = self.group.members[dest];
+        // The close announces the epoch's exclusive end sequence: the
+        // receiver learns exactly which frames it is still owed.
+        let end_seq = self
+            .ep
+            .send_seq
+            .borrow()
+            .get(&wire)
+            .map(|per_dest| per_dest[wdest])
+            .unwrap_or(0);
+        let mut f = Vec::with_capacity(9);
         f.push(FRAME_CLOSE);
         f.extend_from_slice(&wire.to_le_bytes());
-        self.ep.tx[self.group.members[dest]].send(f).expect("peer rank terminated early");
+        f.extend_from_slice(&end_seq.to_le_bytes());
+        self.ep.send_raw(wdest, f);
+        // Flush this destination's delay limbo *after* the sentinel:
+        // the genuine past-the-close reorder the delay rule produces.
+        if let Some(fs) = &self.ep.fault {
+            for parked in fs.flush_parked(wdest) {
+                self.ep.send_raw(wdest, parked);
+            }
+        }
     }
 
     /// Release loop shared by [`Comm::try_recv_any`] and [`Comm::drain`]:
@@ -616,8 +1055,14 @@ impl Comm {
     /// out data frames until the epoch closes (every member's `Close`
     /// consumed) or — nonblocking — until the cursor source has nothing
     /// buffered.  Returns whether the epoch fully closed (and resets the
-    /// cursor).  Released source ids are member indices.
-    fn release_into(&self, tag: u32, blocking: bool, out: &mut Vec<(usize, Vec<u8>)>) -> bool {
+    /// cursor); the blocking walk returns [`CommError`] when its
+    /// deadline fires.  Released source ids are member indices.
+    fn release_into(
+        &self,
+        tag: u32,
+        deadline: Option<Instant>,
+        out: &mut Vec<(usize, Vec<u8>)>,
+    ) -> Result<bool, CommError> {
         let wire = self.wire_tag(tag);
         let np = self.size();
         let mut cur = self.ep.cursor.borrow_mut().remove(&wire).unwrap_or(0);
@@ -627,7 +1072,7 @@ impl Comm {
                 let next = self.ep.inbox.borrow_mut()[wsrc]
                     .tags
                     .get_mut(&wire)
-                    .and_then(|q| q.pop_front());
+                    .and_then(|st| st.queue.pop_front());
                 match next {
                     Some(EngineFrame::Data(p)) => {
                         out.push((cur, p));
@@ -639,24 +1084,92 @@ impl Comm {
                     }
                     None => {}
                 }
-                if blocking {
-                    let frame = self.ep.rx[wsrc].recv().expect("peer rank panicked");
-                    self.ep.deliver(wsrc, frame);
-                } else {
-                    match self.ep.rx[wsrc].try_recv() {
+                match deadline {
+                    Some(d) => {
+                        let wait = d.saturating_duration_since(Instant::now());
+                        match self.ep.rx[wsrc].recv_timeout(wait) {
+                            Ok(frame) => self.ep.deliver(wsrc, frame),
+                            Err(RecvTimeoutError::Timeout) => {
+                                self.ep.cursor.borrow_mut().insert(wire, cur);
+                                return Err(self.timeout_report(tag));
+                            }
+                            Err(RecvTimeoutError::Disconnected) => panic!("peer rank panicked"),
+                        }
+                    }
+                    None => match self.ep.rx[wsrc].try_recv() {
                         Ok(frame) => self.ep.deliver(wsrc, frame),
                         Err(TryRecvError::Empty) => break 'sources,
                         Err(TryRecvError::Disconnected) => panic!("peer rank panicked"),
-                    }
+                    },
                 }
             }
         }
         if cur >= np {
-            true
+            Ok(true)
         } else {
             self.ep.cursor.borrow_mut().insert(wire, cur);
-            false
+            Ok(false)
         }
+    }
+
+    /// Build the deadline diagnostic for `tag`: every frame, close and
+    /// (armed) ACK this rank is still owed, dumped to the log and the
+    /// observers before being returned as a [`CommError`].
+    fn timeout_report(&self, tag: u32) -> CommError {
+        let wire = self.wire_tag(tag);
+        let mut missing = Vec::new();
+        let mut missing_closes = Vec::new();
+        let inbox = self.ep.inbox.borrow();
+        for &wsrc in &self.group.members {
+            match inbox[wsrc].tags.get(&wire) {
+                Some(st) => {
+                    for seq in st.gaps() {
+                        missing.push(MissingFrame { src: wsrc, tag, seq });
+                    }
+                    // A close is "arrived" if it awaits missing data
+                    // (pending) or sits released-but-unconsumed in the
+                    // queue; only a truly absent sentinel is reported.
+                    let close_here = !st.pending_end.is_empty()
+                        || st.queue.iter().any(|f| matches!(f, EngineFrame::Close));
+                    if !close_here {
+                        missing_closes.push(wsrc);
+                    }
+                }
+                None => missing_closes.push(wsrc),
+            }
+        }
+        drop(inbox);
+        // A source with a buffered close was already consumed by the
+        // release walk; prune the closes list down to sources the cursor
+        // has not passed yet.
+        let cur = self.ep.cursor.borrow().get(&wire).copied().unwrap_or(self.size());
+        let passed: HashSet<usize> =
+            self.group.members.iter().take(cur).copied().collect();
+        missing_closes.retain(|s| !passed.contains(s));
+        let missing_acks = if self.ep.fault.is_some() {
+            let acks = self.ep.acks.borrow();
+            let got = acks.get(&wire);
+            self.group
+                .members
+                .iter()
+                .copied()
+                .filter(|m| !got.is_some_and(|g| g.contains(m)))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let err = CommError {
+            tag,
+            timeout_ms: self.ep.timeout.as_millis() as u64,
+            missing,
+            missing_closes,
+            missing_acks,
+        };
+        self.ep.n_timeouts.set(self.ep.n_timeouts.get() + 1);
+        obs::metrics::add(obs::Subsys::Comm, "timeouts", 1);
+        obs::instant(obs::Subsys::Comm, "comm.timeout", tag as u64);
+        crate::log_error!("{err}");
+        err
     }
 
     /// Nonblocking receive: whatever prefix of this epoch's canonical
@@ -666,7 +1179,8 @@ impl Comm {
     /// what makes interleaved send/receive schedules bit-deterministic.
     pub fn try_recv_any(&self, tag: u32) -> Vec<(usize, Vec<u8>)> {
         let mut out = Vec::new();
-        self.release_into(tag, false, &mut out);
+        self.release_into(tag, None, &mut out)
+            .expect("nonblocking release cannot time out");
         out
     }
 
@@ -677,6 +1191,18 @@ impl Comm {
     /// new epoch.  Ranks outside this communicator are not involved —
     /// the close barrier spans members only.
     pub fn drain(&self, tag: u32) -> Vec<(usize, Vec<u8>)> {
+        match self.drain_checked(tag) {
+            Ok(out) => out,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// [`Comm::drain`] with the deadline surfaced: a permanent hang (lost
+    /// frame that no retransmit can recover, missing close, missing ACK)
+    /// returns a diagnostic [`CommError`] naming every missing
+    /// `(src, tag, seq)` instead of blocking forever.  The deadline is
+    /// `GPTAP_COMM_TIMEOUT_MS` (or [`World::with_comm_timeout`]).
+    pub fn drain_checked(&self, tag: u32) -> Result<Vec<(usize, Vec<u8>)>, CommError> {
         for d in 0..self.size() {
             self.send_close(d, tag);
         }
@@ -689,8 +1215,15 @@ impl Comm {
         // histogram.
         let sp = obs::span(obs::Subsys::Comm, "close_barrier", tag as u64);
         let t0 = std::time::Instant::now();
+        let deadline = t0 + self.ep.timeout;
         let mut out = Vec::new();
-        let closed = self.release_into(tag, true, &mut out);
+        let res = if self.ep.fault.is_some() {
+            self.drain_reliable(tag, deadline, &mut out)
+        } else {
+            self.release_into(tag, Some(deadline), &mut out).map(|closed| {
+                debug_assert!(closed, "blocking release must close the epoch");
+            })
+        };
         let us = t0.elapsed().as_micros() as u64;
         drop(sp);
         self.ep.total_close_waits.set(self.ep.total_close_waits.get() + 1);
@@ -698,8 +1231,118 @@ impl Comm {
         let mut ch = self.ep.total_close_wait_hist.get();
         ch[lat_bucket(us)] += 1;
         self.ep.total_close_wait_hist.set(ch);
-        debug_assert!(closed, "blocking release must close the epoch");
-        out
+        res.map(|_| out)
+    }
+
+    /// Armed (fault-plan active) close barrier.  The unarmed barrier can
+    /// block on the cursor source because FIFO channels guarantee its
+    /// close will arrive; under faults a lower-ranked source may be
+    /// waiting on a NACK retransmit *from us*, so blocking on one channel
+    /// would deadlock.  Instead: poll every member channel round-robin,
+    /// deliver whatever arrives, release in canonical order, and finish
+    /// only once the epoch is closed **and** every member has ACKed our
+    /// own stream — leaving earlier would orphan a peer's NACK for a
+    /// frame only our retransmit buffer can supply.  Known gaps are
+    /// re-NACKed while idling as cheap insurance (duplicate suppression
+    /// makes repeats harmless); a gap with no retransmit copy anywhere
+    /// (blackhole) runs into the deadline and surfaces as [`CommError`].
+    fn drain_reliable(
+        &self,
+        tag: u32,
+        deadline: Instant,
+        out: &mut Vec<(usize, Vec<u8>)>,
+    ) -> Result<(), CommError> {
+        let wire = self.wire_tag(tag);
+        let mut closed = false;
+        let mut idle_rounds: u64 = 0;
+        loop {
+            // Service every member channel: NACKs, ACKs and retransmits
+            // can arrive from any rank at any point in the barrier.
+            let mut progress = false;
+            for &wsrc in &self.group.members {
+                loop {
+                    match self.ep.rx[wsrc].try_recv() {
+                        Ok(frame) => {
+                            self.ep.deliver(wsrc, frame);
+                            progress = true;
+                        }
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => panic!("peer rank panicked"),
+                    }
+                }
+            }
+            if !closed {
+                let before = out.len();
+                closed = self.release_into(tag, None, out)?;
+                progress |= closed || out.len() > before;
+            }
+            if closed {
+                let acked = {
+                    let acks = self.ep.acks.borrow();
+                    acks.get(&wire)
+                        .is_some_and(|g| self.group.members.iter().all(|m| g.contains(m)))
+                };
+                if acked {
+                    self.ep.acks.borrow_mut().remove(&wire);
+                    if let Some(per) = self.ep.unacked.borrow_mut().get_mut(&wire) {
+                        for buf in per.iter_mut() {
+                            buf.clear();
+                        }
+                    }
+                    return Ok(());
+                }
+            }
+            if progress {
+                idle_rounds = 0;
+                continue;
+            }
+            idle_rounds += 1;
+            if Instant::now() >= deadline {
+                return Err(self.timeout_report(tag));
+            }
+            // Periodically re-request known gaps while idle.  Protocol
+            // frames are never faulted, so one NACK round normally
+            // suffices; this is cheap insurance against a NACK sent
+            // before the sender buffered the copy, and duplicate
+            // suppression makes repeats harmless.
+            if idle_rounds % 64 == 0 {
+                let mut renacks = Vec::new();
+                {
+                    let inbox = self.ep.inbox.borrow();
+                    for &wsrc in &self.group.members {
+                        if let Some(st) = inbox[wsrc].tags.get(&wire) {
+                            for seq in st.gaps() {
+                                renacks.push((wsrc, seq));
+                            }
+                        }
+                    }
+                }
+                for (wsrc, seq) in renacks {
+                    self.ep.send_nack(wsrc, wire, seq);
+                }
+            }
+            if idle_rounds > 256 {
+                std::thread::sleep(Duration::from_micros(50));
+            } else {
+                std::thread::yield_now();
+            }
+        }
+    }
+
+    /// Reliability-layer counters for this communicator's endpoint
+    /// (shared across sub-communicators on the same rank): retransmits
+    /// served, corrupt frames rejected, NACKs sent, duplicates
+    /// suppressed, deadline hits, and total faults injected by an armed
+    /// plan.  All zero on a clean run with an empty plan.
+    pub fn reliability(&self) -> ReliabilityStats {
+        ReliabilityStats {
+            retransmits: self.ep.n_retransmits.get(),
+            corrupt_frames: self.ep.n_corrupt.get(),
+            nack_roundtrips: self.ep.n_nacks.get(),
+            dup_suppressed: self.ep.n_dup_suppressed.get(),
+            timeouts: self.ep.n_timeouts.get(),
+            faults_injected: self.ep.fault.as_ref().map(|f| f.counts().total()).unwrap_or(0),
+        }
     }
 
     /// Bulk epoch on an explicit tag: one `isend` per payload plus one
@@ -790,12 +1433,31 @@ impl Comm {
 /// A set of `np` simulated ranks.
 pub struct World {
     np: usize,
+    fault_plan: Option<FaultPlan>,
+    timeout: Duration,
 }
 
 impl World {
+    /// A world with the ambient reliability configuration: the fault
+    /// plan from `GPTAP_FAULT` (if set) and the comm deadline from
+    /// `GPTAP_COMM_TIMEOUT_MS` (default 60 s).
     pub fn new(np: usize) -> World {
         assert!(np >= 1, "world needs at least one rank");
-        World { np }
+        World { np, fault_plan: FaultPlan::from_env(), timeout: comm_timeout_from_env() }
+    }
+
+    /// Override the fault plan (`None` disarms the reliability layer
+    /// entirely, env notwithstanding).
+    pub fn with_fault_plan(mut self, plan: Option<FaultPlan>) -> World {
+        self.fault_plan = plan;
+        self
+    }
+
+    /// Override the comm deadline used by `drain`/close barriers and
+    /// collective receives.
+    pub fn with_comm_timeout(mut self, timeout: Duration) -> World {
+        self.timeout = timeout;
+        self
     }
 
     pub fn size(&self) -> usize {
@@ -840,13 +1502,15 @@ impl World {
             .collect();
 
         let f_ref = &f;
+        let plan_ref = &self.fault_plan;
+        let timeout = self.timeout;
         let joined: Vec<std::thread::Result<T>> = std::thread::scope(|scope| {
             let handles: Vec<_> = parts
                 .into_iter()
                 .map(|(rank, tx, rx)| {
                     scope.spawn(move || {
                         crate::util::log::set_rank(rank);
-                        f_ref(Comm::root(rank, np, tx, rx))
+                        f_ref(Comm::root(rank, np, tx, rx, plan_ref.clone(), timeout))
                     })
                 })
                 .collect();
@@ -1295,6 +1959,159 @@ mod tests {
             acc.merge(global);
             acc.merge(global);
             assert_eq!(acc.close_wait_hist.iter().sum::<u64>(), 2 * global.close_waits);
+        }
+    }
+
+    /// Multi-epoch all-to-all under an optional fault plan: every rank's
+    /// released (source, payload) stream plus its reliability counters.
+    fn chaotic_exchange(
+        np: usize,
+        plan: Option<FaultPlan>,
+    ) -> (Vec<Vec<(usize, Vec<u8>)>>, Vec<ReliabilityStats>) {
+        let w = World::new(np)
+            .with_fault_plan(plan)
+            .with_comm_timeout(Duration::from_secs(20));
+        let out = w.run(|c| {
+            let mut got = Vec::new();
+            for epoch in 0..3u8 {
+                for d in 0..c.size() {
+                    for k in 0..4u8 {
+                        c.isend(d, tag::PTAP_NUM, vec![c.rank() as u8, epoch, k, 0xAB]);
+                    }
+                }
+                got.extend(c.drain(tag::PTAP_NUM));
+            }
+            (got, c.reliability())
+        });
+        out.into_iter().unzip()
+    }
+
+    /// The reliability tentpole in one assertion: under drop, corruption,
+    /// delay/reorder, duplication and a transient stall, every rank
+    /// releases the byte-identical stream a fault-free run releases.
+    #[test]
+    fn reliable_transport_is_bitwise_under_every_fault_kind() {
+        let (clean, base) = chaotic_exchange(3, None);
+        for s in &base {
+            assert_eq!(s.retransmits + s.nack_roundtrips + s.dup_suppressed, 0);
+            assert_eq!(s.faults_injected, 0);
+        }
+        for spec in [
+            "seed=11;tag=*,drop=0.4",
+            "seed=12;tag=*,corrupt=0.4",
+            "seed=13;tag=*,delay=0.5,hold=2",
+            "seed=14;tag=*,dup=0.5",
+            "seed=15;rank=1,tag=*,stall_ms=1,nth=2",
+            "seed=16;tag=*,drop=0.2;tag=*,corrupt=0.2;tag=*,dup=0.2;tag=*,delay=0.3,hold=3",
+        ] {
+            let plan = FaultPlan::parse(spec).unwrap();
+            let (got, stats) = chaotic_exchange(3, Some(plan));
+            assert_eq!(got, clean, "delivered bits changed under fault plan '{spec}'");
+            let injected: u64 = stats.iter().map(|s| s.faults_injected).sum();
+            assert!(injected > 0, "plan '{spec}' never fired at these probabilities");
+            assert_eq!(
+                stats.iter().map(|s| s.timeouts).sum::<u64>(),
+                0,
+                "recoverable faults must not hit the deadline"
+            );
+        }
+    }
+
+    #[test]
+    fn recovery_counters_attribute_the_fault_kind() {
+        let specs: [(&str, fn(&ReliabilityStats) -> u64); 3] = [
+            ("seed=21;tag=*,drop=0.5", |s| s.retransmits),
+            ("seed=22;tag=*,corrupt=0.5", |s| s.corrupt_frames),
+            ("seed=23;tag=*,dup=0.5", |s| s.dup_suppressed),
+        ];
+        for (spec, counter) in specs {
+            let plan = FaultPlan::parse(spec).unwrap();
+            let (_, stats) = chaotic_exchange(2, Some(plan));
+            let hits: u64 = stats.iter().map(counter).sum();
+            assert!(hits > 0, "plan '{spec}' should trip its recovery counter");
+        }
+    }
+
+    /// An empty plan arms the protocol (checksums, ACK barriers) but
+    /// injects nothing: all recovery counters must stay zero.
+    #[test]
+    fn empty_plan_arms_cleanly_with_zero_recovery_counters() {
+        let (clean, _) = chaotic_exchange(3, None);
+        let (got, stats) = chaotic_exchange(3, Some(FaultPlan::empty(99)));
+        assert_eq!(got, clean);
+        for s in stats {
+            assert_eq!(s.retransmits, 0);
+            assert_eq!(s.corrupt_frames, 0);
+            assert_eq!(s.nack_roundtrips, 0);
+            assert_eq!(s.dup_suppressed, 0);
+            assert_eq!(s.timeouts, 0);
+            assert_eq!(s.faults_injected, 0);
+        }
+    }
+
+    /// Satellite regression: a blackholed (dropped, never retransmitted)
+    /// frame must surface as a diagnostic `CommError` naming the missing
+    /// (src, tag, seq) on the receiver — and a missing ACK on the sender
+    /// — instead of hanging the drain forever.
+    #[test]
+    fn blackhole_times_out_with_named_missing_frame() {
+        let plan = FaultPlan::parse("seed=5;rank=0,tag=*,blackhole=1.0").unwrap();
+        let w = World::new(2)
+            .with_fault_plan(Some(plan))
+            .with_comm_timeout(Duration::from_millis(250));
+        let outcomes = w.run(|c| {
+            if c.rank() == 0 {
+                c.isend(1, tag::PTAP_SYM, vec![0xEE; 16]);
+            }
+            let res = c.drain_checked(tag::PTAP_SYM);
+            (c.rank(), res)
+        });
+        for (rank, res) in outcomes {
+            let err = res.expect_err("the blackholed frame is unrecoverable");
+            assert_eq!(err.tag, tag::PTAP_SYM);
+            if rank == 1 {
+                assert_eq!(
+                    err.missing,
+                    vec![MissingFrame { src: 0, tag: tag::PTAP_SYM, seq: 0 }],
+                    "receiver must name the exact missing frame"
+                );
+                let text = err.to_string();
+                assert!(text.contains("src=0") && text.contains("seq=0"), "got: {text}");
+            } else {
+                assert!(
+                    err.missing_acks.contains(&1),
+                    "sender must report the peer that never ACKed: {err}"
+                );
+            }
+        }
+    }
+
+    /// The deadline also covers the fault-free blocking path: a plain
+    /// drain with a peer that never closes must return, not hang.
+    #[test]
+    fn unarmed_drain_deadline_reports_missing_close() {
+        let w = World::new(2).with_comm_timeout(Duration::from_millis(200));
+        let outcomes = w.run(|c| {
+            if c.rank() == 0 {
+                // Rank 0 never opens/closes the epoch; rank 1 drains.
+                // Park in a collective afterwards so the world stays up
+                // while rank 1 waits out its deadline.
+                let _ = c.all_u64(0);
+                (c.rank(), None)
+            } else {
+                let res = c.drain_checked(tag::REDIST);
+                let _ = c.all_u64(0);
+                (c.rank(), Some(res))
+            }
+        });
+        for (rank, res) in outcomes {
+            if rank == 1 {
+                let err = res.unwrap().expect_err("no close can ever arrive");
+                assert!(
+                    err.missing_closes.contains(&0),
+                    "must name the member whose close is missing: {err}"
+                );
+            }
         }
     }
 }

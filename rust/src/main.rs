@@ -12,12 +12,12 @@
 
 use galerkin_ptap::coordinator::{
     diff_bench, level_tables, model_problem_tables, neutron_tables, run_block_kernel_bench,
-    run_hierarchy_bench, run_level0_bench, run_model_problem, run_neutron,
-    run_telemetry_overhead_bench, run_throughput_bench, run_timedep, timedep_table,
-    write_bench_json, write_results, ModelProblemConfig, NeutronConfigExp, TimedepConfig,
-    TimedepResult, TimedepWorkload,
+    run_chaos_matrix, run_hierarchy_bench, run_level0_bench, run_model_problem, run_neutron,
+    run_reliability_overhead_bench, run_telemetry_overhead_bench, run_throughput_bench,
+    run_timedep, timedep_table, write_bench_json, write_results, ModelProblemConfig,
+    NeutronConfigExp, TimedepConfig, TimedepResult, TimedepWorkload,
 };
-use galerkin_ptap::dist::{CsrOperator, DistSpmv, DistVec, World};
+use galerkin_ptap::dist::{CsrOperator, DistSpmv, DistVec, FaultPlan, World};
 use galerkin_ptap::gen::{
     grid_laplacian, neutron_block_interp, neutron_block_operator, Grid3, NeutronConfig,
 };
@@ -105,6 +105,7 @@ fn main() {
         "levels" => cmd_levels(&args),
         "solve" => cmd_solve(&args),
         "serve" => cmd_serve(&args),
+        "chaos" => cmd_chaos(&args),
         "trace-check" => cmd_trace_check(&args),
         "profile" => cmd_profile(&args),
         "stats-check" => cmd_stats_check(&args),
@@ -132,12 +133,20 @@ fn print_help() {
            levels         --grid N --groups G                              (Tables 5-6)\n\
            solve          --coarse N --levels L --algo NAME --np P [--eq-limit N]\n\
                           [--trace out.json] [--profile] [--top K] [--folded OUT.folded]\n\
+                          [--fault-plan SPEC]\n\
                           (MG-CG; --trace writes a Chrome trace, --profile prints a\n\
                            span-folded call tree without needing Chrome)\n\
            serve          --coarse N --levels L --np P --k K --requests R [--trace out.json]\n\
                           [--stats-every N] [--stats-out F.jsonl] [--mem-budget-mb M]\n\
+                          [--deadline-ms D] [--fault-plan SPEC]\n\
                           (session layer: cached hierarchy + K-wide batched dispatch;\n\
-                           --stats-every emits a merged metrics snapshot every N batches)\n\
+                           --stats-every emits a merged metrics snapshot every N batches;\n\
+                           --mem-budget-mb sheds over-budget requests, --deadline-ms\n\
+                           cancels requests queued past their deadline)\n\
+           chaos          --np a,b --seed S [--out CHAOS.jsonl]\n\
+                          (deterministic fault-injection soak: every plan in the matrix\n\
+                           must leave solve/refresh/serve bitwise identical to the\n\
+                           fault-free twin with zero recovery timeouts; DESIGN.md sec 14)\n\
            trace-check    --file TRACE.json     (validate a --trace artifact, print summary)\n\
            profile        --file TRACE.json [--top K] [--folded OUT.folded]\n\
                           (fold a --trace artifact into a call tree + flamegraph stacks)\n\
@@ -152,6 +161,9 @@ fn print_help() {
          --trace OUT.json records per-rank spans, message flights and memory timelines and\n\
            merges them into one Chrome trace (pid = rank, tid = subsystem; DESIGN.md sec 12)\n\
          timedep --rebuild pays the full symbolic build every step (the baseline --refresh beats)\n\
+         --fault-plan (or GPTAP_FAULT) arms deterministic fault injection on the simulated\n\
+           transport, e.g. \"seed=7;tag=*,drop=0.05;rank=1,tag=gather,dup=0.1\" (DESIGN.md sec 14);\n\
+           the reliable transport must recover bitwise — GPTAP_COMM_TIMEOUT_MS bounds the wait\n\
          --quiet drops diagnostics to errors only (GPTAP_LOG=error|warn|info|debug sets the level)"
     );
 }
@@ -200,7 +212,7 @@ fn cmd_bench_smoke(args: &Args) {
     let coarse = Grid3::cube(args.usize_or("coarse", 8));
     let np = args.usize_or("np", 4);
     let repeats = args.usize_or("repeats", 3);
-    let out = args.kv.get("out").cloned().unwrap_or_else(|| "BENCH_pr9.json".to_string());
+    let out = args.kv.get("out").cloned().unwrap_or_else(|| "BENCH_pr10.json".to_string());
     println!(
         "bench smoke: coarse {}³ (fine {}³), np={np}, repeats={repeats}",
         coarse.nx,
@@ -357,6 +369,36 @@ fn cmd_bench_smoke(args: &Args) {
         "telemetry overhead {:.1}% exceeds the 5% budget",
         telemetry[0].overhead_frac * 100.0
     );
+    // reliability cell: the same solve with the reliable transport
+    // disarmed vs armed with an empty fault plan — checksums, retransmit
+    // buffers and ACK barriers must stay inside the 3% budget and must
+    // never generate recovery traffic when no fault is injected
+    let reliability = vec![run_reliability_overhead_bench(
+        Grid3::cube(args.usize_or("hier-coarse", 3)),
+        args.usize_or("hier-levels", 3),
+        np,
+        args.usize_or("reliability-repeats", 5),
+    )];
+    println!(
+        "  reliability off {:>8} on {:>8} overhead {:.1}% ({} recovery event(s))",
+        galerkin_ptap::util::fmt_secs(reliability[0].solve_secs_off),
+        galerkin_ptap::util::fmt_secs(reliability[0].solve_secs_on),
+        reliability[0].overhead_frac * 100.0,
+        reliability[0].recovery_events
+    );
+    assert_eq!(
+        reliability[0].recovery_events, 0,
+        "empty fault plan generated recovery traffic"
+    );
+    assert_eq!(
+        reliability[0].faults_injected, 0,
+        "empty fault plan injected faults"
+    );
+    assert!(
+        reliability[0].overhead_frac < 0.03,
+        "reliability overhead {:.1}% exceeds the 3% budget",
+        reliability[0].overhead_frac * 100.0
+    );
     match write_bench_json(
         &rows,
         &hier,
@@ -365,6 +407,7 @@ fn cmd_bench_smoke(args: &Args) {
         &block,
         &throughput,
         &telemetry,
+        &reliability,
         std::path::Path::new(&out),
     ) {
         Ok(()) => println!("wrote {out}"),
@@ -479,7 +522,12 @@ fn cmd_solve(args: &Args) {
             None => String::new(),
         }
     );
-    let world = World::new(np);
+    let world = match args.kv.get("fault-plan") {
+        Some(spec) => World::new(np).with_fault_plan(Some(
+            FaultPlan::parse(spec).unwrap_or_else(|e| panic!("bad --fault-plan: {e}")),
+        )),
+        None => World::new(np),
+    };
     let grids2 = grids.clone();
     let results = world.run(move |comm| {
         if tracing {
@@ -616,6 +664,9 @@ fn cmd_serve(args: &Args) {
     let stats_out = args.kv.get("stats-out").cloned();
     let metrics_on = stats_every.is_some() || stats_out.is_some();
     let mem_budget = args.usize_or("mem-budget-mb", 0) as u64 * 1048576;
+    let deadline = args
+        .opt_usize("deadline-ms")
+        .map(|ms| std::time::Duration::from_millis(ms as u64));
     let grids = geometric_chain(coarse, levels);
     println!(
         "serve: fine {}³ = {} unknowns, {} levels, {} ranks, batch K={}, {} requests",
@@ -626,7 +677,12 @@ fn cmd_serve(args: &Args) {
         kk,
         requests
     );
-    let world = World::new(np);
+    let world = match args.kv.get("fault-plan") {
+        Some(spec) => World::new(np).with_fault_plan(Some(
+            FaultPlan::parse(spec).unwrap_or_else(|e| panic!("bad --fault-plan: {e}")),
+        )),
+        None => World::new(np),
+    };
     let grids2 = grids.clone();
     let results = world.run(move |comm| {
         if tracing {
@@ -634,6 +690,9 @@ fn cmd_serve(args: &Args) {
         }
         if metrics_on {
             obs::metrics::rank_begin(comm.rank());
+            // pre-register the recovery counters so every snapshot line
+            // carries the comm.*/session.* series even on a clean run
+            obs::metrics::register_reliability_series();
         }
         let tracker = MemTracker::new();
         let coarsening = Coarsening::Geometric { grids: grids2.clone() };
@@ -656,11 +715,13 @@ fn cmd_serve(args: &Args) {
         let mut queue = RequestQueue::new(kk, std::time::Duration::from_millis(50));
         let mut batches = Vec::new();
         let mut failed = 0usize;
+        let mut shed = 0usize;
         let mut jsonl = String::new();
         let mut snapshot_no = 0u64;
         // an unhealthy ticket aborts that ticket, never the server: log
         // it, count it, keep serving — the batch's other columns are
-        // unaffected (pcg_multi freezes columns independently)
+        // unaffected (pcg_multi freezes columns independently, and the
+        // guarded flush isolates panics and deadline misses per ticket)
         let triage = |done: &[galerkin_ptap::session::QueuedSolve], failed: &mut usize| {
             for d in done {
                 match d.verdict {
@@ -681,6 +742,21 @@ fn cmd_serve(args: &Args) {
                             d.ticket,
                             d.result.iterations,
                             d.result.residuals.last().copied().unwrap_or(f64::NAN)
+                        );
+                    }
+                    obs::health::Verdict::Failed => {
+                        *failed += 1;
+                        log_error!(
+                            "ticket {}: dispatch failed (panic isolated to this ticket); \
+                             reporting error to client, server continues",
+                            d.ticket
+                        );
+                    }
+                    obs::health::Verdict::Cancelled => {
+                        log_warn!(
+                            "ticket {}: cancelled — queued past its deadline ({}us in queue)",
+                            d.ticket,
+                            (d.queue_wait * 1e6) as u64
                         );
                     }
                 }
@@ -707,11 +783,22 @@ fn cmd_serve(args: &Args) {
             }
         };
         for s in 0..requests {
-            queue.submit(DistVec::from_fn(layout.clone(), comm.rank(), move |g| {
+            let rhs = DistVec::from_fn(layout.clone(), comm.rank(), move |g| {
                 (((g * 11 + s * 3) % 19) as f64 - 9.0) / 9.0
-            }));
+            });
+            // admission control: the queue projects its memory footprint
+            // and sheds the request (collectively) when over budget
+            match queue.try_submit(&comm, rhs, &tracker, mem_budget, deadline) {
+                Ok(_) => {}
+                Err(over) => {
+                    shed += 1;
+                    log_warn!("request {s} shed: {over}");
+                    continue;
+                }
+            }
             if queue.should_flush() {
-                let done = queue.flush(&comm, &op, Some(refresher.pc()), 1e-8, 100, &tracker);
+                let done =
+                    queue.flush_guarded(&comm, &op, Some(refresher.pc()), 1e-8, 100, &tracker);
                 triage(&done, &mut failed);
                 batches.push(done.len());
                 maybe_snapshot(&comm, &batches, &mut jsonl, &mut snapshot_no);
@@ -730,11 +817,20 @@ fn cmd_serve(args: &Args) {
         }
         if !queue.is_empty() {
             // leftover sub-batch: what the flush deadline would drain
-            let done = queue.flush(&comm, &op, Some(refresher.pc()), 1e-8, 100, &tracker);
+            let done =
+                queue.flush_guarded(&comm, &op, Some(refresher.pc()), 1e-8, 100, &tracker);
             triage(&done, &mut failed);
             batches.push(done.len());
         }
         let served: usize = batches.iter().sum();
+        // transport verdict from the globally summed recovery counters
+        // (SPMD-identical on every rank, so rank 0's copy is the truth)
+        let rel = comm.reliability();
+        let retx = comm.allreduce_sum_u64(rel.retransmits);
+        let cks = comm.allreduce_sum_u64(rel.corrupt_frames);
+        let dup = comm.allreduce_sum_u64(rel.dup_suppressed);
+        let tout = comm.allreduce_sum_u64(rel.timeouts);
+        let comm_verdict = obs::health::comm_verdict(retx, cks, dup, tout).name();
         // exit snapshot + human-readable report (one final merge round)
         let report = if metrics_on {
             let snap = obs::metrics::rank_take();
@@ -762,16 +858,26 @@ fn cmd_serve(args: &Args) {
             failed,
             jsonl,
             report,
+            shed,
+            retx,
+            comm_verdict,
         )
     });
     {
         let (served, batches, hits, misses, flushes, partial, _, failed, ..) = &results[0];
+        let (shed, retx, comm_verdict) = (results[0].10, results[0].11, results[0].12);
         println!(
             "served {served} requests in {flushes} batched dispatch(es) of widths {batches:?} \
              ({partial} partial); hierarchy cache: {hits} hit(s), {misses} miss(es)"
         );
+        println!(
+            "transport: {comm_verdict} ({retx} retransmit(s)); admission: {shed} request(s) shed"
+        );
         if *failed > 0 {
-            println!("{failed} request(s) diverged and were reported to their clients as errors");
+            println!(
+                "{failed} request(s) failed or diverged and were reported to their clients \
+                 as errors"
+            );
         }
     }
     if metrics_on {
@@ -806,6 +912,98 @@ fn cmd_serve(args: &Args) {
         let bufs: Vec<obs::TraceBuffer> = results.into_iter().filter_map(|r| r.6).collect();
         write_trace(&bufs, &out);
     }
+}
+
+/// Deterministic chaos soak (DESIGN.md sec 14): sweep the fault-plan
+/// matrix over the solve/refresh/serve scenarios at each rank count and
+/// fail unless every faulted run is bitwise identical to its fault-free
+/// twin — same residual bit patterns, same solution bits, same logical
+/// message counts — with zero recovery timeouts.
+fn cmd_chaos(args: &Args) {
+    let seed: u64 = args.kv.get("seed").map(|v| v.parse().expect("seed")).unwrap_or(7);
+    let nps = args.usize_list_or("np", &[2, 4]);
+    let out = args.kv.get("out").cloned();
+    println!("chaos soak: np {nps:?}, plan seed {seed}");
+    let t = std::time::Instant::now();
+    let cells = run_chaos_matrix(&nps, seed);
+    let mut jsonl = String::new();
+    let mut bad = 0usize;
+    let mut injected: HashMap<&'static str, u64> = HashMap::new();
+    for c in &cells {
+        *injected.entry(c.plan).or_insert(0) += c.rel.faults_injected;
+        let verdict = obs::health::comm_verdict(
+            c.rel.retransmits,
+            c.rel.corrupt_frames,
+            c.rel.dup_suppressed,
+            c.rel.timeouts,
+        );
+        if !c.ok() {
+            bad += 1;
+        }
+        println!(
+            "  {:<8} {:<8} np={} {:<8} inj {:>4} retx {:>4} cksum {:>3} nack {:>4} dup {:>3} \
+             [{}] {}",
+            c.scenario,
+            c.plan,
+            c.np,
+            verdict.name(),
+            c.rel.faults_injected,
+            c.rel.retransmits,
+            c.rel.corrupt_frames,
+            c.rel.nack_roundtrips,
+            c.rel.dup_suppressed,
+            if c.ok() { "ok" } else { "FAIL" },
+            galerkin_ptap::util::fmt_secs(c.secs)
+        );
+        if !c.bitwise_ok {
+            eprintln!("    FAIL: numerics drifted under plan \"{}\"", c.spec);
+        }
+        if !c.msgs_ok {
+            eprintln!("    FAIL: logical message counts drifted under plan \"{}\"", c.spec);
+        }
+        if c.rel.timeouts > 0 {
+            eprintln!(
+                "    FAIL: {} recovery timeout(s) under plan \"{}\"",
+                c.rel.timeouts, c.spec
+            );
+        }
+        jsonl.push_str(&c.jsonl);
+        jsonl.push('\n');
+    }
+    // a plan that never fires tests nothing: the soak must be non-vacuous
+    for (plan, n) in &injected {
+        if *n == 0 {
+            eprintln!("FAIL: plan {plan:?} never injected a fault — the soak is vacuous");
+            bad += 1;
+        }
+    }
+    if let Some(out) = &out {
+        match obs::metrics::validate_stats_jsonl(&jsonl) {
+            Ok(check) => match std::fs::write(out, &jsonl) {
+                Ok(()) => println!(
+                    "wrote {out} ({} snapshot line(s), {} metric series)",
+                    check.lines, check.metrics
+                ),
+                Err(e) => {
+                    eprintln!("FAIL: could not write {out}: {e}");
+                    std::process::exit(1);
+                }
+            },
+            Err(e) => {
+                eprintln!("FAIL: chaos snapshot is invalid: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    if bad > 0 {
+        eprintln!("FAIL: {bad} chaos check(s) failed");
+        std::process::exit(1);
+    }
+    println!(
+        "chaos OK: {} cell(s) bitwise identical to their fault-free twins in {}",
+        cells.len(),
+        galerkin_ptap::util::fmt_secs(t.elapsed().as_secs_f64())
+    );
 }
 
 /// Fold a `--trace` Chrome artifact into a hierarchical call tree and

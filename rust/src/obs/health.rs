@@ -13,6 +13,12 @@ pub enum Verdict {
     Stagnating,
     /// Residuals blew up (non-finite, or grew past the divergence factor).
     Diverging,
+    /// The request never produced a history: its dispatch panicked (bad
+    /// layout, poisoned state) and was isolated to this ticket.
+    Failed,
+    /// The request was cancelled before dispatch (per-request deadline
+    /// expired while it waited in the queue).
+    Cancelled,
 }
 
 impl Verdict {
@@ -21,7 +27,51 @@ impl Verdict {
             Verdict::Healthy => "healthy",
             Verdict::Stagnating => "stagnating",
             Verdict::Diverging => "diverging",
+            Verdict::Failed => "failed",
+            Verdict::Cancelled => "cancelled",
         }
+    }
+}
+
+/// Transport health over a window of reliability counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommVerdict {
+    /// No faults detected, nothing recovered.
+    Clean,
+    /// Faults were detected and fully recovered (retransmits, checksum
+    /// rejects, duplicate suppression) — results are still bitwise, but
+    /// the network is misbehaving.
+    Degraded,
+    /// At least one blocking wait hit its deadline: something was lost
+    /// beyond recovery, and a `CommError` surfaced.
+    Lossy,
+}
+
+impl CommVerdict {
+    pub fn name(self) -> &'static str {
+        match self {
+            CommVerdict::Clean => "clean",
+            CommVerdict::Degraded => "degraded",
+            CommVerdict::Lossy => "lossy",
+        }
+    }
+}
+
+/// Classify the transport from its reliability counters
+/// ([`crate::dist::ReliabilityStats`]): any deadline hit is `Lossy`, any
+/// recovered fault is `Degraded`, otherwise `Clean`.
+pub fn comm_verdict(
+    retransmits: u64,
+    corrupt_frames: u64,
+    dup_suppressed: u64,
+    timeouts: u64,
+) -> CommVerdict {
+    if timeouts > 0 {
+        CommVerdict::Lossy
+    } else if retransmits + corrupt_frames + dup_suppressed > 0 {
+        CommVerdict::Degraded
+    } else {
+        CommVerdict::Clean
     }
 }
 
@@ -134,5 +184,14 @@ mod tests {
         assert_eq!(imbalance(&[0.0, 0.0]), 0.0);
         assert_eq!(imbalance(&[2.0, 2.0]), 1.0);
         assert_eq!(imbalance(&[3.0, 1.0]), 1.5);
+    }
+
+    #[test]
+    fn comm_verdict_orders_loss_over_degradation() {
+        assert_eq!(comm_verdict(0, 0, 0, 0), CommVerdict::Clean);
+        assert_eq!(comm_verdict(3, 0, 0, 0), CommVerdict::Degraded);
+        assert_eq!(comm_verdict(0, 1, 2, 0), CommVerdict::Degraded);
+        assert_eq!(comm_verdict(5, 5, 5, 1), CommVerdict::Lossy, "timeouts dominate");
+        assert_eq!(comm_verdict(0, 0, 0, 2), CommVerdict::Lossy);
     }
 }

@@ -248,6 +248,22 @@ pub fn observe(sub: Subsys, name: &'static str, val: u64) {
     with_slot(sub, name, Kind::Hist, |m| m.observe(val));
 }
 
+/// Pre-register the transport-reliability and serve-recovery counters at
+/// zero.  The transport and session layers only touch these series when
+/// the corresponding event fires, so without this a clean run's snapshot
+/// lines would silently lack them; registering them up front keeps the
+/// JSONL schema stable whether or not anything went wrong.  No-op when
+/// the registry is disarmed.
+pub fn register_reliability_series() {
+    for name in ["retransmits", "corrupt_frames", "nack_roundtrips", "dup_suppressed", "timeouts"]
+    {
+        add(Subsys::Comm, name, 0);
+    }
+    for name in ["rebuilds", "queue.shed", "request.cancelled", "request.failed"] {
+        add(Subsys::Session, name, 0);
+    }
+}
+
 /// Span drop hook: the caller (`obs::Span`) already checked the activity
 /// bits, so go straight to the slot.
 pub(crate) fn span_observed(sub: Subsys, name: &'static str, dur_us: u64) {

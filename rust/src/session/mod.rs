@@ -24,7 +24,9 @@
 //! so every rank derives the same key and cache decisions never diverge
 //! across the communicator.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::{Duration, Instant};
 
 use crate::dist::{Comm, DistCsr, DistMultiVec, DistOperator, DistVec};
@@ -32,6 +34,7 @@ use crate::mem::{Cat, Charge, MemTracker};
 use crate::mg::{
     build_hierarchy, pcg_multi, Coarsening, HierarchyConfig, MgOpts, MgPreconditioner, SolveResult,
 };
+use crate::obs::health::Verdict;
 use crate::ptap::Algo;
 use crate::reuse::HierarchyRefresher;
 
@@ -96,6 +99,10 @@ pub struct SessionKey {
 #[derive(Default)]
 pub struct SessionCache {
     entries: HashMap<SessionKey, HierarchyRefresher>,
+    /// Keys evicted by [`SessionCache::poison`]: their retained state was
+    /// observed mid-panic and can no longer be trusted.  The next
+    /// checkout of a poisoned key is a transparent recovery rebuild.
+    poisoned: HashSet<SessionKey>,
     /// Checkouts served from a retained hierarchy (symbolic phase skipped).
     pub hits: u64,
     /// Checkouts that had to build from scratch.
@@ -104,6 +111,8 @@ pub struct SessionCache {
     /// `(eq_limit, algo)` configuration with a different pattern — the
     /// stale pattern's plans can never be refreshed into the new one.
     pub evictions: u64,
+    /// Misses that replaced a poisoned entry (recovery rebuilds).
+    pub rebuilds: u64,
 }
 
 impl SessionCache {
@@ -114,6 +123,34 @@ impl SessionCache {
     /// Retained hierarchies currently cached.
     pub fn entry_count(&self) -> usize {
         self.entries.len()
+    }
+
+    /// The cache key `checkout` would use for `a0` under `cfg`
+    /// (collective — every rank derives the same key).
+    pub fn key(comm: &Comm, a0: &DistCsr, cfg: HierarchyConfig) -> SessionKey {
+        SessionKey {
+            pattern_hash: pattern_hash(comm, a0),
+            eq_limit: cfg.eq_limit,
+            algo: cfg.algo,
+        }
+    }
+
+    /// Evict `key` as untrustworthy: a dispatch against its hierarchy
+    /// panicked, so any retained state it holds may be torn.  The entry
+    /// is dropped now; the next `checkout` of the same pattern silently
+    /// rebuilds (and counts a recovery rebuild).  Must be called
+    /// symmetrically on every rank — pair it with a collective failure
+    /// decision, never a per-rank one.
+    pub fn poison(&mut self, key: SessionKey) {
+        if self.entries.remove(&key).is_some() {
+            self.evictions += 1;
+        }
+        self.poisoned.insert(key);
+    }
+
+    /// True when `key` awaits a recovery rebuild.
+    pub fn is_poisoned(&self, key: &SessionKey) -> bool {
+        self.poisoned.contains(key)
     }
 
     /// Hand back a ready-to-apply refresher for `a0` (collective).  On a
@@ -131,11 +168,7 @@ impl SessionCache {
         opts: MgOpts,
         tracker: &MemTracker,
     ) -> (&mut HierarchyRefresher, bool) {
-        let key = SessionKey {
-            pattern_hash: pattern_hash(comm, a0),
-            eq_limit: cfg.eq_limit,
-            algo: cfg.algo,
-        };
+        let key = SessionCache::key(comm, a0, cfg);
         let hit = self.entries.contains_key(&key);
         if hit {
             self.hits += 1;
@@ -143,6 +176,10 @@ impl SessionCache {
         } else {
             self.misses += 1;
             crate::obs::metrics::add(crate::obs::Subsys::Session, "cache.miss", 1);
+            if self.poisoned.remove(&key) {
+                self.rebuilds += 1;
+                crate::obs::metrics::add(crate::obs::Subsys::Session, "rebuilds", 1);
+            }
             let stale: Vec<SessionKey> = self
                 .entries
                 .keys()
@@ -191,6 +228,43 @@ struct Pending {
     submitted: Instant,
     /// Trace timestamp at submit (0 when tracing was off at submit).
     submit_us: u64,
+    /// Per-request deadline: cancel (don't dispatch) if the request is
+    /// still queued this long after submit.
+    deadline: Option<Duration>,
+}
+
+/// Backpressure verdict from [`RequestQueue::try_submit`]: admitting the
+/// request would push projected memory past the budget, so it was shed
+/// instead of queued.  Byte figures are this rank's local projection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Overloaded {
+    /// Tracked bytes projected if the request were admitted.
+    pub projected_bytes: u64,
+    /// The budget the projection breached.
+    pub budget_bytes: u64,
+}
+
+impl fmt::Display for Overloaded {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "overloaded: projected {} bytes exceeds budget {} bytes",
+            self.projected_bytes, self.budget_bytes
+        )
+    }
+}
+
+/// OR-fold per-rank vote vectors (one byte per ticket, allgathered) into
+/// one mask every rank agrees on.
+fn or_fold(votes: &[Vec<u8>], n: usize) -> Vec<bool> {
+    let mut out = vec![false; n];
+    for v in votes {
+        debug_assert_eq!(v.len(), n, "every rank must vote on the same tickets");
+        for (o, &b) in out.iter_mut().zip(v) {
+            *o |= b != 0;
+        }
+    }
+    out
 }
 
 /// Accumulates pending right-hand sides and dispatches them as one
@@ -227,6 +301,14 @@ impl RequestQueue {
     /// Enqueue one right-hand side; returns the ticket that identifies
     /// it in the flushed batch.
     pub fn submit(&mut self, b: DistVec) -> u64 {
+        self.submit_with_deadline(b, None)
+    }
+
+    /// [`RequestQueue::submit`] with a per-request deadline: if the
+    /// request is still queued `deadline` after submit when a guarded
+    /// flush dispatches, it is cancelled (verdict
+    /// [`Verdict::Cancelled`]) instead of solved.
+    pub fn submit_with_deadline(&mut self, b: DistVec, deadline: Option<Duration>) -> u64 {
         let ticket = self.next_ticket;
         self.next_ticket += 1;
         if self.pending.is_empty() {
@@ -238,7 +320,13 @@ impl RequestQueue {
         } else {
             0
         };
-        self.pending.push(Pending { ticket, b, submitted: Instant::now(), submit_us });
+        self.pending.push(Pending {
+            ticket,
+            b,
+            submitted: Instant::now(),
+            submit_us,
+            deadline,
+        });
         crate::obs::metrics::add(crate::obs::Subsys::Session, "requests", 1);
         crate::obs::metrics::gauge(
             crate::obs::Subsys::Session,
@@ -246,6 +334,33 @@ impl RequestQueue {
             self.pending.len() as u64,
         );
         ticket
+    }
+
+    /// Admission-controlled submit (collective): project the tracked
+    /// memory this request would add — its RHS column plus the matching
+    /// solution column, on top of current usage and the columns already
+    /// queued — and shed the request with [`Overloaded`] instead of
+    /// queueing it when any rank's projection breaches `budget_bytes`
+    /// (0 = unlimited).  The shed decision is a one-`u64` reduction so
+    /// every rank takes the same branch and the SPMD schedule never
+    /// diverges; a shed request consumes no ticket.
+    pub fn try_submit(
+        &mut self,
+        comm: &Comm,
+        b: DistVec,
+        tracker: &MemTracker,
+        budget_bytes: u64,
+        deadline: Option<Duration>,
+    ) -> Result<u64, Overloaded> {
+        let queued: u64 = self.pending.iter().map(|p| p.b.bytes()).sum();
+        let projected = tracker.current_total() + 2 * (queued + b.bytes());
+        let over = budget_bytes > 0 && projected > budget_bytes;
+        let shed = comm.allreduce_sum_u64(u64::from(over)) > 0;
+        if shed {
+            crate::obs::metrics::add(crate::obs::Subsys::Session, "queue.shed", 1);
+            return Err(Overloaded { projected_bytes: projected, budget_bytes });
+        }
+        Ok(self.submit_with_deadline(b, deadline))
     }
 
     pub fn len(&self) -> usize {
@@ -362,6 +477,213 @@ impl RequestQueue {
                     e2e,
                     verdict,
                 }
+            })
+            .collect()
+    }
+
+    /// [`RequestQueue::flush`] hardened for a long-lived server
+    /// (collective): expired per-request deadlines are cancelled before
+    /// dispatch, and a panicking dispatch is contained to the tickets
+    /// that caused it instead of tearing the server down.
+    ///
+    /// The recovery chain:
+    /// 1. Deadline sweep — each rank votes per ticket on whether its
+    ///    deadline expired; votes are OR-folded through an allgather so
+    ///    every rank cancels the same set even when wall clocks disagree.
+    ///    Cancelled tickets get [`Verdict::Cancelled`], a zero solution
+    ///    and an empty history, and never reach the solver.
+    /// 2. The surviving batch dispatches inside `catch_unwind`.  A panic
+    ///    here comes from a malformed request — e.g. an RHS assembled on
+    ///    the wrong grid, which [`DistMultiVec::from_columns`] rejects on
+    ///    every rank before any message is sent.  (Containment relies on
+    ///    panics being SPMD-symmetric; shape mismatches are, because the
+    ///    layout object is replicated.)
+    /// 3. On panic, each rank flags the columns whose shape disagrees
+    ///    with the operator; the flags are OR-folded, flagged tickets
+    ///    fail with [`Verdict::Failed`], and the clean remainder
+    ///    redispatches as one batch — bitwise what it would have gotten,
+    ///    since a block solve's column `j` never depends on the other
+    ///    columns.
+    /// 4. If the redispatch still panics (a poisoned column the shape
+    ///    check could not see), each remaining ticket is retried as a
+    ///    guarded single-column solve, failing only the columns that
+    ///    actually panic.
+    pub fn flush_guarded(
+        &mut self,
+        comm: &Comm,
+        a: &dyn DistOperator,
+        pc: Option<&mut MgPreconditioner>,
+        rtol: f64,
+        max_iters: usize,
+        tracker: &MemTracker,
+    ) -> Vec<QueuedSolve> {
+        if self.pending.is_empty() {
+            return Vec::new();
+        }
+        self.flushes += 1;
+        if self.pending.len() < self.capacity {
+            self.partial_flushes += 1;
+        }
+        let pending = std::mem::take(&mut self.pending);
+        self.oldest = None;
+        crate::obs::instant(
+            crate::obs::Subsys::Session,
+            "flush.decide",
+            pending.len() as u64,
+        );
+        crate::obs::metrics::gauge(crate::obs::Subsys::Session, "queue.depth", 0);
+        let deadline_secs = self.deadline.as_secs_f64();
+        let mut pc = pc;
+        let dispatch_start = Instant::now();
+
+        let votes: Vec<u8> = pending
+            .iter()
+            .map(|p| u8::from(p.deadline.is_some_and(|d| p.submitted.elapsed() >= d)))
+            .collect();
+        let cancelled = or_fold(&comm.allgather_bytes(votes), pending.len());
+        let live: Vec<usize> = (0..pending.len()).filter(|&i| !cancelled[i]).collect();
+
+        let dispatch = |idx: &[usize], pc: Option<&mut MgPreconditioner>| {
+            let cols: Vec<&DistVec> = idx.iter().map(|&i| &pending[i].b).collect();
+            let b = DistMultiVec::from_columns(&cols);
+            let mut x = DistMultiVec::zeros(b.layout.clone(), b.rank, b.k);
+            let _scratch = Charge::new(tracker, Cat::MultiVec, b.bytes() + x.bytes());
+            let results = {
+                let _sp = crate::obs::span(crate::obs::Subsys::Session, "dispatch", b.k as u64);
+                pcg_multi(comm, a, &b, &mut x, pc, rtol, max_iters)
+            };
+            (x, results)
+        };
+
+        let mut solved: Vec<Option<(DistVec, SolveResult)>> =
+            (0..pending.len()).map(|_| None).collect();
+        if !live.is_empty() {
+            match catch_unwind(AssertUnwindSafe(|| dispatch(&live, pc.as_deref_mut()))) {
+                Ok((x, results)) => {
+                    for (j, (&i, r)) in live.iter().zip(results).enumerate() {
+                        solved[i] = Some((x.column(j), r));
+                    }
+                }
+                Err(_) => {
+                    let lay = a.row_layout();
+                    let n_local = lay.local_size(comm.rank());
+                    let shape_votes: Vec<u8> = live
+                        .iter()
+                        .map(|&i| {
+                            let b = &pending[i].b;
+                            u8::from(b.layout != *lay || b.vals.len() != n_local)
+                        })
+                        .collect();
+                    let bad = or_fold(&comm.allgather_bytes(shape_votes), live.len());
+                    let survivors: Vec<usize> = live
+                        .iter()
+                        .enumerate()
+                        .filter(|&(j, _)| !bad[j])
+                        .map(|(_, &i)| i)
+                        .collect();
+                    if !survivors.is_empty() {
+                        match catch_unwind(AssertUnwindSafe(|| {
+                            dispatch(&survivors, pc.as_deref_mut())
+                        })) {
+                            Ok((x, results)) => {
+                                for (j, (&i, r)) in survivors.iter().zip(results).enumerate() {
+                                    solved[i] = Some((x.column(j), r));
+                                }
+                            }
+                            Err(_) => {
+                                for &i in &survivors {
+                                    let one = [i];
+                                    if let Ok((x, mut results)) = catch_unwind(
+                                        AssertUnwindSafe(|| dispatch(&one, pc.as_deref_mut())),
+                                    ) {
+                                        let r = results
+                                            .pop()
+                                            .expect("one column in, one result out");
+                                        solved[i] = Some((x.column(0), r));
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let dispatch_end = Instant::now();
+
+        let policy = crate::obs::health::HealthPolicy::default();
+        pending
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                if crate::obs::enabled() && p.submit_us != 0 {
+                    crate::obs::complete(
+                        crate::obs::Subsys::Session,
+                        "request",
+                        p.ticket,
+                        p.submit_us,
+                        crate::obs::now_us(),
+                    );
+                }
+                let queue_wait = (dispatch_start - p.submitted).as_secs_f64();
+                let e2e = (dispatch_end - p.submitted).as_secs_f64();
+                let empty = || SolveResult {
+                    iterations: 0,
+                    converged: false,
+                    residuals: Vec::new(),
+                };
+                let (x, result, verdict) = if cancelled[i] {
+                    (
+                        DistVec::zeros(p.b.layout.clone(), p.b.rank),
+                        empty(),
+                        Verdict::Cancelled,
+                    )
+                } else if let Some((x, result)) = solved[i].take() {
+                    let verdict = crate::obs::health::residual_verdict(
+                        &result.residuals,
+                        result.converged,
+                        &policy,
+                    );
+                    (x, result, verdict)
+                } else {
+                    (
+                        DistVec::zeros(p.b.layout.clone(), p.b.rank),
+                        empty(),
+                        Verdict::Failed,
+                    )
+                };
+                if crate::obs::metrics::enabled() {
+                    crate::obs::metrics::observe(
+                        crate::obs::Subsys::Session,
+                        "queue.wait_us",
+                        (queue_wait * 1e6) as u64,
+                    );
+                    crate::obs::metrics::observe(
+                        crate::obs::Subsys::Session,
+                        "request.e2e_us",
+                        (e2e * 1e6) as u64,
+                    );
+                    if queue_wait >= deadline_secs {
+                        crate::obs::metrics::add(
+                            crate::obs::Subsys::Session,
+                            "deadline.miss",
+                            1,
+                        );
+                    }
+                    match verdict {
+                        Verdict::Cancelled => crate::obs::metrics::add(
+                            crate::obs::Subsys::Session,
+                            "request.cancelled",
+                            1,
+                        ),
+                        Verdict::Failed | Verdict::Diverging => crate::obs::metrics::add(
+                            crate::obs::Subsys::Session,
+                            "request.failed",
+                            1,
+                        ),
+                        _ => {}
+                    }
+                }
+                QueuedSolve { ticket: p.ticket, x, result, queue_wait, e2e, verdict }
             })
             .collect()
     }
@@ -536,6 +858,140 @@ mod tests {
             let res = pcg(&c, &op, &b, &mut x, None, 1e-10, 400);
             assert_eq!(done[0].x.vals, x.vals, "K=1 batch must equal the scalar path");
             assert_eq!(done[0].result.residuals, res.residuals);
+        });
+    }
+
+    #[test]
+    fn poisoned_entry_rebuilds_transparently() {
+        let w = World::new(2);
+        w.run(|c| {
+            let grids = geometric_chain(Grid3::cube(3), 3);
+            let coarsening = Coarsening::Geometric { grids: grids.clone() };
+            let a = grid_laplacian(grids[0], c.rank(), c.size());
+            let tracker = MemTracker::new();
+            let cfg = HierarchyConfig::default();
+            let mut cache = SessionCache::new();
+
+            cache.checkout(&c, &a, &coarsening, cfg, MgOpts::default(), &tracker);
+            let key = SessionCache::key(&c, &a, cfg);
+            cache.poison(key);
+            assert!(cache.is_poisoned(&key));
+            assert_eq!(cache.entry_count(), 0, "poisoned entry is evicted immediately");
+
+            let (_, hit) = cache.checkout(&c, &a, &coarsening, cfg, MgOpts::default(), &tracker);
+            assert!(!hit, "recovery checkout must rebuild");
+            assert!(!cache.is_poisoned(&key), "rebuild clears the poison mark");
+            assert_eq!(cache.rebuilds, 1);
+            assert_eq!((cache.hits, cache.misses, cache.evictions), (0, 2, 1));
+
+            let (_, hit2) = cache.checkout(&c, &a, &coarsening, cfg, MgOpts::default(), &tracker);
+            assert!(hit2, "rebuilt entry serves hits again");
+        });
+    }
+
+    #[test]
+    fn try_submit_sheds_over_budget_and_admits_otherwise() {
+        let w = World::new(2);
+        w.run(|c| {
+            let a = grid_laplacian(Grid3::cube(3), c.rank(), c.size());
+            let layout = a.row_layout.clone();
+            let tracker = MemTracker::new();
+            let b = DistVec::from_fn(layout.clone(), c.rank(), |g| g as f64);
+
+            let mut q = RequestQueue::new(4, Duration::from_secs(3600));
+            assert_eq!(q.try_submit(&c, b.clone(), &tracker, 1 << 40, None), Ok(0));
+            // tiny budget: shed, no ticket consumed, queue untouched
+            let err = q.try_submit(&c, b.clone(), &tracker, 1, None).unwrap_err();
+            assert!(err.projected_bytes > err.budget_bytes);
+            assert_eq!(err.budget_bytes, 1);
+            assert_eq!(q.len(), 1);
+            // budget 0 means unlimited
+            assert_eq!(q.try_submit(&c, b.clone(), &tracker, 0, None), Ok(1));
+            assert_eq!(q.len(), 2);
+        });
+    }
+
+    #[test]
+    fn guarded_flush_cancels_expired_and_solves_the_rest() {
+        let w = World::new(2);
+        w.run(|c| {
+            let a = grid_laplacian(Grid3::cube(4), c.rank(), c.size());
+            let spmv = DistSpmv::new(&c, &a);
+            let op = CsrOperator::new(&a, &spmv);
+            let layout = a.row_layout.clone();
+            let tracker = MemTracker::new();
+            let rhs = |s: usize| {
+                DistVec::from_fn(layout.clone(), c.rank(), |g| {
+                    ((g as f64) * 0.1 + s as f64).cos()
+                })
+            };
+
+            let mut q = RequestQueue::new(3, Duration::from_secs(3600));
+            q.submit(rhs(0));
+            q.submit_with_deadline(rhs(1), Some(Duration::ZERO)); // expired at flush
+            q.submit_with_deadline(rhs(2), Some(Duration::from_secs(3600)));
+            let done = q.flush_guarded(&c, &op, None, 1e-10, 400, &tracker);
+            assert_eq!(done.len(), 3);
+            assert!(q.is_empty());
+            assert_eq!(done[1].verdict, Verdict::Cancelled);
+            assert_eq!(done[1].result.iterations, 0);
+            assert!(done[1].x.vals.iter().all(|&v| v == 0.0), "cancelled ticket gets zeros");
+
+            // surviving tickets are bitwise their solo solves
+            for &s in &[0usize, 2] {
+                let d = &done[s];
+                assert_eq!(d.ticket, s as u64);
+                assert_eq!(d.verdict, Verdict::Healthy);
+                let mut x = DistVec::zeros(layout.clone(), c.rank());
+                let res = pcg(&c, &op, &rhs(s), &mut x, None, 1e-10, 400);
+                assert_eq!(d.x.vals, x.vals, "column {s} diverged from solo solve");
+                assert_eq!(d.result.residuals, res.residuals);
+            }
+        });
+    }
+
+    #[test]
+    fn guarded_flush_fails_only_the_malformed_ticket() {
+        let w = World::new(2);
+        w.run(|c| {
+            let a = grid_laplacian(Grid3::cube(4), c.rank(), c.size());
+            let spmv = DistSpmv::new(&c, &a);
+            let op = CsrOperator::new(&a, &spmv);
+            let layout = a.row_layout.clone();
+            let tracker = MemTracker::new();
+            let rhs = |s: usize| {
+                DistVec::from_fn(layout.clone(), c.rank(), |g| {
+                    ((g as f64) * 0.1 + s as f64).cos()
+                })
+            };
+
+            // ticket 1's RHS was assembled on the wrong grid: its layout
+            // disagrees with the operator on every rank, so the dispatch
+            // panic is SPMD-symmetric and containable
+            let wrong = grid_laplacian(Grid3::cube(3), c.rank(), c.size());
+            let bad = DistVec::from_fn(wrong.row_layout.clone(), c.rank(), |g| g as f64);
+
+            let mut q = RequestQueue::new(3, Duration::from_secs(3600));
+            q.submit(rhs(0));
+            q.submit(bad);
+            q.submit(rhs(2));
+            let done = q.flush_guarded(&c, &op, None, 1e-10, 400, &tracker);
+            assert_eq!(done.len(), 3);
+            assert_eq!(done[1].verdict, Verdict::Failed);
+            assert!(done[1].result.residuals.is_empty());
+            assert_eq!(
+                tracker.current(Cat::MultiVec),
+                0,
+                "scratch released even through the panic"
+            );
+            for &s in &[0usize, 2] {
+                let d = &done[s];
+                assert_eq!(d.verdict, Verdict::Healthy);
+                let mut x = DistVec::zeros(layout.clone(), c.rank());
+                let res = pcg(&c, &op, &rhs(s), &mut x, None, 1e-10, 400);
+                assert_eq!(d.x.vals, x.vals, "ticket {s} diverged from solo solve");
+                assert_eq!(d.result.residuals, res.residuals);
+            }
         });
     }
 }

@@ -1,0 +1,289 @@
+//! Self-healing serve: a malformed request inside a batch fails only its
+//! own ticket (the guarded flush contains the panic, shape-votes the
+//! culprit out, and redispatches the survivors bitwise intact); a
+//! poisoned cache entry is rebuilt transparently on the next checkout,
+//! bitwise identical to a fresh server; and an over-budget burst is shed
+//! with [`galerkin_ptap::session::Overloaded`] while the requests that
+//! were admitted before the shed still flush and complete healthy.
+
+use std::time::Duration;
+
+use galerkin_ptap::dist::{CsrOperator, DistSpmv, DistVec, World};
+use galerkin_ptap::gen::{grid_laplacian, Grid3};
+use galerkin_ptap::mem::MemTracker;
+use galerkin_ptap::mg::{geometric_chain, pcg, Coarsening, HierarchyConfig, MgOpts};
+use galerkin_ptap::obs;
+use galerkin_ptap::obs::health::Verdict;
+use galerkin_ptap::session::{RequestQueue, SessionCache};
+
+const NP: usize = 2;
+const RTOL: f64 = 1e-8;
+const MAX_ITERS: usize = 40;
+
+#[test]
+fn wrong_grid_rhs_fails_only_its_ticket() {
+    World::new(NP).run(|c| {
+        obs::metrics::rank_begin(c.rank());
+        let grids = geometric_chain(Grid3::cube(3), 3);
+        let coarsening = Coarsening::Geometric { grids: grids.clone() };
+        let a = grid_laplacian(grids[0], c.rank(), c.size());
+        let layout = a.row_layout.clone();
+        let tracker = MemTracker::new();
+        let spmv = DistSpmv::new(&c, &a);
+        let op = CsrOperator::new(&a, &spmv);
+        let rhs = |s: usize| {
+            DistVec::from_fn(layout.clone(), c.rank(), |g| {
+                ((g as f64) * 0.21 + s as f64).sin()
+            })
+        };
+        // a client assembled its RHS on the wrong grid: the layout has
+        // the coarse level's size, so `DistMultiVec::from_columns`
+        // panics on every rank before any message is sent
+        let a_coarse = grid_laplacian(grids[1], c.rank(), c.size());
+        let bad = DistVec::from_fn(a_coarse.row_layout.clone(), c.rank(), |g| (g as f64).cos());
+
+        let mut cache = SessionCache::new();
+        let (r, hit) = cache.checkout(
+            &c,
+            &a,
+            &coarsening,
+            HierarchyConfig::default(),
+            MgOpts::default(),
+            &tracker,
+        );
+        assert!(!hit);
+        let mut q = RequestQueue::new(3, Duration::from_secs(3600));
+        let t0 = q.submit(rhs(0));
+        let t_bad = q.submit(bad);
+        let t1 = q.submit(rhs(1));
+        let done = q.flush_guarded(&c, &op, Some(r.pc()), RTOL, MAX_ITERS, &tracker);
+        assert_eq!(done.len(), 3);
+
+        // only the malformed ticket failed: zero solution on its own
+        // layout, empty history, never reached the solver
+        let d_bad = done.iter().find(|d| d.ticket == t_bad).unwrap();
+        assert_eq!(
+            d_bad.verdict, Verdict::Failed,
+            "shape vote must flag the bad ticket"
+        );
+        assert!(!d_bad.result.converged);
+        assert!(d_bad.result.residuals.is_empty());
+        assert!(d_bad.x.vals.iter().all(|&v| v == 0.0));
+
+        // the batch-mates redispatched and are bitwise what a fresh
+        // server would have produced for each alone
+        let mut fresh = SessionCache::new();
+        let (rf, _) = fresh.checkout(
+            &c,
+            &a,
+            &coarsening,
+            HierarchyConfig::default(),
+            MgOpts::default(),
+            &tracker,
+        );
+        for (t, s) in [(t0, 0), (t1, 1)] {
+            let d = done.iter().find(|d| d.ticket == t).unwrap();
+            assert_eq!(d.verdict, Verdict::Healthy);
+            assert!(d.result.converged);
+            let mut x_solo = DistVec::zeros(layout.clone(), c.rank());
+            let res_solo = pcg(&c, &op, &rhs(s), &mut x_solo, Some(rf.pc()), RTOL, MAX_ITERS);
+            assert_eq!(
+                d.x.vals, x_solo.vals,
+                "survivor contaminated by its malformed batch-mate"
+            );
+            assert_eq!(d.result.residuals, res_solo.residuals);
+        }
+
+        // exactly one failure in the live metrics
+        let snap = obs::metrics::rank_take();
+        let failed = snap
+            .entries
+            .iter()
+            .find(|e| e.sub == "session" && e.name == "request.failed")
+            .expect("request.failed counter registered");
+        assert_eq!(failed.value, 1, "exactly one ticket failed");
+    });
+}
+
+#[test]
+fn poisoned_entry_rebuilds_bitwise_identical_to_fresh() {
+    World::new(NP).run(|c| {
+        obs::metrics::rank_begin(c.rank());
+        let grids = geometric_chain(Grid3::cube(3), 3);
+        let coarsening = Coarsening::Geometric { grids: grids.clone() };
+        let a = grid_laplacian(grids[0], c.rank(), c.size());
+        let layout = a.row_layout.clone();
+        let tracker = MemTracker::new();
+        let spmv = DistSpmv::new(&c, &a);
+        let op = CsrOperator::new(&a, &spmv);
+        let rhs = |s: usize| {
+            DistVec::from_fn(layout.clone(), c.rank(), |g| {
+                ((g as f64) * 0.17 + s as f64).cos()
+            })
+        };
+
+        let mut cache = SessionCache::new();
+        {
+            let (r, hit) = cache.checkout(
+                &c,
+                &a,
+                &coarsening,
+                HierarchyConfig::default(),
+                MgOpts::default(),
+                &tracker,
+            );
+            assert!(!hit);
+            let mut x = DistVec::zeros(layout.clone(), c.rank());
+            let res = pcg(&c, &op, &rhs(0), &mut x, Some(r.pc()), RTOL, MAX_ITERS);
+            assert!(res.converged);
+        }
+
+        // a dispatch against this hierarchy panicked: evict it as
+        // untrustworthy and demand a recovery rebuild
+        let key = SessionCache::key(&c, &a, HierarchyConfig::default());
+        cache.poison(key);
+        assert!(cache.is_poisoned(&key));
+        assert_eq!(cache.entry_count(), 0, "poisoned entry must be dropped now");
+
+        let (done, hit2);
+        {
+            let (r2, h2) = cache.checkout(
+                &c,
+                &a,
+                &coarsening,
+                HierarchyConfig::default(),
+                MgOpts::default(),
+                &tracker,
+            );
+            hit2 = h2;
+            let mut q = RequestQueue::new(2, Duration::from_secs(3600));
+            q.submit(rhs(1));
+            q.submit(rhs(2));
+            done = q.flush_guarded(&c, &op, Some(r2.pc()), RTOL, MAX_ITERS, &tracker);
+        }
+        assert!(!hit2, "a poisoned key must miss");
+        assert!(
+            !cache.is_poisoned(&key),
+            "rebuild must clear the poison mark"
+        );
+        assert_eq!(cache.rebuilds, 1, "the miss was a recovery rebuild");
+        assert_eq!(cache.entry_count(), 1);
+
+        // the rebuilt server is bitwise a fresh one
+        let mut fresh = SessionCache::new();
+        let (rf, _) = fresh.checkout(
+            &c,
+            &a,
+            &coarsening,
+            HierarchyConfig::default(),
+            MgOpts::default(),
+            &tracker,
+        );
+        let mut qf = RequestQueue::new(2, Duration::from_secs(3600));
+        qf.submit(rhs(1));
+        qf.submit(rhs(2));
+        let fresh_done = qf.flush_guarded(&c, &op, Some(rf.pc()), RTOL, MAX_ITERS, &tracker);
+        assert_eq!(done.len(), 2);
+        for (d, f) in done.iter().zip(&fresh_done) {
+            assert_eq!(d.verdict, Verdict::Healthy);
+            assert!(d.result.converged);
+            assert_eq!(
+                d.x.vals, f.x.vals,
+                "rebuilt hierarchy drifted from a fresh build"
+            );
+            assert_eq!(d.result.residuals, f.result.residuals);
+            assert_eq!(d.result.iterations, f.result.iterations);
+        }
+
+        let snap = obs::metrics::rank_take();
+        let rebuilds = snap
+            .entries
+            .iter()
+            .find(|e| e.sub == "session" && e.name == "rebuilds")
+            .expect("rebuilds counter registered");
+        assert_eq!(rebuilds.value, 1);
+    });
+}
+
+#[test]
+fn over_budget_burst_sheds_while_admitted_requests_complete() {
+    World::new(NP).run(|c| {
+        obs::metrics::rank_begin(c.rank());
+        let grids = geometric_chain(Grid3::cube(3), 3);
+        let coarsening = Coarsening::Geometric { grids: grids.clone() };
+        let a = grid_laplacian(grids[0], c.rank(), c.size());
+        let layout = a.row_layout.clone();
+        let tracker = MemTracker::new();
+        let spmv = DistSpmv::new(&c, &a);
+        let op = CsrOperator::new(&a, &spmv);
+        let rhs = |s: usize| {
+            DistVec::from_fn(layout.clone(), c.rank(), |g| {
+                ((g as f64) * 0.13 + s as f64).sin()
+            })
+        };
+
+        let mut cache = SessionCache::new();
+        let (r, _) = cache.checkout(
+            &c,
+            &a,
+            &coarsening,
+            HierarchyConfig::default(),
+            MgOpts::default(),
+            &tracker,
+        );
+        let mut q = RequestQueue::new(4, Duration::from_secs(3600));
+
+        // two requests fit under a generous budget (0 = unlimited)
+        let t0 = q
+            .try_submit(&c, rhs(0), &tracker, 0, None)
+            .expect("first request admitted");
+        let t1 = q
+            .try_submit(&c, rhs(1), &tracker, 0, None)
+            .expect("second request admitted");
+        assert_eq!(q.len(), 2);
+
+        // the burst continues against a 1-byte budget: the projection
+        // (current usage + 2x the queued and new columns) must breach it
+        // and the request is shed, consuming no ticket
+        let over = q
+            .try_submit(&c, rhs(2), &tracker, 1, None)
+            .expect_err("a 1-byte budget must shed the request");
+        assert_eq!(over.budget_bytes, 1);
+        assert!(
+            over.projected_bytes > over.budget_bytes,
+            "shed verdict must carry the breaching projection"
+        );
+        assert_eq!(q.len(), 2, "a shed request must not be queued");
+
+        // the earlier tickets are unaffected: they flush and complete
+        // healthy, bitwise what a fresh server would have produced
+        let done = q.flush_guarded(&c, &op, Some(r.pc()), RTOL, MAX_ITERS, &tracker);
+        assert_eq!(done.len(), 2);
+        let mut fresh = SessionCache::new();
+        let (rf, _) = fresh.checkout(
+            &c,
+            &a,
+            &coarsening,
+            HierarchyConfig::default(),
+            MgOpts::default(),
+            &tracker,
+        );
+        for (t, s) in [(t0, 0), (t1, 1)] {
+            let d = done.iter().find(|d| d.ticket == t).unwrap();
+            assert_eq!(d.verdict, Verdict::Healthy);
+            assert!(d.result.converged);
+            let mut x_solo = DistVec::zeros(layout.clone(), c.rank());
+            let res_solo = pcg(&c, &op, &rhs(s), &mut x_solo, Some(rf.pc()), RTOL, MAX_ITERS);
+            assert_eq!(d.x.vals, x_solo.vals);
+            assert_eq!(d.result.residuals, res_solo.residuals);
+        }
+
+        let snap = obs::metrics::rank_take();
+        let shed = snap
+            .entries
+            .iter()
+            .find(|e| e.sub == "session" && e.name == "queue.shed")
+            .expect("queue.shed counter registered");
+        assert_eq!(shed.value, 1, "exactly one request shed");
+    });
+}
